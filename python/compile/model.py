@@ -1,0 +1,106 @@
+"""L2: the TeaLeaf-CG compute graph in JAX, calling the L1 Pallas kernel.
+
+Three exported entry points (all AOT-lowered to HLO text by ``aot.py``):
+
+* ``cg_solve``        — fixed-iteration CG on one rank's subdomain; this is
+                        what the paper's performance jobs run.
+* ``matvec_halo``     — one distributed operator application with explicit
+                        north/south halo rows; the rust coordinator drives
+                        it per-rank with simulated halo exchange (the
+                        runtime integration test and counter calibration).
+* ``genex_step``      — the synthetic GENE-X-like timestep: a few stencil
+                        sweeps + nonlinear pointwise update, used by the
+                        CI case-study app so its numerics are real too.
+
+Everything is fp32, fixed shapes per artifact (XLA AOT is
+shape-specialized; the rust runtime registry picks the artifact for a
+rank's subdomain and the simulator's work model extrapolates counters for
+untabulated sizes — DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import stencil
+from compile.kernels import ref
+
+
+def _cg_iteration(carry, _, kx, ky, d, block):
+    x, r, p, rr = carry
+    ap = stencil.apply_operator(p, kx, ky, d, block=block)
+    alpha = rr / jnp.vdot(p, ap)
+    x = x + alpha * p
+    r = r - alpha * ap
+    rr_new = jnp.vdot(r, r)
+    beta = rr_new / rr
+    p = r + beta * p
+    return (x, r, p, rr_new), rr_new
+
+
+@functools.partial(jax.jit, static_argnames=("n_iters", "block"))
+def cg_solve(b: jax.Array, kx: jax.Array, ky: jax.Array, d: jax.Array,
+             *, n_iters: int = 50, block: int = stencil.DEFAULT_BLOCK):
+    """Fixed-iteration CG solve of A x = b on one subdomain.
+
+    Returns (x, rr_history[n_iters]).  ``lax.scan`` keeps the lowered HLO
+    compact (one fused iteration body) instead of unrolling n_iters copies
+    of the kernel.
+    """
+    x0 = jnp.zeros_like(b)
+    rr0 = jnp.vdot(b, b)
+    body = functools.partial(_cg_iteration, kx=kx, ky=ky, d=d, block=block)
+    (x, _, _, _), hist = jax.lax.scan(body, (x0, b, b, rr0), None,
+                                      length=n_iters)
+    return x, hist
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def matvec_halo(p: jax.Array, north: jax.Array, south: jax.Array,
+                kx: jax.Array, ky: jax.Array, ky_bottom: jax.Array,
+                d: jax.Array, *, block: int = stencil.DEFAULT_BLOCK):
+    """Distributed operator application (see stencil.apply_operator_halo)."""
+    return (stencil.apply_operator_halo(p, north, south, kx, ky, ky_bottom,
+                                        d, block=block),)
+
+
+@functools.partial(jax.jit, static_argnames=("n_sweeps", "block"))
+def genex_step(u: jax.Array, kx: jax.Array, ky: jax.Array, d: jax.Array,
+               *, n_sweeps: int = 4, block: int = stencil.DEFAULT_BLOCK):
+    """Synthetic GENE-X-like timestep: n_sweeps stencil applications with a
+    stabilized nonlinear pointwise term (tanh keeps values bounded so long
+    CI histories never diverge)."""
+    def body(u, _):
+        au = stencil.apply_operator(u, kx, ky, d, block=block)
+        u = u - 0.1 * au + 0.01 * jnp.tanh(u)
+        return u, jnp.vdot(u, u)
+    u, norms = jax.lax.scan(body, u, None, length=n_sweeps)
+    return u, norms
+
+
+def initial_condition(h: int, w: int, dtype=jnp.float32) -> jax.Array:
+    """Deterministic smooth-bump initial field (matches rust's generator)."""
+    i = jnp.arange(h, dtype=dtype)[:, None] / h
+    j = jnp.arange(w, dtype=dtype)[None, :] / w
+    return (jnp.sin(3.14159265 * i) * jnp.sin(3.14159265 * j)
+            + 0.1 * jnp.sin(9.0 * i * j)).astype(dtype)
+
+
+def flops(entry: str, h: int, w: int, n_iters: int) -> int:
+    """Analytic flop counts per entry point (consumed by counters.rs via
+    the artifact manifest)."""
+    stencil_f = ref_stencil_flops = stencil.flops_per_application(h, w)
+    cells = h * w
+    if entry == "cg_solve":
+        # per iter: matvec + 2 vdots (2*2N) + 2 axpy (2*2N) + p update (2N)
+        per_iter = stencil_f + 4 * cells + 4 * cells + 2 * cells + 4
+        return n_iters * per_iter + 2 * cells
+    if entry == "matvec_halo":
+        return ref_stencil_flops
+    if entry == "genex_step":
+        # per sweep: matvec + axpy-ish update (4N) + tanh (~10N) + vdot (2N)
+        return n_iters * (stencil_f + 16 * cells)
+    raise ValueError(entry)

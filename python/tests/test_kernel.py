@@ -1,0 +1,115 @@
+"""Pallas stencil kernel vs pure-jnp oracle — the core correctness signal.
+
+hypothesis sweeps shapes/dtypes per the repro contract; fixed-shape tests
+cover the AOT shapes exactly.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, stencil
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, *shape, dtype=jnp.float32):
+    return jax.random.normal(key, shape, dtype=dtype)
+
+
+def random_problem(seed, h, w, dtype=jnp.float32):
+    k = jax.random.split(jax.random.PRNGKey(seed), 4)
+    p = rand(k[0], h, w, dtype=dtype)
+    kx = jax.random.uniform(k[1], (h, w + 1), dtype=dtype, minval=0.1,
+                            maxval=1.0)
+    ky = jax.random.uniform(k[2], (h, w), dtype=dtype, minval=0.1,
+                            maxval=1.0)
+    d = jax.random.uniform(k[3], (h, w), dtype=dtype, minval=1.0,
+                           maxval=4.0)
+    return p, kx, ky, d
+
+
+@pytest.mark.parametrize("h,w", [(64, 64), (128, 128), (256, 256),
+                                 (64, 128), (128, 64)])
+def test_kernel_matches_ref_fixed_shapes(h, w):
+    p, kx, ky, d = random_problem(0, h, w)
+    got = stencil.apply_operator(p, kx, ky, d)
+    want = ref.apply_operator_ref(p, kx, ky, d)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    hb=st.integers(1, 6),
+    w=st.integers(3, 130),
+    block=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+    # NOTE: x64 stays disabled in this image (AOT artifacts are f32);
+    # bfloat16 exercises the low-precision path the TPU story relies on.
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+)
+def test_kernel_matches_ref_hypothesis(hb, w, block, seed, dtype):
+    h = hb * block
+    p, kx, ky, d = random_problem(seed % 1000, h, w, dtype=dtype)
+    got = stencil.apply_operator(p, kx, ky, d, block=block)
+    want = ref.apply_operator_ref(p, kx, ky, d)
+    if dtype == jnp.bfloat16:
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   rtol=0.1, atol=0.1)
+    else:
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_kernel_rejects_unaligned_height():
+    p, kx, ky, d = random_problem(0, 65, 64)
+    with pytest.raises(ValueError, match="not a multiple"):
+        stencil.apply_operator(p, kx, ky, d, block=64)
+
+
+def test_halo_variant_equals_fused_domain():
+    """Two stacked subdomains with exchanged halos == one fused domain."""
+    h, w = 128, 96
+    p, kxf, kyf, df = random_problem(3, h, w)
+    full = ref.apply_operator_ref(p, kxf, kyf, df)
+
+    top, bot = p[: h // 2], p[h // 2:]
+    # rank-local coefficient slices
+    sl = lambda a: (a[: h // 2], a[h // 2:])
+    kx_t, kx_b = sl(kxf)
+    ky_t, ky_b = sl(kyf)
+    d_t, d_b = sl(df)
+    zero = jnp.zeros((w,), p.dtype)
+
+    got_top = stencil.apply_operator_halo(top, zero, bot[0], kx_t, ky_t,
+                                          ky_b[0], d_t, block=16)
+    got_bot = stencil.apply_operator_halo(bot, top[-1], zero, kx_b, ky_b,
+                                          zero, d_b, block=16)
+    # NOTE: the split operator differs from the fused one at the interface
+    # row only through the ky face owned by the *lower* rank; TeaLeaf-style
+    # decomposition keeps face arrays global, which our slices do.
+    np.testing.assert_allclose(got_top, full[: h // 2], rtol=1e-5,
+                               atol=1e-5)
+    np.testing.assert_allclose(got_bot, full[h // 2:], rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_operator_is_symmetric_positive_definite():
+    """CG's contract: <Ap, q> == <p, Aq> and <p, Ap> > 0 for coefficients
+    from build_coefficients (zero-flux faces)."""
+    h = w = 32
+    kx, ky, d = ref.build_coefficients(h, w)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(7))
+    p = rand(k1, h, w)
+    q = rand(k2, h, w)
+    ap = stencil.apply_operator(p, kx, ky, d, block=8)
+    aq = stencil.apply_operator(q, kx, ky, d, block=8)
+    assert abs(float(jnp.vdot(ap, q) - jnp.vdot(p, aq))) < 1e-2
+    assert float(jnp.vdot(p, ap)) > 0
+
+
+def test_flops_counts_match_kernel_definition():
+    assert stencil.flops_per_application(10, 20) == 9 * 200
+    assert stencil.vmem_bytes(64, 4096) < 16 * 2**20

@@ -1,0 +1,112 @@
+//! Ablation — detection reliability vs platform noise (the paper's
+//! §Discussion caveats: unstable platforms [6] and un-instrumented I/O
+//! skew the factors; the detector's noise gate is the mitigation).
+//!
+//! Sweeps the simulator's noise model from calm to "misconfigured
+//! platform" and reports, over many seeded histories with one injected
+//! bug fix: true-positive rate (fix found at the right commit, with the
+//! right explanation) and false-positive count (findings elsewhere).
+
+use talp_pages::apps::{run_with_talp_noise, CodeVersion, Genex};
+use talp_pages::pages::detect::{self, ChangeKind, DetectOptions};
+use talp_pages::sim::{MachineSpec, NoiseModel, ResourceConfig};
+use talp_pages::talp::{GitMeta, RunData};
+use talp_pages::util::bench::Table;
+
+fn history(noise: &NoiseModel, seed: u64) -> Vec<RunData> {
+    let machine = MachineSpec::marenostrum5();
+    let res = ResourceConfig::new(2, 14);
+    let fix_at = 4;
+    (0..8)
+        .map(|i| {
+            let version = if i < fix_at {
+                CodeVersion::buggy()
+            } else {
+                CodeVersion::fixed()
+            };
+            let mut app = Genex::salpha(2, version);
+            app.timesteps = 2;
+            let (mut d, _) = run_with_talp_noise(
+                &app,
+                &machine,
+                &res,
+                seed * 100 + i,
+                0,
+                noise.clone(),
+            );
+            d.git = Some(GitMeta {
+                commit: format!("c{i:07}"),
+                branch: "main".into(),
+                commit_timestamp: 1000 + i as i64,
+                message: String::new(),
+            });
+            d
+        })
+        .collect()
+}
+
+fn main() {
+    let noises: Vec<(&str, NoiseModel)> = vec![
+        ("none", NoiseModel::none()),
+        ("calm", NoiseModel::calm()),
+        ("typical", NoiseModel::typical()),
+        ("noisy [6]-style", NoiseModel::noisy()),
+    ];
+    let trials = 10u64;
+    let mut table = Table::new(
+        "Ablation — detection vs platform noise (8-commit history, fix at #4)",
+        &["noise", "fix detected", "explained", "false positives/run"],
+    );
+    for (label, noise) in &noises {
+        let mut detected = 0u32;
+        let mut explained = 0u32;
+        let mut false_pos = 0u32;
+        for t in 0..trials {
+            let runs = history(noise, t);
+            let refs: Vec<&RunData> = runs.iter().collect();
+            let findings =
+                detect::detect("2x14", &refs, &DetectOptions::default());
+            let mut hit = false;
+            for f in &findings {
+                let is_fix = f.region == "initialize"
+                    && f.at_index == 4
+                    && f.kind == ChangeKind::Improvement;
+                if is_fix {
+                    hit = true;
+                    if f
+                        .explanation
+                        .as_ref()
+                        .map(|(n, _, _)| n.contains("Serialization"))
+                        .unwrap_or(false)
+                    {
+                        explained += 1;
+                    }
+                } else if f.region != "Global" {
+                    // Global legitimately co-moves with initialize.
+                    false_pos += 1;
+                }
+            }
+            if hit {
+                detected += 1;
+            }
+        }
+        table.row(&[
+            label.to_string(),
+            format!("{detected}/{trials}"),
+            format!("{explained}/{trials}"),
+            format!("{:.1}", false_pos as f64 / trials as f64),
+        ]);
+        if *label != "noisy [6]-style" {
+            assert_eq!(
+                detected, trials as u32,
+                "{label}: detector must be reliable below pathological noise"
+            );
+        }
+    }
+    table.print();
+    println!(
+        "\nShape: detection + explanation are robust through production-\n\
+         level noise; only a [6]-style unstable platform degrades them —\n\
+         matching the paper's call for instrumenting variance sources."
+    );
+}

@@ -1,0 +1,108 @@
+//! Fig. 7 — the GENE-X time-evolution case study: a 10-commit CI history
+//! with the OpenMP-serialization bug fixed at commit 6; the report's
+//! time-series must show the elapsed-time drop in `initialize` (and
+//! Global), a flat `timestep`, flat computation counters, and the
+//! OpenMP serialization efficiency as the explaining factor.
+
+use talp_pages::ci::{CiEngine, MatrixSpec, Repo};
+use talp_pages::pages::{scan, ReportOptions};
+use talp_pages::pages::timeseries;
+use talp_pages::util::bench::Table;
+use talp_pages::util::fs::TempDir;
+
+fn main() {
+    let td = TempDir::new("fig7").unwrap();
+    let n_commits = 10;
+    let fix_at = 6;
+    let repo = Repo::genex_history(n_commits, fix_at, 7, 1_700_000_000);
+    let jobs = MatrixSpec {
+        case: "salpha".into(),
+        resolutions: vec![3],
+        configurations: vec![("1Nx8MPI".into(), 8, 14)],
+        machine_tags: vec!["mn5".into()],
+    }
+    .expand();
+    let opts = ReportOptions {
+        regions: vec!["initialize".into(), "timestep".into()],
+        region_for_badge: Some("timestep".into()),
+    };
+    let mut engine = CiEngine::new(td.path()).unwrap();
+    let mut report_times = Vec::new();
+    for commit in &repo.commits {
+        let r = engine.run_pipeline(commit, &jobs, &opts).unwrap();
+        report_times.push(r.wall_time_s);
+    }
+
+    // Rebuild the series from the *published* talp folder, exactly as
+    // the report generator does.
+    let talp_dir = talp_pages::util::fs::subdirs(&td.path().join("work"))
+        .last()
+        .unwrap()
+        .join("talp");
+    let scanres = scan(&talp_dir).unwrap();
+    let exp = &scanres.experiments[0];
+    let cfg = exp.configs()[0].clone();
+    let history = exp.history_for_config(&cfg);
+    assert_eq!(history.len(), n_commits);
+    let ts = timeseries::build(&cfg, &history, &[]);
+
+    let mut table = Table::new(
+        "Fig. 7 — initialize region across commits",
+        &["commit", "elapsed [s]", "IPC", "freq [GHz]", "OMP serial eff"],
+    );
+    let elapsed = ts.metric("initialize", "elapsed");
+    let ipc = ts.metric("initialize", "ipc");
+    let freq = ts.metric("initialize", "frequency");
+    let ser = ts.metric("initialize", "omp_serialization_efficiency");
+    for i in 0..n_commits {
+        table.row(&[
+            format!(
+                "{}{}",
+                repo.commits[i].short(),
+                if i == fix_at { "  <- FIX" } else { "" }
+            ),
+            format!("{:.4}", elapsed[i].1),
+            format!("{:.2}", ipc[i].1),
+            format!("{:.2}", freq[i].1),
+            format!("{:.2}", ser[i].1),
+        ]);
+    }
+    table.print();
+
+    // --- the Fig. 7 assertions ---
+    let before = elapsed[fix_at - 1].1;
+    let after = elapsed[fix_at].1;
+    assert!(
+        after < 0.7 * before,
+        "initialize elapsed must drop at the fix: {before} -> {after}"
+    );
+    let g = ts.metric("Global", "elapsed");
+    assert!(g[fix_at].1 < g[fix_at - 1].1, "Global drops too");
+    let t = ts.metric("timestep", "elapsed");
+    let rel_t = (t[fix_at].1 - t[fix_at - 1].1).abs() / t[fix_at - 1].1;
+    assert!(rel_t < 0.1, "timestep unaffected ({rel_t})");
+    let rel_ipc =
+        (ipc[fix_at].1 - ipc[fix_at - 1].1).abs() / ipc[fix_at - 1].1;
+    assert!(rel_ipc < 0.15, "IPC must stay flat ({rel_ipc})");
+    let insn = ts.metric("initialize", "instructions");
+    let rel_insn =
+        (insn[fix_at].1 - insn[fix_at - 1].1).abs() / insn[fix_at - 1].1;
+    assert!(rel_insn < 0.05, "instructions must stay flat ({rel_insn})");
+    assert!(
+        ser[fix_at].1 > ser[fix_at - 1].1 + 0.15,
+        "OMP serialization efficiency explains the change: {} -> {}",
+        ser[fix_at - 1].1,
+        ser[fix_at].1
+    );
+    let mean_report =
+        report_times.iter().sum::<f64>() / report_times.len() as f64;
+    println!(
+        "\nOK Fig. 7: drop at {} explained by OMP serialization efficiency\n\
+         ({:.2} -> {:.2}) with flat IPC/instructions/frequency.\n\
+         Mean pipeline wall time (run+accumulate+report): {:.2}s.",
+        repo.commits[fix_at].short(),
+        ser[fix_at - 1].1,
+        ser[fix_at].1,
+        mean_report
+    );
+}

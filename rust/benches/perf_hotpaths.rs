@@ -1,0 +1,145 @@
+//! §Perf — micro-benchmarks of the hot paths (DESIGN.md §9):
+//!   1. simulator event throughput (engine),
+//!   2. TALP JSON parse throughput (report ingest),
+//!   3. full report generation over a large history corpus,
+//!   4. trace post-processing throughput (merge + dimemas replay).
+//!
+//! Targets: report of a 1k-run corpus < 1 s; simulator >= 1M events/s.
+//! Before/after numbers live in EXPERIMENTS.md §Perf.
+
+use talp_pages::apps::{self, run_with_talp, CodeVersion, Genex, TeaLeaf};
+use talp_pages::pages::{self, ReportOptions};
+use talp_pages::sim::{MachineSpec, ResourceConfig};
+use talp_pages::talp::{GitMeta, RunData};
+use talp_pages::tools::postprocess::{dimemas, merge};
+use talp_pages::tools::resources::ResourceMeter;
+use talp_pages::tools::tracer::ExtraeSink;
+use talp_pages::util::bench::bench;
+use talp_pages::util::fs::TempDir;
+use talp_pages::util::json::Json;
+
+fn main() {
+    let machine = MachineSpec::marenostrum5();
+
+    // 1. Simulator event throughput.
+    let app = {
+        let mut t = TeaLeaf::with_grid(1600, 1600);
+        t.timesteps = 2;
+        t.cg_iters = 30;
+        t.write_output = false;
+        t
+    };
+    let cfg = ResourceConfig::new(4, 28);
+    let mut events = 0u64;
+    let m = bench("sim: tealeaf 1600^2 4x28 clean run", 1, 8, || {
+        let s = apps::run_clean(&app, &machine, &cfg, 1);
+        events = s.total_events;
+    });
+    println!("{}", m.report());
+    let eps = events as f64 / m.min_s;
+    println!(
+        "  -> {events} events / run = {:.2} M events/s (target >= 1 M/s)",
+        eps / 1e6
+    );
+    assert!(eps > 1e6, "simulator below target: {eps}");
+
+    // 2. TALP JSON parse throughput.
+    let (data, _) = run_with_talp(&app, &machine, &cfg, 2, 0);
+    let text = data.to_json().to_string_pretty();
+    let bytes = text.len() as f64;
+    let m = bench("talp json: parse+validate", 3, 200, || {
+        let j = Json::parse(&text).unwrap();
+        let r = RunData::from_json(&j).unwrap();
+        std::hint::black_box(r.ranks);
+    });
+    println!("{}", m.report());
+    println!(
+        "  -> {:.1} MB/s over {:.1} KB docs",
+        bytes / m.mean_s / 1e6,
+        bytes / 1e3
+    );
+
+    // 3. Report generation over a large corpus: 2 experiments x 2
+    //    configs x 125 commits = 500 runs.
+    let td = TempDir::new("perf-corpus").unwrap();
+    let mut g = Genex::salpha(1, CodeVersion::fixed());
+    g.timesteps = 2;
+    let configs = [ResourceConfig::new(2, 8), ResourceConfig::new(4, 8)];
+    for exp in 0..2 {
+        for cfg in &configs {
+            let (base, _) = run_with_talp(&g, &machine, cfg, 9, 0);
+            for i in 0..125 {
+                let mut d = base.clone();
+                d.timestamp = 1_700_000_000 + i * 3600;
+                d.git = Some(GitMeta {
+                    commit: format!("{exp:02}{i:06x}aaaaaaaa"),
+                    branch: "main".into(),
+                    commit_timestamp: d.timestamp,
+                    message: String::new(),
+                });
+                d.write_file(
+                    &td.path().join(format!(
+                        "exp{exp}/runs/talp_{}_{i}.json",
+                        cfg.label()
+                    )),
+                )
+                .unwrap();
+            }
+        }
+    }
+    let out = TempDir::new("perf-out").unwrap();
+    let m = bench("report: 500-run corpus scan+render", 1, 5, || {
+        let s = pages::generate(
+            td.path(),
+            out.path(),
+            &ReportOptions::default(),
+        )
+        .unwrap();
+        std::hint::black_box(s.pages_written);
+    });
+    println!("{}", m.report());
+    assert!(
+        m.min_s < 1.0,
+        "report generation target missed: {:.3}s for 500 runs",
+        m.min_s
+    );
+
+    // 4. Trace post-processing throughput.
+    let ttd = TempDir::new("perf-trace").unwrap();
+    let small = {
+        let mut t = TeaLeaf::with_grid(2000, 2000);
+        t.timesteps = 1;
+        t.cg_iters = 20;
+        t.write_output = false;
+        t
+    };
+    let tcfg = ResourceConfig::new(2, 28);
+    {
+        let prog_machine = machine.clone();
+        let run_cfg = talp_pages::sim::RunConfig::new(
+            prog_machine.clone(),
+            tcfg.clone(),
+        );
+        let mut sink = ExtraeSink::create(ttd.path(), 2).unwrap();
+        let prog = {
+            use talp_pages::apps::Workload;
+            small.build(&tcfg, &prog_machine)
+        };
+        talp_pages::sim::run(&prog, &run_cfg, &mut [&mut sink]);
+        sink.finish(ttd.path()).unwrap();
+    }
+    let mut records = 0u64;
+    let m = bench("postprocess: merge + dimemas replay", 1, 5, || {
+        let mut meter = ResourceMeter::new();
+        let trace = merge::load(ttd.path(), "prv", &mut meter).unwrap();
+        let split =
+            dimemas::replay(&trace, dimemas::NetworkModel::default(), &mut meter);
+        records = split.replayed_events;
+        std::hint::black_box(split.wait_s.len());
+    });
+    println!("{}", m.report());
+    println!(
+        "  -> {records} records = {:.2} M records/s",
+        records as f64 / m.min_s / 1e6
+    );
+}

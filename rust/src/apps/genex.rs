@@ -1,0 +1,276 @@
+//! A GENE-X-like plasma turbulence app (paper §Integration into GENE-X).
+//!
+//! GENE-X itself is closed; what Fig. 7 needs from it is the *causal
+//! story*: an `initialize` region with an OpenMP serialization bug whose
+//! cost grows with thread count, a `timestep` region that is healthy, and
+//! a commit history in which the bug gets fixed — after which elapsed
+//! time drops, IPC/instructions/frequency stay flat, and the OpenMP
+//! serialization efficiency is the factor that explains the change.
+//! `CodeVersion` carries the per-commit tuning knobs the CI engine
+//! manipulates.
+//!
+//! The timestep numerics mirror `genex_step` in python/compile/model.py
+//! (4 stencil sweeps + bounded nonlinear update per step), so the same
+//! region structure is backed by a real AOT kernel.
+
+use crate::sim::{
+    CollKind, Imbalance, MachineSpec, OmpSchedule, Program, ResourceConfig,
+    Step,
+};
+
+use super::workload::{decomposition_weights, Workload};
+
+/// Flops per cell per sweep (matvec 9 + update/tanh ~16, matching
+/// model.flops("genex_step")).
+const SWEEP_FLOPS_PER_CELL: f64 = 25.0;
+const SWEEPS_PER_TIMESTEP: u32 = 4;
+const BYTES_PER_CELL: f64 = 6.0 * 8.0;
+
+/// Per-commit code state (what the CI history mutates).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CodeVersion {
+    /// The scaling bug: initialization work that runs *serialized* on
+    /// the master thread with cost growing with the thread count.
+    pub serialization_bug: bool,
+    /// Generic slowdown multiplier on useful work (for injecting plain
+    /// performance regressions into histories).
+    pub compute_slowdown: f64,
+}
+
+impl CodeVersion {
+    pub fn buggy() -> CodeVersion {
+        CodeVersion { serialization_bug: true, compute_slowdown: 1.0 }
+    }
+
+    pub fn fixed() -> CodeVersion {
+        CodeVersion { serialization_bug: false, compute_slowdown: 1.0 }
+    }
+}
+
+/// GENE-X-like application instance.
+#[derive(Debug, Clone)]
+pub struct Genex {
+    /// Case name (paper: "salpha").
+    pub case: String,
+    /// Grid resolution preset 1..=3 (paper: resolution_2, resolution_3).
+    pub resolution: u32,
+    pub timesteps: u32,
+    pub version: CodeVersion,
+}
+
+impl Genex {
+    pub fn salpha(resolution: u32, version: CodeVersion) -> Genex {
+        Genex {
+            case: "salpha".into(),
+            resolution,
+            timesteps: 12,
+            version,
+        }
+    }
+
+    pub fn cells(&self) -> f64 {
+        // resolution_1: 512^2, each level doubles linear size.
+        let n = 512u64 << (self.resolution.saturating_sub(1));
+        (n * n) as f64
+    }
+
+    pub fn resolution_label(&self) -> String {
+        format!("resolution_{}", self.resolution)
+    }
+}
+
+impl Workload for Genex {
+    fn name(&self) -> &str {
+        "genex"
+    }
+
+    fn regions(&self) -> Vec<String> {
+        vec!["initialize".into(), "timestep".into()]
+    }
+
+    fn build(&self, res: &ResourceConfig, _machine: &MachineSpec) -> Program {
+        let p = res.n_ranks;
+        let t = res.threads_per_rank;
+        let cells_per_rank = self.cells() / p as f64;
+        let ws_per_thread = cells_per_rank * BYTES_PER_CELL / t as f64;
+        let weights = decomposition_weights(p, 0.02, self.resolution as u64);
+        let slow = self.version.compute_slowdown;
+
+        let mut prog = Program::new();
+        prog.region("initialize", |prog| {
+            // Input deck + equilibrium read.
+            prog.push(Step::Io { bytes: 1 << 20, parallel: false });
+            prog.push(Step::Collective {
+                kind: CollKind::Bcast,
+                bytes_per_rank: 256 << 10,
+            });
+            // Healthy parallel part of the setup.
+            prog.push(Step::Parallel {
+                flops: cells_per_rank * 200.0 * slow,
+                working_set_bytes: ws_per_thread,
+                imbalance: Imbalance::Random { sigma: 0.03 },
+                schedule: OmpSchedule::Static,
+                rank_weights: weights.clone(),
+                insn_factor: 1.0,
+            });
+            // THE BUG: metric/geometry tables built inside an `omp
+            // single` — the *same work* (same instructions!) runs
+            // serialized on the master instead of across the team, so
+            // elapsed time balloons while counters stay flat — the
+            // paper's Fig. 7 signature.  The fix parallelizes it.
+            let geometry_flops = cells_per_rank * 60.0 * slow;
+            if self.version.serialization_bug {
+                prog.push(Step::Serial {
+                    flops: geometry_flops,
+                    // Tables are built slice by slice: per-slice working
+                    // set, so IPC matches the parallel version.
+                    working_set_bytes: ws_per_thread,
+                    rank_weights: weights.clone(),
+                });
+            } else {
+                prog.push(Step::Parallel {
+                    flops: geometry_flops,
+                    working_set_bytes: ws_per_thread,
+                    imbalance: Imbalance::Random { sigma: 0.03 },
+                    schedule: OmpSchedule::Static,
+                    rank_weights: weights.clone(),
+                    insn_factor: 1.0,
+                });
+            }
+            prog.push(Step::Collective {
+                kind: CollKind::Barrier,
+                bytes_per_rank: 0,
+            });
+        });
+        for _ in 0..self.timesteps {
+            prog.region("timestep", |prog| {
+                for _ in 0..SWEEPS_PER_TIMESTEP {
+                    prog.push(Step::Exchange {
+                        bytes_per_neighbor: (self.cells().sqrt() as u64) * 8,
+                    });
+                    prog.push(Step::Parallel {
+                        flops: cells_per_rank * SWEEP_FLOPS_PER_CELL * slow,
+                        working_set_bytes: ws_per_thread,
+                        imbalance: Imbalance::Random { sigma: 0.04 },
+                        schedule: OmpSchedule::Dynamic { chunks: 8 * t },
+                        rank_weights: weights.clone(),
+                        insn_factor: 1.0,
+                    });
+                }
+                // Field solve reduction.
+                prog.push(Step::Collective {
+                    kind: CollKind::Allreduce,
+                    bytes_per_rank: 256,
+                });
+            });
+        }
+        // Diagnostics dump.
+        prog.push(Step::Io { bytes: 2 << 20, parallel: true });
+        prog
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::workload::run_with_talp;
+    use crate::pop;
+    use crate::talp::RunData;
+
+    fn mn5() -> MachineSpec {
+        MachineSpec::marenostrum5()
+    }
+
+    fn run(version: CodeVersion, threads: u32) -> RunData {
+        let mut app = Genex::salpha(2, version);
+        app.timesteps = 4;
+        let (d, _) =
+            run_with_talp(&app, &mn5(), &ResourceConfig::new(2, threads), 11, 0);
+        d
+    }
+
+    #[test]
+    fn program_valid_and_has_regions() {
+        let app = Genex::salpha(2, CodeVersion::buggy());
+        let p = app.build(&ResourceConfig::new(4, 8), &mn5());
+        assert!(p.validate().is_ok());
+        let d = run(CodeVersion::buggy(), 8);
+        assert!(d.region("initialize").is_some());
+        assert!(d.region("timestep").is_some());
+    }
+
+    #[test]
+    fn bug_fix_speeds_up_initialize_not_timestep() {
+        let buggy = run(CodeVersion::buggy(), 14);
+        let fixed = run(CodeVersion::fixed(), 14);
+        let e = |d: &RunData, r: &str| d.region(r).unwrap().elapsed_s;
+        assert!(
+            e(&fixed, "initialize") < 0.6 * e(&buggy, "initialize"),
+            "initialize {} !<< {}",
+            e(&fixed, "initialize"),
+            e(&buggy, "initialize")
+        );
+        let ts_b = e(&buggy, "timestep");
+        let ts_f = e(&fixed, "timestep");
+        assert!(
+            (ts_f - ts_b).abs() < 0.05 * ts_b,
+            "timestep should be unaffected: {ts_b} vs {ts_f}"
+        );
+    }
+
+    #[test]
+    fn fix_is_explained_by_omp_serialization_efficiency() {
+        // The Fig. 7 causal chain, as a test.
+        let buggy = run(CodeVersion::buggy(), 14);
+        let fixed = run(CodeVersion::fixed(), 14);
+        let m = |d: &RunData| {
+            pop::compute(d.region("initialize").unwrap(), d.threads)
+        };
+        let mb = m(&buggy);
+        let mf = m(&fixed);
+        // Serialization efficiency jumps...
+        assert!(
+            mf.omp_serialization_efficiency
+                > mb.omp_serialization_efficiency + 0.15,
+            "serialization {} -> {}",
+            mb.omp_serialization_efficiency,
+            mf.omp_serialization_efficiency
+        );
+        // ...while computation counters stay flat (IPC within 15%).
+        let rel =
+            (mf.useful_ipc - mb.useful_ipc).abs() / mb.useful_ipc.max(1e-9);
+        assert!(rel < 0.15, "IPC moved {rel}");
+        let relf = (mf.frequency_ghz - mb.frequency_ghz).abs()
+            / mb.frequency_ghz.max(1e-9);
+        assert!(relf < 0.15, "frequency moved {relf}");
+    }
+
+    #[test]
+    fn bug_cost_grows_with_threads() {
+        let narrow = run(CodeVersion::buggy(), 4);
+        let wide = run(CodeVersion::buggy(), 28);
+        let pe = |d: &RunData| {
+            pop::compute(d.region("initialize").unwrap(), d.threads)
+                .omp_serialization_efficiency
+        };
+        assert!(
+            pe(&wide) < pe(&narrow),
+            "more threads should hurt more: {} vs {}",
+            pe(&wide),
+            pe(&narrow)
+        );
+    }
+
+    #[test]
+    fn compute_slowdown_injects_regression() {
+        let base = run(CodeVersion::fixed(), 8);
+        let slow = run(
+            CodeVersion { serialization_bug: false, compute_slowdown: 1.5 },
+            8,
+        );
+        assert!(
+            slow.region("Global").unwrap().elapsed_s
+                > 1.2 * base.region("Global").unwrap().elapsed_s
+        );
+    }
+}

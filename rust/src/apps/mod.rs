@@ -1,0 +1,18 @@
+//! Workloads that run on the simulator substrate.
+//!
+//! * [`tealeaf`]   — the paper's TeaLeaf CG mini-app (numerics backed by
+//!   the AOT Pallas kernel via `runtime`).
+//! * [`genex`]     — the GENE-X-like case study with the injectable
+//!   OpenMP serialization bug (Fig. 7).
+//! * [`synthetic`] — knob-per-effect app for tests + the MPI-only
+//!   Fig. 3 stencil.
+
+pub mod genex;
+pub mod synthetic;
+pub mod tealeaf;
+pub mod workload;
+
+pub use genex::{CodeVersion, Genex};
+pub use synthetic::{MpiStencil, Synthetic};
+pub use tealeaf::TeaLeaf;
+pub use workload::{run_clean, run_with_talp, run_with_talp_noise, Workload};

@@ -1,0 +1,124 @@
+//! Workload abstraction + the one-call helper that runs an app under a
+//! tool and returns the TALP JSON data.
+
+use crate::sim::{
+    self, MachineSpec, NoiseModel, Program, ResourceConfig, RunConfig,
+    RunSummary,
+};
+use crate::talp::{RunData, TalpMonitor};
+use crate::util::rng::Rng;
+
+/// An application that can be compiled to a simulator [`Program`].
+pub trait Workload {
+    fn name(&self) -> &str;
+
+    /// TALP-API regions the app annotates (beyond the implicit Global).
+    fn regions(&self) -> Vec<String>;
+
+    /// Emit the SPMD program for the given resources.
+    fn build(&self, resources: &ResourceConfig, machine: &MachineSpec) -> Program;
+}
+
+/// Run `app` under TALP and return its JSON data plus the engine summary.
+pub fn run_with_talp(
+    app: &dyn Workload,
+    machine: &MachineSpec,
+    resources: &ResourceConfig,
+    seed: u64,
+    timestamp: i64,
+) -> (RunData, RunSummary) {
+    let program = app.build(resources, machine);
+    let cfg = RunConfig::new(machine.clone(), resources.clone()).with_seed(seed);
+    let mut mon = TalpMonitor::new(resources.n_ranks, resources.threads_per_rank);
+    let summary = sim::run(&program, &cfg, &mut [&mut mon]);
+    let report = mon.finalize();
+    let data =
+        RunData::from_report(&report, app.name(), machine, resources, timestamp);
+    (data, summary)
+}
+
+/// `run_with_talp` with an explicit noise model (reliability ablations).
+pub fn run_with_talp_noise(
+    app: &dyn Workload,
+    machine: &MachineSpec,
+    resources: &ResourceConfig,
+    seed: u64,
+    timestamp: i64,
+    noise: NoiseModel,
+) -> (RunData, RunSummary) {
+    let program = app.build(resources, machine);
+    let cfg = RunConfig::new(machine.clone(), resources.clone())
+        .with_seed(seed)
+        .with_noise(noise);
+    let mut mon = TalpMonitor::new(resources.n_ranks, resources.threads_per_rank);
+    let summary = sim::run(&program, &cfg, &mut [&mut mon]);
+    let report = mon.finalize();
+    let data =
+        RunData::from_report(&report, app.name(), machine, resources, timestamp);
+    (data, summary)
+}
+
+/// Run `app` with no tool attached (clean baseline for overhead
+/// measurements, Table 1).
+pub fn run_clean(
+    app: &dyn Workload,
+    machine: &MachineSpec,
+    resources: &ResourceConfig,
+    seed: u64,
+) -> RunSummary {
+    let program = app.build(resources, machine);
+    let cfg = RunConfig::new(machine.clone(), resources.clone()).with_seed(seed);
+    sim::run(&program, &cfg, &mut [])
+}
+
+/// Run with explicit noise (repeatability studies).
+pub fn run_clean_noisy(
+    app: &dyn Workload,
+    machine: &MachineSpec,
+    resources: &ResourceConfig,
+    seed: u64,
+    noise: NoiseModel,
+) -> RunSummary {
+    let program = app.build(resources, machine);
+    let cfg = RunConfig::new(machine.clone(), resources.clone())
+        .with_seed(seed)
+        .with_noise(noise);
+    sim::run(&program, &cfg, &mut [])
+}
+
+/// Deterministic per-rank work weights with a small boundary effect:
+/// edge ranks of a 1-D decomposition own one halo less (lighter), plus a
+/// reproducible per-rank jitter.
+pub fn decomposition_weights(n_ranks: u32, jitter_sigma: f64, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed ^ 0x5eed);
+    (0..n_ranks)
+        .map(|r| {
+            let edge = r == 0 || r + 1 == n_ranks;
+            let base = if edge && n_ranks > 1 { 0.985 } else { 1.0 };
+            base * (1.0 + jitter_sigma * (rng.f64() - 0.5))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weights_deterministic_and_near_one() {
+        let a = decomposition_weights(8, 0.02, 42);
+        let b = decomposition_weights(8, 0.02, 42);
+        assert_eq!(a, b);
+        for w in &a {
+            assert!((0.9..1.1).contains(w));
+        }
+        // Edges lighter than interior on average.
+        assert!(a[0] < 1.0);
+    }
+
+    #[test]
+    fn single_rank_has_no_edge_discount() {
+        let w = decomposition_weights(1, 0.0, 1);
+        assert_eq!(w, vec![1.0]);
+    }
+}

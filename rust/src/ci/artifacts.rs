@@ -1,0 +1,231 @@
+//! CI artifact management — the paper's replacement for databases and
+//! secondary repositories: each pipeline uploads its `talp/` folder as a
+//! zip artifact; the next pipeline downloads its predecessor's zip,
+//! unpacks it, and copies it over the fresh results (Fig. 6's
+//! `talp download-gitlab` + `unzip` + `cp -r`).
+//!
+//! Real zips via the `zip` crate: artifact size on disk is measurable,
+//! and the paper's "with enough data the artifact management could
+//! become inadequate" caveat can be demonstrated.
+
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+use zip::write::FileOptions;
+
+/// Zip-file-backed artifact store, one subdirectory per pipeline.
+pub struct ArtifactStore {
+    root: PathBuf,
+}
+
+impl ArtifactStore {
+    pub fn new(root: &Path) -> Result<ArtifactStore> {
+        std::fs::create_dir_all(root)?;
+        Ok(ArtifactStore { root: root.to_path_buf() })
+    }
+
+    fn artifact_path(&self, pipeline_id: u64, name: &str) -> PathBuf {
+        self.root
+            .join(format!("pipeline_{pipeline_id:06}"))
+            .join(format!("{name}.zip"))
+    }
+
+    /// Zip `dir` and store it as artifact `name` of `pipeline_id`.
+    /// Returns the zip size in bytes.
+    pub fn upload(
+        &self,
+        pipeline_id: u64,
+        name: &str,
+        dir: &Path,
+    ) -> Result<u64> {
+        let path = self.artifact_path(pipeline_id, name);
+        std::fs::create_dir_all(path.parent().unwrap())?;
+        let file = std::fs::File::create(&path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        let mut zip = zip::ZipWriter::new(file);
+        let opts: FileOptions = FileOptions::default()
+            .compression_method(zip::CompressionMethod::Deflated);
+        let mut stack = vec![dir.to_path_buf()];
+        let mut buf = Vec::new();
+        while let Some(d) = stack.pop() {
+            let mut entries: Vec<_> =
+                std::fs::read_dir(&d)?.flatten().collect();
+            entries.sort_by_key(|e| e.path());
+            for entry in entries {
+                let p = entry.path();
+                let rel = p
+                    .strip_prefix(dir)
+                    .unwrap()
+                    .to_string_lossy()
+                    .replace('\\', "/");
+                if p.is_dir() {
+                    stack.push(p);
+                } else {
+                    zip.start_file(rel, opts)?;
+                    buf.clear();
+                    std::fs::File::open(&p)?.read_to_end(&mut buf)?;
+                    zip.write_all(&buf)?;
+                }
+            }
+        }
+        zip.finish()?;
+        Ok(std::fs::metadata(&path)?.len())
+    }
+
+    /// Fetch the most recent artifact `name` from any pipeline with id
+    /// strictly below `pipeline_id` (the "download the previous
+    /// pipeline's artifacts" step).
+    pub fn download_previous(
+        &self,
+        pipeline_id: u64,
+        name: &str,
+    ) -> Option<PathBuf> {
+        (0..pipeline_id)
+            .rev()
+            .map(|id| self.artifact_path(id, name))
+            .find(|p| p.exists())
+    }
+
+    /// Unzip an artifact into `dest` (existing files are overwritten —
+    /// the `cp -r talp_history/* talp` of Fig. 6 goes the other way, so
+    /// the runner unzips into a scratch dir and copies over).
+    pub fn extract(zip_path: &Path, dest: &Path) -> Result<u64> {
+        let file = std::fs::File::open(zip_path)
+            .with_context(|| format!("opening {}", zip_path.display()))?;
+        let mut archive = zip::ZipArchive::new(file)?;
+        let mut files = 0u64;
+        for i in 0..archive.len() {
+            let mut entry = archive.by_index(i)?;
+            let Some(rel) = entry.enclosed_name().map(PathBuf::from) else {
+                continue;
+            };
+            let out = dest.join(rel);
+            if entry.is_dir() {
+                std::fs::create_dir_all(&out)?;
+                continue;
+            }
+            if let Some(parent) = out.parent() {
+                std::fs::create_dir_all(parent)?;
+            }
+            let mut f = std::fs::File::create(&out)?;
+            std::io::copy(&mut entry, &mut f)?;
+            files += 1;
+        }
+        Ok(files)
+    }
+
+    /// Total bytes stored (the artifact-bloat caveat, §Discussion).
+    pub fn total_bytes(&self) -> u64 {
+        crate::util::fs::dir_size(&self.root)
+    }
+
+    /// Retention policy for the §Discussion bloat problem: keep only
+    /// the newest `keep` pipelines' artifacts (history travels forward
+    /// inside each new artifact anyway).  Returns bytes freed.
+    pub fn prune(&self, keep: usize) -> Result<u64> {
+        let mut dirs = crate::util::fs::subdirs(&self.root);
+        dirs.retain(|d| {
+            d.file_name()
+                .and_then(|n| n.to_str())
+                .map(|n| n.starts_with("pipeline_"))
+                .unwrap_or(false)
+        });
+        if dirs.len() <= keep {
+            return Ok(0);
+        }
+        let mut freed = 0;
+        let drop_n = dirs.len() - keep;
+        for d in dirs.into_iter().take(drop_n) {
+            freed += crate::util::fs::dir_size(&d);
+            std::fs::remove_dir_all(&d)?;
+        }
+        Ok(freed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::fs::TempDir;
+
+    fn make_tree(root: &Path) {
+        std::fs::create_dir_all(root.join("talp/case/res")).unwrap();
+        std::fs::write(root.join("talp/case/res/a.json"), b"{\"x\":1}")
+            .unwrap();
+        std::fs::write(root.join("talp/top.json"), b"{}").unwrap();
+    }
+
+    #[test]
+    fn upload_download_roundtrip() {
+        let td = TempDir::new("artifacts").unwrap();
+        let store = ArtifactStore::new(&td.path().join("store")).unwrap();
+        let src = td.path().join("src");
+        make_tree(&src);
+        let size = store.upload(3, "talp", &src.join("talp")).unwrap();
+        assert!(size > 0);
+
+        // Pipeline 7 finds pipeline 3's artifact.
+        let zip = store.download_previous(7, "talp").unwrap();
+        let dest = td.path().join("restored");
+        let files = ArtifactStore::extract(&zip, &dest).unwrap();
+        assert_eq!(files, 2);
+        assert_eq!(
+            std::fs::read_to_string(dest.join("case/res/a.json")).unwrap(),
+            "{\"x\":1}"
+        );
+    }
+
+    #[test]
+    fn no_previous_artifact_for_first_pipeline() {
+        let td = TempDir::new("artifacts2").unwrap();
+        let store = ArtifactStore::new(&td.path().join("store")).unwrap();
+        assert!(store.download_previous(0, "talp").is_none());
+    }
+
+    #[test]
+    fn most_recent_previous_wins() {
+        let td = TempDir::new("artifacts3").unwrap();
+        let store = ArtifactStore::new(&td.path().join("store")).unwrap();
+        let src = td.path().join("src");
+        make_tree(&src);
+        store.upload(1, "talp", &src.join("talp")).unwrap();
+        store.upload(4, "talp", &src.join("talp")).unwrap();
+        let zip = store.download_previous(6, "talp").unwrap();
+        assert!(zip.to_string_lossy().contains("pipeline_000004"));
+    }
+
+    #[test]
+    fn prune_keeps_newest() {
+        let td = TempDir::new("artifacts5").unwrap();
+        let store = ArtifactStore::new(&td.path().join("store")).unwrap();
+        let src = td.path().join("src");
+        make_tree(&src);
+        for id in 0..5 {
+            store.upload(id, "talp", &src.join("talp")).unwrap();
+        }
+        let freed = store.prune(2).unwrap();
+        assert!(freed > 0);
+        // Oldest gone, newest still downloadable.
+        assert!(store.download_previous(10, "talp").is_some());
+        let zip = store.download_previous(10, "talp").unwrap();
+        assert!(zip.to_string_lossy().contains("pipeline_000004"));
+        assert!(store
+            .download_previous(2, "talp")
+            .is_none(), "pipelines 0/1 pruned");
+        // No-op when already under the limit.
+        assert_eq!(store.prune(10).unwrap(), 0);
+    }
+
+    #[test]
+    fn total_bytes_grows() {
+        let td = TempDir::new("artifacts4").unwrap();
+        let store = ArtifactStore::new(&td.path().join("store")).unwrap();
+        let src = td.path().join("src");
+        make_tree(&src);
+        store.upload(0, "talp", &src.join("talp")).unwrap();
+        let b1 = store.total_bytes();
+        store.upload(1, "talp", &src.join("talp")).unwrap();
+        assert!(store.total_bytes() > b1);
+    }
+}

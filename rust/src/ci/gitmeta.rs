@@ -1,0 +1,85 @@
+//! `talp metadata` — the convenience wrapper of Fig. 6 that stamps
+//! git-related metadata (commit hash, branch, commit timestamp) into
+//! freshly generated TALP JSONs before they are archived.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::talp::{GitMeta, RunData};
+use crate::util::fs;
+
+use super::repo::Commit;
+
+/// Stamp every `.json` under `dir` that parses as a TALP file and does
+/// not yet carry git metadata.  Returns the number of files stamped.
+pub fn stamp_tree(dir: &Path, commit: &Commit) -> Result<u64> {
+    let mut stamped = 0;
+    for path in fs::files_with_ext(dir, "json") {
+        let Ok(mut run) = RunData::read_file(&path) else {
+            continue; // not a TALP json (e.g. regions.json) — skip
+        };
+        if run.git.is_some() {
+            continue; // history entries already stamped by their pipeline
+        }
+        run.git = Some(GitMeta {
+            commit: commit.sha.clone(),
+            branch: commit.branch.clone(),
+            commit_timestamp: commit.timestamp,
+            message: commit.message.clone(),
+        });
+        run.write_file(&path)?;
+        stamped += 1;
+    }
+    Ok(stamped)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::{run_with_talp, CodeVersion, Genex};
+    use crate::ci::repo::Repo;
+    use crate::sim::{MachineSpec, ResourceConfig};
+    use crate::util::fs::TempDir;
+
+    #[test]
+    fn stamps_only_unstamped_talp_jsons() {
+        let td = TempDir::new("gitmeta").unwrap();
+        let machine = MachineSpec::marenostrum5();
+        let mut app = Genex::salpha(1, CodeVersion::fixed());
+        app.timesteps = 1;
+        let (fresh, _) = run_with_talp(
+            &app,
+            &machine,
+            &ResourceConfig::new(1, 4),
+            1,
+            1_000,
+        );
+        fresh.write_file(&td.path().join("a/fresh.json")).unwrap();
+
+        let mut old = fresh.clone();
+        old.git = Some(crate::talp::GitMeta {
+            commit: "old".into(),
+            branch: "main".into(),
+            commit_timestamp: 5,
+            message: String::new(),
+        });
+        old.write_file(&td.path().join("a/old.json")).unwrap();
+        std::fs::write(td.path().join("a/regions.json"), "{\"x\":[]}")
+            .unwrap();
+
+        let repo = Repo::genex_history(1, 0, 7, 42);
+        let n = stamp_tree(td.path(), &repo.commits[0]).unwrap();
+        assert_eq!(n, 1);
+
+        let restamped =
+            RunData::read_file(&td.path().join("a/fresh.json")).unwrap();
+        assert_eq!(
+            restamped.git.as_ref().unwrap().commit,
+            repo.commits[0].sha
+        );
+        let untouched =
+            RunData::read_file(&td.path().join("a/old.json")).unwrap();
+        assert_eq!(untouched.git.unwrap().commit, "old");
+    }
+}

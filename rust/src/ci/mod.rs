@@ -1,0 +1,16 @@
+//! In-process CI engine (the GitLab stand-in, DESIGN.md §2): synthetic
+//! commit history, matrix pipelines, zip artifact store with the
+//! download-previous/merge cycle, and static pages publishing — the
+//! full Fig. 4 workflow.
+
+pub mod artifacts;
+pub mod gitmeta;
+pub mod pipeline;
+pub mod repo;
+pub mod runner;
+pub mod templates;
+
+pub use artifacts::ArtifactStore;
+pub use pipeline::{MatrixSpec, PerformanceJob};
+pub use repo::{Commit, Repo};
+pub use runner::{CiEngine, PipelineResult};

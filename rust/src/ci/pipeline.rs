@@ -1,0 +1,108 @@
+//! Pipeline and job definitions mirroring the paper's Fig. 5: a
+//! `performance` stage instantiated as a matrix over (resolution,
+//! configuration, machine), followed by the accumulating `talp-pages`
+//! job (Fig. 6) which the runner executes.
+
+use crate::sim::{MachineSpec, ResourceConfig};
+
+/// One performance job (one cell of the Fig. 5 matrix).
+#[derive(Debug, Clone)]
+pub struct PerformanceJob {
+    pub case: String,
+    pub resolution: u32,
+    /// "1Nx2MPI"-style configuration label from the paper's YAML.
+    pub configuration: String,
+    pub machine_tag: String,
+    pub resources: ResourceConfig,
+}
+
+impl PerformanceJob {
+    /// Folder the job copies its talp.json into (Fig. 5 line 9):
+    /// `talp/<case>/<resolution>/<machine>/`.
+    pub fn talp_subdir(&self) -> String {
+        format!(
+            "{}/resolution_{}/{}",
+            self.case, self.resolution, self.machine_tag
+        )
+    }
+}
+
+/// Matrix expansion (Fig. 5's `parallel: matrix`).
+#[derive(Debug, Clone)]
+pub struct MatrixSpec {
+    pub case: String,
+    pub resolutions: Vec<u32>,
+    /// (label, ranks, threads) triples, e.g. ("1Nx2MPI", 2, 56).
+    pub configurations: Vec<(String, u32, u32)>,
+    pub machine_tags: Vec<String>,
+}
+
+impl MatrixSpec {
+    /// The paper's `performance-cpu-fast` job: salpha, resolution_2,
+    /// 1 and 2 nodes, on mn5 and raven.  Node→rank mapping follows the
+    /// paper's "one MPI rank per socket" pinning.
+    pub fn performance_cpu_fast() -> MatrixSpec {
+        MatrixSpec {
+            case: "salpha".into(),
+            resolutions: vec![2],
+            configurations: vec![
+                ("1Nx2MPI".into(), 2, 56),
+                ("2Nx4MPI".into(), 4, 56),
+            ],
+            machine_tags: vec!["mn5".into(), "raven".into()],
+        }
+    }
+
+    pub fn expand(&self) -> Vec<PerformanceJob> {
+        let mut jobs = Vec::new();
+        for res in &self.resolutions {
+            for (label, ranks, threads) in &self.configurations {
+                for tag in &self.machine_tags {
+                    // Thread count is capped by the machine's socket
+                    // width (raven sockets have 36 cores).
+                    let machine = MachineSpec::by_name(tag)
+                        .unwrap_or_else(MachineSpec::marenostrum5);
+                    let t = (*threads).min(machine.cores_per_socket);
+                    jobs.push(PerformanceJob {
+                        case: self.case.clone(),
+                        resolution: *res,
+                        configuration: label.clone(),
+                        machine_tag: tag.clone(),
+                        resources: ResourceConfig::new(*ranks, t),
+                    });
+                }
+            }
+        }
+        jobs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matrix_expands_fully() {
+        let jobs = MatrixSpec::performance_cpu_fast().expand();
+        assert_eq!(jobs.len(), 4); // 1 res x 2 configs x 2 machines
+        assert!(jobs.iter().any(|j| j.machine_tag == "raven"));
+        assert!(jobs
+            .iter()
+            .any(|j| j.configuration == "2Nx4MPI" && j.resources.n_ranks == 4));
+    }
+
+    #[test]
+    fn raven_thread_cap() {
+        let jobs = MatrixSpec::performance_cpu_fast().expand();
+        let raven = jobs.iter().find(|j| j.machine_tag == "raven").unwrap();
+        assert_eq!(raven.resources.threads_per_rank, 36);
+        let mn5 = jobs.iter().find(|j| j.machine_tag == "mn5").unwrap();
+        assert_eq!(mn5.resources.threads_per_rank, 56);
+    }
+
+    #[test]
+    fn talp_subdir_matches_fig5() {
+        let jobs = MatrixSpec::performance_cpu_fast().expand();
+        assert_eq!(jobs[0].talp_subdir(), "salpha/resolution_2/mn5");
+    }
+}

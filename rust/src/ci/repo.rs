@@ -1,0 +1,125 @@
+//! Synthetic git repository: a commit history whose code state drives
+//! the simulated application (apps::genex::CodeVersion).  This is the
+//! "developer commits code changes" half of the paper's Fig. 1 loop.
+
+use crate::apps::CodeVersion;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct Commit {
+    pub sha: String,
+    pub branch: String,
+    pub timestamp: i64,
+    pub message: String,
+    /// The code state this commit builds into.
+    pub version: CodeVersion,
+}
+
+impl Commit {
+    pub fn short(&self) -> &str {
+        &self.sha[..8.min(self.sha.len())]
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Repo {
+    pub commits: Vec<Commit>,
+}
+
+impl Repo {
+    /// The Fig. 7 history: `n` commits on main, the serialization-bug
+    /// fix landing at index `fix_at` (earlier commits carry the bug).
+    /// One commit per day starting at `t0`.
+    pub fn genex_history(n: usize, fix_at: usize, seed: u64, t0: i64) -> Repo {
+        let mut rng = Rng::new(seed);
+        let messages_before = [
+            "add salpha diagnostics",
+            "refactor geometry module",
+            "bump input deck defaults",
+            "cleanup build flags",
+            "tune field solver tolerances",
+        ];
+        let commits = (0..n)
+            .map(|i| {
+                let version = if i < fix_at {
+                    CodeVersion::buggy()
+                } else {
+                    CodeVersion::fixed()
+                };
+                let message = if i == fix_at {
+                    "fix: parallelize geometry table setup (omp single \
+                     serialization)"
+                        .to_string()
+                } else {
+                    messages_before[rng.below(
+                        messages_before.len() as u64
+                    ) as usize]
+                        .to_string()
+                };
+                Commit {
+                    sha: rng.hex(40),
+                    branch: "main".into(),
+                    timestamp: t0 + i as i64 * 86_400,
+                    message,
+                    version,
+                }
+            })
+            .collect();
+        Repo { commits }
+    }
+
+    /// History with an additional plain performance regression window
+    /// [slow_from, slow_to) (for regression-detection ablations).
+    pub fn with_regression(
+        mut self,
+        slow_from: usize,
+        slow_to: usize,
+        factor: f64,
+    ) -> Repo {
+        for (i, c) in self.commits.iter_mut().enumerate() {
+            if i >= slow_from && i < slow_to {
+                c.version.compute_slowdown = factor;
+            }
+        }
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn history_has_fix_at_index() {
+        let r = Repo::genex_history(10, 6, 1, 1_700_000_000);
+        assert_eq!(r.commits.len(), 10);
+        assert!(r.commits[5].version.serialization_bug);
+        assert!(!r.commits[6].version.serialization_bug);
+        assert!(r.commits[6].message.contains("fix"));
+        // strictly increasing timestamps
+        for w in r.commits.windows(2) {
+            assert!(w[0].timestamp < w[1].timestamp);
+        }
+        // unique shas
+        let mut shas: Vec<&str> =
+            r.commits.iter().map(|c| c.sha.as_str()).collect();
+        shas.sort();
+        shas.dedup();
+        assert_eq!(shas.len(), 10);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = Repo::genex_history(5, 2, 9, 0);
+        let b = Repo::genex_history(5, 2, 9, 0);
+        assert_eq!(a.commits[3].sha, b.commits[3].sha);
+    }
+
+    #[test]
+    fn regression_window() {
+        let r = Repo::genex_history(8, 4, 1, 0).with_regression(2, 4, 1.5);
+        assert_eq!(r.commits[1].version.compute_slowdown, 1.0);
+        assert_eq!(r.commits[2].version.compute_slowdown, 1.5);
+        assert_eq!(r.commits[4].version.compute_slowdown, 1.0);
+    }
+}

@@ -1,0 +1,293 @@
+//! The CI engine: executes the paper's Fig. 4 cycle for each commit.
+//!
+//! For one pipeline:
+//! 1. every performance job runs the app (the commit's code state)
+//!    under TALP on its target machine, dropping `talp.json` into the
+//!    Fig. 5 folder structure;
+//! 2. `talp metadata` stamps git info into the fresh JSONs;
+//! 3. the accumulating job downloads the previous pipeline's `talp`
+//!    artifact, unzips it and copies it over (history merge);
+//! 4. `talp ci-report` regenerates the HTML report into `public/talp`;
+//! 5. both `talp/` (for the next pipeline) and `public/` (for pages
+//!    hosting) are uploaded as artifacts, and `public/` is published.
+//!
+//! Jobs run on OS threads (one per matrix cell), mirroring concurrent
+//! CI runners.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::apps::{run_with_talp, Genex};
+use crate::pages::{self, ReportOptions};
+use crate::sim::MachineSpec;
+use crate::talp::RunData;
+use crate::util::timefmt;
+
+use super::artifacts::ArtifactStore;
+use super::gitmeta;
+use super::pipeline::PerformanceJob;
+use super::repo::Commit;
+
+pub struct CiEngine {
+    root: PathBuf,
+    store: ArtifactStore,
+    /// Pages hosting directory (the GitLab-Pages stand-in).
+    pages_dir: PathBuf,
+    next_pipeline: u64,
+}
+
+#[derive(Debug)]
+pub struct PipelineResult {
+    pub pipeline_id: u64,
+    pub commit_short: String,
+    pub jobs_run: usize,
+    pub history_files: u64,
+    pub report: pages::ReportSummary,
+    pub talp_artifact_bytes: u64,
+    pub wall_time_s: f64,
+}
+
+impl CiEngine {
+    pub fn new(root: &Path) -> Result<CiEngine> {
+        let store = ArtifactStore::new(&root.join("artifacts"))?;
+        let pages_dir = root.join("pages");
+        std::fs::create_dir_all(&pages_dir)?;
+        Ok(CiEngine {
+            root: root.to_path_buf(),
+            store,
+            pages_dir,
+            next_pipeline: 0,
+        })
+    }
+
+    pub fn pages_dir(&self) -> &Path {
+        &self.pages_dir
+    }
+
+    pub fn artifact_bytes(&self) -> u64 {
+        self.store.total_bytes()
+    }
+
+    /// Execute one full pipeline for `commit`.
+    pub fn run_pipeline(
+        &mut self,
+        commit: &Commit,
+        jobs: &[PerformanceJob],
+        report_opts: &ReportOptions,
+    ) -> Result<PipelineResult> {
+        let t0 = std::time::Instant::now();
+        let id = self.next_pipeline;
+        self.next_pipeline += 1;
+        let work = self.root.join(format!("work/pipeline_{id:06}"));
+        let talp_dir = work.join("talp");
+        std::fs::create_dir_all(&talp_dir)?;
+
+        // ---- performance stage: one thread per matrix job ----
+        let results: Vec<Result<(PerformanceJob, RunData)>> =
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = jobs
+                    .iter()
+                    .map(|job| {
+                        let job = job.clone();
+                        let commit = commit.clone();
+                        scope.spawn(move || run_performance_job(&job, &commit))
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+        let mut jobs_run = 0usize;
+        for res in results {
+            let (job, data) = res?;
+            // Fig. 5 stamps date+sha; we add the resource label so two
+            // matrix cells of one commit never collide in one dir.
+            let fname = format!(
+                "talp_{}_{}_{}.json",
+                data.resources().label(),
+                timefmt::to_filename_stamp(commit.timestamp),
+                commit.short()
+            );
+            data.write_file(
+                &talp_dir.join(job.talp_subdir()).join(fname),
+            )?;
+            jobs_run += 1;
+        }
+
+        // ---- talp metadata ----
+        gitmeta::stamp_tree(&talp_dir, commit)?;
+
+        // ---- accumulate: download previous pipeline's history ----
+        let mut history_files = 0;
+        if let Some(zip) = self.store.download_previous(id, "talp") {
+            let scratch = work.join("talp_history");
+            history_files = ArtifactStore::extract(&zip, &scratch)
+                .context("extracting history artifact")?;
+            // `cp -r talp_history/* talp` — fresh files win on collision
+            // (same commit re-run), history fills the rest.
+            copy_missing(&scratch, &talp_dir)?;
+        }
+
+        // ---- talp ci-report ----
+        let public = work.join("public/talp");
+        std::fs::create_dir_all(&public)?;
+        let report = pages::generate(&talp_dir, &public, report_opts)?;
+
+        // ---- artifacts + pages publish ----
+        let talp_artifact_bytes = self.store.upload(id, "talp", &talp_dir)?;
+        self.store.upload(id, "public", &work.join("public"))?;
+        // Publish: wipe + copy (GitLab pages semantics).
+        let _ = std::fs::remove_dir_all(&self.pages_dir);
+        crate::util::fs::copy_tree(&work.join("public"), &self.pages_dir)?;
+
+        Ok(PipelineResult {
+            pipeline_id: id,
+            commit_short: commit.short().to_string(),
+            jobs_run,
+            history_files,
+            report,
+            talp_artifact_bytes,
+            wall_time_s: t0.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+fn run_performance_job(
+    job: &PerformanceJob,
+    commit: &Commit,
+) -> Result<(PerformanceJob, RunData)> {
+    let machine = MachineSpec::by_name(&job.machine_tag)
+        .with_context(|| format!("unknown machine '{}'", job.machine_tag))?;
+    let mut app = Genex::salpha(job.resolution, commit.version);
+    app.timesteps = 6;
+    // Seed varies by commit + job so runs differ realistically but
+    // deterministically.
+    let seed = fnv(&format!(
+        "{}:{}:{}",
+        commit.sha,
+        job.machine_tag,
+        job.resources.label()
+    ));
+    let (data, _) = run_with_talp(
+        &app,
+        &machine,
+        &job.resources,
+        seed,
+        commit.timestamp + 3600, // executed an hour after the commit
+    );
+    Ok((job.clone(), data))
+}
+
+/// Copy files from `src` into `dst` unless the destination exists.
+fn copy_missing(src: &Path, dst: &Path) -> Result<u64> {
+    let mut copied = 0;
+    for f in crate::util::fs::files_with_ext(src, "json") {
+        let rel = f.strip_prefix(src).unwrap();
+        let to = dst.join(rel);
+        if to.exists() {
+            continue;
+        }
+        if let Some(parent) = to.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::copy(&f, &to)?;
+        copied += 1;
+    }
+    Ok(copied)
+}
+
+fn fnv(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ci::pipeline::MatrixSpec;
+    use crate::ci::repo::Repo;
+    use crate::util::fs::TempDir;
+
+    fn small_jobs() -> Vec<PerformanceJob> {
+        // Miniature matrix: 1 machine, 2 configs, resolution 1.
+        let spec = MatrixSpec {
+            case: "salpha".into(),
+            resolutions: vec![1],
+            configurations: vec![
+                ("1Nx2MPI".into(), 2, 8),
+                ("2Nx4MPI".into(), 4, 8),
+            ],
+            machine_tags: vec!["mn5".into()],
+        };
+        spec.expand()
+    }
+
+    #[test]
+    fn pipeline_cycle_accumulates_history() {
+        let td = TempDir::new("ci").unwrap();
+        let mut engine = CiEngine::new(td.path()).unwrap();
+        let repo = Repo::genex_history(3, 2, 1, 1_700_000_000);
+        let jobs = small_jobs();
+        let opts = ReportOptions {
+            regions: vec!["initialize".into(), "timestep".into()],
+            region_for_badge: Some("timestep".into()),
+        };
+
+        let r0 = engine
+            .run_pipeline(&repo.commits[0], &jobs, &opts)
+            .unwrap();
+        assert_eq!(r0.jobs_run, 2);
+        assert_eq!(r0.history_files, 0);
+        assert_eq!(r0.report.experiments, 1); // salpha/resolution_1/mn5
+
+        let r1 = engine
+            .run_pipeline(&repo.commits[1], &jobs, &opts)
+            .unwrap();
+        assert!(r1.history_files >= 2, "{}", r1.history_files);
+
+        let r2 = engine
+            .run_pipeline(&repo.commits[2], &jobs, &opts)
+            .unwrap();
+        // Pipeline 2 carries runs of commits 0 and 1.
+        assert!(r2.history_files >= 4, "{}", r2.history_files);
+
+        // Pages were published with plots (>= 2 history points).
+        let page_files: Vec<_> =
+            crate::util::fs::files_with_ext(engine.pages_dir(), "html");
+        assert!(!page_files.is_empty());
+        let exp_page = page_files
+            .iter()
+            .find(|p| !p.ends_with("index.html"))
+            .unwrap();
+        let html = std::fs::read_to_string(exp_page).unwrap();
+        assert!(html.contains("Time evolution"));
+        assert!(html.contains("Scaling efficiency"));
+        // Artifacts grew over pipelines.
+        assert!(engine.artifact_bytes() > 0);
+    }
+
+    #[test]
+    fn fresh_files_not_overwritten_by_history() {
+        let td = TempDir::new("ci2").unwrap();
+        let src = td.path().join("hist");
+        let dst = td.path().join("cur");
+        std::fs::create_dir_all(src.join("a")).unwrap();
+        std::fs::create_dir_all(dst.join("a")).unwrap();
+        std::fs::write(src.join("a/x.json"), b"old").unwrap();
+        std::fs::write(dst.join("a/x.json"), b"new").unwrap();
+        std::fs::write(src.join("a/y.json"), b"hist-only").unwrap();
+        let n = copy_missing(&src, &dst).unwrap();
+        assert_eq!(n, 1);
+        assert_eq!(
+            std::fs::read_to_string(dst.join("a/x.json")).unwrap(),
+            "new"
+        );
+        assert_eq!(
+            std::fs::read_to_string(dst.join("a/y.json")).unwrap(),
+            "hist-only"
+        );
+    }
+}

@@ -1,0 +1,111 @@
+//! Minimal CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key v1 v2 ...` (multi-value
+//! until the next `--`), and positional arguments.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: HashMap<String, Vec<String>>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Args {
+        let mut args = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                let mut values = Vec::new();
+                while i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    values.push(argv[i + 1].clone());
+                    i += 1;
+                }
+                args.options
+                    .entry(key.to_string())
+                    .or_default()
+                    .extend(values);
+            } else {
+                args.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        args
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.options.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options
+            .get(key)
+            .and_then(|v| v.first())
+            .map(String::as_str)
+    }
+
+    pub fn get_all(&self, key: &str) -> Vec<&str> {
+        self.options
+            .get(key)
+            .map(|v| v.iter().map(String::as_str).collect())
+            .unwrap_or_default()
+    }
+
+    pub fn require(&self, key: &str) -> Result<&str> {
+        match self.get(key) {
+            Some(v) => Ok(v),
+            None => bail!("missing required option --{key}"),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key}: '{v}' is not a number")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(
+            &s.split_whitespace().map(String::from).collect::<Vec<_>>(),
+        )
+    }
+
+    #[test]
+    fn flags_options_positionals() {
+        let a = parse("ci-report --input ./talp --output out --verbose");
+        assert_eq!(a.positional, ["ci-report"]);
+        assert_eq!(a.get("input"), Some("./talp"));
+        assert_eq!(a.get("output"), Some("out"));
+        assert!(a.has("verbose"));
+        assert!(!a.has("nope"));
+    }
+
+    #[test]
+    fn multi_values() {
+        let a = parse("x --regions initialize timestep --badge t");
+        assert_eq!(a.get_all("regions"), ["initialize", "timestep"]);
+        assert_eq!(a.get("badge"), Some("t"));
+    }
+
+    #[test]
+    fn require_and_numbers() {
+        let a = parse("x --n 12");
+        assert_eq!(a.get_u64("n", 0).unwrap(), 12);
+        assert_eq!(a.get_u64("m", 7).unwrap(), 7);
+        assert!(a.require("absent").is_err());
+        let b = parse("x --n twelve");
+        assert!(b.get_u64("n", 0).is_err());
+    }
+}

@@ -1,0 +1,559 @@
+//! The `talp-pages` command-line interface.
+//!
+//! Subcommands mirror the paper's tooling:
+//! * `ci-report`  — Fig. 2 folder -> static HTML report (+ badges).
+//! * `metadata`   — stamp git metadata into fresh TALP JSONs (Fig. 6).
+//! * `run`        — run a workload under TALP on the simulator, emitting
+//!   a TALP JSON (the "performance job" of Fig. 5).
+//! * `compare`    — run the four tool chains on TeaLeaf and print the
+//!   Table 1/2-style comparison.
+//! * `ci-sim`     — run the full in-process CI demo (Fig. 4 / Fig. 7).
+//! * `calibrate`  — validate the AOT artifacts against the native
+//!   reference via PJRT.
+//! * `badge`      — render one SVG badge.
+
+pub mod args;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::apps::{self, Workload};
+use crate::ci;
+use crate::pages::{self, ReportOptions};
+use crate::pop;
+use crate::sim::{MachineSpec, ResourceConfig};
+use crate::tools;
+use crate::util::timefmt;
+
+use args::Args;
+
+pub const USAGE: &str = "\
+talp-pages — continuous performance monitoring (TALP-Pages reproduction)
+
+USAGE:
+  talp-pages ci-report --input <dir> --output <dir>
+             [--regions <r>...] [--region-for-badge <r>]
+  talp-pages metadata --input <dir> --commit <sha> --branch <name>
+             --timestamp <iso8601> [--message <m>]
+  talp-pages run --app <tealeaf|genex|mpi-stencil> --machine <mn5|raven>
+             --config <RxT> [--grid <n>] [--seed <n>] --output <file>
+  talp-pages compare [--grid <n>] [--configs <RxT>...] [--region <r>]
+  talp-pages ci-sim --output <dir> [--commits <n>] [--fix-at <n>]
+  talp-pages calibrate
+  talp-pages badge --label <text> --value <0..1> --output <file>
+  talp-pages detect --input <dir> [--threshold <0..1>]
+  talp-pages model --input <dir> [--regions <r>...]
+  talp-pages summary --input <file.json> [--region <r>]
+  talp-pages init-ci --flavor <gitlab|github> --output <file>
+             [--regions <r>...] [--region-for-badge <r>]
+";
+
+pub fn main_with_args(argv: &[String]) -> Result<i32> {
+    let args = Args::parse(argv);
+    let Some(cmd) = args.positional.first().map(String::as_str) else {
+        println!("{USAGE}");
+        return Ok(2);
+    };
+    match cmd {
+        "ci-report" => ci_report(&args),
+        "metadata" => metadata(&args),
+        "run" => run_app(&args),
+        "compare" => compare(&args),
+        "ci-sim" => ci_sim(&args),
+        "calibrate" => calibrate(),
+        "badge" => badge(&args),
+        "detect" => detect_cmd(&args),
+        "model" => model_cmd(&args),
+        "summary" => summary_cmd(&args),
+        "init-ci" => init_ci(&args),
+        "help" | "--help" => {
+            println!("{USAGE}");
+            Ok(0)
+        }
+        other => bail!("unknown subcommand '{other}'\n{USAGE}"),
+    }
+}
+
+fn ci_report(args: &Args) -> Result<i32> {
+    let input = PathBuf::from(args.require("input")?);
+    let output = PathBuf::from(args.require("output")?);
+    let opts = ReportOptions {
+        regions: args
+            .get_all("regions")
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
+        region_for_badge: args.get("region-for-badge").map(str::to_string),
+    };
+    let summary = pages::generate(&input, &output, &opts)?;
+    for w in &summary.warnings {
+        eprintln!("warning: {w}");
+    }
+    println!(
+        "report: {} experiment(s), {} page(s), {} badge(s) -> {}",
+        summary.experiments,
+        summary.pages_written,
+        summary.badges_written,
+        output.display()
+    );
+    Ok(0)
+}
+
+fn metadata(args: &Args) -> Result<i32> {
+    let input = PathBuf::from(args.require("input")?);
+    let commit = ci::Commit {
+        sha: args.require("commit")?.to_string(),
+        branch: args
+            .get("branch")
+            .unwrap_or("main")
+            .to_string(),
+        timestamp: args
+            .get("timestamp")
+            .and_then(timefmt::from_iso8601)
+            .unwrap_or_else(timefmt::now_unix),
+        message: args.get("message").unwrap_or("").to_string(),
+        version: crate::apps::CodeVersion::fixed(),
+    };
+    let n = ci::gitmeta::stamp_tree(&input, &commit)?;
+    println!("stamped {n} file(s) under {}", input.display());
+    Ok(0)
+}
+
+fn parse_machine(args: &Args) -> Result<MachineSpec> {
+    let name = args.get("machine").unwrap_or("mn5");
+    MachineSpec::by_name(name)
+        .with_context(|| format!("unknown machine '{name}' (mn5|raven)"))
+}
+
+fn parse_config(args: &Args) -> Result<ResourceConfig> {
+    let label = args.get("config").unwrap_or("2x8");
+    ResourceConfig::parse_label(label)
+        .with_context(|| format!("bad --config '{label}' (want e.g. 2x56)"))
+}
+
+fn build_app(args: &Args) -> Result<Box<dyn Workload>> {
+    let grid = args.get_u64("grid", 800)?;
+    Ok(match args.get("app").unwrap_or("tealeaf") {
+        "tealeaf" => {
+            let mut t = apps::TeaLeaf::with_grid(grid, grid);
+            t.timesteps = args.get_u64("timesteps", 2)? as u32;
+            t.cg_iters = args.get_u64("iters", 20)? as u32;
+            Box::new(t)
+        }
+        "genex" => {
+            let mut g = apps::Genex::salpha(
+                args.get_u64("resolution", 1)? as u32,
+                if args.has("buggy") {
+                    apps::CodeVersion::buggy()
+                } else {
+                    apps::CodeVersion::fixed()
+                },
+            );
+            g.timesteps = args.get_u64("timesteps", 6)? as u32;
+            Box::new(g)
+        }
+        "mpi-stencil" => Box::new(apps::MpiStencil::fig3()),
+        other => bail!("unknown app '{other}'"),
+    })
+}
+
+fn run_app(args: &Args) -> Result<i32> {
+    let machine = parse_machine(args)?;
+    let config = parse_config(args)?;
+    let app = build_app(args)?;
+    let seed = args.get_u64("seed", 0xC0FFEE)?;
+    let (data, summary) = apps::run_with_talp(
+        app.as_ref(),
+        &machine,
+        &config,
+        seed,
+        timefmt::now_unix(),
+    );
+    let out = PathBuf::from(args.require("output")?);
+    data.write_file(&out)?;
+    println!(
+        "ran {} on {} {}: elapsed {:.3}s (sim), {} events -> {}",
+        app.name(),
+        machine.name,
+        config.label(),
+        summary.elapsed_s,
+        summary.total_events,
+        out.display()
+    );
+    Ok(0)
+}
+
+fn compare(args: &Args) -> Result<i32> {
+    let grid = args.get_u64("grid", 1200)?;
+    let region = args.get("region").unwrap_or("Global");
+    let configs: Vec<ResourceConfig> = {
+        let labels = args.get_all("configs");
+        if labels.is_empty() {
+            vec![ResourceConfig::new(2, 14), ResourceConfig::new(4, 14)]
+        } else {
+            labels
+                .iter()
+                .map(|l| {
+                    ResourceConfig::parse_label(l)
+                        .with_context(|| format!("bad config '{l}'"))
+                })
+                .collect::<Result<Vec<_>>>()?
+        }
+    };
+    let mut app = apps::TeaLeaf::with_grid(grid, grid);
+    app.timesteps = args.get_u64("timesteps", 2)? as u32;
+    app.cg_iters = args.get_u64("iters", 12)? as u32;
+    let machine = parse_machine(args)?;
+    let work = crate::util::fs::TempDir::new("compare")?;
+
+    let mut t1 = crate::util::bench::Table::new(
+        "Runtime overhead (Table 1 shape)",
+        &["tool", "config", "clean [s]", "instrumented [s]", "overhead"],
+    );
+    let mut t2 = crate::util::bench::Table::new(
+        "Post-processing requirements (Table 2 shape)",
+        &["tool", "memory", "storage", "time"],
+    );
+    for kind in tools::ToolKind::all() {
+        let mut runs = Vec::new();
+        for cfg in &configs {
+            let dir = work.path().join(kind.short()).join(cfg.label());
+            let run = tools::instrument(
+                kind, &app, &machine, cfg, 42, timefmt::now_unix(), &dir,
+            )?;
+            t1.row(&[
+                kind.name().to_string(),
+                cfg.label(),
+                format!("{:.3}", run.clean_elapsed_s),
+                format!("{:.3}", run.elapsed_s),
+                format!("{:.1}%", run.overhead_fraction() * 100.0),
+            ]);
+            runs.push(run);
+        }
+        let refs: Vec<&tools::InstrumentedRun> = runs.iter().collect();
+        let (table, usage) = tools::postprocess(kind, &refs, region)?;
+        t2.row(&[
+            kind.name().to_string(),
+            crate::util::stats::fmt_bytes(usage.peak_memory_bytes),
+            crate::util::stats::fmt_bytes(usage.storage_bytes),
+            crate::util::stats::fmt_duration(usage.wall_time_s),
+        ]);
+        if let Some(table) = table {
+            println!("\n--- {} ---", kind.name());
+            print!("{}", table.render_text());
+        }
+    }
+    println!();
+    t1.print();
+    println!();
+    t2.print();
+    Ok(0)
+}
+
+fn ci_sim(args: &Args) -> Result<i32> {
+    let out = PathBuf::from(args.require("output")?);
+    let n = args.get_u64("commits", 8)? as usize;
+    let fix_at = args.get_u64("fix-at", n as u64 / 2)? as usize;
+    let repo = ci::Repo::genex_history(n, fix_at, 7, 1_700_000_000);
+    let jobs = ci::MatrixSpec {
+        case: "salpha".into(),
+        resolutions: vec![args.get_u64("resolution", 1)? as u32],
+        configurations: vec![
+            ("1Nx2MPI".into(), 2, 8),
+            ("2Nx4MPI".into(), 4, 8),
+        ],
+        machine_tags: vec!["mn5".into()],
+    }
+    .expand();
+    let opts = ReportOptions {
+        regions: vec!["initialize".into(), "timestep".into()],
+        region_for_badge: Some("timestep".into()),
+    };
+    let mut engine = ci::CiEngine::new(&out)?;
+    for commit in &repo.commits {
+        let r = engine.run_pipeline(commit, &jobs, &opts)?;
+        println!(
+            "pipeline {:>3} {} \"{}\": {} jobs, {} history files, report in {:.2}s",
+            r.pipeline_id,
+            r.commit_short,
+            truncate(&commit.message, 48),
+            r.jobs_run,
+            r.history_files,
+            r.wall_time_s
+        );
+    }
+    println!(
+        "pages: {} | artifacts: {}",
+        engine.pages_dir().display(),
+        crate::util::stats::fmt_bytes(engine.artifact_bytes())
+    );
+    Ok(0)
+}
+
+fn calibrate() -> Result<i32> {
+    let Some(reg) = crate::runtime::Registry::open_default() else {
+        bail!("no artifacts found — run `make artifacts` first");
+    };
+    let cal = crate::runtime::calibrate::run(&reg)?;
+    println!("{}", cal.to_json().to_string_pretty());
+    Ok(0)
+}
+
+fn badge(args: &Args) -> Result<i32> {
+    let label = args.require("label")?;
+    let value: f64 = args
+        .require("value")?
+        .parse()
+        .context("--value must be a number")?;
+    let out = PathBuf::from(args.require("output")?);
+    let svg = pages::badge::render(
+        label,
+        &format!("{value:.2}"),
+        pages::badge::efficiency_color(value),
+    );
+    if let Some(p) = out.parent() {
+        std::fs::create_dir_all(p)?;
+    }
+    std::fs::write(&out, svg)?;
+    println!("wrote {}", out.display());
+    Ok(0)
+}
+
+/// `talp-pages detect`: scan a Fig. 2 folder and print automated
+/// regression/improvement findings for every experiment history.
+fn detect_cmd(args: &Args) -> Result<i32> {
+    let input = PathBuf::from(args.require("input")?);
+    let threshold: f64 = args
+        .get("threshold")
+        .map(|v| v.parse())
+        .transpose()
+        .context("--threshold must be a number")?
+        .unwrap_or(0.15);
+    let opts = pages::detect::DetectOptions { threshold, ..Default::default() };
+    let scan = pages::scan(&input)?;
+    let mut total = 0;
+    for exp in &scan.experiments {
+        for cfg in exp.configs() {
+            let history = exp.history_for_config(&cfg);
+            if history.len() < 2 {
+                continue;
+            }
+            for f in pages::detect::detect(&cfg, &history, &opts) {
+                println!("[{}] {}", exp.id, f.describe());
+                total += 1;
+            }
+        }
+    }
+    println!("{total} finding(s) across {} experiment(s)", scan.experiments.len());
+    Ok(0)
+}
+
+/// `talp-pages model`: Extra-P-style scaling models per experiment.
+fn model_cmd(args: &Args) -> Result<i32> {
+    let input = PathBuf::from(args.require("input")?);
+    let regions: Vec<String> = args
+        .get_all("regions")
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    let scan = pages::scan(&input)?;
+    for exp in &scan.experiments {
+        let latest = exp.latest_per_config();
+        if latest.len() < 2 {
+            continue;
+        }
+        println!("# {}", exp.id);
+        for (region, m) in pop::extrap::fit_experiment(&latest, &regions) {
+            println!(
+                "  {region:<24} elapsed(p) ~ {}  (SMAPE {:.1}%){}",
+                m.formula(),
+                m.smape * 100.0,
+                if m.grows() { "  <-- grows with resources!" } else { "" }
+            );
+        }
+    }
+    Ok(0)
+}
+
+/// `talp-pages summary`: human-readable POP summary of one TALP JSON
+/// (what `dlb --talp-summary` prints on a real system).
+fn summary_cmd(args: &Args) -> Result<i32> {
+    let input = PathBuf::from(args.require("input")?);
+    let data = crate::talp::RunData::read_file(&input)?;
+    println!(
+        "{} on {} — {} ({} nodes), {}",
+        data.app,
+        data.machine,
+        data.resources().label(),
+        data.nodes,
+        timefmt::to_iso8601(data.timestamp)
+    );
+    if let Some(g) = &data.git {
+        println!(
+            "commit {} ({}) @ {}",
+            &g.commit[..g.commit.len().min(8)],
+            g.branch,
+            timefmt::to_iso8601(g.commit_timestamp)
+        );
+    }
+    let wanted = args.get("region");
+    for reg in &data.regions {
+        if let Some(w) = wanted {
+            if reg.name != w {
+                continue;
+            }
+        }
+        let m = pop::compute(reg, data.threads);
+        println!("\nregion '{}' ({} visits)", reg.name, reg.visits);
+        println!("  elapsed              {:>10.4} s", m.elapsed_s);
+        println!("  parallel efficiency  {:>10.2}", m.parallel_efficiency);
+        println!(
+            "    MPI PE {:.2} (LB {:.2} x Comm {:.2})  OpenMP PE {:.2} \
+             (LB {:.2} x Sched {:.2} x Serial {:.2})",
+            m.mpi_parallel_efficiency,
+            m.mpi_load_balance,
+            m.mpi_communication_efficiency,
+            m.omp_parallel_efficiency,
+            m.omp_load_balance,
+            m.omp_scheduling_efficiency,
+            m.omp_serialization_efficiency
+        );
+        println!(
+            "  useful IPC {:.2} | frequency {:.2} GHz | {} instructions",
+            m.useful_ipc, m.frequency_ghz, m.total_useful_instructions
+        );
+    }
+    Ok(0)
+}
+
+/// `talp-pages init-ci`: write a ready-to-commit pipeline file.
+fn init_ci(args: &Args) -> Result<i32> {
+    let out = PathBuf::from(args.require("output")?);
+    let spec = ci::MatrixSpec::performance_cpu_fast();
+    let regions: Vec<&str> = {
+        let r = args.get_all("regions");
+        if r.is_empty() {
+            vec!["initialize", "timestep"]
+        } else {
+            r
+        }
+    };
+    let badge = args.get("region-for-badge").unwrap_or("timestep");
+    let text = match args.get("flavor").unwrap_or("gitlab") {
+        "gitlab" => ci::templates::gitlab_ci_yaml(&spec, &regions, badge),
+        "github" => ci::templates::github_actions_yaml(&spec, &regions, badge),
+        other => bail!("unknown --flavor '{other}' (gitlab|github)"),
+    };
+    if let Some(p) = out.parent() {
+        std::fs::create_dir_all(p)?;
+    }
+    std::fs::write(&out, text)?;
+    println!("wrote {}", out.display());
+    Ok(0)
+}
+
+fn truncate(s: &str, n: usize) -> String {
+    if s.len() <= n {
+        s.to_string()
+    } else {
+        format!("{}…", &s[..n])
+    }
+}
+
+/// Helper shared with tests: quick scaling table printout for a folder.
+pub fn print_folder_table(input: &Path, region: &str) -> Result<String> {
+    let scan = pages::scan(input)?;
+    let mut out = String::new();
+    for exp in &scan.experiments {
+        if let Some(t) = pop::build(region, &exp.latest_per_config()) {
+            out.push_str(&format!("# {}\n{}", exp.id, t.render_text()));
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::fs::TempDir;
+
+    fn run_cli(line: &str) -> Result<i32> {
+        main_with_args(
+            &line.split_whitespace().map(String::from).collect::<Vec<_>>(),
+        )
+    }
+
+    #[test]
+    fn usage_on_empty_and_unknown() {
+        assert_eq!(main_with_args(&[]).unwrap(), 2);
+        assert!(run_cli("frobnicate").is_err());
+        assert_eq!(run_cli("help").unwrap(), 0);
+    }
+
+    #[test]
+    fn run_then_report_cycle() {
+        let td = TempDir::new("cli").unwrap();
+        let json = td.path().join("talp/exp/talp_2x4.json");
+        let out = td.path().join("public");
+        assert_eq!(
+            run_cli(&format!(
+                "run --app genex --machine mn5 --config 2x4 --timesteps 2 \
+                 --output {}",
+                json.display()
+            ))
+            .unwrap(),
+            0
+        );
+        assert!(json.exists());
+        assert_eq!(
+            run_cli(&format!(
+                "metadata --input {} --commit abcdef1234567890 --branch main \
+                 --timestamp 2024-07-15T12:00:00Z",
+                td.path().join("talp").display()
+            ))
+            .unwrap(),
+            0
+        );
+        assert_eq!(
+            run_cli(&format!(
+                "ci-report --input {} --output {} --regions initialize \
+                 timestep --region-for-badge timestep",
+                td.path().join("talp").display(),
+                out.display()
+            ))
+            .unwrap(),
+            0
+        );
+        assert!(out.join("index.html").exists());
+        let table = print_folder_table(&td.path().join("talp"), "Global")
+            .unwrap();
+        assert!(table.contains("Parallel efficiency"));
+    }
+
+    #[test]
+    fn badge_subcommand() {
+        let td = TempDir::new("cli-badge").unwrap();
+        let f = td.path().join("b.svg");
+        assert_eq!(
+            run_cli(&format!(
+                "badge --label PE --value 0.87 --output {}",
+                f.display()
+            ))
+            .unwrap(),
+            0
+        );
+        assert!(std::fs::read_to_string(&f).unwrap().contains("0.87"));
+    }
+
+    #[test]
+    fn bad_inputs_error_cleanly() {
+        assert!(run_cli("run --app nope --output /tmp/x.json").is_err());
+        assert!(run_cli("run --app tealeaf --config 5y5 --output /tmp/x.json")
+            .is_err());
+        assert!(run_cli("badge --label x --value abc --output /tmp/b.svg")
+            .is_err());
+        assert!(run_cli("ci-report --input /nonexistent --output /tmp/o")
+            .is_err());
+    }
+}

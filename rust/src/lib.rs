@@ -1,0 +1,36 @@
+//! # talp-pages-rs
+//!
+//! A Rust + JAX + Pallas reproduction of *"TALP-Pages: An easy-to-
+//! integrate continuous performance monitoring framework"* (Seitz,
+//! Trilaksono, Garcia-Gasulla — Parallel Tools Workshop 2024).
+//!
+//! The crate contains (DESIGN.md has the full inventory):
+//!
+//! * [`sim`] — the HPC substrate: deterministic phase-level simulator of
+//!   hybrid MPI+OpenMP executions (machines, DVFS, caches, collectives).
+//! * [`talp`] — the TALP monitor: on-the-fly POP-factor accumulation and
+//!   the DLB-style JSON output.
+//! * [`pop`] — fundamental performance factors: the efficiency
+//!   hierarchy, weak/strong scaling detection, scaling-efficiency tables.
+//! * [`tools`] — the baseline toolchains the paper compares against
+//!   (Extrae-like tracer, Score-P-like profiler+tracer, CPT) and their
+//!   post-processing pipelines (Dimemas-like replay etc.).
+//! * [`pages`] — TALP-Pages proper: folder scanner, time-series, HTML
+//!   report, SVG badges.
+//! * [`ci`] — an in-process GitLab-like CI engine (pipelines, artifact
+//!   zips, pages hosting) used to reproduce the paper's CI workflow.
+//! * [`apps`] — workloads: the TeaLeaf CG mini-app (backed by the real
+//!   AOT-compiled Pallas kernel through [`runtime`]) and a GENE-X-like
+//!   app with the injectable scaling bug of Fig. 7.
+//! * [`runtime`] — PJRT loader/executor for `artifacts/*.hlo.txt`.
+
+pub mod apps;
+pub mod cli;
+pub mod ci;
+pub mod pages;
+pub mod pop;
+pub mod runtime;
+pub mod sim;
+pub mod talp;
+pub mod tools;
+pub mod util;

@@ -1,0 +1,19 @@
+//! `talp-pages` binary — see cli::USAGE.
+
+use talp_pages::cli;
+
+fn main() {
+    // Behave like a unix CLI under `| head`: die silently on SIGPIPE
+    // instead of panicking in println!.
+    unsafe {
+        libc::signal(libc::SIGPIPE, libc::SIG_DFL);
+    }
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match cli::main_with_args(&argv) {
+        Ok(code) => std::process::exit(code),
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

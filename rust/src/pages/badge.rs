@@ -1,0 +1,90 @@
+//! SVG badges (paper: "a SVG badge displaying the parallel efficiency
+//! for each resource configuration") — shields.io-style, self-contained.
+
+/// Color scale for efficiency badges (POP convention: green is fine,
+/// yellow needs a look, red is a problem).
+pub fn efficiency_color(value: f64) -> &'static str {
+    if value >= 0.8 {
+        "#4c1" // bright green
+    } else if value >= 0.6 {
+        "#dfb317" // yellow
+    } else {
+        "#e05d44" // red
+    }
+}
+
+/// Render a two-segment badge: `label | value`.
+pub fn render(label: &str, value_text: &str, color: &str) -> String {
+    // Approximate text width: 6.5 px per char + padding (the DejaVu
+    // metrics shields.io uses; fine for monospace-ish labels).
+    let lw = (label.len() as f64 * 6.5 + 12.0).ceil();
+    let vw = (value_text.len() as f64 * 6.5 + 12.0).ceil();
+    let total = lw + vw;
+    format!(
+        r##"<svg xmlns="http://www.w3.org/2000/svg" width="{total}" height="20" role="img" aria-label="{label}: {value_text}">
+  <linearGradient id="s" x2="0" y2="100%">
+    <stop offset="0" stop-color="#bbb" stop-opacity=".1"/>
+    <stop offset="1" stop-opacity=".1"/>
+  </linearGradient>
+  <clipPath id="r"><rect width="{total}" height="20" rx="3" fill="#fff"/></clipPath>
+  <g clip-path="url(#r)">
+    <rect width="{lw}" height="20" fill="#555"/>
+    <rect x="{lw}" width="{vw}" height="20" fill="{color}"/>
+    <rect width="{total}" height="20" fill="url(#s)"/>
+  </g>
+  <g fill="#fff" text-anchor="middle" font-family="Verdana,Geneva,DejaVu Sans,sans-serif" font-size="11">
+    <text x="{lx}" y="14">{label}</text>
+    <text x="{vx}" y="14">{value_text}</text>
+  </g>
+</svg>
+"##,
+        lx = lw / 2.0,
+        vx = lw + vw / 2.0,
+    )
+}
+
+/// The parallel-efficiency badge for one resource configuration.
+pub fn parallel_efficiency_badge(
+    region: &str,
+    config: &str,
+    efficiency: f64,
+) -> String {
+    render(
+        &format!("PE {region} {config}"),
+        &format!("{efficiency:.2}"),
+        efficiency_color(efficiency),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn color_bands() {
+        assert_eq!(efficiency_color(0.95), "#4c1");
+        assert_eq!(efficiency_color(0.7), "#dfb317");
+        assert_eq!(efficiency_color(0.3), "#e05d44");
+    }
+
+    #[test]
+    fn badge_is_valid_svgish() {
+        let svg = parallel_efficiency_badge("timestep", "8x56", 0.83);
+        assert!(svg.starts_with("<svg"));
+        assert!(svg.contains("0.83"));
+        assert!(svg.contains("PE timestep 8x56"));
+        assert!(svg.contains("#4c1"));
+        assert!(svg.trim_end().ends_with("</svg>"));
+    }
+
+    #[test]
+    fn width_scales_with_text() {
+        let short = render("a", "1", "#4c1");
+        let long = render("a-very-long-label", "1", "#4c1");
+        let w = |svg: &str| -> f64 {
+            let i = svg.find("width=\"").unwrap() + 7;
+            svg[i..].split('"').next().unwrap().parse().unwrap()
+        };
+        assert!(w(&long) > w(&short));
+    }
+}

@@ -1,0 +1,308 @@
+//! Automated regression / improvement detection over a configuration's
+//! history — the paper's promise ("detect performance degradation early
+//! in the development process ... detect and explain a performance
+//! improvement") as an API instead of an eyeball.
+//!
+//! For every (region, consecutive-commit pair) the detector compares
+//! elapsed time against the noise floor of the preceding window, and
+//! when a change fires it ranks the POP factors by their relative
+//! movement to produce the *explanation* (Fig. 7: "OpenMP serialization
+//! efficiency is responsible").
+
+use crate::talp::RunData;
+
+use super::timeseries::{self, TimeSeries};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChangeKind {
+    Regression,
+    Improvement,
+}
+
+/// One detected change.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub region: String,
+    pub config: String,
+    /// Index into the history (the run where the change appears).
+    pub at_index: usize,
+    pub commit: Option<String>,
+    pub kind: ChangeKind,
+    /// elapsed(after) / elapsed(before).
+    pub factor: f64,
+    /// The POP factor that moved the most, with its before/after values
+    /// — empty when the change is unexplained (pure compute speed).
+    pub explanation: Option<(String, f64, f64)>,
+}
+
+impl Finding {
+    pub fn describe(&self) -> String {
+        let verb = match self.kind {
+            ChangeKind::Regression => "slowed down",
+            ChangeKind::Improvement => "sped up",
+        };
+        let expl = match &self.explanation {
+            Some((name, b, a)) => {
+                format!("; explained by {name}: {b:.2} -> {a:.2}")
+            }
+            None => "; counters moved with it (compute-rate change)".into(),
+        };
+        format!(
+            "region '{}' @ {} {} by x{:.2} at {}{}",
+            self.region,
+            self.config,
+            verb,
+            if self.factor >= 1.0 { self.factor } else { 1.0 / self.factor },
+            self.commit.as_deref().unwrap_or("(no commit)"),
+            expl
+        )
+    }
+}
+
+/// Detection options.
+#[derive(Debug, Clone)]
+pub struct DetectOptions {
+    /// Minimum relative change in elapsed time to fire (e.g. 0.15).
+    pub threshold: f64,
+    /// Multiples of the trailing noise (stddev/mean) the change must
+    /// also exceed — suppresses findings on noisy platforms.
+    pub noise_gate: f64,
+}
+
+impl Default for DetectOptions {
+    fn default() -> DetectOptions {
+        DetectOptions { threshold: 0.15, noise_gate: 4.0 }
+    }
+}
+
+/// Efficiency metrics eligible as explanations, with display names.
+const EXPLAIN_METRICS: &[(&str, &str)] = &[
+    ("parallel_efficiency", "Parallel efficiency"),
+    ("mpi_parallel_efficiency", "MPI Parallel efficiency"),
+    ("mpi_load_balance", "MPI Load balance"),
+    ("mpi_communication_efficiency", "MPI Communication efficiency"),
+    ("omp_load_balance", "OpenMP Load balance"),
+    ("omp_scheduling_efficiency", "OpenMP Scheduling efficiency"),
+    ("omp_serialization_efficiency", "OpenMP Serialization efficiency"),
+];
+
+/// Scan one configuration's history (oldest first) for changes.
+pub fn detect(
+    config: &str,
+    history: &[&RunData],
+    opts: &DetectOptions,
+) -> Vec<Finding> {
+    let ts = timeseries::build(config, history, &[]);
+    let mut findings = Vec::new();
+    for region in ts.regions() {
+        findings.extend(detect_region(&ts, &region, config, opts));
+    }
+    findings
+}
+
+fn detect_region(
+    ts: &TimeSeries,
+    region: &str,
+    config: &str,
+    opts: &DetectOptions,
+) -> Vec<Finding> {
+    let elapsed = ts.metric(region, "elapsed");
+    let mut out = Vec::new();
+    for i in 1..elapsed.len() {
+        let before = elapsed[i - 1].1;
+        let after = elapsed[i].1;
+        if before <= 0.0 {
+            continue;
+        }
+        let rel = (after - before) / before;
+        if rel.abs() < opts.threshold {
+            continue;
+        }
+        // Noise gate over the trailing window (up to 4 points).
+        let lo = i.saturating_sub(4);
+        let window: Vec<f64> =
+            elapsed[lo..i].iter().map(|(_, v)| *v).collect();
+        let mean = crate::util::stats::mean(&window);
+        let sd = {
+            let mut w = crate::util::stats::Welford::new();
+            for v in &window {
+                w.push(*v);
+            }
+            w.stddev()
+        };
+        if window.len() >= 2
+            && sd > 0.0
+            && (after - mean).abs() < opts.noise_gate * sd
+        {
+            continue; // within platform noise
+        }
+        let kind = if rel > 0.0 {
+            ChangeKind::Regression
+        } else {
+            ChangeKind::Improvement
+        };
+        // Counters flat?  Then some efficiency must explain it.
+        let ipc = ts.metric(region, "ipc");
+        let insn = ts.metric(region, "instructions");
+        let counters_flat = value_flat(&ipc, i) && value_flat(&insn, i);
+        let explanation = if counters_flat {
+            best_explanation(ts, region, i)
+        } else {
+            None
+        };
+        out.push(Finding {
+            region: region.to_string(),
+            config: config.to_string(),
+            at_index: i,
+            commit: ts.points[i].commit.clone(),
+            kind,
+            factor: after / before,
+            explanation,
+        });
+    }
+    out
+}
+
+fn value_flat(series: &[(i64, f64)], i: usize) -> bool {
+    if i == 0 || i >= series.len() {
+        return true;
+    }
+    let (b, a) = (series[i - 1].1, series[i].1);
+    if b.abs() < 1e-12 {
+        return a.abs() < 1e-12;
+    }
+    ((a - b) / b).abs() < 0.15
+}
+
+fn best_explanation(
+    ts: &TimeSeries,
+    region: &str,
+    i: usize,
+) -> Option<(String, f64, f64)> {
+    let mut best: Option<(String, f64, f64, f64)> = None;
+    for (id, label) in EXPLAIN_METRICS {
+        let series = ts.metric(region, id);
+        if i >= series.len() {
+            continue;
+        }
+        let (b, a) = (series[i - 1].1, series[i].1);
+        let delta = (a - b).abs();
+        if delta < 0.05 {
+            continue;
+        }
+        if best.as_ref().map(|(_, _, _, d)| delta > *d).unwrap_or(true) {
+            best = Some((label.to_string(), b, a, delta));
+        }
+    }
+    best.map(|(n, b, a, _)| (n, b, a))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::{run_with_talp, CodeVersion, Genex};
+    use crate::sim::{MachineSpec, ResourceConfig};
+    use crate::talp::GitMeta;
+
+    fn history(versions: &[CodeVersion]) -> Vec<RunData> {
+        let machine = MachineSpec::marenostrum5();
+        let res = ResourceConfig::new(2, 14);
+        versions
+            .iter()
+            .enumerate()
+            .map(|(i, v)| {
+                let mut app = Genex::salpha(2, *v);
+                app.timesteps = 2;
+                let (mut d, _) =
+                    run_with_talp(&app, &machine, &res, 50 + i as u64, 0);
+                d.git = Some(GitMeta {
+                    commit: format!("commit{i:02}"),
+                    branch: "main".into(),
+                    commit_timestamp: 1000 + i as i64,
+                    message: String::new(),
+                });
+                d
+            })
+            .collect()
+    }
+
+    #[test]
+    fn detects_and_explains_the_fig7_fix() {
+        let runs = history(&[
+            CodeVersion::buggy(),
+            CodeVersion::buggy(),
+            CodeVersion::buggy(),
+            CodeVersion::fixed(),
+            CodeVersion::fixed(),
+        ]);
+        let refs: Vec<&RunData> = runs.iter().collect();
+        let findings = detect("2x14", &refs, &DetectOptions::default());
+        let fix = findings
+            .iter()
+            .find(|f| {
+                f.region == "initialize"
+                    && f.kind == ChangeKind::Improvement
+            })
+            .expect("fix finding");
+        assert_eq!(fix.at_index, 3);
+        assert_eq!(fix.commit.as_deref(), Some("commit03"));
+        assert!(fix.factor < 0.7, "{}", fix.factor);
+        let (name, b, a) = fix.explanation.as_ref().expect("explained");
+        assert_eq!(name, "OpenMP Serialization efficiency");
+        assert!(*a > *b + 0.15);
+        assert!(fix.describe().contains("sped up"));
+        // timestep must NOT fire.
+        assert!(findings.iter().all(|f| f.region != "timestep"));
+    }
+
+    #[test]
+    fn detects_plain_regression_without_false_explanation() {
+        let runs = history(&[
+            CodeVersion::fixed(),
+            CodeVersion::fixed(),
+            CodeVersion {
+                serialization_bug: false,
+                compute_slowdown: 1.6,
+            },
+        ]);
+        let refs: Vec<&RunData> = runs.iter().collect();
+        let findings = detect("2x14", &refs, &DetectOptions::default());
+        let reg = findings
+            .iter()
+            .find(|f| {
+                f.region == "Global" && f.kind == ChangeKind::Regression
+            })
+            .expect("regression");
+        // A compute slowdown moves instructions/IPC, so it must not be
+        // "explained" by an efficiency factor.
+        assert!(reg.explanation.is_none(), "{:?}", reg.explanation);
+        assert!(reg.describe().contains("slowed down"));
+    }
+
+    #[test]
+    fn quiet_history_has_no_findings() {
+        let runs = history(&[
+            CodeVersion::fixed(),
+            CodeVersion::fixed(),
+            CodeVersion::fixed(),
+            CodeVersion::fixed(),
+        ]);
+        let refs: Vec<&RunData> = runs.iter().collect();
+        let findings = detect("2x14", &refs, &DetectOptions::default());
+        assert!(findings.is_empty(), "{findings:?}");
+    }
+
+    #[test]
+    fn threshold_suppresses_small_changes() {
+        let runs = history(&[
+            CodeVersion::fixed(),
+            CodeVersion {
+                serialization_bug: false,
+                compute_slowdown: 1.05, // 5% — under the 15% threshold
+            },
+        ]);
+        let refs: Vec<&RunData> = runs.iter().collect();
+        let findings = detect("2x14", &refs, &DetectOptions::default());
+        assert!(findings.is_empty(), "{findings:?}");
+    }
+}

@@ -1,0 +1,16 @@
+//! TALP-Pages proper: the paper's contribution.  Scans the Fig. 2
+//! folder structure, computes the POP factors, and renders the static
+//! HTML report (scaling-efficiency tables, time-evolution plots, SVG
+//! badges) that in-repository pages hosting serves.
+
+pub mod badge;
+pub mod detect;
+pub mod html;
+pub mod report;
+pub mod scanner;
+pub mod svgplot;
+pub mod table_html;
+pub mod timeseries;
+
+pub use report::{generate, ReportOptions, ReportSummary};
+pub use scanner::{scan, Experiment, ScanResult};

@@ -1,0 +1,400 @@
+//! The `talp ci-report` engine: scan a Fig. 2 folder, emit the full
+//! static site — index, one page per experiment (scaling-efficiency
+//! tables + time-evolution plots), and SVG badges.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::pop;
+use crate::util::timefmt;
+
+use super::badge;
+use super::detect::{self, DetectOptions};
+use super::html;
+use super::scanner::{self, Experiment};
+use super::svgplot::{self, esc, Series};
+use super::table_html;
+use super::timeseries;
+
+/// Report options (mirrors the paper's CLI flags).
+#[derive(Debug, Clone, Default)]
+pub struct ReportOptions {
+    /// Regions to build tables/plots for (empty = every region found).
+    pub regions: Vec<String>,
+    /// Region whose parallel efficiency feeds the badges (default the
+    /// implicit whole-execution region).
+    pub region_for_badge: Option<String>,
+}
+
+/// What was generated.
+#[derive(Debug)]
+pub struct ReportSummary {
+    pub experiments: usize,
+    pub pages_written: usize,
+    pub badges_written: usize,
+    pub warnings: Vec<String>,
+}
+
+/// Generate the full report from `input` into `out_dir`.
+pub fn generate(
+    input: &Path,
+    out_dir: &Path,
+    opts: &ReportOptions,
+) -> Result<ReportSummary> {
+    let scan = scanner::scan(input)?;
+    std::fs::create_dir_all(out_dir.join("badges"))
+        .with_context(|| format!("creating {}", out_dir.display()))?;
+
+    let mut pages = 0usize;
+    let mut badges = 0usize;
+    let mut index_items = String::new();
+
+    for exp in &scan.experiments {
+        let file = format!("{}.html", slug(&exp.id));
+        let (body, nbadges) =
+            experiment_page(exp, opts, out_dir).with_context(|| {
+                format!("rendering experiment '{}'", exp.id)
+            })?;
+        std::fs::write(
+            out_dir.join(&file),
+            html::page(&format!("TALP report — {}", exp.id), &body),
+        )?;
+        pages += 1;
+        badges += nbadges;
+        index_items.push_str(&format!(
+            "<li><a href=\"{file}\">{}</a> — {} configs, {} runs</li>\n",
+            esc(&exp.id),
+            exp.configs().len(),
+            exp.runs.len()
+        ));
+    }
+
+    let mut index_body = String::from("<h1>TALP-Pages performance report</h1>\n");
+    if !scan.warnings.is_empty() {
+        index_body.push_str("<div class=\"warn\"><b>Warnings:</b><ul>");
+        for w in &scan.warnings {
+            index_body.push_str(&format!("<li>{}</li>", esc(w)));
+        }
+        index_body.push_str("</ul></div>\n");
+    }
+    index_body.push_str(&format!(
+        "<p>{} experiment(s) found under <code>{}</code>.</p>\n<ul class=\"exp-list\">\n{index_items}</ul>\n",
+        scan.experiments.len(),
+        esc(&input.display().to_string()),
+    ));
+    std::fs::write(
+        out_dir.join("index.html"),
+        html::page("TALP-Pages report", &index_body),
+    )?;
+    pages += 1;
+
+    Ok(ReportSummary {
+        experiments: scan.experiments.len(),
+        pages_written: pages,
+        badges_written: badges,
+        warnings: scan.warnings,
+    })
+}
+
+fn slug(id: &str) -> String {
+    id.chars()
+        .map(|c| {
+            if c.is_ascii_alphanumeric() || c == '-' || c == '_' {
+                c
+            } else {
+                '_'
+            }
+        })
+        .collect()
+}
+
+/// Render one experiment's page body; also writes its badges.
+fn experiment_page(
+    exp: &Experiment,
+    opts: &ReportOptions,
+    out_dir: &Path,
+) -> Result<(String, usize)> {
+    let mut body = format!("<h1>{}</h1>\n", esc(&exp.id));
+    let latest = exp.latest_per_config();
+    let badge_region = opts
+        .region_for_badge
+        .clone()
+        .unwrap_or_else(|| "Global".to_string());
+
+    // ---- badges ----
+    let mut nbadges = 0usize;
+    body.push_str("<div class=\"badges\">\n");
+    for run in &latest {
+        let Some(reg) = run.region(&badge_region) else {
+            continue;
+        };
+        let m = pop::compute(reg, run.threads);
+        let cfg = run.resources().label();
+        let svg = badge::parallel_efficiency_badge(
+            &badge_region,
+            &cfg,
+            m.parallel_efficiency,
+        );
+        let name = format!("badges/{}__{}.svg", slug(&exp.id), cfg);
+        std::fs::write(out_dir.join(&name), &svg)?;
+        nbadges += 1;
+        body.push_str(&svg);
+    }
+    body.push_str("</div>\n");
+
+    // ---- scaling-efficiency tables ----
+    let all_regions = exp.regions();
+    let table_regions: Vec<String> = if opts.regions.is_empty() {
+        all_regions.clone()
+    } else {
+        all_regions
+            .iter()
+            .filter(|r| {
+                *r == "Global" || opts.regions.contains(r)
+            })
+            .cloned()
+            .collect()
+    };
+    for region in &table_regions {
+        if let Some(table) = pop::build(region, &latest) {
+            body.push_str(&format!(
+                "<h2>Scaling efficiency — region <code>{}</code></h2>\n",
+                esc(region)
+            ));
+            body.push_str(&table_html::render(&table));
+        }
+    }
+
+    // ---- automated findings (regressions / improvements) ----
+    let mut findings_html = String::new();
+    for cfg in exp.configs() {
+        let history = exp.history_for_config(&cfg);
+        if history.len() < 2 {
+            continue;
+        }
+        for f in detect::detect(&cfg, &history, &DetectOptions::default()) {
+            findings_html.push_str(&format!(
+                "<li class=\"{}\">{}</li>\n",
+                match f.kind {
+                    detect::ChangeKind::Regression => "regression",
+                    detect::ChangeKind::Improvement => "improvement",
+                },
+                esc(&f.describe())
+            ));
+        }
+    }
+    if !findings_html.is_empty() {
+        body.push_str(&format!(
+            "<h2>Detected changes</h2>\n<ul class=\"findings\">\n{findings_html}</ul>\n"
+        ));
+    }
+
+    // ---- Extra-P-style scaling models (>= 3 configurations) ----
+    if latest.len() >= 3 {
+        let models =
+            crate::pop::extrap::fit_experiment(&latest, &table_regions);
+        if !models.is_empty() {
+            body.push_str("<h2>Scaling models (Extra-P-style)</h2>\n<ul>\n");
+            for (region, m) in &models {
+                body.push_str(&format!(
+                    "<li><code>{}</code>: elapsed(p) ≈ {} (SMAPE {:.1}%){}</li>\n",
+                    esc(region),
+                    esc(&m.formula()),
+                    m.smape * 100.0,
+                    if m.grows() {
+                        " <b>⚠ grows with resources</b>"
+                    } else {
+                        ""
+                    }
+                ));
+            }
+            body.push_str("</ul>\n");
+        }
+    }
+
+    // ---- time-evolution plots per configuration ----
+    let plot_regions: Vec<String> = if opts.regions.is_empty() {
+        all_regions
+    } else {
+        // Selected regions are highlighted; Global is always kept so the
+        // whole-program trend stays visible (paper: "The selected
+        // regions are also highlighted in the time-series plots").
+        let mut v = vec!["Global".to_string()];
+        v.extend(opts.regions.iter().cloned());
+        v.dedup();
+        v
+    };
+    for cfg in exp.configs() {
+        let history = exp.history_for_config(&cfg);
+        if history.len() < 2 {
+            continue; // nothing to plot yet
+        }
+        let ts = timeseries::build(&cfg, &history, &plot_regions);
+        let regions = ts.regions();
+        body.push_str(&format!(
+            "<h2>Time evolution — {} ({} runs)</h2>\n",
+            esc(&cfg),
+            history.len()
+        ));
+        let toggle_info: Vec<(String, String, String)> = regions
+            .iter()
+            .enumerate()
+            .map(|(i, r)| {
+                (r.clone(), svgplot::css_class(r), svgplot::color(i))
+            })
+            .collect();
+        body.push_str(&html::toggles(&toggle_info));
+        for (metric, label) in timeseries::PLOT_METRICS {
+            let series: Vec<Series> = regions
+                .iter()
+                .enumerate()
+                .map(|(i, r)| Series {
+                    label: r.clone(),
+                    points: ts.metric(r, metric),
+                    color: svgplot::color(i),
+                })
+                .filter(|s| !s.points.is_empty())
+                .collect();
+            if series.is_empty() {
+                continue;
+            }
+            body.push_str(&svgplot::line_chart(label, &series, ""));
+        }
+        // Commit annotations under the plots.
+        let commits: Vec<String> = ts
+            .points
+            .iter()
+            .filter_map(|p| {
+                p.commit.as_ref().map(|c| {
+                    format!(
+                        "<code>{}</code> ({})",
+                        esc(&c[..c.len().min(8)]),
+                        timefmt::to_iso8601(p.timestamp)
+                    )
+                })
+            })
+            .collect();
+        if !commits.is_empty() {
+            body.push_str(&format!(
+                "<p>Commits: {}</p>\n",
+                commits.join(" · ")
+            ));
+        }
+    }
+    Ok((body, nbadges))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::{run_with_talp, CodeVersion, Genex};
+    use crate::sim::{MachineSpec, ResourceConfig};
+    use crate::talp::GitMeta;
+    use crate::util::fs::TempDir;
+
+    /// Build a realistic input folder: one experiment, one config,
+    /// 4-commit history with the Fig. 7 bug fix in the middle.
+    fn build_input(td: &TempDir) {
+        let machine = MachineSpec::marenostrum5();
+        let res = ResourceConfig::new(2, 8);
+        for i in 0..4 {
+            let version = if i < 2 {
+                CodeVersion::buggy()
+            } else {
+                CodeVersion::fixed()
+            };
+            let mut app = Genex::salpha(1, version);
+            app.timesteps = 2;
+            let (mut d, _) =
+                run_with_talp(&app, &machine, &res, 100 + i, 0);
+            d.git = Some(GitMeta {
+                commit: format!("{i:07x}a"),
+                branch: "main".into(),
+                commit_timestamp: 1_700_000_000 + i as i64 * 86400,
+                message: format!("commit {i}"),
+            });
+            d.write_file(
+                &td.path()
+                    .join(format!("salpha/resolution_1/run_{i}.json")),
+            )
+            .unwrap();
+        }
+    }
+
+    #[test]
+    fn generates_full_site() {
+        let td = TempDir::new("report-in").unwrap();
+        let out = TempDir::new("report-out").unwrap();
+        build_input(&td);
+        let opts = ReportOptions {
+            regions: vec!["initialize".into(), "timestep".into()],
+            region_for_badge: Some("timestep".into()),
+        };
+        let summary = generate(td.path(), out.path(), &opts).unwrap();
+        assert_eq!(summary.experiments, 1);
+        assert_eq!(summary.pages_written, 2); // index + 1 experiment
+        assert_eq!(summary.badges_written, 1);
+        assert!(out.path().join("index.html").exists());
+        let page = std::fs::read_to_string(
+            out.path().join("salpha_resolution_1.html"),
+        )
+        .unwrap();
+        assert!(page.contains("Scaling efficiency"));
+        assert!(page.contains("Time evolution"));
+        assert!(page.contains("initialize"));
+        assert!(page.contains("polyline"));
+        assert!(page.contains("Commits:"));
+        // The bug->fix history must surface as an automated finding.
+        assert!(page.contains("Detected changes"), "no findings section");
+        assert!(page.contains("sped up"));
+        assert!(page.contains("OpenMP Serialization efficiency"));
+        // Badge file exists and mentions the badge region.
+        let badge = std::fs::read_to_string(
+            out.path().join("badges/salpha_resolution_1__2x8.svg"),
+        )
+        .unwrap();
+        assert!(badge.contains("timestep"));
+    }
+
+    #[test]
+    fn single_run_config_has_table_but_no_plot() {
+        let td = TempDir::new("report-in2").unwrap();
+        let out = TempDir::new("report-out2").unwrap();
+        let machine = MachineSpec::marenostrum5();
+        let mut app = Genex::salpha(1, CodeVersion::fixed());
+        app.timesteps = 2;
+        let (d, _) = run_with_talp(
+            &app,
+            &machine,
+            &ResourceConfig::new(2, 8),
+            1,
+            1_700_000_000,
+        );
+        d.write_file(&td.path().join("exp/one.json")).unwrap();
+        let summary =
+            generate(td.path(), out.path(), &ReportOptions::default())
+                .unwrap();
+        assert_eq!(summary.experiments, 1);
+        let page =
+            std::fs::read_to_string(out.path().join("exp.html")).unwrap();
+        assert!(page.contains("Scaling efficiency"));
+        assert!(!page.contains("Time evolution"));
+    }
+
+    #[test]
+    fn warnings_surface_in_index() {
+        let td = TempDir::new("report-in3").unwrap();
+        let out = TempDir::new("report-out3").unwrap();
+        build_input(&td);
+        std::fs::write(td.path().join("salpha/resolution_1/bad.json"), "][")
+            .unwrap();
+        let summary =
+            generate(td.path(), out.path(), &ReportOptions::default())
+                .unwrap();
+        assert_eq!(summary.warnings.len(), 1);
+        let index =
+            std::fs::read_to_string(out.path().join("index.html")).unwrap();
+        assert!(index.contains("Warnings"));
+    }
+}

@@ -1,0 +1,316 @@
+//! The TALP-Pages input folder scanner (paper Fig. 2).
+//!
+//! Semantics:
+//! * the CLI points at one *top-level folder*;
+//! * every directory that directly contains `.json` files is one
+//!   *experiment* (weak scaling, strong scaling, or a comparison of
+//!   resource configurations);
+//! * multiple runs of the same configuration in one experiment are the
+//!   configuration's *history* (previous CI pipelines' artifacts);
+//! * the *latest* run per configuration feeds the scaling-efficiency
+//!   table, the full history feeds the time-evolution plots.
+//!
+//! Unparsable files produce warnings, not failures — a CI report must
+//! survive one corrupt artifact.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{ensure, Result};
+
+use crate::talp::RunData;
+
+/// One experiment folder's parsed content.
+#[derive(Debug)]
+pub struct Experiment {
+    /// Path relative to the scan root, e.g. "mesh_1/strong_scaling".
+    pub id: String,
+    pub runs: Vec<RunData>,
+}
+
+impl Experiment {
+    /// Distinct resource configurations, ordered by resources.
+    pub fn configs(&self) -> Vec<String> {
+        let mut cfgs: Vec<(u32, u32)> = self
+            .runs
+            .iter()
+            .map(|r| (r.ranks, r.threads))
+            .collect();
+        cfgs.sort_by_key(|&(r, t)| (r * t, r));
+        cfgs.dedup();
+        cfgs.iter().map(|(r, t)| format!("{r}x{t}")).collect()
+    }
+
+    /// Latest run per configuration (the table inputs).
+    pub fn latest_per_config(&self) -> Vec<&RunData> {
+        self.configs()
+            .iter()
+            .filter_map(|label| {
+                self.history_for_config(label).into_iter().next_back()
+            })
+            .collect()
+    }
+
+    /// All runs of one configuration, oldest first.
+    pub fn history_for_config(&self, label: &str) -> Vec<&RunData> {
+        let mut runs: Vec<&RunData> = self
+            .runs
+            .iter()
+            .filter(|r| r.resources().label() == label)
+            .collect();
+        runs.sort_by_key(|r| r.effective_timestamp());
+        runs
+    }
+
+    /// Region names present in any run, Global first.
+    pub fn regions(&self) -> Vec<String> {
+        let mut names: Vec<String> = Vec::new();
+        for run in &self.runs {
+            for reg in &run.regions {
+                if !names.contains(&reg.name) {
+                    names.push(reg.name.clone());
+                }
+            }
+        }
+        names.sort_by_key(|n| (n != "Global", n.clone()));
+        names
+    }
+}
+
+/// Scan outcome: experiments plus non-fatal warnings.
+#[derive(Debug, Default)]
+pub struct ScanResult {
+    pub experiments: Vec<Experiment>,
+    pub warnings: Vec<String>,
+}
+
+/// Scan `root` per the Fig. 2 layout.
+///
+/// Parsing is parallelized across worker threads: CI histories grow to
+/// hundreds of JSONs and per-file open/read latency dominates the
+/// report path (EXPERIMENTS.md §Perf) — results stay in deterministic
+/// file order regardless of worker scheduling.
+pub fn scan(root: &Path) -> Result<ScanResult> {
+    ensure!(root.is_dir(), "{} is not a directory", root.display());
+    // Pass 1 (sequential): discover experiment dirs + their files.
+    let mut found: Vec<(String, Vec<PathBuf>)> = Vec::new();
+    walk(root, root, &mut found);
+    found.sort_by(|a, b| a.0.cmp(&b.0));
+
+    // Pass 2 (parallel): parse every file.
+    let all_files: Vec<&PathBuf> =
+        found.iter().flat_map(|(_, fs)| fs.iter()).collect();
+    let n = all_files.len();
+    let workers = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(4)
+        .min(16)
+        .max(1);
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let mut parsed: Vec<Option<Result<RunData>>> =
+        (0..n).map(|_| None).collect();
+    let slots: Vec<std::sync::Mutex<Option<Result<RunData>>>> =
+        (0..n).map(|_| std::sync::Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                *slots[i].lock().unwrap() =
+                    Some(RunData::read_file(all_files[i]));
+            });
+        }
+    });
+    for (i, slot) in slots.into_iter().enumerate() {
+        parsed[i] = slot.into_inner().unwrap();
+    }
+
+    // Pass 3: assemble experiments in order, collecting warnings.
+    let mut result = ScanResult::default();
+    let mut cursor = 0usize;
+    for (id, files) in found {
+        let mut runs = Vec::new();
+        for path in &files {
+            match parsed[cursor].take() {
+                Some(Ok(r)) => runs.push(r),
+                Some(Err(e)) => result
+                    .warnings
+                    .push(format!("skipping {}: {e:#}", path.display())),
+                None => unreachable!("worker skipped a file"),
+            }
+            cursor += 1;
+        }
+        if !runs.is_empty() {
+            result.experiments.push(Experiment { id, runs });
+        }
+    }
+    Ok(result)
+}
+
+fn walk(root: &Path, dir: &Path, out: &mut Vec<(String, Vec<PathBuf>)>) {
+    let mut jsons: Vec<PathBuf> = Vec::new();
+    let mut subdirs: Vec<PathBuf> = Vec::new();
+    let Ok(rd) = std::fs::read_dir(dir) else {
+        return;
+    };
+    for entry in rd.flatten() {
+        let p = entry.path();
+        if p.is_dir() {
+            subdirs.push(p);
+        } else if p.extension().and_then(|e| e.to_str()) == Some("json") {
+            jsons.push(p);
+        }
+    }
+    jsons.sort();
+    subdirs.sort();
+    if !jsons.is_empty() {
+        let id = dir
+            .strip_prefix(root)
+            .map(|r| r.to_string_lossy().replace('\\', "/"))
+            .unwrap_or_default();
+        let id = if id.is_empty() { ".".to_string() } else { id };
+        out.push((id, jsons));
+    }
+    for sub in subdirs {
+        walk(root, &sub, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::talp::{GitMeta, ProcStats, RegionData};
+    use crate::util::fs::TempDir;
+
+    fn run(ranks: u32, threads: u32, ts: i64) -> RunData {
+        RunData {
+            dlb_version: "t".into(),
+            app: "app".into(),
+            machine: "mn5".into(),
+            timestamp: ts,
+            ranks,
+            threads,
+            nodes: 1,
+            regions: vec![RegionData {
+                name: "Global".into(),
+                elapsed_s: 1.0,
+                visits: 1,
+                procs: (0..ranks)
+                    .map(|r| ProcStats {
+                        rank: r,
+                        elapsed_s: 1.0,
+                        useful_s: threads as f64 * 0.9,
+                        ..Default::default()
+                    })
+                    .collect(),
+            }],
+            git: None,
+        }
+    }
+
+    /// Builds the paper's Fig. 2 structure.
+    fn fig2_tree() -> TempDir {
+        let td = TempDir::new("scan").unwrap();
+        let w = |rel: &str, r: RunData| {
+            r.write_file(&td.path().join(rel)).unwrap();
+        };
+        w("mesh_1/comparison/talp_1x112.json", run(1, 112, 100));
+        w("mesh_1/comparison/talp_2x56.json", run(2, 56, 100));
+        w("mesh_1/comparison/talp_4x28.json", run(4, 28, 100));
+        w("mesh_1/strong_scaling/talp_8x14.json", run(8, 14, 100));
+        w("mesh_1/strong_scaling/talp_8x28.json", run(8, 28, 100));
+        w("mesh_2/weak_scaling/talp_8x14_9dc04ca.json", run(8, 14, 200));
+        w("mesh_2/weak_scaling/talp_8x28_9dc04ca.json", run(8, 28, 200));
+        w("mesh_2/weak_scaling/talp_8x14_ed8b9ef.json", run(8, 14, 300));
+        w("mesh_2/weak_scaling/talp_8x28_ed8b9ef.json", run(8, 28, 300));
+        td
+    }
+
+    #[test]
+    fn scans_fig2_structure() {
+        let td = fig2_tree();
+        let res = scan(td.path()).unwrap();
+        let ids: Vec<&str> =
+            res.experiments.iter().map(|e| e.id.as_str()).collect();
+        assert_eq!(
+            ids,
+            [
+                "mesh_1/comparison",
+                "mesh_1/strong_scaling",
+                "mesh_2/weak_scaling"
+            ]
+        );
+        assert!(res.warnings.is_empty());
+    }
+
+    #[test]
+    fn configs_ordered_by_resources() {
+        let td = fig2_tree();
+        let res = scan(td.path()).unwrap();
+        let comp = &res.experiments[0];
+        assert_eq!(comp.configs(), ["1x112", "2x56", "4x28"]);
+    }
+
+    #[test]
+    fn history_and_latest() {
+        let td = fig2_tree();
+        let res = scan(td.path()).unwrap();
+        let weak = &res.experiments[2];
+        let hist = weak.history_for_config("8x14");
+        assert_eq!(hist.len(), 2);
+        assert!(hist[0].timestamp < hist[1].timestamp);
+        let latest = weak.latest_per_config();
+        assert_eq!(latest.len(), 2);
+        assert!(latest.iter().all(|r| r.timestamp == 300));
+    }
+
+    #[test]
+    fn git_timestamp_preferred_in_history_order() {
+        let td = TempDir::new("scan-git").unwrap();
+        let mut early_commit = run(2, 2, 1000);
+        early_commit.git = Some(GitMeta {
+            commit: "aaa".into(),
+            branch: "main".into(),
+            commit_timestamp: 10,
+            message: String::new(),
+        });
+        let late_commit = run(2, 2, 500); // executed earlier, no git meta
+        early_commit
+            .write_file(&td.path().join("exp/a.json"))
+            .unwrap();
+        late_commit
+            .write_file(&td.path().join("exp/b.json"))
+            .unwrap();
+        let res = scan(td.path()).unwrap();
+        let hist = res.experiments[0].history_for_config("2x2");
+        // commit_timestamp 10 sorts before execution timestamp 500.
+        assert_eq!(hist[0].effective_timestamp(), 10);
+    }
+
+    #[test]
+    fn corrupt_file_warns_but_continues() {
+        let td = fig2_tree();
+        std::fs::write(td.path().join("mesh_1/comparison/bad.json"), "{oops")
+            .unwrap();
+        let res = scan(td.path()).unwrap();
+        assert_eq!(res.warnings.len(), 1);
+        assert_eq!(res.experiments.len(), 3);
+    }
+
+    #[test]
+    fn empty_or_missing_root() {
+        let td = TempDir::new("scan-empty").unwrap();
+        let res = scan(td.path()).unwrap();
+        assert!(res.experiments.is_empty());
+        assert!(scan(&td.path().join("nope")).is_err());
+    }
+
+    #[test]
+    fn jsons_at_root_become_dot_experiment() {
+        let td = TempDir::new("scan-root").unwrap();
+        run(1, 1, 1).write_file(&td.path().join("x.json")).unwrap();
+        let res = scan(td.path()).unwrap();
+        assert_eq!(res.experiments[0].id, ".");
+    }
+}

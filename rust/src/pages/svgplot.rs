@@ -1,0 +1,237 @@
+//! Small self-contained SVG line-chart generator for the time-evolution
+//! plots.  No external JS plotting library: the report must work from
+//! static in-repository hosting (GitLab/GitHub Pages) with no CDN.
+//!
+//! Interactivity (the paper's "regions can be easily toggled on and
+//! off") is done with one CSS class per series and a checkbox script in
+//! html.rs.
+
+use std::fmt::Write as _;
+
+use crate::util::timefmt;
+
+/// One series: label + (unix time, value) points.
+pub struct Series {
+    pub label: String,
+    pub points: Vec<(i64, f64)>,
+    pub color: String,
+}
+
+/// Palette for region series (repeats when exhausted).
+pub const PALETTE: &[&str] = &[
+    "#1f77b4", "#ff7f0e", "#2ca02c", "#d62728", "#9467bd", "#8c564b",
+    "#e377c2", "#7f7f7f", "#bcbd22", "#17becf",
+];
+
+pub fn color(i: usize) -> String {
+    PALETTE[i % PALETTE.len()].to_string()
+}
+
+const W: f64 = 760.0;
+const H: f64 = 180.0;
+const ML: f64 = 64.0; // left margin (y labels)
+const MR: f64 = 10.0;
+const MT: f64 = 18.0;
+const MB: f64 = 26.0;
+
+/// Render one chart.  `css_class_of_series[i]` becomes a class on the
+/// series' polyline + markers so the page JS can hide whole regions.
+pub fn line_chart(title: &str, series: &[Series], y_unit: &str) -> String {
+    let mut all_t: Vec<i64> = Vec::new();
+    let mut all_v: Vec<f64> = Vec::new();
+    for s in series {
+        for (t, v) in &s.points {
+            all_t.push(*t);
+            if v.is_finite() {
+                all_v.push(*v);
+            }
+        }
+    }
+    if all_t.is_empty() || all_v.is_empty() {
+        return format!(
+            "<svg class=\"chart\" viewBox=\"0 0 {W} {H}\"><text x=\"10\" y=\"20\">{}</text><text x=\"10\" y=\"40\" fill=\"#888\">no data</text></svg>",
+            esc(title)
+        );
+    }
+    let (t0, t1) = (
+        *all_t.iter().min().unwrap(),
+        *all_t.iter().max().unwrap(),
+    );
+    let (mut v0, mut v1) = (
+        all_v.iter().cloned().fold(f64::INFINITY, f64::min),
+        all_v.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+    );
+    if (v1 - v0).abs() < 1e-12 {
+        v0 -= 0.5;
+        v1 += 0.5;
+    } else {
+        let pad = 0.08 * (v1 - v0);
+        v0 -= pad;
+        v1 += pad;
+    }
+    let tspan = ((t1 - t0) as f64).max(1.0);
+    let x = |t: i64| ML + (t - t0) as f64 / tspan * (W - ML - MR);
+    let y = |v: f64| H - MB - (v - v0) / (v1 - v0) * (H - MT - MB);
+
+    // Pre-size for the dominant cost: one <circle> (~170 B) per point.
+    let npoints: usize = series.iter().map(|s| s.points.len()).sum();
+    let mut svg = String::with_capacity(2048 + 170 * npoints);
+    let _ = write!(svg,
+        "<svg class=\"chart\" viewBox=\"0 0 {W} {H}\" xmlns=\"http://www.w3.org/2000/svg\">\n"
+    );
+    let _ = write!(svg,
+        "<text x=\"{ML}\" y=\"13\" class=\"charttitle\">{}</text>\n",
+        esc(title)
+    );
+    // Gridlines + y labels (4 ticks).
+    for i in 0..=3 {
+        let v = v0 + (v1 - v0) * i as f64 / 3.0;
+        let yy = y(v);
+        let _ = write!(svg,
+            "<line x1=\"{ML}\" y1=\"{yy:.1}\" x2=\"{:.1}\" y2=\"{yy:.1}\" class=\"grid\"/>\n",
+            W - MR
+        );
+        let _ = write!(svg,
+            "<text x=\"{:.1}\" y=\"{:.1}\" class=\"ylabel\">{}</text>\n",
+            ML - 6.0,
+            yy + 3.5,
+            fmt_val(v)
+        );
+    }
+    // X labels: first and last timestamp.
+    for (t, anchor) in [(t0, "start"), (t1, "end")] {
+        let _ = write!(svg,
+            "<text x=\"{:.1}\" y=\"{:.1}\" class=\"xlabel\" text-anchor=\"{anchor}\">{}</text>\n",
+            x(t),
+            H - 8.0,
+            timefmt::to_iso8601(t).split('T').next().unwrap_or("")
+        );
+    }
+    let _ = write!(svg,
+        "<text x=\"12\" y=\"{:.1}\" class=\"yunit\" transform=\"rotate(-90 12 {:.1})\">{}</text>\n",
+        (H - MB + MT) / 2.0,
+        (H - MB + MT) / 2.0,
+        esc(y_unit)
+    );
+    // Series.
+    for s in series {
+        if s.points.is_empty() {
+            continue;
+        }
+        let cls = css_class(&s.label);
+        let mut path = String::with_capacity(14 * s.points.len());
+        for (t, v) in s.points.iter().filter(|(_, v)| v.is_finite()) {
+            let _ = write!(path, "{:.1},{:.1} ", x(*t), y(*v));
+        }
+        let _ = write!(svg,
+            "<polyline class=\"series {cls}\" fill=\"none\" stroke=\"{}\" stroke-width=\"1.6\" points=\"{}\"/>\n",
+            s.color,
+            path.trim_end()
+        );
+        for (t, v) in s.points.iter().filter(|(_, v)| v.is_finite()) {
+            let _ = write!(svg,
+                "<circle class=\"series {cls}\" cx=\"{:.1}\" cy=\"{:.1}\" r=\"2.4\" fill=\"{}\"><title>{}: {} @ {}</title></circle>\n",
+                x(*t),
+                y(*v),
+                s.color,
+                esc(&s.label),
+                fmt_val(*v),
+                timefmt::to_iso8601(*t)
+            );
+        }
+    }
+    svg.push_str("</svg>\n");
+    svg
+}
+
+/// CSS-safe class for a series label ("initialize" -> "r-initialize").
+pub fn css_class(label: &str) -> String {
+    let mut out = String::from("r-");
+    for c in label.chars() {
+        if c.is_ascii_alphanumeric() {
+            out.push(c.to_ascii_lowercase());
+        } else {
+            out.push('_');
+        }
+    }
+    out
+}
+
+fn fmt_val(v: f64) -> String {
+    if v == 0.0 {
+        "0".into()
+    } else if v.abs() >= 1e6 {
+        format!("{:.2e}", v)
+    } else if v.abs() >= 100.0 {
+        format!("{v:.0}")
+    } else if v.abs() >= 1.0 {
+        format!("{v:.2}")
+    } else {
+        format!("{v:.3}")
+    }
+}
+
+pub fn esc(s: &str) -> String {
+    s.replace('&', "&amp;")
+        .replace('<', "&lt;")
+        .replace('>', "&gt;")
+        .replace('"', "&quot;")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn series() -> Vec<Series> {
+        vec![
+            Series {
+                label: "Global".into(),
+                points: vec![(1000, 10.0), (2000, 8.0), (3000, 8.1)],
+                color: color(0),
+            },
+            Series {
+                label: "initialize".into(),
+                points: vec![(1000, 4.0), (2000, 1.5), (3000, 1.4)],
+                color: color(1),
+            },
+        ]
+    }
+
+    #[test]
+    fn chart_contains_series_and_classes() {
+        let svg = line_chart("Elapsed time", &series(), "s");
+        assert!(svg.contains("polyline"));
+        assert!(svg.contains("r-global"));
+        assert!(svg.contains("r-initialize"));
+        assert!(svg.contains("Elapsed time"));
+        assert_eq!(svg.matches("<circle").count(), 6);
+    }
+
+    #[test]
+    fn empty_series_renders_placeholder() {
+        let svg = line_chart("x", &[], "s");
+        assert!(svg.contains("no data"));
+    }
+
+    #[test]
+    fn constant_series_does_not_divide_by_zero() {
+        let s = vec![Series {
+            label: "flat".into(),
+            points: vec![(0, 1.0), (100, 1.0)],
+            color: color(0),
+        }];
+        let svg = line_chart("flat", &s, "");
+        assert!(!svg.contains("NaN"));
+        assert!(!svg.contains("inf"));
+    }
+
+    #[test]
+    fn css_class_sanitizes() {
+        assert_eq!(css_class("My Region/2"), "r-my_region_2");
+    }
+
+    #[test]
+    fn escaping() {
+        assert_eq!(esc("a<b>&\"c\""), "a&lt;b&gt;&amp;&quot;c&quot;");
+    }
+}

@@ -1,0 +1,135 @@
+//! HTML rendering of the scaling-efficiency table with the POP color
+//! convention (Fig. 3 of the paper): efficiencies colored by band,
+//! hierarchy shown as indentation, footer rows plain.
+
+use crate::pop::ScalingTable;
+
+use super::svgplot::esc;
+
+/// Cell background for an efficiency value (scalabilities > 1 are good;
+/// the paper leaves footer rows uncolored).
+fn cell_color(v: f64) -> &'static str {
+    if v >= 0.8 {
+        "#c6e9c6" // green
+    } else if v >= 0.6 {
+        "#f6eab8" // yellow
+    } else {
+        "#f3c6bd" // red
+    }
+}
+
+pub fn render(table: &ScalingTable) -> String {
+    let mut html = String::with_capacity(4096);
+    html.push_str(&format!(
+        "<table class=\"efftable\" data-region=\"{}\">\n<thead><tr><th>Metrics ({} scaling)</th>",
+        esc(&table.region),
+        table.mode.name()
+    ));
+    for c in &table.columns {
+        html.push_str(&format!("<th>{}</th>", esc(c)));
+    }
+    html.push_str("</tr></thead>\n<tbody>\n");
+    for row in &table.rows {
+        html.push_str("<tr>");
+        html.push_str(&format!(
+            "<td class=\"label d{}\">{}</td>",
+            row.depth.min(4),
+            esc(&row.label)
+        ));
+        for cell in &row.cells {
+            match cell {
+                None => html.push_str("<td class=\"num\">-</td>"),
+                Some(v) => {
+                    let style = if row.is_footer {
+                        String::new()
+                    } else {
+                        format!(" style=\"background:{}\"", cell_color(*v))
+                    };
+                    html.push_str(&format!(
+                        "<td class=\"num\"{style}>{}</td>",
+                        ScalingTable::fmt_cell(Some(*v), row.is_footer)
+                    ));
+                }
+            }
+        }
+        html.push_str("</tr>\n");
+    }
+    html.push_str("</tbody></table>\n");
+    html
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pop::{self};
+    use crate::talp::{ProcStats, RegionData, RunData};
+
+    fn sample_table() -> ScalingTable {
+        let run = |ranks: u32, useful: f64, e: f64| RunData {
+            dlb_version: "t".into(),
+            app: "t".into(),
+            machine: "mn5".into(),
+            timestamp: 0,
+            ranks,
+            threads: 2,
+            nodes: 1,
+            regions: vec![RegionData {
+                name: "Global".into(),
+                elapsed_s: e,
+                visits: 1,
+                procs: (0..ranks)
+                    .map(|r| ProcStats {
+                        rank: r,
+                        elapsed_s: e,
+                        useful_s: useful,
+                        useful_instructions: 1000,
+                        useful_cycles: 400,
+                        ..Default::default()
+                    })
+                    .collect(),
+            }],
+            git: None,
+        };
+        let a = run(2, 3.6, 2.0);
+        let b = run(4, 1.2, 1.0);
+        pop::build("Global", &[&a, &b]).unwrap()
+    }
+
+    #[test]
+    fn renders_header_and_rows() {
+        let html = render(&sample_table());
+        assert!(html.contains("<table class=\"efftable\""));
+        assert!(html.contains("<th>2x2</th>"));
+        assert!(html.contains("<th>4x2</th>"));
+        assert!(html.contains("Parallel efficiency"));
+        assert!(html.contains("Elapsed time [s]"));
+    }
+
+    #[test]
+    fn colors_follow_bands() {
+        let html = render(&sample_table());
+        // PE col 0 = 3.6/(4*2)=0.9 -> green present.
+        assert!(html.contains("#c6e9c6"));
+    }
+
+    #[test]
+    fn footer_rows_uncolored() {
+        let html = render(&sample_table());
+        // The elapsed-time row must not carry a background style.
+        let footer_part = html
+            .split("Elapsed time [s]")
+            .nth(1)
+            .unwrap()
+            .split("</tr>")
+            .next()
+            .unwrap();
+        assert!(!footer_part.contains("background"));
+    }
+
+    #[test]
+    fn cell_color_bands() {
+        assert_eq!(cell_color(0.9), "#c6e9c6");
+        assert_eq!(cell_color(0.7), "#f6eab8");
+        assert_eq!(cell_color(0.2), "#f3c6bd");
+    }
+}

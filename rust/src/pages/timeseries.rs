@@ -1,0 +1,228 @@
+//! Time-evolution series (paper §Time-evolution plots, Fig. 7).
+//!
+//! One series set per (experiment, resource configuration): for every
+//! run in the configuration's history, per-region elapsed time, the
+//! computation indicators (IPC, frequency, instructions) and the
+//! parallel-efficiency hierarchy.  The x-axis is the git commit
+//! timestamp when present, the execution end time otherwise.
+
+use crate::pop;
+use crate::talp::RunData;
+
+/// One region's metrics at one point in time.
+#[derive(Debug, Clone)]
+pub struct RegionPoint {
+    pub region: String,
+    pub elapsed_s: f64,
+    pub useful_ipc: f64,
+    pub frequency_ghz: f64,
+    pub instructions: f64,
+    pub parallel_efficiency: f64,
+    pub mpi_parallel_efficiency: f64,
+    pub omp_parallel_efficiency: f64,
+    pub omp_load_balance: f64,
+    pub omp_scheduling_efficiency: f64,
+    pub omp_serialization_efficiency: f64,
+    pub mpi_load_balance: f64,
+    pub mpi_communication_efficiency: f64,
+}
+
+/// One history point (one run).
+#[derive(Debug, Clone)]
+pub struct TimePoint {
+    pub timestamp: i64,
+    pub commit: Option<String>,
+    pub branch: Option<String>,
+    pub regions: Vec<RegionPoint>,
+}
+
+/// The full series for one resource configuration.
+#[derive(Debug, Clone)]
+pub struct TimeSeries {
+    pub config: String,
+    pub points: Vec<TimePoint>,
+}
+
+/// Build the series from a configuration's history (oldest first), for
+/// the selected regions (empty = all).
+pub fn build(config: &str, history: &[&RunData], regions: &[String]) -> TimeSeries {
+    let mut points = Vec::with_capacity(history.len());
+    for run in history {
+        let mut region_points = Vec::new();
+        for reg in &run.regions {
+            if !regions.is_empty() && !regions.contains(&reg.name) {
+                continue;
+            }
+            let m = pop::compute(reg, run.threads);
+            region_points.push(RegionPoint {
+                region: reg.name.clone(),
+                elapsed_s: m.elapsed_s,
+                useful_ipc: m.useful_ipc,
+                frequency_ghz: m.frequency_ghz,
+                instructions: m.total_useful_instructions as f64,
+                parallel_efficiency: m.parallel_efficiency,
+                mpi_parallel_efficiency: m.mpi_parallel_efficiency,
+                omp_parallel_efficiency: m.omp_parallel_efficiency,
+                omp_load_balance: m.omp_load_balance,
+                omp_scheduling_efficiency: m.omp_scheduling_efficiency,
+                omp_serialization_efficiency: m.omp_serialization_efficiency,
+                mpi_load_balance: m.mpi_load_balance,
+                mpi_communication_efficiency: m.mpi_communication_efficiency,
+            });
+        }
+        points.push(TimePoint {
+            timestamp: run.effective_timestamp(),
+            commit: run.git.as_ref().map(|g| g.commit.clone()),
+            branch: run.git.as_ref().map(|g| g.branch.clone()),
+            regions: region_points,
+        });
+    }
+    TimeSeries { config: config.to_string(), points }
+}
+
+impl TimeSeries {
+    /// Values of one metric for one region across time.
+    pub fn metric(&self, region: &str, metric: &str) -> Vec<(i64, f64)> {
+        self.points
+            .iter()
+            .filter_map(|p| {
+                let r = p.regions.iter().find(|r| r.region == region)?;
+                let v = match metric {
+                    "elapsed" => r.elapsed_s,
+                    "ipc" => r.useful_ipc,
+                    "frequency" => r.frequency_ghz,
+                    "instructions" => r.instructions,
+                    "parallel_efficiency" => r.parallel_efficiency,
+                    "mpi_parallel_efficiency" => r.mpi_parallel_efficiency,
+                    "omp_parallel_efficiency" => r.omp_parallel_efficiency,
+                    "omp_load_balance" => r.omp_load_balance,
+                    "omp_scheduling_efficiency" => r.omp_scheduling_efficiency,
+                    "omp_serialization_efficiency" => {
+                        r.omp_serialization_efficiency
+                    }
+                    "mpi_load_balance" => r.mpi_load_balance,
+                    "mpi_communication_efficiency" => {
+                        r.mpi_communication_efficiency
+                    }
+                    _ => return None,
+                };
+                Some((p.timestamp, v))
+            })
+            .collect()
+    }
+
+    /// Regions present anywhere in the series.
+    pub fn regions(&self) -> Vec<String> {
+        let mut names: Vec<String> = Vec::new();
+        for p in &self.points {
+            for r in &p.regions {
+                if !names.contains(&r.region) {
+                    names.push(r.region.clone());
+                }
+            }
+        }
+        names
+    }
+}
+
+/// Metric ids + display labels for the report rows (order = plot rows in
+/// the paper's Fig. 7: elapsed, computation indicators, efficiency
+/// hierarchy).
+pub const PLOT_METRICS: &[(&str, &str)] = &[
+    ("elapsed", "Elapsed time [s]"),
+    ("ipc", "Useful IPC"),
+    ("frequency", "Frequency [GHz]"),
+    ("instructions", "Useful instructions"),
+    ("parallel_efficiency", "Parallel efficiency"),
+    ("mpi_parallel_efficiency", "MPI Parallel efficiency"),
+    ("omp_parallel_efficiency", "OpenMP Parallel efficiency"),
+    ("omp_load_balance", "OpenMP Load balance"),
+    ("omp_scheduling_efficiency", "OpenMP Scheduling efficiency"),
+    ("omp_serialization_efficiency", "OpenMP Serialization efficiency"),
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::{run_with_talp, CodeVersion, Genex};
+    use crate::sim::{MachineSpec, ResourceConfig};
+    use crate::talp::GitMeta;
+
+    fn history() -> Vec<RunData> {
+        // 4 commits: bug, bug, fix, fix.
+        let machine = MachineSpec::marenostrum5();
+        let res = ResourceConfig::new(2, 8);
+        (0..4)
+            .map(|i| {
+                let version = if i < 2 {
+                    CodeVersion::buggy()
+                } else {
+                    CodeVersion::fixed()
+                };
+                let mut app = Genex::salpha(1, version);
+                app.timesteps = 2;
+                let (mut d, _) =
+                    run_with_talp(&app, &machine, &res, 100 + i, 0);
+                d.git = Some(GitMeta {
+                    commit: format!("c{i:07}"),
+                    branch: "main".into(),
+                    commit_timestamp: 1000 + i as i64 * 100,
+                    message: String::new(),
+                });
+                d
+            })
+            .collect()
+    }
+
+    #[test]
+    fn series_ordered_and_complete() {
+        let runs = history();
+        let refs: Vec<&RunData> = runs.iter().collect();
+        let ts = build("2x8", &refs, &[]);
+        assert_eq!(ts.points.len(), 4);
+        assert_eq!(ts.points[0].commit.as_deref(), Some("c0000000"));
+        assert!(ts
+            .regions()
+            .iter()
+            .any(|r| r == "initialize"));
+    }
+
+    #[test]
+    fn fig7_signature_visible_in_series() {
+        let runs = history();
+        let refs: Vec<&RunData> = runs.iter().collect();
+        let ts = build("2x8", &refs, &[]);
+        let elapsed = ts.metric("initialize", "elapsed");
+        // elapsed drops at the fix commit...
+        assert!(elapsed[2].1 < 0.7 * elapsed[1].1, "{elapsed:?}");
+        // ...serialization efficiency rises...
+        let ser = ts.metric("initialize", "omp_serialization_efficiency");
+        assert!(ser[2].1 > ser[1].1 + 0.1, "{ser:?}");
+        // ...and instructions stay flat.
+        let insn = ts.metric("initialize", "instructions");
+        let rel = (insn[2].1 - insn[1].1).abs() / insn[1].1;
+        assert!(rel < 0.05, "instructions moved {rel}");
+        // timestep unaffected.
+        let ts_elapsed = ts.metric("timestep", "elapsed");
+        let rel =
+            (ts_elapsed[2].1 - ts_elapsed[1].1).abs() / ts_elapsed[1].1;
+        assert!(rel < 0.1, "timestep moved {rel}");
+    }
+
+    #[test]
+    fn region_filter_applies() {
+        let runs = history();
+        let refs: Vec<&RunData> = runs.iter().collect();
+        let ts = build("2x8", &refs, &["timestep".to_string()]);
+        assert_eq!(ts.regions(), ["timestep"]);
+        assert!(ts.metric("initialize", "elapsed").is_empty());
+    }
+
+    #[test]
+    fn unknown_metric_empty() {
+        let runs = history();
+        let refs: Vec<&RunData> = runs.iter().collect();
+        let ts = build("2x8", &refs, &[]);
+        assert!(ts.metric("Global", "nope").is_empty());
+    }
+}

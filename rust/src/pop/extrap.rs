@@ -1,0 +1,259 @@
+//! Extra-P-style performance-model fitting (the paper's future work:
+//! "exporting an Extra-P experiment from a collection of jsons ... to
+//! extend the performance modeling capabilities" [Calotoiu et al.]).
+//!
+//! Fits the single-term PMNF hypothesis  `f(p) = a + b * p^c`  to a
+//! metric measured at several resource configurations, by scanning a
+//! small grid of exponents `c` (Extra-P does the same over its PMNF
+//! search space) and solving the linear least squares for (a, b) at
+//! each candidate.  The winner minimizes SMAPE; `c = 0` degenerates to
+//! a constant model.
+
+/// One fitted model.
+#[derive(Debug, Clone)]
+pub struct Model {
+    pub a: f64,
+    pub b: f64,
+    pub c: f64,
+    /// Symmetric mean absolute percentage error of the fit (0..1).
+    pub smape: f64,
+}
+
+impl Model {
+    pub fn predict(&self, p: f64) -> f64 {
+        self.a + self.b * p.powf(self.c)
+    }
+
+    /// Human-readable form: "12.4 + 31.2 * p^-0.92".
+    pub fn formula(&self) -> String {
+        if self.b.abs() < 1e-12 || self.c == 0.0 {
+            format!("{:.4}", self.a + self.b)
+        } else {
+            format!("{:.4} + {:.4} * p^{:.2}", self.a, self.b, self.c)
+        }
+    }
+
+    /// Does the model predict the metric grows with resources (a
+    /// scalability bug smell for time-like metrics)?
+    pub fn grows(&self) -> bool {
+        self.b > 1e-12 && self.c > 0.05
+    }
+}
+
+/// Exponent candidates (Extra-P's default PMNF uses i/4 for i in
+/// -12..=12 plus log terms; we keep the polynomial part).
+fn exponent_grid() -> Vec<f64> {
+    let mut v: Vec<f64> = (-12..=12).map(|i| i as f64 / 4.0).collect();
+    v.retain(|c| c.abs() > 1e-9);
+    v.push(0.0);
+    v
+}
+
+/// Fit `f(p) = a + b*p^c` to (p, value) observations.  Needs >= 2
+/// distinct p; returns None otherwise.
+pub fn fit(points: &[(f64, f64)]) -> Option<Model> {
+    let mut ps: Vec<f64> = points.iter().map(|(p, _)| *p).collect();
+    ps.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    ps.dedup();
+    if ps.len() < 2 {
+        return None;
+    }
+    let mut best: Option<Model> = None;
+    for c in exponent_grid() {
+        let Some((a, b)) = lls(points, c) else {
+            continue;
+        };
+        let model = Model { a, b, c, smape: 0.0 };
+        let smape = smape(&model, points);
+        let model = Model { smape, ..model };
+        let better = match &best {
+            None => true,
+            // Prefer lower error; tie-break on simpler exponent.
+            Some(m) => {
+                smape < m.smape - 1e-9
+                    || (smape < m.smape + 1e-9 && c.abs() < m.c.abs())
+            }
+        };
+        if better {
+            best = Some(model);
+        }
+    }
+    best
+}
+
+/// Linear least squares for f(p) = a + b*x with x = p^c.
+fn lls(points: &[(f64, f64)], c: f64) -> Option<(f64, f64)> {
+    let n = points.len() as f64;
+    let (mut sx, mut sy, mut sxx, mut sxy) = (0.0, 0.0, 0.0, 0.0);
+    for (p, y) in points {
+        let x = p.powf(c);
+        sx += x;
+        sy += y;
+        sxx += x * x;
+        sxy += x * y;
+    }
+    let det = n * sxx - sx * sx;
+    if det.abs() < 1e-12 {
+        return None;
+    }
+    let b = (n * sxy - sx * sy) / det;
+    let a = (sy - b * sx) / n;
+    Some((a, b))
+}
+
+fn smape(m: &Model, points: &[(f64, f64)]) -> f64 {
+    let mut s = 0.0;
+    for (p, y) in points {
+        let f = m.predict(*p);
+        let denom = (f.abs() + y.abs()).max(1e-12);
+        s += (f - y).abs() / denom * 2.0;
+    }
+    s / points.len() as f64
+}
+
+/// Fit elapsed-time models per region from a set of runs of one
+/// experiment (p = total cpus).  Returns (region, model) pairs.
+pub fn fit_experiment(
+    runs: &[&crate::talp::RunData],
+    region_filter: &[String],
+) -> Vec<(String, Model)> {
+    use std::collections::BTreeMap;
+    let mut by_region: BTreeMap<String, Vec<(f64, f64)>> = BTreeMap::new();
+    for run in runs {
+        let p = run.resources().total_cpus() as f64;
+        for reg in &run.regions {
+            if !region_filter.is_empty()
+                && !region_filter.contains(&reg.name)
+            {
+                continue;
+            }
+            by_region
+                .entry(reg.name.clone())
+                .or_default()
+                .push((p, reg.elapsed_s));
+        }
+    }
+    by_region
+        .into_iter()
+        .filter_map(|(name, pts)| fit(&pts).map(|m| (name, m)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recovers_perfect_strong_scaling() {
+        // t = 0.5 + 100/p
+        let pts: Vec<(f64, f64)> = [2.0, 4.0, 8.0, 16.0, 32.0]
+            .iter()
+            .map(|&p| (p, 0.5 + 100.0 / p))
+            .collect();
+        let m = fit(&pts).unwrap();
+        assert!(m.smape < 1e-6, "{}", m.smape);
+        assert!((m.c - (-1.0)).abs() < 1e-9, "c = {}", m.c);
+        assert!((m.a - 0.5).abs() < 1e-6);
+        assert!((m.b - 100.0).abs() < 1e-4);
+        assert!(!m.grows());
+        assert!(m.formula().contains("p^-1.00"));
+    }
+
+    #[test]
+    fn recovers_constant_weak_scaling() {
+        let pts = vec![(112.0, 10.01), (448.0, 9.99), (896.0, 10.0)];
+        let m = fit(&pts).unwrap();
+        assert!(m.smape < 0.01);
+        assert!((m.predict(1792.0) - 10.0).abs() < 0.3);
+        assert!(!m.grows());
+    }
+
+    #[test]
+    fn detects_scalability_bug_growth() {
+        // t = 1 + 0.01 * p^1.5 — the Extra-P "scalability bug" shape.
+        let pts: Vec<(f64, f64)> = [4.0f64, 16.0, 64.0, 256.0]
+            .iter()
+            .map(|&p| (p, 1.0 + 0.01 * p.powf(1.5)))
+            .collect();
+        let m = fit(&pts).unwrap();
+        assert!(m.grows(), "{:?}", m);
+        assert!((m.c - 1.5).abs() < 0.26, "c = {}", m.c);
+    }
+
+    #[test]
+    fn too_few_points_is_none() {
+        assert!(fit(&[(2.0, 1.0)]).is_none());
+        assert!(fit(&[(2.0, 1.0), (2.0, 1.1)]).is_none());
+        assert!(fit(&[]).is_none());
+    }
+
+    #[test]
+    fn noisy_fit_stays_reasonable() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(5);
+        let pts: Vec<(f64, f64)> = [2.0, 4.0, 8.0, 16.0, 32.0, 64.0]
+            .iter()
+            .map(|&p| {
+                let noise = 1.0 + 0.02 * (rng.f64() - 0.5);
+                (p, (2.0 + 50.0 / p) * noise)
+            })
+            .collect();
+        let m = fit(&pts).unwrap();
+        assert!(m.smape < 0.05, "{}", m.smape);
+        assert!(m.c < -0.5, "c = {}", m.c);
+    }
+
+    #[test]
+    fn fit_experiment_per_region() {
+        use crate::talp::{ProcStats, RegionData, RunData};
+        let run = |cpus: u32, e_global: f64, e_init: f64| RunData {
+            dlb_version: "t".into(),
+            app: "t".into(),
+            machine: "mn5".into(),
+            timestamp: 0,
+            ranks: cpus,
+            threads: 1,
+            nodes: 1,
+            regions: vec![
+                RegionData {
+                    name: "Global".into(),
+                    elapsed_s: e_global,
+                    visits: 1,
+                    procs: (0..cpus)
+                        .map(|r| ProcStats {
+                            rank: r,
+                            elapsed_s: e_global,
+                            ..Default::default()
+                        })
+                        .collect(),
+                },
+                RegionData {
+                    name: "initialize".into(),
+                    elapsed_s: e_init,
+                    visits: 1,
+                    procs: (0..cpus)
+                        .map(|r| ProcStats {
+                            rank: r,
+                            elapsed_s: e_init,
+                            ..Default::default()
+                        })
+                        .collect(),
+                },
+            ],
+            git: None,
+        };
+        let runs = vec![
+            run(4, 25.0, 1.0 + 0.01 * 4.0),
+            run(16, 6.5, 1.0 + 0.01 * 16.0),
+            run(64, 1.8, 1.0 + 0.01 * 64.0),
+        ];
+        let refs: Vec<&RunData> = runs.iter().collect();
+        let models = fit_experiment(&refs, &[]);
+        assert_eq!(models.len(), 2);
+        let global = &models.iter().find(|(n, _)| n == "Global").unwrap().1;
+        assert!(global.c < -0.5, "Global should scale down: {global:?}");
+        let init =
+            &models.iter().find(|(n, _)| n == "initialize").unwrap().1;
+        assert!(init.grows(), "initialize grows with p: {init:?}");
+    }
+}

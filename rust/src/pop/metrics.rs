@@ -1,0 +1,353 @@
+//! POP fundamental performance factors, computed from TALP raw data.
+//!
+//! Definitions (hybrid MPI+OpenMP; all reduce to the classic MPI-only
+//! model when threads == 1).  For a region with global elapsed `E`,
+//! per-process elapsed `E_p`, per-process master MPI time `mpi_p`,
+//! thread count `T`, and thread-summed useful time `u_p`:
+//!
+//! ```text
+//! ncpu               = P * T
+//! PE                 = Σ u_p / (ncpu * E)                (parallel efficiency)
+//! outMPI_p           = E_p - mpi_p                       (process MPI timeline)
+//! MPI CommE          = max_p outMPI_p / E
+//! MPI LB             = mean_p outMPI_p / max_p outMPI_p
+//! MPI PE             = MPI LB * MPI CommE = mean_p outMPI_p / E
+//!   inter-node LB    = mean_nodes(max_{p∈node} outMPI) / max_p outMPI
+//!   in-node LB       = MPI LB / inter-node LB
+//! avail              = Σ_p T * outMPI_p                  (cpu time not lost to MPI)
+//! OMP Serialization  = (avail - Σ serial_p) / avail
+//! OMP Scheduling     = (avail - Σ serial - Σ sched) / (avail - Σ serial)
+//! OMP LB             = Σ u / (avail - Σ serial - Σ sched)
+//! OMP PE             = Serialization * Scheduling * LB  ( = PE / MPI PE )
+//! ```
+//!
+//! The chain is multiplicative by construction; the per-cpu accounting
+//! identity `T*E_p = u_p + T*mpi_p + serial_p + sched_p + barrier_p`
+//! (sim::engine guarantees it up to instrumentation perturbation) makes
+//! `OMP LB` equal `1 - barrier/(avail - serial - sched)`.
+//!
+//! Computation scalability (vs the least-resource reference config) is in
+//! `pop::scaling`; `Global efficiency = PE * Computation scalability`.
+
+use crate::talp::RegionData;
+
+/// All absolute (per-config) factors for one region.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RegionMetrics {
+    pub ncpus: u32,
+    pub nranks: u32,
+    pub nthreads: u32,
+    pub elapsed_s: f64,
+    pub total_useful_s: f64,
+    pub total_useful_instructions: u64,
+    pub total_useful_cycles: u64,
+
+    pub parallel_efficiency: f64,
+    pub mpi_parallel_efficiency: f64,
+    pub mpi_communication_efficiency: f64,
+    pub mpi_load_balance: f64,
+    pub mpi_load_balance_in: f64,
+    pub mpi_load_balance_inter: f64,
+    pub omp_parallel_efficiency: f64,
+    pub omp_load_balance: f64,
+    pub omp_scheduling_efficiency: f64,
+    pub omp_serialization_efficiency: f64,
+
+    /// Aggregate useful IPC and frequency (GHz).
+    pub useful_ipc: f64,
+    pub frequency_ghz: f64,
+    /// Average useful instructions per cpu (scaling-mode detection).
+    pub insn_per_cpu: f64,
+}
+
+fn clamp01(x: f64) -> f64 {
+    if x.is_finite() {
+        x.clamp(0.0, 1.0)
+    } else {
+        0.0
+    }
+}
+
+fn ratio(num: f64, den: f64) -> f64 {
+    if den <= 0.0 {
+        0.0
+    } else {
+        num / den
+    }
+}
+
+/// Compute the factor hierarchy for one region of one run.
+pub fn compute(region: &RegionData, nthreads: u32) -> RegionMetrics {
+    let p = region.procs.len().max(1) as f64;
+    let t = nthreads.max(1) as f64;
+    let ncpu = p * t;
+    let e = region.elapsed_s.max(0.0);
+
+    let total_useful: f64 = region.procs.iter().map(|x| x.useful_s).sum();
+    let total_insn: u64 =
+        region.procs.iter().map(|x| x.useful_instructions).sum();
+    let total_cycles: u64 =
+        region.procs.iter().map(|x| x.useful_cycles).sum();
+
+    let out_mpi: Vec<f64> = region
+        .procs
+        .iter()
+        .map(|x| (x.elapsed_s - x.mpi_s).max(0.0))
+        .collect();
+    let max_out = out_mpi.iter().cloned().fold(0.0f64, f64::max);
+    let mean_out = out_mpi.iter().sum::<f64>() / p;
+
+    let pe = clamp01(ratio(total_useful, ncpu * e));
+    let comm_e = clamp01(ratio(max_out, e));
+    let lb = clamp01(ratio(mean_out, max_out));
+    let mpi_pe = clamp01(lb * comm_e);
+
+    // Node grouping for the in/inter split.  Node maxima are weighted by
+    // node population so that `in * inter == LB` holds exactly even for
+    // uneven rank placements:
+    //   inter = Σ_n pop_n * max_n / (P * max_all),  in = mean_p / wmean.
+    let mut node_stats: std::collections::BTreeMap<u32, (f64, u32)> =
+        std::collections::BTreeMap::new();
+    for (proc, &o) in region.procs.iter().zip(&out_mpi) {
+        let ent = node_stats.entry(proc.node).or_insert((0.0, 0));
+        ent.0 = ent.0.max(o);
+        ent.1 += 1;
+    }
+    let weighted_node_max = node_stats
+        .values()
+        .map(|(mx, pop)| mx * *pop as f64)
+        .sum::<f64>()
+        / p;
+    let lb_inter = clamp01(ratio(weighted_node_max, max_out));
+    let lb_in = clamp01(ratio(mean_out, weighted_node_max));
+
+    // OpenMP decomposition over the non-MPI cpu time.
+    let avail: f64 = out_mpi.iter().map(|o| o * t).sum();
+    let serial: f64 =
+        region.procs.iter().map(|x| x.omp_serialization_s).sum();
+    let sched: f64 = region.procs.iter().map(|x| x.omp_scheduling_s).sum();
+    let omp_serial_eff = clamp01(ratio(avail - serial, avail));
+    let omp_sched_eff =
+        clamp01(ratio(avail - serial - sched, avail - serial));
+    let omp_lb = clamp01(ratio(total_useful, avail - serial - sched));
+    let omp_pe = clamp01(omp_serial_eff * omp_sched_eff * omp_lb);
+
+    let ipc = ratio(total_insn as f64, total_cycles as f64);
+    let freq = ratio(total_cycles as f64, total_useful * 1e9);
+
+    RegionMetrics {
+        ncpus: ncpu as u32,
+        nranks: p as u32,
+        nthreads,
+        elapsed_s: e,
+        total_useful_s: total_useful,
+        total_useful_instructions: total_insn,
+        total_useful_cycles: total_cycles,
+        parallel_efficiency: pe,
+        mpi_parallel_efficiency: mpi_pe,
+        mpi_communication_efficiency: comm_e,
+        mpi_load_balance: lb,
+        mpi_load_balance_in: lb_in,
+        mpi_load_balance_inter: lb_inter,
+        omp_parallel_efficiency: omp_pe,
+        omp_load_balance: omp_lb,
+        omp_scheduling_efficiency: omp_sched_eff,
+        omp_serialization_efficiency: omp_serial_eff,
+        useful_ipc: ipc,
+        frequency_ghz: freq,
+        insn_per_cpu: total_insn as f64 / ncpu,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::talp::ProcStats;
+
+    /// Hand-built region: 2 ranks x 2 threads, E = 10 s.
+    /// rank0: useful 36 (of 40 cpu-s), mpi 1;  rank1: useful 30, mpi 3.
+    fn region() -> RegionData {
+        let mk = |rank, node, useful, mpi, serial, sched, barrier| ProcStats {
+            rank,
+            node,
+            elapsed_s: 10.0,
+            useful_s: useful,
+            mpi_s: mpi,
+            mpi_worker_idle_s: mpi,
+            omp_serialization_s: serial,
+            omp_scheduling_s: sched,
+            omp_barrier_s: barrier,
+            useful_instructions: (useful * 1.0e9) as u64,
+            useful_cycles: (useful * 0.5e9) as u64,
+        };
+        RegionData {
+            name: "Global".into(),
+            elapsed_s: 10.0,
+            visits: 1,
+            procs: vec![
+                mk(0, 0, 17.0, 1.0, 0.4, 0.2, 0.4),
+                mk(1, 1, 13.0, 3.0, 0.4, 0.2, 0.4),
+            ],
+        }
+    }
+
+    #[test]
+    fn parallel_efficiency_definition() {
+        let m = compute(&region(), 2);
+        // PE = (17+13) / (4 cpus * 10 s) = 0.75
+        assert!((m.parallel_efficiency - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mpi_hierarchy_multiplies() {
+        let m = compute(&region(), 2);
+        // outMPI = [9, 7]; CommE = 0.9; LB = 8/9
+        assert!((m.mpi_communication_efficiency - 0.9).abs() < 1e-9);
+        assert!((m.mpi_load_balance - 8.0 / 9.0).abs() < 1e-9);
+        assert!(
+            (m.mpi_parallel_efficiency
+                - m.mpi_communication_efficiency * m.mpi_load_balance)
+                .abs()
+                < 1e-9
+        );
+        // ranks on different nodes: inter-node LB carries everything.
+        assert!((m.mpi_load_balance_inter - m.mpi_load_balance).abs() < 1e-9);
+        assert!((m.mpi_load_balance_in - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn same_node_moves_imbalance_in_node() {
+        let mut r = region();
+        r.procs[1].node = 0;
+        let m = compute(&r, 2);
+        assert!((m.mpi_load_balance_inter - 1.0).abs() < 1e-9);
+        assert!((m.mpi_load_balance_in - m.mpi_load_balance).abs() < 1e-9);
+    }
+
+    #[test]
+    fn omp_chain_multiplies_to_pe_over_mpi_pe() {
+        let m = compute(&region(), 2);
+        let chain = m.omp_serialization_efficiency
+            * m.omp_scheduling_efficiency
+            * m.omp_load_balance;
+        assert!((chain - m.omp_parallel_efficiency).abs() < 1e-9);
+        let pe_split = m.mpi_parallel_efficiency * m.omp_parallel_efficiency;
+        assert!(
+            (pe_split - m.parallel_efficiency).abs() < 0.02,
+            "hierarchy should compose: {pe_split} vs {}",
+            m.parallel_efficiency
+        );
+    }
+
+    #[test]
+    fn ipc_and_frequency() {
+        let m = compute(&region(), 2);
+        assert!((m.useful_ipc - 2.0).abs() < 1e-9); // 1e9 insn / 0.5e9 cyc per s
+        assert!((m.frequency_ghz - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn perfect_run_scores_one() {
+        let procs: Vec<ProcStats> = (0..4)
+            .map(|r| ProcStats {
+                rank: r,
+                node: 0,
+                elapsed_s: 10.0,
+                useful_s: 20.0, // 2 threads * 10 s
+                mpi_s: 0.0,
+                ..Default::default()
+            })
+            .collect();
+        let r = RegionData {
+            name: "x".into(),
+            elapsed_s: 10.0,
+            visits: 1,
+            procs,
+        };
+        let m = compute(&r, 2);
+        assert!((m.parallel_efficiency - 1.0).abs() < 1e-9);
+        assert!((m.mpi_parallel_efficiency - 1.0).abs() < 1e-9);
+        assert!((m.omp_parallel_efficiency - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn degenerate_inputs_do_not_panic() {
+        let r = RegionData {
+            name: "empty".into(),
+            elapsed_s: 0.0,
+            visits: 0,
+            procs: vec![ProcStats::default()],
+        };
+        let m = compute(&r, 1);
+        assert_eq!(m.parallel_efficiency, 0.0);
+        assert_eq!(m.useful_ipc, 0.0);
+    }
+
+    #[test]
+    fn efficiencies_bounded_property() {
+        use crate::util::propcheck;
+        propcheck::check("efficiencies in [0,1]", 256, |rng| {
+            let p = 1 + rng.below(6) as usize;
+            let t = 1 + rng.below(8) as u32;
+            let e = rng.range_f64(0.1, 100.0);
+            let procs: Vec<ProcStats> = (0..p)
+                .map(|r| {
+                    let mpi = rng.range_f64(0.0, e * 0.5);
+                    let used = rng.range_f64(0.0, (e - mpi) * t as f64);
+                    ProcStats {
+                        rank: r as u32,
+                        node: rng.below(3) as u32,
+                        elapsed_s: e,
+                        useful_s: used,
+                        mpi_s: mpi,
+                        mpi_worker_idle_s: mpi * (t - 1) as f64,
+                        omp_serialization_s: rng.range_f64(0.0, e),
+                        omp_scheduling_s: rng.range_f64(0.0, e),
+                        omp_barrier_s: rng.range_f64(0.0, e),
+                        useful_instructions: rng.below(1 << 40),
+                        useful_cycles: rng.below(1 << 40) + 1,
+                    }
+                })
+                .collect();
+            let r = RegionData {
+                name: "prop".into(),
+                elapsed_s: e,
+                visits: 1,
+                procs,
+            };
+            let m = compute(&r, t);
+            for (name, v) in [
+                ("PE", m.parallel_efficiency),
+                ("MPI PE", m.mpi_parallel_efficiency),
+                ("CommE", m.mpi_communication_efficiency),
+                ("LB", m.mpi_load_balance),
+                ("LB in", m.mpi_load_balance_in),
+                ("LB inter", m.mpi_load_balance_inter),
+                ("OMP PE", m.omp_parallel_efficiency),
+                ("OMP LB", m.omp_load_balance),
+                ("OMP sched", m.omp_scheduling_efficiency),
+                ("OMP serial", m.omp_serialization_efficiency),
+            ] {
+                if !(0.0..=1.0).contains(&v) {
+                    return Err(format!("{name} = {v} out of [0,1]"));
+                }
+            }
+            // Sub-factors must compose into their parents.
+            let mpi = m.mpi_load_balance * m.mpi_communication_efficiency;
+            if (mpi - m.mpi_parallel_efficiency).abs() > 1e-9 {
+                return Err(format!(
+                    "MPI PE {} != LB*CommE {}",
+                    m.mpi_parallel_efficiency, mpi
+                ));
+            }
+            let inout = m.mpi_load_balance_in * m.mpi_load_balance_inter;
+            if (inout - m.mpi_load_balance).abs() > 1e-6 {
+                return Err(format!(
+                    "LB {} != in*inter {}",
+                    m.mpi_load_balance, inout
+                ));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,12 @@
+//! POP fundamental performance factors [Wagner et al. 2018]: the metric
+//! hierarchy, weak/strong scaling detection and the scaling-efficiency
+//! table (the paper's central visualization).
+
+pub mod extrap;
+pub mod metrics;
+pub mod scaling;
+pub mod table;
+
+pub use metrics::{compute, RegionMetrics};
+pub use scaling::{detect_mode, reference_index, scalability, Scalability, ScalingMode};
+pub use table::{build, Row, ScalingTable};

@@ -1,0 +1,242 @@
+//! Scaling-mode detection and computation-scalability factors.
+//!
+//! Paper §Scaling-efficiency table: "for weak scaling the instructions
+//! executed per CPU are constant.  If this condition is violated, we
+//! detect strong scaling.  The scaling mode only influences the
+//! computation of the instruction scaling."  The reference case is the
+//! configuration with the least resources.
+
+use crate::sim::ResourceConfig;
+
+use super::metrics::RegionMetrics;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScalingMode {
+    Weak,
+    Strong,
+    /// Single configuration — scalabilities are all 1 by definition.
+    Comparison,
+}
+
+impl ScalingMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ScalingMode::Weak => "weak",
+            ScalingMode::Strong => "strong",
+            ScalingMode::Comparison => "comparison",
+        }
+    }
+}
+
+/// Relative (vs-reference) factors for one configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct Scalability {
+    pub instruction_scaling: f64,
+    pub ipc_scaling: f64,
+    pub frequency_scaling: f64,
+    pub computation_scalability: f64,
+    pub global_efficiency: f64,
+}
+
+/// Tolerance on instructions-per-cpu constancy for weak-scaling
+/// detection (fractional deviation from the reference).
+pub const WEAK_TOLERANCE: f64 = 0.2;
+
+/// Pick the reference configuration: least total cpus, then least ranks
+/// (the paper: "the resource configuration with the least resources").
+pub fn reference_index(configs: &[ResourceConfig]) -> usize {
+    configs
+        .iter()
+        .enumerate()
+        .min_by_key(|(_, c)| (c.total_cpus(), c.n_ranks))
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+/// Detect weak vs strong scaling from instructions-per-cpu constancy.
+pub fn detect_mode(metrics: &[RegionMetrics], reference: usize) -> ScalingMode {
+    if metrics.len() < 2 {
+        return ScalingMode::Comparison;
+    }
+    let r = metrics[reference].insn_per_cpu;
+    if r <= 0.0 {
+        return ScalingMode::Strong;
+    }
+    // All configurations at the same cpu count is a comparison, not a
+    // scaling experiment.
+    if metrics.iter().all(|m| m.ncpus == metrics[reference].ncpus) {
+        return ScalingMode::Comparison;
+    }
+    let weak = metrics
+        .iter()
+        .all(|m| ((m.insn_per_cpu - r) / r).abs() <= WEAK_TOLERANCE);
+    if weak {
+        ScalingMode::Weak
+    } else {
+        ScalingMode::Strong
+    }
+}
+
+/// Compute the scalability column for `m` against `reference`.
+pub fn scalability(
+    m: &RegionMetrics,
+    reference: &RegionMetrics,
+    mode: ScalingMode,
+) -> Scalability {
+    let insn_ref = reference.total_useful_instructions as f64;
+    let insn = m.total_useful_instructions as f64;
+    let instruction_scaling = match mode {
+        // Weak: per-cpu instructions should stay constant.
+        ScalingMode::Weak | ScalingMode::Comparison => {
+            safe_ratio(reference.insn_per_cpu, m.insn_per_cpu)
+        }
+        // Strong: total instructions should stay constant.
+        ScalingMode::Strong => safe_ratio(insn_ref, insn),
+    };
+    let ipc_scaling = safe_ratio(m.useful_ipc, reference.useful_ipc);
+    let frequency_scaling =
+        safe_ratio(m.frequency_ghz, reference.frequency_ghz);
+    let computation_scalability =
+        instruction_scaling * ipc_scaling * frequency_scaling;
+    Scalability {
+        instruction_scaling,
+        ipc_scaling,
+        frequency_scaling,
+        computation_scalability,
+        global_efficiency: m.parallel_efficiency * computation_scalability,
+    }
+}
+
+fn safe_ratio(a: f64, b: f64) -> f64 {
+    if b <= 0.0 || !a.is_finite() || !b.is_finite() {
+        0.0
+    } else {
+        a / b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn metric(ncpus: u32, insn: u64, ipc: f64, freq: f64, pe: f64) -> RegionMetrics {
+        RegionMetrics {
+            ncpus,
+            nranks: ncpus,
+            nthreads: 1,
+            elapsed_s: 1.0,
+            total_useful_s: 1.0,
+            total_useful_instructions: insn,
+            total_useful_cycles: 1,
+            parallel_efficiency: pe,
+            mpi_parallel_efficiency: pe,
+            mpi_communication_efficiency: 1.0,
+            mpi_load_balance: 1.0,
+            mpi_load_balance_in: 1.0,
+            mpi_load_balance_inter: 1.0,
+            omp_parallel_efficiency: 1.0,
+            omp_load_balance: 1.0,
+            omp_scheduling_efficiency: 1.0,
+            omp_serialization_efficiency: 1.0,
+            useful_ipc: ipc,
+            frequency_ghz: freq,
+            insn_per_cpu: insn as f64 / ncpus as f64,
+        }
+    }
+
+    #[test]
+    fn reference_is_least_resources() {
+        let cfgs = vec![
+            ResourceConfig::new(8, 56),
+            ResourceConfig::new(2, 56),
+            ResourceConfig::new(4, 56),
+        ];
+        assert_eq!(reference_index(&cfgs), 1);
+    }
+
+    #[test]
+    fn reference_tie_breaks_on_ranks() {
+        let cfgs = vec![
+            ResourceConfig::new(112, 1),
+            ResourceConfig::new(2, 56),
+        ];
+        assert_eq!(reference_index(&cfgs), 1);
+    }
+
+    #[test]
+    fn strong_scaling_detected_when_total_insn_constant() {
+        // total instructions constant -> per-cpu drops with cpus.
+        let ms = vec![
+            metric(112, 1_000_000, 1.0, 2.0, 0.9),
+            metric(224, 1_000_000, 1.0, 2.0, 0.8),
+        ];
+        assert_eq!(detect_mode(&ms, 0), ScalingMode::Strong);
+    }
+
+    #[test]
+    fn weak_scaling_detected_when_per_cpu_constant() {
+        let ms = vec![
+            metric(112, 1_000_000, 1.0, 2.0, 0.9),
+            metric(448, 4_100_000, 1.0, 2.0, 0.85), // ~constant per cpu
+        ];
+        assert_eq!(detect_mode(&ms, 0), ScalingMode::Weak);
+    }
+
+    #[test]
+    fn same_resources_is_comparison() {
+        let ms = vec![
+            metric(112, 1_000_000, 1.0, 2.0, 0.9),
+            metric(112, 1_200_000, 1.0, 2.0, 0.9),
+        ];
+        assert_eq!(detect_mode(&ms, 0), ScalingMode::Comparison);
+    }
+
+    #[test]
+    fn strong_scalability_factors() {
+        let r = metric(112, 1_000_000, 1.0, 2.0, 0.9);
+        // 2x cpus, 5% more instructions, ipc x3, freq x0.88
+        let m = metric(224, 1_050_000, 3.0, 1.76, 0.8);
+        let s = scalability(&m, &r, ScalingMode::Strong);
+        assert!((s.instruction_scaling - 1.0 / 1.05).abs() < 1e-9);
+        assert!((s.ipc_scaling - 3.0).abs() < 1e-9);
+        assert!((s.frequency_scaling - 0.88).abs() < 1e-9);
+        assert!(
+            (s.computation_scalability
+                - (1.0 / 1.05) * 3.0 * 0.88)
+                .abs()
+                < 1e-9
+        );
+        assert!((s.global_efficiency - 0.8 * s.computation_scalability).abs() < 1e-9);
+    }
+
+    #[test]
+    fn weak_scalability_uses_per_cpu_instructions() {
+        let r = metric(112, 1_000_000, 1.0, 2.0, 0.9);
+        let m = metric(224, 2_400_000, 1.0, 2.0, 0.85); // 20% extra/cpu
+        let s = scalability(&m, &r, ScalingMode::Weak);
+        let per_cpu_ref = 1_000_000.0 / 112.0;
+        let per_cpu_m = 2_400_000.0 / 224.0;
+        assert!((s.instruction_scaling - per_cpu_ref / per_cpu_m).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reference_scales_to_one() {
+        let r = metric(112, 1_000_000, 1.3, 2.1, 0.9);
+        for mode in [ScalingMode::Weak, ScalingMode::Strong] {
+            let s = scalability(&r, &r, mode);
+            assert!((s.instruction_scaling - 1.0).abs() < 1e-12);
+            assert!((s.ipc_scaling - 1.0).abs() < 1e-12);
+            assert!((s.frequency_scaling - 1.0).abs() < 1e-12);
+            assert!((s.global_efficiency - 0.9).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn zero_reference_is_safe() {
+        let r = metric(112, 0, 0.0, 0.0, 0.9);
+        let m = metric(224, 10, 1.0, 1.0, 0.8);
+        let s = scalability(&m, &r, ScalingMode::Strong);
+        assert_eq!(s.ipc_scaling, 0.0);
+        assert!(s.computation_scalability.is_finite());
+    }
+}

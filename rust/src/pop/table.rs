@@ -1,0 +1,399 @@
+//! The scaling-efficiency table (paper Fig. 3, Tables 6 & 7).
+//!
+//! One table per experiment folder: columns are resource configurations
+//! (ordered by resources, reference first), rows are the POP factor
+//! hierarchy plus the absolute IPC / frequency / elapsed-time footer.
+//! Hybrid runs get the full MPI+OpenMP hierarchy; MPI-only runs (threads
+//! == 1) get the compact Fig. 3 layout.
+
+use crate::sim::ResourceConfig;
+use crate::talp::RunData;
+
+use super::metrics::{self, RegionMetrics};
+use super::scaling::{self, ScalingMode};
+
+/// One rendered cell: a value or "-" (e.g. CPT's missing counters).
+pub type Cell = Option<f64>;
+
+/// Indentation level for a row (the hierarchy in the paper's tables).
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub label: String,
+    pub depth: usize,
+    pub cells: Vec<Cell>,
+    /// Footer rows (IPC, GHz, seconds) are not efficiencies.
+    pub is_footer: bool,
+}
+
+/// The scaling-efficiency table for one region.
+#[derive(Debug, Clone)]
+pub struct ScalingTable {
+    pub region: String,
+    pub mode: ScalingMode,
+    pub columns: Vec<String>,
+    pub rows: Vec<Row>,
+}
+
+/// Build the table for `region` from one run per configuration.
+/// Runs are reordered by resources; the least-resource run is the
+/// reference.  Returns None when the region is absent everywhere.
+pub fn build(region: &str, runs: &[&RunData]) -> Option<ScalingTable> {
+    let mut items: Vec<(&RunData, RegionMetrics)> = runs
+        .iter()
+        .filter_map(|r| {
+            r.region(region)
+                .map(|reg| (*r, metrics::compute(reg, r.threads)))
+        })
+        .collect();
+    if items.is_empty() {
+        return None;
+    }
+    items.sort_by_key(|(r, _)| {
+        (r.resources().total_cpus(), r.ranks, r.threads)
+    });
+    let configs: Vec<ResourceConfig> =
+        items.iter().map(|(r, _)| r.resources()).collect();
+    let ms: Vec<RegionMetrics> = items.iter().map(|(_, m)| *m).collect();
+    let reference = scaling::reference_index(&configs);
+    let mode = scaling::detect_mode(&ms, reference);
+    let scal: Vec<scaling::Scalability> = ms
+        .iter()
+        .map(|m| scaling::scalability(m, &ms[reference], mode))
+        .collect();
+
+    let hybrid = items.iter().any(|(r, _)| r.threads > 1);
+    let n = items.len();
+    let col = |f: &dyn Fn(usize) -> Cell| -> Vec<Cell> {
+        (0..n).map(f).collect()
+    };
+
+    let mut rows: Vec<Row> = Vec::new();
+    let mut push = |label: &str, depth: usize, cells: Vec<Cell>, footer: bool| {
+        rows.push(Row {
+            label: label.to_string(),
+            depth,
+            cells,
+            is_footer: footer,
+        });
+    };
+
+    push(
+        "Global efficiency",
+        0,
+        col(&|i| Some(scal[i].global_efficiency)),
+        false,
+    );
+    push(
+        "Parallel efficiency",
+        1,
+        col(&|i| Some(ms[i].parallel_efficiency)),
+        false,
+    );
+    if hybrid {
+        push(
+            "MPI Parallel efficiency",
+            2,
+            col(&|i| Some(ms[i].mpi_parallel_efficiency)),
+            false,
+        );
+        push(
+            "MPI Communication efficiency",
+            3,
+            col(&|i| Some(ms[i].mpi_communication_efficiency)),
+            false,
+        );
+        push(
+            "MPI Load balance",
+            3,
+            col(&|i| Some(ms[i].mpi_load_balance)),
+            false,
+        );
+        push(
+            "MPI In-node load balance",
+            4,
+            col(&|i| Some(ms[i].mpi_load_balance_in)),
+            false,
+        );
+        push(
+            "MPI Inter-node load balance",
+            4,
+            col(&|i| Some(ms[i].mpi_load_balance_inter)),
+            false,
+        );
+        push(
+            "OpenMP Parallel efficiency",
+            2,
+            col(&|i| Some(ms[i].omp_parallel_efficiency)),
+            false,
+        );
+        push(
+            "OpenMP Load balance",
+            3,
+            col(&|i| Some(ms[i].omp_load_balance)),
+            false,
+        );
+        push(
+            "OpenMP Scheduling efficiency",
+            3,
+            col(&|i| Some(ms[i].omp_scheduling_efficiency)),
+            false,
+        );
+        push(
+            "OpenMP Serialization efficiency",
+            3,
+            col(&|i| Some(ms[i].omp_serialization_efficiency)),
+            false,
+        );
+    } else {
+        // MPI-only compact layout (paper Fig. 3).
+        push(
+            "MPI Parallel efficiency",
+            2,
+            col(&|i| Some(ms[i].mpi_parallel_efficiency)),
+            false,
+        );
+        push(
+            "MPI Communication efficiency",
+            3,
+            col(&|i| Some(ms[i].mpi_communication_efficiency)),
+            false,
+        );
+        push(
+            "MPI Load balance",
+            3,
+            col(&|i| Some(ms[i].mpi_load_balance)),
+            false,
+        );
+        push(
+            "MPI In-node load balance",
+            4,
+            col(&|i| Some(ms[i].mpi_load_balance_in)),
+            false,
+        );
+        push(
+            "MPI Inter-node load balance",
+            4,
+            col(&|i| Some(ms[i].mpi_load_balance_inter)),
+            false,
+        );
+    }
+    push(
+        "Computation scalability",
+        1,
+        col(&|i| Some(scal[i].computation_scalability)),
+        false,
+    );
+    push(
+        "Instructions scaling",
+        2,
+        col(&|i| Some(scal[i].instruction_scaling)),
+        false,
+    );
+    push(
+        "IPC scaling",
+        2,
+        col(&|i| Some(scal[i].ipc_scaling)),
+        false,
+    );
+    push(
+        "Frequency scaling",
+        2,
+        col(&|i| Some(scal[i].frequency_scaling)),
+        false,
+    );
+    push("Useful IPC", 0, col(&|i| Some(ms[i].useful_ipc)), true);
+    push(
+        "Frequency [GHz]",
+        0,
+        col(&|i| Some(ms[i].frequency_ghz)),
+        true,
+    );
+    push(
+        "Elapsed time [s]",
+        0,
+        col(&|i| Some(ms[i].elapsed_s)),
+        true,
+    );
+
+    Some(ScalingTable {
+        region: region.to_string(),
+        mode,
+        columns: configs.iter().map(|c| c.label()).collect(),
+        rows,
+    })
+}
+
+impl ScalingTable {
+    /// Insert a row right after the row labelled `after` (tool-specific
+    /// extensions like the BSC/CPT transfer/serialization split).
+    pub fn insert_after(&mut self, after: &str, row: Row) {
+        let pos = self
+            .rows
+            .iter()
+            .position(|r| r.label == after)
+            .map(|i| i + 1)
+            .unwrap_or(self.rows.len());
+        self.rows.insert(pos, row);
+    }
+
+    /// Blank a row's cells (CPT's missing hardware counters).
+    pub fn blank_row(&mut self, label: &str) {
+        if let Some(r) = self.rows.iter_mut().find(|r| r.label == label) {
+            for c in &mut r.cells {
+                *c = None;
+            }
+        }
+    }
+
+    pub fn cell(&self, label: &str, column: usize) -> Option<f64> {
+        self.rows
+            .iter()
+            .find(|r| r.label == label)
+            .and_then(|r| r.cells.get(column).copied().flatten())
+    }
+
+    /// Format a value the way the paper does (2 decimals, footer rows
+    /// adaptive).
+    pub fn fmt_cell(v: Cell, footer: bool) -> String {
+        match v {
+            None => "-".to_string(),
+            Some(x) if footer && x >= 100.0 => format!("{x:.1}"),
+            Some(x) => format!("{x:.2}"),
+        }
+    }
+
+    /// Plain-text rendering (benches / CLI).
+    pub fn render_text(&self) -> String {
+        let mut t = crate::util::bench::Table::new(
+            &format!(
+                "Scaling-efficiency table — region '{}' ({} scaling)",
+                self.region,
+                self.mode.name()
+            ),
+            &std::iter::once("Metrics")
+                .chain(self.columns.iter().map(|s| s.as_str()))
+                .collect::<Vec<_>>(),
+        );
+        for row in &self.rows {
+            let mut cells =
+                vec![format!("{}{}", "  ".repeat(row.depth), row.label)];
+            cells.extend(
+                row.cells
+                    .iter()
+                    .map(|c| Self::fmt_cell(*c, row.is_footer)),
+            );
+            t.row(&cells);
+        }
+        t.render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::talp::{ProcStats, RegionData};
+
+    fn run(ranks: u32, threads: u32, useful_per_rank: f64, e: f64, insn: u64) -> RunData {
+        let procs = (0..ranks)
+            .map(|r| ProcStats {
+                rank: r,
+                node: 0,
+                elapsed_s: e,
+                useful_s: useful_per_rank,
+                mpi_s: 0.05 * e,
+                mpi_worker_idle_s: 0.05 * e * (threads - 1) as f64,
+                omp_serialization_s: 0.01 * e,
+                omp_scheduling_s: 0.01 * e,
+                omp_barrier_s: 0.02 * e,
+                useful_instructions: insn / ranks as u64,
+                useful_cycles: insn / ranks as u64 / 2,
+            })
+            .collect();
+        RunData {
+            dlb_version: "t".into(),
+            app: "t".into(),
+            machine: "mn5".into(),
+            timestamp: 0,
+            ranks,
+            threads,
+            nodes: 1,
+            regions: vec![RegionData {
+                name: "Global".into(),
+                elapsed_s: e,
+                visits: 1,
+                procs,
+            }],
+            git: None,
+        }
+    }
+
+    #[test]
+    fn builds_hybrid_table_with_all_rows() {
+        let a = run(2, 4, 7.0, 2.0, 1_000_000);
+        let b = run(4, 4, 3.2, 1.1, 1_050_000);
+        let t = build("Global", &[&a, &b]).unwrap();
+        assert_eq!(t.columns, vec!["2x4", "4x4"]);
+        assert_eq!(t.mode, ScalingMode::Strong);
+        for label in [
+            "Global efficiency",
+            "Parallel efficiency",
+            "MPI Parallel efficiency",
+            "OpenMP Parallel efficiency",
+            "OpenMP Serialization efficiency",
+            "Computation scalability",
+            "Instructions scaling",
+            "IPC scaling",
+            "Frequency scaling",
+            "Useful IPC",
+            "Frequency [GHz]",
+            "Elapsed time [s]",
+        ] {
+            assert!(
+                t.cell(label, 0).is_some(),
+                "missing row {label}"
+            );
+        }
+        // Reference column scales to 1.
+        assert!((t.cell("Instructions scaling", 0).unwrap() - 1.0).abs() < 1e-9);
+        assert!((t.cell("IPC scaling", 0).unwrap() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mpi_only_table_drops_openmp_rows() {
+        let a = run(112, 1, 1.8, 2.0, 1_000_000);
+        let b = run(224, 1, 0.8, 1.0, 1_100_000);
+        let t = build("Global", &[&a, &b]).unwrap();
+        assert!(t.rows.iter().all(|r| !r.label.contains("OpenMP")));
+        assert!(t.cell("MPI In-node load balance", 0).is_some());
+    }
+
+    #[test]
+    fn columns_sorted_reference_first() {
+        let a = run(8, 4, 1.0, 1.0, 1_000_000);
+        let b = run(2, 4, 4.0, 4.0, 1_000_000);
+        let t = build("Global", &[&a, &b]).unwrap();
+        assert_eq!(t.columns, vec!["2x4", "8x4"]);
+    }
+
+    #[test]
+    fn absent_region_returns_none() {
+        let a = run(2, 4, 1.0, 1.0, 100);
+        assert!(build("initialize", &[&a]).is_none());
+    }
+
+    #[test]
+    fn render_text_contains_values() {
+        let a = run(2, 4, 7.0, 2.0, 1_000_000);
+        let txt = build("Global", &[&a]).unwrap().render_text();
+        assert!(txt.contains("Global efficiency"));
+        assert!(txt.contains("2x4"));
+        assert!(txt.contains("Elapsed time [s]"));
+    }
+
+    #[test]
+    fn fmt_cell_styles() {
+        assert_eq!(ScalingTable::fmt_cell(None, false), "-");
+        assert_eq!(ScalingTable::fmt_cell(Some(0.904), false), "0.90");
+        assert_eq!(ScalingTable::fmt_cell(Some(531.38), true), "531.4");
+    }
+}

@@ -1,0 +1,121 @@
+//! Counter-model calibration against the real AOT executables.
+//!
+//! Runs the compiled Pallas CG on small subdomains, validates numerics
+//! against the rust-native reference, and measures seconds-per-flop of
+//! the real kernel.  The validation result anchors the simulator's
+//! counter model to the actual compiled code (DESIGN.md §7); the
+//! measured CPU timings are *not* used as a TPU/SPR proxy — only the
+//! flop accounting is.
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+use super::client::XlaRuntime;
+use super::native;
+use super::registry::Registry;
+
+#[derive(Debug, Clone)]
+pub struct Calibration {
+    pub platform: String,
+    /// Max |x - x_ref| over validated CG solves.
+    pub max_abs_err: f64,
+    /// Residual drop of the compiled solver (rr_last / rr_first).
+    pub residual_drop: f64,
+    /// Wall seconds per analytic flop of the compiled kernel on this
+    /// host (diagnostic only).
+    pub sec_per_flop: f64,
+    pub artifacts_validated: usize,
+}
+
+impl Calibration {
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("platform", Json::Str(self.platform.clone())),
+            ("max_abs_err", Json::Num(self.max_abs_err)),
+            ("residual_drop", Json::Num(self.residual_drop)),
+            ("sec_per_flop", Json::Num(self.sec_per_flop)),
+            (
+                "artifacts_validated",
+                Json::Num(self.artifacts_validated as f64),
+            ),
+        ])
+    }
+}
+
+/// Validate every cg_solve artifact and time the smallest one.
+pub fn run(registry: &Registry) -> Result<Calibration> {
+    let mut rt = XlaRuntime::cpu()?;
+    let mut max_err = 0.0f64;
+    let mut residual_drop = 1.0f64;
+    let mut validated = 0usize;
+    let mut sec_per_flop = 0.0f64;
+
+    let cgs: Vec<_> = registry
+        .artifacts
+        .iter()
+        .filter(|a| a.entry == "cg_solve")
+        .collect();
+    anyhow::ensure!(!cgs.is_empty(), "no cg_solve artifacts in registry");
+
+    for meta in &cgs {
+        rt.load(meta)?;
+        let (h, w) = (meta.h as usize, meta.w as usize);
+        let b = native::Grid::initial_condition(h, w);
+        let c = native::build_coefficients(h, w, 0.5, 1.0);
+        let inputs: Vec<(&[f32], Vec<i64>)> = vec![
+            (&b.data, vec![h as i64, w as i64]),
+            (&c.kx.data, vec![h as i64, (w + 1) as i64]),
+            (&c.ky.data, vec![h as i64, w as i64]),
+            (&c.d.data, vec![h as i64, w as i64]),
+        ];
+        let args: Vec<(&[f32], &[i64])> = inputs
+            .iter()
+            .map(|(d, s)| (*d, s.as_slice()))
+            .collect();
+        let t0 = std::time::Instant::now();
+        let out = rt
+            .execute(&meta.name, &args)
+            .with_context(|| format!("executing {}", meta.name))?;
+        let dt = t0.elapsed().as_secs_f64();
+        if sec_per_flop == 0.0 {
+            sec_per_flop = dt / meta.flops as f64;
+        }
+        let (x_ref, _) = native::cg_solve(&b, &c, meta.iters as usize);
+        for k in 0..out[0].data.len() {
+            max_err = max_err
+                .max((out[0].data[k] - x_ref.data[k]).abs() as f64);
+        }
+        let hist = &out[1].data;
+        residual_drop = residual_drop
+            .min(hist[hist.len() - 1] as f64 / hist[0].max(1e-30) as f64);
+        validated += 1;
+    }
+    Ok(Calibration {
+        platform: rt.platform(),
+        max_abs_err: max_err,
+        residual_drop,
+        sec_per_flop,
+        artifacts_validated: validated,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calibration_validates_all_cg_artifacts() {
+        let Some(reg) = Registry::open_default() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let cal = run(&reg).expect("calibration");
+        assert!(cal.artifacts_validated >= 3);
+        assert!(cal.max_abs_err < 5e-3, "err {}", cal.max_abs_err);
+        assert!(cal.residual_drop < 1e-6, "drop {}", cal.residual_drop);
+        assert!(cal.sec_per_flop > 0.0);
+        let j = cal.to_json().to_string_compact();
+        assert!(j.contains("residual_drop"));
+    }
+}

@@ -1,0 +1,249 @@
+//! PJRT client wrapper: load HLO text produced by `compile.aot`, compile
+//! on the CPU PJRT client, execute with f32 grids.
+//!
+//! HLO **text** is the interchange format (not serialized protos): jax
+//! >= 0.5 emits 64-bit instruction ids that xla_extension 0.5.1 rejects;
+//! the text parser reassigns ids (see /opt/xla-example/README.md).
+//! Python never runs on this path — the binary is self-contained once
+//! `make artifacts` has produced the files.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::registry::ArtifactMeta;
+
+/// Owns the PJRT client and a cache of compiled executables.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+/// A f32 tensor result.
+#[derive(Debug, Clone)]
+pub struct HostTensor {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl XlaRuntime {
+    pub fn cpu() -> Result<XlaRuntime> {
+        let client =
+            xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(XlaRuntime { client, cache: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) an artifact.
+    pub fn load(&mut self, meta: &ArtifactMeta) -> Result<()> {
+        if self.cache.contains_key(&meta.name) {
+            return Ok(());
+        }
+        let exe = self.compile_file(&meta.file)?;
+        self.cache.insert(meta.name.clone(), exe);
+        Ok(())
+    }
+
+    fn compile_file(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))
+    }
+
+    /// Execute a cached artifact with f32 inputs of the given shapes.
+    /// Returns the flattened tuple outputs.
+    pub fn execute(
+        &self,
+        name: &str,
+        inputs: &[(&[f32], &[i64])],
+    ) -> Result<Vec<HostTensor>> {
+        let exe = self
+            .cache
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not loaded"))?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, dims)| {
+                let lit = xla::Literal::vec1(data);
+                if dims.len() == 1 && dims[0] as usize == data.len() {
+                    Ok(lit)
+                } else {
+                    lit.reshape(dims).map_err(|e| anyhow::anyhow!("{e:?}"))
+                }
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: unpack the tuple.
+        let parts = result
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("to_tuple: {e:?}"))?;
+        parts
+            .into_iter()
+            .map(|lit| {
+                let shape = lit
+                    .array_shape()
+                    .map_err(|e| anyhow::anyhow!("shape: {e:?}"))?;
+                let dims: Vec<usize> =
+                    shape.dims().iter().map(|&d| d as usize).collect();
+                let data = lit
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))?;
+                Ok(HostTensor { dims, data })
+            })
+            .collect()
+    }
+
+    pub fn loaded(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.cache.keys().map(|s| s.as_str()).collect();
+        v.sort();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::native;
+    use crate::runtime::registry::Registry;
+
+    /// Full AOT round-trip: python-lowered Pallas CG vs the rust-native
+    /// reference.  Skipped (with a notice) when artifacts are missing.
+    #[test]
+    fn cg_solve_artifact_matches_native_reference() {
+        let Some(reg) = Registry::open_default() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let meta = reg.find("cg_solve", 64, 64).expect("cg artifact");
+        let mut rt = XlaRuntime::cpu().expect("pjrt cpu");
+        rt.load(meta).expect("compile");
+
+        let (h, w) = (64usize, 64usize);
+        let b = native::Grid::initial_condition(h, w);
+        let c = native::build_coefficients(h, w, 0.5, 1.0);
+        // ky grid for python layout: (h, w) north faces; kx (h, w+1).
+        let out = rt
+            .execute(
+                &meta.name,
+                &[
+                    (&b.data, &[h as i64, w as i64]),
+                    (&c.kx.data, &[h as i64, (w + 1) as i64]),
+                    (&c.ky.data, &[h as i64, w as i64]),
+                    (&c.d.data, &[h as i64, w as i64]),
+                ],
+            )
+            .expect("execute");
+        assert_eq!(out.len(), 2, "x and rr_hist");
+        let x = &out[0];
+        let hist = &out[1];
+        assert_eq!(x.dims, vec![h, w]);
+        assert_eq!(hist.dims, vec![meta.iters as usize]);
+
+        let (x_ref, hist_ref) = native::cg_solve(&b, &c, meta.iters as usize);
+        // Converged solutions agree.
+        let mut max_err = 0.0f32;
+        for k in 0..x.data.len() {
+            max_err = max_err.max((x.data[k] - x_ref.data[k]).abs());
+        }
+        assert!(max_err < 2e-3, "max |x - x_ref| = {max_err}");
+        // Residual curve drops by many orders and tracks the native one.
+        assert!(hist.data[hist.data.len() - 1] < 1e-6 * hist.data[0]);
+        let mid = hist.data.len() / 2;
+        let rel = (hist.data[mid] as f64 - hist_ref[mid]).abs()
+            / hist_ref[mid].max(1e-30);
+        assert!(rel < 0.15, "mid-curve rel err {rel}");
+    }
+
+    /// Distributed matvec: two ranks exchanging halo rows through the
+    /// coordinator reproduce the single-domain operator.
+    #[test]
+    fn matvec_halo_artifact_supports_distributed_exchange() {
+        let Some(reg) = Registry::open_default() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let meta = reg.find("matvec_halo", 64, 64).expect("matvec artifact");
+        let mut rt = XlaRuntime::cpu().expect("pjrt cpu");
+        rt.load(meta).expect("compile");
+
+        let (h, w) = (128usize, 64usize); // 2 stacked 64x64 subdomains
+        let p = native::Grid::initial_condition(h, w);
+        let c = native::build_coefficients(h, w, 0.5, 1.0);
+        let full = native::apply_operator(&p, &c);
+
+        let half = h / 2;
+        let run_rank = |top: bool| -> Vec<f32> {
+            let rows = if top { 0..half } else { half..h };
+            let slice =
+                |g: &native::Grid, w_: usize| -> Vec<f32> {
+                    rows.clone()
+                        .flat_map(|i| {
+                            (0..w_).map(move |j| g.at(i, j))
+                        })
+                        .collect()
+                };
+            let p_loc = slice(&p, w);
+            let kx_loc = slice(&c.kx, w + 1);
+            let ky_loc = slice(&c.ky, w);
+            let d_loc = slice(&c.d, w);
+            // Halo exchange (what the coordinator does between ranks):
+            let zero = vec![0.0f32; w];
+            let north: Vec<f32> = if top {
+                zero.clone()
+            } else {
+                (0..w).map(|j| p.at(half - 1, j)).collect()
+            };
+            let south: Vec<f32> = if top {
+                (0..w).map(|j| p.at(half, j)).collect()
+            } else {
+                zero.clone()
+            };
+            // ky face below the last local row (owned by the neighbour).
+            let ky_bottom: Vec<f32> = if top {
+                (0..w).map(|j| c.ky.at(half, j)).collect()
+            } else {
+                zero
+            };
+            let out = rt
+                .execute(
+                    &meta.name,
+                    &[
+                        (&p_loc, &[half as i64, w as i64]),
+                        (&north, &[w as i64]),
+                        (&south, &[w as i64]),
+                        (&kx_loc, &[half as i64, (w + 1) as i64]),
+                        (&ky_loc, &[half as i64, w as i64]),
+                        (&ky_bottom, &[w as i64]),
+                        (&d_loc, &[half as i64, w as i64]),
+                    ],
+                )
+                .expect("execute");
+            out[0].data.clone()
+        };
+        let top = run_rank(true);
+        let bot = run_rank(false);
+        let mut max_err = 0.0f32;
+        for i in 0..half {
+            for j in 0..w {
+                max_err = max_err
+                    .max((top[i * w + j] - full.at(i, j)).abs());
+                max_err = max_err
+                    .max((bot[i * w + j] - full.at(half + i, j)).abs());
+            }
+        }
+        assert!(max_err < 1e-4, "distributed != fused, err {max_err}");
+    }
+}

@@ -1,0 +1,17 @@
+//! PJRT runtime: loads the AOT artifacts (`make artifacts`) and runs
+//! them from rust — python never executes at report/serve time.
+//!
+//! * [`registry`]  — manifest.json discovery and (entry, shape) lookup.
+//! * [`client`]    — HLO-text → compile → execute on the CPU PJRT client.
+//! * [`native`]    — rust-native reference numerics (cross-validation).
+//! * [`calibrate`] — validates artifacts vs the native reference and
+//!   anchors the simulator's counter model.
+
+pub mod calibrate;
+pub mod client;
+pub mod native;
+pub mod registry;
+
+pub use calibrate::Calibration;
+pub use client::{HostTensor, XlaRuntime};
+pub use registry::{ArtifactMeta, Registry};

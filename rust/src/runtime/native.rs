@@ -1,0 +1,195 @@
+//! Rust-native f32 reference implementation of the stencil operator and
+//! CG solve — the cross-language oracle that validates what the PJRT
+//! runtime executes (python's ref.py validated the Pallas kernel; this
+//! validates the full AOT→HLO→PJRT round trip from the rust side).
+//!
+//! Mirrors python/compile/kernels/ref.py exactly (same operator, same
+//! coefficient construction, same fixed-iteration CG).
+
+/// Dense row-major f32 grid.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Grid {
+    pub h: usize,
+    pub w: usize,
+    pub data: Vec<f32>,
+}
+
+impl Grid {
+    pub fn zeros(h: usize, w: usize) -> Grid {
+        Grid { h, w, data: vec![0.0; h * w] }
+    }
+
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.w + j]
+    }
+
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * self.w + j] = v;
+    }
+
+    /// The deterministic smooth-bump initial field (must match
+    /// model.initial_condition in python).
+    pub fn initial_condition(h: usize, w: usize) -> Grid {
+        let mut g = Grid::zeros(h, w);
+        for i in 0..h {
+            for j in 0..w {
+                let x = i as f32 / h as f32;
+                let y = j as f32 / w as f32;
+                let v = (core::f32::consts::PI * x).sin()
+                    * (core::f32::consts::PI * y).sin()
+                    + 0.1 * (9.0 * x * y).sin();
+                g.set(i, j, v);
+            }
+        }
+        g
+    }
+}
+
+/// TeaLeaf-style coefficients (ref.build_coefficients).
+pub struct Coefficients {
+    /// (h, w+1): x faces.
+    pub kx: Grid,
+    /// (h, w): north faces (ky[0] = physical boundary = 0).
+    pub ky: Grid,
+    /// (h, w): diagonal.
+    pub d: Grid,
+}
+
+pub fn build_coefficients(h: usize, w: usize, dt: f32, conductivity: f32) -> Coefficients {
+    let mut kx = Grid::zeros(h, w + 1);
+    let mut ky = Grid::zeros(h, w);
+    let k = dt * conductivity;
+    for i in 0..h {
+        for j in 0..=w {
+            let v = if j == 0 || j == w { 0.0 } else { k };
+            kx.set(i, j, v);
+        }
+        for j in 0..w {
+            ky.set(i, j, if i == 0 { 0.0 } else { k });
+        }
+    }
+    let mut d = Grid::zeros(h, w);
+    for i in 0..h {
+        for j in 0..w {
+            let ky_south = if i + 1 < h { ky.at(i + 1, j) } else { 0.0 };
+            d.set(
+                i,
+                j,
+                1.0 + kx.at(i, j) + kx.at(i, j + 1) + ky.at(i, j) + ky_south,
+            );
+        }
+    }
+    Coefficients { kx, ky, d }
+}
+
+/// Apply the operator: out = A p  (Dirichlet-zero ghosts).
+pub fn apply_operator(p: &Grid, c: &Coefficients) -> Grid {
+    let (h, w) = (p.h, p.w);
+    let mut out = Grid::zeros(h, w);
+    for i in 0..h {
+        for j in 0..w {
+            let north = if i > 0 { p.at(i - 1, j) } else { 0.0 };
+            let south = if i + 1 < h { p.at(i + 1, j) } else { 0.0 };
+            let west = if j > 0 { p.at(i, j - 1) } else { 0.0 };
+            let east = if j + 1 < w { p.at(i, j + 1) } else { 0.0 };
+            let ky_south = if i + 1 < h { c.ky.at(i + 1, j) } else { 0.0 };
+            out.set(
+                i,
+                j,
+                c.d.at(i, j) * p.at(i, j)
+                    - c.ky.at(i, j) * north
+                    - ky_south * south
+                    - c.kx.at(i, j) * west
+                    - c.kx.at(i, j + 1) * east,
+            );
+        }
+    }
+    out
+}
+
+fn dot(a: &Grid, b: &Grid) -> f64 {
+    a.data
+        .iter()
+        .zip(&b.data)
+        .map(|(x, y)| *x as f64 * *y as f64)
+        .sum()
+}
+
+/// Fixed-iteration CG; returns (x, rr_history).
+pub fn cg_solve(b: &Grid, c: &Coefficients, n_iters: usize) -> (Grid, Vec<f64>) {
+    let mut x = Grid::zeros(b.h, b.w);
+    let mut r = b.clone();
+    let mut p = b.clone();
+    let mut rr = dot(&r, &r);
+    let mut hist = Vec::with_capacity(n_iters);
+    for _ in 0..n_iters {
+        let ap = apply_operator(&p, c);
+        let alpha = rr / dot(&p, &ap);
+        for k in 0..x.data.len() {
+            x.data[k] += (alpha * p.data[k] as f64) as f32;
+            r.data[k] -= (alpha * ap.data[k] as f64) as f32;
+        }
+        let rr_new = dot(&r, &r);
+        let beta = rr_new / rr;
+        for k in 0..p.data.len() {
+            p.data[k] = r.data[k] + (beta * p.data[k] as f64) as f32;
+        }
+        rr = rr_new;
+        hist.push(rr_new);
+    }
+    (x, hist)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn operator_is_spd_on_builtin_coefficients() {
+        let (h, w) = (16, 16);
+        let c = build_coefficients(h, w, 0.5, 1.0);
+        let p = Grid::initial_condition(h, w);
+        let ap = apply_operator(&p, &c);
+        // <p, Ap> > 0
+        assert!(dot(&p, &ap) > 0.0);
+        // symmetry: <Ap, q> == <p, Aq>
+        let mut q = Grid::zeros(h, w);
+        for (k, v) in q.data.iter_mut().enumerate() {
+            *v = ((k * 2654435761) % 1000) as f32 / 1000.0 - 0.5;
+        }
+        let aq = apply_operator(&q, &c);
+        let lhs = dot(&ap, &q);
+        let rhs = dot(&p, &aq);
+        assert!((lhs - rhs).abs() < 1e-3 * lhs.abs().max(1.0));
+    }
+
+    #[test]
+    fn cg_converges() {
+        let (h, w) = (32, 32);
+        let c = build_coefficients(h, w, 0.5, 1.0);
+        let b = Grid::initial_condition(h, w);
+        let (x, hist) = cg_solve(&b, &c, 40);
+        assert!(hist[39] < 1e-8 * hist[0], "{:?}", &hist[..5]);
+        // A x ~= b
+        let ax = apply_operator(&x, &c);
+        let mut err = 0.0f64;
+        let mut nb = 0.0f64;
+        for k in 0..ax.data.len() {
+            err += (ax.data[k] - b.data[k]).powi(2) as f64;
+            nb += (b.data[k] as f64).powi(2);
+        }
+        assert!((err / nb).sqrt() < 1e-3);
+    }
+
+    #[test]
+    fn initial_condition_matches_python_formula() {
+        let g = Grid::initial_condition(8, 8);
+        let (i, j) = (3usize, 5usize);
+        let x = i as f32 / 8.0;
+        let y = j as f32 / 8.0;
+        let expected = (core::f32::consts::PI * x).sin()
+            * (core::f32::consts::PI * y).sin()
+            + 0.1 * (9.0 * x * y).sin();
+        assert!((g.at(i, j) - expected).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,179 @@
+//! Artifact registry: discovers the AOT outputs (`artifacts/*.hlo.txt`
+//! plus `manifest.json` from `python -m compile.aot`) and resolves the
+//! right executable for an (entry, shape) request.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One manifest entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub entry: String,
+    pub h: u32,
+    pub w: u32,
+    pub iters: u32,
+    pub flops: u64,
+    pub file: PathBuf,
+}
+
+#[derive(Debug)]
+pub struct Registry {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+/// Default artifact locations: $TALP_PAGES_ARTIFACTS, ./artifacts, or
+/// the crate root's artifacts dir (tests run from the workspace).
+pub fn default_dir() -> Option<PathBuf> {
+    if let Ok(p) = std::env::var("TALP_PAGES_ARTIFACTS") {
+        let p = PathBuf::from(p);
+        if p.join("manifest.json").exists() {
+            return Some(p);
+        }
+    }
+    for cand in ["artifacts", env!("CARGO_MANIFEST_DIR")] {
+        let p = if cand == "artifacts" {
+            PathBuf::from("artifacts")
+        } else {
+            Path::new(cand).join("artifacts")
+        };
+        if p.join("manifest.json").exists() {
+            return Some(p);
+        }
+    }
+    None
+}
+
+impl Registry {
+    pub fn open(dir: &Path) -> Result<Registry> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {}", manifest_path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let format = j.str_or("format", "");
+        if format != "hlo-text-v1" {
+            bail!("unsupported manifest format '{format}'");
+        }
+        let mut artifacts = Vec::new();
+        for (name, meta) in j
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .context("manifest: artifacts")?
+        {
+            artifacts.push(ArtifactMeta {
+                name: name.clone(),
+                entry: meta.str_or("entry", "").to_string(),
+                h: meta.num_or("h", 0.0) as u32,
+                w: meta.num_or("w", 0.0) as u32,
+                iters: meta.num_or("iters", 0.0) as u32,
+                flops: meta.num_or("flops", 0.0) as u64,
+                file: dir.join(meta.str_or("file", "")),
+            });
+        }
+        artifacts.sort_by(|a, b| a.name.cmp(&b.name));
+        Ok(Registry { dir: dir.to_path_buf(), artifacts })
+    }
+
+    /// Open the default location if it exists.
+    pub fn open_default() -> Option<Registry> {
+        default_dir().and_then(|d| Registry::open(&d).ok())
+    }
+
+    pub fn find(&self, entry: &str, h: u32, w: u32) -> Option<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .find(|a| a.entry == entry && a.h == h && a.w == w)
+    }
+
+    /// Largest artifact of `entry` with h, w <= the given bounds (the
+    /// simulator maps subdomains to the nearest compiled shape).
+    pub fn best_fit(&self, entry: &str, h: u32, w: u32) -> Option<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.entry == entry && a.h <= h && a.w <= w)
+            .max_by_key(|a| (a.h as u64) * (a.w as u64))
+    }
+
+    pub fn entries(&self) -> Vec<&str> {
+        let mut v: Vec<&str> =
+            self.artifacts.iter().map(|a| a.entry.as_str()).collect();
+        v.sort();
+        v.dedup();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::fs::TempDir;
+
+    fn fake_manifest(dir: &Path) {
+        let text = r#"{
+  "format": "hlo-text-v1",
+  "artifacts": {
+    "cg_solve_64x64_i30": {"entry": "cg_solve", "h": 64, "w": 64,
+      "iters": 30, "flops": 1000, "file": "cg_solve_64x64_i30.hlo.txt"},
+    "matvec_halo_128x128": {"entry": "matvec_halo", "h": 128, "w": 128,
+      "iters": 1, "flops": 200, "file": "matvec_halo_128x128.hlo.txt"},
+    "matvec_halo_64x64": {"entry": "matvec_halo", "h": 64, "w": 64,
+      "iters": 1, "flops": 100, "file": "matvec_halo_64x64.hlo.txt"}
+  }
+}"#;
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+    }
+
+    #[test]
+    fn parses_and_finds() {
+        let td = TempDir::new("registry").unwrap();
+        fake_manifest(td.path());
+        let r = Registry::open(td.path()).unwrap();
+        assert_eq!(r.artifacts.len(), 3);
+        assert!(r.find("cg_solve", 64, 64).is_some());
+        assert!(r.find("cg_solve", 65, 64).is_none());
+        assert_eq!(r.entries(), ["cg_solve", "matvec_halo"]);
+    }
+
+    #[test]
+    fn best_fit_picks_largest_below() {
+        let td = TempDir::new("registry2").unwrap();
+        fake_manifest(td.path());
+        let r = Registry::open(td.path()).unwrap();
+        let m = r.best_fit("matvec_halo", 100, 100).unwrap();
+        assert_eq!((m.h, m.w), (64, 64));
+        let m = r.best_fit("matvec_halo", 1000, 1000).unwrap();
+        assert_eq!((m.h, m.w), (128, 128));
+        assert!(r.best_fit("matvec_halo", 10, 10).is_none());
+    }
+
+    #[test]
+    fn rejects_bad_format() {
+        let td = TempDir::new("registry3").unwrap();
+        std::fs::write(
+            td.path().join("manifest.json"),
+            r#"{"format": "v999", "artifacts": {}}"#,
+        )
+        .unwrap();
+        assert!(Registry::open(td.path()).is_err());
+    }
+
+    #[test]
+    fn real_manifest_parses_when_built() {
+        // Exercised fully only after `make artifacts`.
+        if let Some(r) = Registry::open_default() {
+            assert!(r.find("cg_solve", 64, 64).is_some());
+            assert!(r.find("matvec_halo", 128, 128).is_some());
+            assert!(r.find("genex_step", 128, 128).is_some());
+            for a in &r.artifacts {
+                assert!(a.file.exists(), "{} missing", a.file.display());
+                assert!(a.flops > 0);
+            }
+        } else {
+            eprintln!("skipping: no artifacts built (run `make artifacts`)");
+        }
+    }
+}

@@ -1,0 +1,137 @@
+//! Hardware-counter model: turns a phase's work into (instructions,
+//! cycles, seconds) using the cache and DVFS models.
+//!
+//! The instructions-per-flop constant defaults to the machine spec but
+//! is overridden by `runtime::calibrate`, which measures the real AOT
+//! stencil executable (HLO op counts per cell) so simulated counters are
+//! anchored to the actual compiled kernel rather than a guess.
+
+use super::cache;
+use super::dvfs;
+use super::machine::MachineSpec;
+
+/// Work description for one thread's compute burst.
+#[derive(Debug, Clone, Copy)]
+pub struct Work {
+    pub flops: f64,
+    pub working_set_bytes: f64,
+    /// Extra instruction overhead factor (halo recompute, decomposition
+    /// surface terms); 1.0 = none.
+    pub insn_factor: f64,
+}
+
+/// Counter outcome for one thread's compute burst.
+#[derive(Debug, Clone, Copy)]
+pub struct Burst {
+    pub seconds: f64,
+    pub instructions: u64,
+    pub cycles: u64,
+    pub ipc: f64,
+    pub freq_ghz: f64,
+}
+
+/// Counter model shared by a run.
+#[derive(Debug, Clone)]
+pub struct CounterModel {
+    pub insn_per_flop: f64,
+}
+
+impl CounterModel {
+    pub fn from_machine(m: &MachineSpec) -> CounterModel {
+        CounterModel { insn_per_flop: m.insn_per_flop }
+    }
+
+    /// Compute one burst. `active_fraction` and `threads_on_socket`
+    /// describe the socket occupancy during the burst.
+    pub fn burst(
+        &self,
+        m: &MachineSpec,
+        work: Work,
+        active_fraction: f64,
+        threads_on_socket: u32,
+    ) -> Burst {
+        let eff = cache::effect(m, work.working_set_bytes, threads_on_socket);
+        let freq =
+            dvfs::frequency_ghz(m, active_fraction, eff.stall_fraction, eff.ipc);
+        let instructions =
+            (work.flops * self.insn_per_flop * work.insn_factor).max(0.0);
+        let cycles = instructions / eff.ipc;
+        let seconds = cycles / (freq * 1e9);
+        Burst {
+            seconds,
+            instructions: instructions.round() as u64,
+            cycles: cycles.round() as u64,
+            ipc: eff.ipc,
+            freq_ghz: freq,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> (MachineSpec, CounterModel) {
+        let m = MachineSpec::marenostrum5();
+        let c = CounterModel::from_machine(&m);
+        (m, c)
+    }
+
+    #[test]
+    fn burst_is_consistent() {
+        let (m, c) = model();
+        let b = c.burst(
+            &m,
+            Work { flops: 1e9, working_set_bytes: 1e8, insn_factor: 1.0 },
+            1.0,
+            56,
+        );
+        // time * ipc * freq == instructions (by construction)
+        let recon = b.seconds * b.ipc * b.freq_ghz * 1e9;
+        assert!((recon / b.instructions as f64 - 1.0).abs() < 1e-6);
+        assert!(b.seconds > 0.0);
+    }
+
+    #[test]
+    fn more_flops_more_time_linear() {
+        let (m, c) = model();
+        let w = |f| Work { flops: f, working_set_bytes: 1e8, insn_factor: 1.0 };
+        let b1 = c.burst(&m, w(1e9), 1.0, 56);
+        let b2 = c.burst(&m, w(2e9), 1.0, 56);
+        assert!((b2.seconds / b1.seconds - 2.0).abs() < 1e-9);
+        assert_eq!(b2.instructions, 2 * b1.instructions);
+    }
+
+    #[test]
+    fn insn_factor_increases_instructions_not_flops() {
+        let (m, c) = model();
+        let base = Work { flops: 1e9, working_set_bytes: 1e8, insn_factor: 1.0 };
+        let padded = Work { insn_factor: 1.2, ..base };
+        let b1 = c.burst(&m, base, 1.0, 56);
+        let b2 = c.burst(&m, padded, 1.0, 56);
+        assert!((b2.instructions as f64 / b1.instructions as f64 - 1.2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cache_fit_speeds_up_superlinearly() {
+        let (m, c) = model();
+        // Same flops, working set halved across the LLC boundary:
+        // time shrinks by much more than 0% (IPC jump), the strong-
+        // scaling signature of Table 7.
+        let ws_big = 3.0e6 * 2.0;
+        let ws_small = 3.0e6 / 2.0;
+        let b_big = c.burst(
+            &m,
+            Work { flops: 1e9, working_set_bytes: ws_big, insn_factor: 1.0 },
+            1.0,
+            56,
+        );
+        let b_small = c.burst(
+            &m,
+            Work { flops: 1e9, working_set_bytes: ws_small, insn_factor: 1.0 },
+            1.0,
+            56,
+        );
+        assert!(b_small.seconds < 0.8 * b_big.seconds);
+    }
+}

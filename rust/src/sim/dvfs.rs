@@ -1,0 +1,80 @@
+//! DVFS / turbo model.
+//!
+//! Three effects, all visible in the paper's tables:
+//!
+//! 1. *Idle-core turbo*: fewer active cores per socket leave power and
+//!    thermal headroom, raising clocks.
+//! 2. *Stall turbo*: memory-stalled pipelines draw less power, so
+//!    bandwidth-bound phases hold higher bins than cache-hot ones
+//!    (paper Fig. 3 shows 2.15 -> 2.51 GHz when strong scaling relieves
+//!    per-socket bandwidth pressure; the *relative* uplift is what we
+//!    model).
+//! 3. *IPC power penalty*: cache-resident code retiring ~3x the uops per
+//!    cycle hits the package power limit and clocks *down* — this is
+//!    Table 7's frequency scalability of ~0.88 next to an IPC
+//!    scalability of ~3.1.
+
+use super::machine::MachineSpec;
+
+/// Effective core frequency in GHz for a phase.
+///
+/// * `active_fraction` — fraction of the socket's cores doing work.
+/// * `stall_fraction`  — fraction of cycles stalled on memory ([0,1],
+///   from the cache model).
+/// * `ipc`             — the phase's achieved IPC.
+pub fn frequency_ghz(
+    m: &MachineSpec,
+    active_fraction: f64,
+    stall_fraction: f64,
+    ipc: f64,
+) -> f64 {
+    let span = m.f_turbo_ghz - m.f_allcore_ghz;
+    let uplift = span
+        * (m.w_idle * (1.0 - active_fraction.clamp(0.0, 1.0))
+            + m.w_stall * stall_fraction.clamp(0.0, 1.0));
+    let power_penalty =
+        1.0 - m.k_power * ((ipc / m.ipc_pwr_ref) - 1.0).max(0.0);
+    ((m.f_allcore_ghz + uplift) * power_penalty).max(0.4 * m.f_allcore_ghz)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_load_memory_bound_near_allcore_plus_stall_turbo() {
+        let m = MachineSpec::marenostrum5();
+        let f = frequency_ghz(&m, 1.0, 0.85, 1.1);
+        assert!(f > m.f_allcore_ghz, "{f}");
+        assert!(f < m.f_turbo_ghz);
+    }
+
+    #[test]
+    fn idle_cores_raise_frequency() {
+        let m = MachineSpec::marenostrum5();
+        let busy = frequency_ghz(&m, 1.0, 0.2, 1.2);
+        let light = frequency_ghz(&m, 0.25, 0.2, 1.2);
+        assert!(light > busy);
+    }
+
+    #[test]
+    fn high_ipc_lowers_frequency() {
+        // The Table 7 mechanism: strong scaling makes the working set
+        // cache-resident -> IPC jumps -> frequency drops ~10%.
+        let m = MachineSpec::marenostrum5();
+        let mem_bound = frequency_ghz(&m, 1.0, 0.85, 1.1);
+        let cache_hot = frequency_ghz(&m, 1.0, 0.15, 3.4);
+        let ratio = cache_hot / mem_bound;
+        assert!(
+            (0.80..0.97).contains(&ratio),
+            "frequency scalability {ratio} out of Table-7 band"
+        );
+    }
+
+    #[test]
+    fn frequency_never_collapses() {
+        let m = MachineSpec::marenostrum5();
+        let f = frequency_ghz(&m, 1.0, 0.0, 10.0);
+        assert!(f >= 0.4 * m.f_allcore_ghz);
+    }
+}

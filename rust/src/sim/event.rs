@@ -1,0 +1,182 @@
+//! Tool-visible events and the sink interface.
+//!
+//! The engine emits one `Event` per phase per thread (plus region
+//! markers).  Performance tools attach as `EventSink`s: TALP accumulates
+//! on the fly, the Extrae-like tracer streams records to disk, Score-P
+//! builds call-path profiles, the CPT piggybacks vector clocks.  A
+//! sink's `cost_model()` tells the engine how much time instrumenting
+//! each event steals from the application — that perturbation is *added
+//! to the simulated clocks*, which is how Table 1's overhead percentages
+//! arise instead of being hard-coded.
+
+use super::program::CollKind;
+
+/// Category of time a phase event accounts for (mirrors TALP's timers).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PhaseKind {
+    /// Computation the application wanted to do.
+    Useful,
+    /// Inside an MPI call (wait + transfer are both "MPI time" to TALP).
+    Mpi,
+    /// Worker thread idle while master runs serial code.
+    OmpSerialization,
+    /// Worker thread idle while the master thread sits in MPI.  Kept
+    /// distinct from OmpSerialization so the POP hierarchy charges it to
+    /// MPI parallel efficiency, not to the OpenMP factors (the formulas
+    /// in pop::metrics rely on this separation to stay multiplicative).
+    MpiWorkerIdle,
+    /// OpenMP runtime overhead: fork/join, chunk dispatch.
+    OmpScheduling,
+    /// Idle at the parallel region's closing barrier (load imbalance).
+    OmpBarrier,
+    /// File I/O (TALP is blind to it: it lands in Useful unless the
+    /// region is instrumented; kept distinct here so tests can check
+    /// exactly that blindness).
+    Io,
+}
+
+/// One instrumented interval on one cpu (rank, thread).
+#[derive(Debug, Clone)]
+pub struct Event {
+    pub rank: u32,
+    pub thread: u32,
+    /// Seconds since program start (simulated, perturbed by tool costs).
+    pub t_start: f64,
+    pub t_end: f64,
+    pub kind: PhaseKind,
+    /// Instructions retired during the interval (0 for non-useful time).
+    pub instructions: u64,
+    /// Core cycles spent (freq * duration).
+    pub cycles: u64,
+    /// For Mpi events, which call.
+    pub mpi_call: Option<CollKind>,
+    /// Payload bytes (MPI message / IO volume); lets trace post-
+    /// processors (Dimemas-like replay) model transfer vs wait time.
+    pub bytes: u64,
+    /// Fine-grained sub-events represented by this record (e.g. dynamic
+    /// chunks); tools multiply their per-event costs by this.
+    pub sub_events: u64,
+}
+
+/// Region boundary marker (TALP API annotation or implicit Global).
+#[derive(Debug, Clone)]
+pub struct RegionMark {
+    pub rank: u32,
+    pub t: f64,
+    pub name: String,
+    pub enter: bool,
+}
+
+/// Per-event instrumentation costs in seconds.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CostModel {
+    /// Charged per phase event (per sub_event).
+    pub per_event_s: f64,
+    /// Extra cost when the tool reads hardware counters at the boundary.
+    pub per_counter_read_s: f64,
+    /// Charged per region marker.
+    pub per_region_s: f64,
+    /// Charged once per MPI call (PMPI wrapper, piggyback payload).
+    pub per_mpi_s: f64,
+    /// Periodic flush: every `flush_every_bytes` of trace data stalls
+    /// the emitting rank for `flush_stall_s` (0 = no tracing buffer).
+    pub flush_every_bytes: u64,
+    pub flush_stall_s: f64,
+    /// Bytes the tool writes per (sub-)event while the app runs.
+    pub bytes_per_event: u64,
+}
+
+impl CostModel {
+    /// Time stolen from the thread that produced `ev`.
+    pub fn event_cost(&self, ev: &Event) -> f64 {
+        let n = ev.sub_events.max(1) as f64;
+        let mut c = n * (self.per_event_s + self.per_counter_read_s);
+        if ev.kind == PhaseKind::Mpi {
+            c += self.per_mpi_s;
+        }
+        c
+    }
+
+    /// Trace bytes generated for `ev`.
+    pub fn event_bytes(&self, ev: &Event) -> u64 {
+        ev.sub_events.max(1) * self.bytes_per_event
+    }
+}
+
+/// A performance tool observing a run.
+pub trait EventSink {
+    fn name(&self) -> &str;
+
+    /// Instrumentation cost model charged by the engine.
+    fn cost_model(&self) -> CostModel;
+
+    fn on_event(&mut self, ev: &Event);
+
+    fn on_region(&mut self, mark: &RegionMark);
+
+    /// Called once when the simulated app finishes; `elapsed` is the
+    /// global (max-over-ranks) wall time including instrumentation
+    /// perturbation.
+    fn on_finalize(&mut self, elapsed: f64);
+}
+
+/// A sink that records nothing (clean baseline runs).
+pub struct NullSink;
+
+impl EventSink for NullSink {
+    fn name(&self) -> &str {
+        "none"
+    }
+    fn cost_model(&self) -> CostModel {
+        CostModel::default()
+    }
+    fn on_event(&mut self, _ev: &Event) {}
+    fn on_region(&mut self, _mark: &RegionMark) {}
+    fn on_finalize(&mut self, _elapsed: f64) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(kind: PhaseKind, sub: u64) -> Event {
+        Event {
+            rank: 0,
+            thread: 0,
+            t_start: 0.0,
+            t_end: 1.0,
+            kind,
+            instructions: 100,
+            cycles: 50,
+            mpi_call: None,
+            bytes: 0,
+            sub_events: sub,
+        }
+    }
+
+    #[test]
+    fn cost_scales_with_sub_events() {
+        let cm = CostModel {
+            per_event_s: 1e-6,
+            per_counter_read_s: 1e-6,
+            ..Default::default()
+        };
+        assert!((cm.event_cost(&ev(PhaseKind::Useful, 1)) - 2e-6).abs() < 1e-12);
+        assert!((cm.event_cost(&ev(PhaseKind::Useful, 100)) - 2e-4).abs() < 1e-10);
+    }
+
+    #[test]
+    fn mpi_surcharge_applied() {
+        let cm = CostModel { per_mpi_s: 5e-6, ..Default::default() };
+        let mut e = ev(PhaseKind::Mpi, 1);
+        e.mpi_call = Some(CollKind::Allreduce);
+        assert!((cm.event_cost(&e) - 5e-6).abs() < 1e-12);
+        assert_eq!(cm.event_cost(&ev(PhaseKind::Useful, 1)), 0.0);
+    }
+
+    #[test]
+    fn bytes_scale() {
+        let cm = CostModel { bytes_per_event: 24, ..Default::default() };
+        assert_eq!(cm.event_bytes(&ev(PhaseKind::Useful, 10)), 240);
+    }
+}

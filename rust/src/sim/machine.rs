@@ -1,0 +1,232 @@
+//! Machine model: topology (nodes / sockets / cores), frequency bins,
+//! cache capacities and interconnect parameters.
+//!
+//! Two presets mirror the paper's testbeds: MareNostrum 5 (2 x 56-core
+//! Sapphire Rapids per node, 2.15 GHz all-core base with turbo headroom)
+//! and Raven at MPCDF (2 x 36-core Ice Lake).  The numbers are public
+//! spec-sheet values; they parameterize the DVFS/cache/interconnect
+//! models in this module's siblings, they are not measurements.
+
+/// Static description of one machine.
+#[derive(Debug, Clone)]
+pub struct MachineSpec {
+    pub name: String,
+    pub sockets_per_node: u32,
+    pub cores_per_socket: u32,
+    /// All-core sustained frequency in GHz (paper's Fig. 3 shows 2.15).
+    pub f_allcore_ghz: f64,
+    /// Single-core max turbo in GHz.
+    pub f_turbo_ghz: f64,
+    /// Turbo uplift weight for idle cores (DVFS model).
+    pub w_idle: f64,
+    /// Turbo uplift weight for memory-stalled cores: stalled pipelines
+    /// draw less power, leaving thermal headroom ("license"-style bins).
+    pub w_stall: f64,
+    /// Frequency penalty per unit of IPC above `ipc_pwr_ref` (cache-
+    /// resident code retires more uops/cycle and hits the power limit;
+    /// this is what makes Table 7's frequency scalability ~0.88).
+    pub k_power: f64,
+    pub ipc_pwr_ref: f64,
+    /// Per-core L2 in bytes.
+    pub l2_bytes: u64,
+    /// Shared LLC per socket in bytes.
+    pub llc_bytes: u64,
+    /// Peak IPC for cache-resident useful code and memory-bound floor.
+    pub ipc_cache: f64,
+    pub ipc_mem: f64,
+    /// Instructions per flop of compiled stencil code (calibrated from
+    /// the real XLA executable by runtime::calibrate; this is the
+    /// default used when no calibration has run).
+    pub insn_per_flop: f64,
+    // ---- interconnect (hockney-style) ----
+    pub mpi_latency_intra_s: f64,
+    pub mpi_latency_inter_s: f64,
+    pub mpi_bw_intra_bps: f64,
+    pub mpi_bw_inter_bps: f64,
+    /// Per-collective software overhead (per log2(P) stage).
+    pub coll_stage_s: f64,
+    /// Filesystem streaming bandwidth for Io steps.
+    pub io_bw_bps: f64,
+}
+
+impl MachineSpec {
+    pub fn cores_per_node(&self) -> u32 {
+        self.sockets_per_node * self.cores_per_socket
+    }
+
+    /// MareNostrum 5 general-purpose partition node.
+    pub fn marenostrum5() -> MachineSpec {
+        MachineSpec {
+            name: "mn5".into(),
+            sockets_per_node: 2,
+            cores_per_socket: 56,
+            f_allcore_ghz: 2.15,
+            f_turbo_ghz: 3.10,
+            w_idle: 0.55,
+            w_stall: 0.25,
+            k_power: 0.040,
+            ipc_pwr_ref: 1.15,
+            l2_bytes: 2 * 1024 * 1024,
+            // Effective per-socket capacity: 105 MB LLC + 56 x 2 MB
+            // private L2 aggregate (the strong-scaling IPC jump in
+            // Table 7 happens when per-thread slices drop under the
+            // combined share).
+            llc_bytes: 220 * 1024 * 1024,
+            ipc_cache: 3.8,
+            ipc_mem: 1.0,
+            insn_per_flop: 1.35,
+            mpi_latency_intra_s: 0.4e-6,
+            mpi_latency_inter_s: 1.6e-6,
+            mpi_bw_intra_bps: 16.0e9,
+            mpi_bw_inter_bps: 12.5e9, // ~100 Gb/s NDR shared
+            coll_stage_s: 0.9e-6,
+            io_bw_bps: 2.0e9,
+        }
+    }
+
+    /// Raven (MPCDF): 2 x 36-core Ice Lake 8360Y.
+    pub fn raven() -> MachineSpec {
+        MachineSpec {
+            name: "raven".into(),
+            sockets_per_node: 2,
+            cores_per_socket: 36,
+            f_allcore_ghz: 2.40,
+            f_turbo_ghz: 3.50,
+            w_idle: 0.50,
+            w_stall: 0.22,
+            k_power: 0.038,
+            ipc_pwr_ref: 1.15,
+            l2_bytes: 1_280 * 1024,
+            // 54 MB LLC + 36 x 1.25 MB L2 aggregate.
+            llc_bytes: 100 * 1024 * 1024,
+            ipc_cache: 3.4,
+            ipc_mem: 1.0,
+            insn_per_flop: 1.40,
+            mpi_latency_intra_s: 0.5e-6,
+            mpi_latency_inter_s: 1.9e-6,
+            mpi_bw_intra_bps: 14.0e9,
+            mpi_bw_inter_bps: 11.0e9,
+            coll_stage_s: 1.0e-6,
+            io_bw_bps: 1.5e9,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<MachineSpec> {
+        match name {
+            "mn5" | "marenostrum5" => Some(MachineSpec::marenostrum5()),
+            "raven" => Some(MachineSpec::raven()),
+            _ => None,
+        }
+    }
+}
+
+/// A concrete resource configuration for one run: how many MPI ranks,
+/// how many OpenMP threads per rank, and the rank->node placement.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResourceConfig {
+    pub n_ranks: u32,
+    pub threads_per_rank: u32,
+}
+
+impl ResourceConfig {
+    pub fn new(n_ranks: u32, threads_per_rank: u32) -> ResourceConfig {
+        assert!(n_ranks > 0 && threads_per_rank > 0);
+        ResourceConfig { n_ranks, threads_per_rank }
+    }
+
+    pub fn total_cpus(&self) -> u32 {
+        self.n_ranks * self.threads_per_rank
+    }
+
+    /// Paper-style label: "2x56".
+    pub fn label(&self) -> String {
+        format!("{}x{}", self.n_ranks, self.threads_per_rank)
+    }
+
+    pub fn parse_label(s: &str) -> Option<ResourceConfig> {
+        let (r, t) = s.split_once('x')?;
+        Some(ResourceConfig::new(r.parse().ok()?, t.parse().ok()?))
+    }
+
+    /// Number of nodes needed on `m`, packing ranks densely with each
+    /// rank's threads pinned to contiguous cores (the paper pins one
+    /// rank per socket when threads == cores_per_socket).
+    pub fn nodes_used(&self, m: &MachineSpec) -> u32 {
+        let cpus = self.total_cpus();
+        cpus.div_ceil(m.cores_per_node())
+    }
+
+    /// Node index that hosts `rank`.
+    pub fn node_of_rank(&self, rank: u32, m: &MachineSpec) -> u32 {
+        let ranks_per_node =
+            (m.cores_per_node() / self.threads_per_rank).max(1);
+        rank / ranks_per_node
+    }
+
+    /// Fraction of a node's cores that are active under this config
+    /// (on the occupied nodes; clamped by the actual rank count).
+    pub fn active_fraction(&self, m: &MachineSpec) -> f64 {
+        let ranks_per_node = (m.cores_per_node() / self.threads_per_rank)
+            .max(1)
+            .min(self.n_ranks);
+        let used = (ranks_per_node * self.threads_per_rank) as f64;
+        (used / m.cores_per_node() as f64).min(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mn5_topology() {
+        let m = MachineSpec::marenostrum5();
+        assert_eq!(m.cores_per_node(), 112);
+        assert!(m.f_turbo_ghz > m.f_allcore_ghz);
+    }
+
+    #[test]
+    fn label_roundtrip() {
+        let c = ResourceConfig::new(8, 56);
+        assert_eq!(c.label(), "8x56");
+        assert_eq!(ResourceConfig::parse_label("8x56"), Some(c));
+        assert_eq!(ResourceConfig::parse_label("junk"), None);
+        assert_eq!(ResourceConfig::parse_label("8x"), None);
+    }
+
+    #[test]
+    fn node_packing_mn5() {
+        let m = MachineSpec::marenostrum5();
+        // paper's TeaLeaf strong scaling: 2x56 = 1 node, 4x56 = 2 nodes
+        assert_eq!(ResourceConfig::new(2, 56).nodes_used(&m), 1);
+        assert_eq!(ResourceConfig::new(4, 56).nodes_used(&m), 2);
+        assert_eq!(ResourceConfig::new(8, 56).nodes_used(&m), 4);
+        // MPI-only Fig. 3: 112 ranks = 1 node, 224 = 2 nodes
+        assert_eq!(ResourceConfig::new(112, 1).nodes_used(&m), 1);
+        assert_eq!(ResourceConfig::new(224, 1).nodes_used(&m), 2);
+    }
+
+    #[test]
+    fn rank_to_node_mapping() {
+        let m = MachineSpec::marenostrum5();
+        let c = ResourceConfig::new(4, 56);
+        assert_eq!(c.node_of_rank(0, &m), 0);
+        assert_eq!(c.node_of_rank(1, &m), 0);
+        assert_eq!(c.node_of_rank(2, &m), 1);
+        assert_eq!(c.node_of_rank(3, &m), 1);
+    }
+
+    #[test]
+    fn active_fraction_full_and_partial() {
+        let m = MachineSpec::marenostrum5();
+        assert!((ResourceConfig::new(2, 56).active_fraction(&m) - 1.0).abs() < 1e-9);
+        assert!(ResourceConfig::new(1, 28).active_fraction(&m) < 0.5);
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert!(MachineSpec::by_name("mn5").is_some());
+        assert!(MachineSpec::by_name("raven").is_some());
+        assert!(MachineSpec::by_name("summit").is_none());
+    }
+}

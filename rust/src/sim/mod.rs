@@ -1,0 +1,24 @@
+//! HPC substrate: a deterministic, phase-level simulator of hybrid
+//! MPI + OpenMP executions on multi-socket cluster nodes.
+//!
+//! This is the stand-in for MareNostrum 5 / Raven (DESIGN.md §2): it
+//! produces exactly the observable TALP and the trace-based tools
+//! consume — per-thread time categories, hardware counters, MPI
+//! synchronization — while staying fast enough to run thousands of
+//! simulated configurations inside tests and benches.
+
+pub mod cache;
+pub mod counters;
+pub mod dvfs;
+pub mod engine;
+pub mod event;
+pub mod machine;
+pub mod mpi;
+pub mod noise;
+pub mod program;
+
+pub use engine::{run, RunConfig, RunSummary};
+pub use event::{CostModel, Event, EventSink, NullSink, PhaseKind, RegionMark};
+pub use machine::{MachineSpec, ResourceConfig};
+pub use noise::NoiseModel;
+pub use program::{CollKind, Imbalance, OmpSchedule, Program, Step};

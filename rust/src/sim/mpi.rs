@@ -1,0 +1,103 @@
+//! MPI cost models (hockney/LogGP-flavoured).
+//!
+//! Collectives pay a log2(P)-stage tree with per-stage software latency
+//! plus a bandwidth term; point-to-point pays latency + bytes/bw, with
+//! the intra- vs inter-node distinction taken from the rank placement.
+//! These models only need to be *relatively* right: the POP factors the
+//! paper reports are ratios of waiting/transfer time to useful time.
+
+use super::machine::{MachineSpec, ResourceConfig};
+use super::program::CollKind;
+
+/// Transfer cost of one point-to-point message between `a` and `b`.
+pub fn p2p_cost(
+    m: &MachineSpec,
+    cfg: &ResourceConfig,
+    a: u32,
+    b: u32,
+    bytes: u64,
+) -> f64 {
+    let same_node = cfg.node_of_rank(a, m) == cfg.node_of_rank(b, m);
+    let (lat, bw) = if same_node {
+        (m.mpi_latency_intra_s, m.mpi_bw_intra_bps)
+    } else {
+        (m.mpi_latency_inter_s, m.mpi_bw_inter_bps)
+    };
+    lat + bytes as f64 / bw
+}
+
+/// Cost of a collective once all ranks have arrived (the engine adds the
+/// wait-for-last-arrival separately, which is where load imbalance turns
+/// into MPI time).
+pub fn collective_cost(
+    m: &MachineSpec,
+    cfg: &ResourceConfig,
+    kind: CollKind,
+    bytes_per_rank: u64,
+) -> f64 {
+    let p = cfg.n_ranks.max(1);
+    let stages = (p as f64).log2().ceil().max(1.0);
+    let crosses_nodes = cfg.nodes_used(m) > 1;
+    let (lat, bw) = if crosses_nodes {
+        (m.mpi_latency_inter_s, m.mpi_bw_inter_bps)
+    } else {
+        (m.mpi_latency_intra_s, m.mpi_bw_intra_bps)
+    };
+    let stage_cost = m.coll_stage_s + lat;
+    let bytes = bytes_per_rank as f64;
+    match kind {
+        CollKind::Barrier => stages * stage_cost,
+        // Reduce-scatter + allgather style: 2 traversals of the data.
+        CollKind::Allreduce => stages * stage_cost + 2.0 * bytes / bw,
+        CollKind::Bcast => stages * stage_cost + bytes / bw,
+        // Each rank ends with P * bytes; bandwidth term dominated by the
+        // receive volume.
+        CollKind::Allgather => {
+            stages * stage_cost + (p as f64) * bytes / bw
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (MachineSpec, ResourceConfig) {
+        (MachineSpec::marenostrum5(), ResourceConfig::new(4, 56))
+    }
+
+    #[test]
+    fn intra_node_cheaper_than_inter() {
+        let (m, cfg) = setup();
+        // ranks 0,1 on node 0; rank 2 on node 1.
+        let intra = p2p_cost(&m, &cfg, 0, 1, 1 << 20);
+        let inter = p2p_cost(&m, &cfg, 1, 2, 1 << 20);
+        assert!(inter > intra);
+    }
+
+    #[test]
+    fn collective_scales_with_log_p() {
+        let m = MachineSpec::marenostrum5();
+        let c2 = collective_cost(&m, &ResourceConfig::new(2, 1), CollKind::Barrier, 0);
+        let c256 =
+            collective_cost(&m, &ResourceConfig::new(256, 1), CollKind::Barrier, 0);
+        assert!(c256 > c2);
+        assert!(c256 < 20.0 * c2, "log not linear scaling");
+    }
+
+    #[test]
+    fn allreduce_costs_more_than_barrier() {
+        let (m, cfg) = setup();
+        let b = collective_cost(&m, &cfg, CollKind::Barrier, 8);
+        let a = collective_cost(&m, &cfg, CollKind::Allreduce, 8);
+        assert!(a > b);
+    }
+
+    #[test]
+    fn bandwidth_term_visible_for_large_payloads() {
+        let (m, cfg) = setup();
+        let small = collective_cost(&m, &cfg, CollKind::Bcast, 8);
+        let large = collective_cost(&m, &cfg, CollKind::Bcast, 1 << 30);
+        assert!(large > 10.0 * small);
+    }
+}

@@ -1,0 +1,96 @@
+//! Run-to-run noise model.
+//!
+//! Two components:
+//! * multiplicative lognormal jitter on every compute burst (scheduling,
+//!   cache state, DRAM refresh — the ~0.1-0.5% runtime stddev the paper
+//!   reports in Table 1), and
+//! * rare OS-noise spikes (daemon wakeups) that hit one thread at a time
+//!   — these are what make un-instrumented I/O regions skew factors, the
+//!   paper's §Discussion caveat.
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct NoiseModel {
+    /// Sigma of the lognormal burst jitter (log space).
+    pub burst_sigma: f64,
+    /// Probability that a burst is hit by an OS-noise spike.
+    pub spike_prob: f64,
+    /// Spike magnitude as a fraction of the burst duration.
+    pub spike_frac: f64,
+}
+
+impl NoiseModel {
+    pub fn calm() -> NoiseModel {
+        NoiseModel { burst_sigma: 0.002, spike_prob: 1e-4, spike_frac: 0.5 }
+    }
+
+    /// Production-like noise (default for experiments).
+    pub fn typical() -> NoiseModel {
+        NoiseModel { burst_sigma: 0.004, spike_prob: 5e-4, spike_frac: 1.0 }
+    }
+
+    /// An unstable platform (the [6]-style misconfigured system).
+    pub fn noisy() -> NoiseModel {
+        NoiseModel { burst_sigma: 0.03, spike_prob: 5e-3, spike_frac: 3.0 }
+    }
+
+    /// No noise at all (unit tests needing exact arithmetic).
+    pub fn none() -> NoiseModel {
+        NoiseModel { burst_sigma: 0.0, spike_prob: 0.0, spike_frac: 0.0 }
+    }
+
+    /// Multiplier to apply to one burst's duration.
+    pub fn burst_multiplier(&self, rng: &mut Rng) -> f64 {
+        let mut mult = if self.burst_sigma > 0.0 {
+            rng.lognormal_jitter(self.burst_sigma)
+        } else {
+            1.0
+        };
+        if self.spike_prob > 0.0 && rng.bool_with_p(self.spike_prob) {
+            mult += self.spike_frac * rng.f64();
+        }
+        mult
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_is_exactly_one() {
+        let mut rng = Rng::new(1);
+        let n = NoiseModel::none();
+        for _ in 0..100 {
+            assert_eq!(n.burst_multiplier(&mut rng), 1.0);
+        }
+    }
+
+    #[test]
+    fn typical_mean_near_one() {
+        let mut rng = Rng::new(2);
+        let n = NoiseModel::typical();
+        let k = 20_000;
+        let mean: f64 =
+            (0..k).map(|_| n.burst_multiplier(&mut rng)).sum::<f64>() / k as f64;
+        assert!((mean - 1.0).abs() < 0.01, "{mean}");
+    }
+
+    #[test]
+    fn noisy_is_noisier() {
+        let mut r1 = Rng::new(3);
+        let mut r2 = Rng::new(3);
+        let calm = NoiseModel::calm();
+        let noisy = NoiseModel::noisy();
+        let k = 10_000;
+        let var = |f: &mut dyn FnMut() -> f64| {
+            let xs: Vec<f64> = (0..k).map(|_| f()).collect();
+            let m = xs.iter().sum::<f64>() / k as f64;
+            xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / k as f64
+        };
+        let v1 = var(&mut || calm.burst_multiplier(&mut r1));
+        let v2 = var(&mut || noisy.burst_multiplier(&mut r2));
+        assert!(v2 > 10.0 * v1, "{v1} vs {v2}");
+    }
+}

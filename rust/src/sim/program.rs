@@ -1,0 +1,271 @@
+//! The simulator's program IR.
+//!
+//! Applications (apps::*) compile themselves into a `Program`: a flat,
+//! SPMD sequence of steps that every rank executes.  The engine walks the
+//! sequence keeping one clock per rank (and per-thread accounting inside
+//! ranks), resolving synchronization at MPI steps.  This phase-level IR
+//! is exactly the granularity TALP observes — PMPI/OMPT callbacks at
+//! phase boundaries — which is why the substrate can feed the real
+//! monitor code without a cycle-accurate machine model.
+
+/// How work is spread over the threads of a parallel region.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Imbalance {
+    /// Perfectly balanced.
+    None,
+    /// Thread `t` gets `1 + skew * t / (T-1)` relative share (linear ramp).
+    Linear { skew: f64 },
+    /// First `heavy_frac` of threads carry `factor`x the work of the rest
+    /// (boundary-rank / surface-term imbalance).
+    Block { heavy_frac: f64, factor: f64 },
+    /// Multiplicative random jitter per thread with the given sigma.
+    Random { sigma: f64 },
+}
+
+impl Imbalance {
+    /// Relative weight for thread `t` of `n` (mean ~1 by construction;
+    /// engine normalizes exactly).
+    pub fn weight(&self, t: u32, n: u32, jitter: impl FnMut() -> f64) -> f64 {
+        let mut jitter = jitter;
+        match self {
+            Imbalance::None => 1.0,
+            Imbalance::Linear { skew } => {
+                if n <= 1 {
+                    1.0
+                } else {
+                    1.0 + skew * t as f64 / (n - 1) as f64
+                }
+            }
+            Imbalance::Block { heavy_frac, factor } => {
+                let heavy_n = ((n as f64) * heavy_frac).ceil() as u32;
+                if t < heavy_n {
+                    *factor
+                } else {
+                    1.0
+                }
+            }
+            Imbalance::Random { sigma } => {
+                let _ = sigma;
+                jitter()
+            }
+        }
+    }
+}
+
+/// OpenMP loop schedule for a parallel region.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum OmpSchedule {
+    /// One chunk per thread; imbalance lands on the barrier.
+    Static,
+    /// `chunks` total chunks dealt dynamically: imbalance is smoothed to
+    /// roughly one chunk's worth, but each chunk dispatch costs time and
+    /// generates tool events (this is the fine granularity that makes
+    /// every tool's overhead explode in Table 1's 4x56 row).
+    Dynamic { chunks: u32 },
+}
+
+/// MPI collective kinds with distinct cost shapes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CollKind {
+    Barrier,
+    /// Reductions move a few bytes but pay the full log tree.
+    Allreduce,
+    Bcast,
+    Allgather,
+}
+
+impl CollKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CollKind::Barrier => "MPI_Barrier",
+            CollKind::Allreduce => "MPI_Allreduce",
+            CollKind::Bcast => "MPI_Bcast",
+            CollKind::Allgather => "MPI_Allgather",
+        }
+    }
+}
+
+/// One step of the SPMD program.
+#[derive(Debug, Clone)]
+pub enum Step {
+    /// Enter a TALP-API-annotated region (paper: `initialize`,
+    /// `timestep`); the implicit `Global` region is managed by the
+    /// engine itself.
+    RegionEnter(String),
+    RegionExit(String),
+    /// Master-thread-only compute; worker threads sit in OpenMP
+    /// serialization time.  `flops` is per rank; `rank_weights` scales
+    /// per rank (len 1 = uniform).
+    Serial {
+        flops: f64,
+        working_set_bytes: f64,
+        rank_weights: Vec<f64>,
+    },
+    /// An OpenMP parallel region (worksharing loop) on every rank.
+    Parallel {
+        /// Total flops across the rank's threads.
+        flops: f64,
+        /// Per-thread working set in bytes (drives the IPC/cache model).
+        working_set_bytes: f64,
+        imbalance: Imbalance,
+        schedule: OmpSchedule,
+        /// Per-rank multiplicative work weights (len 1 = uniform, len
+        /// n_ranks = per-rank; drives MPI-level load imbalance).
+        rank_weights: Vec<f64>,
+        /// Extra instructions-per-flop multiplier (surface/halo overhead
+        /// growing with decomposition models instruction-scaling < 1).
+        insn_factor: f64,
+    },
+    /// Blocking collective over all ranks.
+    Collective { kind: CollKind, bytes_per_rank: u64 },
+    /// Nearest-neighbour halo exchange (1-D decomposition; rank r talks
+    /// to r-1 and r+1).
+    Exchange { bytes_per_neighbor: u64 },
+    /// File I/O. If `parallel` every rank writes its share; otherwise
+    /// rank 0 writes everything while others run ahead (the variance
+    /// trap §Discussion warns about).
+    Io { bytes: u64, parallel: bool },
+}
+
+/// A full SPMD program plus bookkeeping the tools need.
+#[derive(Debug, Clone, Default)]
+pub struct Program {
+    pub steps: Vec<Step>,
+}
+
+impl Program {
+    pub fn new() -> Program {
+        Program { steps: Vec::new() }
+    }
+
+    pub fn push(&mut self, s: Step) -> &mut Self {
+        self.steps.push(s);
+        self
+    }
+
+    pub fn region<F: FnOnce(&mut Self)>(&mut self, name: &str, body: F) -> &mut Self {
+        self.steps.push(Step::RegionEnter(name.to_string()));
+        body(self);
+        self.steps.push(Step::RegionExit(name.to_string()));
+        self
+    }
+
+    /// Sanity: regions must nest properly.
+    pub fn validate(&self) -> Result<(), String> {
+        let mut stack: Vec<&str> = Vec::new();
+        for s in &self.steps {
+            match s {
+                Step::RegionEnter(n) => stack.push(n),
+                Step::RegionExit(n) => match stack.pop() {
+                    Some(top) if top == n => {}
+                    Some(top) => {
+                        return Err(format!(
+                            "region exit '{n}' does not match open '{top}'"
+                        ))
+                    }
+                    None => {
+                        return Err(format!("region exit '{n}' with no open region"))
+                    }
+                },
+                _ => {}
+            }
+        }
+        if let Some(open) = stack.pop() {
+            return Err(format!("region '{open}' never exited"));
+        }
+        Ok(())
+    }
+
+    /// Rough count of tool-visible events per rank (used in tests and by
+    /// tool self-estimates; the engine computes exact counts during the
+    /// run).
+    pub fn approx_events_per_rank(&self, threads: u32) -> u64 {
+        let mut n = 0u64;
+        for s in &self.steps {
+            n += match s {
+                Step::RegionEnter(_) | Step::RegionExit(_) => 1,
+                Step::Serial { .. } => 2,
+                Step::Parallel { schedule, .. } => match schedule {
+                    OmpSchedule::Static => 2 * threads as u64,
+                    OmpSchedule::Dynamic { chunks } => 2 * (*chunks as u64),
+                },
+                Step::Collective { .. } => 2,
+                Step::Exchange { .. } => 4,
+                Step::Io { .. } => 2,
+            };
+        }
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn region_builder_nests() {
+        let mut p = Program::new();
+        p.region("initialize", |p| {
+            p.push(Step::Serial {
+                flops: 1e6,
+                working_set_bytes: 1e6,
+                rank_weights: vec![1.0],
+            });
+        });
+        assert!(p.validate().is_ok());
+        assert_eq!(p.steps.len(), 3);
+    }
+
+    #[test]
+    fn validate_catches_bad_nesting() {
+        let mut p = Program::new();
+        p.push(Step::RegionEnter("a".into()));
+        p.push(Step::RegionExit("b".into()));
+        assert!(p.validate().is_err());
+
+        let mut p = Program::new();
+        p.push(Step::RegionExit("x".into()));
+        assert!(p.validate().is_err());
+
+        let mut p = Program::new();
+        p.push(Step::RegionEnter("a".into()));
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn imbalance_weights() {
+        let w0 = Imbalance::None.weight(0, 4, || 1.0);
+        assert_eq!(w0, 1.0);
+        let lin = Imbalance::Linear { skew: 0.5 };
+        assert_eq!(lin.weight(0, 5, || 1.0), 1.0);
+        assert_eq!(lin.weight(4, 5, || 1.0), 1.5);
+        let blk = Imbalance::Block { heavy_frac: 0.25, factor: 2.0 };
+        assert_eq!(blk.weight(0, 4, || 1.0), 2.0);
+        assert_eq!(blk.weight(3, 4, || 1.0), 1.0);
+    }
+
+    #[test]
+    fn event_counts_scale_with_granularity() {
+        let mut coarse = Program::new();
+        coarse.push(Step::Parallel {
+            flops: 1e9,
+            working_set_bytes: 1e6,
+            imbalance: Imbalance::None,
+            schedule: OmpSchedule::Static,
+            rank_weights: vec![1.0],
+            insn_factor: 1.0,
+        });
+        let mut fine = Program::new();
+        fine.push(Step::Parallel {
+            flops: 1e9,
+            working_set_bytes: 1e6,
+            imbalance: Imbalance::None,
+            schedule: OmpSchedule::Dynamic { chunks: 1000 },
+            rank_weights: vec![1.0],
+            insn_factor: 1.0,
+        });
+        assert!(
+            fine.approx_events_per_rank(8) > coarse.approx_events_per_rank(8)
+        );
+    }
+}

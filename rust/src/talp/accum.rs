@@ -1,0 +1,180 @@
+//! Per-(region, rank, thread) time/counter accumulators — TALP's core
+//! data structure.
+//!
+//! TALP keeps everything as running sums updated at PMPI/OMPT callback
+//! boundaries; nothing is ever buffered or written until finalize.  That
+//! is the whole point of the paper: the post-processing cost collapses
+//! because the reduction happened during the run.
+
+use crate::sim::PhaseKind;
+
+/// Running timers for one cpu (rank, thread) in one region.  All times
+/// in seconds (serialized as integer nanoseconds).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CpuTimers {
+    /// Computation the app wanted to do (includes I/O unless the region
+    /// is instrumented — TALP's documented blindness, §Discussion).
+    pub useful_s: f64,
+    /// Master-thread time inside MPI.
+    pub mpi_s: f64,
+    /// Worker idle while master is inside MPI.
+    pub mpi_worker_idle_s: f64,
+    /// Worker idle while master runs serial code.
+    pub omp_serialization_s: f64,
+    /// OpenMP runtime overhead (fork/join, chunk dispatch).
+    pub omp_scheduling_s: f64,
+    /// Idle at parallel-region barriers (load imbalance).
+    pub omp_barrier_s: f64,
+    /// Instructions / cycles retired during useful time.
+    pub useful_instructions: u64,
+    pub useful_cycles: u64,
+}
+
+impl CpuTimers {
+    pub fn add_phase(
+        &mut self,
+        kind: PhaseKind,
+        dur_s: f64,
+        instructions: u64,
+        cycles: u64,
+    ) {
+        match kind {
+            PhaseKind::Useful => {
+                self.useful_s += dur_s;
+                self.useful_instructions += instructions;
+                self.useful_cycles += cycles;
+            }
+            // TALP cannot see I/O: it lands in useful time with zero
+            // retired instructions (skewing IPC — exactly the trap the
+            // paper warns about and the reason to instrument IO regions).
+            PhaseKind::Io => self.useful_s += dur_s,
+            PhaseKind::Mpi => self.mpi_s += dur_s,
+            PhaseKind::MpiWorkerIdle => self.mpi_worker_idle_s += dur_s,
+            PhaseKind::OmpSerialization => self.omp_serialization_s += dur_s,
+            PhaseKind::OmpScheduling => self.omp_scheduling_s += dur_s,
+            PhaseKind::OmpBarrier => self.omp_barrier_s += dur_s,
+        }
+    }
+
+    pub fn merge(&mut self, other: &CpuTimers) {
+        self.useful_s += other.useful_s;
+        self.mpi_s += other.mpi_s;
+        self.mpi_worker_idle_s += other.mpi_worker_idle_s;
+        self.omp_serialization_s += other.omp_serialization_s;
+        self.omp_scheduling_s += other.omp_scheduling_s;
+        self.omp_barrier_s += other.omp_barrier_s;
+        self.useful_instructions += other.useful_instructions;
+        self.useful_cycles += other.useful_cycles;
+    }
+
+    pub fn total_accounted_s(&self) -> f64 {
+        self.useful_s
+            + self.mpi_s
+            + self.mpi_worker_idle_s
+            + self.omp_serialization_s
+            + self.omp_scheduling_s
+            + self.omp_barrier_s
+    }
+}
+
+/// All cpus of one region: indexed [rank][thread].
+#[derive(Debug, Clone, Default)]
+pub struct RegionAccum {
+    pub cpus: Vec<Vec<CpuTimers>>,
+    /// Per-rank region elapsed time (sum over enter/exit visits).
+    pub elapsed_per_rank_s: Vec<f64>,
+    /// Per-rank currently-open enter timestamp (during the run).
+    pub open_since: Vec<Option<f64>>,
+    pub visits: u64,
+}
+
+impl RegionAccum {
+    pub fn new(ranks: usize, threads: usize) -> RegionAccum {
+        RegionAccum {
+            cpus: vec![vec![CpuTimers::default(); threads]; ranks],
+            elapsed_per_rank_s: vec![0.0; ranks],
+            open_since: vec![None; ranks],
+            visits: 0,
+        }
+    }
+
+    pub fn is_open(&self, rank: usize) -> bool {
+        self.open_since[rank].is_some()
+    }
+
+    pub fn enter(&mut self, rank: usize, t: f64) {
+        debug_assert!(self.open_since[rank].is_none(), "double enter");
+        self.open_since[rank] = Some(t);
+        if rank == 0 {
+            self.visits += 1;
+        }
+    }
+
+    pub fn exit(&mut self, rank: usize, t: f64) {
+        if let Some(t0) = self.open_since[rank].take() {
+            self.elapsed_per_rank_s[rank] += (t - t0).max(0.0);
+        }
+    }
+
+    /// Region elapsed: max over ranks (global wall inside the region).
+    pub fn elapsed_s(&self) -> f64 {
+        self.elapsed_per_rank_s
+            .iter()
+            .cloned()
+            .fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_routing() {
+        let mut t = CpuTimers::default();
+        t.add_phase(PhaseKind::Useful, 1.0, 100, 50);
+        t.add_phase(PhaseKind::Mpi, 0.5, 0, 0);
+        t.add_phase(PhaseKind::Io, 0.25, 0, 0);
+        t.add_phase(PhaseKind::OmpBarrier, 0.125, 0, 0);
+        assert_eq!(t.useful_s, 1.25); // io folded into useful
+        assert_eq!(t.mpi_s, 0.5);
+        assert_eq!(t.omp_barrier_s, 0.125);
+        assert_eq!(t.useful_instructions, 100);
+        assert!((t.total_accounted_s() - 1.875).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_sums_everything() {
+        let mut a = CpuTimers::default();
+        a.add_phase(PhaseKind::Useful, 1.0, 10, 5);
+        let mut b = CpuTimers::default();
+        b.add_phase(PhaseKind::Useful, 2.0, 20, 10);
+        b.add_phase(PhaseKind::OmpScheduling, 0.5, 0, 0);
+        a.merge(&b);
+        assert_eq!(a.useful_s, 3.0);
+        assert_eq!(a.useful_instructions, 30);
+        assert_eq!(a.omp_scheduling_s, 0.5);
+    }
+
+    #[test]
+    fn region_elapsed_accumulates_visits() {
+        let mut r = RegionAccum::new(2, 1);
+        r.enter(0, 0.0);
+        r.exit(0, 1.0);
+        r.enter(0, 5.0);
+        r.exit(0, 7.0);
+        r.enter(1, 0.0);
+        r.exit(1, 2.5);
+        assert_eq!(r.elapsed_per_rank_s[0], 3.0);
+        assert_eq!(r.elapsed_per_rank_s[1], 2.5);
+        assert_eq!(r.elapsed_s(), 3.0);
+        assert_eq!(r.visits, 2);
+    }
+
+    #[test]
+    fn exit_without_enter_is_ignored() {
+        let mut r = RegionAccum::new(1, 1);
+        r.exit(0, 3.0);
+        assert_eq!(r.elapsed_per_rank_s[0], 0.0);
+    }
+}

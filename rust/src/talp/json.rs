@@ -1,0 +1,453 @@
+//! The TALP JSON schema (DLB-3.5-flavoured) and its parsed form.
+//!
+//! One JSON per run.  TALP writes per-process aggregates per region —
+//! enough for every factor in the paper's tables — plus run metadata;
+//! the `talp metadata` CI wrapper later injects a `git` block (ci::gitmeta).
+//!
+//! [`RunData`] is the parsed, validated form shared by the POP metric
+//! computation (pop::metrics), the folder scanner (pages::scanner) and
+//! the time-series builder (pages::timeseries).
+
+use anyhow::{bail, Context, Result};
+
+use crate::sim::{MachineSpec, ResourceConfig};
+use crate::util::json::Json;
+use crate::util::timefmt;
+
+use super::monitor::TalpReport;
+
+pub const DLB_VERSION: &str = "3.5.0-sim";
+
+const NS: f64 = 1e9;
+
+/// Per-process aggregates for one region.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ProcStats {
+    pub rank: u32,
+    pub node: u32,
+    pub elapsed_s: f64,
+    pub useful_s: f64,
+    pub mpi_s: f64,
+    pub mpi_worker_idle_s: f64,
+    pub omp_serialization_s: f64,
+    pub omp_scheduling_s: f64,
+    pub omp_barrier_s: f64,
+    pub useful_instructions: u64,
+    pub useful_cycles: u64,
+}
+
+/// One region's measurements.
+#[derive(Debug, Clone, Default)]
+pub struct RegionData {
+    pub name: String,
+    pub elapsed_s: f64,
+    pub visits: u64,
+    pub procs: Vec<ProcStats>,
+}
+
+/// Git metadata injected by the `talp metadata` wrapper (paper Fig. 6).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GitMeta {
+    pub commit: String,
+    pub branch: String,
+    pub commit_timestamp: i64,
+    pub message: String,
+}
+
+/// A fully parsed TALP JSON.
+#[derive(Debug, Clone)]
+pub struct RunData {
+    pub dlb_version: String,
+    pub app: String,
+    pub machine: String,
+    /// End-of-execution wall clock (unix seconds).
+    pub timestamp: i64,
+    pub ranks: u32,
+    pub threads: u32,
+    pub nodes: u32,
+    pub regions: Vec<RegionData>,
+    pub git: Option<GitMeta>,
+}
+
+impl RunData {
+    /// Build from a finished monitor plus run context.
+    pub fn from_report(
+        report: &TalpReport,
+        app: &str,
+        machine: &MachineSpec,
+        resources: &ResourceConfig,
+        timestamp: i64,
+    ) -> RunData {
+        let regions = report
+            .regions
+            .iter()
+            .map(|(name, acc)| {
+                let procs = (0..report.ranks)
+                    .map(|r| {
+                        let mut p = ProcStats {
+                            rank: r as u32,
+                            node: resources.node_of_rank(r as u32, machine),
+                            elapsed_s: acc.elapsed_per_rank_s[r],
+                            ..Default::default()
+                        };
+                        for c in &acc.cpus[r] {
+                            p.useful_s += c.useful_s;
+                            p.mpi_s += c.mpi_s;
+                            p.mpi_worker_idle_s += c.mpi_worker_idle_s;
+                            p.omp_serialization_s += c.omp_serialization_s;
+                            p.omp_scheduling_s += c.omp_scheduling_s;
+                            p.omp_barrier_s += c.omp_barrier_s;
+                            p.useful_instructions += c.useful_instructions;
+                            p.useful_cycles += c.useful_cycles;
+                        }
+                        p
+                    })
+                    .collect();
+                RegionData {
+                    name: name.clone(),
+                    elapsed_s: acc.elapsed_s(),
+                    visits: acc.visits,
+                    procs,
+                }
+            })
+            .collect();
+        RunData {
+            dlb_version: DLB_VERSION.to_string(),
+            app: app.to_string(),
+            machine: machine.name.clone(),
+            timestamp,
+            ranks: report.ranks as u32,
+            threads: report.threads as u32,
+            nodes: resources.nodes_used(machine),
+            regions,
+            git: None,
+        }
+    }
+
+    pub fn resources(&self) -> ResourceConfig {
+        ResourceConfig::new(self.ranks, self.threads)
+    }
+
+    pub fn region(&self, name: &str) -> Option<&RegionData> {
+        self.regions.iter().find(|r| r.name == name)
+    }
+
+    /// The timestamp TALP-Pages plots against: git commit time when the
+    /// metadata wrapper ran, execution end time otherwise (paper
+    /// §Time-evolution plots).
+    pub fn effective_timestamp(&self) -> i64 {
+        self.git
+            .as_ref()
+            .map(|g| g.commit_timestamp)
+            .unwrap_or(self.timestamp)
+    }
+
+    // ---------- JSON ----------
+
+    pub fn to_json(&self) -> Json {
+        let mut root = Json::obj();
+        root.set("dlb_version", Json::Str(self.dlb_version.clone()));
+        root.set("app", Json::Str(self.app.clone()));
+        root.set("machine", Json::Str(self.machine.clone()));
+        root.set(
+            "timestamp",
+            Json::Str(timefmt::to_iso8601(self.timestamp)),
+        );
+        root.set(
+            "resources",
+            Json::from_pairs(vec![
+                ("num_mpi_ranks", Json::Num(self.ranks as f64)),
+                ("num_omp_threads", Json::Num(self.threads as f64)),
+                (
+                    "num_cpus",
+                    Json::Num((self.ranks * self.threads) as f64),
+                ),
+                ("num_nodes", Json::Num(self.nodes as f64)),
+            ]),
+        );
+        let mut regions = Json::obj();
+        for reg in &self.regions {
+            let procs: Vec<Json> = reg
+                .procs
+                .iter()
+                .map(|p| {
+                    Json::from_pairs(vec![
+                        ("rank", Json::Num(p.rank as f64)),
+                        ("node", Json::Num(p.node as f64)),
+                        ("elapsed_time_ns", ns(p.elapsed_s)),
+                        ("useful_time_ns", ns(p.useful_s)),
+                        ("mpi_time_ns", ns(p.mpi_s)),
+                        ("mpi_worker_idle_time_ns", ns(p.mpi_worker_idle_s)),
+                        (
+                            "omp_serialization_time_ns",
+                            ns(p.omp_serialization_s),
+                        ),
+                        ("omp_scheduling_time_ns", ns(p.omp_scheduling_s)),
+                        ("omp_load_balance_time_ns", ns(p.omp_barrier_s)),
+                        (
+                            "useful_instructions",
+                            Json::Num(p.useful_instructions as f64),
+                        ),
+                        ("useful_cycles", Json::Num(p.useful_cycles as f64)),
+                    ])
+                })
+                .collect();
+            regions.set(
+                &reg.name,
+                Json::from_pairs(vec![
+                    ("elapsed_time_ns", ns(reg.elapsed_s)),
+                    ("visits", Json::Num(reg.visits as f64)),
+                    ("processes", Json::Arr(procs)),
+                ]),
+            );
+        }
+        root.set("regions", regions);
+        if let Some(g) = &self.git {
+            root.set(
+                "git",
+                Json::from_pairs(vec![
+                    ("commit", Json::Str(g.commit.clone())),
+                    ("branch", Json::Str(g.branch.clone())),
+                    (
+                        "commit_timestamp",
+                        Json::Str(timefmt::to_iso8601(g.commit_timestamp)),
+                    ),
+                    ("message", Json::Str(g.message.clone())),
+                ]),
+            );
+        }
+        root
+    }
+
+    pub fn from_json(j: &Json) -> Result<RunData> {
+        let res = j.get("resources").context("missing resources")?;
+        let ranks = res
+            .get("num_mpi_ranks")
+            .and_then(Json::as_u64)
+            .context("missing num_mpi_ranks")? as u32;
+        let threads = res
+            .get("num_omp_threads")
+            .and_then(Json::as_u64)
+            .context("missing num_omp_threads")? as u32;
+        if ranks == 0 || threads == 0 {
+            bail!("resources must be positive ({ranks}x{threads})");
+        }
+        let nodes =
+            res.get("num_nodes").and_then(Json::as_u64).unwrap_or(1) as u32;
+        let timestamp = j
+            .get("timestamp")
+            .and_then(Json::as_str)
+            .and_then(timefmt::from_iso8601)
+            .context("missing/bad timestamp")?;
+        let mut regions = Vec::new();
+        let regs = j
+            .get("regions")
+            .and_then(Json::as_obj)
+            .context("missing regions")?;
+        for (name, rj) in regs {
+            let mut procs = Vec::new();
+            for pj in rj
+                .get("processes")
+                .and_then(Json::as_arr)
+                .context("missing processes")?
+            {
+                procs.push(ProcStats {
+                    rank: pj.num_or("rank", 0.0) as u32,
+                    node: pj.num_or("node", 0.0) as u32,
+                    elapsed_s: pj.num_or("elapsed_time_ns", 0.0) / NS,
+                    useful_s: pj.num_or("useful_time_ns", 0.0) / NS,
+                    mpi_s: pj.num_or("mpi_time_ns", 0.0) / NS,
+                    mpi_worker_idle_s: pj
+                        .num_or("mpi_worker_idle_time_ns", 0.0)
+                        / NS,
+                    omp_serialization_s: pj
+                        .num_or("omp_serialization_time_ns", 0.0)
+                        / NS,
+                    omp_scheduling_s: pj
+                        .num_or("omp_scheduling_time_ns", 0.0)
+                        / NS,
+                    omp_barrier_s: pj.num_or("omp_load_balance_time_ns", 0.0)
+                        / NS,
+                    useful_instructions: pj
+                        .get("useful_instructions")
+                        .and_then(Json::as_u64)
+                        .unwrap_or(0),
+                    useful_cycles: pj
+                        .get("useful_cycles")
+                        .and_then(Json::as_u64)
+                        .unwrap_or(0),
+                });
+            }
+            if procs.len() != ranks as usize {
+                bail!(
+                    "region '{name}': {} processes for {ranks} ranks",
+                    procs.len()
+                );
+            }
+            regions.push(RegionData {
+                name: name.clone(),
+                elapsed_s: rj.num_or("elapsed_time_ns", 0.0) / NS,
+                visits: rj.get("visits").and_then(Json::as_u64).unwrap_or(1),
+                procs,
+            });
+        }
+        if regions.is_empty() {
+            bail!("no regions in TALP json");
+        }
+        let git = j.get("git").map(|g| GitMeta {
+            commit: g.str_or("commit", "").to_string(),
+            branch: g.str_or("branch", "").to_string(),
+            commit_timestamp: g
+                .get("commit_timestamp")
+                .and_then(Json::as_str)
+                .and_then(timefmt::from_iso8601)
+                .unwrap_or(timestamp),
+            message: g.str_or("message", "").to_string(),
+        });
+        Ok(RunData {
+            dlb_version: j.str_or("dlb_version", "unknown").to_string(),
+            app: j.str_or("app", "unknown").to_string(),
+            machine: j.str_or("machine", "unknown").to_string(),
+            timestamp,
+            ranks,
+            threads,
+            nodes,
+            regions,
+            git,
+        })
+    }
+
+    pub fn write_file(&self, path: &std::path::Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_json().to_string_pretty())
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    pub fn read_file(path: &std::path::Path) -> Result<RunData> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+        RunData::from_json(&j)
+            .with_context(|| format!("parsing {}", path.display()))
+    }
+}
+
+fn ns(secs: f64) -> Json {
+    Json::Num((secs * NS).round())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> RunData {
+        RunData {
+            dlb_version: DLB_VERSION.into(),
+            app: "tealeaf".into(),
+            machine: "mn5".into(),
+            timestamp: 1_721_046_896,
+            ranks: 2,
+            threads: 4,
+            nodes: 1,
+            regions: vec![RegionData {
+                name: "Global".into(),
+                elapsed_s: 10.0,
+                visits: 1,
+                procs: vec![
+                    ProcStats {
+                        rank: 0,
+                        node: 0,
+                        elapsed_s: 10.0,
+                        useful_s: 36.0,
+                        mpi_s: 1.0,
+                        mpi_worker_idle_s: 3.0,
+                        omp_serialization_s: 0.5,
+                        omp_scheduling_s: 0.2,
+                        omp_barrier_s: 0.3,
+                        useful_instructions: 1_000_000,
+                        useful_cycles: 500_000,
+                    },
+                    ProcStats {
+                        rank: 1,
+                        node: 0,
+                        elapsed_s: 10.0,
+                        useful_s: 34.0,
+                        mpi_s: 2.0,
+                        mpi_worker_idle_s: 6.0,
+                        omp_serialization_s: 0.7,
+                        omp_scheduling_s: 0.4,
+                        omp_barrier_s: 0.9,
+                        useful_instructions: 900_000,
+                        useful_cycles: 450_000,
+                    },
+                ],
+            }],
+            git: Some(GitMeta {
+                commit: "9dc04ca0".into(),
+                branch: "main".into(),
+                commit_timestamp: 1_721_000_000,
+                message: "fix scaling bug".into(),
+            }),
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_everything() {
+        let r = sample();
+        let j = r.to_json();
+        let back = RunData::from_json(&j).unwrap();
+        assert_eq!(back.app, "tealeaf");
+        assert_eq!(back.ranks, 2);
+        assert_eq!(back.threads, 4);
+        assert_eq!(back.timestamp, r.timestamp);
+        let g = back.region("Global").unwrap();
+        assert_eq!(g.procs.len(), 2);
+        assert!((g.procs[1].useful_s - 34.0).abs() < 1e-6);
+        assert_eq!(g.procs[0].useful_instructions, 1_000_000);
+        let git = back.git.unwrap();
+        assert_eq!(git.commit, "9dc04ca0");
+        assert_eq!(git.commit_timestamp, 1_721_000_000);
+    }
+
+    #[test]
+    fn effective_timestamp_prefers_git() {
+        let mut r = sample();
+        assert_eq!(r.effective_timestamp(), 1_721_000_000);
+        r.git = None;
+        assert_eq!(r.effective_timestamp(), 1_721_046_896);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let td = crate::util::fs::TempDir::new("talpjson").unwrap();
+        let path = td.path().join("sub/talp_2x4.json");
+        let r = sample();
+        r.write_file(&path).unwrap();
+        let back = RunData::read_file(&path).unwrap();
+        assert_eq!(back.resources().label(), "2x4");
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        for text in [
+            "{}",
+            r#"{"resources":{"num_mpi_ranks":0,"num_omp_threads":1}}"#,
+            r#"{"resources":{"num_mpi_ranks":1,"num_omp_threads":1},
+                "timestamp":"2024-01-01T00:00:00Z","regions":{}}"#,
+        ] {
+            let j = Json::parse(text).unwrap();
+            assert!(RunData::from_json(&j).is_err(), "{text}");
+        }
+    }
+
+    #[test]
+    fn rejects_process_count_mismatch() {
+        let mut r = sample();
+        r.regions[0].procs.pop();
+        let j = r.to_json();
+        assert!(RunData::from_json(&j).is_err());
+    }
+}

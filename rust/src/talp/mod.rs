@@ -1,0 +1,13 @@
+//! TALP: on-the-fly collection of POP raw measurements (the DLB module
+//! the paper builds on, reimplemented as a simulator `EventSink`).
+//!
+//! * [`accum`]   — per-(region, cpu) running timers.
+//! * [`monitor`] — the live monitor + its DLB-like cost model.
+//! * [`json`]    — the TALP JSON schema and the parsed [`json::RunData`].
+
+pub mod accum;
+pub mod json;
+pub mod monitor;
+
+pub use json::{GitMeta, ProcStats, RegionData, RunData};
+pub use monitor::{TalpMonitor, TalpReport, TALP_COST};

@@ -1,0 +1,547 @@
+//! The four tool chains the paper compares (§Comparison to other tools):
+//!
+//! | chain        | collection                         | post-processing              |
+//! |--------------|------------------------------------|------------------------------|
+//! | TALP(-Pages) | on-the-fly accumulators + counters | read JSONs, build table      |
+//! | CPT          | on-the-fly vector clocks, no ctrs  | copy files together          |
+//! | JSC          | Score-P profile run + trace run    | Scalasca parallel replay     |
+//! | BSC          | Extrae full trace + counters       | merge + Dimemas + basicanal. |
+//!
+//! `instrument` runs an app under one chain's collection side (clean
+//! baseline included, for Table 1's overhead); `postprocess` executes
+//! the chain's analysis side under a [`resources::ResourceMeter`]
+//! (Table 2) and emits that chain's scaling-efficiency table
+//! (Tables 6/7).
+
+pub mod cpt;
+pub mod postprocess;
+pub mod resources;
+pub mod scorep;
+pub mod trace;
+pub mod tracer;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::apps::Workload;
+use crate::pop::{self, ScalingTable};
+use crate::sim::{self, MachineSpec, ResourceConfig, RunConfig};
+use crate::talp::{ProcStats, RegionData, RunData, TalpMonitor};
+use crate::util::json::Json;
+
+use postprocess::basicanalysis::{self, CommSplitPerConfig};
+use postprocess::{dimemas, merge, scalasca};
+use resources::{ResourceMeter, ResourceUsage};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ToolKind {
+    Talp,
+    Cpt,
+    ScorepJsc,
+    ExtraeBsc,
+}
+
+impl ToolKind {
+    pub fn all() -> [ToolKind; 4] {
+        [ToolKind::Talp, ToolKind::Cpt, ToolKind::ScorepJsc, ToolKind::ExtraeBsc]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ToolKind::Talp => "DLB/TALP",
+            ToolKind::Cpt => "CPT",
+            ToolKind::ScorepJsc => "Score-P (JSC)",
+            ToolKind::ExtraeBsc => "Extrae (BSC)",
+        }
+    }
+
+    pub fn short(&self) -> &'static str {
+        match self {
+            ToolKind::Talp => "talp",
+            ToolKind::Cpt => "cpt",
+            ToolKind::ScorepJsc => "jsc",
+            ToolKind::ExtraeBsc => "bsc",
+        }
+    }
+}
+
+/// Result of running an app under one chain's collection side.
+#[derive(Debug, Clone)]
+pub struct InstrumentedRun {
+    pub tool: ToolKind,
+    pub app: String,
+    pub machine: String,
+    pub ranks: u32,
+    pub threads: u32,
+    pub nodes: u32,
+    /// Instrumented elapsed (max over the chain's app executions).
+    pub elapsed_s: f64,
+    /// Un-instrumented elapsed, same seed.
+    pub clean_elapsed_s: f64,
+    /// Number of application executions the chain required (Score-P's
+    /// POP preset needs two).
+    pub app_runs: u32,
+    pub output_dir: PathBuf,
+    /// Bytes the collection side left on disk.
+    pub output_bytes: u64,
+}
+
+impl InstrumentedRun {
+    /// Table 1's "runtime overhead".
+    pub fn overhead_fraction(&self) -> f64 {
+        if self.clean_elapsed_s <= 0.0 {
+            0.0
+        } else {
+            self.elapsed_s / self.clean_elapsed_s - 1.0
+        }
+    }
+}
+
+fn write_meta(
+    dir: &Path,
+    app: &dyn Workload,
+    machine: &MachineSpec,
+    res: &ResourceConfig,
+) -> Result<()> {
+    let mut meta = Json::obj();
+    meta.set("app", Json::Str(app.name().to_string()));
+    meta.set("machine", Json::Str(machine.name.clone()));
+    meta.set("ranks", Json::Num(res.n_ranks as f64));
+    meta.set("threads", Json::Num(res.threads_per_rank as f64));
+    meta.set("nodes", Json::Num(res.nodes_used(machine) as f64));
+    std::fs::write(dir.join("meta.json"), meta.to_string_pretty())?;
+    Ok(())
+}
+
+fn read_meta(dir: &Path) -> Result<(String, String, u32, u32, u32)> {
+    let text = std::fs::read_to_string(dir.join("meta.json"))
+        .with_context(|| format!("meta.json in {}", dir.display()))?;
+    let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+    Ok((
+        j.str_or("app", "unknown").to_string(),
+        j.str_or("machine", "mn5").to_string(),
+        j.num_or("ranks", 1.0) as u32,
+        j.num_or("threads", 1.0) as u32,
+        j.num_or("nodes", 1.0) as u32,
+    ))
+}
+
+/// Run `app` under chain `kind`, leaving the chain's raw outputs in
+/// `out_dir`.  A clean run (same seed) provides the overhead baseline.
+pub fn instrument(
+    kind: ToolKind,
+    app: &dyn Workload,
+    machine: &MachineSpec,
+    res: &ResourceConfig,
+    seed: u64,
+    timestamp: i64,
+    out_dir: &Path,
+) -> Result<InstrumentedRun> {
+    std::fs::create_dir_all(out_dir)?;
+    write_meta(out_dir, app, machine, res)?;
+    let program = app.build(res, machine);
+    let cfg = RunConfig::new(machine.clone(), res.clone()).with_seed(seed);
+    let clean = sim::run(&program, &cfg, &mut []);
+
+    let (elapsed, app_runs) = match kind {
+        ToolKind::Talp => {
+            let mut mon =
+                TalpMonitor::new(res.n_ranks, res.threads_per_rank);
+            let s = sim::run(&program, &cfg, &mut [&mut mon]);
+            let report = mon.finalize();
+            let data = RunData::from_report(
+                &report, app.name(), machine, res, timestamp,
+            );
+            data.write_file(&out_dir.join("talp.json"))?;
+            (s.elapsed_s, 1)
+        }
+        ToolKind::Cpt => {
+            let mut sink = cpt::CptSink::new(res.n_ranks);
+            let s = sim::run(&program, &cfg, &mut [&mut sink]);
+            sink.write_summary(&out_dir.join("cpt.json"))?;
+            (s.elapsed_s, 1)
+        }
+        ToolKind::ScorepJsc => {
+            // POP preset: profile pass, then trace pass with counters.
+            let mut prof = scorep::ScorepProfileSink::new(res.n_ranks);
+            let s1 = sim::run(&program, &cfg, &mut [&mut prof]);
+            prof.write_profile(&out_dir.join("profile.json"))?;
+            let mut tr = scorep::ScorepTraceSink::create(out_dir, res.n_ranks)?;
+            let s2 = sim::run(&program, &cfg, &mut [&mut tr]);
+            tr.finish(out_dir)?;
+            (s1.elapsed_s.max(s2.elapsed_s), 2)
+        }
+        ToolKind::ExtraeBsc => {
+            let mut sink = tracer::ExtraeSink::create(out_dir, res.n_ranks)?;
+            let s = sim::run(&program, &cfg, &mut [&mut sink]);
+            sink.finish(out_dir)?;
+            (s.elapsed_s, 1)
+        }
+    };
+    Ok(InstrumentedRun {
+        tool: kind,
+        app: app.name().to_string(),
+        machine: machine.name.clone(),
+        ranks: res.n_ranks,
+        threads: res.threads_per_rank,
+        nodes: res.nodes_used(machine),
+        elapsed_s: elapsed,
+        clean_elapsed_s: clean.elapsed_s,
+        app_runs,
+        output_dir: out_dir.to_path_buf(),
+        output_bytes: crate::util::fs::dir_size(out_dir),
+    })
+}
+
+/// Run chain `kind`'s post-processing over one experiment's runs (one
+/// per resource configuration) and produce its scaling-efficiency table
+/// for `region`, metering resources (Table 2).
+pub fn postprocess(
+    kind: ToolKind,
+    runs: &[&InstrumentedRun],
+    region: &str,
+) -> Result<(Option<ScalingTable>, ResourceUsage)> {
+    let mut meter = ResourceMeter::new();
+    meter.start();
+    let table = match kind {
+        ToolKind::Talp => {
+            let mut datas = Vec::new();
+            for run in runs {
+                let p = run.output_dir.join("talp.json");
+                let text = std::fs::read_to_string(&p)?;
+                meter.alloc(text.len() as u64);
+                meter.storage(text.len() as u64);
+                datas.push(RunData::from_json(
+                    &Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?,
+                )?);
+            }
+            let refs: Vec<&RunData> = datas.iter().collect();
+            pop::build(region, &refs)
+        }
+        ToolKind::Cpt => {
+            let mut datas = Vec::new();
+            let mut splits = Vec::new();
+            for run in runs {
+                let (data, split) = read_cpt_run(run)?;
+                let text_len =
+                    std::fs::metadata(run.output_dir.join("cpt.json"))?.len();
+                meter.alloc(text_len);
+                meter.storage(text_len);
+                datas.push(data);
+                splits.push(split);
+            }
+            let refs: Vec<&RunData> = datas.iter().collect();
+            let mut t =
+                basicanalysis::table_with_comm_split(region, &refs, &splits);
+            if let Some(t) = &mut t {
+                basicanalysis::blank_counter_rows(t);
+            }
+            t
+        }
+        ToolKind::ScorepJsc => {
+            let mut datas = Vec::new();
+            for run in runs {
+                let (app, machine_name, ranks, threads, nodes) =
+                    read_meta(&run.output_dir)?;
+                let machine = MachineSpec::by_name(&machine_name)
+                    .unwrap_or_else(MachineSpec::marenostrum5);
+                let res = ResourceConfig::new(ranks, threads);
+                let trace = merge::load(&run.output_dir, "otf2", &mut meter)?;
+                let mut wanted = vec!["Global".to_string()];
+                if region != "Global" {
+                    wanted.push(region.to_string());
+                }
+                let node_of = |r: u32| res.node_of_rank(r, &machine);
+                let regions = scalasca::analyze(
+                    &trace,
+                    &wanted,
+                    &node_of,
+                    &run.output_dir.join("cube.json"),
+                    &mut meter,
+                )?;
+                merge::unload(trace, &mut meter);
+                datas.push(RunData {
+                    dlb_version: "scorep-sim".into(),
+                    app,
+                    machine: machine_name,
+                    timestamp: 0,
+                    ranks,
+                    threads,
+                    nodes,
+                    regions,
+                    git: None,
+                });
+            }
+            let refs: Vec<&RunData> = datas.iter().collect();
+            pop::build(region, &refs)
+        }
+        ToolKind::ExtraeBsc => {
+            let mut datas = Vec::new();
+            let mut splits = Vec::new();
+            for run in runs {
+                let (app, machine_name, ranks, threads, nodes) =
+                    read_meta(&run.output_dir)?;
+                let machine = MachineSpec::by_name(&machine_name)
+                    .unwrap_or_else(MachineSpec::marenostrum5);
+                let res = ResourceConfig::new(ranks, threads);
+                let trace = merge::load(&run.output_dir, "prv", &mut meter)?;
+                // Dimemas: sequential network replay over the merged
+                // stream — the chain's dominating cost.
+                let split = dimemas::replay(
+                    &trace,
+                    dimemas::NetworkModel::default(),
+                    &mut meter,
+                );
+                let node_of = |r: u32| res.node_of_rank(r, &machine);
+                let mut regions = Vec::new();
+                let mut wanted = vec!["Global".to_string()];
+                if region != "Global" {
+                    wanted.push(region.to_string());
+                }
+                for w in &wanted {
+                    if let Some(rd) = merge::region_data(&trace, w, &node_of)
+                    {
+                        regions.push(rd);
+                    }
+                }
+                merge::unload(trace, &mut meter);
+                datas.push(RunData {
+                    dlb_version: "extrae-sim".into(),
+                    app,
+                    machine: machine_name,
+                    timestamp: 0,
+                    ranks,
+                    threads,
+                    nodes,
+                    regions,
+                    git: None,
+                });
+                splits.push(CommSplitPerConfig {
+                    wait_s: split.wait_s,
+                    transfer_s: split.transfer_s,
+                });
+            }
+            let refs: Vec<&RunData> = datas.iter().collect();
+            basicanalysis::table_with_comm_split(region, &refs, &splits)
+        }
+    };
+    meter.stop();
+    Ok((table, meter.usage()))
+}
+
+/// Parse a CPT summary into run data (zeroed counters) + comm split.
+fn read_cpt_run(run: &InstrumentedRun) -> Result<(RunData, CommSplitPerConfig)> {
+    let p = run.output_dir.join("cpt.json");
+    let text = std::fs::read_to_string(&p)
+        .with_context(|| format!("reading {}", p.display()))?;
+    let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let (app, machine_name, ranks, threads, nodes) =
+        read_meta(&run.output_dir)?;
+    let machine = MachineSpec::by_name(&machine_name)
+        .unwrap_or_else(MachineSpec::marenostrum5);
+    let res = ResourceConfig::new(ranks, threads);
+    let mut regions = Vec::new();
+    let mut wait_global = vec![0.0; ranks as usize];
+    let mut transfer_global = vec![0.0; ranks as usize];
+    for (name, arr) in j
+        .get("regions")
+        .and_then(Json::as_obj)
+        .context("cpt.json: regions")?
+    {
+        let mut procs = Vec::new();
+        let mut max_elapsed = 0.0f64;
+        for pj in arr.as_arr().context("region array")? {
+            let rank = pj.num_or("rank", 0.0) as u32;
+            let elapsed = pj.num_or("elapsed_s", 0.0);
+            max_elapsed = max_elapsed.max(elapsed);
+            if name == "Global" {
+                wait_global[rank as usize] = pj.num_or("mpi_wait_s", 0.0);
+                transfer_global[rank as usize] =
+                    pj.num_or("mpi_transfer_s", 0.0);
+            }
+            procs.push(ProcStats {
+                rank,
+                node: res.node_of_rank(rank, &machine),
+                elapsed_s: elapsed,
+                useful_s: pj.num_or("useful_s", 0.0),
+                mpi_s: pj.num_or("mpi_s", 0.0),
+                mpi_worker_idle_s: pj.num_or("mpi_worker_idle_s", 0.0),
+                omp_serialization_s: pj.num_or("omp_serialization_s", 0.0),
+                omp_scheduling_s: pj.num_or("omp_scheduling_s", 0.0),
+                omp_barrier_s: pj.num_or("omp_barrier_s", 0.0),
+                useful_instructions: 0, // no counters!
+                useful_cycles: 0,
+            });
+        }
+        // Global elapsed: the engine closes it at per-rank end times but
+        // CPT stores per-rank elapsed directly.
+        regions.push(RegionData {
+            name: name.clone(),
+            elapsed_s: if name == "Global" {
+                j.num_or("elapsed_s", max_elapsed)
+            } else {
+                max_elapsed
+            },
+            visits: 1,
+            procs,
+        });
+    }
+    Ok((
+        RunData {
+            dlb_version: "cpt-sim".into(),
+            app,
+            machine: machine_name,
+            timestamp: 0,
+            ranks,
+            threads,
+            nodes,
+            regions,
+            git: None,
+        },
+        CommSplitPerConfig { wait_s: wait_global, transfer_s: transfer_global },
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::TeaLeaf;
+    use crate::util::fs::TempDir;
+
+    /// Scaled-down TeaLeaf with paper-like chunk granularity (~30 us per
+    /// chunk), so instrumentation perturbs without dominating — at the
+    /// perturbation floor the chains legitimately observe different
+    /// executions and no tool agreement can be expected.
+    fn small_tealeaf() -> TeaLeaf {
+        let mut t = TeaLeaf::with_grid(1200, 1200);
+        t.timesteps = 1;
+        t.cg_iters = 6;
+        t.cells_per_chunk = 4800; // 4 rows of the 1200-wide test grid
+        t.write_output = false;
+        t
+    }
+
+    /// The whole Tables 6/7 machinery, miniaturized: four chains, two
+    /// configs, one table each; every chain must agree on parallel
+    /// efficiency within a few points (the paper's headline claim 3).
+    #[test]
+    fn all_four_chains_agree_on_parallel_efficiency() {
+        let td = TempDir::new("tools-agree").unwrap();
+        let app = small_tealeaf();
+        let machine = MachineSpec::marenostrum5();
+        let configs =
+            [ResourceConfig::new(2, 8), ResourceConfig::new(4, 8)];
+        let mut pes: Vec<(ToolKind, f64)> = Vec::new();
+        for kind in ToolKind::all() {
+            let mut runs = Vec::new();
+            for cfg in &configs {
+                let dir = td
+                    .path()
+                    .join(kind.short())
+                    .join(cfg.label());
+                runs.push(
+                    instrument(kind, &app, &machine, cfg, 42, 0, &dir)
+                        .unwrap(),
+                );
+            }
+            let refs: Vec<&InstrumentedRun> = runs.iter().collect();
+            let (table, usage) = postprocess(kind, &refs, "Global").unwrap();
+            let table = table.expect("table");
+            assert_eq!(table.columns, vec!["2x8", "4x8"]);
+            assert!(usage.wall_time_s > 0.0);
+            pes.push((kind, table.cell("Parallel efficiency", 0).unwrap()));
+        }
+        let reference = pes[0].1;
+        for (kind, pe) in &pes {
+            assert!(
+                (pe - reference).abs() < 0.06,
+                "{} PE {} vs TALP {}",
+                kind.name(),
+                pe,
+                reference
+            );
+        }
+    }
+
+    #[test]
+    fn overheads_rank_and_trace_sizes_rank() {
+        let td = TempDir::new("tools-oh").unwrap();
+        let app = small_tealeaf();
+        let machine = MachineSpec::marenostrum5();
+        let cfg = ResourceConfig::new(2, 8);
+        let mut by_kind = std::collections::HashMap::new();
+        for kind in ToolKind::all() {
+            let dir = td.path().join(kind.short());
+            let run =
+                instrument(kind, &app, &machine, &cfg, 7, 0, &dir).unwrap();
+            assert!(
+                run.overhead_fraction() > 0.0,
+                "{} should cost something",
+                kind.name()
+            );
+            by_kind.insert(kind, run);
+        }
+        // Extrae writes the biggest outputs; TALP the smallest.
+        let bytes = |k: ToolKind| by_kind[&k].output_bytes;
+        assert!(bytes(ToolKind::ExtraeBsc) > bytes(ToolKind::ScorepJsc));
+        assert!(bytes(ToolKind::ScorepJsc) > bytes(ToolKind::Talp));
+        assert!(bytes(ToolKind::Talp) < 100_000);
+        // Score-P ran the app twice.
+        assert_eq!(by_kind[&ToolKind::ScorepJsc].app_runs, 2);
+    }
+
+    #[test]
+    fn cpt_table_has_blank_counter_rows_but_comm_split() {
+        let td = TempDir::new("tools-cpt").unwrap();
+        let app = small_tealeaf();
+        let machine = MachineSpec::marenostrum5();
+        let configs =
+            [ResourceConfig::new(2, 8), ResourceConfig::new(4, 8)];
+        let mut runs = Vec::new();
+        for cfg in &configs {
+            let dir = td.path().join(cfg.label());
+            runs.push(
+                instrument(ToolKind::Cpt, &app, &machine, cfg, 3, 0, &dir)
+                    .unwrap(),
+            );
+        }
+        let refs: Vec<&InstrumentedRun> = runs.iter().collect();
+        let (table, _) = postprocess(ToolKind::Cpt, &refs, "Global").unwrap();
+        let t = table.unwrap();
+        assert_eq!(t.cell("IPC scaling", 1), None);
+        assert_eq!(t.cell("Global efficiency", 0), None);
+        assert!(t.cell("MPI Serialization efficiency", 0).is_some());
+        assert!(t.cell("MPI Transfer efficiency", 0).is_some());
+        assert!(t.cell("Parallel efficiency", 0).is_some());
+    }
+
+    /// Table 2's shape: TALP's post-processing is orders of magnitude
+    /// cheaper than the trace chains, and BSC is the slowest.
+    #[test]
+    fn postprocessing_resource_ordering() {
+        let td = TempDir::new("tools-res").unwrap();
+        let app = small_tealeaf();
+        let machine = MachineSpec::marenostrum5();
+        let cfg = ResourceConfig::new(2, 8);
+        let mut usage = std::collections::HashMap::new();
+        for kind in ToolKind::all() {
+            let dir = td.path().join(kind.short());
+            let run =
+                instrument(kind, &app, &machine, &cfg, 5, 0, &dir).unwrap();
+            let (_, u) = postprocess(kind, &[&run], "Global").unwrap();
+            usage.insert(kind, u);
+        }
+        let mem = |k: ToolKind| usage[&k].peak_memory_bytes;
+        let sto = |k: ToolKind| usage[&k].storage_bytes;
+        assert!(
+            mem(ToolKind::Talp) * 10 < mem(ToolKind::ExtraeBsc),
+            "talp {} vs bsc {}",
+            mem(ToolKind::Talp),
+            mem(ToolKind::ExtraeBsc)
+        );
+        assert!(mem(ToolKind::Talp) * 5 < mem(ToolKind::ScorepJsc));
+        assert!(sto(ToolKind::Talp) * 10 < sto(ToolKind::ExtraeBsc));
+        assert!(mem(ToolKind::ExtraeBsc) >= mem(ToolKind::ScorepJsc));
+    }
+}

@@ -1,0 +1,173 @@
+//! Basicanalysis-like table generation: turns reconstructed run data
+//! plus a communication split into the final scaling-efficiency table
+//! (the BSC chain's last step; also reused for the CPT's table).
+
+use crate::pop::{self, Row, ScalingTable};
+use crate::talp::RunData;
+
+/// Per-config transfer/wait seconds per rank (from dimemas::replay or
+/// the CPT's online piggybacking).
+#[derive(Debug, Clone, Default)]
+pub struct CommSplitPerConfig {
+    pub wait_s: Vec<f64>,
+    pub transfer_s: Vec<f64>,
+}
+
+/// Build the table and append the MPI Serialization/Transfer efficiency
+/// rows (the split only trace-replay or vector-clock tools can compute).
+///
+/// Definitions (consistent with pop::metrics):
+///   SerE     = max_p(E_p - wait_p) / E   (efficiency on an ideal network)
+///   TransferE = CommE / SerE
+pub fn table_with_comm_split(
+    region: &str,
+    runs: &[&RunData],
+    splits: &[CommSplitPerConfig],
+) -> Option<ScalingTable> {
+    assert_eq!(runs.len(), splits.len());
+    let mut table = pop::build(region, runs)?;
+
+    // Recover the column order the table used (sorted by resources).
+    let mut order: Vec<usize> = (0..runs.len()).collect();
+    order.sort_by_key(|&i| {
+        (runs[i].resources().total_cpus(), runs[i].ranks, runs[i].threads)
+    });
+
+    let mut ser_cells = Vec::with_capacity(order.len());
+    let mut xfer_cells = Vec::with_capacity(order.len());
+    for (col, &i) in order.iter().enumerate() {
+        let run = runs[i];
+        let split = &splits[i];
+        let Some(reg) = run.region(region) else {
+            ser_cells.push(None);
+            xfer_cells.push(None);
+            continue;
+        };
+        let e = reg.elapsed_s.max(1e-12);
+        let ser = reg
+            .procs
+            .iter()
+            .map(|p| {
+                let wait =
+                    split.wait_s.get(p.rank as usize).copied().unwrap_or(0.0);
+                (p.elapsed_s - wait).max(0.0)
+            })
+            .fold(0.0f64, f64::max)
+            / e;
+        let ser = ser.clamp(0.0, 1.0);
+        let comm_e = table.cell("MPI Communication efficiency", col);
+        let xfer = comm_e.map(|c| if ser > 0.0 { (c / ser).clamp(0.0, 1.0) } else { 0.0 });
+        ser_cells.push(Some(ser));
+        xfer_cells.push(xfer);
+    }
+    let ncols = table.columns.len();
+    table.insert_after(
+        "MPI Communication efficiency",
+        Row {
+            label: "MPI Serialization efficiency".into(),
+            depth: 4,
+            cells: ser_cells.into_iter().take(ncols).collect(),
+            is_footer: false,
+        },
+    );
+    table.insert_after(
+        "MPI Serialization efficiency",
+        Row {
+            label: "MPI Transfer efficiency".into(),
+            depth: 4,
+            cells: xfer_cells.into_iter().take(ncols).collect(),
+            is_footer: false,
+        },
+    );
+    Some(table)
+}
+
+/// Blank the counter-derived rows (what the CPT cannot measure).
+pub fn blank_counter_rows(table: &mut ScalingTable) {
+    for label in [
+        "Global efficiency",
+        "Computation scalability",
+        "Instructions scaling",
+        "IPC scaling",
+        "Frequency scaling",
+        "Useful IPC",
+        "Frequency [GHz]",
+    ] {
+        table.blank_row(label);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::talp::{ProcStats, RegionData};
+
+    fn run(ranks: u32, useful: f64, mpi: f64, e: f64) -> RunData {
+        let procs = (0..ranks)
+            .map(|r| ProcStats {
+                rank: r,
+                node: 0,
+                elapsed_s: e,
+                useful_s: useful,
+                mpi_s: mpi,
+                useful_instructions: 1000,
+                useful_cycles: 500,
+                ..Default::default()
+            })
+            .collect();
+        RunData {
+            dlb_version: "t".into(),
+            app: "t".into(),
+            machine: "mn5".into(),
+            timestamp: 0,
+            ranks,
+            threads: 1,
+            nodes: 1,
+            regions: vec![RegionData {
+                name: "Global".into(),
+                elapsed_s: e,
+                visits: 1,
+                procs,
+            }],
+            git: None,
+        }
+    }
+
+    #[test]
+    fn split_rows_inserted_and_bounded() {
+        let a = run(2, 8.0, 2.0, 10.0);
+        let b = run(4, 3.5, 1.5, 5.0);
+        let splits = vec![
+            CommSplitPerConfig {
+                wait_s: vec![1.5, 0.5],
+                transfer_s: vec![0.5, 0.5],
+            },
+            CommSplitPerConfig {
+                wait_s: vec![1.0, 0.2, 0.2, 0.2],
+                transfer_s: vec![0.5, 0.3, 0.3, 0.3],
+            },
+        ];
+        let t = table_with_comm_split("Global", &[&a, &b], &splits).unwrap();
+        for col in 0..2 {
+            let ser = t.cell("MPI Serialization efficiency", col).unwrap();
+            let xfer = t.cell("MPI Transfer efficiency", col).unwrap();
+            let comm = t.cell("MPI Communication efficiency", col).unwrap();
+            assert!((0.0..=1.0).contains(&ser));
+            assert!((0.0..=1.0).contains(&xfer));
+            // product reconstructs CommE
+            assert!((ser * xfer - comm).abs() < 1e-9, "{ser}*{xfer} != {comm}");
+            assert!(ser >= comm - 1e-9, "ideal network can't be worse");
+        }
+    }
+
+    #[test]
+    fn blanking_counter_rows() {
+        let a = run(2, 8.0, 2.0, 10.0);
+        let splits = vec![CommSplitPerConfig::default()];
+        let mut t = table_with_comm_split("Global", &[&a], &splits).unwrap();
+        blank_counter_rows(&mut t);
+        assert_eq!(t.cell("IPC scaling", 0), None);
+        assert_eq!(t.cell("Global efficiency", 0), None);
+        assert!(t.cell("Parallel efficiency", 0).is_some());
+    }
+}

@@ -1,0 +1,249 @@
+//! Trace loading and event->region attribution (the "merge" step both
+//! trace-based chains start with).
+//!
+//! This is where Table 2's memory floor comes from: the whole trace is
+//! materialized in memory before analysis can start (the paper's 19-138
+//! GB), metered through [`ResourceMeter`].
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::talp::{ProcStats, RegionData};
+use crate::tools::resources::ResourceMeter;
+use crate::tools::trace::{
+    self, TraceRecord, KIND_REGION_ENTER, KIND_REGION_EXIT, RECORD_BYTES,
+};
+use crate::util::json::Json;
+
+/// A trace fully loaded in memory.
+pub struct LoadedTrace {
+    /// Records per rank, in file order (time-ordered per rank).
+    pub per_rank: Vec<Vec<TraceRecord>>,
+    pub region_names: Vec<String>,
+    pub total_records: u64,
+}
+
+/// Load every rank file of `dir` (extension `ext`), metering memory and
+/// storage.
+pub fn load(dir: &Path, ext: &str, meter: &mut ResourceMeter) -> Result<LoadedTrace> {
+    let files = trace::rank_files(dir, ext);
+    anyhow::ensure!(!files.is_empty(), "no trace files in {}", dir.display());
+    let mut per_rank = Vec::with_capacity(files.len());
+    let mut total = 0u64;
+    for f in &files {
+        let recs = trace::read_rank_file(f)
+            .with_context(|| format!("loading {}", f.display()))?;
+        meter.alloc((recs.len() * std::mem::size_of::<TraceRecord>()) as u64);
+        meter.storage((recs.len() * RECORD_BYTES) as u64);
+        total += recs.len() as u64;
+        per_rank.push(recs);
+    }
+    let region_names = read_region_names(dir)?;
+    Ok(LoadedTrace { per_rank, region_names, total_records: total })
+}
+
+fn read_region_names(dir: &Path) -> Result<Vec<String>> {
+    let p = dir.join("regions.json");
+    let text = std::fs::read_to_string(&p)
+        .with_context(|| format!("reading {}", p.display()))?;
+    let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+    Ok(j.get("regions")
+        .and_then(Json::as_arr)
+        .map(|a| {
+            a.iter()
+                .filter_map(|v| v.as_str().map(str::to_string))
+                .collect()
+        })
+        .unwrap_or_default())
+}
+
+/// Reconstruct one region's per-process stats from a loaded trace —
+/// what Scalasca/Basicanalysis derive during replay.
+///
+/// `node_of_rank` supplies placement (from the run's meta.json).
+pub fn region_data(
+    trace: &LoadedTrace,
+    region: &str,
+    node_of_rank: &dyn Fn(u32) -> u32,
+) -> Option<RegionData> {
+    let region_id = trace
+        .region_names
+        .iter()
+        .position(|n| n == region)? as u64;
+    let mut procs: Vec<ProcStats> = Vec::with_capacity(trace.per_rank.len());
+    let mut max_elapsed = 0.0f64;
+    let mut visits = 0u64;
+    for (rank, recs) in trace.per_rank.iter().enumerate() {
+        // Pass 1: the region's open intervals on this rank.
+        let mut windows: Vec<(f64, f64)> = Vec::new();
+        let mut open: Option<f64> = None;
+        for r in recs {
+            if r.instructions == region_id {
+                if r.kind == KIND_REGION_ENTER {
+                    open = Some(r.t_start);
+                } else if r.kind == KIND_REGION_EXIT {
+                    if let Some(t0) = open.take() {
+                        windows.push((t0, r.t_start));
+                    }
+                }
+            }
+        }
+        if let Some(t0) = open {
+            // unterminated (crashed run): close at last record time.
+            let t_last = recs.last().map(|r| r.t_end).unwrap_or(t0);
+            windows.push((t0, t_last));
+        }
+        if rank == 0 {
+            visits = windows.len() as u64;
+        }
+        let elapsed: f64 = windows.iter().map(|(a, b)| (b - a).max(0.0)).sum();
+        max_elapsed = max_elapsed.max(elapsed);
+
+        // Pass 2: accumulate phases falling inside the windows.
+        let mut p = ProcStats {
+            rank: rank as u32,
+            node: node_of_rank(rank as u32),
+            elapsed_s: elapsed,
+            ..Default::default()
+        };
+        let mut wi = 0usize;
+        for r in recs {
+            if r.kind == KIND_REGION_ENTER || r.kind == KIND_REGION_EXIT {
+                continue;
+            }
+            // advance window cursor (records are time-ordered per rank)
+            while wi < windows.len() && r.t_start >= windows[wi].1 {
+                wi += 1;
+            }
+            if wi >= windows.len() {
+                break;
+            }
+            if r.t_start < windows[wi].0 {
+                continue;
+            }
+            let dur = (r.t_end - r.t_start).max(0.0);
+            match r.kind {
+                trace::KIND_USEFUL => {
+                    p.useful_s += dur;
+                    p.useful_instructions += r.instructions;
+                    p.useful_cycles += r.cycles;
+                }
+                trace::KIND_IO => p.useful_s += dur,
+                trace::KIND_MPI => p.mpi_s += dur,
+                trace::KIND_MPI_WORKER_IDLE => p.mpi_worker_idle_s += dur,
+                trace::KIND_OMP_SERIAL => p.omp_serialization_s += dur,
+                trace::KIND_OMP_SCHED => p.omp_scheduling_s += dur,
+                trace::KIND_OMP_BARRIER => p.omp_barrier_s += dur,
+                _ => {}
+            }
+        }
+        procs.push(p);
+    }
+    Some(RegionData {
+        name: region.to_string(),
+        elapsed_s: max_elapsed,
+        visits,
+        procs,
+    })
+}
+
+/// Free a loaded trace's metered memory.
+pub fn unload(trace: LoadedTrace, meter: &mut ResourceMeter) {
+    for recs in &trace.per_rank {
+        meter.free((recs.len() * std::mem::size_of::<TraceRecord>()) as u64);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::{Synthetic, Workload};
+    use crate::pop;
+    use crate::sim::{self, MachineSpec, ResourceConfig, RunConfig};
+    use crate::talp::TalpMonitor;
+    use crate::tools::tracer::ExtraeSink;
+    use crate::util::fs::TempDir;
+
+    /// Trace-reconstructed metrics must agree with TALP's on-the-fly
+    /// ones — this is the Tables 6/7 "all tools tell the same story"
+    /// property, as a test.
+    #[test]
+    fn trace_reconstruction_matches_talp() {
+        let app = Synthetic {
+            phases: 8,
+            rank_weights: vec![1.0, 1.3],
+            serial_fraction: 0.2,
+            ..Synthetic::default()
+        };
+        let res = ResourceConfig::new(2, 4);
+        let machine = MachineSpec::marenostrum5();
+        let prog = app.build(&res, &machine);
+
+        // TALP run.
+        let cfg = RunConfig::new(machine.clone(), res.clone()).with_seed(5);
+        let mut talp = TalpMonitor::new(2, 4);
+        sim::run(&prog, &cfg, &mut [&mut talp]);
+        let talp_data = crate::talp::RunData::from_report(
+            &talp.finalize(),
+            "synthetic",
+            &machine,
+            &res,
+            0,
+        );
+
+        // Extrae run (same seed; slightly different perturbation).
+        let td = TempDir::new("merge").unwrap();
+        let mut sink = ExtraeSink::create(td.path(), 2).unwrap();
+        sim::run(&prog, &cfg, &mut [&mut sink]);
+        sink.finish(td.path()).unwrap();
+
+        let mut meter = ResourceMeter::new();
+        let trace = load(td.path(), "prv", &mut meter).unwrap();
+        let reg = region_data(&trace, "work", &|_| 0).unwrap();
+        let talp_reg = talp_data.region("work").unwrap();
+
+        let mt = pop::compute(talp_reg, 4);
+        let mx = pop::compute(&reg, 4);
+        assert!(
+            (mt.parallel_efficiency - mx.parallel_efficiency).abs() < 0.05,
+            "PE: talp {} vs trace {}",
+            mt.parallel_efficiency,
+            mx.parallel_efficiency
+        );
+        assert!(
+            (mt.mpi_load_balance - mx.mpi_load_balance).abs() < 0.05
+        );
+        // Counters identical up to chunk-split rounding.
+        let rel = (mt.total_useful_instructions as f64
+            - mx.total_useful_instructions as f64)
+            .abs()
+            / mt.total_useful_instructions as f64;
+        assert!(rel < 0.01, "instructions differ {rel}");
+        assert!(meter.usage().peak_memory_bytes > 0);
+        assert!(meter.usage().storage_bytes > 0);
+    }
+
+    #[test]
+    fn missing_region_returns_none() {
+        let td = TempDir::new("merge2").unwrap();
+        let app = Synthetic::default();
+        let res = ResourceConfig::new(1, 2);
+        let machine = MachineSpec::marenostrum5();
+        let cfg = RunConfig::new(machine.clone(), res.clone());
+        let mut sink = ExtraeSink::create(td.path(), 1).unwrap();
+        sim::run(&app.build(&res, &machine), &cfg, &mut [&mut sink]);
+        sink.finish(td.path()).unwrap();
+        let mut meter = ResourceMeter::new();
+        let trace = load(td.path(), "prv", &mut meter).unwrap();
+        assert!(region_data(&trace, "nonexistent", &|_| 0).is_none());
+        assert!(region_data(&trace, "Global", &|_| 0).is_some());
+    }
+
+    #[test]
+    fn load_rejects_empty_dir() {
+        let td = TempDir::new("merge3").unwrap();
+        let mut meter = ResourceMeter::new();
+        assert!(load(td.path(), "prv", &mut meter).is_err());
+    }
+}

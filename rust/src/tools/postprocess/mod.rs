@@ -1,0 +1,9 @@
+//! Post-processing chains of the trace-based tool suites:
+//! [`merge`] (trace loading + event attribution), [`scalasca`] (JSC
+//! parallel replay), [`dimemas`] (BSC sequential network replay) and
+//! [`basicanalysis`] (final table synthesis with the comm split).
+
+pub mod basicanalysis;
+pub mod dimemas;
+pub mod merge;
+pub mod scalasca;

@@ -1,0 +1,154 @@
+//! Resource metering for post-processing chains (Table 2).
+//!
+//! Three dimensions, matching the paper: peak *memory* the chain needed,
+//! *storage* it read/wrote on disk, and wall-clock *time*.  Memory is
+//! tracked by explicit accounting (post-processors register their big
+//! allocations) — deterministic and allocator-independent; storage is
+//! real bytes on disk; time is real wall time of this process.
+
+use std::time::Instant;
+
+/// Accumulates one chain's resource usage.
+#[derive(Debug, Default)]
+pub struct ResourceMeter {
+    current_bytes: u64,
+    peak_bytes: u64,
+    storage_bytes: u64,
+    started: Option<Instant>,
+    elapsed_s: f64,
+}
+
+/// Final, reportable usage.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ResourceUsage {
+    pub peak_memory_bytes: u64,
+    pub storage_bytes: u64,
+    pub wall_time_s: f64,
+}
+
+impl ResourceMeter {
+    pub fn new() -> ResourceMeter {
+        ResourceMeter::default()
+    }
+
+    pub fn start(&mut self) {
+        self.started = Some(Instant::now());
+    }
+
+    pub fn stop(&mut self) {
+        if let Some(t0) = self.started.take() {
+            self.elapsed_s += t0.elapsed().as_secs_f64();
+        }
+    }
+
+    /// Register an allocation of `bytes` held by the chain.
+    pub fn alloc(&mut self, bytes: u64) {
+        self.current_bytes += bytes;
+        self.peak_bytes = self.peak_bytes.max(self.current_bytes);
+    }
+
+    /// Register freeing `bytes`.
+    pub fn free(&mut self, bytes: u64) {
+        self.current_bytes = self.current_bytes.saturating_sub(bytes);
+    }
+
+    /// Register bytes read from or written to disk.
+    pub fn storage(&mut self, bytes: u64) {
+        self.storage_bytes += bytes;
+    }
+
+    /// If the chain has multiple steps, Table 2 takes the max per step;
+    /// merge peak memory with max, storage and time with sum.
+    pub fn merge_step(&mut self, other: &ResourceUsage) {
+        self.peak_bytes = self.peak_bytes.max(other.peak_memory_bytes);
+        self.storage_bytes += other.storage_bytes;
+        self.elapsed_s += other.wall_time_s;
+    }
+
+    pub fn usage(&self) -> ResourceUsage {
+        ResourceUsage {
+            peak_memory_bytes: self.peak_bytes,
+            storage_bytes: self.storage_bytes,
+            wall_time_s: self.elapsed_s
+                + self
+                    .started
+                    .map(|t| t.elapsed().as_secs_f64())
+                    .unwrap_or(0.0),
+        }
+    }
+}
+
+impl ResourceUsage {
+    pub fn zero() -> ResourceUsage {
+        ResourceUsage {
+            peak_memory_bytes: 0,
+            storage_bytes: 0,
+            wall_time_s: 0.0,
+        }
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "mem {} | storage {} | time {}",
+            crate::util::stats::fmt_bytes(self.peak_memory_bytes),
+            crate::util::stats::fmt_bytes(self.storage_bytes),
+            crate::util::stats::fmt_duration(self.wall_time_s)
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peak_tracks_high_water_mark() {
+        let mut m = ResourceMeter::new();
+        m.alloc(100);
+        m.alloc(200);
+        m.free(150);
+        m.alloc(50);
+        let u = m.usage();
+        assert_eq!(u.peak_memory_bytes, 300);
+    }
+
+    #[test]
+    fn time_accumulates_across_start_stop() {
+        let mut m = ResourceMeter::new();
+        m.start();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        m.stop();
+        m.start();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        m.stop();
+        assert!(m.usage().wall_time_s >= 0.008);
+    }
+
+    #[test]
+    fn merge_takes_max_memory_sum_rest() {
+        let mut m = ResourceMeter::new();
+        m.alloc(100);
+        m.storage(10);
+        m.merge_step(&ResourceUsage {
+            peak_memory_bytes: 500,
+            storage_bytes: 20,
+            wall_time_s: 1.0,
+        });
+        let u = m.usage();
+        assert_eq!(u.peak_memory_bytes, 500);
+        assert_eq!(u.storage_bytes, 30);
+        assert!(u.wall_time_s >= 1.0);
+    }
+
+    #[test]
+    fn summary_formats() {
+        let u = ResourceUsage {
+            peak_memory_bytes: 2_000_000_000,
+            storage_bytes: 1000,
+            wall_time_s: 2.0,
+        };
+        let s = u.summary();
+        assert!(s.contains("2.00GB"));
+        assert!(s.contains("2.00s"));
+    }
+}

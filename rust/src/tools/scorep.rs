@@ -1,0 +1,257 @@
+//! Score-P-like collection (the JSC toolchain's side).
+//!
+//! The paper's POP preset runs the application **twice**: a profiling
+//! pass (cheap call-path aggregation, no counters) and a tracing pass
+//! with hardware counters.  The profile keeps per-(region, rank, thread,
+//! kind) aggregates in memory and writes a compact profile file; the
+//! trace pass writes OTF2-like per-rank record files that Scalasca
+//! post-processes.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::sim::{CostModel, Event, EventSink, RegionMark};
+use crate::util::json::Json;
+
+use super::trace::{TraceRecord, TraceWriter};
+
+pub const SCOREP_PROFILE_COST: CostModel = CostModel {
+    per_event_s: 3.5e-7,
+    per_counter_read_s: 0.0, // profile pass reads no counters
+    per_region_s: 4.0e-7,
+    per_mpi_s: 6.0e-7,
+    flush_every_bytes: 0,
+    flush_stall_s: 0.0,
+    bytes_per_event: 0,
+};
+
+pub const SCOREP_TRACE_COST: CostModel = CostModel {
+    per_event_s: 4.5e-7,
+    per_counter_read_s: 4.0e-7,
+    per_region_s: 5.0e-7,
+    per_mpi_s: 8.0e-7,
+    flush_every_bytes: 16 << 20,
+    flush_stall_s: 1.2e-3,
+    bytes_per_event: super::trace::RECORD_BYTES as u64,
+};
+
+/// Profiling pass: call-path aggregation.
+pub struct ScorepProfileSink {
+    /// (region stack top per rank) for call-path attribution.
+    stacks: Vec<Vec<String>>,
+    /// (region, rank, thread, kind) -> (time, count)
+    aggregates: HashMap<(String, u32, u32, u8), (f64, u64)>,
+    elapsed: f64,
+}
+
+impl ScorepProfileSink {
+    pub fn new(ranks: u32) -> ScorepProfileSink {
+        ScorepProfileSink {
+            stacks: vec![vec!["Global".to_string()]; ranks as usize],
+            aggregates: HashMap::new(),
+            elapsed: 0.0,
+        }
+    }
+
+    pub fn write_profile(&self, path: &Path) -> Result<()> {
+        let mut entries: Vec<Json> = Vec::new();
+        let mut keys: Vec<_> = self.aggregates.keys().collect();
+        keys.sort();
+        for k in keys {
+            let (t, n) = self.aggregates[k];
+            entries.push(Json::from_pairs(vec![
+                ("region", Json::Str(k.0.clone())),
+                ("rank", Json::Num(k.1 as f64)),
+                ("thread", Json::Num(k.2 as f64)),
+                ("kind", Json::Num(k.3 as f64)),
+                ("time_s", Json::Num(t)),
+                ("visits", Json::Num(n as f64)),
+            ]));
+        }
+        let mut root = Json::obj();
+        root.set("format", Json::Str("cubex-sim".into()));
+        root.set("elapsed_s", Json::Num(self.elapsed));
+        root.set("entries", Json::Arr(entries));
+        std::fs::write(path, root.to_string_pretty())?;
+        Ok(())
+    }
+}
+
+impl EventSink for ScorepProfileSink {
+    fn name(&self) -> &str {
+        "scorep-profile"
+    }
+
+    fn cost_model(&self) -> CostModel {
+        SCOREP_PROFILE_COST
+    }
+
+    fn on_event(&mut self, ev: &Event) {
+        let top = self.stacks[ev.rank as usize]
+            .last()
+            .cloned()
+            .unwrap_or_else(|| "Global".to_string());
+        let key = (
+            top,
+            ev.rank,
+            ev.thread,
+            super::trace::kind_code(ev.kind),
+        );
+        let slot = self.aggregates.entry(key).or_insert((0.0, 0));
+        slot.0 += (ev.t_end - ev.t_start).max(0.0);
+        slot.1 += ev.sub_events.max(1);
+    }
+
+    fn on_region(&mut self, mark: &RegionMark) {
+        let stack = &mut self.stacks[mark.rank as usize];
+        if mark.enter {
+            stack.push(mark.name.clone());
+        } else if stack.len() > 1 {
+            stack.pop();
+        }
+    }
+
+    fn on_finalize(&mut self, elapsed: f64) {
+        self.elapsed = elapsed;
+    }
+}
+
+/// Tracing pass: OTF2-like records (with counters), same on-disk format
+/// as the Extrae sink but Score-P does *not* expand dynamic chunks into
+/// individual records (it aggregates at region granularity, which is why
+/// its traces are smaller — Table 2 JSC 29 GB vs BSC 165 GB).
+pub struct ScorepTraceSink {
+    writer: Option<TraceWriter>,
+    regions: Vec<String>,
+    records: u64,
+    io_error: Option<anyhow::Error>,
+}
+
+impl ScorepTraceSink {
+    pub fn create(dir: &Path, ranks: u32) -> Result<ScorepTraceSink> {
+        Ok(ScorepTraceSink {
+            writer: Some(TraceWriter::create(dir, ranks, "otf2")?),
+            regions: Vec::new(),
+            records: 0,
+            io_error: None,
+        })
+    }
+
+    fn region_id(&mut self, name: &str) -> u64 {
+        if let Some(i) = self.regions.iter().position(|r| r == name) {
+            return i as u64;
+        }
+        self.regions.push(name.to_string());
+        (self.regions.len() - 1) as u64
+    }
+
+    fn write(&mut self, rec: TraceRecord) {
+        if self.io_error.is_some() {
+            return;
+        }
+        if let Some(w) = &mut self.writer {
+            match w.write(&rec) {
+                Ok(()) => self.records += 1,
+                Err(e) => self.io_error = Some(e),
+            }
+        }
+    }
+
+    pub fn finish(mut self, dir: &Path) -> Result<u64> {
+        if let Some(e) = self.io_error.take() {
+            return Err(e);
+        }
+        if let Some(w) = self.writer.take() {
+            w.finish()?;
+        }
+        let mut meta = Json::obj();
+        meta.set(
+            "regions",
+            Json::Arr(
+                self.regions.iter().map(|r| Json::Str(r.clone())).collect(),
+            ),
+        );
+        std::fs::write(dir.join("regions.json"), meta.to_string_pretty())?;
+        Ok(self.records)
+    }
+}
+
+impl EventSink for ScorepTraceSink {
+    fn name(&self) -> &str {
+        "scorep-trace"
+    }
+
+    fn cost_model(&self) -> CostModel {
+        SCOREP_TRACE_COST
+    }
+
+    fn on_event(&mut self, ev: &Event) {
+        // One record per phase event (sub_events collapse).
+        self.write(TraceRecord::from_event(ev));
+    }
+
+    fn on_region(&mut self, mark: &RegionMark) {
+        let id = self.region_id(&mark.name);
+        self.write(TraceRecord::from_region(mark, id));
+    }
+
+    fn on_finalize(&mut self, _elapsed: f64) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::{Synthetic, Workload};
+    use crate::sim::{self, MachineSpec, OmpSchedule, ResourceConfig, RunConfig};
+    use crate::util::fs::TempDir;
+
+    #[test]
+    fn profile_aggregates_by_region() {
+        let app = Synthetic {
+            phases: 5,
+            serial_fraction: 0.1,
+            ..Synthetic::default()
+        };
+        let res = ResourceConfig::new(2, 4);
+        let cfg = RunConfig::new(MachineSpec::marenostrum5(), res.clone());
+        let mut sink = ScorepProfileSink::new(2);
+        sim::run(&app.build(&res, &cfg.machine), &cfg, &mut [&mut sink]);
+        let td = TempDir::new("scorep").unwrap();
+        let p = td.path().join("profile.json");
+        sink.write_profile(&p).unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&p).unwrap()).unwrap();
+        let entries = j.get("entries").unwrap().as_arr().unwrap();
+        assert!(!entries.is_empty());
+        assert!(entries
+            .iter()
+            .any(|e| e.str_or("region", "") == "work"));
+        assert!(j.num_or("elapsed_s", 0.0) > 0.0);
+    }
+
+    #[test]
+    fn trace_is_smaller_than_extrae_for_same_run() {
+        let app = Synthetic {
+            phases: 4,
+            schedule: OmpSchedule::Dynamic { chunks: 64 },
+            ..Synthetic::default()
+        };
+        let res = ResourceConfig::new(2, 4);
+        let cfg = RunConfig::new(MachineSpec::marenostrum5(), res.clone());
+        let prog = app.build(&res, &cfg.machine);
+
+        let td1 = TempDir::new("sp-tr").unwrap();
+        let mut sp = ScorepTraceSink::create(td1.path(), 2).unwrap();
+        sim::run(&prog, &cfg, &mut [&mut sp]);
+        let n_sp = sp.finish(td1.path()).unwrap();
+
+        let td2 = TempDir::new("ex-tr").unwrap();
+        let mut ex =
+            super::super::tracer::ExtraeSink::create(td2.path(), 2).unwrap();
+        sim::run(&prog, &cfg, &mut [&mut ex]);
+        let n_ex = ex.finish(td2.path()).unwrap();
+
+        assert!(n_ex > 3 * n_sp, "extrae {n_ex} vs scorep {n_sp}");
+    }
+}

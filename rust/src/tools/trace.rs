@@ -1,0 +1,290 @@
+//! Binary trace format shared by the Extrae-like and Score-P-like
+//! tracers: fixed-size little-endian records, one file per rank, plus a
+//! text header with run metadata.  Post-processors stream these files
+//! back; their size is what Table 2's storage column measures.
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::sim::{CollKind, Event, PhaseKind, RegionMark};
+
+/// Record size on disk (bytes): see `encode`.
+pub const RECORD_BYTES: usize = 48;
+
+/// One trace record.  Phase records carry timing+counters; region
+/// records (kind = REGION_*) reuse t_start and stash the region id in
+/// `instructions`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceRecord {
+    pub rank: u32,
+    pub thread: u32,
+    pub t_start: f64,
+    pub t_end: f64,
+    pub kind: u8,
+    pub mpi_call: u8,
+    pub instructions: u64,
+    pub cycles: u64,
+    pub bytes: u64,
+}
+
+pub const KIND_USEFUL: u8 = 0;
+pub const KIND_MPI: u8 = 1;
+pub const KIND_OMP_SERIAL: u8 = 2;
+pub const KIND_MPI_WORKER_IDLE: u8 = 3;
+pub const KIND_OMP_SCHED: u8 = 4;
+pub const KIND_OMP_BARRIER: u8 = 5;
+pub const KIND_IO: u8 = 6;
+pub const KIND_REGION_ENTER: u8 = 7;
+pub const KIND_REGION_EXIT: u8 = 8;
+
+pub fn kind_code(k: PhaseKind) -> u8 {
+    match k {
+        PhaseKind::Useful => KIND_USEFUL,
+        PhaseKind::Mpi => KIND_MPI,
+        PhaseKind::OmpSerialization => KIND_OMP_SERIAL,
+        PhaseKind::MpiWorkerIdle => KIND_MPI_WORKER_IDLE,
+        PhaseKind::OmpScheduling => KIND_OMP_SCHED,
+        PhaseKind::OmpBarrier => KIND_OMP_BARRIER,
+        PhaseKind::Io => KIND_IO,
+    }
+}
+
+pub fn phase_kind(code: u8) -> Option<PhaseKind> {
+    Some(match code {
+        KIND_USEFUL => PhaseKind::Useful,
+        KIND_MPI => PhaseKind::Mpi,
+        KIND_OMP_SERIAL => PhaseKind::OmpSerialization,
+        KIND_MPI_WORKER_IDLE => PhaseKind::MpiWorkerIdle,
+        KIND_OMP_SCHED => PhaseKind::OmpScheduling,
+        KIND_OMP_BARRIER => PhaseKind::OmpBarrier,
+        KIND_IO => PhaseKind::Io,
+        _ => return None,
+    })
+}
+
+fn call_code(c: Option<CollKind>) -> u8 {
+    match c {
+        None => 0,
+        Some(CollKind::Barrier) => 1,
+        Some(CollKind::Allreduce) => 2,
+        Some(CollKind::Bcast) => 3,
+        Some(CollKind::Allgather) => 4,
+    }
+}
+
+impl TraceRecord {
+    pub fn from_event(ev: &Event) -> TraceRecord {
+        TraceRecord {
+            rank: ev.rank,
+            thread: ev.thread,
+            t_start: ev.t_start,
+            t_end: ev.t_end,
+            kind: kind_code(ev.kind),
+            mpi_call: call_code(ev.mpi_call),
+            instructions: ev.instructions,
+            cycles: ev.cycles,
+            bytes: ev.bytes,
+        }
+    }
+
+    pub fn from_region(mark: &RegionMark, region_id: u64) -> TraceRecord {
+        TraceRecord {
+            rank: mark.rank,
+            thread: 0,
+            t_start: mark.t,
+            t_end: mark.t,
+            kind: if mark.enter {
+                KIND_REGION_ENTER
+            } else {
+                KIND_REGION_EXIT
+            },
+            mpi_call: 0,
+            instructions: region_id,
+            cycles: 0,
+            bytes: 0,
+        }
+    }
+
+    pub fn encode(&self, out: &mut [u8; RECORD_BYTES]) {
+        out[0..4].copy_from_slice(&self.rank.to_le_bytes());
+        out[4..6].copy_from_slice(&(self.thread as u16).to_le_bytes());
+        out[6] = self.kind;
+        out[7] = self.mpi_call;
+        out[8..16].copy_from_slice(&self.t_start.to_le_bytes());
+        out[16..24].copy_from_slice(&self.t_end.to_le_bytes());
+        out[24..32].copy_from_slice(&self.instructions.to_le_bytes());
+        out[32..40].copy_from_slice(&self.cycles.to_le_bytes());
+        out[40..48].copy_from_slice(&self.bytes.to_le_bytes());
+    }
+
+    pub fn decode(buf: &[u8; RECORD_BYTES]) -> TraceRecord {
+        TraceRecord {
+            rank: u32::from_le_bytes(buf[0..4].try_into().unwrap()),
+            thread: u16::from_le_bytes(buf[4..6].try_into().unwrap()) as u32,
+            kind: buf[6],
+            mpi_call: buf[7],
+            t_start: f64::from_le_bytes(buf[8..16].try_into().unwrap()),
+            t_end: f64::from_le_bytes(buf[16..24].try_into().unwrap()),
+            instructions: u64::from_le_bytes(buf[24..32].try_into().unwrap()),
+            cycles: u64::from_le_bytes(buf[32..40].try_into().unwrap()),
+            bytes: u64::from_le_bytes(buf[40..48].try_into().unwrap()),
+        }
+    }
+}
+
+/// Streaming writer: one binary file per rank in `dir`.
+pub struct TraceWriter {
+    writers: Vec<BufWriter<std::fs::File>>,
+    pub records_written: u64,
+    dir: PathBuf,
+}
+
+impl TraceWriter {
+    pub fn create(dir: &Path, ranks: u32, ext: &str) -> Result<TraceWriter> {
+        std::fs::create_dir_all(dir)?;
+        let writers = (0..ranks)
+            .map(|r| {
+                let path = dir.join(format!("rank_{r:05}.{ext}"));
+                Ok(BufWriter::with_capacity(
+                    1 << 20,
+                    std::fs::File::create(&path).with_context(|| {
+                        format!("creating {}", path.display())
+                    })?,
+                ))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TraceWriter {
+            writers,
+            records_written: 0,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    pub fn write(&mut self, rec: &TraceRecord) -> Result<()> {
+        let mut buf = [0u8; RECORD_BYTES];
+        rec.encode(&mut buf);
+        self.writers[rec.rank as usize].write_all(&buf)?;
+        self.records_written += 1;
+        Ok(())
+    }
+
+    pub fn finish(mut self) -> Result<(PathBuf, u64)> {
+        for w in &mut self.writers {
+            w.flush()?;
+        }
+        Ok((self.dir, self.records_written))
+    }
+}
+
+/// Read every record of one rank file.
+pub fn read_rank_file(path: &Path) -> Result<Vec<TraceRecord>> {
+    let file = std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    let len = file.metadata()?.len();
+    if len % RECORD_BYTES as u64 != 0 {
+        bail!(
+            "{}: size {len} not a multiple of record size",
+            path.display()
+        );
+    }
+    let mut reader = BufReader::with_capacity(1 << 20, file);
+    let mut out = Vec::with_capacity((len / RECORD_BYTES as u64) as usize);
+    let mut buf = [0u8; RECORD_BYTES];
+    loop {
+        match reader.read_exact(&mut buf) {
+            Ok(()) => out.push(TraceRecord::decode(&buf)),
+            Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => break,
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(out)
+}
+
+/// All rank files of a trace directory, sorted.
+pub fn rank_files(dir: &Path, ext: &str) -> Vec<PathBuf> {
+    crate::util::fs::files_with_ext(dir, ext)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::fs::TempDir;
+
+    fn rec(rank: u32, kind: u8) -> TraceRecord {
+        TraceRecord {
+            rank,
+            thread: 3,
+            t_start: 1.25,
+            t_end: 2.5,
+            kind,
+            mpi_call: 2,
+            instructions: 123_456_789,
+            cycles: 987_654,
+            bytes: 4096,
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let r = rec(7, KIND_MPI);
+        let mut buf = [0u8; RECORD_BYTES];
+        r.encode(&mut buf);
+        assert_eq!(TraceRecord::decode(&buf), r);
+    }
+
+    #[test]
+    fn write_read_multi_rank() {
+        let td = TempDir::new("trace").unwrap();
+        let mut w = TraceWriter::create(td.path(), 3, "prv").unwrap();
+        for i in 0..100u32 {
+            w.write(&rec(i % 3, KIND_USEFUL)).unwrap();
+        }
+        let (dir, n) = w.finish().unwrap();
+        assert_eq!(n, 100);
+        let files = rank_files(&dir, "prv");
+        assert_eq!(files.len(), 3);
+        let r0 = read_rank_file(&files[0]).unwrap();
+        assert_eq!(r0.len(), 34); // ranks 0: i = 0,3,...,99
+        assert!(r0.iter().all(|r| r.rank == 0));
+    }
+
+    #[test]
+    fn file_size_matches_record_count() {
+        let td = TempDir::new("tracesz").unwrap();
+        let mut w = TraceWriter::create(td.path(), 1, "prv").unwrap();
+        for _ in 0..10 {
+            w.write(&rec(0, KIND_USEFUL)).unwrap();
+        }
+        let (dir, _) = w.finish().unwrap();
+        assert_eq!(
+            crate::util::fs::dir_size(&dir),
+            10 * RECORD_BYTES as u64
+        );
+    }
+
+    #[test]
+    fn corrupt_file_rejected() {
+        let td = TempDir::new("tracebad").unwrap();
+        let p = td.path().join("rank_00000.prv");
+        std::fs::write(&p, vec![0u8; RECORD_BYTES + 7]).unwrap();
+        assert!(read_rank_file(&p).is_err());
+    }
+
+    #[test]
+    fn kind_roundtrip() {
+        for k in [
+            PhaseKind::Useful,
+            PhaseKind::Mpi,
+            PhaseKind::OmpSerialization,
+            PhaseKind::MpiWorkerIdle,
+            PhaseKind::OmpScheduling,
+            PhaseKind::OmpBarrier,
+            PhaseKind::Io,
+        ] {
+            assert_eq!(phase_kind(kind_code(k)), Some(k));
+        }
+        assert_eq!(phase_kind(99), None);
+    }
+}

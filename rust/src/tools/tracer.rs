@@ -1,0 +1,188 @@
+//! Extrae-like full tracer (the BSC toolchain's collection side).
+//!
+//! Streams every event — including each dynamic-scheduling chunk — as a
+//! fixed-size binary record to per-rank files, with hardware counters
+//! read at every boundary.  Costs mirror that architecture: the highest
+//! per-event overhead of the four tools (Table 1) and trace volumes that
+//! dwarf TALP's JSON (Table 2), plus periodic buffer-flush stalls.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::sim::{CostModel, Event, EventSink, RegionMark};
+use crate::util::json::Json;
+
+use super::trace::{TraceRecord, TraceWriter};
+
+/// Extrae-like cost model (see DESIGN.md §5 calibration).
+pub const EXTRAE_COST: CostModel = CostModel {
+    per_event_s: 8.5e-7,
+    per_counter_read_s: 1.1e-6,
+    per_region_s: 9.0e-7,
+    per_mpi_s: 1.6e-6,
+    flush_every_bytes: 8 << 20,
+    flush_stall_s: 2.0e-3,
+    bytes_per_event: super::trace::RECORD_BYTES as u64,
+};
+
+pub struct ExtraeSink {
+    writer: Option<TraceWriter>,
+    regions: Vec<String>,
+    records: u64,
+    io_error: Option<anyhow::Error>,
+}
+
+impl ExtraeSink {
+    pub fn create(dir: &Path, ranks: u32) -> Result<ExtraeSink> {
+        Ok(ExtraeSink {
+            writer: Some(TraceWriter::create(dir, ranks, "prv")?),
+            regions: Vec::new(),
+            records: 0,
+            io_error: None,
+        })
+    }
+
+    fn region_id(&mut self, name: &str) -> u64 {
+        if let Some(i) = self.regions.iter().position(|r| r == name) {
+            return i as u64;
+        }
+        self.regions.push(name.to_string());
+        (self.regions.len() - 1) as u64
+    }
+
+    fn write(&mut self, rec: TraceRecord) {
+        if self.io_error.is_some() {
+            return;
+        }
+        if let Some(w) = &mut self.writer {
+            if let Err(e) = w.write(&rec) {
+                self.io_error = Some(e);
+            } else {
+                self.records += 1;
+            }
+        }
+    }
+
+    /// Flush files and write the metadata header; returns records written.
+    pub fn finish(mut self, dir: &Path) -> Result<u64> {
+        if let Some(e) = self.io_error.take() {
+            return Err(e);
+        }
+        if let Some(w) = self.writer.take() {
+            w.finish()?;
+        }
+        let mut meta = Json::obj();
+        meta.set(
+            "regions",
+            Json::Arr(
+                self.regions
+                    .iter()
+                    .map(|r| Json::Str(r.clone()))
+                    .collect(),
+            ),
+        );
+        std::fs::write(dir.join("regions.json"), meta.to_string_pretty())?;
+        Ok(self.records)
+    }
+}
+
+impl EventSink for ExtraeSink {
+    fn name(&self) -> &str {
+        "extrae"
+    }
+
+    fn cost_model(&self) -> CostModel {
+        EXTRAE_COST
+    }
+
+    fn on_event(&mut self, ev: &Event) {
+        let n = ev.sub_events.max(1);
+        if n == 1 {
+            self.write(TraceRecord::from_event(ev));
+            return;
+        }
+        // Expand fine-grained chunks into real records — this is what
+        // makes trace files explode at fine granularity.
+        let dt = (ev.t_end - ev.t_start) / n as f64;
+        let insn = ev.instructions / n;
+        let cyc = ev.cycles / n;
+        for i in 0..n {
+            let mut sub = ev.clone();
+            sub.t_start = ev.t_start + dt * i as f64;
+            sub.t_end = ev.t_start + dt * (i + 1) as f64;
+            sub.instructions = insn;
+            sub.cycles = cyc;
+            sub.sub_events = 1;
+            self.write(TraceRecord::from_event(&sub));
+        }
+    }
+
+    fn on_region(&mut self, mark: &RegionMark) {
+        let id = self.region_id(&mark.name);
+        self.write(TraceRecord::from_region(mark, id));
+    }
+
+    fn on_finalize(&mut self, _elapsed: f64) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::{Synthetic, Workload};
+    use crate::sim::{
+        self, MachineSpec, OmpSchedule, ResourceConfig, RunConfig,
+    };
+    use crate::util::fs::TempDir;
+
+    #[test]
+    fn traces_chunks_as_individual_records() {
+        let td = TempDir::new("extrae").unwrap();
+        let app = Synthetic {
+            phases: 3,
+            schedule: OmpSchedule::Dynamic { chunks: 64 },
+            ..Synthetic::default()
+        };
+        let res = ResourceConfig::new(2, 4);
+        let cfg = RunConfig::new(MachineSpec::marenostrum5(), res.clone());
+        let mut sink = ExtraeSink::create(td.path(), 2).unwrap();
+        let prog = app.build(&res, &cfg.machine);
+        sim::run(&prog, &cfg, &mut [&mut sink]);
+        let n = sink.finish(td.path()).unwrap();
+        // 3 phases x 2 ranks x 64 chunks = 384 useful records minimum.
+        assert!(n >= 384, "{n}");
+        let files = super::super::trace::rank_files(td.path(), "prv");
+        assert_eq!(files.len(), 2);
+        let recs = super::super::trace::read_rank_file(&files[0]).unwrap();
+        assert!(recs.iter().any(|r| r.kind == super::super::trace::KIND_MPI));
+        assert!(recs
+            .iter()
+            .any(|r| r.kind == super::super::trace::KIND_REGION_ENTER));
+    }
+
+    #[test]
+    fn chunk_expansion_preserves_totals() {
+        let td = TempDir::new("extrae2").unwrap();
+        let mut sink = ExtraeSink::create(td.path(), 1).unwrap();
+        let ev = Event {
+            rank: 0,
+            thread: 0,
+            t_start: 0.0,
+            t_end: 1.0,
+            kind: crate::sim::PhaseKind::Useful,
+            instructions: 1000,
+            cycles: 500,
+            mpi_call: None,
+            bytes: 0,
+            sub_events: 10,
+        };
+        sink.on_event(&ev);
+        sink.finish(td.path()).unwrap();
+        let files = super::super::trace::rank_files(td.path(), "prv");
+        let recs = super::super::trace::read_rank_file(&files[0]).unwrap();
+        assert_eq!(recs.len(), 10);
+        let total_insn: u64 = recs.iter().map(|r| r.instructions).sum();
+        assert_eq!(total_insn, 1000);
+        assert!((recs.last().unwrap().t_end - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,170 @@
+//! Minimal benchmark harness (criterion is unavailable offline).
+//!
+//! Provides warmup + repeated measurement with mean/stddev/min reporting
+//! and a `Table` pretty-printer used by the per-paper-table bench
+//! binaries (`cargo bench` runs them via `harness = false`).
+
+use std::time::Instant;
+
+use super::stats::{fmt_duration, Welford};
+
+/// One measured benchmark result.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub mean_s: f64,
+    pub stddev_s: f64,
+    pub min_s: f64,
+    pub iters: u32,
+}
+
+impl Measurement {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10} ± {:>9} (min {:>10}, n={})",
+            self.name,
+            fmt_duration(self.mean_s),
+            fmt_duration(self.stddev_s),
+            fmt_duration(self.min_s),
+            self.iters
+        )
+    }
+}
+
+/// Benchmark a closure: `warmup` unmeasured runs, then `iters` measured.
+pub fn bench<F: FnMut()>(name: &str, warmup: u32, iters: u32, mut f: F) -> Measurement {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut w = Welford::new();
+    let mut min_s = f64::INFINITY;
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        f();
+        let dt = t0.elapsed().as_secs_f64();
+        w.push(dt);
+        min_s = min_s.min(dt);
+    }
+    Measurement {
+        name: name.to_string(),
+        mean_s: w.mean(),
+        stddev_s: w.stddev(),
+        min_s,
+        iters: iters.max(1),
+    }
+}
+
+/// Text table builder for bench outputs that mirror the paper's tables.
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn row_strs(&mut self, cells: &[&str]) {
+        self.row(&cells.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> =
+            self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let sep: String = widths
+            .iter()
+            .map(|w| "-".repeat(w + 2))
+            .collect::<Vec<_>>()
+            .join("+");
+        let fmt_row = |cells: &[String]| -> String {
+            (0..ncol)
+                .map(|i| format!(" {:<width$} ", cells[i], width = widths[i]))
+                .collect::<Vec<_>>()
+                .join("|")
+        };
+        let mut out = format!("== {} ==\n", self.title);
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_positive_time() {
+        let m = bench("spin", 1, 5, || {
+            let mut x = 0u64;
+            for i in 0..10_000 {
+                x = x.wrapping_add(i);
+            }
+            std::hint::black_box(x);
+        });
+        assert!(m.mean_s > 0.0);
+        assert!(m.min_s <= m.mean_s);
+        assert_eq!(m.iters, 5);
+        assert!(m.report().contains("spin"));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["metric", "2x56", "4x56"]);
+        t.row_strs(&["Parallel efficiency", "0.90", "0.63"]);
+        t.row_strs(&["IPC scalability", "1.00", "3.10"]);
+        let r = t.render();
+        assert!(r.contains("== demo =="));
+        assert!(r.contains("Parallel efficiency"));
+        // Columns aligned: every data line has the same pipe positions.
+        let lines: Vec<&str> =
+            r.lines().filter(|l| l.contains('|')).collect();
+        let pipes: Vec<usize> = lines[0]
+            .char_indices()
+            .filter(|(_, c)| *c == '|')
+            .map(|(i, _)| i)
+            .collect();
+        for l in &lines {
+            let p: Vec<usize> = l
+                .char_indices()
+                .filter(|(_, c)| *c == '|')
+                .map(|(i, _)| i)
+                .collect();
+            assert_eq!(p, pipes);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity mismatch")]
+    fn table_rejects_bad_arity() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row_strs(&["only-one"]);
+    }
+}

@@ -1,0 +1,166 @@
+//! Filesystem helpers: scoped temp dirs (tempfile crate unavailable),
+//! recursive copy, and directory size accounting (Table 2's storage
+//! column measures real bytes on disk).
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{Context, Result};
+
+static TEMP_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// A temp directory removed on drop.
+pub struct TempDir {
+    path: PathBuf,
+}
+
+impl TempDir {
+    pub fn new(label: &str) -> Result<TempDir> {
+        let n = TEMP_COUNTER.fetch_add(1, Ordering::Relaxed);
+        let path = std::env::temp_dir().join(format!(
+            "talp-pages-{}-{}-{}",
+            label,
+            std::process::id(),
+            n
+        ));
+        std::fs::create_dir_all(&path)
+            .with_context(|| format!("creating temp dir {}", path.display()))?;
+        Ok(TempDir { path })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Leak the directory (keep it on disk), returning the path.
+    pub fn into_path(mut self) -> PathBuf {
+        std::mem::take(&mut self.path)
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        if !self.path.as_os_str().is_empty() {
+            let _ = std::fs::remove_dir_all(&self.path);
+        }
+    }
+}
+
+/// Recursively copy a directory tree.
+pub fn copy_tree(src: &Path, dst: &Path) -> Result<u64> {
+    let mut copied = 0u64;
+    std::fs::create_dir_all(dst)?;
+    for entry in std::fs::read_dir(src)
+        .with_context(|| format!("reading {}", src.display()))?
+    {
+        let entry = entry?;
+        let ty = entry.file_type()?;
+        let to = dst.join(entry.file_name());
+        if ty.is_dir() {
+            copied += copy_tree(&entry.path(), &to)?;
+        } else {
+            std::fs::copy(entry.path(), &to)?;
+            copied += 1;
+        }
+    }
+    Ok(copied)
+}
+
+/// Total size in bytes of all files under `root`.
+pub fn dir_size(root: &Path) -> u64 {
+    let mut total = 0u64;
+    let Ok(rd) = std::fs::read_dir(root) else {
+        return 0;
+    };
+    for entry in rd.flatten() {
+        let Ok(ty) = entry.file_type() else { continue };
+        if ty.is_dir() {
+            total += dir_size(&entry.path());
+        } else if let Ok(md) = entry.metadata() {
+            total += md.len();
+        }
+    }
+    total
+}
+
+/// All files under `root` with the given extension, sorted for
+/// deterministic iteration order.
+pub fn files_with_ext(root: &Path, ext: &str) -> Vec<PathBuf> {
+    let mut out = Vec::new();
+    collect_ext(root, ext, &mut out);
+    out.sort();
+    out
+}
+
+fn collect_ext(root: &Path, ext: &str, out: &mut Vec<PathBuf>) {
+    let Ok(rd) = std::fs::read_dir(root) else {
+        return;
+    };
+    for entry in rd.flatten() {
+        let p = entry.path();
+        if p.is_dir() {
+            collect_ext(&p, ext, out);
+        } else if p.extension().and_then(|e| e.to_str()) == Some(ext) {
+            out.push(p);
+        }
+    }
+}
+
+/// Immediate subdirectories, sorted by name.
+pub fn subdirs(root: &Path) -> Vec<PathBuf> {
+    let mut out: Vec<PathBuf> = std::fs::read_dir(root)
+        .map(|rd| {
+            rd.flatten()
+                .filter(|e| e.path().is_dir())
+                .map(|e| e.path())
+                .collect()
+        })
+        .unwrap_or_default();
+    out.sort();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tempdir_creates_and_removes() {
+        let path;
+        {
+            let td = TempDir::new("test").unwrap();
+            path = td.path().to_path_buf();
+            assert!(path.exists());
+        }
+        assert!(!path.exists());
+    }
+
+    #[test]
+    fn copy_tree_and_sizes() {
+        let td = TempDir::new("copy").unwrap();
+        let src = td.path().join("src/a/b");
+        std::fs::create_dir_all(&src).unwrap();
+        std::fs::write(src.join("x.json"), b"{}").unwrap();
+        std::fs::write(td.path().join("src/top.json"), b"[1,2]").unwrap();
+        let dst = td.path().join("dst");
+        let n = copy_tree(&td.path().join("src"), &dst).unwrap();
+        assert_eq!(n, 2);
+        assert_eq!(dir_size(&dst), 7);
+        let found = files_with_ext(&dst, "json");
+        assert_eq!(found.len(), 2);
+    }
+
+    #[test]
+    fn subdirs_sorted() {
+        let td = TempDir::new("subdirs").unwrap();
+        for d in ["zeta", "alpha", "mid"] {
+            std::fs::create_dir(td.path().join(d)).unwrap();
+        }
+        std::fs::write(td.path().join("file.txt"), b"x").unwrap();
+        let names: Vec<String> = subdirs(td.path())
+            .iter()
+            .map(|p| p.file_name().unwrap().to_string_lossy().into_owned())
+            .collect();
+        assert_eq!(names, ["alpha", "mid", "zeta"]);
+    }
+}

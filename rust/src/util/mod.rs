@@ -1,0 +1,12 @@
+//! Shared utilities: JSON codec, deterministic PRNG, statistics, time
+//! formatting, filesystem helpers, property-test driver and bench
+//! harness.  These exist in-repo because the offline image carries no
+//! serde/rand/criterion/proptest (see Cargo.toml).
+
+pub mod bench;
+pub mod fs;
+pub mod json;
+pub mod propcheck;
+pub mod rng;
+pub mod stats;
+pub mod timefmt;

@@ -1,0 +1,91 @@
+//! Tiny property-test driver (proptest is unavailable offline).
+//!
+//! `check(name, cases, |rng| ...)` runs a closure over `cases` seeded
+//! inputs; on failure it reports the failing case index and seed so the
+//! exact input can be replayed with `replay(seed, f)`.  Properties return
+//! `Result<(), String>` so failures carry a description of the violated
+//! invariant.
+
+use super::rng::Rng;
+
+pub const DEFAULT_CASES: u32 = 256;
+
+/// Run `prop` over `cases` random inputs derived from a fixed master seed
+/// (stable across runs — CI-reproducible by construction).
+pub fn check<F>(name: &str, cases: u32, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let mut master = Rng::new(0x7a1b_0000 ^ fnv(name));
+    for case in 0..cases {
+        let seed = master.next_u64();
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed at case {case}/{cases} \
+                 (replay seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case by seed.
+pub fn replay<F>(seed: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    if let Err(msg) = prop(&mut rng) {
+        panic!("replay of seed {seed:#x} failed: {msg}");
+    }
+}
+
+fn fnv(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Assert helper for properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check("trivial", 32, |rng| {
+            n += 1;
+            let x = rng.f64();
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("{x} out of range"))
+            }
+        });
+        assert_eq!(n, 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'alwaysfail' failed")]
+    fn failing_property_panics_with_seed() {
+        check("alwaysfail", 8, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn fnv_distinguishes_names() {
+        assert_ne!(fnv("a"), fnv("b"));
+    }
+}

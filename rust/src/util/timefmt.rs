@@ -1,0 +1,148 @@
+//! Unix-epoch <-> ISO-8601 conversion, hand-rolled (the `time` crate's
+//! vendored copy can't be used offline — see Cargo.toml).
+//!
+//! TALP JSONs carry a `timestamp` (end of execution) and, when the
+//! metadata wrapper ran, a `git.commit_timestamp`; TALP-Pages uses the
+//! git timestamp when present (paper §Time-evolution plots).  All times
+//! are UTC; the civil-from-days algorithm is Howard Hinnant's.
+
+/// Convert unix seconds to "YYYY-MM-DDTHH:MM:SSZ".
+pub fn to_iso8601(unix_secs: i64) -> String {
+    let (y, m, d, hh, mm, ss) = civil(unix_secs);
+    format!("{y:04}-{m:02}-{d:02}T{hh:02}:{mm:02}:{ss:02}Z")
+}
+
+/// Compact form used in artifact file names: "YYYY-MM-DDTHHMM".
+pub fn to_filename_stamp(unix_secs: i64) -> String {
+    let (y, m, d, hh, mm, _) = civil(unix_secs);
+    format!("{y:04}-{m:02}-{d:02}T{hh:02}{mm:02}")
+}
+
+fn civil(unix_secs: i64) -> (i64, u32, u32, u32, u32, u32) {
+    let days = unix_secs.div_euclid(86_400);
+    let secs_of_day = unix_secs.rem_euclid(86_400) as u32;
+    let (y, m, d) = civil_from_days(days);
+    (
+        y,
+        m,
+        d,
+        secs_of_day / 3600,
+        (secs_of_day / 60) % 60,
+        secs_of_day % 60,
+    )
+}
+
+/// Days since 1970-01-01 -> (year, month, day).  Hinnant's algorithm.
+fn civil_from_days(z: i64) -> (i64, u32, u32) {
+    let z = z + 719_468;
+    let era = z.div_euclid(146_097);
+    let doe = z.rem_euclid(146_097) as i64; // [0, 146096]
+    let yoe = (doe - doe / 1460 + doe / 36524 - doe / 146096) / 365;
+    let y = yoe + era * 400;
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100);
+    let mp = (5 * doy + 2) / 153;
+    let d = (doy - (153 * mp + 2) / 5 + 1) as u32;
+    let m = if mp < 10 { mp + 3 } else { mp - 9 } as u32;
+    (if m <= 2 { y + 1 } else { y }, m, d)
+}
+
+fn days_from_civil(y: i64, m: u32, d: u32) -> i64 {
+    let y = if m <= 2 { y - 1 } else { y };
+    let era = y.div_euclid(400);
+    let yoe = y.rem_euclid(400);
+    let mp = if m > 2 { m - 3 } else { m + 9 } as i64;
+    let doy = (153 * mp + 2) / 5 + d as i64 - 1;
+    let doe = yoe * 365 + yoe / 4 - yoe / 100 + doy;
+    era * 146_097 + doe - 719_468
+}
+
+/// Parse "YYYY-MM-DDTHH:MM:SSZ" (and the fractional-seconds variant) back
+/// to unix seconds.  Returns None on malformed input.
+pub fn from_iso8601(s: &str) -> Option<i64> {
+    let b = s.as_bytes();
+    if b.len() < 19 {
+        return None;
+    }
+    let num = |range: std::ops::Range<usize>| -> Option<i64> {
+        std::str::from_utf8(&b[range]).ok()?.parse().ok()
+    };
+    if b[4] != b'-' || b[7] != b'-' || b[10] != b'T' || b[13] != b':' || b[16] != b':' {
+        return None;
+    }
+    let y = num(0..4)?;
+    let m = num(5..7)? as u32;
+    let d = num(8..10)? as u32;
+    let hh = num(11..13)?;
+    let mm = num(14..16)?;
+    let ss = num(17..19)?;
+    if !(1..=12).contains(&m) || !(1..=31).contains(&d) || hh > 23 || mm > 59 || ss > 60 {
+        return None;
+    }
+    Some(days_from_civil(y, m, d) * 86_400 + hh * 3600 + mm * 60 + ss)
+}
+
+/// Current wall-clock unix seconds (only used for stamping real runs;
+/// simulations carry their own synthetic clocks).
+pub fn now_unix() -> i64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs() as i64)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn epoch_is_1970() {
+        assert_eq!(to_iso8601(0), "1970-01-01T00:00:00Z");
+    }
+
+    #[test]
+    fn known_timestamps() {
+        // 2024-07-15T12:34:56Z
+        assert_eq!(to_iso8601(1_721_046_896), "2024-07-15T12:34:56Z");
+        // leap-year Feb 29
+        assert_eq!(to_iso8601(1_709_164_800), "2024-02-29T00:00:00Z");
+    }
+
+    #[test]
+    fn roundtrip_many() {
+        for &t in &[
+            0i64,
+            86_399,
+            86_400,
+            951_782_400,   // 2000-02-29
+            1_721_046_896,
+            4_102_444_800, // 2100-01-01
+            -86_400,       // 1969-12-31
+        ] {
+            let s = to_iso8601(t);
+            assert_eq!(from_iso8601(&s), Some(t), "{s}");
+        }
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        for s in ["", "2024", "2024-13-01T00:00:00Z", "2024-01-01 00:00:00",
+                  "2024-01-01T25:00:00Z", "garbage-junk-data!"] {
+            assert_eq!(from_iso8601(s), None, "{s}");
+        }
+    }
+
+    #[test]
+    fn filename_stamp_format() {
+        assert_eq!(to_filename_stamp(1_721_046_896), "2024-07-15T1234");
+    }
+
+    #[test]
+    fn ordering_is_monotonic() {
+        let mut prev = String::new();
+        for t in (0..2_000_000_000i64).step_by(97_777_777) {
+            let s = to_iso8601(t);
+            assert!(s > prev, "{s} vs {prev}");
+            prev = s;
+        }
+    }
+}

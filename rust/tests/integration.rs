@@ -1,0 +1,233 @@
+//! Cross-module integration tests: the full run -> folder -> report
+//! pipeline, the CLI surface, the CI cycle with Fig. 7 detection, and
+//! the AOT runtime path (gated on `make artifacts`).
+
+use talp_pages::apps::{run_with_talp, CodeVersion, Genex, TeaLeaf};
+use talp_pages::ci::{CiEngine, MatrixSpec, Repo};
+use talp_pages::cli;
+use talp_pages::pages::{self, scan, timeseries, ReportOptions};
+use talp_pages::pop;
+use talp_pages::sim::{MachineSpec, ResourceConfig};
+use talp_pages::tools::{self, ToolKind};
+use talp_pages::util::fs::TempDir;
+
+fn mn5() -> MachineSpec {
+    MachineSpec::marenostrum5()
+}
+
+#[test]
+fn full_standalone_workflow() {
+    // run 3 configs -> Fig. 2 folder -> report with table + badges.
+    let td = TempDir::new("itg-standalone").unwrap();
+    let folder = td.path().join("talp_folder");
+    let mut app = TeaLeaf::with_grid(1000, 1000);
+    app.timesteps = 1;
+    app.cg_iters = 8;
+    app.write_output = false;
+    for cfg in [
+        ResourceConfig::new(2, 8),
+        ResourceConfig::new(4, 8),
+        ResourceConfig::new(8, 8),
+    ] {
+        let (d, _) = run_with_talp(&app, &mn5(), &cfg, 5, 1_700_000_000);
+        d.write_file(
+            &folder.join(format!("grid/strong/talp_{}.json", cfg.label())),
+        )
+        .unwrap();
+    }
+    let out = td.path().join("report");
+    let summary =
+        pages::generate(&folder, &out, &ReportOptions::default()).unwrap();
+    assert_eq!(summary.experiments, 1);
+    assert_eq!(summary.badges_written, 3);
+    let html =
+        std::fs::read_to_string(out.join("grid_strong.html")).unwrap();
+    assert!(html.contains("strong scaling"));
+    assert!(html.contains("2x8"));
+    assert!(html.contains("8x8"));
+    // Table columns ordered by resources with reference first.
+    let scanres = scan(&folder).unwrap();
+    let t = pop::build("Global", &scanres.experiments[0].latest_per_config())
+        .unwrap();
+    assert_eq!(t.columns, vec!["2x8", "4x8", "8x8"]);
+    // Reference column is exactly 1 on scalability rows.
+    assert!((t.cell("IPC scaling", 0).unwrap() - 1.0).abs() < 1e-9);
+}
+
+#[test]
+fn ci_cycle_detects_fig7_fix() {
+    let td = TempDir::new("itg-ci").unwrap();
+    let repo = Repo::genex_history(6, 3, 17, 1_690_000_000);
+    let jobs = MatrixSpec {
+        case: "salpha".into(),
+        resolutions: vec![1],
+        configurations: vec![("1Nx2MPI".into(), 2, 8)],
+        machine_tags: vec!["mn5".into()],
+    }
+    .expand();
+    let opts = ReportOptions {
+        regions: vec!["initialize".into(), "timestep".into()],
+        region_for_badge: Some("timestep".into()),
+    };
+    let mut engine = CiEngine::new(td.path()).unwrap();
+    for c in &repo.commits {
+        engine.run_pipeline(c, &jobs, &opts).unwrap();
+    }
+    let work = talp_pages::util::fs::subdirs(&td.path().join("work"));
+    let talp_dir = work.last().unwrap().join("talp");
+    let scanres = scan(&talp_dir).unwrap();
+    let exp = &scanres.experiments[0];
+    let hist = exp.history_for_config("2x8");
+    assert_eq!(hist.len(), 6);
+    let ts = timeseries::build("2x8", &hist, &[]);
+    let el = ts.metric("initialize", "elapsed");
+    assert!(el[3].1 < 0.7 * el[2].1, "fix not visible: {el:?}");
+    let ser = ts.metric("initialize", "omp_serialization_efficiency");
+    assert!(ser[3].1 > ser[2].1 + 0.15);
+    // The published pages contain the fix commit's sha.
+    let pages_html: Vec<_> =
+        talp_pages::util::fs::files_with_ext(engine.pages_dir(), "html");
+    let body = pages_html
+        .iter()
+        .map(|p| std::fs::read_to_string(p).unwrap())
+        .collect::<String>();
+    assert!(body.contains(repo.commits[3].short()));
+}
+
+#[test]
+fn cli_end_to_end_surface() {
+    let td = TempDir::new("itg-cli").unwrap();
+    let run_cli = |line: &str| {
+        cli::main_with_args(
+            &line.split_whitespace().map(String::from).collect::<Vec<_>>(),
+        )
+    };
+    let json = td.path().join("talp/exp/a.json");
+    assert_eq!(
+        run_cli(&format!(
+            "run --app tealeaf --grid 600 --iters 6 --machine raven \
+             --config 2x8 --output {}",
+            json.display()
+        ))
+        .unwrap(),
+        0
+    );
+    let ci_sim_out = td.path().join("cisim");
+    assert_eq!(
+        run_cli(&format!(
+            "ci-sim --output {} --commits 3 --fix-at 1",
+            ci_sim_out.display()
+        ))
+        .unwrap(),
+        0
+    );
+    // The report publishes under public/talp -> pages/talp/.
+    assert!(ci_sim_out.join("pages/talp/index.html").exists());
+}
+
+#[test]
+fn tool_chains_consistent_with_direct_talp_run() {
+    // TALP chain output must equal a direct run_with_talp (same seed).
+    let td = TempDir::new("itg-tools").unwrap();
+    let mut app = TeaLeaf::with_grid(800, 800);
+    app.timesteps = 1;
+    app.cg_iters = 6;
+    app.write_output = false;
+    let cfg = ResourceConfig::new(2, 8);
+    let run = tools::instrument(
+        ToolKind::Talp,
+        &app,
+        &mn5(),
+        &cfg,
+        123,
+        42,
+        td.path(),
+    )
+    .unwrap();
+    let from_chain = talp_pages::talp::RunData::read_file(
+        &run.output_dir.join("talp.json"),
+    )
+    .unwrap();
+    let (direct, _) = run_with_talp(&app, &mn5(), &cfg, 123, 42);
+    let a = pop::compute(from_chain.region("Global").unwrap(), 8);
+    let b = pop::compute(direct.region("Global").unwrap(), 8);
+    // Identical up to the JSON round-trip's integer-ns quantization.
+    assert!((a.parallel_efficiency - b.parallel_efficiency).abs() < 1e-5);
+    assert_eq!(
+        a.total_useful_instructions,
+        b.total_useful_instructions
+    );
+}
+
+#[test]
+fn genex_step_artifact_runs_when_built() {
+    // Gated on `make artifacts`.
+    let Some(reg) = talp_pages::runtime::Registry::open_default() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let meta = reg.find("genex_step", 128, 128).expect("genex artifact");
+    let mut rt = talp_pages::runtime::XlaRuntime::cpu().unwrap();
+    rt.load(meta).unwrap();
+    let (h, w) = (128usize, 128usize);
+    let u = talp_pages::runtime::native::Grid::initial_condition(h, w);
+    let c = talp_pages::runtime::native::build_coefficients(h, w, 0.5, 1.0);
+    let out = rt
+        .execute(
+            &meta.name,
+            &[
+                (&u.data, &[h as i64, w as i64]),
+                (&c.kx.data, &[h as i64, (w + 1) as i64]),
+                (&c.ky.data, &[h as i64, w as i64]),
+                (&c.d.data, &[h as i64, w as i64]),
+            ],
+        )
+        .unwrap();
+    assert_eq!(out.len(), 2);
+    assert_eq!(out[0].dims, vec![h, w]);
+    assert!(out[0].data.iter().all(|v| v.is_finite()));
+    // Bounded evolution (the tanh-stabilized update).
+    let norm0: f64 =
+        u.data.iter().map(|v| (*v as f64).powi(2)).sum::<f64>();
+    let norm1: f64 =
+        out[0].data.iter().map(|v| (*v as f64).powi(2)).sum::<f64>();
+    assert!(norm1 < 4.0 * norm0);
+}
+
+#[test]
+fn buggy_vs_fixed_report_difference_survives_html() {
+    // The Fig. 7 explanation must be visible in the *rendered* numbers.
+    let td = TempDir::new("itg-html").unwrap();
+    let folder = td.path().join("talp");
+    let machine = mn5();
+    let cfg = ResourceConfig::new(2, 14);
+    for (i, version) in
+        [CodeVersion::buggy(), CodeVersion::fixed()].iter().enumerate()
+    {
+        let mut app = Genex::salpha(2, *version);
+        app.timesteps = 2;
+        let (mut d, _) =
+            run_with_talp(&app, &machine, &cfg, 3, 1_700_000_000);
+        d.git = Some(talp_pages::talp::GitMeta {
+            commit: format!("c{i}{}", "0".repeat(39)),
+            branch: "main".into(),
+            commit_timestamp: 1_700_000_000 + i as i64 * 86400,
+            message: String::new(),
+        });
+        d.write_file(&folder.join(format!("exp/run_{i}.json"))).unwrap();
+    }
+    let out = td.path().join("public");
+    pages::generate(
+        &folder,
+        &out,
+        &ReportOptions {
+            regions: vec!["initialize".into()],
+            region_for_badge: Some("initialize".into()),
+        },
+    )
+    .unwrap();
+    let html = std::fs::read_to_string(out.join("exp.html")).unwrap();
+    assert!(html.contains("OpenMP Serialization efficiency"));
+    assert!(html.contains("Time evolution"));
+    assert!(html.contains("polyline"));
+}

@@ -1,0 +1,295 @@
+//! Property-based integration tests over the whole stack: random
+//! workloads through the simulator, TALP, POP metrics, tables, the
+//! detector, the JSON codec and the folder scanner.
+
+use talp_pages::apps::{run_with_talp, Synthetic, Workload};
+use talp_pages::pop;
+use talp_pages::sim::{
+    self, Imbalance, MachineSpec, NoiseModel, OmpSchedule, ResourceConfig,
+    RunConfig,
+};
+use talp_pages::talp::{RunData, TalpMonitor};
+use talp_pages::util::json::{canonicalize, Json};
+use talp_pages::util::propcheck::check;
+use talp_pages::util::rng::Rng;
+use talp_pages::util::timefmt;
+
+fn random_app(rng: &mut Rng) -> Synthetic {
+    let schedules = [
+        OmpSchedule::Static,
+        OmpSchedule::Dynamic { chunks: 16 + rng.below(256) as u32 },
+    ];
+    let imbalances = [
+        Imbalance::None,
+        Imbalance::Linear { skew: rng.range_f64(0.0, 1.0) },
+        Imbalance::Block {
+            heavy_frac: rng.range_f64(0.1, 0.6),
+            factor: rng.range_f64(1.1, 2.5),
+        },
+        Imbalance::Random { sigma: rng.range_f64(0.01, 0.2) },
+    ];
+    Synthetic {
+        name: "prop".into(),
+        phases: 1 + rng.below(6) as u32,
+        flops_per_phase: rng.range_f64(1e7, 2e9),
+        working_set_bytes: rng.range_f64(1e5, 1e9),
+        imbalance: imbalances[rng.below(4) as usize].clone(),
+        schedule: schedules[rng.below(2) as usize],
+        rank_weights: (0..1 + rng.below(4))
+            .map(|_| rng.range_f64(0.7, 1.4))
+            .collect(),
+        mpi_bytes: 1 << rng.below(20),
+        serial_fraction: rng.range_f64(0.0, 0.4),
+    }
+}
+
+fn random_resources(rng: &mut Rng) -> ResourceConfig {
+    ResourceConfig::new(
+        1 + rng.below(6) as u32,
+        1 + rng.below(16) as u32,
+    )
+}
+
+/// Per-cpu accounting identity: every cpu's categorized time stays
+/// within its region-elapsed envelope, and all POP efficiencies stay in
+/// [0, 1] for arbitrary workloads.
+#[test]
+fn engine_talp_pop_invariants() {
+    check("engine/talp/pop invariants", 60, |rng| {
+        let app = random_app(rng);
+        let res = random_resources(rng);
+        let machine = if rng.bool_with_p(0.5) {
+            MachineSpec::marenostrum5()
+        } else {
+            MachineSpec::raven()
+        };
+        let (data, summary) =
+            run_with_talp(&app, &machine, &res, rng.next_u64(), 0);
+        if !(summary.elapsed_s.is_finite() && summary.elapsed_s > 0.0) {
+            return Err(format!("bad elapsed {}", summary.elapsed_s));
+        }
+        for reg in &data.regions {
+            let m = pop::compute(reg, data.threads);
+            for (name, v) in [
+                ("PE", m.parallel_efficiency),
+                ("MPI PE", m.mpi_parallel_efficiency),
+                ("OMP PE", m.omp_parallel_efficiency),
+                ("LB", m.mpi_load_balance),
+                ("CommE", m.mpi_communication_efficiency),
+                ("OMP serial", m.omp_serialization_efficiency),
+            ] {
+                if !(0.0..=1.0).contains(&v) {
+                    return Err(format!(
+                        "{name}={v} out of range in region {} ({app:?}, {})",
+                        reg.name,
+                        res.label()
+                    ));
+                }
+            }
+            // Accounting envelope per process.
+            for p in &reg.procs {
+                let accounted = p.useful_s
+                    + p.mpi_s
+                    + p.mpi_worker_idle_s
+                    + p.omp_serialization_s
+                    + p.omp_scheduling_s
+                    + p.omp_barrier_s;
+                let envelope =
+                    p.elapsed_s * data.threads as f64 * 1.02 + 1e-9;
+                if accounted > envelope {
+                    return Err(format!(
+                        "rank {} of region {}: accounted {accounted} > \
+                         envelope {envelope}",
+                        p.rank, reg.name
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Engine determinism for arbitrary programs/seeds.
+#[test]
+fn engine_is_deterministic() {
+    check("engine determinism", 25, |rng| {
+        let app = random_app(rng);
+        let res = random_resources(rng);
+        let machine = MachineSpec::marenostrum5();
+        let seed = rng.next_u64();
+        let cfg = RunConfig::new(machine.clone(), res.clone())
+            .with_seed(seed)
+            .with_noise(NoiseModel::typical());
+        let prog = app.build(&res, &machine);
+        let a = sim::run(&prog, &cfg, &mut []);
+        let b = sim::run(&prog, &cfg, &mut []);
+        if a.elapsed_s != b.elapsed_s || a.total_events != b.total_events {
+            return Err("non-deterministic run".into());
+        }
+        Ok(())
+    });
+}
+
+/// TALP JSON roundtrip: serialize -> parse -> serialize is a fixpoint.
+#[test]
+fn talp_json_roundtrip_fixpoint() {
+    check("talp json fixpoint", 30, |rng| {
+        let app = random_app(rng);
+        let res = random_resources(rng);
+        let machine = MachineSpec::marenostrum5();
+        let (data, _) =
+            run_with_talp(&app, &machine, &res, rng.next_u64(), 123_456);
+        let j1 = data.to_json();
+        let parsed = RunData::from_json(&j1).map_err(|e| e.to_string())?;
+        let j2 = parsed.to_json();
+        if canonicalize(&j1) != canonicalize(&j2) {
+            return Err("json roundtrip not a fixpoint".into());
+        }
+        Ok(())
+    });
+}
+
+/// Random JSON value trees survive the codec.
+#[test]
+fn json_codec_roundtrips_random_trees() {
+    fn random_json(rng: &mut Rng, depth: u32) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.bool_with_p(0.5)),
+            2 => Json::Num((rng.next_u64() % (1 << 53)) as f64 / 8.0),
+            3 => Json::Str(
+                (0..rng.below(20))
+                    .map(|_| {
+                        let c = rng.below(128) as u8;
+                        if c.is_ascii_graphic() || c == b' ' {
+                            c as char
+                        } else {
+                            '\u{263a}'
+                        }
+                    })
+                    .collect(),
+            ),
+            4 => Json::Arr(
+                (0..rng.below(5))
+                    .map(|_| random_json(rng, depth - 1))
+                    .collect(),
+            ),
+            _ => Json::Obj(
+                (0..rng.below(5))
+                    .map(|i| {
+                        (format!("k{i}"), random_json(rng, depth - 1))
+                    })
+                    .collect(),
+            ),
+        }
+    }
+    check("json codec roundtrip", 200, |rng| {
+        let v = random_json(rng, 3);
+        for text in [v.to_string_compact(), v.to_string_pretty()] {
+            let back = Json::parse(&text).map_err(|e| e.to_string())?;
+            if back != v {
+                return Err(format!("roundtrip mismatch on {text}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// ISO-8601 roundtrip over a wide timestamp range.
+#[test]
+fn timefmt_roundtrip_random() {
+    check("timefmt roundtrip", 300, |rng| {
+        // 1900..2200 in unix seconds.
+        let t = rng.range_u64(0, 7_258_118_400) as i64 - 2_208_988_800;
+        let s = timefmt::to_iso8601(t);
+        match timefmt::from_iso8601(&s) {
+            Some(back) if back == t => Ok(()),
+            other => Err(format!("{t} -> {s} -> {other:?}")),
+        }
+    });
+}
+
+/// Scaling tables from arbitrary run pairs keep their invariants:
+/// reference column == 1 on relative rows, efficiencies in [0,1].
+#[test]
+fn scaling_table_invariants() {
+    check("scaling table invariants", 30, |rng| {
+        let machine = MachineSpec::marenostrum5();
+        let app = random_app(rng);
+        let base_threads = 1 + rng.below(8) as u32;
+        let r1 = ResourceConfig::new(2, base_threads);
+        let r2 = ResourceConfig::new(2 + 2 * (1 + rng.below(3) as u32), base_threads);
+        let (d1, _) = run_with_talp(&app, &machine, &r1, rng.next_u64(), 0);
+        let (d2, _) = run_with_talp(&app, &machine, &r2, rng.next_u64(), 0);
+        let Some(t) = pop::build("Global", &[&d2, &d1]) else {
+            return Err("no table".into());
+        };
+        // Reference = least resources = r1, must be column 0.
+        if t.columns[0] != r1.label() {
+            return Err(format!("columns {:?}", t.columns));
+        }
+        for row in ["Instructions scaling", "IPC scaling", "Frequency scaling"] {
+            let v = t.cell(row, 0).unwrap_or(0.0);
+            if (v - 1.0).abs() > 1e-6 {
+                return Err(format!("{row} reference {v} != 1"));
+            }
+        }
+        for row in &t.rows {
+            if row.is_footer || row.label.contains("scal") {
+                continue;
+            }
+            for c in row.cells.iter().flatten() {
+                if !(0.0..=1.0001).contains(c)
+                    && !row.label.contains("efficiency")
+                {
+                    continue;
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The monitor under instrumentation still closes its books: a TALP run
+/// attached to a run with another tool's cost model produces the same
+/// instruction totals (counters are perturbation-independent).
+#[test]
+fn instruction_counts_stable_under_perturbation() {
+    check("instructions stable", 20, |rng| {
+        let app = random_app(rng);
+        let res = random_resources(rng);
+        let machine = MachineSpec::marenostrum5();
+        let seed = rng.next_u64();
+        let prog = app.build(&res, &machine);
+        let cfg = RunConfig::new(machine.clone(), res.clone())
+            .with_seed(seed)
+            .with_noise(NoiseModel::none());
+        let mut t1 = TalpMonitor::new(res.n_ranks, res.threads_per_rank);
+        sim::run(&prog, &cfg, &mut [&mut t1]);
+        let a = RunData::from_report(&t1.finalize(), "p", &machine, &res, 0);
+
+        let mut t2 = TalpMonitor::new(res.n_ranks, res.threads_per_rank);
+        let mut heavy = talp_pages::tools::cpt::CptSink::new(res.n_ranks);
+        sim::run(&prog, &cfg, &mut [&mut t2, &mut heavy]);
+        let b = RunData::from_report(&t2.finalize(), "p", &machine, &res, 0);
+
+        let ia: u64 = a
+            .region("Global")
+            .unwrap()
+            .procs
+            .iter()
+            .map(|p| p.useful_instructions)
+            .sum();
+        let ib: u64 = b
+            .region("Global")
+            .unwrap()
+            .procs
+            .iter()
+            .map(|p| p.useful_instructions)
+            .sum();
+        if ia != ib {
+            return Err(format!("instructions moved {ia} -> {ib}"));
+        }
+        Ok(())
+    });
+}

@@ -64,6 +64,7 @@ fn main() -> anyhow::Result<()> {
     let opts = ReportOptions {
         regions: vec!["initialize".into(), "timestep".into()],
         region_for_badge: Some("timestep".into()),
+        ..Default::default()
     };
     let mut engine = CiEngine::new(root.path())?;
     let mut total_report_s = 0.0;

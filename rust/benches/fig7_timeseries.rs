@@ -25,6 +25,7 @@ fn main() {
     let opts = ReportOptions {
         regions: vec!["initialize".into(), "timestep".into()],
         region_for_badge: Some("timestep".into()),
+        ..Default::default()
     };
     let mut engine = CiEngine::new(td.path()).unwrap();
     let mut report_times = Vec::new();

@@ -87,21 +87,68 @@ fn main() {
             }
         }
     }
+    // Table 2's hot path, four ways: cold vs warm metrics cache and
+    // sequential vs parallel workers.  The JSON line at the end is the
+    // trackable record for future PRs (paper Table 2: report latency
+    // under CI resource budgets).
     let out = TempDir::new("perf-out").unwrap();
-    let m = bench("report: 500-run corpus scan+render", 1, 5, || {
-        let s = pages::generate(
-            td.path(),
-            out.path(),
-            &ReportOptions::default(),
-        )
-        .unwrap();
+    let cache_file = out.path().join(".talp-cache.json");
+    let opts_jobs = |jobs: usize| ReportOptions { jobs, ..Default::default() };
+
+    let m_jobs1 = bench("report: 500-run corpus cold, --jobs 1", 0, 3, || {
+        let _ = std::fs::remove_file(&cache_file);
+        let s = pages::generate(td.path(), out.path(), &opts_jobs(1))
+            .unwrap();
+        assert_eq!(s.cache_hits, 0, "cache must be cold");
         std::hint::black_box(s.pages_written);
     });
-    println!("{}", m.report());
+    println!("{}", m_jobs1.report());
+
+    let m_cold = bench("report: 500-run corpus cold, --jobs auto", 0, 3, || {
+        let _ = std::fs::remove_file(&cache_file);
+        let s = pages::generate(td.path(), out.path(), &opts_jobs(0))
+            .unwrap();
+        assert_eq!(s.cache_misses, 500, "corpus must fully parse");
+        std::hint::black_box(s.pages_written);
+    });
+    println!("{}", m_cold.report());
+
+    let m_warm = bench("report: 500-run corpus warm cache", 1, 5, || {
+        let s = pages::generate(td.path(), out.path(), &opts_jobs(0))
+            .unwrap();
+        assert_eq!(s.cache_misses, 0, "warm run must parse nothing");
+        std::hint::black_box(s.pages_written);
+    });
+    println!("{}", m_warm.report());
+    println!(
+        "  -> cold/warm {:.2}x, jobs1/jobsN {:.2}x",
+        m_cold.min_s.max(1e-9) / m_warm.min_s.max(1e-9),
+        m_jobs1.min_s.max(1e-9) / m_cold.min_s.max(1e-9),
+    );
+    // Machine-readable line for cross-PR tracking (Table 2 metric).
+    let record = Json::from_pairs(vec![
+        ("bench", Json::Str("report_engine_500".into())),
+        ("corpus_runs", Json::Num(500.0)),
+        ("cold_jobs1_s", Json::Num(m_jobs1.min_s)),
+        ("cold_auto_s", Json::Num(m_cold.min_s)),
+        ("warm_s", Json::Num(m_warm.min_s)),
+        (
+            "jobs_auto",
+            Json::Num(talp_pages::util::par::effective_jobs(0) as f64),
+        ),
+    ]);
+    println!("BENCH_JSON {}", record.to_string_compact());
     assert!(
-        m.min_s < 1.0,
+        m_cold.min_s < 1.0,
         "report generation target missed: {:.3}s for 500 runs",
-        m.min_s
+        m_cold.min_s
+    );
+    assert!(
+        m_warm.min_s <= m_jobs1.min_s * 1.5,
+        "warm cache should never be drastically slower than a cold \
+         sequential run ({:.3}s vs {:.3}s)",
+        m_warm.min_s,
+        m_jobs1.min_s
     );
 
     // 4. Trace post-processing throughput.

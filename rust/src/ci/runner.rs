@@ -128,9 +128,17 @@ impl CiEngine {
         }
 
         // ---- talp ci-report ----
+        // The metrics cache lives at the engine root (not in the
+        // per-pipeline work dir), so pipeline N's report serves every
+        // history artifact carried over from pipeline N-1 out of the
+        // cache and only parses the fresh matrix-job files.
         let public = work.join("public/talp");
         std::fs::create_dir_all(&public)?;
-        let report = pages::generate(&talp_dir, &public, report_opts)?;
+        let mut opts = report_opts.clone();
+        if opts.cache_path.is_none() {
+            opts.cache_path = Some(self.root.join("talp-cache.json"));
+        }
+        let report = pages::generate(&talp_dir, &public, &opts)?;
 
         // ---- artifacts + pages publish ----
         let talp_artifact_bytes = self.store.upload(id, "talp", &talp_dir)?;
@@ -161,7 +169,7 @@ fn run_performance_job(
     app.timesteps = 6;
     // Seed varies by commit + job so runs differ realistically but
     // deterministically.
-    let seed = fnv(&format!(
+    let seed = crate::util::hash::fnv1a_64_str(&format!(
         "{}:{}:{}",
         commit.sha,
         job.machine_tag,
@@ -195,15 +203,6 @@ fn copy_missing(src: &Path, dst: &Path) -> Result<u64> {
     Ok(copied)
 }
 
-fn fnv(s: &str) -> u64 {
-    let mut h = 0xcbf29ce484222325u64;
-    for b in s.bytes() {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x100000001b3);
-    }
-    h
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -234,6 +233,7 @@ mod tests {
         let opts = ReportOptions {
             regions: vec!["initialize".into(), "timestep".into()],
             region_for_badge: Some("timestep".into()),
+            ..Default::default()
         };
 
         let r0 = engine
@@ -242,17 +242,25 @@ mod tests {
         assert_eq!(r0.jobs_run, 2);
         assert_eq!(r0.history_files, 0);
         assert_eq!(r0.report.experiments, 1); // salpha/resolution_1/mn5
+        assert_eq!(r0.report.cache_hits, 0);
+        assert_eq!(r0.report.cache_misses, 2);
 
         let r1 = engine
             .run_pipeline(&repo.commits[1], &jobs, &opts)
             .unwrap();
         assert!(r1.history_files >= 2, "{}", r1.history_files);
+        // History artifacts carried over from pipeline 0 are served from
+        // the engine-root metrics cache; only the fresh jobs parse.
+        assert_eq!(r1.report.cache_hits, 2);
+        assert_eq!(r1.report.cache_misses, 2);
 
         let r2 = engine
             .run_pipeline(&repo.commits[2], &jobs, &opts)
             .unwrap();
         // Pipeline 2 carries runs of commits 0 and 1.
         assert!(r2.history_files >= 4, "{}", r2.history_files);
+        assert_eq!(r2.report.cache_hits, 4);
+        assert_eq!(r2.report.cache_misses, 2);
 
         // Pages were published with plots (>= 2 history points).
         let page_files: Vec<_> =

@@ -34,12 +34,14 @@ talp-pages — continuous performance monitoring (TALP-Pages reproduction)
 USAGE:
   talp-pages ci-report --input <dir> --output <dir>
              [--regions <r>...] [--region-for-badge <r>]
+             [--jobs <n>] [--cache <file>]
   talp-pages metadata --input <dir> --commit <sha> --branch <name>
              --timestamp <iso8601> [--message <m>]
   talp-pages run --app <tealeaf|genex|mpi-stencil> --machine <mn5|raven>
              --config <RxT> [--grid <n>] [--seed <n>] --output <file>
   talp-pages compare [--grid <n>] [--configs <RxT>...] [--region <r>]
   talp-pages ci-sim --output <dir> [--commits <n>] [--fix-at <n>]
+             [--jobs <n>]
   talp-pages calibrate
   talp-pages badge --label <text> --value <0..1> --output <file>
   talp-pages detect --input <dir> [--threshold <0..1>]
@@ -85,17 +87,22 @@ fn ci_report(args: &Args) -> Result<i32> {
             .map(|s| s.to_string())
             .collect(),
         region_for_badge: args.get("region-for-badge").map(str::to_string),
+        jobs: args.get_u64("jobs", 0)? as usize,
+        cache_path: args.get("cache").map(PathBuf::from),
     };
     let summary = pages::generate(&input, &output, &opts)?;
     for w in &summary.warnings {
         eprintln!("warning: {w}");
     }
     println!(
-        "report: {} experiment(s), {} page(s), {} badge(s) -> {}",
+        "report: {} experiment(s), {} page(s), {} badge(s) -> {} \
+         (cache: {} hit(s), {} parse(s))",
         summary.experiments,
         summary.pages_written,
         summary.badges_written,
-        output.display()
+        output.display(),
+        summary.cache_hits,
+        summary.cache_misses
     );
     Ok(0)
 }
@@ -269,6 +276,8 @@ fn ci_sim(args: &Args) -> Result<i32> {
     let opts = ReportOptions {
         regions: vec!["initialize".into(), "timestep".into()],
         region_for_badge: Some("timestep".into()),
+        jobs: args.get_u64("jobs", 0)? as usize,
+        ..Default::default()
     };
     let mut engine = ci::CiEngine::new(&out)?;
     for commit in &repo.commits {

@@ -22,7 +22,35 @@
 //! * [`apps`] — workloads: the TeaLeaf CG mini-app (backed by the real
 //!   AOT-compiled Pallas kernel through [`runtime`]) and a GENE-X-like
 //!   app with the injectable scaling bug of Fig. 7.
-//! * [`runtime`] — PJRT loader/executor for `artifacts/*.hlo.txt`.
+//! * [`runtime`] — PJRT loader/executor for `artifacts/*.hlo.txt`
+//!   (stubbed unless built with the `pjrt` feature — the offline image
+//!   carries no `xla` bindings).
+//!
+//! # The report engine (pages::report)
+//!
+//! Report generation is parallel and incremental — the paper's Table 2
+//! claim ("produce the scaling-efficiency tables faster and under
+//! tighter resource constraints") as an architecture:
+//!
+//! * **Worker pool** (`util::par::parallel_map`): artifact parsing and
+//!   per-experiment page rendering fan out over scoped threads; the
+//!   `--jobs N` CLI flag (0 = auto) sizes the pool.  Results merge in
+//!   deterministic order, so any `--jobs` value produces byte-identical
+//!   output.
+//! * **Metrics cache** (`pages::cache`): each artifact's reduced
+//!   [`pop::RunMetrics`] persists in `<out>/.talp-cache.json`, keyed by
+//!   relative path and validated by the FNV-1a-64 **content hash** of
+//!   the raw file bytes.  An entry is reused iff the hash matches;
+//!   vanished files are pruned; a corrupt or version-mismatched cache
+//!   degrades to a cold start.  On a warm CI run only the newest
+//!   pipeline's fresh artifacts parse
+//!   ([`pages::ReportSummary::cache_hits`] /
+//!   [`pages::report::ReportSummary::cache_misses`] count both sides).
+//! * **CI integration** (`ci::runner`): the in-process engine points
+//!   `ReportOptions::cache_path` at its root (outliving per-pipeline
+//!   work dirs), so pipeline N's report re-parses only the matrix jobs
+//!   that just ran — the history it merged from pipeline N-1's artifact
+//!   is served from cache.
 
 pub mod apps;
 pub mod cli;

@@ -2,12 +2,26 @@
 
 use talp_pages::cli;
 
-fn main() {
-    // Behave like a unix CLI under `| head`: die silently on SIGPIPE
-    // instead of panicking in println!.
-    unsafe {
-        libc::signal(libc::SIGPIPE, libc::SIG_DFL);
+/// Restore default SIGPIPE behaviour so the CLI dies silently under
+/// `| head` instead of panicking in println!.  Declared directly (the
+/// `libc` crate is unavailable in the offline image).
+#[cfg(unix)]
+fn restore_sigpipe() {
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
     }
+    const SIGPIPE: i32 = 13;
+    const SIG_DFL: usize = 0;
+    unsafe {
+        signal(SIGPIPE, SIG_DFL);
+    }
+}
+
+#[cfg(not(unix))]
+fn restore_sigpipe() {}
+
+fn main() {
+    restore_sigpipe();
     let argv: Vec<String> = std::env::args().skip(1).collect();
     match cli::main_with_args(&argv) {
         Ok(code) => std::process::exit(code),

@@ -1,0 +1,251 @@
+//! On-disk metrics cache — the incremental half of the report engine.
+//!
+//! The common CI case (paper Fig. 6) is: pipeline N's `talp/` folder is
+//! pipeline N-1's folder plus one new run per matrix job.  Re-parsing
+//! the whole history every run is the dominant report cost, so the engine
+//! persists each artifact's reduced [`RunMetrics`] keyed by the
+//! artifact's **content hash**:
+//!
+//! ```json
+//! {
+//!   "version": 1,
+//!   "entries": {
+//!     "<path relative to scan root>": {
+//!       "hash": "<fnv1a-64 of the raw file bytes, hex>",
+//!       "run": { ...pop::summary::RunMetrics... }
+//!     }
+//!   }
+//! }
+//! ```
+//!
+//! Invalidation rule: an entry is used iff its `hash` equals the
+//! current file content's FNV-1a 64.  Renamed-but-identical files miss
+//! (path is the index key); touched-but-identical files hit (mtimes are
+//! irrelevant — CI artifact downloads reset them anyway); any content
+//! change misses.  Stale entries (file gone) are dropped on save.
+//!
+//! The file lives at `<out_dir>/.talp-cache.json` by default;
+//! `ReportOptions::cache_path` overrides it (the in-process CI engine
+//! points it at a location that survives per-pipeline work dirs).
+//! Entries are serialized in sorted path order so cache files are
+//! byte-reproducible and never differ between `--jobs` settings.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::pop::RunMetrics;
+use crate::util::json::Json;
+
+/// Cache schema version; bump when `RunMetrics`' JSON shape changes
+/// (old caches are discarded wholesale, never migrated).
+pub const CACHE_VERSION: u64 = 1;
+
+/// Default cache file name inside the report output directory.
+pub const CACHE_FILE_NAME: &str = ".talp-cache.json";
+
+#[derive(Debug, Clone)]
+struct Entry {
+    hash: String,
+    run: RunMetrics,
+}
+
+/// Content-addressed store of reduced runs.
+#[derive(Debug, Default)]
+pub struct MetricsCache {
+    entries: BTreeMap<String, Entry>,
+}
+
+impl MetricsCache {
+    pub fn new() -> MetricsCache {
+        MetricsCache::default()
+    }
+
+    /// Load from disk; a missing, unreadable, corrupt or
+    /// version-mismatched file yields an empty cache (a cold start is
+    /// always safe — the cache is a pure accelerator).
+    pub fn load(path: &Path) -> MetricsCache {
+        let Ok(text) = std::fs::read_to_string(path) else {
+            return MetricsCache::new();
+        };
+        let Ok(j) = Json::parse(&text) else {
+            return MetricsCache::new();
+        };
+        if j.num_or("version", 0.0) as u64 != CACHE_VERSION {
+            return MetricsCache::new();
+        }
+        let mut cache = MetricsCache::new();
+        let Some(entries) = j.get("entries").and_then(Json::as_obj) else {
+            return cache;
+        };
+        for (path_key, ej) in entries {
+            let Some(hash) = ej.get("hash").and_then(Json::as_str) else {
+                continue;
+            };
+            let Some(run) =
+                ej.get("run").and_then(|r| RunMetrics::from_json(r).ok())
+            else {
+                continue;
+            };
+            cache.entries.insert(
+                path_key.clone(),
+                Entry { hash: hash.to_string(), run },
+            );
+        }
+        cache
+    }
+
+    /// Look up `rel_path`; hits only when the stored content hash
+    /// matches `hash`.
+    pub fn lookup(&self, rel_path: &str, hash: &str) -> Option<&RunMetrics> {
+        self.entries
+            .get(rel_path)
+            .filter(|e| e.hash == hash)
+            .map(|e| &e.run)
+    }
+
+    /// Insert or replace an entry.
+    pub fn insert(&mut self, rel_path: &str, hash: &str, run: RunMetrics) {
+        self.entries.insert(
+            rel_path.to_string(),
+            Entry { hash: hash.to_string(), run },
+        );
+    }
+
+    /// Drop entries whose path is not in `live` (files that vanished
+    /// from the scan root).
+    pub fn retain_paths<F: Fn(&str) -> bool>(&mut self, live: F) {
+        self.entries.retain(|k, _| live(k));
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Serialize (sorted path order — byte-reproducible).
+    pub fn to_json(&self) -> Json {
+        let mut entries = Json::obj();
+        for (path, e) in &self.entries {
+            entries.set(
+                path,
+                Json::from_pairs(vec![
+                    ("hash", Json::Str(e.hash.clone())),
+                    ("run", e.run.to_json()),
+                ]),
+            );
+        }
+        let mut root = Json::obj();
+        root.set("version", Json::Num(CACHE_VERSION as f64));
+        root.set("entries", entries);
+        root
+    }
+
+    /// Persist to `path`, creating parent directories.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_json().to_string_pretty())
+            .with_context(|| format!("writing cache {}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::talp::{ProcStats, RegionData, RunData};
+    use crate::util::fs::TempDir;
+
+    fn run_metrics(source: &str, useful: f64) -> RunMetrics {
+        let data = RunData {
+            dlb_version: "t".into(),
+            app: "a".into(),
+            machine: "mn5".into(),
+            timestamp: 100,
+            ranks: 1,
+            threads: 2,
+            nodes: 1,
+            regions: vec![RegionData {
+                name: "Global".into(),
+                elapsed_s: 1.0,
+                visits: 1,
+                procs: vec![ProcStats {
+                    rank: 0,
+                    elapsed_s: 1.0,
+                    useful_s: useful,
+                    ..Default::default()
+                }],
+            }],
+            git: None,
+        };
+        RunMetrics::from_run(&data, source)
+    }
+
+    #[test]
+    fn lookup_validates_content_hash() {
+        let mut c = MetricsCache::new();
+        c.insert("exp/a.json", "aaaa", run_metrics("exp/a.json", 1.5));
+        assert!(c.lookup("exp/a.json", "aaaa").is_some());
+        assert!(c.lookup("exp/a.json", "bbbb").is_none(), "stale content");
+        assert!(c.lookup("exp/other.json", "aaaa").is_none());
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let td = TempDir::new("cache").unwrap();
+        let path = td.path().join("out/.talp-cache.json");
+        let mut c = MetricsCache::new();
+        c.insert("exp/a.json", "0123abcd", run_metrics("exp/a.json", 1.5));
+        c.insert("exp/b.json", "ffff0000", run_metrics("exp/b.json", 0.7));
+        c.save(&path).unwrap();
+        let back = MetricsCache::load(&path);
+        assert_eq!(back.len(), 2);
+        let hit = back.lookup("exp/a.json", "0123abcd").unwrap();
+        assert_eq!(hit.source, "exp/a.json");
+        let m = hit.region("Global").unwrap().metrics;
+        let orig = c.lookup("exp/a.json", "0123abcd").unwrap();
+        assert_eq!(m, orig.region("Global").unwrap().metrics);
+    }
+
+    #[test]
+    fn corrupt_or_missing_cache_is_cold_start() {
+        let td = TempDir::new("cache2").unwrap();
+        assert!(MetricsCache::load(&td.path().join("nope.json")).is_empty());
+        let bad = td.path().join("bad.json");
+        std::fs::write(&bad, "{not json").unwrap();
+        assert!(MetricsCache::load(&bad).is_empty());
+        // Version mismatch discards too.
+        std::fs::write(&bad, r#"{"version": 999, "entries": {}}"#).unwrap();
+        assert!(MetricsCache::load(&bad).is_empty());
+    }
+
+    #[test]
+    fn retain_drops_vanished_paths() {
+        let mut c = MetricsCache::new();
+        c.insert("keep.json", "aa", run_metrics("keep.json", 1.0));
+        c.insert("gone.json", "bb", run_metrics("gone.json", 1.0));
+        c.retain_paths(|p| p == "keep.json");
+        assert_eq!(c.len(), 1);
+        assert!(c.lookup("keep.json", "aa").is_some());
+    }
+
+    #[test]
+    fn serialization_is_deterministic() {
+        let mut a = MetricsCache::new();
+        let mut b = MetricsCache::new();
+        // Insert in different orders; BTreeMap canonicalizes.
+        a.insert("x.json", "11", run_metrics("x.json", 1.0));
+        a.insert("b.json", "22", run_metrics("b.json", 2.0));
+        b.insert("b.json", "22", run_metrics("b.json", 2.0));
+        b.insert("x.json", "11", run_metrics("x.json", 1.0));
+        assert_eq!(
+            a.to_json().to_string_pretty(),
+            b.to_json().to_string_pretty()
+        );
+    }
+}

@@ -92,10 +92,20 @@ pub fn detect(
     history: &[&RunData],
     opts: &DetectOptions,
 ) -> Vec<Finding> {
-    let ts = timeseries::build(config, history, &[]);
+    detect_series(&timeseries::build(config, history, &[]), config, opts)
+}
+
+/// Run the detector over an already-built [`TimeSeries`] (the
+/// incremental report engine builds one series per configuration from
+/// cached metrics and reuses it for plots and findings alike).
+pub fn detect_series(
+    ts: &TimeSeries,
+    config: &str,
+    opts: &DetectOptions,
+) -> Vec<Finding> {
     let mut findings = Vec::new();
     for region in ts.regions() {
-        findings.extend(detect_region(&ts, &region, config, opts));
+        findings.extend(detect_region(ts, &region, config, opts));
     }
     findings
 }

@@ -4,6 +4,7 @@
 //! badges) that in-repository pages hosting serves.
 
 pub mod badge;
+pub mod cache;
 pub mod detect;
 pub mod html;
 pub mod report;
@@ -12,5 +13,8 @@ pub mod svgplot;
 pub mod table_html;
 pub mod timeseries;
 
+pub use cache::MetricsCache;
 pub use report::{generate, ReportOptions, ReportSummary};
-pub use scanner::{scan, Experiment, ScanResult};
+pub use scanner::{
+    scan, scan_metrics, Experiment, MetricExperiment, MetricScan, ScanResult,
+};

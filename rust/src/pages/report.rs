@@ -1,18 +1,40 @@
 //! The `talp ci-report` engine: scan a Fig. 2 folder, emit the full
 //! static site — index, one page per experiment (scaling-efficiency
 //! tables + time-evolution plots), and SVG badges.
+//!
+//! # The parallel, incremental engine
+//!
+//! Report generation is the paper's Table 2 hot path: it runs inside
+//! every CI pipeline, so its latency is a budget, not a nicety.  Two
+//! mechanisms keep it flat as histories grow:
+//!
+//! 1. **Content-hash cache** (`pages::cache`): every artifact's reduced
+//!    [`pop::RunMetrics`] is persisted in `.talp-cache.json` keyed by
+//!    the file's FNV-1a-64 content hash.  On a warm run — the common CI
+//!    case, where only the newest pipeline's files are new — unchanged
+//!    artifacts skip JSON parse *and* POP reduction entirely
+//!    ([`ReportSummary::cache_hits`] counts them).
+//! 2. **Worker-pool fan-out** (`util::par`): artifact parsing/reduction
+//!    and per-experiment page rendering both run on a scoped-thread
+//!    pool sized by [`ReportOptions::jobs`] (0 = auto).  Results merge
+//!    in deterministic experiment order, so `--jobs 1` and `--jobs N`
+//!    produce byte-identical output directories.
+//!
+//! File writes stay on the calling thread, in scan order.
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
 
 use crate::pop;
+use crate::util::par::parallel_map;
 use crate::util::timefmt;
 
 use super::badge;
+use super::cache::{MetricsCache, CACHE_FILE_NAME};
 use super::detect::{self, DetectOptions};
 use super::html;
-use super::scanner::{self, Experiment};
+use super::scanner::{self, MetricExperiment};
 use super::svgplot::{self, esc, Series};
 use super::table_html;
 use super::timeseries;
@@ -25,6 +47,14 @@ pub struct ReportOptions {
     /// Region whose parallel efficiency feeds the badges (default the
     /// implicit whole-execution region).
     pub region_for_badge: Option<String>,
+    /// Worker threads for parsing and page rendering; 0 = auto
+    /// (available parallelism, capped at 16).  Output is byte-identical
+    /// for every value.
+    pub jobs: usize,
+    /// Metrics-cache location; None = `<out_dir>/.talp-cache.json`.
+    /// The in-process CI engine points this at a path that outlives
+    /// per-pipeline work directories.
+    pub cache_path: Option<PathBuf>,
 }
 
 /// What was generated.
@@ -34,6 +64,19 @@ pub struct ReportSummary {
     pub pages_written: usize,
     pub badges_written: usize,
     pub warnings: Vec<String>,
+    /// Artifacts served from the metrics cache (not re-parsed).
+    pub cache_hits: usize,
+    /// Artifacts parsed + reduced this run.
+    pub cache_misses: usize,
+}
+
+/// One experiment's render product (built on a worker, written by the
+/// caller in deterministic order).
+struct RenderedExperiment {
+    file: String,
+    body: String,
+    /// (out_dir-relative path, svg content).
+    badges: Vec<(String, String)>,
 }
 
 /// Generate the full report from `input` into `out_dir`.
@@ -42,28 +85,36 @@ pub fn generate(
     out_dir: &Path,
     opts: &ReportOptions,
 ) -> Result<ReportSummary> {
-    let scan = scanner::scan(input)?;
+    let cache_path = opts
+        .cache_path
+        .clone()
+        .unwrap_or_else(|| out_dir.join(CACHE_FILE_NAME));
+    let mut cache = MetricsCache::load(&cache_path);
+    let scan = scanner::scan_metrics(input, &mut cache, opts.jobs)?;
     std::fs::create_dir_all(out_dir.join("badges"))
         .with_context(|| format!("creating {}", out_dir.display()))?;
+
+    let rendered: Vec<RenderedExperiment> =
+        parallel_map(&scan.experiments, opts.jobs, |exp| {
+            render_experiment(exp, opts)
+        });
 
     let mut pages = 0usize;
     let mut badges = 0usize;
     let mut index_items = String::new();
-
-    for exp in &scan.experiments {
-        let file = format!("{}.html", slug(&exp.id));
-        let (body, nbadges) =
-            experiment_page(exp, opts, out_dir).with_context(|| {
-                format!("rendering experiment '{}'", exp.id)
-            })?;
+    for (exp, r) in scan.experiments.iter().zip(rendered) {
         std::fs::write(
-            out_dir.join(&file),
-            html::page(&format!("TALP report — {}", exp.id), &body),
+            out_dir.join(&r.file),
+            html::page(&format!("TALP report — {}", exp.id), &r.body),
         )?;
         pages += 1;
-        badges += nbadges;
+        for (name, svg) in &r.badges {
+            std::fs::write(out_dir.join(name), svg)?;
+            badges += 1;
+        }
         index_items.push_str(&format!(
-            "<li><a href=\"{file}\">{}</a> — {} configs, {} runs</li>\n",
+            "<li><a href=\"{}\">{}</a> — {} configs, {} runs</li>\n",
+            r.file,
             esc(&exp.id),
             exp.configs().len(),
             exp.runs.len()
@@ -89,11 +140,15 @@ pub fn generate(
     )?;
     pages += 1;
 
+    cache.save(&cache_path)?;
+
     Ok(ReportSummary {
         experiments: scan.experiments.len(),
         pages_written: pages,
         badges_written: badges,
         warnings: scan.warnings,
+        cache_hits: scan.cache_hits,
+        cache_misses: scan.cache_misses,
     })
 }
 
@@ -109,12 +164,11 @@ fn slug(id: &str) -> String {
         .collect()
 }
 
-/// Render one experiment's page body; also writes its badges.
-fn experiment_page(
-    exp: &Experiment,
+/// Render one experiment's page body and badges (pure — no IO).
+fn render_experiment(
+    exp: &MetricExperiment,
     opts: &ReportOptions,
-    out_dir: &Path,
-) -> Result<(String, usize)> {
+) -> RenderedExperiment {
     let mut body = format!("<h1>{}</h1>\n", esc(&exp.id));
     let latest = exp.latest_per_config();
     let badge_region = opts
@@ -123,23 +177,20 @@ fn experiment_page(
         .unwrap_or_else(|| "Global".to_string());
 
     // ---- badges ----
-    let mut nbadges = 0usize;
+    let mut badges = Vec::new();
     body.push_str("<div class=\"badges\">\n");
     for run in &latest {
         let Some(reg) = run.region(&badge_region) else {
             continue;
         };
-        let m = pop::compute(reg, run.threads);
         let cfg = run.resources().label();
         let svg = badge::parallel_efficiency_badge(
             &badge_region,
             &cfg,
-            m.parallel_efficiency,
+            reg.metrics.parallel_efficiency,
         );
-        let name = format!("badges/{}__{}.svg", slug(&exp.id), cfg);
-        std::fs::write(out_dir.join(&name), &svg)?;
-        nbadges += 1;
         body.push_str(&svg);
+        badges.push((format!("badges/{}__{}.svg", slug(&exp.id), cfg), svg));
     }
     body.push_str("</div>\n");
 
@@ -157,7 +208,15 @@ fn experiment_page(
             .collect()
     };
     for region in &table_regions {
-        if let Some(table) = pop::build(region, &latest) {
+        let items: Vec<(crate::sim::ResourceConfig, pop::RegionMetrics)> =
+            latest
+                .iter()
+                .filter_map(|run| {
+                    run.region(region)
+                        .map(|r| (run.resources(), r.metrics))
+                })
+                .collect();
+        if let Some(table) = pop::build_from_metrics(region, &items) {
             body.push_str(&format!(
                 "<h2>Scaling efficiency — region <code>{}</code></h2>\n",
                 esc(region)
@@ -166,14 +225,32 @@ fn experiment_page(
         }
     }
 
-    // ---- automated findings (regressions / improvements) ----
+    // ---- per-config series: findings + plots in one pass ----
+    // Each configuration's history is filtered/sorted and its full
+    // TimeSeries built exactly once; the detector and the plots share
+    // it (a filtered copy is only built when regions were selected).
+    let plot_regions: Vec<String> = if opts.regions.is_empty() {
+        all_regions
+    } else {
+        // Selected regions are highlighted; Global is always kept so the
+        // whole-program trend stays visible (paper: "The selected
+        // regions are also highlighted in the time-series plots").
+        let mut v = vec!["Global".to_string()];
+        v.extend(opts.regions.iter().cloned());
+        v.dedup();
+        v
+    };
     let mut findings_html = String::new();
+    let mut plots_html = String::new();
     for cfg in exp.configs() {
         let history = exp.history_for_config(&cfg);
         if history.len() < 2 {
-            continue;
+            continue; // nothing to compare or plot yet
         }
-        for f in detect::detect(&cfg, &history, &DetectOptions::default()) {
+        let full_ts = timeseries::build_from_metrics(&cfg, &history, &[]);
+        for f in
+            detect::detect_series(&full_ts, &cfg, &DetectOptions::default())
+        {
             findings_html.push_str(&format!(
                 "<li class=\"{}\">{}</li>\n",
                 match f.kind {
@@ -183,7 +260,72 @@ fn experiment_page(
                 esc(&f.describe())
             ));
         }
+
+        // Plot series: with no region selection the full series IS the
+        // plotted one; otherwise build the filtered subset.
+        let filtered_ts;
+        let ts = if opts.regions.is_empty() {
+            &full_ts
+        } else {
+            filtered_ts = timeseries::build_from_metrics(
+                &cfg,
+                &history,
+                &plot_regions,
+            );
+            &filtered_ts
+        };
+        let regions = ts.regions();
+        plots_html.push_str(&format!(
+            "<h2>Time evolution — {} ({} runs)</h2>\n",
+            esc(&cfg),
+            history.len()
+        ));
+        let toggle_info: Vec<(String, String, String)> = regions
+            .iter()
+            .enumerate()
+            .map(|(i, r)| {
+                (r.clone(), svgplot::css_class(r), svgplot::color(i))
+            })
+            .collect();
+        plots_html.push_str(&html::toggles(&toggle_info));
+        for (metric, label) in timeseries::PLOT_METRICS {
+            let series: Vec<Series> = regions
+                .iter()
+                .enumerate()
+                .map(|(i, r)| Series {
+                    label: r.clone(),
+                    points: ts.metric(r, metric),
+                    color: svgplot::color(i),
+                })
+                .filter(|s| !s.points.is_empty())
+                .collect();
+            if series.is_empty() {
+                continue;
+            }
+            plots_html.push_str(&svgplot::line_chart(label, &series, ""));
+        }
+        // Commit annotations under the plots.
+        let commits: Vec<String> = ts
+            .points
+            .iter()
+            .filter_map(|p| {
+                p.commit.as_ref().map(|c| {
+                    format!(
+                        "<code>{}</code> ({})",
+                        esc(&c[..c.len().min(8)]),
+                        timefmt::to_iso8601(p.timestamp)
+                    )
+                })
+            })
+            .collect();
+        if !commits.is_empty() {
+            plots_html.push_str(&format!(
+                "<p>Commits: {}</p>\n",
+                commits.join(" · ")
+            ));
+        }
     }
+
     if !findings_html.is_empty() {
         body.push_str(&format!(
             "<h2>Detected changes</h2>\n<ul class=\"findings\">\n{findings_html}</ul>\n"
@@ -193,7 +335,7 @@ fn experiment_page(
     // ---- Extra-P-style scaling models (>= 3 configurations) ----
     if latest.len() >= 3 {
         let models =
-            crate::pop::extrap::fit_experiment(&latest, &table_regions);
+            pop::extrap::fit_experiment_metrics(&latest, &table_regions);
         if !models.is_empty() {
             body.push_str("<h2>Scaling models (Extra-P-style)</h2>\n<ul>\n");
             for (region, m) in &models {
@@ -214,75 +356,12 @@ fn experiment_page(
     }
 
     // ---- time-evolution plots per configuration ----
-    let plot_regions: Vec<String> = if opts.regions.is_empty() {
-        all_regions
-    } else {
-        // Selected regions are highlighted; Global is always kept so the
-        // whole-program trend stays visible (paper: "The selected
-        // regions are also highlighted in the time-series plots").
-        let mut v = vec!["Global".to_string()];
-        v.extend(opts.regions.iter().cloned());
-        v.dedup();
-        v
-    };
-    for cfg in exp.configs() {
-        let history = exp.history_for_config(&cfg);
-        if history.len() < 2 {
-            continue; // nothing to plot yet
-        }
-        let ts = timeseries::build(&cfg, &history, &plot_regions);
-        let regions = ts.regions();
-        body.push_str(&format!(
-            "<h2>Time evolution — {} ({} runs)</h2>\n",
-            esc(&cfg),
-            history.len()
-        ));
-        let toggle_info: Vec<(String, String, String)> = regions
-            .iter()
-            .enumerate()
-            .map(|(i, r)| {
-                (r.clone(), svgplot::css_class(r), svgplot::color(i))
-            })
-            .collect();
-        body.push_str(&html::toggles(&toggle_info));
-        for (metric, label) in timeseries::PLOT_METRICS {
-            let series: Vec<Series> = regions
-                .iter()
-                .enumerate()
-                .map(|(i, r)| Series {
-                    label: r.clone(),
-                    points: ts.metric(r, metric),
-                    color: svgplot::color(i),
-                })
-                .filter(|s| !s.points.is_empty())
-                .collect();
-            if series.is_empty() {
-                continue;
-            }
-            body.push_str(&svgplot::line_chart(label, &series, ""));
-        }
-        // Commit annotations under the plots.
-        let commits: Vec<String> = ts
-            .points
-            .iter()
-            .filter_map(|p| {
-                p.commit.as_ref().map(|c| {
-                    format!(
-                        "<code>{}</code> ({})",
-                        esc(&c[..c.len().min(8)]),
-                        timefmt::to_iso8601(p.timestamp)
-                    )
-                })
-            })
-            .collect();
-        if !commits.is_empty() {
-            body.push_str(&format!(
-                "<p>Commits: {}</p>\n",
-                commits.join(" · ")
-            ));
-        }
+    body.push_str(&plots_html);
+    RenderedExperiment {
+        file: format!("{}.html", slug(&exp.id)),
+        body,
+        badges,
     }
-    Ok((body, nbadges))
 }
 
 #[cfg(test)]
@@ -330,11 +409,14 @@ mod tests {
         let opts = ReportOptions {
             regions: vec!["initialize".into(), "timestep".into()],
             region_for_badge: Some("timestep".into()),
+            ..Default::default()
         };
         let summary = generate(td.path(), out.path(), &opts).unwrap();
         assert_eq!(summary.experiments, 1);
         assert_eq!(summary.pages_written, 2); // index + 1 experiment
         assert_eq!(summary.badges_written, 1);
+        assert_eq!(summary.cache_hits, 0);
+        assert_eq!(summary.cache_misses, 4);
         assert!(out.path().join("index.html").exists());
         let page = std::fs::read_to_string(
             out.path().join("salpha_resolution_1.html"),
@@ -355,6 +437,30 @@ mod tests {
         )
         .unwrap();
         assert!(badge.contains("timestep"));
+    }
+
+    #[test]
+    fn warm_rerun_hits_cache_and_is_byte_identical() {
+        let td = TempDir::new("report-in-warm").unwrap();
+        let out = TempDir::new("report-out-warm").unwrap();
+        build_input(&td);
+        let opts = ReportOptions::default();
+        let cold = generate(td.path(), out.path(), &opts).unwrap();
+        assert_eq!(cold.cache_misses, 4);
+        let page1 = std::fs::read_to_string(
+            out.path().join("salpha_resolution_1.html"),
+        )
+        .unwrap();
+        assert!(out.path().join(CACHE_FILE_NAME).exists());
+
+        let warm = generate(td.path(), out.path(), &opts).unwrap();
+        assert_eq!(warm.cache_hits, 4, "all artifacts unchanged");
+        assert_eq!(warm.cache_misses, 0);
+        let page2 = std::fs::read_to_string(
+            out.path().join("salpha_resolution_1.html"),
+        )
+        .unwrap();
+        assert_eq!(page1, page2, "cache round-trip changed the page");
     }
 
     #[test]

@@ -12,32 +12,74 @@
 //!
 //! Unparsable files produce warnings, not failures — a CI report must
 //! survive one corrupt artifact.
+//!
+//! Two scan paths share the [`discover`] pass:
+//! * [`scan`] parses every artifact to full [`RunData`] (CLI `detect`,
+//!   `model`, tests);
+//! * [`scan_metrics`] is the report engine's path: artifacts reduce to
+//!   [`RunMetrics`] through the content-hash cache (`pages::cache`), so
+//!   unchanged files from previous CI pipelines skip parse + reduce
+//!   entirely, and everything else parses on a worker pool.
+//!
+//! History ordering is fully deterministic: runs sort by
+//! `effective_timestamp()` with the **source file name as tie-break**,
+//! so equal-timestamp runs (same CI pipeline, coarse clocks) cannot
+//! make badges or tables depend on directory-iteration order.
 
 use std::path::{Path, PathBuf};
 
 use anyhow::{ensure, Result};
 
+use crate::pop::RunMetrics;
 use crate::talp::RunData;
+use crate::util::hash;
+use crate::util::par::parallel_map;
+
+use super::cache::MetricsCache;
 
 /// One experiment folder's parsed content.
+///
+/// `sources[i]` is the scan-root-relative file `runs[i]` came from;
+/// the two vectors are always index-aligned.
 #[derive(Debug)]
 pub struct Experiment {
     /// Path relative to the scan root, e.g. "mesh_1/strong_scaling".
     pub id: String,
     pub runs: Vec<RunData>,
+    pub sources: Vec<String>,
+}
+
+/// Shared ordering rule: timestamp first, source file name as the
+/// deterministic tie-break.
+fn history_order(
+    a_ts: i64,
+    a_src: &str,
+    b_ts: i64,
+    b_src: &str,
+) -> std::cmp::Ordering {
+    a_ts.cmp(&b_ts).then_with(|| a_src.cmp(b_src))
+}
+
+/// Distinct resource configurations of (ranks, threads) pairs, ordered
+/// by resources.
+fn config_labels(mut cfgs: Vec<(u32, u32)>) -> Vec<String> {
+    cfgs.sort_by_key(|&(r, t)| (r * t, r));
+    cfgs.dedup();
+    cfgs.iter().map(|(r, t)| format!("{r}x{t}")).collect()
+}
+
+/// Region names with Global first, then alphabetical.
+fn order_regions(mut names: Vec<String>) -> Vec<String> {
+    names.sort_by_key(|n| (n != "Global", n.clone()));
+    names
 }
 
 impl Experiment {
     /// Distinct resource configurations, ordered by resources.
     pub fn configs(&self) -> Vec<String> {
-        let mut cfgs: Vec<(u32, u32)> = self
-            .runs
-            .iter()
-            .map(|r| (r.ranks, r.threads))
-            .collect();
-        cfgs.sort_by_key(|&(r, t)| (r * t, r));
-        cfgs.dedup();
-        cfgs.iter().map(|(r, t)| format!("{r}x{t}")).collect()
+        config_labels(
+            self.runs.iter().map(|r| (r.ranks, r.threads)).collect(),
+        )
     }
 
     /// Latest run per configuration (the table inputs).
@@ -50,15 +92,25 @@ impl Experiment {
             .collect()
     }
 
-    /// All runs of one configuration, oldest first.
+    /// All runs of one configuration, oldest first; equal timestamps
+    /// tie-break on source file name.
     pub fn history_for_config(&self, label: &str) -> Vec<&RunData> {
-        let mut runs: Vec<&RunData> = self
-            .runs
-            .iter()
-            .filter(|r| r.resources().label() == label)
+        let mut idx: Vec<usize> = (0..self.runs.len())
+            .filter(|&i| self.runs[i].resources().label() == label)
             .collect();
-        runs.sort_by_key(|r| r.effective_timestamp());
-        runs
+        idx.sort_by(|&a, &b| {
+            history_order(
+                self.runs[a].effective_timestamp(),
+                self.source(a),
+                self.runs[b].effective_timestamp(),
+                self.source(b),
+            )
+        });
+        idx.into_iter().map(|i| &self.runs[i]).collect()
+    }
+
+    fn source(&self, i: usize) -> &str {
+        self.sources.get(i).map(String::as_str).unwrap_or("")
     }
 
     /// Region names present in any run, Global first.
@@ -71,8 +123,7 @@ impl Experiment {
                 }
             }
         }
-        names.sort_by_key(|n| (n != "Global", n.clone()));
-        names
+        order_regions(names)
     }
 }
 
@@ -83,69 +134,208 @@ pub struct ScanResult {
     pub warnings: Vec<String>,
 }
 
-/// Scan `root` per the Fig. 2 layout.
+/// One experiment reduced to cached metrics (the report engine's form).
+#[derive(Debug)]
+pub struct MetricExperiment {
+    pub id: String,
+    pub runs: Vec<RunMetrics>,
+}
+
+impl MetricExperiment {
+    pub fn configs(&self) -> Vec<String> {
+        config_labels(
+            self.runs.iter().map(|r| (r.ranks, r.threads)).collect(),
+        )
+    }
+
+    pub fn latest_per_config(&self) -> Vec<&RunMetrics> {
+        self.configs()
+            .iter()
+            .filter_map(|label| {
+                self.history_for_config(label).into_iter().next_back()
+            })
+            .collect()
+    }
+
+    /// Oldest first; equal timestamps tie-break on source file name.
+    pub fn history_for_config(&self, label: &str) -> Vec<&RunMetrics> {
+        let mut runs: Vec<&RunMetrics> = self
+            .runs
+            .iter()
+            .filter(|r| r.resources().label() == label)
+            .collect();
+        runs.sort_by(|a, b| {
+            history_order(
+                a.effective_timestamp(),
+                &a.source,
+                b.effective_timestamp(),
+                &b.source,
+            )
+        });
+        runs
+    }
+
+    pub fn regions(&self) -> Vec<String> {
+        let mut names: Vec<String> = Vec::new();
+        for run in &self.runs {
+            for reg in &run.regions {
+                if !names.contains(&reg.name) {
+                    names.push(reg.name.clone());
+                }
+            }
+        }
+        order_regions(names)
+    }
+}
+
+/// Outcome of the cached scan.
+#[derive(Debug, Default)]
+pub struct MetricScan {
+    pub experiments: Vec<MetricExperiment>,
+    pub warnings: Vec<String>,
+    /// Artifacts served from the content-hash cache (not re-parsed).
+    pub cache_hits: usize,
+    /// Artifacts parsed + reduced this run.
+    pub cache_misses: usize,
+}
+
+/// Pass 1: discover experiment directories and their artifact files,
+/// in deterministic (sorted) order.
+pub fn discover(root: &Path) -> Result<Vec<(String, Vec<PathBuf>)>> {
+    ensure!(root.is_dir(), "{} is not a directory", root.display());
+    let mut found: Vec<(String, Vec<PathBuf>)> = Vec::new();
+    walk(root, root, &mut found);
+    found.sort_by(|a, b| a.0.cmp(&b.0));
+    Ok(found)
+}
+
+fn rel_str(root: &Path, path: &Path) -> String {
+    path.strip_prefix(root)
+        .map(|r| r.to_string_lossy().replace('\\', "/"))
+        .unwrap_or_else(|_| path.to_string_lossy().into_owned())
+}
+
+/// Scan `root` per the Fig. 2 layout, parsing to full [`RunData`].
 ///
 /// Parsing is parallelized across worker threads: CI histories grow to
 /// hundreds of JSONs and per-file open/read latency dominates the
 /// report path (EXPERIMENTS.md §Perf) — results stay in deterministic
 /// file order regardless of worker scheduling.
 pub fn scan(root: &Path) -> Result<ScanResult> {
-    ensure!(root.is_dir(), "{} is not a directory", root.display());
-    // Pass 1 (sequential): discover experiment dirs + their files.
-    let mut found: Vec<(String, Vec<PathBuf>)> = Vec::new();
-    walk(root, root, &mut found);
-    found.sort_by(|a, b| a.0.cmp(&b.0));
+    let found = discover(root)?;
+    let all: Vec<PathBuf> = found
+        .iter()
+        .flat_map(|(_, fs)| fs.iter().cloned())
+        .collect();
+    let parsed: Vec<Result<RunData>> =
+        parallel_map(&all, 0, |p| RunData::read_file(p));
 
-    // Pass 2 (parallel): parse every file.
-    let all_files: Vec<&PathBuf> =
-        found.iter().flat_map(|(_, fs)| fs.iter()).collect();
-    let n = all_files.len();
-    let workers = std::thread::available_parallelism()
-        .map(|p| p.get())
-        .unwrap_or(4)
-        .min(16)
-        .max(1);
-    let next = std::sync::atomic::AtomicUsize::new(0);
-    let mut parsed: Vec<Option<Result<RunData>>> =
-        (0..n).map(|_| None).collect();
-    let slots: Vec<std::sync::Mutex<Option<Result<RunData>>>> =
-        (0..n).map(|_| std::sync::Mutex::new(None)).collect();
-    std::thread::scope(|scope| {
-        for _ in 0..workers {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                *slots[i].lock().unwrap() =
-                    Some(RunData::read_file(all_files[i]));
-            });
-        }
-    });
-    for (i, slot) in slots.into_iter().enumerate() {
-        parsed[i] = slot.into_inner().unwrap();
-    }
-
-    // Pass 3: assemble experiments in order, collecting warnings.
     let mut result = ScanResult::default();
-    let mut cursor = 0usize;
+    let mut next = parsed.into_iter();
     for (id, files) in found {
         let mut runs = Vec::new();
+        let mut sources = Vec::new();
         for path in &files {
-            match parsed[cursor].take() {
-                Some(Ok(r)) => runs.push(r),
-                Some(Err(e)) => result
+            match next.next().expect("parser skipped a file") {
+                Ok(r) => {
+                    runs.push(r);
+                    sources.push(rel_str(root, path));
+                }
+                Err(e) => result
                     .warnings
                     .push(format!("skipping {}: {e:#}", path.display())),
-                None => unreachable!("worker skipped a file"),
             }
-            cursor += 1;
         }
         if !runs.is_empty() {
-            result.experiments.push(Experiment { id, runs });
+            result.experiments.push(Experiment { id, runs, sources });
         }
     }
     Ok(result)
+}
+
+/// Scan `root` through the metrics cache on up to `jobs` workers
+/// (0 = auto).  Unchanged artifacts (same content hash) are served from
+/// `cache` without being read into the JSON parser at all; fresh or
+/// changed artifacts parse + reduce in parallel and are inserted.
+/// Entries for vanished files are pruned.
+pub fn scan_metrics(
+    root: &Path,
+    cache: &mut MetricsCache,
+    jobs: usize,
+) -> Result<MetricScan> {
+    enum Outcome {
+        Hit(RunMetrics),
+        Miss(String, RunMetrics),
+        Bad(String),
+    }
+
+    let found = discover(root)?;
+    let all: Vec<(String, PathBuf)> = found
+        .iter()
+        .flat_map(|(_, fs)| {
+            fs.iter().map(|p| (rel_str(root, p), p.clone()))
+        })
+        .collect();
+
+    let cache_ref: &MetricsCache = cache;
+    let outcomes: Vec<Outcome> = parallel_map(&all, jobs, |(rel, path)| {
+        let bytes = match std::fs::read(path) {
+            Ok(b) => b,
+            Err(e) => {
+                return Outcome::Bad(format!(
+                    "skipping {}: {e}",
+                    path.display()
+                ))
+            }
+        };
+        let content_hash = hash::to_hex(hash::fnv1a_64(&bytes));
+        if let Some(hit) = cache_ref.lookup(rel, &content_hash) {
+            return Outcome::Hit(hit.clone());
+        }
+        let parsed = String::from_utf8(bytes)
+            .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))
+            .and_then(|text| RunData::parse_str(&text, path));
+        match parsed {
+            Ok(data) => Outcome::Miss(
+                content_hash,
+                RunMetrics::from_run(&data, rel),
+            ),
+            Err(e) => {
+                Outcome::Bad(format!("skipping {}: {e:#}", path.display()))
+            }
+        }
+    });
+
+    let mut scan = MetricScan::default();
+    let mut next = outcomes.into_iter();
+    let mut flat = all.iter();
+    for (id, files) in &found {
+        let mut runs = Vec::new();
+        for _ in files {
+            let (rel, _) = flat.next().expect("discover/flat mismatch");
+            match next.next().expect("worker skipped a file") {
+                Outcome::Hit(rm) => {
+                    scan.cache_hits += 1;
+                    runs.push(rm);
+                }
+                Outcome::Miss(content_hash, rm) => {
+                    scan.cache_misses += 1;
+                    cache.insert(rel, &content_hash, rm.clone());
+                    runs.push(rm);
+                }
+                Outcome::Bad(warning) => scan.warnings.push(warning),
+            }
+        }
+        if !runs.is_empty() {
+            scan.experiments
+                .push(MetricExperiment { id: id.clone(), runs });
+        }
+    }
+
+    let live: std::collections::HashSet<&str> =
+        all.iter().map(|(rel, _)| rel.as_str()).collect();
+    cache.retain_paths(|p| live.contains(p));
+    Ok(scan)
 }
 
 fn walk(root: &Path, dir: &Path, out: &mut Vec<(String, Vec<PathBuf>)>) {
@@ -289,6 +479,41 @@ mod tests {
     }
 
     #[test]
+    fn equal_timestamps_tie_break_on_file_name() {
+        // Same CI pipeline, coarse clocks: three runs of one config
+        // with the same timestamp must order by file name, not by
+        // directory-iteration accidents.
+        let td = TempDir::new("scan-tie").unwrap();
+        for (file, app) in
+            [("zz.json", "last"), ("aa.json", "first"), ("mm.json", "mid")]
+        {
+            let mut r = run(2, 2, 777);
+            r.app = app.into();
+            r.write_file(&td.path().join("exp").join(file)).unwrap();
+        }
+        let res = scan(td.path()).unwrap();
+        let hist = res.experiments[0].history_for_config("2x2");
+        let order: Vec<&str> =
+            hist.iter().map(|r| r.app.as_str()).collect();
+        assert_eq!(order, ["first", "mid", "last"]);
+        // latest_per_config picks the file-name-largest run.
+        let latest = res.experiments[0].latest_per_config();
+        assert_eq!(latest[0].app, "last");
+
+        // The metrics path applies the identical rule.
+        let mut cache = MetricsCache::new();
+        let ms = scan_metrics(td.path(), &mut cache, 1).unwrap();
+        let hist = ms.experiments[0].history_for_config("2x2");
+        let order: Vec<&str> =
+            hist.iter().map(|r| r.app.as_str()).collect();
+        assert_eq!(order, ["first", "mid", "last"]);
+        assert_eq!(
+            ms.experiments[0].latest_per_config()[0].source,
+            "exp/zz.json"
+        );
+    }
+
+    #[test]
     fn corrupt_file_warns_but_continues() {
         let td = fig2_tree();
         std::fs::write(td.path().join("mesh_1/comparison/bad.json"), "{oops")
@@ -299,11 +524,85 @@ mod tests {
     }
 
     #[test]
+    fn corrupt_file_warns_but_continues_in_metrics_scan() {
+        // The report path must also survive a truncated artifact next
+        // to valid runs (paper: "a CI report must survive one corrupt
+        // artifact").
+        let td = fig2_tree();
+        std::fs::write(
+            td.path().join("mesh_1/comparison/trunc.json"),
+            "{\"resources\": {\"num_mpi_ranks\": 2,",
+        )
+        .unwrap();
+        let mut cache = MetricsCache::new();
+        let ms = scan_metrics(td.path(), &mut cache, 0).unwrap();
+        assert_eq!(ms.warnings.len(), 1);
+        assert!(ms.warnings[0].contains("trunc.json"));
+        assert_eq!(ms.experiments.len(), 3);
+        assert_eq!(ms.experiments[0].runs.len(), 3, "valid runs kept");
+        // The corrupt file must not be cached; a rescan warns again.
+        let ms2 = scan_metrics(td.path(), &mut cache, 0).unwrap();
+        assert_eq!(ms2.warnings.len(), 1);
+        assert_eq!(ms2.cache_misses, 0, "valid files all hit");
+    }
+
+    #[test]
+    fn metrics_scan_hits_cache_on_rescan() {
+        let td = fig2_tree();
+        let mut cache = MetricsCache::new();
+        let cold = scan_metrics(td.path(), &mut cache, 0).unwrap();
+        assert_eq!(cold.cache_hits, 0);
+        assert_eq!(cold.cache_misses, 9);
+        assert_eq!(cache.len(), 9);
+
+        let warm = scan_metrics(td.path(), &mut cache, 0).unwrap();
+        assert_eq!(warm.cache_hits, 9, "unchanged artifacts must hit");
+        assert_eq!(warm.cache_misses, 0);
+
+        // Touch one file's *content*: only that file re-parses.
+        run(8, 14, 999)
+            .write_file(
+                &td.path().join("mesh_2/weak_scaling/talp_8x14_ed8b9ef.json"),
+            )
+            .unwrap();
+        let mixed = scan_metrics(td.path(), &mut cache, 0).unwrap();
+        assert_eq!(mixed.cache_hits, 8);
+        assert_eq!(mixed.cache_misses, 1);
+
+        // Delete a file: its entry is pruned.
+        std::fs::remove_file(
+            td.path().join("mesh_1/comparison/talp_1x112.json"),
+        )
+        .unwrap();
+        scan_metrics(td.path(), &mut cache, 0).unwrap();
+        assert_eq!(cache.len(), 8);
+    }
+
+    #[test]
+    fn metrics_scan_matches_rundata_scan() {
+        let td = fig2_tree();
+        let a = scan(td.path()).unwrap();
+        let mut cache = MetricsCache::new();
+        let b = scan_metrics(td.path(), &mut cache, 2).unwrap();
+        assert_eq!(a.experiments.len(), b.experiments.len());
+        for (ea, eb) in a.experiments.iter().zip(&b.experiments) {
+            assert_eq!(ea.id, eb.id);
+            assert_eq!(ea.configs(), eb.configs());
+            assert_eq!(ea.regions(), eb.regions());
+            assert_eq!(ea.runs.len(), eb.runs.len());
+        }
+    }
+
+    #[test]
     fn empty_or_missing_root() {
         let td = TempDir::new("scan-empty").unwrap();
         let res = scan(td.path()).unwrap();
         assert!(res.experiments.is_empty());
         assert!(scan(&td.path().join("nope")).is_err());
+        let mut cache = MetricsCache::new();
+        assert!(
+            scan_metrics(&td.path().join("nope"), &mut cache, 0).is_err()
+        );
     }
 
     #[test]

@@ -43,6 +43,25 @@ pub struct TimeSeries {
     pub points: Vec<TimePoint>,
 }
 
+/// One plotted point from one region's precomputed factors.
+fn region_point(name: &str, m: &pop::RegionMetrics) -> RegionPoint {
+    RegionPoint {
+        region: name.to_string(),
+        elapsed_s: m.elapsed_s,
+        useful_ipc: m.useful_ipc,
+        frequency_ghz: m.frequency_ghz,
+        instructions: m.total_useful_instructions as f64,
+        parallel_efficiency: m.parallel_efficiency,
+        mpi_parallel_efficiency: m.mpi_parallel_efficiency,
+        omp_parallel_efficiency: m.omp_parallel_efficiency,
+        omp_load_balance: m.omp_load_balance,
+        omp_scheduling_efficiency: m.omp_scheduling_efficiency,
+        omp_serialization_efficiency: m.omp_serialization_efficiency,
+        mpi_load_balance: m.mpi_load_balance,
+        mpi_communication_efficiency: m.mpi_communication_efficiency,
+    }
+}
+
 /// Build the series from a configuration's history (oldest first), for
 /// the selected regions (empty = all).
 pub fn build(config: &str, history: &[&RunData], regions: &[String]) -> TimeSeries {
@@ -54,22 +73,33 @@ pub fn build(config: &str, history: &[&RunData], regions: &[String]) -> TimeSeri
                 continue;
             }
             let m = pop::compute(reg, run.threads);
-            region_points.push(RegionPoint {
-                region: reg.name.clone(),
-                elapsed_s: m.elapsed_s,
-                useful_ipc: m.useful_ipc,
-                frequency_ghz: m.frequency_ghz,
-                instructions: m.total_useful_instructions as f64,
-                parallel_efficiency: m.parallel_efficiency,
-                mpi_parallel_efficiency: m.mpi_parallel_efficiency,
-                omp_parallel_efficiency: m.omp_parallel_efficiency,
-                omp_load_balance: m.omp_load_balance,
-                omp_scheduling_efficiency: m.omp_scheduling_efficiency,
-                omp_serialization_efficiency: m.omp_serialization_efficiency,
-                mpi_load_balance: m.mpi_load_balance,
-                mpi_communication_efficiency: m.mpi_communication_efficiency,
-            });
+            region_points.push(region_point(&reg.name, &m));
         }
+        points.push(TimePoint {
+            timestamp: run.effective_timestamp(),
+            commit: run.git.as_ref().map(|g| g.commit.clone()),
+            branch: run.git.as_ref().map(|g| g.branch.clone()),
+            regions: region_points,
+        });
+    }
+    TimeSeries { config: config.to_string(), points }
+}
+
+/// Same series from precomputed per-run metrics (the incremental report
+/// engine's path) — no per-process data is touched.
+pub fn build_from_metrics(
+    config: &str,
+    history: &[&pop::RunMetrics],
+    regions: &[String],
+) -> TimeSeries {
+    let mut points = Vec::with_capacity(history.len());
+    for run in history {
+        let region_points = run
+            .regions
+            .iter()
+            .filter(|r| regions.is_empty() || regions.contains(&r.name))
+            .map(|r| region_point(&r.name, &r.metrics))
+            .collect();
         points.push(TimePoint {
             timestamp: run.effective_timestamp(),
             commit: run.git.as_ref().map(|g| g.commit.clone()),

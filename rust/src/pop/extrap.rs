@@ -117,21 +117,47 @@ pub fn fit_experiment(
     runs: &[&crate::talp::RunData],
     region_filter: &[String],
 ) -> Vec<(String, Model)> {
+    let obs: Vec<(f64, String, f64)> = runs
+        .iter()
+        .flat_map(|run| {
+            let p = run.resources().total_cpus() as f64;
+            run.regions
+                .iter()
+                .map(move |reg| (p, reg.name.clone(), reg.elapsed_s))
+        })
+        .collect();
+    fit_observations(obs, region_filter)
+}
+
+/// Same fit from precomputed metrics (the incremental report engine's
+/// path — see `pop::summary`).
+pub fn fit_experiment_metrics(
+    runs: &[&crate::pop::RunMetrics],
+    region_filter: &[String],
+) -> Vec<(String, Model)> {
+    let obs: Vec<(f64, String, f64)> = runs
+        .iter()
+        .flat_map(|run| {
+            let p = run.resources().total_cpus() as f64;
+            run.regions
+                .iter()
+                .map(move |reg| (p, reg.name.clone(), reg.metrics.elapsed_s))
+        })
+        .collect();
+    fit_observations(obs, region_filter)
+}
+
+fn fit_observations(
+    observations: Vec<(f64, String, f64)>,
+    region_filter: &[String],
+) -> Vec<(String, Model)> {
     use std::collections::BTreeMap;
     let mut by_region: BTreeMap<String, Vec<(f64, f64)>> = BTreeMap::new();
-    for run in runs {
-        let p = run.resources().total_cpus() as f64;
-        for reg in &run.regions {
-            if !region_filter.is_empty()
-                && !region_filter.contains(&reg.name)
-            {
-                continue;
-            }
-            by_region
-                .entry(reg.name.clone())
-                .or_default()
-                .push((p, reg.elapsed_s));
+    for (p, name, elapsed) in observations {
+        if !region_filter.is_empty() && !region_filter.contains(&name) {
+            continue;
         }
+        by_region.entry(name).or_default().push((p, elapsed));
     }
     by_region
         .into_iter()

@@ -5,8 +5,10 @@
 pub mod extrap;
 pub mod metrics;
 pub mod scaling;
+pub mod summary;
 pub mod table;
 
 pub use metrics::{compute, RegionMetrics};
 pub use scaling::{detect_mode, reference_index, scalability, Scalability, ScalingMode};
-pub use table::{build, Row, ScalingTable};
+pub use summary::{RegionSummary, RunMetrics};
+pub use table::{build, build_from_metrics, Row, ScalingTable};

@@ -1,0 +1,357 @@
+//! Precomputed per-run POP metrics — the report engine's working set.
+//!
+//! [`RunMetrics`] is everything report rendering needs from one TALP
+//! JSON (badges, scaling tables, time series, findings, Extra-P fits)
+//! with the per-process arrays already reduced to [`RegionMetrics`].
+//! Two jobs:
+//!
+//! 1. **Compute once**: the legacy path recomputed `pop::compute` for
+//!    the same region in every consumer (badge + table + each time
+//!    point); `RunMetrics::from_run` runs the reduction exactly once.
+//! 2. **Cache on disk**: the JSON form (`to_json`/`from_json`) is what
+//!    `pages::cache` persists between CI pipelines, so unchanged
+//!    artifacts skip parse + reduce entirely on warm runs.
+//!
+//! Serialization must be a *fixpoint*: a `RunMetrics` read back from
+//! the cache renders byte-identical pages.  f64 values go through the
+//! shortest-roundtrip `Display` of `util::json`, integers stay below
+//! 2^53, and timestamps are stored as raw unix seconds.
+
+use anyhow::{bail, Context, Result};
+
+use crate::sim::ResourceConfig;
+use crate::talp::{GitMeta, RunData};
+use crate::util::json::Json;
+
+use super::metrics::{self, RegionMetrics};
+
+/// One region's precomputed factors.
+#[derive(Debug, Clone)]
+pub struct RegionSummary {
+    pub name: String,
+    pub visits: u64,
+    pub metrics: RegionMetrics,
+}
+
+/// One run, reduced to what report rendering consumes.
+#[derive(Debug, Clone)]
+pub struct RunMetrics {
+    /// File name relative to the scan root (deterministic tie-break for
+    /// equal-timestamp runs).
+    pub source: String,
+    pub app: String,
+    pub machine: String,
+    /// End-of-execution wall clock (unix seconds).
+    pub timestamp: i64,
+    pub ranks: u32,
+    pub threads: u32,
+    pub nodes: u32,
+    pub git: Option<GitMeta>,
+    pub regions: Vec<RegionSummary>,
+}
+
+impl RunMetrics {
+    /// Reduce a parsed run: one `pop::compute` per region.
+    pub fn from_run(data: &RunData, source: &str) -> RunMetrics {
+        RunMetrics {
+            source: source.to_string(),
+            app: data.app.clone(),
+            machine: data.machine.clone(),
+            timestamp: data.timestamp,
+            ranks: data.ranks,
+            threads: data.threads,
+            nodes: data.nodes,
+            git: data.git.clone(),
+            regions: data
+                .regions
+                .iter()
+                .map(|reg| RegionSummary {
+                    name: reg.name.clone(),
+                    visits: reg.visits,
+                    metrics: metrics::compute(reg, data.threads),
+                })
+                .collect(),
+        }
+    }
+
+    pub fn resources(&self) -> ResourceConfig {
+        ResourceConfig::new(self.ranks, self.threads)
+    }
+
+    pub fn region(&self, name: &str) -> Option<&RegionSummary> {
+        self.regions.iter().find(|r| r.name == name)
+    }
+
+    /// Same plot-axis rule as `RunData::effective_timestamp`: git commit
+    /// time when stamped, execution end time otherwise.
+    pub fn effective_timestamp(&self) -> i64 {
+        self.git
+            .as_ref()
+            .map(|g| g.commit_timestamp)
+            .unwrap_or(self.timestamp)
+    }
+
+    // ---------- cache JSON ----------
+
+    pub fn to_json(&self) -> Json {
+        let mut root = Json::obj();
+        root.set("source", Json::Str(self.source.clone()));
+        root.set("app", Json::Str(self.app.clone()));
+        root.set("machine", Json::Str(self.machine.clone()));
+        root.set("timestamp", Json::Num(self.timestamp as f64));
+        root.set("ranks", Json::Num(self.ranks as f64));
+        root.set("threads", Json::Num(self.threads as f64));
+        root.set("nodes", Json::Num(self.nodes as f64));
+        if let Some(g) = &self.git {
+            root.set(
+                "git",
+                Json::from_pairs(vec![
+                    ("commit", Json::Str(g.commit.clone())),
+                    ("branch", Json::Str(g.branch.clone())),
+                    (
+                        "commit_timestamp",
+                        Json::Num(g.commit_timestamp as f64),
+                    ),
+                    ("message", Json::Str(g.message.clone())),
+                ]),
+            );
+        }
+        let regions: Vec<Json> = self
+            .regions
+            .iter()
+            .map(|r| {
+                let m = &r.metrics;
+                Json::from_pairs(vec![
+                    ("name", Json::Str(r.name.clone())),
+                    ("visits", Json::Num(r.visits as f64)),
+                    ("ncpus", Json::Num(m.ncpus as f64)),
+                    ("nranks", Json::Num(m.nranks as f64)),
+                    ("nthreads", Json::Num(m.nthreads as f64)),
+                    ("elapsed_s", Json::Num(m.elapsed_s)),
+                    ("total_useful_s", Json::Num(m.total_useful_s)),
+                    (
+                        "total_useful_instructions",
+                        Json::Num(m.total_useful_instructions as f64),
+                    ),
+                    (
+                        "total_useful_cycles",
+                        Json::Num(m.total_useful_cycles as f64),
+                    ),
+                    ("pe", Json::Num(m.parallel_efficiency)),
+                    ("mpi_pe", Json::Num(m.mpi_parallel_efficiency)),
+                    (
+                        "mpi_comm_eff",
+                        Json::Num(m.mpi_communication_efficiency),
+                    ),
+                    ("mpi_lb", Json::Num(m.mpi_load_balance)),
+                    ("mpi_lb_in", Json::Num(m.mpi_load_balance_in)),
+                    ("mpi_lb_inter", Json::Num(m.mpi_load_balance_inter)),
+                    ("omp_pe", Json::Num(m.omp_parallel_efficiency)),
+                    ("omp_lb", Json::Num(m.omp_load_balance)),
+                    (
+                        "omp_sched_eff",
+                        Json::Num(m.omp_scheduling_efficiency),
+                    ),
+                    (
+                        "omp_serial_eff",
+                        Json::Num(m.omp_serialization_efficiency),
+                    ),
+                    ("useful_ipc", Json::Num(m.useful_ipc)),
+                    ("frequency_ghz", Json::Num(m.frequency_ghz)),
+                    ("insn_per_cpu", Json::Num(m.insn_per_cpu)),
+                ])
+            })
+            .collect();
+        root.set("regions", Json::Arr(regions));
+        root
+    }
+
+    pub fn from_json(j: &Json) -> Result<RunMetrics> {
+        let num = |key: &str| -> Result<f64> {
+            j.get(key)
+                .and_then(Json::as_f64)
+                .with_context(|| format!("cache entry: missing {key}"))
+        };
+        // Strict like every other field: a malformed git block must
+        // drop the entry (forcing a safe re-parse), not default the
+        // commit timestamp to 0 and silently reorder the history.
+        let git = match j.get("git") {
+            None => None,
+            Some(g) => Some(GitMeta {
+                commit: g.str_or("commit", "").to_string(),
+                branch: g.str_or("branch", "").to_string(),
+                commit_timestamp: g
+                    .get("commit_timestamp")
+                    .and_then(Json::as_f64)
+                    .context("cache entry: git without commit_timestamp")?
+                    as i64,
+                message: g.str_or("message", "").to_string(),
+            }),
+        };
+        let mut regions = Vec::new();
+        for rj in j
+            .get("regions")
+            .and_then(Json::as_arr)
+            .context("cache entry: missing regions")?
+        {
+            let rnum = |key: &str| -> Result<f64> {
+                rj.get(key)
+                    .and_then(Json::as_f64)
+                    .with_context(|| format!("cache region: missing {key}"))
+            };
+            regions.push(RegionSummary {
+                name: rj
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .context("cache region: missing name")?
+                    .to_string(),
+                visits: rnum("visits")? as u64,
+                metrics: RegionMetrics {
+                    ncpus: rnum("ncpus")? as u32,
+                    nranks: rnum("nranks")? as u32,
+                    nthreads: rnum("nthreads")? as u32,
+                    elapsed_s: rnum("elapsed_s")?,
+                    total_useful_s: rnum("total_useful_s")?,
+                    total_useful_instructions: rnum(
+                        "total_useful_instructions",
+                    )? as u64,
+                    total_useful_cycles: rnum("total_useful_cycles")? as u64,
+                    parallel_efficiency: rnum("pe")?,
+                    mpi_parallel_efficiency: rnum("mpi_pe")?,
+                    mpi_communication_efficiency: rnum("mpi_comm_eff")?,
+                    mpi_load_balance: rnum("mpi_lb")?,
+                    mpi_load_balance_in: rnum("mpi_lb_in")?,
+                    mpi_load_balance_inter: rnum("mpi_lb_inter")?,
+                    omp_parallel_efficiency: rnum("omp_pe")?,
+                    omp_load_balance: rnum("omp_lb")?,
+                    omp_scheduling_efficiency: rnum("omp_sched_eff")?,
+                    omp_serialization_efficiency: rnum("omp_serial_eff")?,
+                    useful_ipc: rnum("useful_ipc")?,
+                    frequency_ghz: rnum("frequency_ghz")?,
+                    insn_per_cpu: rnum("insn_per_cpu")?,
+                },
+            });
+        }
+        if regions.is_empty() {
+            bail!("cache entry: no regions");
+        }
+        Ok(RunMetrics {
+            source: j
+                .get("source")
+                .and_then(Json::as_str)
+                .context("cache entry: missing source")?
+                .to_string(),
+            app: j.str_or("app", "unknown").to_string(),
+            machine: j.str_or("machine", "unknown").to_string(),
+            timestamp: num("timestamp")? as i64,
+            ranks: num("ranks")? as u32,
+            threads: num("threads")? as u32,
+            nodes: num("nodes")? as u32,
+            git,
+            regions,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::talp::{ProcStats, RegionData};
+    use crate::util::json::canonicalize;
+
+    fn sample_run() -> RunData {
+        RunData {
+            dlb_version: "t".into(),
+            app: "app".into(),
+            machine: "mn5".into(),
+            timestamp: 1_700_000_123,
+            ranks: 2,
+            threads: 4,
+            nodes: 1,
+            regions: vec![RegionData {
+                name: "Global".into(),
+                elapsed_s: 10.0,
+                visits: 3,
+                procs: (0..2)
+                    .map(|r| ProcStats {
+                        rank: r,
+                        elapsed_s: 10.0,
+                        useful_s: 30.0 + r as f64 * 0.777,
+                        mpi_s: 1.0 / 3.0, // exercise non-terminating f64
+                        useful_instructions: 1_000_000,
+                        useful_cycles: 400_000,
+                        ..Default::default()
+                    })
+                    .collect(),
+            }],
+            git: Some(GitMeta {
+                commit: "abcdef12".into(),
+                branch: "main".into(),
+                commit_timestamp: 1_699_999_999,
+                message: "m".into(),
+            }),
+        }
+    }
+
+    #[test]
+    fn from_run_reduces_each_region_once() {
+        let rm = RunMetrics::from_run(&sample_run(), "exp/a.json");
+        assert_eq!(rm.source, "exp/a.json");
+        assert_eq!(rm.regions.len(), 1);
+        let g = rm.region("Global").unwrap();
+        assert_eq!(g.visits, 3);
+        assert!(g.metrics.parallel_efficiency > 0.0);
+        assert_eq!(rm.effective_timestamp(), 1_699_999_999);
+        assert_eq!(rm.resources().label(), "2x4");
+    }
+
+    #[test]
+    fn json_roundtrip_is_exact_fixpoint() {
+        let rm = RunMetrics::from_run(&sample_run(), "exp/a.json");
+        let j1 = rm.to_json();
+        let back = RunMetrics::from_json(&j1).unwrap();
+        // Bit-exact f64s: the cache must not perturb rendered pages.
+        let (a, b) = (&rm.region("Global").unwrap().metrics,
+                      &back.region("Global").unwrap().metrics);
+        assert_eq!(a, b);
+        assert_eq!(back.git.as_ref().unwrap().commit, "abcdef12");
+        assert_eq!(back.timestamp, rm.timestamp);
+        // And the serialized form itself is a fixpoint.
+        let j2 = back.to_json();
+        assert_eq!(canonicalize(&j1), canonicalize(&j2));
+    }
+
+    #[test]
+    fn missing_fields_rejected() {
+        for text in [
+            "{}",
+            r#"{"source":"x","timestamp":1,"ranks":2,"threads":1,
+                "nodes":1,"regions":[]}"#,
+            r#"{"source":"x","timestamp":1,"ranks":2,"threads":1,
+                "nodes":1,"regions":[{"name":"g"}]}"#,
+            // git block present but missing its commit_timestamp: must
+            // be rejected, not defaulted (it would reorder histories).
+            r#"{"source":"x","app":"a","machine":"m","timestamp":1,
+                "ranks":1,"threads":1,"nodes":1,
+                "git":{"commit":"abc","branch":"main"},
+                "regions":[{"name":"g","visits":1,"ncpus":1,"nranks":1,
+                "nthreads":1,"elapsed_s":1,"total_useful_s":1,
+                "total_useful_instructions":1,"total_useful_cycles":1,
+                "pe":1,"mpi_pe":1,"mpi_comm_eff":1,"mpi_lb":1,
+                "mpi_lb_in":1,"mpi_lb_inter":1,"omp_pe":1,"omp_lb":1,
+                "omp_sched_eff":1,"omp_serial_eff":1,"useful_ipc":1,
+                "frequency_ghz":1,"insn_per_cpu":1}]}"#,
+        ] {
+            let j = Json::parse(text).unwrap();
+            assert!(RunMetrics::from_json(&j).is_err(), "{text}");
+        }
+    }
+
+    #[test]
+    fn effective_timestamp_without_git() {
+        let mut run = sample_run();
+        run.git = None;
+        let rm = RunMetrics::from_run(&run, "s");
+        assert_eq!(rm.effective_timestamp(), 1_700_000_123);
+    }
+}

@@ -38,21 +38,33 @@ pub struct ScalingTable {
 /// Runs are reordered by resources; the least-resource run is the
 /// reference.  Returns None when the region is absent everywhere.
 pub fn build(region: &str, runs: &[&RunData]) -> Option<ScalingTable> {
-    let mut items: Vec<(&RunData, RegionMetrics)> = runs
+    let items: Vec<(ResourceConfig, RegionMetrics)> = runs
         .iter()
         .filter_map(|r| {
             r.region(region)
-                .map(|reg| (*r, metrics::compute(reg, r.threads)))
+                .map(|reg| (r.resources(), metrics::compute(reg, r.threads)))
         })
         .collect();
+    build_from_metrics(region, &items)
+}
+
+/// Build the table from precomputed per-config metrics (the incremental
+/// report engine's path — `pages::cache` hands in [`RegionMetrics`]
+/// without ever touching per-process data).  Semantics are identical to
+/// [`build`].
+pub fn build_from_metrics(
+    region: &str,
+    items: &[(ResourceConfig, RegionMetrics)],
+) -> Option<ScalingTable> {
     if items.is_empty() {
         return None;
     }
-    items.sort_by_key(|(r, _)| {
-        (r.resources().total_cpus(), r.ranks, r.threads)
+    let mut items: Vec<(ResourceConfig, RegionMetrics)> = items.to_vec();
+    items.sort_by_key(|(c, _)| {
+        (c.total_cpus(), c.n_ranks, c.threads_per_rank)
     });
     let configs: Vec<ResourceConfig> =
-        items.iter().map(|(r, _)| r.resources()).collect();
+        items.iter().map(|(c, _)| c.clone()).collect();
     let ms: Vec<RegionMetrics> = items.iter().map(|(_, m)| *m).collect();
     let reference = scaling::reference_index(&configs);
     let mode = scaling::detect_mode(&ms, reference);
@@ -61,7 +73,7 @@ pub fn build(region: &str, runs: &[&RunData]) -> Option<ScalingTable> {
         .map(|m| scaling::scalability(m, &ms[reference], mode))
         .collect();
 
-    let hybrid = items.iter().any(|(r, _)| r.threads > 1);
+    let hybrid = configs.iter().any(|c| c.threads_per_rank > 1);
     let n = items.len();
     let col = |f: &dyn Fn(usize) -> Cell| -> Vec<Cell> {
         (0..n).map(f).collect()

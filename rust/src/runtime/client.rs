@@ -7,14 +7,19 @@
 //! Python never runs on this path — the binary is self-contained once
 //! `make artifacts` has produced the files.
 
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
+#[cfg(feature = "pjrt")]
 use std::path::Path;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
 
 use super::registry::ArtifactMeta;
 
 /// Owns the PJRT client and a cache of compiled executables.
+#[cfg(feature = "pjrt")]
 pub struct XlaRuntime {
     client: xla::PjRtClient,
     cache: HashMap<String, xla::PjRtLoadedExecutable>,
@@ -27,6 +32,47 @@ pub struct HostTensor {
     pub data: Vec<f32>,
 }
 
+/// Offline stub: the `xla` bindings crate is absent from the build
+/// image, so without the `pjrt` cargo feature [`XlaRuntime::cpu`]
+/// reports that PJRT support is not compiled in.  Everything gated on
+/// `Registry::open_default()` (no artifacts without `make artifacts`)
+/// skips before reaching this.
+#[cfg(not(feature = "pjrt"))]
+pub struct XlaRuntime {
+    _private: (),
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl XlaRuntime {
+    pub fn cpu() -> Result<XlaRuntime> {
+        anyhow::bail!(
+            "PJRT support not compiled in (rebuild with --features pjrt \
+             and the xla bindings crate available)"
+        )
+    }
+
+    pub fn platform(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn load(&mut self, _meta: &ArtifactMeta) -> Result<()> {
+        anyhow::bail!("PJRT support not compiled in")
+    }
+
+    pub fn execute(
+        &self,
+        _name: &str,
+        _inputs: &[(&[f32], &[i64])],
+    ) -> Result<Vec<HostTensor>> {
+        anyhow::bail!("PJRT support not compiled in")
+    }
+
+    pub fn loaded(&self) -> Vec<&str> {
+        Vec::new()
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl XlaRuntime {
     pub fn cpu() -> Result<XlaRuntime> {
         let client =

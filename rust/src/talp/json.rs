@@ -325,13 +325,20 @@ impl RunData {
             .with_context(|| format!("writing {}", path.display()))
     }
 
-    pub fn read_file(path: &std::path::Path) -> Result<RunData> {
-        let text = std::fs::read_to_string(path)
-            .with_context(|| format!("reading {}", path.display()))?;
-        let j = Json::parse(&text)
+    /// Parse artifact text, attributing errors to `path`.  The single
+    /// parse pipeline shared by [`RunData::read_file`] and the report
+    /// engine's cached scan (which reads raw bytes itself to hash them).
+    pub fn parse_str(text: &str, path: &std::path::Path) -> Result<RunData> {
+        let j = Json::parse(text)
             .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
         RunData::from_json(&j)
             .with_context(|| format!("parsing {}", path.display()))
+    }
+
+    pub fn read_file(path: &std::path::Path) -> Result<RunData> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        RunData::parse_str(&text, path)
     }
 }
 

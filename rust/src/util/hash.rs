@@ -1,0 +1,49 @@
+//! FNV-1a hashing, shared by the CI runner's deterministic seeding and
+//! the report engine's artifact-content cache keys.  Not cryptographic —
+//! it only needs to be stable across runs and platforms and cheap over
+//! a few-hundred-KB JSON artifact.
+
+/// FNV-1a 64-bit over raw bytes.
+pub fn fnv1a_64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// FNV-1a 64-bit over a string's UTF-8 bytes.
+pub fn fnv1a_64_str(s: &str) -> u64 {
+    fnv1a_64(s.as_bytes())
+}
+
+/// Fixed-width lowercase-hex rendering used in the cache file.
+pub fn to_hex(h: u64) -> String {
+    format!("{h:016x}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // FNV-1a reference values.
+        assert_eq!(fnv1a_64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a_64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a_64_str("foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn content_sensitivity() {
+        assert_ne!(fnv1a_64(b"{\"x\":1}"), fnv1a_64(b"{\"x\":2}"));
+        assert_eq!(fnv1a_64(b"same"), fnv1a_64(b"same"));
+    }
+
+    #[test]
+    fn hex_is_fixed_width() {
+        assert_eq!(to_hex(0), "0000000000000000");
+        assert_eq!(to_hex(0xabc).len(), 16);
+    }
+}

@@ -5,7 +5,9 @@
 
 pub mod bench;
 pub mod fs;
+pub mod hash;
 pub mod json;
+pub mod par;
 pub mod propcheck;
 pub mod rng;
 pub mod stats;

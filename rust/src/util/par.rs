@@ -1,0 +1,104 @@
+//! Scoped-thread worker pool (rayon is unavailable offline).
+//!
+//! [`parallel_map`] is the report engine's concurrency substrate: a
+//! work-stealing-free, atomic-cursor fan-out over a slice that returns
+//! results **in input order**, so callers stay byte-deterministic
+//! regardless of worker scheduling (`--jobs 1` and `--jobs N` must
+//! produce identical reports).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Resolve a `--jobs` request: 0 means "auto" (available parallelism,
+/// capped at 16 — report workloads are IO + small-buffer CPU and stop
+/// scaling well past that).
+pub fn effective_jobs(jobs: usize) -> usize {
+    if jobs > 0 {
+        jobs
+    } else {
+        std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(4)
+            .min(16)
+            .max(1)
+    }
+}
+
+/// Apply `f` to every item on up to `jobs` worker threads (0 = auto),
+/// returning outputs in input order.  Panics in `f` propagate.
+pub fn parallel_map<T, R, F>(items: &[T], jobs: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = effective_jobs(jobs).min(n);
+    if workers <= 1 {
+        return items.iter().map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<R>>> =
+        (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(&items[i]);
+                *slots[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|s| {
+            s.into_inner()
+                .unwrap()
+                .expect("parallel_map: worker skipped a slot")
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_input_order() {
+        let items: Vec<u64> = (0..257).collect();
+        for jobs in [0, 1, 3, 8] {
+            let out = parallel_map(&items, jobs, |&x| x * 2);
+            assert_eq!(out, items.iter().map(|x| x * 2).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let none: Vec<u32> = Vec::new();
+        assert!(parallel_map(&none, 4, |x| *x).is_empty());
+        assert_eq!(parallel_map(&[7u32], 4, |x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn effective_jobs_resolution() {
+        assert_eq!(effective_jobs(3), 3);
+        assert!(effective_jobs(0) >= 1);
+        assert!(effective_jobs(0) <= 16);
+    }
+
+    #[test]
+    fn jobs_equal_results() {
+        // The determinism contract the report engine relies on.
+        let items: Vec<String> =
+            (0..64).map(|i| format!("item-{i}")).collect();
+        let a = parallel_map(&items, 1, |s| format!("<{s}>"));
+        let b = parallel_map(&items, 4, |s| format!("<{s}>"));
+        assert_eq!(a, b);
+    }
+}

@@ -68,6 +68,7 @@ fn ci_cycle_detects_fig7_fix() {
     let opts = ReportOptions {
         regions: vec!["initialize".into(), "timestep".into()],
         region_for_badge: Some("timestep".into()),
+        ..Default::default()
     };
     let mut engine = CiEngine::new(td.path()).unwrap();
     for c in &repo.commits {
@@ -223,6 +224,7 @@ fn buggy_vs_fixed_report_difference_survives_html() {
         &ReportOptions {
             regions: vec!["initialize".into()],
             region_for_badge: Some("initialize".into()),
+            ..Default::default()
         },
     )
     .unwrap();

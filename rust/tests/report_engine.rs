@@ -1,0 +1,227 @@
+//! Report-engine integration tests: golden-file determinism of the
+//! parallel path (`--jobs 1` vs `--jobs 4` byte-for-byte), exact badge
+//! bytes, and the incremental-cache contract (a warm rerun over a
+//! fixture with >= 8 experiments parses zero unchanged artifacts).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use talp_pages::pages::{self, badge, ReportOptions};
+use talp_pages::talp::{GitMeta, ProcStats, RegionData, RunData};
+use talp_pages::util::fs::TempDir;
+
+/// Hand-built run: deterministic numbers, no simulator.  With
+/// `elapsed = 10`, `threads = 2` and `useful = 15` per process the
+/// parallel efficiency is exactly 15/(2*10) = 0.75.
+fn run(
+    ranks: u32,
+    useful_per_proc: f64,
+    elapsed: f64,
+    ts: i64,
+    commit: &str,
+) -> RunData {
+    let region = |name: &str, e: f64, scale: f64| RegionData {
+        name: name.into(),
+        elapsed_s: e,
+        visits: 1,
+        procs: (0..ranks)
+            .map(|r| ProcStats {
+                rank: r,
+                node: 0,
+                elapsed_s: e,
+                useful_s: useful_per_proc * scale,
+                mpi_s: 0.05 * e,
+                mpi_worker_idle_s: 0.05 * e,
+                omp_serialization_s: 0.01 * e,
+                omp_scheduling_s: 0.01 * e,
+                omp_barrier_s: 0.02 * e,
+                useful_instructions: 1_000_000 / ranks as u64,
+                useful_cycles: 500_000 / ranks as u64,
+            })
+            .collect(),
+    };
+    RunData {
+        dlb_version: "test".into(),
+        app: "golden".into(),
+        machine: "mn5".into(),
+        timestamp: ts,
+        ranks,
+        threads: 2,
+        nodes: 1,
+        regions: vec![
+            region("Global", elapsed, 1.0),
+            region("solve", elapsed * 0.6, 0.55),
+        ],
+        git: Some(GitMeta {
+            commit: commit.into(),
+            branch: "main".into(),
+            commit_timestamp: ts,
+            message: String::new(),
+        }),
+    }
+}
+
+/// Fixture tree: 2 experiments x 3 configs x 2 runs.
+fn build_fixture(root: &Path) {
+    for exp in ["alpha/strong", "beta/weak"] {
+        for ranks in [2u32, 4, 8] {
+            for (i, ts) in [(0, 1000i64), (1, 2000)] {
+                // Older runs are slightly slower so history is non-flat.
+                let elapsed = 10.0 + (1 - i) as f64;
+                let useful = 15.0 * elapsed / 10.0;
+                run(ranks, useful, elapsed, ts, &format!("c{i}{ranks:02}"))
+                    .write_file(&root.join(format!(
+                        "{exp}/talp_{ranks}x2_run{i}.json"
+                    )))
+                    .unwrap();
+            }
+        }
+    }
+}
+
+/// All files under `dir` as (relative path -> bytes).
+fn snapshot(dir: &Path) -> BTreeMap<String, Vec<u8>> {
+    fn collect(
+        root: &Path,
+        dir: &Path,
+        out: &mut BTreeMap<String, Vec<u8>>,
+    ) {
+        for entry in std::fs::read_dir(dir).unwrap().flatten() {
+            let p = entry.path();
+            if p.is_dir() {
+                collect(root, &p, out);
+            } else {
+                let rel = p
+                    .strip_prefix(root)
+                    .unwrap()
+                    .to_string_lossy()
+                    .replace('\\', "/");
+                out.insert(rel, std::fs::read(&p).unwrap());
+            }
+        }
+    }
+    let mut out = BTreeMap::new();
+    collect(dir, dir, &mut out);
+    out
+}
+
+#[test]
+fn jobs_1_and_jobs_4_outputs_are_byte_identical() {
+    let input = TempDir::new("golden-in").unwrap();
+    build_fixture(input.path());
+    let out1 = TempDir::new("golden-out1").unwrap();
+    let out4 = TempDir::new("golden-out4").unwrap();
+
+    let opts = |jobs: usize| ReportOptions { jobs, ..Default::default() };
+    let s1 = pages::generate(input.path(), out1.path(), &opts(1)).unwrap();
+    let s4 = pages::generate(input.path(), out4.path(), &opts(4)).unwrap();
+    assert_eq!(s1.experiments, 2);
+    assert_eq!(s1.cache_misses, 12);
+    assert_eq!(s4.cache_misses, 12);
+
+    let a = snapshot(out1.path());
+    let b = snapshot(out4.path());
+    assert_eq!(
+        a.keys().collect::<Vec<_>>(),
+        b.keys().collect::<Vec<_>>(),
+        "file sets differ between --jobs 1 and --jobs 4"
+    );
+    for (path, bytes) in &a {
+        assert_eq!(
+            Some(bytes),
+            b.get(path),
+            "{path} differs between --jobs 1 and --jobs 4"
+        );
+    }
+    // The golden file set: index + 2 experiment pages + 6 badges + cache.
+    let expected: Vec<&str> = vec![
+        ".talp-cache.json",
+        "alpha_strong.html",
+        "badges/alpha_strong__2x2.svg",
+        "badges/alpha_strong__4x2.svg",
+        "badges/alpha_strong__8x2.svg",
+        "badges/beta_weak__2x2.svg",
+        "badges/beta_weak__4x2.svg",
+        "badges/beta_weak__8x2.svg",
+        "beta_weak.html",
+        "index.html",
+    ];
+    assert_eq!(a.keys().map(String::as_str).collect::<Vec<_>>(), expected);
+}
+
+#[test]
+fn index_page_and_badge_golden_bytes() {
+    let input = TempDir::new("golden-in2").unwrap();
+    build_fixture(input.path());
+    let out = TempDir::new("golden-out2").unwrap();
+    pages::generate(input.path(), out.path(), &ReportOptions::default())
+        .unwrap();
+
+    // Index golden line: the experiment entry with its counts.
+    let index =
+        std::fs::read_to_string(out.path().join("index.html")).unwrap();
+    assert!(index.contains(
+        "<li><a href=\"alpha_strong.html\">alpha/strong</a> \
+         — 3 configs, 6 runs</li>"
+    ));
+    assert!(index.contains("2 experiment(s) found under"));
+
+    // Experiment page golden anchors.
+    let page =
+        std::fs::read_to_string(out.path().join("alpha_strong.html"))
+            .unwrap();
+    assert!(page.contains("<h1>alpha/strong</h1>"));
+    assert!(page.contains("Scaling efficiency — region <code>Global</code>"));
+    assert!(page.contains("Scaling efficiency — region <code>solve</code>"));
+    assert!(page.contains("Time evolution — 2x2 (2 runs)"));
+    assert!(page.contains("<code>c102</code>"), "latest commit annotated");
+
+    // Badge byte-for-byte: the latest 2x2 run has PE exactly 0.75.
+    let got = std::fs::read_to_string(
+        out.path().join("badges/alpha_strong__2x2.svg"),
+    )
+    .unwrap();
+    let want = badge::parallel_efficiency_badge("Global", "2x2", 0.75);
+    assert_eq!(got, want, "badge SVG is not byte-exact");
+    assert!(got.contains("0.75"));
+}
+
+#[test]
+fn warm_rerun_on_eight_experiments_parses_nothing() {
+    // Acceptance criterion: >= 8 experiments, warm rerun parses zero
+    // unchanged artifacts, verified by the ReportSummary counters.
+    let input = TempDir::new("warm8-in").unwrap();
+    let mut total_files = 0usize;
+    for e in 0..8 {
+        for ranks in [2u32, 4] {
+            run(ranks, 15.0, 10.0, 1000, &format!("e{e}r{ranks}"))
+                .write_file(&input.path().join(format!(
+                    "exp_{e}/talp_{ranks}x2.json"
+                )))
+                .unwrap();
+            total_files += 1;
+        }
+    }
+    let out = TempDir::new("warm8-out").unwrap();
+    let opts = ReportOptions { jobs: 4, ..Default::default() };
+
+    let cold = pages::generate(input.path(), out.path(), &opts).unwrap();
+    assert_eq!(cold.experiments, 8);
+    assert_eq!(cold.cache_hits, 0);
+    assert_eq!(cold.cache_misses, total_files);
+    let before = snapshot(out.path());
+
+    let warm = pages::generate(input.path(), out.path(), &opts).unwrap();
+    assert_eq!(warm.cache_hits, total_files, "warm run must hit for all");
+    assert_eq!(warm.cache_misses, 0, "warm run must parse nothing");
+    let after = snapshot(out.path());
+    assert_eq!(before, after, "warm rerun changed the site");
+
+    // Adding one new artifact only parses that artifact.
+    run(2, 15.0, 10.0, 3000, "fresh")
+        .write_file(&input.path().join("exp_0/talp_2x2_new.json"))
+        .unwrap();
+    let mixed = pages::generate(input.path(), out.path(), &opts).unwrap();
+    assert_eq!(mixed.cache_hits, total_files);
+    assert_eq!(mixed.cache_misses, 1);
+}

@@ -1,0 +1,505 @@
+//! Offline drop-in subset of the `zip` crate.
+//!
+//! The build image has no crates.io registry, so this vendored
+//! implementation provides the surface `talp-pages` uses — writing a
+//! directory tree into a `.zip` and reading it back — on top of the real
+//! ZIP container format (PKWARE APPNOTE): local file headers, a central
+//! directory and the end-of-central-directory record, so the artifacts
+//! are valid archives any `unzip` can open.
+//!
+//! One deliberate restriction: entries are always **STORED**
+//! (uncompressed).  Requesting [`CompressionMethod::Deflated`] is
+//! accepted for API compatibility but falls back to STORED — the CI
+//! artifact tests measure relative sizes, not ratios, and a DEFLATE
+//! codec is not worth vendoring.
+
+use std::io::{self, Read, Seek, SeekFrom, Write};
+use std::path::{Component, PathBuf};
+
+pub mod result {
+    use std::fmt;
+
+    /// Errors from reading or writing an archive.
+    #[derive(Debug)]
+    pub enum ZipError {
+        Io(std::io::Error),
+        InvalidArchive(&'static str),
+        UnsupportedArchive(&'static str),
+        FileNotFound,
+    }
+
+    impl fmt::Display for ZipError {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            match self {
+                ZipError::Io(e) => write!(f, "zip io error: {e}"),
+                ZipError::InvalidArchive(m) => {
+                    write!(f, "invalid zip archive: {m}")
+                }
+                ZipError::UnsupportedArchive(m) => {
+                    write!(f, "unsupported zip archive: {m}")
+                }
+                ZipError::FileNotFound => write!(f, "file not found in zip"),
+            }
+        }
+    }
+
+    impl std::error::Error for ZipError {
+        fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+            match self {
+                ZipError::Io(e) => Some(e),
+                _ => None,
+            }
+        }
+    }
+
+    impl From<std::io::Error> for ZipError {
+        fn from(e: std::io::Error) -> ZipError {
+            ZipError::Io(e)
+        }
+    }
+
+    pub type ZipResult<T> = Result<T, ZipError>;
+}
+
+pub use result::{ZipError, ZipResult};
+
+/// Entry compression method.  Only STORED is actually produced.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CompressionMethod {
+    Stored,
+    /// Accepted for compatibility; falls back to STORED on write.
+    Deflated,
+}
+
+pub mod write {
+    use super::CompressionMethod;
+
+    /// Per-file options for [`super::ZipWriter::start_file`].
+    #[derive(Debug, Clone, Copy)]
+    pub struct FileOptions {
+        pub(crate) _method: CompressionMethod,
+    }
+
+    impl Default for FileOptions {
+        fn default() -> FileOptions {
+            FileOptions { _method: CompressionMethod::Stored }
+        }
+    }
+
+    impl FileOptions {
+        /// Request a compression method (DEFLATE requests fall back to
+        /// STORED — see the crate docs).
+        pub fn compression_method(
+            mut self,
+            method: CompressionMethod,
+        ) -> FileOptions {
+            self._method = method;
+            self
+        }
+    }
+}
+
+const LOCAL_SIG: u32 = 0x0403_4b50;
+const CENTRAL_SIG: u32 = 0x0201_4b50;
+const EOCD_SIG: u32 = 0x0605_4b50;
+/// DOS date 1980-01-01 (month 1, day 1) — a fixed, valid timestamp so
+/// archives are byte-reproducible.
+const DOS_DATE: u16 = 0x0021;
+
+/// IEEE CRC-32 (reflected, poly 0xEDB88320) over `data`.
+fn crc32(data: &[u8]) -> u32 {
+    let mut crc = !0u32;
+    for &b in data {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+fn u16le(v: u16) -> [u8; 2] {
+    v.to_le_bytes()
+}
+
+fn u32le(v: u32) -> [u8; 4] {
+    v.to_le_bytes()
+}
+
+struct CentralEntry {
+    name: String,
+    crc: u32,
+    size: u32,
+    local_offset: u32,
+}
+
+struct PendingFile {
+    name: String,
+    data: Vec<u8>,
+}
+
+/// Streams files into a ZIP archive (STORED entries).
+pub struct ZipWriter<W: Write> {
+    inner: W,
+    offset: u64,
+    entries: Vec<CentralEntry>,
+    current: Option<PendingFile>,
+}
+
+impl<W: Write> ZipWriter<W> {
+    pub fn new(inner: W) -> ZipWriter<W> {
+        ZipWriter { inner, offset: 0, entries: Vec::new(), current: None }
+    }
+
+    /// Begin a new entry; subsequent [`Write`] calls append to it.
+    pub fn start_file<S: Into<String>>(
+        &mut self,
+        name: S,
+        _options: write::FileOptions,
+    ) -> ZipResult<()> {
+        self.flush_pending()?;
+        self.current =
+            Some(PendingFile { name: name.into(), data: Vec::new() });
+        Ok(())
+    }
+
+    fn emit(&mut self, bytes: &[u8]) -> ZipResult<()> {
+        self.inner.write_all(bytes)?;
+        self.offset += bytes.len() as u64;
+        Ok(())
+    }
+
+    /// Write the buffered entry: local header + name + stored data.
+    fn flush_pending(&mut self) -> ZipResult<()> {
+        let Some(file) = self.current.take() else {
+            return Ok(());
+        };
+        if file.data.len() > u32::MAX as usize
+            || self.offset > u32::MAX as u64
+        {
+            return Err(ZipError::UnsupportedArchive(
+                "zip64 archives not supported",
+            ));
+        }
+        let crc = crc32(&file.data);
+        let size = file.data.len() as u32;
+        let local_offset = self.offset as u32;
+        let name_bytes = file.name.as_bytes().to_vec();
+
+        let mut header = Vec::with_capacity(30 + name_bytes.len());
+        header.extend_from_slice(&u32le(LOCAL_SIG));
+        header.extend_from_slice(&u16le(20)); // version needed
+        header.extend_from_slice(&u16le(0)); // flags
+        header.extend_from_slice(&u16le(0)); // method: STORED
+        header.extend_from_slice(&u16le(0)); // mod time
+        header.extend_from_slice(&u16le(DOS_DATE)); // mod date
+        header.extend_from_slice(&u32le(crc));
+        header.extend_from_slice(&u32le(size)); // compressed
+        header.extend_from_slice(&u32le(size)); // uncompressed
+        header.extend_from_slice(&u16le(name_bytes.len() as u16));
+        header.extend_from_slice(&u16le(0)); // extra len
+        header.extend_from_slice(&name_bytes);
+        self.emit(&header)?;
+        self.emit(&file.data)?;
+        self.entries.push(CentralEntry {
+            name: file.name,
+            crc,
+            size,
+            local_offset,
+        });
+        Ok(())
+    }
+
+    /// Write the central directory and EOCD; returns the inner writer.
+    pub fn finish(mut self) -> ZipResult<W> {
+        self.flush_pending()?;
+        let cd_offset = self.offset;
+        let mut cd = Vec::with_capacity(self.entries.len() * 64);
+        for e in &self.entries {
+            let name_bytes = e.name.as_bytes();
+            cd.extend_from_slice(&u32le(CENTRAL_SIG));
+            cd.extend_from_slice(&u16le(20)); // version made by
+            cd.extend_from_slice(&u16le(20)); // version needed
+            cd.extend_from_slice(&u16le(0)); // flags
+            cd.extend_from_slice(&u16le(0)); // method: STORED
+            cd.extend_from_slice(&u16le(0)); // mod time
+            cd.extend_from_slice(&u16le(DOS_DATE)); // mod date
+            cd.extend_from_slice(&u32le(e.crc));
+            cd.extend_from_slice(&u32le(e.size)); // compressed
+            cd.extend_from_slice(&u32le(e.size)); // uncompressed
+            cd.extend_from_slice(&u16le(name_bytes.len() as u16));
+            cd.extend_from_slice(&u16le(0)); // extra len
+            cd.extend_from_slice(&u16le(0)); // comment len
+            cd.extend_from_slice(&u16le(0)); // disk number
+            cd.extend_from_slice(&u16le(0)); // internal attrs
+            cd.extend_from_slice(&u32le(0)); // external attrs
+            cd.extend_from_slice(&u32le(e.local_offset));
+            cd.extend_from_slice(name_bytes);
+        }
+        self.emit(&cd)?;
+        let cd_size = self.offset - cd_offset;
+        if cd_offset > u32::MAX as u64 || self.entries.len() > u16::MAX as usize
+        {
+            return Err(ZipError::UnsupportedArchive(
+                "zip64 archives not supported",
+            ));
+        }
+        let n = self.entries.len() as u16;
+        let mut eocd = Vec::with_capacity(22);
+        eocd.extend_from_slice(&u32le(EOCD_SIG));
+        eocd.extend_from_slice(&u16le(0)); // this disk
+        eocd.extend_from_slice(&u16le(0)); // cd start disk
+        eocd.extend_from_slice(&u16le(n)); // entries on this disk
+        eocd.extend_from_slice(&u16le(n)); // entries total
+        eocd.extend_from_slice(&u32le(cd_size as u32));
+        eocd.extend_from_slice(&u32le(cd_offset as u32));
+        eocd.extend_from_slice(&u16le(0)); // comment len
+        self.emit(&eocd)?;
+        self.inner.flush()?;
+        Ok(self.inner)
+    }
+}
+
+impl<W: Write> Write for ZipWriter<W> {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match &mut self.current {
+            Some(file) => {
+                file.data.extend_from_slice(buf);
+                Ok(buf.len())
+            }
+            None => Err(io::Error::new(
+                io::ErrorKind::Other,
+                "ZipWriter: write before start_file",
+            )),
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        Ok(())
+    }
+}
+
+#[derive(Debug, Clone)]
+struct ArchiveEntry {
+    name: String,
+    method: u16,
+    compressed_size: u32,
+    local_offset: u32,
+}
+
+/// Reads a ZIP archive's central directory and serves entries.
+pub struct ZipArchive<R: Read + Seek> {
+    reader: R,
+    entries: Vec<ArchiveEntry>,
+}
+
+fn rd_u16(buf: &[u8], at: usize) -> Option<u16> {
+    Some(u16::from_le_bytes([*buf.get(at)?, *buf.get(at + 1)?]))
+}
+
+fn rd_u32(buf: &[u8], at: usize) -> Option<u32> {
+    Some(u32::from_le_bytes([
+        *buf.get(at)?,
+        *buf.get(at + 1)?,
+        *buf.get(at + 2)?,
+        *buf.get(at + 3)?,
+    ]))
+}
+
+impl<R: Read + Seek> ZipArchive<R> {
+    pub fn new(mut reader: R) -> ZipResult<ZipArchive<R>> {
+        let file_len = reader.seek(SeekFrom::End(0))?;
+        // EOCD is 22 bytes + up to 64 KiB of comment; scan the tail.
+        let tail_len = file_len.min(22 + 65_536);
+        reader.seek(SeekFrom::Start(file_len - tail_len))?;
+        let mut tail = vec![0u8; tail_len as usize];
+        reader.read_exact(&mut tail)?;
+        let sig = u32le(EOCD_SIG);
+        let eocd_at = (0..tail.len().saturating_sub(21))
+            .rev()
+            .find(|&i| tail[i..i + 4] == sig)
+            .ok_or(ZipError::InvalidArchive("no end-of-central-directory"))?;
+        let eocd = &tail[eocd_at..];
+        let count = rd_u16(eocd, 10)
+            .ok_or(ZipError::InvalidArchive("truncated EOCD"))?
+            as usize;
+        let cd_size = rd_u32(eocd, 12)
+            .ok_or(ZipError::InvalidArchive("truncated EOCD"))?
+            as usize;
+        let cd_offset = rd_u32(eocd, 16)
+            .ok_or(ZipError::InvalidArchive("truncated EOCD"))?
+            as u64;
+
+        reader.seek(SeekFrom::Start(cd_offset))?;
+        let mut cd = vec![0u8; cd_size];
+        reader.read_exact(&mut cd)?;
+        let mut entries = Vec::with_capacity(count);
+        let mut pos = 0usize;
+        for _ in 0..count {
+            let bad =
+                || ZipError::InvalidArchive("bad central directory entry");
+            if rd_u32(&cd, pos) != Some(CENTRAL_SIG) {
+                return Err(bad());
+            }
+            let method = rd_u16(&cd, pos + 10).ok_or_else(bad)?;
+            let compressed_size = rd_u32(&cd, pos + 20).ok_or_else(bad)?;
+            let name_len = rd_u16(&cd, pos + 28).ok_or_else(bad)? as usize;
+            let extra_len = rd_u16(&cd, pos + 30).ok_or_else(bad)? as usize;
+            let comment_len = rd_u16(&cd, pos + 32).ok_or_else(bad)? as usize;
+            let local_offset = rd_u32(&cd, pos + 42).ok_or_else(bad)?;
+            let name_bytes = cd
+                .get(pos + 46..pos + 46 + name_len)
+                .ok_or_else(bad)?;
+            let name = String::from_utf8_lossy(name_bytes).into_owned();
+            entries.push(ArchiveEntry {
+                name,
+                method,
+                compressed_size,
+                local_offset,
+            });
+            pos += 46 + name_len + extra_len + comment_len;
+        }
+        Ok(ZipArchive { reader, entries })
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Open entry `index` for reading.
+    pub fn by_index(&mut self, index: usize) -> ZipResult<ZipFile<'_, R>> {
+        let entry = self
+            .entries
+            .get(index)
+            .cloned()
+            .ok_or(ZipError::FileNotFound)?;
+        if entry.method != 0 {
+            return Err(ZipError::UnsupportedArchive(
+                "only STORED entries supported",
+            ));
+        }
+        self.reader.seek(SeekFrom::Start(entry.local_offset as u64))?;
+        let mut local = [0u8; 30];
+        self.reader.read_exact(&mut local)?;
+        if rd_u32(&local, 0) != Some(LOCAL_SIG) {
+            return Err(ZipError::InvalidArchive("bad local file header"));
+        }
+        let name_len = rd_u16(&local, 26).unwrap_or(0) as u64;
+        let extra_len = rd_u16(&local, 28).unwrap_or(0) as u64;
+        self.reader.seek(SeekFrom::Current((name_len + extra_len) as i64))?;
+        let take = (&mut self.reader).take(entry.compressed_size as u64);
+        Ok(ZipFile { name: entry.name, reader: take })
+    }
+}
+
+/// One readable entry of an archive.
+pub struct ZipFile<'a, R: Read> {
+    name: String,
+    reader: io::Take<&'a mut R>,
+}
+
+impl<'a, R: Read> ZipFile<'a, R> {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Directory entries carry a trailing slash by convention.
+    pub fn is_dir(&self) -> bool {
+        self.name.ends_with('/')
+    }
+
+    /// The entry name as a safe relative path (no absolute paths, no
+    /// `..` traversal), like the upstream crate's zip-slip guard.
+    pub fn enclosed_name(&self) -> Option<PathBuf> {
+        let path = PathBuf::from(&self.name);
+        if path.is_absolute() {
+            return None;
+        }
+        for comp in path.components() {
+            match comp {
+                Component::Normal(_) | Component::CurDir => {}
+                _ => return None,
+            }
+        }
+        Some(path)
+    }
+}
+
+impl<'a, R: Read> Read for ZipFile<'a, R> {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        self.reader.read(buf)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn build(names: &[(&str, &[u8])]) -> Vec<u8> {
+        let mut zw = ZipWriter::new(Cursor::new(Vec::new()));
+        let opts = write::FileOptions::default()
+            .compression_method(CompressionMethod::Deflated);
+        for (name, data) in names {
+            zw.start_file(*name, opts).unwrap();
+            zw.write_all(data).unwrap();
+        }
+        zw.finish().unwrap().into_inner()
+    }
+
+    #[test]
+    fn roundtrip_multiple_entries() {
+        let bytes = build(&[
+            ("a/b/one.json", b"{\"x\":1}"),
+            ("two.txt", b"hello world"),
+            ("empty", b""),
+        ]);
+        let mut ar = ZipArchive::new(Cursor::new(bytes)).unwrap();
+        assert_eq!(ar.len(), 3);
+        let mut seen = Vec::new();
+        for i in 0..ar.len() {
+            let mut f = ar.by_index(i).unwrap();
+            let mut data = Vec::new();
+            f.read_to_end(&mut data).unwrap();
+            seen.push((f.name().to_string(), data));
+        }
+        assert_eq!(seen[0], ("a/b/one.json".to_string(), b"{\"x\":1}".to_vec()));
+        assert_eq!(seen[1].1, b"hello world".to_vec());
+        assert!(seen[2].1.is_empty());
+    }
+
+    #[test]
+    fn enclosed_name_rejects_traversal() {
+        let bytes = build(&[("../evil", b"x"), ("ok/fine.txt", b"y")]);
+        let mut ar = ZipArchive::new(Cursor::new(bytes)).unwrap();
+        assert!(ar.by_index(0).unwrap().enclosed_name().is_none());
+        assert_eq!(
+            ar.by_index(1).unwrap().enclosed_name().unwrap(),
+            PathBuf::from("ok/fine.txt")
+        );
+    }
+
+    #[test]
+    fn crc32_known_vectors() {
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+    }
+
+    #[test]
+    fn garbage_is_rejected() {
+        assert!(ZipArchive::new(Cursor::new(b"not a zip".to_vec())).is_err());
+        assert!(ZipArchive::new(Cursor::new(Vec::new())).is_err());
+    }
+
+    #[test]
+    fn deterministic_output() {
+        let a = build(&[("x.json", b"{}"), ("y.json", b"[]")]);
+        let b = build(&[("x.json", b"{}"), ("y.json", b"[]")]);
+        assert_eq!(a, b);
+    }
+}

@@ -8,6 +8,10 @@
 //! 3. the accumulating job downloads the previous pipeline's `talp`
 //!    artifact, unzips it and copies it over (history merge);
 //! 4. `talp ci-report` regenerates the HTML report into `public/talp`;
+//!    when the report options carry a gate policy, the regression gate
+//!    evaluates the freshly scanned history in the same stage and its
+//!    verdict lands in [`PipelineResult::gate`] (the pipeline fails by
+//!    verdict, not by abort — later commits keep running, like CI);
 //! 5. both `talp/` (for the next pipeline) and `public/` (for pages
 //!    hosting) are uploaded as artifacts, and `public/` is published.
 //!
@@ -46,6 +50,23 @@ pub struct PipelineResult {
     pub report: pages::ReportSummary,
     pub talp_artifact_bytes: u64,
     pub wall_time_s: f64,
+}
+
+impl PipelineResult {
+    /// Regression-gate verdict for this pipeline (present when the
+    /// report options carried a gate policy).  A failing verdict does
+    /// not abort the engine — like real CI, the pipeline *records* red
+    /// and later commits keep running.
+    pub fn gate(&self) -> Option<&crate::gate::GateVerdict> {
+        self.report.gate.as_ref()
+    }
+
+    /// Did this pipeline's gate stage pass (vacuously true ungated)?
+    pub fn gate_passed(&self) -> bool {
+        self.gate()
+            .map(|v| v.status != crate::gate::GateStatus::Fail)
+            .unwrap_or(true)
+    }
 }
 
 impl CiEngine {
@@ -275,6 +296,52 @@ mod tests {
         assert!(html.contains("Scaling efficiency"));
         // Artifacts grew over pipelines.
         assert!(engine.artifact_bytes() > 0);
+    }
+
+    #[test]
+    fn pipelines_record_gate_verdicts_and_fail_on_regression() {
+        let td = TempDir::new("ci-gate").unwrap();
+        let mut engine = CiEngine::new(td.path()).unwrap();
+        // 5 clean commits, the last one carrying a 1.8x compute
+        // slowdown (Repo::with_regression window [4, 5)).
+        let repo = Repo::genex_history(5, 0, 3, 1_700_000_000)
+            .with_regression(4, 5, 1.8);
+        let jobs = small_jobs();
+        let opts = ReportOptions {
+            regions: vec!["initialize".into(), "timestep".into()],
+            region_for_badge: Some("timestep".into()),
+            gate: Some(crate::gate::GatePolicy::default()),
+            ..Default::default()
+        };
+        let mut results = Vec::new();
+        for commit in &repo.commits {
+            results.push(engine.run_pipeline(commit, &jobs, &opts).unwrap());
+        }
+        // Every pipeline recorded a verdict.
+        assert!(results.iter().all(|r| r.gate().is_some()));
+        // Early pipelines lack min_samples (checks skip) or are clean.
+        assert!(results[0].gate_passed());
+        assert!(
+            results[0].gate().unwrap().counts.skipped > 0,
+            "single-point history must skip, not fail"
+        );
+        assert!(results[3].gate_passed(), "clean history stays green");
+        // The regression commit flips the gate red...
+        let last = results.last().unwrap();
+        assert!(!last.gate_passed(), "{:?}", last.gate());
+        let v = last.gate().unwrap();
+        assert_eq!(v.exit_code(), 1);
+        assert!(v.counts.fail > 0);
+        // ...and the engine kept running (did not abort on red).
+        assert_eq!(results.len(), 5);
+        // The published pages carry the verdict artifacts and badge.
+        let pages = engine.pages_dir().join("talp");
+        for f in ["gate.json", "gate.md", "gate.xml", "badges/gate.svg"] {
+            assert!(pages.join(f).exists(), "{f} missing from pages");
+        }
+        let badge =
+            std::fs::read_to_string(pages.join("badges/gate.svg")).unwrap();
+        assert!(badge.contains("failing"));
     }
 
     #[test]

@@ -70,6 +70,39 @@ impl Args {
                 .map_err(|_| anyhow::anyhow!("--{key}: '{v}' is not a number")),
         }
     }
+
+    /// Maximum explicit `--jobs` the CLI accepts (the single source of
+    /// truth is the pool clamp in `util::par`).
+    pub const MAX_JOBS: u64 = crate::util::par::MAX_JOBS as u64;
+
+    /// Parse and validate `--jobs`.  Absent means auto-sizing (the
+    /// library's `0` sentinel); explicit values must be `1..=512` —
+    /// `--jobs 0` and absurd pool sizes are clear errors instead of a
+    /// silently degenerate worker pool.
+    pub fn get_jobs(&self) -> Result<usize> {
+        match self.get("jobs") {
+            None => Ok(0),
+            Some(v) => {
+                let n: u64 = v.parse().map_err(|_| {
+                    anyhow::anyhow!("--jobs: '{v}' is not a number")
+                })?;
+                if n == 0 {
+                    bail!(
+                        "--jobs must be >= 1 (omit the flag for \
+                         auto-sizing)"
+                    );
+                }
+                if n > Self::MAX_JOBS {
+                    bail!(
+                        "--jobs {n} exceeds the maximum of {} worker \
+                         threads",
+                        Self::MAX_JOBS
+                    );
+                }
+                Ok(n as usize)
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -107,5 +140,18 @@ mod tests {
         assert!(a.require("absent").is_err());
         let b = parse("x --n twelve");
         assert!(b.get_u64("n", 0).is_err());
+    }
+
+    #[test]
+    fn jobs_validation() {
+        assert_eq!(parse("x").get_jobs().unwrap(), 0, "absent = auto");
+        assert_eq!(parse("x --jobs 4").get_jobs().unwrap(), 4);
+        assert_eq!(parse("x --jobs 512").get_jobs().unwrap(), 512);
+        let err = parse("x --jobs 0").get_jobs().unwrap_err().to_string();
+        assert!(err.contains(">= 1"), "{err}");
+        let err = parse("x --jobs 100000").get_jobs().unwrap_err().to_string();
+        assert!(err.contains("512"), "{err}");
+        assert!(parse("x --jobs many").get_jobs().is_err());
+        assert!(parse("x --jobs -3").get_jobs().is_err());
     }
 }

@@ -20,7 +20,8 @@ use anyhow::{bail, Context, Result};
 
 use crate::apps::{self, Workload};
 use crate::ci;
-use crate::pages::{self, ReportOptions};
+use crate::gate::{self, GatePolicy};
+use crate::pages::{self, MetricsCache, ReportOptions};
 use crate::pop;
 use crate::sim::{MachineSpec, ResourceConfig};
 use crate::tools;
@@ -34,14 +35,18 @@ talp-pages — continuous performance monitoring (TALP-Pages reproduction)
 USAGE:
   talp-pages ci-report --input <dir> --output <dir>
              [--regions <r>...] [--region-for-badge <r>]
-             [--jobs <n>] [--cache <file>]
+             [--jobs <n>] [--cache <file>] [--gate <policy.json>]
+  talp-pages gate --input <dir> [--policy <policy.json>]
+             [--output <dir>] [--jobs <n>] [--cache <file>]
+             (exit 0 = pass/warn, 1 = fail)
+  talp-pages gate-init --output <policy.json>
   talp-pages metadata --input <dir> --commit <sha> --branch <name>
              --timestamp <iso8601> [--message <m>]
   talp-pages run --app <tealeaf|genex|mpi-stencil> --machine <mn5|raven>
              --config <RxT> [--grid <n>] [--seed <n>] --output <file>
   talp-pages compare [--grid <n>] [--configs <RxT>...] [--region <r>]
   talp-pages ci-sim --output <dir> [--commits <n>] [--fix-at <n>]
-             [--jobs <n>]
+             [--jobs <n>] [--gate <policy.json>]
   talp-pages calibrate
   talp-pages badge --label <text> --value <0..1> --output <file>
   talp-pages detect --input <dir> [--threshold <0..1>]
@@ -49,6 +54,7 @@ USAGE:
   talp-pages summary --input <file.json> [--region <r>]
   talp-pages init-ci --flavor <gitlab|github> --output <file>
              [--regions <r>...] [--region-for-badge <r>]
+             [--gate-policy <path>]
 ";
 
 pub fn main_with_args(argv: &[String]) -> Result<i32> {
@@ -59,6 +65,8 @@ pub fn main_with_args(argv: &[String]) -> Result<i32> {
     };
     match cmd {
         "ci-report" => ci_report(&args),
+        "gate" => gate_cmd(&args),
+        "gate-init" => gate_init(&args),
         "metadata" => metadata(&args),
         "run" => run_app(&args),
         "compare" => compare(&args),
@@ -87,8 +95,12 @@ fn ci_report(args: &Args) -> Result<i32> {
             .map(|s| s.to_string())
             .collect(),
         region_for_badge: args.get("region-for-badge").map(str::to_string),
-        jobs: args.get_u64("jobs", 0)? as usize,
+        jobs: args.get_jobs()?,
         cache_path: args.get("cache").map(PathBuf::from),
+        gate: args
+            .get("gate")
+            .map(|p| GatePolicy::from_file(Path::new(p)))
+            .transpose()?,
     };
     let summary = pages::generate(&input, &output, &opts)?;
     for w in &summary.warnings {
@@ -104,6 +116,67 @@ fn ci_report(args: &Args) -> Result<i32> {
         summary.cache_hits,
         summary.cache_misses
     );
+    // Inline gating: the report's own scan fed the verdict, so a warm
+    // cache gates without parsing a single artifact.
+    if let Some(v) = &summary.gate {
+        println!("{}", v.summary_line());
+        return Ok(v.exit_code());
+    }
+    Ok(0)
+}
+
+/// `talp-pages gate`: evaluate a regression-gate policy over a Fig. 2
+/// folder and exit non-zero on failure — the CI enforcement point.
+fn gate_cmd(args: &Args) -> Result<i32> {
+    let input = PathBuf::from(args.require("input")?);
+    let policy = match args.get("policy") {
+        Some(p) => GatePolicy::from_file(Path::new(p))?,
+        None => GatePolicy::default(),
+    };
+    let jobs = args.get_jobs()?;
+    let cache_path = args.get("cache").map(PathBuf::from);
+    let mut cache = cache_path
+        .as_deref()
+        .map(MetricsCache::load)
+        .unwrap_or_default();
+    let scan = pages::scan_metrics(&input, &mut cache, jobs)?;
+    for w in &scan.warnings {
+        eprintln!("warning: {w}");
+    }
+    if let Some(p) = &cache_path {
+        cache.save(p)?;
+    }
+    let verdict = gate::evaluate(&scan, &policy);
+    if let Some(out) = args.get("output") {
+        let dir = PathBuf::from(out);
+        gate::write_outputs(&verdict, &dir)?;
+        println!(
+            "wrote {}/gate.json, gate.md, gate.xml",
+            dir.display()
+        );
+    }
+    println!("{}", verdict.summary_line());
+    for c in verdict.notable() {
+        println!(
+            "  [{}] {} / {} / {} — {}",
+            c.outcome.id().to_uppercase(),
+            c.experiment,
+            c.config,
+            c.region,
+            c.detail
+        );
+    }
+    Ok(verdict.exit_code())
+}
+
+/// `talp-pages gate-init`: write a ready-to-commit starter policy.
+fn gate_init(args: &Args) -> Result<i32> {
+    let out = PathBuf::from(args.require("output")?);
+    if let Some(p) = out.parent() {
+        std::fs::create_dir_all(p)?;
+    }
+    std::fs::write(&out, GatePolicy::example_json())?;
+    println!("wrote {}", out.display());
     Ok(0)
 }
 
@@ -276,26 +349,45 @@ fn ci_sim(args: &Args) -> Result<i32> {
     let opts = ReportOptions {
         regions: vec!["initialize".into(), "timestep".into()],
         region_for_badge: Some("timestep".into()),
-        jobs: args.get_u64("jobs", 0)? as usize,
+        jobs: args.get_jobs()?,
+        // The sim always runs the gate stage — pipelines record a
+        // verdict like real CI would (--gate overrides the policy).
+        gate: Some(match args.get("gate") {
+            Some(p) => GatePolicy::from_file(Path::new(p))?,
+            None => GatePolicy::default(),
+        }),
         ..Default::default()
     };
     let mut engine = ci::CiEngine::new(&out)?;
+    let mut failed_pipelines = 0usize;
     for commit in &repo.commits {
         let r = engine.run_pipeline(commit, &jobs, &opts)?;
+        let gate_note = match r.gate() {
+            Some(v) => {
+                if v.exit_code() != 0 {
+                    failed_pipelines += 1;
+                }
+                format!(", gate {}", v.status.label())
+            }
+            None => String::new(),
+        };
         println!(
-            "pipeline {:>3} {} \"{}\": {} jobs, {} history files, report in {:.2}s",
+            "pipeline {:>3} {} \"{}\": {} jobs, {} history files, report in {:.2}s{}",
             r.pipeline_id,
             r.commit_short,
             truncate(&commit.message, 48),
             r.jobs_run,
             r.history_files,
-            r.wall_time_s
+            r.wall_time_s,
+            gate_note
         );
     }
     println!(
-        "pages: {} | artifacts: {}",
+        "pages: {} | artifacts: {} | gate: {}/{} pipeline(s) failed",
         engine.pages_dir().display(),
-        crate::util::stats::fmt_bytes(engine.artifact_bytes())
+        crate::util::stats::fmt_bytes(engine.artifact_bytes()),
+        failed_pipelines,
+        repo.commits.len()
     );
     Ok(0)
 }
@@ -449,9 +541,17 @@ fn init_ci(args: &Args) -> Result<i32> {
         }
     };
     let badge = args.get("region-for-badge").unwrap_or("timestep");
+    let gate_policy = args.get("gate-policy").unwrap_or(".talp-gate.json");
     let text = match args.get("flavor").unwrap_or("gitlab") {
-        "gitlab" => ci::templates::gitlab_ci_yaml(&spec, &regions, badge),
-        "github" => ci::templates::github_actions_yaml(&spec, &regions, badge),
+        "gitlab" => {
+            ci::templates::gitlab_ci_yaml(&spec, &regions, badge, gate_policy)
+        }
+        "github" => ci::templates::github_actions_yaml(
+            &spec,
+            &regions,
+            badge,
+            gate_policy,
+        ),
         other => bail!("unknown --flavor '{other}' (gitlab|github)"),
     };
     if let Some(p) = out.parent() {
@@ -564,5 +664,75 @@ mod tests {
             .is_err());
         assert!(run_cli("ci-report --input /nonexistent --output /tmp/o")
             .is_err());
+    }
+
+    #[test]
+    fn jobs_zero_and_absurd_are_clear_errors() {
+        let td = TempDir::new("cli-jobs").unwrap();
+        let (i, o) = (td.path().join("in"), td.path().join("out"));
+        std::fs::create_dir_all(&i).unwrap();
+        for (line, needle) in [
+            (format!("ci-report --input {} --output {} --jobs 0",
+                     i.display(), o.display()), ">= 1"),
+            (format!("gate --input {} --jobs 99999", i.display()), "512"),
+            (format!("ci-sim --output {} --jobs nope", o.display()),
+             "not a number"),
+        ] {
+            let err = run_cli(&line).unwrap_err().to_string();
+            assert!(err.contains(needle), "{line}: {err}");
+        }
+    }
+
+    #[test]
+    fn gate_init_then_gate_cycle() {
+        let td = TempDir::new("cli-gate").unwrap();
+        let pol = td.path().join("policy/.talp-gate.json");
+        assert_eq!(
+            run_cli(&format!("gate-init --output {}", pol.display()))
+                .unwrap(),
+            0
+        );
+        assert!(crate::gate::GatePolicy::from_file(&pol).is_ok());
+        // A quiet folder gates green and writes the verdict triple.
+        // (Use a floor-free policy: this checks the CLI cycle, not the
+        // simulator's absolute efficiency numbers.)
+        let quiet_pol = td.path().join("quiet.json");
+        std::fs::write(
+            &quiet_pol,
+            r#"{"version":1,"defaults":{"max_elapsed_increase":0.5}}"#,
+        )
+        .unwrap();
+        let input = td.path().join("talp");
+        std::fs::create_dir_all(&input).unwrap();
+        for i in 0..4 {
+            assert_eq!(
+                run_cli(&format!(
+                    "run --app genex --machine mn5 --config 2x4 \
+                     --timesteps 2 --seed {} --output {}",
+                    40 + i,
+                    input.join(format!("exp/run_{i}.json")).display()
+                ))
+                .unwrap(),
+                0
+            );
+        }
+        let gate_out = td.path().join("gate");
+        let code = run_cli(&format!(
+            "gate --input {} --policy {} --output {}",
+            input.display(),
+            quiet_pol.display(),
+            gate_out.display()
+        ))
+        .unwrap();
+        assert_eq!(code, 0, "clean history must pass");
+        for f in ["gate.json", "gate.md", "gate.xml"] {
+            assert!(gate_out.join(f).exists(), "{f} missing");
+        }
+        // Unknown policy file is a clear error.
+        assert!(run_cli(&format!(
+            "gate --input {} --policy /nonexistent.json",
+            input.display()
+        ))
+        .is_err());
     }
 }

@@ -1,0 +1,480 @@
+//! Gate evaluation: fold a scanned metrics history and a policy into a
+//! deterministic [`GateVerdict`].
+//!
+//! The engine consumes the same precomputed [`crate::pop::RunMetrics`]
+//! histories the report engine renders from (`pages::scan_metrics`), so
+//! a warm cache gates without parsing a single artifact, and the
+//! verdict is byte-identical for every `--jobs` value (scan order is
+//! deterministic, evaluation is a pure fold in that order).
+//!
+//! Per `(experiment, configuration, region)` two kinds of checks run:
+//!
+//! 1. **Elapsed regression** — the latest run's elapsed time against
+//!    the mean of the trailing window, with the same noise-floor test
+//!    the detector uses ([`crate::pages::detect::exceeds_noise_floor`])
+//!    plus policy knobs: warm-up trimming, a minimum sample count
+//!    (below it the check is *skipped*, not failed), and the relative
+//!    threshold.
+//! 2. **Factor floors** — absolute minimums on the latest run's POP
+//!    factors (`min_factors` / `min_parallel_efficiency`).
+//!
+//! A firing check resolves through the policy's allow-list (known
+//! regressions become `Allowed`) and its severity (`warn` never fails
+//! the pipeline, `fail` does, `off` skips the region entirely).
+
+use crate::pages::detect::exceeds_noise_floor;
+use crate::pages::scanner::MetricScan;
+use crate::pages::timeseries::{self, TimeSeries};
+use crate::util::stats;
+
+use super::policy::{GatePolicy, Severity, Thresholds};
+use super::verdict::{
+    CheckKind, CheckOutcome, GateCheck, GateVerdict,
+};
+
+/// Evaluate `policy` over every experiment/config/region in `scan`.
+pub fn evaluate(scan: &MetricScan, policy: &GatePolicy) -> GateVerdict {
+    let mut checks = Vec::new();
+    for exp in &scan.experiments {
+        for cfg in exp.configs() {
+            let history = exp.history_for_config(&cfg);
+            let ts = timeseries::build_from_metrics(&cfg, &history, &[]);
+            for region in ts.regions() {
+                let t = policy.effective(&exp.id, &cfg, &region);
+                check_region(
+                    &mut checks, policy, &t, &exp.id, &cfg, &region, &ts,
+                );
+            }
+        }
+    }
+    GateVerdict::from_checks(policy.source.clone(), checks)
+}
+
+/// Resolve a firing check through allow-list and severity.
+fn resolve(
+    policy: &GatePolicy,
+    t: &Thresholds,
+    exp: &str,
+    cfg: &str,
+    region: &str,
+    commit: Option<&str>,
+) -> (CheckOutcome, Option<String>) {
+    if let Some(a) = policy.allowed(exp, cfg, region, commit) {
+        let reason = if a.reason.is_empty() {
+            "allowed by policy".to_string()
+        } else {
+            a.reason.clone()
+        };
+        return (CheckOutcome::Allowed, Some(reason));
+    }
+    match t.severity {
+        Severity::Warn => (CheckOutcome::Warn, None),
+        // `Off` regions never reach here (skipped earlier); treat a
+        // hypothetical fall-through as fail-safe.
+        Severity::Fail | Severity::Off => (CheckOutcome::Fail, None),
+    }
+}
+
+fn check_region(
+    out: &mut Vec<GateCheck>,
+    policy: &GatePolicy,
+    t: &Thresholds,
+    exp: &str,
+    cfg: &str,
+    region: &str,
+    ts: &TimeSeries,
+) {
+    let commit = ts
+        .points
+        .last()
+        .and_then(|p| p.commit.clone());
+    let base = |kind: CheckKind| GateCheck {
+        experiment: exp.to_string(),
+        config: cfg.to_string(),
+        region: region.to_string(),
+        kind,
+        severity: t.severity,
+        outcome: CheckOutcome::Skipped,
+        measured: 0.0,
+        limit: 0.0,
+        commit: commit.clone(),
+        detail: String::new(),
+        allowed_by: None,
+    };
+
+    if t.severity == Severity::Off {
+        let mut c = base(CheckKind::ElapsedRegression);
+        c.detail = "muted by policy rule (severity: off)".to_string();
+        out.push(c);
+        return;
+    }
+
+    // ---- 1. elapsed-regression check ----
+    let elapsed = ts.metric(region, "elapsed");
+    let series: &[(i64, f64)] = if elapsed.len() > t.warmup {
+        &elapsed[t.warmup..]
+    } else {
+        &[]
+    };
+    let mut c = base(CheckKind::ElapsedRegression);
+    c.limit = t.max_elapsed_increase;
+    // Policy parsing enforces min_samples >= 2; re-clamp here so a
+    // hand-built Thresholds cannot index an empty series.
+    let min_samples = t.min_samples.max(2);
+    if series.len() < min_samples {
+        c.detail = format!(
+            "{} sample(s) after warm-up, policy needs {min_samples}",
+            series.len()
+        );
+    } else {
+        let n = series.len();
+        let latest = series[n - 1].1;
+        let lo = (n - 1).saturating_sub(t.window);
+        let window: Vec<f64> =
+            series[lo..n - 1].iter().map(|(_, v)| *v).collect();
+        let baseline = stats::mean(&window);
+        if !latest.is_finite() || !baseline.is_finite() {
+            // Fail closed on garbage data: a NaN would sail through
+            // every `>` comparison and silently green-light the gate.
+            c.detail = "non-finite elapsed time in series".to_string();
+        } else if baseline <= 0.0 {
+            c.detail = "non-positive baseline elapsed time".to_string();
+        } else {
+            let rel = (latest - baseline) / baseline;
+            c.measured = rel;
+            let over_threshold = rel > t.max_elapsed_increase;
+            let fired = over_threshold
+                && exceeds_noise_floor(&window, latest, t.noise_sigma);
+            // The detail must match the numbers it quotes: a change
+            // over the threshold but inside the platform's noise floor
+            // passes *because of the noise test*, not the threshold.
+            let judgement = if fired {
+                format!("exceeds {:+.1}%", t.max_elapsed_increase * 100.0)
+            } else if over_threshold {
+                format!(
+                    "exceeds {:+.1}% but is within the noise floor \
+                     ({} sigma)",
+                    t.max_elapsed_increase * 100.0,
+                    t.noise_sigma
+                )
+            } else {
+                format!("within {:+.1}%", t.max_elapsed_increase * 100.0)
+            };
+            c.detail = format!(
+                "elapsed {latest:.4} s vs baseline {baseline:.4} s \
+                 over {} run(s): {:+.1}% {judgement}",
+                window.len(),
+                rel * 100.0,
+            );
+            if fired {
+                let (outcome, allowed_by) = resolve(
+                    policy, t, exp, cfg, region, commit.as_deref(),
+                );
+                c.outcome = outcome;
+                c.allowed_by = allowed_by;
+            } else {
+                c.outcome = CheckOutcome::Pass;
+            }
+        }
+    }
+    out.push(c);
+
+    // ---- 2. factor-floor checks (deterministic BTreeMap order) ----
+    for (factor, min) in &t.min_factors {
+        let series = ts.metric(region, factor);
+        let mut c = base(CheckKind::FactorFloor(factor.clone()));
+        c.limit = *min;
+        match series.last() {
+            None => {
+                c.detail = format!("factor '{factor}' absent from series");
+            }
+            Some((_, value)) if !value.is_finite() => {
+                c.detail = format!("factor '{factor}' is non-finite");
+            }
+            Some((_, value)) => {
+                c.measured = *value;
+                if value < min {
+                    let (outcome, allowed_by) = resolve(
+                        policy, t, exp, cfg, region, commit.as_deref(),
+                    );
+                    c.outcome = outcome;
+                    c.allowed_by = allowed_by;
+                    c.detail = format!(
+                        "{factor} {value:.4} below floor {min:.4}"
+                    );
+                } else {
+                    c.outcome = CheckOutcome::Pass;
+                    c.detail = format!(
+                        "{factor} {value:.4} meets floor {min:.4}"
+                    );
+                }
+            }
+        }
+        out.push(c);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pages::scanner::MetricExperiment;
+    use crate::pop::{RegionMetrics, RegionSummary, RunMetrics};
+    use crate::talp::GitMeta;
+
+    fn metrics(elapsed: f64, pe: f64) -> RegionMetrics {
+        RegionMetrics {
+            ncpus: 4,
+            nranks: 2,
+            nthreads: 2,
+            elapsed_s: elapsed,
+            total_useful_s: elapsed * 4.0 * pe,
+            total_useful_instructions: 1_000_000,
+            total_useful_cycles: 500_000,
+            parallel_efficiency: pe,
+            mpi_parallel_efficiency: 0.9,
+            mpi_communication_efficiency: 0.95,
+            mpi_load_balance: 0.95,
+            mpi_load_balance_in: 0.97,
+            mpi_load_balance_inter: 0.98,
+            omp_parallel_efficiency: 0.9,
+            omp_load_balance: 0.93,
+            omp_scheduling_efficiency: 0.97,
+            omp_serialization_efficiency: 0.99,
+            useful_ipc: 2.0,
+            frequency_ghz: 2.5,
+            insn_per_cpu: 250_000.0,
+        }
+    }
+
+    fn run(i: usize, elapsed: f64, pe: f64) -> RunMetrics {
+        RunMetrics {
+            source: format!("exp/run_{i:02}.json"),
+            app: "app".into(),
+            machine: "mn5".into(),
+            timestamp: 1000 + i as i64 * 100,
+            ranks: 2,
+            threads: 2,
+            nodes: 1,
+            git: Some(GitMeta {
+                commit: format!("c{i:07}"),
+                branch: "main".into(),
+                commit_timestamp: 1000 + i as i64 * 100,
+                message: String::new(),
+            }),
+            regions: vec![RegionSummary {
+                name: "Global".into(),
+                visits: 1,
+                metrics: metrics(elapsed, pe),
+            }],
+        }
+    }
+
+    fn scan_of(elapsed: &[f64]) -> MetricScan {
+        scan_of_pe(elapsed, 0.8)
+    }
+
+    fn scan_of_pe(elapsed: &[f64], pe: f64) -> MetricScan {
+        MetricScan {
+            experiments: vec![MetricExperiment {
+                id: "exp".into(),
+                runs: elapsed
+                    .iter()
+                    .enumerate()
+                    .map(|(i, e)| run(i, *e, pe))
+                    .collect(),
+            }],
+            ..Default::default()
+        }
+    }
+
+    fn find<'a>(
+        v: &'a GateVerdict,
+        kind_id: &str,
+    ) -> &'a GateCheck {
+        v.checks
+            .iter()
+            .find(|c| c.kind.id() == kind_id)
+            .unwrap_or_else(|| panic!("no check '{kind_id}': {v:?}"))
+    }
+
+    #[test]
+    fn clean_history_passes() {
+        let v = evaluate(
+            &scan_of(&[10.0, 10.0, 10.0, 10.0]),
+            &GatePolicy::default(),
+        );
+        assert_eq!(v.status, crate::gate::GateStatus::Pass);
+        assert_eq!(v.exit_code(), 0);
+        let c = find(&v, "elapsed_regression");
+        assert_eq!(c.outcome, CheckOutcome::Pass);
+        assert_eq!(c.commit.as_deref(), Some("c0000003"));
+    }
+
+    #[test]
+    fn injected_regression_fails() {
+        let v = evaluate(
+            &scan_of(&[10.0, 10.0, 10.0, 16.0]),
+            &GatePolicy::default(),
+        );
+        assert_eq!(v.status, crate::gate::GateStatus::Fail);
+        assert_eq!(v.exit_code(), 1);
+        let c = find(&v, "elapsed_regression");
+        assert_eq!(c.outcome, CheckOutcome::Fail);
+        assert!((c.measured - 0.6).abs() < 1e-9, "{}", c.measured);
+        assert!(c.detail.contains("+60.0%"), "{}", c.detail);
+    }
+
+    #[test]
+    fn improvement_never_fires() {
+        let v = evaluate(
+            &scan_of(&[10.0, 10.0, 10.0, 4.0]),
+            &GatePolicy::default(),
+        );
+        assert_eq!(v.status, crate::gate::GateStatus::Pass);
+    }
+
+    #[test]
+    fn short_history_skips_not_fails() {
+        let v = evaluate(&scan_of(&[10.0, 16.0]), &GatePolicy::default());
+        assert_eq!(v.status, crate::gate::GateStatus::Pass);
+        let c = find(&v, "elapsed_regression");
+        assert_eq!(c.outcome, CheckOutcome::Skipped);
+        assert!(c.detail.contains("needs 3"), "{}", c.detail);
+        assert_eq!(v.counts.skipped, 1);
+    }
+
+    #[test]
+    fn warmup_trims_unstable_early_history() {
+        // First point is a wild outlier; warm-up discards it, so the
+        // stable tail passes.
+        let policy = GatePolicy::parse(
+            r#"{"version":1,"defaults":{"warmup":1,"min_samples":3}}"#,
+            "t",
+        )
+        .unwrap();
+        let v = evaluate(&scan_of(&[99.0, 10.0, 10.0, 10.0]), &policy);
+        assert_eq!(v.status, crate::gate::GateStatus::Pass);
+        let c = find(&v, "elapsed_regression");
+        assert_eq!(c.outcome, CheckOutcome::Pass);
+        assert!(c.detail.contains("over 2 run(s)"), "{}", c.detail);
+    }
+
+    #[test]
+    fn noise_sigma_suppresses_jittery_series() {
+        // Noisy history: the last point is high but within the window's
+        // scatter (sigma over [8,12,8,12] is ~2.3; 4*sigma ~ 9.2).
+        let v = evaluate(
+            &scan_of(&[8.0, 12.0, 8.0, 12.0, 13.0]),
+            &GatePolicy::default(),
+        );
+        let c = find(&v, "elapsed_regression");
+        assert_eq!(c.outcome, CheckOutcome::Pass, "{}", c.detail);
+        // The detail must credit the noise test, not claim the +30%
+        // change was within the +15% threshold.
+        assert!(c.detail.contains("noise floor"), "{}", c.detail);
+        // The same +30% on a flat series fires.
+        let v = evaluate(
+            &scan_of(&[10.0, 10.0, 10.0, 10.0, 13.0]),
+            &GatePolicy::default(),
+        );
+        let c = find(&v, "elapsed_regression");
+        assert_eq!(c.outcome, CheckOutcome::Fail, "{}", c.detail);
+    }
+
+    #[test]
+    fn warn_severity_records_without_failing() {
+        let policy = GatePolicy::parse(
+            r#"{"version":1,"defaults":{"severity":"warn"}}"#,
+            "t",
+        )
+        .unwrap();
+        let v = evaluate(&scan_of(&[10.0, 10.0, 10.0, 16.0]), &policy);
+        assert_eq!(v.status, crate::gate::GateStatus::Warn);
+        assert_eq!(v.exit_code(), 0);
+        assert_eq!(v.counts.warn, 1);
+    }
+
+    #[test]
+    fn allowlist_downgrades_known_regression() {
+        let policy = GatePolicy::parse(
+            r#"{"version":1,"allow":[
+                {"region":"Global","commit":"c0000003",
+                 "reason":"accepted for accuracy fix"}]}"#,
+            "t",
+        )
+        .unwrap();
+        let v = evaluate(&scan_of(&[10.0, 10.0, 10.0, 16.0]), &policy);
+        assert_eq!(v.status, crate::gate::GateStatus::Pass);
+        let c = find(&v, "elapsed_regression");
+        assert_eq!(c.outcome, CheckOutcome::Allowed);
+        assert_eq!(
+            c.allowed_by.as_deref(),
+            Some("accepted for accuracy fix")
+        );
+        // A later commit with the same regression is NOT covered.
+        let v = evaluate(&scan_of(&[10.0, 10.0, 10.0, 16.0, 16.5]), &policy);
+        let c = find(&v, "elapsed_regression");
+        assert_eq!(c.outcome, CheckOutcome::Pass, "new baseline absorbed it");
+    }
+
+    #[test]
+    fn severity_off_mutes_region() {
+        let policy = GatePolicy::parse(
+            r#"{"version":1,"rules":[{"region":"Global","severity":"off"}]}"#,
+            "t",
+        )
+        .unwrap();
+        let v = evaluate(&scan_of(&[10.0, 10.0, 10.0, 16.0]), &policy);
+        assert_eq!(v.status, crate::gate::GateStatus::Pass);
+        let c = find(&v, "elapsed_regression");
+        assert_eq!(c.outcome, CheckOutcome::Skipped);
+        assert!(c.detail.contains("muted"));
+    }
+
+    #[test]
+    fn factor_floor_fires_on_low_efficiency() {
+        let policy = GatePolicy::parse(
+            r#"{"version":1,"defaults":{"min_parallel_efficiency":0.6}}"#,
+            "t",
+        )
+        .unwrap();
+        let v = evaluate(&scan_of_pe(&[10.0, 10.0, 10.0], 0.45), &policy);
+        assert_eq!(v.status, crate::gate::GateStatus::Fail);
+        let c = find(&v, "min_parallel_efficiency");
+        assert_eq!(c.outcome, CheckOutcome::Fail);
+        assert_eq!(c.measured, 0.45);
+        assert_eq!(c.limit, 0.6);
+        // Healthy PE passes the same policy.
+        let v = evaluate(&scan_of_pe(&[10.0, 10.0, 10.0], 0.85), &policy);
+        assert_eq!(v.status, crate::gate::GateStatus::Pass);
+    }
+
+    #[test]
+    fn non_finite_metrics_skip_instead_of_passing() {
+        let policy = GatePolicy::parse(
+            r#"{"version":1,"defaults":{"min_parallel_efficiency":0.6}}"#,
+            "t",
+        )
+        .unwrap();
+        // NaN efficiency: the floor check must not report "meets
+        // floor" (NaN < min is false); it must skip visibly.
+        let v = evaluate(&scan_of_pe(&[10.0, 10.0, 10.0], f64::NAN), &policy);
+        let c = find(&v, "min_parallel_efficiency");
+        assert_eq!(c.outcome, CheckOutcome::Skipped, "{}", c.detail);
+        assert!(c.detail.contains("non-finite"), "{}", c.detail);
+        // NaN elapsed likewise skips the regression check.
+        let v = evaluate(
+            &scan_of(&[10.0, 10.0, 10.0, f64::NAN]),
+            &GatePolicy::default(),
+        );
+        let c = find(&v, "elapsed_regression");
+        assert_eq!(c.outcome, CheckOutcome::Skipped, "{}", c.detail);
+    }
+
+    #[test]
+    fn empty_scan_passes_vacuously() {
+        let v = evaluate(&MetricScan::default(), &GatePolicy::default());
+        assert_eq!(v.status, crate::gate::GateStatus::Pass);
+        assert_eq!(v.counts.total(), 0);
+    }
+}

@@ -1,0 +1,41 @@
+//! The regression gate: detection turned into an enforceable CI
+//! pass/fail policy.
+//!
+//! The paper's promise is *early* feedback — but a report a developer
+//! has to open is late by definition.  This subsystem makes the
+//! detector's signal binding: a committed policy file declares what
+//! counts as a regression (`policy`), the engine folds the scanned
+//! [`crate::pop::RunMetrics`] histories into a verdict (`engine`), and
+//! the renderers emit the three artifacts CI systems consume
+//! (`outputs`): `gate.json` (machines), `gate.md` (PR comments),
+//! `gate.xml` (JUnit, so pipeline UIs render failures natively).
+//!
+//! Wiring:
+//! * `talp-pages gate` evaluates standalone (exit 0 = pass/warn,
+//!   1 = fail) and serves warm runs entirely from the metrics cache;
+//! * `talp-pages ci-report --gate <policy>` gates inline on the scan
+//!   the report just used — zero extra parsing;
+//! * `ci::runner` records the verdict per pipeline
+//!   ([`crate::ci::PipelineResult::gate`]);
+//! * `pages::report` surfaces the verdict on the HTML index and as a
+//!   `gate` badge;
+//! * `ci::templates` emits a ready-made gate job in both the GitLab
+//!   and GitHub pipeline flavors.
+//!
+//! Everything is deterministic: same scan + same policy = byte-identical
+//! verdict files, for every `--jobs` value and cache temperature.
+
+pub mod engine;
+pub mod outputs;
+pub mod policy;
+pub mod verdict;
+
+pub use engine::evaluate;
+pub use outputs::write_outputs;
+pub use policy::{
+    AllowEntry, GatePolicy, RuleOverride, Severity, Thresholds,
+    GATEABLE_FACTORS,
+};
+pub use verdict::{
+    CheckKind, CheckOutcome, GateCheck, GateCounts, GateStatus, GateVerdict,
+};

@@ -1,0 +1,342 @@
+//! Verdict renderers for CI surfaces:
+//!
+//! * `gate.json` — machine-readable (see [`GateVerdict::to_json`]);
+//! * `gate.md`   — markdown summary, paste-able as a PR/MR comment;
+//! * `gate.xml`  — JUnit-style XML, so GitLab's `reports: junit` and
+//!   GitHub test-summary actions render failures natively.
+//!
+//! All three are deterministic (no timestamps, no hostnames) and are
+//! written together by [`write_outputs`].
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::verdict::{CheckOutcome, GateCheck, GateVerdict};
+
+/// Write `gate.json`, `gate.md` and `gate.xml` into `dir`.
+pub fn write_outputs(v: &GateVerdict, dir: &Path) -> Result<()> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating {}", dir.display()))?;
+    std::fs::write(dir.join("gate.json"), v.to_json().to_string_pretty())?;
+    std::fs::write(dir.join("gate.md"), v.to_markdown())?;
+    std::fs::write(dir.join("gate.xml"), v.to_junit_xml())?;
+    Ok(())
+}
+
+fn xml_esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '&' => out.push_str("&amp;"),
+            '<' => out.push_str("&lt;"),
+            '>' => out.push_str("&gt;"),
+            '"' => out.push_str("&quot;"),
+            '\'' => out.push_str("&apos;"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Markdown-table cell: pipes would break the row.
+fn md_cell(s: &str) -> String {
+    s.replace('|', "\\|")
+}
+
+/// First `n` characters (not bytes — commit strings are arbitrary
+/// parsed input and a byte slice could split a UTF-8 sequence).
+fn char_prefix(s: &str, n: usize) -> String {
+    s.chars().take(n).collect()
+}
+
+fn measured_text(c: &GateCheck) -> String {
+    match &c.kind {
+        super::verdict::CheckKind::ElapsedRegression => {
+            format!("{:+.1}%", c.measured * 100.0)
+        }
+        super::verdict::CheckKind::FactorFloor(_) => {
+            format!("{:.2}", c.measured)
+        }
+    }
+}
+
+fn limit_text(c: &GateCheck) -> String {
+    match &c.kind {
+        super::verdict::CheckKind::ElapsedRegression => {
+            format!("{:+.1}%", c.limit * 100.0)
+        }
+        super::verdict::CheckKind::FactorFloor(_) => {
+            format!("≥ {:.2}", c.limit)
+        }
+    }
+}
+
+impl GateVerdict {
+    /// The PR-comment markdown summary.
+    pub fn to_markdown(&self) -> String {
+        let mut out = format!(
+            "## TALP performance gate: **{}**\n\n",
+            self.status.label()
+        );
+        out.push_str(&format!(
+            "Policy `{}` — {} check(s): {} passed, {} warned, {} failed, \
+             {} allowed, {} skipped.\n\n",
+            md_cell(&self.policy_source),
+            self.counts.total(),
+            self.counts.pass,
+            self.counts.warn,
+            self.counts.fail,
+            self.counts.allowed,
+            self.counts.skipped
+        ));
+
+        // Table of everything that is not a plain pass/skip.
+        let notable: Vec<&GateCheck> = self.notable().collect();
+        if notable.is_empty() {
+            out.push_str("No regressions or floor violations detected.\n");
+            return out;
+        }
+        out.push_str(
+            "| Status | Experiment | Config | Region | Check | Measured | Limit |\n\
+             |---|---|---|---|---|---|---|\n",
+        );
+        for c in &notable {
+            out.push_str(&format!(
+                "| {} | `{}` | `{}` | `{}` | {} | {} | {} |\n",
+                c.outcome.id().to_uppercase(),
+                md_cell(&c.experiment),
+                md_cell(&c.config),
+                md_cell(&c.region),
+                md_cell(&c.kind.label()),
+                measured_text(c),
+                limit_text(c)
+            ));
+        }
+        out.push('\n');
+        for c in &notable {
+            out.push_str(&format!(
+                "- **{} / {} / {}** — {}{}{}\n",
+                md_cell(&c.experiment),
+                md_cell(&c.config),
+                md_cell(&c.region),
+                md_cell(&c.detail),
+                match &c.commit {
+                    Some(sha) => {
+                        format!(" (at `{}`)", md_cell(&char_prefix(sha, 8)))
+                    }
+                    None => String::new(),
+                },
+                match &c.allowed_by {
+                    Some(reason) =>
+                        format!(" — allowed: {}", md_cell(reason)),
+                    None => String::new(),
+                }
+            ));
+        }
+        out
+    }
+
+    /// JUnit-style XML: one testsuite per experiment, one testcase per
+    /// check.  `Fail` maps to `<failure>`, `Skipped` to `<skipped>`,
+    /// `Warn`/`Allowed` pass with an explanatory `<system-out>`.
+    pub fn to_junit_xml(&self) -> String {
+        // Group checks by experiment, preserving first-seen order
+        // (checks are already in deterministic experiment order).
+        let mut suites: Vec<(&str, Vec<&GateCheck>)> = Vec::new();
+        for c in &self.checks {
+            let start_new = suites
+                .last()
+                .map(|(id, _)| *id != c.experiment.as_str())
+                .unwrap_or(true);
+            if start_new {
+                suites.push((c.experiment.as_str(), Vec::new()));
+            }
+            suites.last_mut().unwrap().1.push(c);
+        }
+        let mut body = String::new();
+        let (mut tests, mut failures, mut skipped) = (0usize, 0usize, 0usize);
+        for (exp, list) in &suites {
+            let s_fail = list
+                .iter()
+                .filter(|c| c.outcome == CheckOutcome::Fail)
+                .count();
+            let s_skip = list
+                .iter()
+                .filter(|c| c.outcome == CheckOutcome::Skipped)
+                .count();
+            tests += list.len();
+            failures += s_fail;
+            skipped += s_skip;
+            body.push_str(&format!(
+                "  <testsuite name=\"{}\" tests=\"{}\" failures=\"{s_fail}\" \
+                 errors=\"0\" skipped=\"{s_skip}\">\n",
+                xml_esc(exp),
+                list.len()
+            ));
+            for c in list {
+                body.push_str(&format!(
+                    "    <testcase classname=\"{}.{}\" name=\"{} {}\"",
+                    xml_esc(&c.experiment),
+                    xml_esc(&c.config),
+                    xml_esc(&c.region),
+                    xml_esc(&c.kind.id())
+                ));
+                match c.outcome {
+                    CheckOutcome::Pass => body.push_str("/>\n"),
+                    CheckOutcome::Fail => body.push_str(&format!(
+                        ">\n      <failure message=\"{}\"/>\n    </testcase>\n",
+                        xml_esc(&c.detail)
+                    )),
+                    CheckOutcome::Skipped => body.push_str(&format!(
+                        ">\n      <skipped message=\"{}\"/>\n    </testcase>\n",
+                        xml_esc(&c.detail)
+                    )),
+                    CheckOutcome::Warn => body.push_str(&format!(
+                        ">\n      <system-out>warning: {}</system-out>\n    </testcase>\n",
+                        xml_esc(&c.detail)
+                    )),
+                    CheckOutcome::Allowed => body.push_str(&format!(
+                        ">\n      <system-out>allowed: {}</system-out>\n    </testcase>\n",
+                        xml_esc(&c.detail)
+                    )),
+                }
+            }
+            body.push_str("  </testsuite>\n");
+        }
+        format!(
+            "<?xml version=\"1.0\" encoding=\"UTF-8\"?>\n\
+             <testsuites name=\"talp-gate\" tests=\"{tests}\" \
+             failures=\"{failures}\" errors=\"0\" skipped=\"{skipped}\">\n\
+             {body}</testsuites>\n"
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::policy::Severity;
+    use super::super::verdict::{
+        CheckKind, CheckOutcome, GateCheck, GateVerdict,
+    };
+    use super::*;
+    use crate::util::fs::TempDir;
+
+    fn check(
+        exp: &str,
+        region: &str,
+        outcome: CheckOutcome,
+        detail: &str,
+    ) -> GateCheck {
+        GateCheck {
+            experiment: exp.into(),
+            config: "2x8".into(),
+            region: region.into(),
+            kind: CheckKind::ElapsedRegression,
+            severity: Severity::Fail,
+            outcome,
+            measured: 0.62,
+            limit: 0.15,
+            commit: Some("abcdef1234567890".into()),
+            detail: detail.into(),
+            allowed_by: None,
+        }
+    }
+
+    fn sample() -> GateVerdict {
+        GateVerdict::from_checks(
+            ".talp-gate.json".into(),
+            vec![
+                check("alpha", "Global", CheckOutcome::Pass, "fine"),
+                check("alpha", "solve", CheckOutcome::Fail, "bad <jump> & co"),
+                check("beta", "Global", CheckOutcome::Skipped, "2 samples"),
+                check("beta", "solve", CheckOutcome::Warn, "warned"),
+            ],
+        )
+    }
+
+    #[test]
+    fn markdown_lists_notable_checks_only() {
+        let md = sample().to_markdown();
+        assert!(md.starts_with("## TALP performance gate: **FAIL**"));
+        assert!(md.contains("| FAIL | `alpha` |"));
+        assert!(md.contains("| WARN | `beta` |"));
+        assert!(!md.contains("| PASS"), "passes stay out of the table");
+        assert!(md.contains("+62.0%"));
+        assert!(md.contains("+15.0%"));
+        assert!(md.contains("(at `abcdef12`)"));
+        assert!(md.contains("4 check(s): 1 passed, 1 warned, 1 failed"));
+    }
+
+    #[test]
+    fn markdown_clean_verdict_is_short() {
+        let v = GateVerdict::from_checks(
+            "p".into(),
+            vec![check("alpha", "Global", CheckOutcome::Pass, "fine")],
+        );
+        let md = v.to_markdown();
+        assert!(md.contains("**PASS**"));
+        assert!(md.contains("No regressions or floor violations detected."));
+        assert!(!md.contains("| Status |"));
+    }
+
+    #[test]
+    fn junit_counts_and_escaping() {
+        let xml = sample().to_junit_xml();
+        assert!(xml.starts_with("<?xml version=\"1.0\""));
+        assert!(xml.contains(
+            "<testsuites name=\"talp-gate\" tests=\"4\" failures=\"1\" \
+             errors=\"0\" skipped=\"1\">"
+        ));
+        assert!(xml.contains(
+            "<testsuite name=\"alpha\" tests=\"2\" failures=\"1\" \
+             errors=\"0\" skipped=\"0\">"
+        ));
+        assert!(xml.contains(
+            "<failure message=\"bad &lt;jump&gt; &amp; co\"/>"
+        ));
+        assert!(xml.contains("<skipped message=\"2 samples\"/>"));
+        assert!(xml.contains("<system-out>warning: warned</system-out>"));
+        assert!(xml.contains(
+            "<testcase classname=\"alpha.2x8\" name=\"Global \
+             elapsed_regression\"/>"
+        ));
+        assert!(xml.trim_end().ends_with("</testsuites>"));
+    }
+
+    #[test]
+    fn write_outputs_creates_all_three() {
+        let td = TempDir::new("gate-out").unwrap();
+        let dir = td.path().join("nested/gate");
+        write_outputs(&sample(), &dir).unwrap();
+        for f in ["gate.json", "gate.md", "gate.xml"] {
+            assert!(dir.join(f).exists(), "{f} missing");
+        }
+        let json =
+            std::fs::read_to_string(dir.join("gate.json")).unwrap();
+        assert!(json.contains("\"status\": \"fail\""));
+    }
+
+    #[test]
+    fn multibyte_commit_does_not_panic() {
+        // Commit strings are arbitrary parsed input: truncation must
+        // respect char boundaries ('é' straddles byte index 8 here).
+        let mut c = check("alpha", "solve", CheckOutcome::Fail, "bad");
+        c.commit = Some("abcdefgé-rest".into());
+        let v = GateVerdict::from_checks("p".into(), vec![c]);
+        let md = v.to_markdown();
+        assert!(md.contains("(at `abcdefgé`)"), "{md}");
+        let _ = v.to_junit_xml();
+    }
+
+    #[test]
+    fn outputs_are_deterministic() {
+        let v = sample();
+        assert_eq!(v.to_markdown(), sample().to_markdown());
+        assert_eq!(v.to_junit_xml(), sample().to_junit_xml());
+        assert_eq!(
+            v.to_json().to_string_pretty(),
+            sample().to_json().to_string_pretty()
+        );
+    }
+}

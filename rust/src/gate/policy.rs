@@ -1,0 +1,624 @@
+//! The declarative gate policy — what "regression" means for *this*
+//! repository, committed next to the code it protects.
+//!
+//! A policy is a JSON document (conventionally `.talp-gate.json`):
+//!
+//! ```json
+//! {
+//!   "version": 1,
+//!   "defaults": {
+//!     "max_elapsed_increase": 0.15,
+//!     "noise_sigma": 4.0,
+//!     "min_samples": 3,
+//!     "warmup": 0,
+//!     "window": 4,
+//!     "severity": "fail"
+//!   },
+//!   "rules": [
+//!     { "region": "timestep", "config": "*",
+//!       "max_elapsed_increase": 0.1, "min_parallel_efficiency": 0.5,
+//!       "severity": "warn" }
+//!   ],
+//!   "allow": [
+//!     { "region": "initialize", "config": "*", "commit": "9dc04ca",
+//!       "reason": "known regression, tracked in #42" }
+//!   ]
+//! }
+//! ```
+//!
+//! * **defaults** override the built-in thresholds for every check.
+//! * **rules** match on `(experiment, config, region)` patterns (exact,
+//!   `"*"`, or trailing-`*` prefix) and override only the fields they
+//!   set.  Later matching rules win.  `"severity": "off"` disables
+//!   checks for everything a rule matches.
+//! * **allow** entries downgrade a firing check to *allowed* (recorded
+//!   in the verdict, but never failing the gate) when the latest run's
+//!   commit matches the entry's commit prefix — the escape hatch for
+//!   known, accepted regressions.
+//!
+//! Parsing is strict: unknown keys, malformed numbers, out-of-range
+//! thresholds and unknown factor names are errors, not warnings — a
+//! typo in a CI policy must not silently gate nothing.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// What a violated check does to the pipeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    /// Record the violation, keep the gate green.
+    Warn,
+    /// Fail the gate (non-zero exit).
+    Fail,
+    /// Do not check at all (rule-level mute).
+    Off,
+}
+
+impl Severity {
+    pub fn id(&self) -> &'static str {
+        match self {
+            Severity::Warn => "warn",
+            Severity::Fail => "fail",
+            Severity::Off => "off",
+        }
+    }
+
+    fn parse(s: &str) -> Result<Severity> {
+        match s {
+            "warn" => Ok(Severity::Warn),
+            "fail" => Ok(Severity::Fail),
+            "off" => Ok(Severity::Off),
+            other => bail!("policy: unknown severity '{other}' (warn|fail|off)"),
+        }
+    }
+}
+
+/// POP factors a policy may set floors for (ids match
+/// `pages::timeseries::TimeSeries::metric`).
+pub const GATEABLE_FACTORS: &[&str] = &[
+    "parallel_efficiency",
+    "mpi_parallel_efficiency",
+    "mpi_load_balance",
+    "mpi_communication_efficiency",
+    "omp_parallel_efficiency",
+    "omp_load_balance",
+    "omp_scheduling_efficiency",
+    "omp_serialization_efficiency",
+    "ipc",
+    "frequency",
+];
+
+/// Fully-resolved thresholds for one `(experiment, config, region)`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Thresholds {
+    /// Maximum tolerated relative elapsed-time increase of the latest
+    /// run over the trailing-window baseline (0.15 = +15%).
+    pub max_elapsed_increase: f64,
+    /// Multiples of the window's stddev the change must also exceed
+    /// before it can fire (suppresses noise on jittery platforms).
+    pub noise_sigma: f64,
+    /// Minimum history points (after warm-up) to evaluate the
+    /// regression check at all; below this the check is *skipped*.
+    pub min_samples: usize,
+    /// History points discarded from the start of every series before
+    /// any statistics (ignore unstable early history).
+    pub warmup: usize,
+    /// Trailing-window size the baseline mean/stddev is computed over.
+    pub window: usize,
+    pub severity: Severity,
+    /// Absolute floors on the latest run's POP factors
+    /// (factor id -> minimum value).
+    pub min_factors: BTreeMap<String, f64>,
+}
+
+impl Default for Thresholds {
+    fn default() -> Thresholds {
+        Thresholds {
+            max_elapsed_increase: 0.15,
+            noise_sigma: 4.0,
+            min_samples: 3,
+            warmup: 0,
+            window: 4,
+            severity: Severity::Fail,
+            min_factors: BTreeMap::new(),
+        }
+    }
+}
+
+/// One `rules[]` entry: match patterns plus the fields it overrides.
+#[derive(Debug, Clone, Default)]
+pub struct RuleOverride {
+    pub experiment: String,
+    pub config: String,
+    pub region: String,
+    pub max_elapsed_increase: Option<f64>,
+    pub noise_sigma: Option<f64>,
+    pub min_samples: Option<usize>,
+    pub warmup: Option<usize>,
+    pub window: Option<usize>,
+    pub severity: Option<Severity>,
+    pub min_factors: BTreeMap<String, f64>,
+}
+
+impl RuleOverride {
+    fn matches(&self, exp: &str, cfg: &str, region: &str) -> bool {
+        pat_match(&self.experiment, exp)
+            && pat_match(&self.config, cfg)
+            && pat_match(&self.region, region)
+    }
+
+    fn apply(&self, t: &mut Thresholds) {
+        if let Some(v) = self.max_elapsed_increase {
+            t.max_elapsed_increase = v;
+        }
+        if let Some(v) = self.noise_sigma {
+            t.noise_sigma = v;
+        }
+        if let Some(v) = self.min_samples {
+            t.min_samples = v;
+        }
+        if let Some(v) = self.warmup {
+            t.warmup = v;
+        }
+        if let Some(v) = self.window {
+            t.window = v;
+        }
+        if let Some(v) = self.severity {
+            t.severity = v;
+        }
+        for (k, v) in &self.min_factors {
+            t.min_factors.insert(k.clone(), *v);
+        }
+    }
+}
+
+/// One `allow[]` entry: an accepted, known regression.
+#[derive(Debug, Clone)]
+pub struct AllowEntry {
+    pub experiment: String,
+    pub config: String,
+    pub region: String,
+    /// Commit-sha prefix the latest run must carry ("*" = any).
+    pub commit: String,
+    pub reason: String,
+}
+
+/// A parsed gate policy.
+#[derive(Debug, Clone)]
+pub struct GatePolicy {
+    /// Where the policy came from (file path or "built-in"), recorded
+    /// in the verdict so CI logs are self-explaining.
+    pub source: String,
+    pub defaults: Thresholds,
+    pub rules: Vec<RuleOverride>,
+    pub allow: Vec<AllowEntry>,
+}
+
+impl Default for GatePolicy {
+    fn default() -> GatePolicy {
+        GatePolicy {
+            source: "built-in".to_string(),
+            defaults: Thresholds::default(),
+            rules: Vec::new(),
+            allow: Vec::new(),
+        }
+    }
+}
+
+/// Exact match, `"*"`, or trailing-`*` prefix.
+fn pat_match(pat: &str, s: &str) -> bool {
+    if pat == "*" || pat == s {
+        return true;
+    }
+    match pat.strip_suffix('*') {
+        Some(prefix) => s.starts_with(prefix),
+        None => false,
+    }
+}
+
+const SETTING_KEYS: &[&str] = &[
+    "max_elapsed_increase",
+    "noise_sigma",
+    "min_samples",
+    "warmup",
+    "window",
+    "severity",
+    "min_parallel_efficiency",
+    "min_factors",
+];
+const MATCH_KEYS: &[&str] = &["experiment", "config", "region"];
+const ALLOW_KEYS: &[&str] =
+    &["experiment", "config", "region", "commit", "reason"];
+
+fn get_f64(obj: &Json, key: &str) -> Result<Option<f64>> {
+    match obj.get(key) {
+        None => Ok(None),
+        Some(v) => v
+            .as_f64()
+            .map(Some)
+            .with_context(|| format!("policy: '{key}' must be a number")),
+    }
+}
+
+fn get_usize(obj: &Json, key: &str) -> Result<Option<usize>> {
+    match obj.get(key) {
+        None => Ok(None),
+        Some(v) => v
+            .as_u64()
+            .map(|n| Some(n as usize))
+            .with_context(|| {
+                format!("policy: '{key}' must be a non-negative integer")
+            }),
+    }
+}
+
+/// A match/commit field must be an actual string: `str_or` defaults
+/// would silently widen a typo'd value (e.g. `"region": 5`) to `"*"`.
+fn get_str<'a>(obj: &'a Json, key: &str, default: &'a str) -> Result<&'a str> {
+    match obj.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .as_str()
+            .with_context(|| format!("policy: '{key}' must be a string")),
+    }
+}
+
+/// A section that is present must have the expected JSON shape —
+/// silently ignoring a mis-shaped `rules`/`allow`/`defaults` would
+/// gate nothing while CI stays green.
+fn get_arr<'a>(j: &'a Json, key: &str) -> Result<&'a [Json]> {
+    match j.get(key) {
+        None => Ok(&[]),
+        Some(v) => v
+            .as_arr()
+            .with_context(|| format!("policy: '{key}' must be an array")),
+    }
+}
+
+fn get_severity(obj: &Json) -> Result<Option<Severity>> {
+    match obj.get("severity") {
+        None => Ok(None),
+        Some(v) => {
+            let s = v
+                .as_str()
+                .context("policy: 'severity' must be a string")?;
+            Severity::parse(s).map(Some)
+        }
+    }
+}
+
+fn get_min_factors(obj: &Json) -> Result<BTreeMap<String, f64>> {
+    let mut out = BTreeMap::new();
+    if let Some(v) = get_f64(obj, "min_parallel_efficiency")? {
+        out.insert("parallel_efficiency".to_string(), v);
+    }
+    if let Some(mf) = obj.get("min_factors") {
+        let pairs = mf
+            .as_obj()
+            .context("policy: 'min_factors' must be an object")?;
+        for (factor, vj) in pairs {
+            if !GATEABLE_FACTORS.contains(&factor.as_str()) {
+                bail!(
+                    "policy: unknown factor '{factor}' in min_factors \
+                     (known: {})",
+                    GATEABLE_FACTORS.join(", ")
+                );
+            }
+            let v = vj.as_f64().with_context(|| {
+                format!("policy: min_factors.{factor} must be a number")
+            })?;
+            out.insert(factor.clone(), v);
+        }
+    }
+    Ok(out)
+}
+
+fn reject_unknown_keys(obj: &Json, allowed: &[&[&str]], what: &str) -> Result<()> {
+    if let Some(pairs) = obj.as_obj() {
+        for (k, _) in pairs {
+            if !allowed.iter().any(|set| set.contains(&k.as_str())) {
+                bail!("policy: unknown key '{k}' in {what}");
+            }
+        }
+    }
+    Ok(())
+}
+
+fn validate(t: &Thresholds, what: &str) -> Result<()> {
+    if !(t.max_elapsed_increase > 0.0) || !t.max_elapsed_increase.is_finite() {
+        bail!("policy: {what}: max_elapsed_increase must be > 0");
+    }
+    if !(t.noise_sigma >= 0.0) || !t.noise_sigma.is_finite() {
+        bail!("policy: {what}: noise_sigma must be >= 0");
+    }
+    if t.min_samples < 2 {
+        bail!("policy: {what}: min_samples must be >= 2 (need a baseline)");
+    }
+    if t.window < 1 {
+        bail!("policy: {what}: window must be >= 1");
+    }
+    Ok(())
+}
+
+impl GatePolicy {
+    /// Parse from JSON text; `source` labels the origin in the verdict.
+    pub fn parse(text: &str, source: &str) -> Result<GatePolicy> {
+        let j = Json::parse(text)
+            .map_err(|e| anyhow::anyhow!("policy {source}: {e}"))?;
+        reject_unknown_keys(
+            &j,
+            &[&["version", "defaults", "rules", "allow"]],
+            "policy root",
+        )?;
+        let version = j
+            .get("version")
+            .and_then(Json::as_u64)
+            .context("policy: missing or non-integer 'version'")?;
+        if version != 1 {
+            bail!("policy: unsupported version {version} (this build reads 1)");
+        }
+
+        let mut defaults = Thresholds::default();
+        if let Some(d) = j.get("defaults") {
+            if d.as_obj().is_none() {
+                bail!("policy: 'defaults' must be an object");
+            }
+            reject_unknown_keys(d, &[SETTING_KEYS], "defaults")?;
+            let over = parse_override(d, false)?;
+            over.apply(&mut defaults);
+        }
+        validate(&defaults, "defaults")?;
+
+        let mut rules = Vec::new();
+        for (i, rj) in get_arr(&j, "rules")?.iter().enumerate() {
+            reject_unknown_keys(
+                rj,
+                &[MATCH_KEYS, SETTING_KEYS],
+                &format!("rules[{i}]"),
+            )?;
+            if rj.as_obj().is_none() {
+                bail!("policy: rules[{i}] must be an object");
+            }
+            let rule = parse_override(rj, true)?;
+            // Cheap sanity: the rule must parse against the defaults.
+            let mut probe = defaults.clone();
+            rule.apply(&mut probe);
+            validate(&probe, &format!("rules[{i}]"))?;
+            rules.push(rule);
+        }
+
+        let mut allow = Vec::new();
+        for (i, aj) in get_arr(&j, "allow")?.iter().enumerate() {
+            if aj.as_obj().is_none() {
+                bail!("policy: allow[{i}] must be an object");
+            }
+            reject_unknown_keys(aj, &[ALLOW_KEYS], &format!("allow[{i}]"))?;
+            allow.push(AllowEntry {
+                experiment: get_str(aj, "experiment", "*")?.to_string(),
+                config: get_str(aj, "config", "*")?.to_string(),
+                region: get_str(aj, "region", "*")?.to_string(),
+                commit: get_str(aj, "commit", "*")?.to_string(),
+                reason: get_str(aj, "reason", "")?.to_string(),
+            });
+        }
+
+        Ok(GatePolicy {
+            source: source.to_string(),
+            defaults,
+            rules,
+            allow,
+        })
+    }
+
+    /// Read and parse a policy file.
+    pub fn from_file(path: &Path) -> Result<GatePolicy> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading policy {}", path.display()))?;
+        GatePolicy::parse(&text, &path.display().to_string())
+    }
+
+    /// Resolve the thresholds for one `(experiment, config, region)`:
+    /// defaults, then every matching rule in order.
+    pub fn effective(&self, exp: &str, cfg: &str, region: &str) -> Thresholds {
+        let mut t = self.defaults.clone();
+        for rule in &self.rules {
+            if rule.matches(exp, cfg, region) {
+                rule.apply(&mut t);
+            }
+        }
+        t
+    }
+
+    /// First allow-entry covering a firing check, if any.
+    pub fn allowed(
+        &self,
+        exp: &str,
+        cfg: &str,
+        region: &str,
+        commit: Option<&str>,
+    ) -> Option<&AllowEntry> {
+        self.allow.iter().find(|a| {
+            pat_match(&a.experiment, exp)
+                && pat_match(&a.config, cfg)
+                && pat_match(&a.region, region)
+                && (a.commit == "*"
+                    || commit
+                        .map(|c| c.starts_with(&a.commit))
+                        .unwrap_or(false))
+        })
+    }
+
+    /// A ready-to-commit starter policy (`talp-pages gate-init`).
+    pub fn example_json() -> &'static str {
+        r#"{
+  "version": 1,
+  "defaults": {
+    "max_elapsed_increase": 0.15,
+    "noise_sigma": 4.0,
+    "min_samples": 3,
+    "warmup": 0,
+    "window": 4,
+    "severity": "fail"
+  },
+  "rules": [
+    {
+      "region": "timestep",
+      "config": "*",
+      "max_elapsed_increase": 0.1,
+      "min_parallel_efficiency": 0.5
+    }
+  ],
+  "allow": []
+}
+"#
+    }
+}
+
+fn parse_override(obj: &Json, with_match: bool) -> Result<RuleOverride> {
+    let pat = |key| -> Result<String> {
+        if with_match {
+            get_str(obj, key, "*").map(str::to_string)
+        } else {
+            Ok("*".to_string())
+        }
+    };
+    Ok(RuleOverride {
+        experiment: pat("experiment")?,
+        config: pat("config")?,
+        region: pat("region")?,
+        max_elapsed_increase: get_f64(obj, "max_elapsed_increase")?,
+        noise_sigma: get_f64(obj, "noise_sigma")?,
+        min_samples: get_usize(obj, "min_samples")?,
+        warmup: get_usize(obj, "warmup")?,
+        window: get_usize(obj, "window")?,
+        severity: get_severity(obj)?,
+        min_factors: get_min_factors(obj)?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn example_parses_and_resolves() {
+        let p =
+            GatePolicy::parse(GatePolicy::example_json(), "example").unwrap();
+        assert_eq!(p.source, "example");
+        assert_eq!(p.rules.len(), 1);
+        // Default region untouched by the rule.
+        let t = p.effective("e", "2x8", "initialize");
+        assert_eq!(t.max_elapsed_increase, 0.15);
+        assert!(t.min_factors.is_empty());
+        // Rule region: tightened threshold + PE floor.
+        let t = p.effective("e", "2x8", "timestep");
+        assert_eq!(t.max_elapsed_increase, 0.1);
+        assert_eq!(t.min_factors.get("parallel_efficiency"), Some(&0.5));
+        assert_eq!(t.severity, Severity::Fail);
+    }
+
+    #[test]
+    fn later_rules_override_earlier() {
+        let p = GatePolicy::parse(
+            r#"{"version":1,"rules":[
+                {"region":"*","max_elapsed_increase":0.3},
+                {"region":"solve","max_elapsed_increase":0.05,
+                 "severity":"warn"}
+            ]}"#,
+            "t",
+        )
+        .unwrap();
+        assert_eq!(p.effective("e", "c", "other").max_elapsed_increase, 0.3);
+        let t = p.effective("e", "c", "solve");
+        assert_eq!(t.max_elapsed_increase, 0.05);
+        assert_eq!(t.severity, Severity::Warn);
+    }
+
+    #[test]
+    fn patterns_exact_star_and_prefix() {
+        assert!(pat_match("*", "anything"));
+        assert!(pat_match("solve", "solve"));
+        assert!(!pat_match("solve", "solver"));
+        assert!(pat_match("salpha/*", "salpha/resolution_1/mn5"));
+        assert!(!pat_match("salpha/*", "beta/resolution_1"));
+    }
+
+    #[test]
+    fn allow_matches_commit_prefix() {
+        let p = GatePolicy::parse(
+            r#"{"version":1,"allow":[
+                {"region":"init*","commit":"9dc04ca","reason":"known"}
+            ]}"#,
+            "t",
+        )
+        .unwrap();
+        assert!(p
+            .allowed("e", "2x8", "initialize", Some("9dc04ca1f00"))
+            .is_some());
+        assert!(p.allowed("e", "2x8", "initialize", Some("badc0ffee")).is_none());
+        assert!(p.allowed("e", "2x8", "initialize", None).is_none());
+        assert!(p.allowed("e", "2x8", "timestep", Some("9dc04ca")).is_none());
+    }
+
+    #[test]
+    fn strict_parsing_rejects_garbage() {
+        for (text, what) in [
+            ("{", "not json"),
+            (r#"{"version":2}"#, "bad version"),
+            (r#"{"rules":[]}"#, "missing version"),
+            (r#"{"version":1,"defaults":{"max_elapsed_increse":0.1}}"#, "typo key"),
+            (r#"{"version":1,"defaults":{"severity":"explode"}}"#, "bad severity"),
+            (r#"{"version":1,"defaults":{"min_samples":1}}"#, "min_samples"),
+            (r#"{"version":1,"defaults":{"max_elapsed_increase":0}}"#, "zero threshold"),
+            (r#"{"version":1,"defaults":{"window":0}}"#, "zero window"),
+            (r#"{"version":1,"defaults":{"min_factors":{"bogus":0.5}}}"#, "bad factor"),
+            (r#"{"version":1,"rules":[{"min_samples":-3}]}"#, "negative"),
+            (r#"{"version":1,"allow":[{"because":"x"}]}"#, "allow key"),
+            (r#"{"version":1,"extra":{}}"#, "root key"),
+            // Mis-shaped sections must error, not silently gate nothing.
+            (r#"{"version":1,"rules":{"region":"x"}}"#, "rules not array"),
+            (r#"{"version":1,"allow":{"region":"x"}}"#, "allow not array"),
+            (r#"{"version":1,"defaults":[]}"#, "defaults not object"),
+            (r#"{"version":1,"rules":["x"]}"#, "rule not object"),
+            // Non-string match fields must not widen to "*".
+            (r#"{"version":1,"rules":[{"region":5,"severity":"off"}]}"#,
+             "numeric region"),
+            (r#"{"version":1,"allow":[{"commit":1234567}]}"#,
+             "numeric commit"),
+        ] {
+            assert!(
+                GatePolicy::parse(text, "t").is_err(),
+                "should reject: {what}"
+            );
+        }
+    }
+
+    #[test]
+    fn min_factors_merge_across_rules() {
+        let p = GatePolicy::parse(
+            r#"{"version":1,
+                "defaults":{"min_parallel_efficiency":0.4},
+                "rules":[{"region":"solve",
+                          "min_factors":{"omp_load_balance":0.7}}]}"#,
+            "t",
+        )
+        .unwrap();
+        let t = p.effective("e", "c", "solve");
+        assert_eq!(t.min_factors.get("parallel_efficiency"), Some(&0.4));
+        assert_eq!(t.min_factors.get("omp_load_balance"), Some(&0.7));
+        // Non-matching region keeps only the default floor.
+        let t = p.effective("e", "c", "other");
+        assert_eq!(t.min_factors.len(), 1);
+    }
+
+    #[test]
+    fn default_policy_is_valid() {
+        let p = GatePolicy::default();
+        assert_eq!(p.source, "built-in");
+        validate(&p.defaults, "defaults").unwrap();
+    }
+}

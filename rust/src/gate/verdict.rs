@@ -1,0 +1,351 @@
+//! The gate's result model: one [`GateCheck`] per evaluated
+//! `(experiment, config, region, kind)`, rolled up into a
+//! [`GateVerdict`] with a single overall status and an exit code.
+//!
+//! Everything here is **deterministic**: no wall clock, no hostnames,
+//! no float formatting that depends on locale — the same scan and
+//! policy always produce byte-identical `gate.json` / `gate.md` /
+//! `gate.xml`, regardless of `--jobs` or cache temperature (the CI
+//! acceptance criterion).
+
+use crate::util::json::Json;
+
+use super::policy::Severity;
+
+/// Overall gate status (worst check outcome wins).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GateStatus {
+    Pass,
+    Warn,
+    Fail,
+}
+
+impl GateStatus {
+    pub fn id(&self) -> &'static str {
+        match self {
+            GateStatus::Pass => "pass",
+            GateStatus::Warn => "warn",
+            GateStatus::Fail => "fail",
+        }
+    }
+
+    /// Uppercase for log lines and markdown headers.
+    pub fn label(&self) -> &'static str {
+        match self {
+            GateStatus::Pass => "PASS",
+            GateStatus::Warn => "WARN",
+            GateStatus::Fail => "FAIL",
+        }
+    }
+}
+
+/// What a check measured.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CheckKind {
+    /// Latest elapsed time vs the trailing-window baseline.
+    ElapsedRegression,
+    /// Absolute floor on one POP factor of the latest run.
+    FactorFloor(String),
+}
+
+impl CheckKind {
+    pub fn id(&self) -> String {
+        match self {
+            CheckKind::ElapsedRegression => "elapsed_regression".to_string(),
+            CheckKind::FactorFloor(f) => format!("min_{f}"),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            CheckKind::ElapsedRegression => "elapsed regression".to_string(),
+            CheckKind::FactorFloor(f) => format!("{f} floor"),
+        }
+    }
+}
+
+/// Outcome of one check.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CheckOutcome {
+    Pass,
+    /// Violated a `severity: warn` rule.
+    Warn,
+    /// Violated a `severity: fail` rule.
+    Fail,
+    /// Violated, but covered by an `allow[]` entry.
+    Allowed,
+    /// Not evaluable (insufficient samples, muted rule, missing metric).
+    Skipped,
+}
+
+impl CheckOutcome {
+    pub fn id(&self) -> &'static str {
+        match self {
+            CheckOutcome::Pass => "pass",
+            CheckOutcome::Warn => "warn",
+            CheckOutcome::Fail => "fail",
+            CheckOutcome::Allowed => "allowed",
+            CheckOutcome::Skipped => "skipped",
+        }
+    }
+}
+
+/// One evaluated check.
+#[derive(Debug, Clone)]
+pub struct GateCheck {
+    pub experiment: String,
+    pub config: String,
+    pub region: String,
+    pub kind: CheckKind,
+    /// The policy severity that applied (even when the check passed).
+    pub severity: Severity,
+    pub outcome: CheckOutcome,
+    /// Regression: relative elapsed increase; floor: the factor value.
+    pub measured: f64,
+    /// Regression: `max_elapsed_increase`; floor: the minimum.
+    pub limit: f64,
+    /// Commit of the latest run in the series, when stamped.
+    pub commit: Option<String>,
+    /// Human one-liner with the numbers behind the outcome.
+    pub detail: String,
+    /// Reason of the matching allow entry (outcome == Allowed).
+    pub allowed_by: Option<String>,
+}
+
+/// Check tallies by outcome.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct GateCounts {
+    pub pass: usize,
+    pub warn: usize,
+    pub fail: usize,
+    pub allowed: usize,
+    pub skipped: usize,
+}
+
+impl GateCounts {
+    pub fn total(&self) -> usize {
+        self.pass + self.warn + self.fail + self.allowed + self.skipped
+    }
+}
+
+/// The rolled-up verdict.
+#[derive(Debug, Clone)]
+pub struct GateVerdict {
+    pub status: GateStatus,
+    pub policy_source: String,
+    pub counts: GateCounts,
+    pub checks: Vec<GateCheck>,
+}
+
+impl GateVerdict {
+    /// Roll checks up: any `Fail` fails the gate, else any `Warn`
+    /// makes it `Warn`, else `Pass` (allowed/skipped never gate).
+    pub fn from_checks(
+        policy_source: String,
+        checks: Vec<GateCheck>,
+    ) -> GateVerdict {
+        let mut counts = GateCounts::default();
+        for c in &checks {
+            match c.outcome {
+                CheckOutcome::Pass => counts.pass += 1,
+                CheckOutcome::Warn => counts.warn += 1,
+                CheckOutcome::Fail => counts.fail += 1,
+                CheckOutcome::Allowed => counts.allowed += 1,
+                CheckOutcome::Skipped => counts.skipped += 1,
+            }
+        }
+        let status = if counts.fail > 0 {
+            GateStatus::Fail
+        } else if counts.warn > 0 {
+            GateStatus::Warn
+        } else {
+            GateStatus::Pass
+        };
+        GateVerdict { status, policy_source, counts, checks }
+    }
+
+    /// Checks worth surfacing to a human (violations and allowlisted
+    /// violations) — the shared filter behind the markdown table, the
+    /// HTML index section and the CLI log, so the three surfaces can
+    /// never disagree about what is notable.
+    pub fn notable(&self) -> impl Iterator<Item = &GateCheck> {
+        self.checks.iter().filter(|c| {
+            matches!(
+                c.outcome,
+                CheckOutcome::Warn | CheckOutcome::Fail | CheckOutcome::Allowed
+            )
+        })
+    }
+
+    /// CI contract: 0 = pass (warnings included), 1 = fail.
+    pub fn exit_code(&self) -> i32 {
+        match self.status {
+            GateStatus::Fail => 1,
+            _ => 0,
+        }
+    }
+
+    /// One-line summary for CLI output and pipeline logs.
+    pub fn summary_line(&self) -> String {
+        format!(
+            "gate: {} — {} check(s): {} pass, {} warn, {} fail, \
+             {} allowed, {} skipped (policy: {})",
+            self.status.label(),
+            self.counts.total(),
+            self.counts.pass,
+            self.counts.warn,
+            self.counts.fail,
+            self.counts.allowed,
+            self.counts.skipped,
+            self.policy_source
+        )
+    }
+
+    /// The machine-readable `gate.json` document.
+    pub fn to_json(&self) -> Json {
+        let checks: Vec<Json> = self
+            .checks
+            .iter()
+            .map(|c| {
+                Json::from_pairs(vec![
+                    ("experiment", Json::Str(c.experiment.clone())),
+                    ("config", Json::Str(c.config.clone())),
+                    ("region", Json::Str(c.region.clone())),
+                    ("kind", Json::Str(c.kind.id())),
+                    ("severity", Json::Str(c.severity.id().to_string())),
+                    ("outcome", Json::Str(c.outcome.id().to_string())),
+                    ("measured", Json::Num(c.measured)),
+                    ("limit", Json::Num(c.limit)),
+                    (
+                        "commit",
+                        c.commit
+                            .clone()
+                            .map(Json::Str)
+                            .unwrap_or(Json::Null),
+                    ),
+                    ("detail", Json::Str(c.detail.clone())),
+                    (
+                        "allowed_by",
+                        c.allowed_by
+                            .clone()
+                            .map(Json::Str)
+                            .unwrap_or(Json::Null),
+                    ),
+                ])
+            })
+            .collect();
+        Json::from_pairs(vec![
+            ("version", Json::Num(1.0)),
+            ("status", Json::Str(self.status.id().to_string())),
+            ("policy", Json::Str(self.policy_source.clone())),
+            (
+                "counts",
+                Json::from_pairs(vec![
+                    ("pass", Json::Num(self.counts.pass as f64)),
+                    ("warn", Json::Num(self.counts.warn as f64)),
+                    ("fail", Json::Num(self.counts.fail as f64)),
+                    ("allowed", Json::Num(self.counts.allowed as f64)),
+                    ("skipped", Json::Num(self.counts.skipped as f64)),
+                ]),
+            ),
+            ("checks", Json::Arr(checks)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) fn check(
+        region: &str,
+        kind: CheckKind,
+        outcome: CheckOutcome,
+    ) -> GateCheck {
+        GateCheck {
+            experiment: "exp".into(),
+            config: "2x8".into(),
+            region: region.into(),
+            kind,
+            severity: Severity::Fail,
+            outcome,
+            measured: 0.5,
+            limit: 0.15,
+            commit: Some("abc12345".into()),
+            detail: "detail".into(),
+            allowed_by: None,
+        }
+    }
+
+    #[test]
+    fn rollup_and_exit_codes() {
+        let v = GateVerdict::from_checks(
+            "p".into(),
+            vec![
+                check("a", CheckKind::ElapsedRegression, CheckOutcome::Pass),
+                check("b", CheckKind::ElapsedRegression, CheckOutcome::Skipped),
+            ],
+        );
+        assert_eq!(v.status, GateStatus::Pass);
+        assert_eq!(v.exit_code(), 0);
+
+        let v = GateVerdict::from_checks(
+            "p".into(),
+            vec![
+                check("a", CheckKind::ElapsedRegression, CheckOutcome::Warn),
+                check("b", CheckKind::ElapsedRegression, CheckOutcome::Allowed),
+            ],
+        );
+        assert_eq!(v.status, GateStatus::Warn);
+        assert_eq!(v.exit_code(), 0, "warnings do not fail the pipeline");
+
+        let v = GateVerdict::from_checks(
+            "p".into(),
+            vec![
+                check("a", CheckKind::ElapsedRegression, CheckOutcome::Warn),
+                check("b", CheckKind::ElapsedRegression, CheckOutcome::Fail),
+            ],
+        );
+        assert_eq!(v.status, GateStatus::Fail);
+        assert_eq!(v.exit_code(), 1);
+        assert_eq!(v.counts.total(), 2);
+        assert!(v.summary_line().contains("gate: FAIL"));
+        assert!(v.summary_line().contains("1 fail"));
+    }
+
+    #[test]
+    fn json_shape() {
+        let v = GateVerdict::from_checks(
+            ".talp-gate.json".into(),
+            vec![check(
+                "solve",
+                CheckKind::FactorFloor("parallel_efficiency".into()),
+                CheckOutcome::Fail,
+            )],
+        );
+        let j = v.to_json();
+        assert_eq!(j.str_or("status", ""), "fail");
+        assert_eq!(j.str_or("policy", ""), ".talp-gate.json");
+        let c = &j.get("checks").unwrap().as_arr().unwrap()[0];
+        assert_eq!(c.str_or("kind", ""), "min_parallel_efficiency");
+        assert_eq!(c.str_or("outcome", ""), "fail");
+        assert_eq!(c.num_or("limit", 0.0), 0.15);
+        assert_eq!(c.str_or("commit", ""), "abc12345");
+        // Round-trips through the writer without loss.
+        let re = Json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(re.str_or("status", ""), "fail");
+    }
+
+    #[test]
+    fn kind_ids() {
+        assert_eq!(CheckKind::ElapsedRegression.id(), "elapsed_regression");
+        assert_eq!(
+            CheckKind::FactorFloor("omp_load_balance".into()).id(),
+            "min_omp_load_balance"
+        );
+        assert_eq!(
+            CheckKind::FactorFloor("ipc".into()).label(),
+            "ipc floor"
+        );
+    }
+}

@@ -19,6 +19,9 @@
 //!   report, SVG badges.
 //! * [`ci`] — an in-process GitLab-like CI engine (pipelines, artifact
 //!   zips, pages hosting) used to reproduce the paper's CI workflow.
+//! * [`gate`] — the regression gate: a declarative policy over the
+//!   metrics histories that turns detection into a CI pass/fail
+//!   verdict (`gate.json` + markdown + JUnit XML + exit code).
 //! * [`apps`] — workloads: the TeaLeaf CG mini-app (backed by the real
 //!   AOT-compiled Pallas kernel through [`runtime`]) and a GENE-X-like
 //!   app with the injectable scaling bug of Fig. 7.
@@ -55,6 +58,7 @@
 pub mod apps;
 pub mod cli;
 pub mod ci;
+pub mod gate;
 pub mod pages;
 pub mod pop;
 pub mod runtime;

@@ -43,6 +43,17 @@ pub fn render(label: &str, value_text: &str, color: &str) -> String {
     )
 }
 
+/// The regression-gate badge: overall verdict of the latest gate run.
+pub fn gate_badge(status: crate::gate::GateStatus) -> String {
+    use crate::gate::GateStatus;
+    let (text, color) = match status {
+        GateStatus::Pass => ("passing", "#4c1"),
+        GateStatus::Warn => ("warning", "#dfb317"),
+        GateStatus::Fail => ("failing", "#e05d44"),
+    };
+    render("perf gate", text, color)
+}
+
 /// The parallel-efficiency badge for one resource configuration.
 pub fn parallel_efficiency_badge(
     region: &str,
@@ -75,6 +86,17 @@ mod tests {
         assert!(svg.contains("PE timestep 8x56"));
         assert!(svg.contains("#4c1"));
         assert!(svg.trim_end().ends_with("</svg>"));
+    }
+
+    #[test]
+    fn gate_badge_states() {
+        use crate::gate::GateStatus;
+        let pass = gate_badge(GateStatus::Pass);
+        assert!(pass.contains("perf gate"));
+        assert!(pass.contains("passing"));
+        assert!(pass.contains("#4c1"));
+        assert!(gate_badge(GateStatus::Warn).contains("#dfb317"));
+        assert!(gate_badge(GateStatus::Fail).contains("failing"));
     }
 
     #[test]

@@ -8,7 +8,7 @@
 //!
 //! ```json
 //! {
-//!   "version": 1,
+//!   "version": 2,
 //!   "entries": {
 //!     "<path relative to scan root>": {
 //!       "hash": "<fnv1a-64 of the raw file bytes, hex>",
@@ -39,8 +39,13 @@ use crate::pop::RunMetrics;
 use crate::util::json::Json;
 
 /// Cache schema version; bump when `RunMetrics`' JSON shape changes
-/// (old caches are discarded wholesale, never migrated).
-pub const CACHE_VERSION: u64 = 1;
+/// (old caches are discarded wholesale, never migrated — `load`
+/// self-invalidates on any mismatch, older OR newer).
+///
+/// v2: reserved the schema for gate-era metadata (the regression gate
+/// consumes cached entries directly), so v1 caches written by pre-gate
+/// builds self-invalidate instead of being extended in place.
+pub const CACHE_VERSION: u64 = 2;
 
 /// Default cache file name inside the report output directory.
 pub const CACHE_FILE_NAME: &str = ".talp-cache.json";
@@ -219,9 +224,36 @@ mod tests {
         let bad = td.path().join("bad.json");
         std::fs::write(&bad, "{not json").unwrap();
         assert!(MetricsCache::load(&bad).is_empty());
-        // Version mismatch discards too.
+        // Version mismatch discards too — newer...
         std::fs::write(&bad, r#"{"version": 999, "entries": {}}"#).unwrap();
         assert!(MetricsCache::load(&bad).is_empty());
+        // ...and older: a pre-gate v1 cache self-invalidates wholesale.
+        std::fs::write(&bad, r#"{"version": 1, "entries": {}}"#).unwrap();
+        assert!(MetricsCache::load(&bad).is_empty());
+    }
+
+    #[test]
+    fn saved_cache_carries_current_version() {
+        let td = TempDir::new("cache-ver").unwrap();
+        let path = td.path().join(".talp-cache.json");
+        let mut c = MetricsCache::new();
+        c.insert("a.json", "aa", run_metrics("a.json", 1.0));
+        c.save(&path).unwrap();
+        let j = crate::util::json::Json::parse(
+            &std::fs::read_to_string(&path).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(j.num_or("version", 0.0) as u64, CACHE_VERSION);
+        assert_eq!(CACHE_VERSION, 2);
+        // The same file with entries reloads fine at v2...
+        assert_eq!(MetricsCache::load(&path).len(), 1);
+        // ...but stamped as v1 (a pre-gate cache) its entries are
+        // discarded wholesale, not migrated.
+        let text = std::fs::read_to_string(&path).unwrap();
+        let downgraded = text.replace("\"version\": 2", "\"version\": 1");
+        assert_ne!(text, downgraded, "version field must be present");
+        std::fs::write(&path, downgraded).unwrap();
+        assert!(MetricsCache::load(&path).is_empty());
     }
 
     #[test]

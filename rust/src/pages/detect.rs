@@ -86,6 +86,25 @@ const EXPLAIN_METRICS: &[(&str, &str)] = &[
     ("omp_serialization_efficiency", "OpenMP Serialization efficiency"),
 ];
 
+/// Shared noise-floor test (used by this detector and by
+/// `gate::engine`): does `after` escape the trailing window's noise?
+/// A window that is too short or perfectly flat cannot establish a
+/// noise floor, so the change counts as exceeding it.
+pub fn exceeds_noise_floor(window: &[f64], after: f64, sigma: f64) -> bool {
+    if window.len() < 2 {
+        return true;
+    }
+    let mean = crate::util::stats::mean(window);
+    let sd = {
+        let mut w = crate::util::stats::Welford::new();
+        for v in window {
+            w.push(*v);
+        }
+        w.stddev()
+    };
+    sd <= 0.0 || (after - mean).abs() >= sigma * sd
+}
+
 /// Scan one configuration's history (oldest first) for changes.
 pub fn detect(
     config: &str,
@@ -132,18 +151,7 @@ fn detect_region(
         let lo = i.saturating_sub(4);
         let window: Vec<f64> =
             elapsed[lo..i].iter().map(|(_, v)| *v).collect();
-        let mean = crate::util::stats::mean(&window);
-        let sd = {
-            let mut w = crate::util::stats::Welford::new();
-            for v in &window {
-                w.push(*v);
-            }
-            w.stddev()
-        };
-        if window.len() >= 2
-            && sd > 0.0
-            && (after - mean).abs() < opts.noise_gate * sd
-        {
+        if !exceeds_noise_floor(&window, after, opts.noise_gate) {
             continue; // within platform noise
         }
         let kind = if rel > 0.0 {
@@ -300,6 +308,143 @@ mod tests {
         let refs: Vec<&RunData> = runs.iter().collect();
         let findings = detect("2x14", &refs, &DetectOptions::default());
         assert!(findings.is_empty(), "{findings:?}");
+    }
+
+    // ---- explanation ranking on hand-built series ----
+    // The simulator tests above exercise end-to-end behaviour; these
+    // pin the *ranking* rule itself: the POP factor with the largest
+    // absolute movement wins, sub-0.05 movers are ignored, and ties
+    // resolve to the first metric in the hierarchy order.
+
+    use super::super::timeseries::{RegionPoint, TimePoint, TimeSeries};
+
+    fn point(
+        elapsed: f64,
+        factors: &[(&str, f64)],
+        commit: &str,
+        ts: i64,
+    ) -> TimePoint {
+        let get = |key: &str, default: f64| {
+            factors
+                .iter()
+                .find(|(k, _)| *k == key)
+                .map(|(_, v)| *v)
+                .unwrap_or(default)
+        };
+        TimePoint {
+            timestamp: ts,
+            commit: Some(commit.to_string()),
+            branch: Some("main".to_string()),
+            regions: vec![RegionPoint {
+                region: "solve".to_string(),
+                elapsed_s: elapsed,
+                useful_ipc: 2.0,
+                frequency_ghz: 2.5,
+                instructions: 1e9,
+                parallel_efficiency: get("parallel_efficiency", 0.8),
+                mpi_parallel_efficiency: get("mpi_parallel_efficiency", 0.9),
+                omp_parallel_efficiency: get("omp_parallel_efficiency", 0.9),
+                omp_load_balance: get("omp_load_balance", 0.9),
+                omp_scheduling_efficiency: get(
+                    "omp_scheduling_efficiency",
+                    0.95,
+                ),
+                omp_serialization_efficiency: get(
+                    "omp_serialization_efficiency",
+                    0.97,
+                ),
+                mpi_load_balance: get("mpi_load_balance", 0.92),
+                mpi_communication_efficiency: get(
+                    "mpi_communication_efficiency",
+                    0.94,
+                ),
+            }],
+        }
+    }
+
+    fn series_of(points: Vec<TimePoint>) -> TimeSeries {
+        TimeSeries { config: "2x8".to_string(), points }
+    }
+
+    #[test]
+    fn explanation_picks_largest_factor_movement() {
+        // Elapsed doubles with flat counters; two factors move, the
+        // OpenMP load balance by far the most.
+        let ts = series_of(vec![
+            point(
+                10.0,
+                &[("omp_load_balance", 0.90), ("mpi_load_balance", 0.92)],
+                "before00",
+                1000,
+            ),
+            point(
+                20.0,
+                &[("omp_load_balance", 0.50), ("mpi_load_balance", 0.82)],
+                "after000",
+                2000,
+            ),
+        ]);
+        let findings =
+            detect_series(&ts, "2x8", &DetectOptions::default());
+        assert_eq!(findings.len(), 1, "{findings:?}");
+        let f = &findings[0];
+        assert_eq!(f.kind, ChangeKind::Regression);
+        let (name, b, a) = f.explanation.as_ref().expect("explained");
+        assert_eq!(name, "OpenMP Load balance");
+        assert_eq!((*b, *a), (0.90, 0.50));
+    }
+
+    #[test]
+    fn explanation_ignores_sub_threshold_movers() {
+        // Every factor moves by < 0.05: the change stays unexplained
+        // even though elapsed fires.
+        let ts = series_of(vec![
+            point(10.0, &[("omp_load_balance", 0.90)], "before00", 1000),
+            point(20.0, &[("omp_load_balance", 0.87)], "after000", 2000),
+        ]);
+        let findings =
+            detect_series(&ts, "2x8", &DetectOptions::default());
+        assert_eq!(findings.len(), 1);
+        assert!(findings[0].explanation.is_none(), "{:?}", findings[0]);
+    }
+
+    #[test]
+    fn explanation_tie_breaks_on_hierarchy_order() {
+        // Two factors move by exactly the same delta; the strict
+        // greater-than keeps the first in EXPLAIN_METRICS order
+        // (MPI Load balance ranks before OpenMP Load balance).
+        let ts = series_of(vec![
+            point(
+                10.0,
+                &[("mpi_load_balance", 0.90), ("omp_load_balance", 0.90)],
+                "before00",
+                1000,
+            ),
+            point(
+                20.0,
+                &[("mpi_load_balance", 0.60), ("omp_load_balance", 0.60)],
+                "after000",
+                2000,
+            ),
+        ]);
+        let findings =
+            detect_series(&ts, "2x8", &DetectOptions::default());
+        assert_eq!(findings.len(), 1);
+        let (name, _, _) =
+            findings[0].explanation.as_ref().expect("explained");
+        assert_eq!(name, "MPI Load balance");
+    }
+
+    #[test]
+    fn noise_floor_helper_contract() {
+        // Short or flat windows cannot suppress.
+        assert!(exceeds_noise_floor(&[], 10.0, 4.0));
+        assert!(exceeds_noise_floor(&[10.0], 99.0, 4.0));
+        assert!(exceeds_noise_floor(&[10.0, 10.0, 10.0], 10.1, 4.0));
+        // A jittery window absorbs a change inside sigma * sd.
+        assert!(!exceeds_noise_floor(&[8.0, 12.0, 8.0, 12.0], 13.0, 4.0));
+        // ...but not one far outside it.
+        assert!(exceeds_noise_floor(&[8.0, 12.0, 8.0, 12.0], 30.0, 4.0));
     }
 
     #[test]

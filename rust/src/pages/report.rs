@@ -55,6 +55,12 @@ pub struct ReportOptions {
     /// The in-process CI engine points this at a path that outlives
     /// per-pipeline work directories.
     pub cache_path: Option<PathBuf>,
+    /// Regression-gate policy: when set, the scan the report just used
+    /// is also folded into a [`crate::gate::GateVerdict`] — written as
+    /// `gate.json`/`gate.md`/`gate.xml` next to the pages, rendered as
+    /// a `badges/gate.svg` badge and an index section, and returned in
+    /// [`ReportSummary::gate`].  No extra artifact parsing happens.
+    pub gate: Option<crate::gate::GatePolicy>,
 }
 
 /// What was generated.
@@ -68,6 +74,8 @@ pub struct ReportSummary {
     pub cache_hits: usize,
     /// Artifacts parsed + reduced this run.
     pub cache_misses: usize,
+    /// Regression-gate verdict (when [`ReportOptions::gate`] was set).
+    pub gate: Option<crate::gate::GateVerdict>,
 }
 
 /// One experiment's render product (built on a worker, written by the
@@ -93,6 +101,21 @@ pub fn generate(
     let scan = scanner::scan_metrics(input, &mut cache, opts.jobs)?;
     std::fs::create_dir_all(out_dir.join("badges"))
         .with_context(|| format!("creating {}", out_dir.display()))?;
+
+    // ---- regression gate (on the scan we already have) ----
+    let gate_verdict = opts
+        .gate
+        .as_ref()
+        .map(|policy| crate::gate::evaluate(&scan, policy));
+    let mut gate_badges = 0usize;
+    if let Some(v) = &gate_verdict {
+        crate::gate::write_outputs(v, out_dir)?;
+        std::fs::write(
+            out_dir.join("badges/gate.svg"),
+            badge::gate_badge(v.status),
+        )?;
+        gate_badges += 1;
+    }
 
     let rendered: Vec<RenderedExperiment> =
         parallel_map(&scan.experiments, opts.jobs, |exp| {
@@ -122,6 +145,39 @@ pub fn generate(
     }
 
     let mut index_body = String::from("<h1>TALP-Pages performance report</h1>\n");
+    if let Some(v) = &gate_verdict {
+        let cls = match v.status {
+            crate::gate::GateStatus::Pass => "gate-pass",
+            crate::gate::GateStatus::Warn => "gate-warn",
+            crate::gate::GateStatus::Fail => "gate-fail",
+        };
+        index_body.push_str(&format!(
+            "<div class=\"gate {cls}\"><b>Performance gate: {}</b> — {}\n",
+            v.status.label(),
+            esc(&v.summary_line())
+        ));
+        let notable: Vec<_> = v.notable().collect();
+        if !notable.is_empty() {
+            index_body.push_str("<ul>\n");
+            for c in notable {
+                index_body.push_str(&format!(
+                    "<li class=\"{}\">[{}] {} / {} / {} — {}</li>\n",
+                    c.outcome.id(),
+                    c.outcome.id().to_uppercase(),
+                    esc(&c.experiment),
+                    esc(&c.config),
+                    esc(&c.region),
+                    esc(&c.detail)
+                ));
+            }
+            index_body.push_str("</ul>\n");
+        }
+        index_body.push_str(
+            "<p><a href=\"gate.md\">gate.md</a> · \
+             <a href=\"gate.json\">gate.json</a> · \
+             <a href=\"gate.xml\">gate.xml</a></p></div>\n",
+        );
+    }
     if !scan.warnings.is_empty() {
         index_body.push_str("<div class=\"warn\"><b>Warnings:</b><ul>");
         for w in &scan.warnings {
@@ -145,10 +201,11 @@ pub fn generate(
     Ok(ReportSummary {
         experiments: scan.experiments.len(),
         pages_written: pages,
-        badges_written: badges,
+        badges_written: badges + gate_badges,
         warnings: scan.warnings,
         cache_hits: scan.cache_hits,
         cache_misses: scan.cache_misses,
+        gate: gate_verdict,
     })
 }
 
@@ -486,6 +543,43 @@ mod tests {
             std::fs::read_to_string(out.path().join("exp.html")).unwrap();
         assert!(page.contains("Scaling efficiency"));
         assert!(!page.contains("Time evolution"));
+    }
+
+    #[test]
+    fn gated_report_writes_verdict_badge_and_index_section() {
+        let td = TempDir::new("report-gate-in").unwrap();
+        let out = TempDir::new("report-gate-out").unwrap();
+        build_input(&td);
+        let opts = ReportOptions {
+            gate: Some(crate::gate::GatePolicy::default()),
+            ..Default::default()
+        };
+        let summary = generate(td.path(), out.path(), &opts).unwrap();
+        let verdict = summary.gate.as_ref().expect("verdict present");
+        // The fixture's history is a bug -> fix (an improvement), so
+        // the gate passes.
+        assert_eq!(verdict.status, crate::gate::GateStatus::Pass);
+        for f in ["gate.json", "gate.md", "gate.xml", "badges/gate.svg"] {
+            assert!(out.path().join(f).exists(), "{f} missing");
+        }
+        let index =
+            std::fs::read_to_string(out.path().join("index.html")).unwrap();
+        assert!(index.contains("Performance gate: PASS"));
+        assert!(index.contains("gate.json"));
+        let badge = std::fs::read_to_string(
+            out.path().join("badges/gate.svg"),
+        )
+        .unwrap();
+        assert!(badge.contains("perf gate"));
+        assert!(badge.contains("passing"));
+        // Ungated reports stay verdict-free.
+        let plain = generate(
+            td.path(),
+            TempDir::new("report-gate-out2").unwrap().path(),
+            &ReportOptions::default(),
+        )
+        .unwrap();
+        assert!(plain.gate.is_none());
     }
 
     #[test]

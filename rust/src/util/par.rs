@@ -9,12 +9,18 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
+/// Hard ceiling on explicit worker requests: the CLI rejects larger
+/// values up front (`cli::args::Args::get_jobs`), and library callers
+/// that bypass it are clamped here instead of spawning an absurd pool.
+pub const MAX_JOBS: usize = 512;
+
 /// Resolve a `--jobs` request: 0 means "auto" (available parallelism,
 /// capped at 16 — report workloads are IO + small-buffer CPU and stop
-/// scaling well past that).
+/// scaling well past that).  Explicit values are clamped to
+/// [`MAX_JOBS`].
 pub fn effective_jobs(jobs: usize) -> usize {
     if jobs > 0 {
-        jobs
+        jobs.min(MAX_JOBS)
     } else {
         std::thread::available_parallelism()
             .map(|p| p.get())
@@ -90,6 +96,10 @@ mod tests {
         assert_eq!(effective_jobs(3), 3);
         assert!(effective_jobs(0) >= 1);
         assert!(effective_jobs(0) <= 16);
+        // Absurd explicit requests clamp instead of spawning a
+        // machine-melting pool.
+        assert_eq!(effective_jobs(usize::MAX), MAX_JOBS);
+        assert_eq!(effective_jobs(MAX_JOBS), MAX_JOBS);
     }
 
     #[test]

@@ -1,0 +1,208 @@
+//! Acceptance tests for the regression-gate subsystem (ISSUE 2):
+//!
+//! * `talp gate` exits non-zero on an injected regression in a
+//!   synthetic history and zero on a clean one;
+//! * all three verdict artifacts (`gate.json`, `gate.md`, `gate.xml`)
+//!   are byte-identical across `--jobs` values and cache temperature;
+//! * `ci-report --gate` gates inline on the report's own (warm) scan.
+
+use std::path::Path;
+
+use talp_pages::cli;
+use talp_pages::talp::{GitMeta, ProcStats, RegionData, RunData};
+use talp_pages::util::fs::TempDir;
+
+/// Hand-built run with an exact elapsed time (no simulator noise).
+fn run(elapsed: f64, ts: i64, commit: &str) -> RunData {
+    let region = |name: &str, e: f64| RegionData {
+        name: name.into(),
+        elapsed_s: e,
+        visits: 1,
+        procs: (0..2)
+            .map(|r| ProcStats {
+                rank: r,
+                node: 0,
+                elapsed_s: e,
+                useful_s: e * 1.5,
+                mpi_s: 0.05 * e,
+                useful_instructions: 1_000_000,
+                useful_cycles: 500_000,
+                ..Default::default()
+            })
+            .collect(),
+    };
+    RunData {
+        dlb_version: "test".into(),
+        app: "gate-fixture".into(),
+        machine: "mn5".into(),
+        timestamp: ts,
+        ranks: 2,
+        threads: 2,
+        nodes: 1,
+        regions: vec![region("Global", elapsed), region("solve", elapsed * 0.6)],
+        git: Some(GitMeta {
+            commit: commit.into(),
+            branch: "main".into(),
+            commit_timestamp: ts,
+            message: String::new(),
+        }),
+    }
+}
+
+/// One experiment, one config, elapsed times as given (oldest first).
+fn build_history(root: &Path, elapsed: &[f64]) {
+    for (i, e) in elapsed.iter().enumerate() {
+        run(*e, 1000 + i as i64 * 100, &format!("commit{i:02}x"))
+            .write_file(&root.join(format!("exp/talp_2x2_run{i}.json")))
+            .unwrap();
+    }
+}
+
+fn run_cli(line: &str) -> anyhow::Result<i32> {
+    cli::main_with_args(
+        &line.split_whitespace().map(String::from).collect::<Vec<_>>(),
+    )
+}
+
+fn read(dir: &Path, name: &str) -> String {
+    std::fs::read_to_string(dir.join(name))
+        .unwrap_or_else(|e| panic!("{name}: {e}"))
+}
+
+#[test]
+fn gate_exits_nonzero_on_regression_zero_on_clean() {
+    let td = TempDir::new("gate-accept").unwrap();
+
+    let clean = td.path().join("clean");
+    build_history(&clean, &[10.0, 10.0, 10.0, 10.0]);
+    let clean_out = td.path().join("clean-gate");
+    let code = run_cli(&format!(
+        "gate --input {} --output {}",
+        clean.display(),
+        clean_out.display()
+    ))
+    .unwrap();
+    assert_eq!(code, 0, "clean history must pass");
+    assert!(read(&clean_out, "gate.json").contains("\"status\": \"pass\""));
+
+    let bad = td.path().join("regressed");
+    build_history(&bad, &[10.0, 10.0, 10.0, 16.0]);
+    let bad_out = td.path().join("bad-gate");
+    let code = run_cli(&format!(
+        "gate --input {} --output {}",
+        bad.display(),
+        bad_out.display()
+    ))
+    .unwrap();
+    assert_eq!(code, 1, "injected regression must fail the gate");
+    let json = read(&bad_out, "gate.json");
+    assert!(json.contains("\"status\": \"fail\""));
+    assert!(json.contains("\"commit\": \"commit03x\""));
+    let md = read(&bad_out, "gate.md");
+    assert!(md.contains("## TALP performance gate: **FAIL**"));
+    assert!(md.contains("+60.0%"));
+    let xml = read(&bad_out, "gate.xml");
+    assert!(xml.contains("<failure message="));
+    assert!(xml.contains("testsuite name=\"exp\""));
+}
+
+#[test]
+fn verdicts_byte_identical_across_jobs_and_cache_temperature() {
+    let td = TempDir::new("gate-determinism").unwrap();
+    let input = td.path().join("talp");
+    build_history(&input, &[10.0, 10.0, 10.0, 16.0]);
+
+    let out1 = td.path().join("gate-j1");
+    let out4 = td.path().join("gate-j4");
+    let cache = td.path().join("cache.json");
+    let code1 = run_cli(&format!(
+        "gate --input {} --output {} --jobs 1",
+        input.display(),
+        out1.display()
+    ))
+    .unwrap();
+    let code4 = run_cli(&format!(
+        "gate --input {} --output {} --jobs 4 --cache {}",
+        input.display(),
+        out4.display(),
+        cache.display()
+    ))
+    .unwrap();
+    assert_eq!(code1, 1);
+    assert_eq!(code4, 1);
+    for f in ["gate.json", "gate.md", "gate.xml"] {
+        assert_eq!(
+            read(&out1, f),
+            read(&out4, f),
+            "{f} differs between --jobs 1 and --jobs 4"
+        );
+    }
+
+    // Warm rerun through the cache: byte-identical again.
+    let out_warm = td.path().join("gate-warm");
+    run_cli(&format!(
+        "gate --input {} --output {} --jobs 2 --cache {}",
+        input.display(),
+        out_warm.display(),
+        cache.display()
+    ))
+    .unwrap();
+    for f in ["gate.json", "gate.md", "gate.xml"] {
+        assert_eq!(
+            read(&out1, f),
+            read(&out_warm, f),
+            "{f} differs between cold and warm cache"
+        );
+    }
+}
+
+#[test]
+fn ci_report_gates_inline() {
+    let td = TempDir::new("gate-inline").unwrap();
+    let input = td.path().join("talp");
+    build_history(&input, &[10.0, 10.0, 10.0, 16.0]);
+    let pol = td.path().join("policy.json");
+    std::fs::write(
+        &pol,
+        r#"{"version":1,"defaults":{"max_elapsed_increase":0.2}}"#,
+    )
+    .unwrap();
+    let site = td.path().join("public");
+    let code = run_cli(&format!(
+        "ci-report --input {} --output {} --gate {}",
+        input.display(),
+        site.display(),
+        pol.display()
+    ))
+    .unwrap();
+    assert_eq!(code, 1, "+60% elapsed must fail a 20% policy");
+    // The verdict triple and the badge land next to the pages.
+    for f in ["gate.json", "gate.md", "gate.xml", "badges/gate.svg",
+              "index.html"] {
+        assert!(site.join(f).exists(), "{f} missing");
+    }
+    assert!(read(&site, "index.html").contains("Performance gate: FAIL"));
+    assert!(read(&site, "badges/gate.svg").contains("failing"));
+
+    // An allowlist covering the offending commit turns it green.
+    std::fs::write(
+        &pol,
+        r#"{"version":1,
+            "defaults":{"max_elapsed_increase":0.2},
+            "allow":[{"region":"*","commit":"commit03x",
+                      "reason":"accepted: accuracy fix"}]}"#,
+    )
+    .unwrap();
+    let site2 = td.path().join("public2");
+    let code = run_cli(&format!(
+        "ci-report --input {} --output {} --gate {}",
+        input.display(),
+        site2.display(),
+        pol.display()
+    ))
+    .unwrap();
+    assert_eq!(code, 0, "allowlisted regression must not fail");
+    let json = read(&site2, "gate.json");
+    assert!(json.contains("\"outcome\": \"allowed\""));
+    assert!(json.contains("accepted: accuracy fix"));
+}

@@ -1,0 +1,74 @@
+//! Golden tests for the `init-ci` pipeline templates: the full
+//! rendered YAML (both flavors, including the gate job) is compared
+//! byte-for-byte against checked-in golden files, so any template
+//! drift shows up as a reviewable diff.
+//!
+//! To regenerate after an intentional change:
+//! `UPDATE_GOLDEN=1 cargo test --test templates_golden`
+
+use std::path::PathBuf;
+
+use talp_pages::ci::{templates, MatrixSpec};
+
+fn golden_path(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/golden")
+        .join(name)
+}
+
+fn check(name: &str, got: &str) {
+    let path = golden_path(name);
+    if std::env::var_os("UPDATE_GOLDEN").is_some() {
+        std::fs::write(&path, got).unwrap();
+        return;
+    }
+    let want = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("missing golden {name}: {e}"));
+    assert_eq!(
+        got, want,
+        "template drift for {name}; if intentional, regenerate with \
+         UPDATE_GOLDEN=1 cargo test --test templates_golden"
+    );
+}
+
+fn render_gitlab() -> String {
+    templates::gitlab_ci_yaml(
+        &MatrixSpec::performance_cpu_fast(),
+        &["initialize", "timestep"],
+        "timestep",
+        ".talp-gate.json",
+    )
+}
+
+fn render_github() -> String {
+    templates::github_actions_yaml(
+        &MatrixSpec::performance_cpu_fast(),
+        &["initialize", "timestep"],
+        "timestep",
+        ".talp-gate.json",
+    )
+}
+
+#[test]
+fn gitlab_template_matches_golden() {
+    let y = render_gitlab();
+    // Structural anchors first (clearer failures than a full diff).
+    assert!(y.contains("stages: [performance, deploy, gate]"));
+    assert!(y.contains("talp-gate:"));
+    assert!(y.contains("junit: gate/gate.xml"));
+    check("gitlab-ci.yml", &y);
+}
+
+#[test]
+fn github_template_matches_golden() {
+    let y = render_github();
+    assert!(y.contains("talp-gate:"));
+    assert!(y.contains("talp-pages gate --input talp"));
+    check("github-actions.yml", &y);
+}
+
+#[test]
+fn templates_render_reproducibly() {
+    assert_eq!(render_gitlab(), render_gitlab());
+    assert_eq!(render_github(), render_github());
+}

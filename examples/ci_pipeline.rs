@@ -16,9 +16,10 @@
 //! Run with: `make artifacts && cargo run --release --example ci_pipeline`
 
 use talp_pages::apps::TeaLeaf;
-use talp_pages::ci::{CiEngine, MatrixSpec, Repo};
-use talp_pages::pages::{scan, timeseries, ReportOptions};
+use talp_pages::ci::{CiEngine, MatrixSpec, PipelineOptions, Repo};
+use talp_pages::pages::{scan, timeseries};
 use talp_pages::runtime::{calibrate, Registry};
+use talp_pages::session::AnalyzeOptions;
 use talp_pages::sim::{MachineSpec, ResourceConfig};
 use talp_pages::tools::{self, ToolKind};
 use talp_pages::util::fs::TempDir;
@@ -61,9 +62,12 @@ fn main() -> anyhow::Result<()> {
         machine_tags: vec!["mn5".into(), "raven".into()],
     }
     .expand();
-    let opts = ReportOptions {
-        regions: vec!["initialize".into(), "timestep".into()],
-        region_for_badge: Some("timestep".into()),
+    let opts = PipelineOptions {
+        analyze: AnalyzeOptions {
+            regions: vec!["initialize".into(), "timestep".into()],
+            region_for_badge: Some("timestep".into()),
+            ..Default::default()
+        },
         ..Default::default()
     };
     let mut engine = CiEngine::new(root.path())?;

@@ -3,14 +3,15 @@
 //! 1. Run the TeaLeaf CG mini-app under TALP at two resource
 //!    configurations (a strong-scaling experiment).
 //! 2. Organize the TALP JSONs into the Fig. 2 folder structure.
-//! 3. Point `talp ci-report` at the folder and get the HTML report,
-//!    scaling-efficiency table and badges.
+//! 3. Point the staged Session pipeline at the folder and get the HTML
+//!    report, scaling-efficiency table and badges.
 //!
 //! Run with: `cargo run --release --example quickstart`
 
 use talp_pages::apps::{run_with_talp, TeaLeaf};
-use talp_pages::pages::{self, ReportOptions};
+use talp_pages::pages;
 use talp_pages::pop;
+use talp_pages::session::{self, AnalyzeOptions, Session};
 use talp_pages::sim::{MachineSpec, ResourceConfig};
 use talp_pages::util::timefmt;
 
@@ -49,12 +50,12 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    // 3. Report generation (`talp ci-report -i talp_folder -o report`).
-    let summary = pages::generate(
-        &out_root.join("talp_folder"),
-        &report_dir,
-        &ReportOptions::default(),
-    )?;
+    // 3. Report generation (`talp-pages report -i talp_folder -o report`):
+    //    scan -> analyze -> emit the full site + report.json.
+    let summary = Session::new(out_root.join("talp_folder"))
+        .scan()?
+        .analyze(&AnalyzeOptions::default())
+        .emit(&mut session::default_emitters(&report_dir))?;
     println!(
         "\nreport: {} experiment(s), {} page(s), {} badge(s)\nopen {}",
         summary.experiments,

@@ -6,8 +6,9 @@
 //! `cargo run --release --example scaling_study`
 
 use talp_pages::apps::{run_with_talp, MpiStencil, TeaLeaf};
-use talp_pages::pages::{self, ReportOptions};
+use talp_pages::pages;
 use talp_pages::pop;
+use talp_pages::session::{self, AnalyzeOptions, Session};
 use talp_pages::sim::{MachineSpec, ResourceConfig};
 
 fn tealeaf(grid: u64) -> TeaLeaf {
@@ -82,8 +83,10 @@ fn main() -> anyhow::Result<()> {
 
     // And the full report for browsing.
     let out = root.join("report");
-    let summary =
-        pages::generate(&folder, &out, &ReportOptions::default())?;
+    let summary = Session::new(&folder)
+        .scan()?
+        .analyze(&AnalyzeOptions::default())
+        .emit(&mut session::default_emitters(&out))?;
     println!(
         "report: {} experiments -> {}",
         summary.experiments,

@@ -4,9 +4,10 @@
 //! Global), a flat `timestep`, flat computation counters, and the
 //! OpenMP serialization efficiency as the explaining factor.
 
-use talp_pages::ci::{CiEngine, MatrixSpec, Repo};
-use talp_pages::pages::{scan, ReportOptions};
+use talp_pages::ci::{CiEngine, MatrixSpec, PipelineOptions, Repo};
+use talp_pages::pages::scan;
 use talp_pages::pages::timeseries;
+use talp_pages::session::AnalyzeOptions;
 use talp_pages::util::bench::Table;
 use talp_pages::util::fs::TempDir;
 
@@ -22,9 +23,12 @@ fn main() {
         machine_tags: vec!["mn5".into()],
     }
     .expand();
-    let opts = ReportOptions {
-        regions: vec!["initialize".into(), "timestep".into()],
-        region_for_badge: Some("timestep".into()),
+    let opts = PipelineOptions {
+        analyze: AnalyzeOptions {
+            regions: vec!["initialize".into(), "timestep".into()],
+            region_for_badge: Some("timestep".into()),
+            ..Default::default()
+        },
         ..Default::default()
     };
     let mut engine = CiEngine::new(td.path()).unwrap();

@@ -8,7 +8,7 @@
 //! Before/after numbers live in EXPERIMENTS.md §Perf.
 
 use talp_pages::apps::{self, run_with_talp, CodeVersion, Genex, TeaLeaf};
-use talp_pages::pages::{self, ReportOptions};
+use talp_pages::session::{self, AnalyzeOptions, Session};
 use talp_pages::sim::{MachineSpec, ResourceConfig};
 use talp_pages::talp::{GitMeta, RunData};
 use talp_pages::tools::postprocess::{dimemas, merge};
@@ -93,12 +93,20 @@ fn main() {
     // under CI resource budgets).
     let out = TempDir::new("perf-out").unwrap();
     let cache_file = out.path().join(".talp-cache.json");
-    let opts_jobs = |jobs: usize| ReportOptions { jobs, ..Default::default() };
+    let generate = |jobs: usize| {
+        Session::new(td.path())
+            .jobs(jobs)
+            .cache(&cache_file)
+            .scan()
+            .unwrap()
+            .analyze(&AnalyzeOptions::default())
+            .emit(&mut session::default_emitters(out.path()))
+            .unwrap()
+    };
 
     let m_jobs1 = bench("report: 500-run corpus cold, --jobs 1", 0, 3, || {
         let _ = std::fs::remove_file(&cache_file);
-        let s = pages::generate(td.path(), out.path(), &opts_jobs(1))
-            .unwrap();
+        let s = generate(1);
         assert_eq!(s.cache_hits, 0, "cache must be cold");
         std::hint::black_box(s.pages_written);
     });
@@ -106,16 +114,14 @@ fn main() {
 
     let m_cold = bench("report: 500-run corpus cold, --jobs auto", 0, 3, || {
         let _ = std::fs::remove_file(&cache_file);
-        let s = pages::generate(td.path(), out.path(), &opts_jobs(0))
-            .unwrap();
+        let s = generate(0);
         assert_eq!(s.cache_misses, 500, "corpus must fully parse");
         std::hint::black_box(s.pages_written);
     });
     println!("{}", m_cold.report());
 
     let m_warm = bench("report: 500-run corpus warm cache", 1, 5, || {
-        let s = pages::generate(td.path(), out.path(), &opts_jobs(0))
-            .unwrap();
+        let s = generate(0);
         assert_eq!(s.cache_misses, 0, "warm run must parse nothing");
         std::hint::black_box(s.pages_written);
     });

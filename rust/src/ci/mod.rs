@@ -13,4 +13,4 @@ pub mod templates;
 pub use artifacts::ArtifactStore;
 pub use pipeline::{MatrixSpec, PerformanceJob};
 pub use repo::{Commit, Repo};
-pub use runner::{CiEngine, PipelineResult};
+pub use runner::{CiEngine, PipelineOptions, PipelineResult};

@@ -7,11 +7,12 @@
 //! 2. `talp metadata` stamps git info into the fresh JSONs;
 //! 3. the accumulating job downloads the previous pipeline's `talp`
 //!    artifact, unzips it and copies it over (history merge);
-//! 4. `talp ci-report` regenerates the HTML report into `public/talp`;
-//!    when the report options carry a gate policy, the regression gate
-//!    evaluates the freshly scanned history in the same stage and its
-//!    verdict lands in [`PipelineResult::gate`] (the pipeline fails by
-//!    verdict, not by abort — later commits keep running, like CI);
+//! 4. the report stage routes through the staged [`crate::session`]
+//!    pipeline — scan (through the engine-root metrics cache), analyze,
+//!    and emit the full site plus `report.json` into `public/talp`;
+//!    when the pipeline options carry a gate policy, the verdict lands
+//!    in [`PipelineResult::gate`] (the pipeline fails by verdict, not
+//!    by abort — later commits keep running, like CI);
 //! 5. both `talp/` (for the next pipeline) and `public/` (for pages
 //!    hosting) are uploaded as artifacts, and `public/` is published.
 //!
@@ -23,7 +24,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{Context, Result};
 
 use crate::apps::{run_with_talp, Genex};
-use crate::pages::{self, ReportOptions};
+use crate::session::{AnalyzeOptions, EmitSummary, Session};
 use crate::sim::MachineSpec;
 use crate::talp::RunData;
 use crate::util::timefmt;
@@ -41,13 +42,23 @@ pub struct CiEngine {
     next_pipeline: u64,
 }
 
+/// Per-pipeline report options: what to analyze and how wide the
+/// worker pool is.  The metrics cache always lives at the engine root
+/// (it must outlive per-pipeline work directories).
+#[derive(Debug, Clone, Default)]
+pub struct PipelineOptions {
+    pub analyze: AnalyzeOptions,
+    /// Worker threads for the scan/analyze stages (0 = auto).
+    pub jobs: usize,
+}
+
 #[derive(Debug)]
 pub struct PipelineResult {
     pub pipeline_id: u64,
     pub commit_short: String,
     pub jobs_run: usize,
     pub history_files: u64,
-    pub report: pages::ReportSummary,
+    pub report: EmitSummary,
     pub talp_artifact_bytes: u64,
     pub wall_time_s: f64,
 }
@@ -95,7 +106,7 @@ impl CiEngine {
         &mut self,
         commit: &Commit,
         jobs: &[PerformanceJob],
-        report_opts: &ReportOptions,
+        opts: &PipelineOptions,
     ) -> Result<PipelineResult> {
         let t0 = std::time::Instant::now();
         let id = self.next_pipeline;
@@ -148,18 +159,19 @@ impl CiEngine {
             copy_missing(&scratch, &talp_dir)?;
         }
 
-        // ---- talp ci-report ----
+        // ---- report stage (scan -> analyze -> emit) ----
         // The metrics cache lives at the engine root (not in the
-        // per-pipeline work dir), so pipeline N's report serves every
+        // per-pipeline work dir), so pipeline N's scan serves every
         // history artifact carried over from pipeline N-1 out of the
         // cache and only parses the fresh matrix-job files.
         let public = work.join("public/talp");
         std::fs::create_dir_all(&public)?;
-        let mut opts = report_opts.clone();
-        if opts.cache_path.is_none() {
-            opts.cache_path = Some(self.root.join("talp-cache.json"));
-        }
-        let report = pages::generate(&talp_dir, &public, &opts)?;
+        let report = Session::new(&talp_dir)
+            .jobs(opts.jobs)
+            .cache(self.root.join("talp-cache.json"))
+            .scan()?
+            .analyze(&opts.analyze)
+            .emit(&mut crate::session::default_emitters(&public))?;
 
         // ---- artifacts + pages publish ----
         let talp_artifact_bytes = self.store.upload(id, "talp", &talp_dir)?;
@@ -251,9 +263,12 @@ mod tests {
         let mut engine = CiEngine::new(td.path()).unwrap();
         let repo = Repo::genex_history(3, 2, 1, 1_700_000_000);
         let jobs = small_jobs();
-        let opts = ReportOptions {
-            regions: vec!["initialize".into(), "timestep".into()],
-            region_for_badge: Some("timestep".into()),
+        let opts = PipelineOptions {
+            analyze: AnalyzeOptions {
+                regions: vec!["initialize".into(), "timestep".into()],
+                region_for_badge: Some("timestep".into()),
+                ..Default::default()
+            },
             ..Default::default()
         };
 
@@ -261,6 +276,11 @@ mod tests {
             .run_pipeline(&repo.commits[0], &jobs, &opts)
             .unwrap();
         assert_eq!(r0.jobs_run, 2);
+        // The emitted site carries the machine-readable report too.
+        assert!(engine
+            .pages_dir()
+            .join("talp/report.json")
+            .exists());
         assert_eq!(r0.history_files, 0);
         assert_eq!(r0.report.experiments, 1); // salpha/resolution_1/mn5
         assert_eq!(r0.report.cache_hits, 0);
@@ -307,10 +327,13 @@ mod tests {
         let repo = Repo::genex_history(5, 0, 3, 1_700_000_000)
             .with_regression(4, 5, 1.8);
         let jobs = small_jobs();
-        let opts = ReportOptions {
-            regions: vec!["initialize".into(), "timestep".into()],
-            region_for_badge: Some("timestep".into()),
-            gate: Some(crate::gate::GatePolicy::default()),
+        let opts = PipelineOptions {
+            analyze: AnalyzeOptions {
+                regions: vec!["initialize".into(), "timestep".into()],
+                region_for_badge: Some("timestep".into()),
+                gate: Some(crate::gate::GatePolicy::default()),
+                ..Default::default()
+            },
             ..Default::default()
         };
         let mut results = Vec::new();

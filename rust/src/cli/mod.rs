@@ -1,7 +1,9 @@
-//! The `talp-pages` command-line interface.
+//! The `talp-pages` command-line interface — a thin consumer of the
+//! staged [`crate::session`] pipeline.
 //!
 //! Subcommands mirror the paper's tooling:
-//! * `ci-report`  — Fig. 2 folder -> static HTML report (+ badges).
+//! * `report` (alias `ci-report`) — Fig. 2 folder -> report site;
+//!   `--format json|html|all` picks the emitter set.
 //! * `metadata`   — stamp git metadata into fresh TALP JSONs (Fig. 6).
 //! * `run`        — run a workload under TALP on the simulator, emitting
 //!   a TALP JSON (the "performance job" of Fig. 5).
@@ -20,9 +22,13 @@ use anyhow::{bail, Context, Result};
 
 use crate::apps::{self, Workload};
 use crate::ci;
-use crate::gate::{self, GatePolicy};
-use crate::pages::{self, MetricsCache, ReportOptions};
+use crate::gate::GatePolicy;
+use crate::pages;
 use crate::pop;
+use crate::session::{
+    AnalyzeOptions, Badges, Emitter, GateFiles, HtmlSite, JsonReport,
+    Session,
+};
 use crate::sim::{MachineSpec, ResourceConfig};
 use crate::tools;
 use crate::util::timefmt;
@@ -33,9 +39,10 @@ pub const USAGE: &str = "\
 talp-pages — continuous performance monitoring (TALP-Pages reproduction)
 
 USAGE:
-  talp-pages ci-report --input <dir> --output <dir>
-             [--regions <r>...] [--region-for-badge <r>]
-             [--jobs <n>] [--cache <file>] [--gate <policy.json>]
+  talp-pages report --input <dir> --output <dir>
+             [--format json|html|all] [--regions <r>...]
+             [--region-for-badge <r>] [--jobs <n>] [--cache <file>]
+             [--gate <policy.json>]      (alias: ci-report)
   talp-pages gate --input <dir> [--policy <policy.json>]
              [--output <dir>] [--jobs <n>] [--cache <file>]
              (exit 0 = pass/warn, 1 = fail)
@@ -64,7 +71,7 @@ pub fn main_with_args(argv: &[String]) -> Result<i32> {
         return Ok(2);
     };
     match cmd {
-        "ci-report" => ci_report(&args),
+        "report" | "ci-report" => ci_report(&args),
         "gate" => gate_cmd(&args),
         "gate-init" => gate_init(&args),
         "metadata" => metadata(&args),
@@ -85,33 +92,60 @@ pub fn main_with_args(argv: &[String]) -> Result<i32> {
     }
 }
 
+/// Emitter set for `--format` rooted at `out`: `html` is the site
+/// (pages + badges + gate files), `json` is `report.json` only, `all`
+/// is both.
+fn emitters_for(format: &str, out: &Path) -> Result<Vec<Box<dyn Emitter>>> {
+    Ok(match format {
+        "html" => vec![
+            Box::new(HtmlSite::new(out)) as Box<dyn Emitter>,
+            Box::new(Badges::new(out)),
+            Box::new(GateFiles::new(out)),
+        ],
+        "json" => vec![Box::new(JsonReport::new(out)) as Box<dyn Emitter>],
+        "all" => crate::session::default_emitters(out),
+        other => bail!("unknown --format '{other}' (json|html|all)"),
+    })
+}
+
 fn ci_report(args: &Args) -> Result<i32> {
     let input = PathBuf::from(args.require("input")?);
     let output = PathBuf::from(args.require("output")?);
-    let opts = ReportOptions {
+    let format = args.get("format").unwrap_or("all");
+    let mut emitters = emitters_for(format, &output)?;
+    let cache = args
+        .get("cache")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| output.join(pages::cache::CACHE_FILE_NAME));
+    let opts = AnalyzeOptions {
         regions: args
             .get_all("regions")
             .iter()
             .map(|s| s.to_string())
             .collect(),
         region_for_badge: args.get("region-for-badge").map(str::to_string),
-        jobs: args.get_jobs()?,
-        cache_path: args.get("cache").map(PathBuf::from),
         gate: args
             .get("gate")
             .map(|p| GatePolicy::from_file(Path::new(p)))
             .transpose()?,
+        ..Default::default()
     };
-    let summary = pages::generate(&input, &output, &opts)?;
+    let summary = Session::new(&input)
+        .jobs(args.get_jobs()?)
+        .cache(cache)
+        .scan()?
+        .analyze(&opts)
+        .emit(&mut emitters)?;
     for w in &summary.warnings {
         eprintln!("warning: {w}");
     }
     println!(
-        "report: {} experiment(s), {} page(s), {} badge(s) -> {} \
-         (cache: {} hit(s), {} parse(s))",
+        "report: {} experiment(s), {} page(s), {} badge(s), {} file(s) \
+         -> {} (cache: {} hit(s), {} parse(s))",
         summary.experiments,
         summary.pages_written,
         summary.badges_written,
+        summary.files_written,
         output.display(),
         summary.cache_hits,
         summary.cache_misses
@@ -133,28 +167,25 @@ fn gate_cmd(args: &Args) -> Result<i32> {
         Some(p) => GatePolicy::from_file(Path::new(p))?,
         None => GatePolicy::default(),
     };
-    let jobs = args.get_jobs()?;
-    let cache_path = args.get("cache").map(PathBuf::from);
-    let mut cache = cache_path
-        .as_deref()
-        .map(MetricsCache::load)
-        .unwrap_or_default();
-    let scan = pages::scan_metrics(&input, &mut cache, jobs)?;
-    for w in &scan.warnings {
+    let analysis = Session::new(&input)
+        .jobs(args.get_jobs()?)
+        .cache_opt(args.get("cache").map(PathBuf::from))
+        .scan()?
+        .analyze(&AnalyzeOptions { gate: Some(policy), ..Default::default() });
+    for w in &analysis.warnings {
         eprintln!("warning: {w}");
     }
-    if let Some(p) = &cache_path {
-        cache.save(p)?;
-    }
-    let verdict = gate::evaluate(&scan, &policy);
     if let Some(out) = args.get("output") {
         let dir = PathBuf::from(out);
-        gate::write_outputs(&verdict, &dir)?;
+        let mut emitters: Vec<Box<dyn Emitter>> =
+            vec![Box::new(GateFiles::new(&dir))];
+        analysis.emit(&mut emitters)?;
         println!(
             "wrote {}/gate.json, gate.md, gate.xml",
             dir.display()
         );
     }
+    let verdict = analysis.gate.as_ref().expect("gate policy was set");
     println!("{}", verdict.summary_line());
     for c in verdict.notable() {
         println!(
@@ -346,17 +377,19 @@ fn ci_sim(args: &Args) -> Result<i32> {
         machine_tags: vec!["mn5".into()],
     }
     .expand();
-    let opts = ReportOptions {
-        regions: vec!["initialize".into(), "timestep".into()],
-        region_for_badge: Some("timestep".into()),
+    let opts = ci::PipelineOptions {
+        analyze: AnalyzeOptions {
+            regions: vec!["initialize".into(), "timestep".into()],
+            region_for_badge: Some("timestep".into()),
+            // The sim always runs the gate stage — pipelines record a
+            // verdict like real CI would (--gate overrides the policy).
+            gate: Some(match args.get("gate") {
+                Some(p) => GatePolicy::from_file(Path::new(p))?,
+                None => GatePolicy::default(),
+            }),
+            ..Default::default()
+        },
         jobs: args.get_jobs()?,
-        // The sim always runs the gate stage — pipelines record a
-        // verdict like real CI would (--gate overrides the policy).
-        gate: Some(match args.get("gate") {
-            Some(p) => GatePolicy::from_file(Path::new(p))?,
-            None => GatePolicy::default(),
-        }),
-        ..Default::default()
     };
     let mut engine = ci::CiEngine::new(&out)?;
     let mut failed_pipelines = 0usize;
@@ -635,9 +668,74 @@ mod tests {
             0
         );
         assert!(out.join("index.html").exists());
+        assert!(
+            out.join("report.json").exists(),
+            "default format emits the machine-readable report too"
+        );
         let table = print_folder_table(&td.path().join("talp"), "Global")
             .unwrap();
         assert!(table.contains("Parallel efficiency"));
+    }
+
+    #[test]
+    fn report_format_selects_emitters() {
+        let td = TempDir::new("cli-format").unwrap();
+        let input = td.path().join("talp");
+        for i in 0..2 {
+            assert_eq!(
+                run_cli(&format!(
+                    "run --app genex --machine mn5 --config 2x4 \
+                     --timesteps 2 --seed {} --output {}",
+                    70 + i,
+                    input.join(format!("exp/run_{i}.json")).display()
+                ))
+                .unwrap(),
+                0
+            );
+        }
+        // --format json: only the machine-readable report.
+        let json_out = td.path().join("json");
+        assert_eq!(
+            run_cli(&format!(
+                "report --input {} --output {} --format json",
+                input.display(),
+                json_out.display()
+            ))
+            .unwrap(),
+            0
+        );
+        assert!(json_out.join("report.json").exists());
+        assert!(!json_out.join("index.html").exists());
+        assert!(!json_out.join("badges").exists());
+        let doc = crate::session::ReportDocument::parse(
+            &std::fs::read_to_string(json_out.join("report.json")).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(doc.experiments.len(), 1);
+
+        // --format html: the site without report.json.
+        let html_out = td.path().join("html");
+        assert_eq!(
+            run_cli(&format!(
+                "report --input {} --output {} --format html",
+                input.display(),
+                html_out.display()
+            ))
+            .unwrap(),
+            0
+        );
+        assert!(html_out.join("index.html").exists());
+        assert!(!html_out.join("report.json").exists());
+
+        // An unknown format is a clear error.
+        let err = run_cli(&format!(
+            "report --input {} --output {} --format yaml",
+            input.display(),
+            td.path().join("x").display()
+        ))
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("json|html|all"), "{err}");
     }
 
     #[test]

@@ -10,15 +10,17 @@
 //! (`outputs`): `gate.json` (machines), `gate.md` (PR comments),
 //! `gate.xml` (JUnit, so pipeline UIs render failures natively).
 //!
-//! Wiring:
+//! Wiring (all through the staged [`crate::session`] pipeline — the
+//! verdict is computed in the analyze stage and carried as data):
 //! * `talp-pages gate` evaluates standalone (exit 0 = pass/warn,
 //!   1 = fail) and serves warm runs entirely from the metrics cache;
-//! * `talp-pages ci-report --gate <policy>` gates inline on the scan
-//!   the report just used — zero extra parsing;
+//! * `talp-pages report --gate <policy>` gates inline on the scan the
+//!   report just used — zero extra parsing;
 //! * `ci::runner` records the verdict per pipeline
 //!   ([`crate::ci::PipelineResult::gate`]);
-//! * `pages::report` surfaces the verdict on the HTML index and as a
-//!   `gate` badge;
+//! * the `session::HtmlSite` / `session::Badges` / `session::GateFiles`
+//!   emitters surface it on the HTML index, as a `gate` badge and as
+//!   the `gate.json`/`gate.md`/`gate.xml` triple;
 //! * `ci::templates` emits a ready-made gate job in both the GitLab
 //!   and GitHub pipeline flavors.
 //!

@@ -15,8 +15,11 @@
 //! * [`tools`] — the baseline toolchains the paper compares against
 //!   (Extrae-like tracer, Score-P-like profiler+tracer, CPT) and their
 //!   post-processing pipelines (Dimemas-like replay etc.).
-//! * [`pages`] — TALP-Pages proper: folder scanner, time-series, HTML
-//!   report, SVG badges.
+//! * [`pages`] — the TALP-Pages data layer: folder scanner, metrics
+//!   cache, time series, change detection, HTML/SVG primitives.
+//! * [`session`] — the staged pipeline every consumer routes through:
+//!   `Session::scan` → `Scan::analyze` → `Analysis::emit` with
+//!   pluggable emitters (HTML site, badges, gate files, `report.json`).
 //! * [`ci`] — an in-process GitLab-like CI engine (pipelines, artifact
 //!   zips, pages hosting) used to reproduce the paper's CI workflow.
 //! * [`gate`] — the regression gate: a declarative policy over the
@@ -29,31 +32,56 @@
 //!   (stubbed unless built with the `pjrt` feature — the offline image
 //!   carries no `xla` bindings).
 //!
-//! # The report engine (pages::report)
+//! # The staged pipeline (session)
 //!
-//! Report generation is parallel and incremental — the paper's Table 2
-//! claim ("produce the scaling-efficiency tables faster and under
-//! tighter resource constraints") as an architecture:
+//! Scan → analyze → emit, with the paper's Table 2 performance story
+//! built into the first two stages:
 //!
-//! * **Worker pool** (`util::par::parallel_map`): artifact parsing and
-//!   per-experiment page rendering fan out over scoped threads; the
-//!   `--jobs N` CLI flag (0 = auto) sizes the pool.  Results merge in
-//!   deterministic order, so any `--jobs` value produces byte-identical
-//!   output.
-//! * **Metrics cache** (`pages::cache`): each artifact's reduced
-//!   [`pop::RunMetrics`] persists in `<out>/.talp-cache.json`, keyed by
-//!   relative path and validated by the FNV-1a-64 **content hash** of
-//!   the raw file bytes.  An entry is reused iff the hash matches;
-//!   vanished files are pruned; a corrupt or version-mismatched cache
-//!   degrades to a cold start.  On a warm CI run only the newest
-//!   pipeline's fresh artifacts parse
-//!   ([`pages::ReportSummary::cache_hits`] /
-//!   [`pages::report::ReportSummary::cache_misses`] count both sides).
-//! * **CI integration** (`ci::runner`): the in-process engine points
-//!   `ReportOptions::cache_path` at its root (outliving per-pipeline
-//!   work dirs), so pipeline N's report re-parses only the matrix jobs
-//!   that just ran — the history it merged from pipeline N-1's artifact
-//!   is served from cache.
+//! * **Scan** ([`session::Session::scan`]): the Fig. 2 folder walk
+//!   reduces every artifact to [`pop::RunMetrics`] through a
+//!   content-hash cache (`pages::cache`, FNV-1a-64 over raw bytes) on a
+//!   scoped-thread worker pool (`util::par`, `jobs = 0` → auto).  On a
+//!   warm CI run only the newest pipeline's fresh artifacts parse;
+//!   [`session::EmitSummary::cache_hits`] /
+//!   [`session::EmitSummary::cache_misses`] count both sides no matter
+//!   which emitters run.
+//! * **Analyze** ([`session::Scan::analyze`]): POP tables, Extra-P-style
+//!   fits, time series, change detection and the optional gate verdict
+//!   — computed once, as data, merged in deterministic scan order so
+//!   every `jobs` value yields byte-identical downstream output.
+//! * **Emit** ([`session::Analysis::emit`]): any set of
+//!   [`session::Emitter`]s — the built-in HTML site, SVG badges, gate
+//!   verdict files and the schema-versioned machine-readable
+//!   `report.json` ([`session::JsonReport`]) — or your own.
+//!
+//! Embedding the library without any HTML machinery is two stages and
+//! one emitter:
+//!
+//! ```no_run
+//! use talp_pages::session::{AnalyzeOptions, Emitter, JsonReport, Session};
+//!
+//! fn main() -> anyhow::Result<()> {
+//!     // Scan a Fig. 2 folder (with a persistent metrics cache), then
+//!     // analyze and write only the machine-readable report.json.
+//!     let analysis = Session::new("talp")
+//!         .cache("talp/.talp-cache.json")
+//!         .scan()?
+//!         .analyze(&AnalyzeOptions::default());
+//!     let mut emitters: Vec<Box<dyn Emitter>> =
+//!         vec![Box::new(JsonReport::new("out"))];
+//!     let summary = analysis.emit(&mut emitters)?;
+//!     println!(
+//!         "{} experiment(s) -> out/report.json ({} cached, {} parsed)",
+//!         summary.experiments, summary.cache_hits, summary.cache_misses
+//!     );
+//!     Ok(())
+//! }
+//! ```
+//!
+//! The in-process CI engine (`ci::runner`) points the session cache at
+//! its root (outliving per-pipeline work dirs), so pipeline N's report
+//! re-parses only the matrix jobs that just ran — the history it merged
+//! from pipeline N-1's artifact is served from cache.
 
 pub mod apps;
 pub mod cli;
@@ -62,6 +90,7 @@ pub mod gate;
 pub mod pages;
 pub mod pop;
 pub mod runtime;
+pub mod session;
 pub mod sim;
 pub mod talp;
 pub mod tools;

@@ -24,11 +24,11 @@
 //! irrelevant — CI artifact downloads reset them anyway); any content
 //! change misses.  Stale entries (file gone) are dropped on save.
 //!
-//! The file lives at `<out_dir>/.talp-cache.json` by default;
-//! `ReportOptions::cache_path` overrides it (the in-process CI engine
-//! points it at a location that survives per-pipeline work dirs).
-//! Entries are serialized in sorted path order so cache files are
-//! byte-reproducible and never differ between `--jobs` settings.
+//! The CLI keeps the file at `<out_dir>/.talp-cache.json` by default;
+//! `Session::cache` points it anywhere (the in-process CI engine uses
+//! a location that survives per-pipeline work dirs).  Entries are
+//! serialized in sorted path order so cache files are byte-reproducible
+//! and never differ between `--jobs` settings.
 
 use std::collections::BTreeMap;
 use std::path::Path;

@@ -1,20 +1,22 @@
-//! TALP-Pages proper: the paper's contribution.  Scans the Fig. 2
-//! folder structure, computes the POP factors, and renders the static
-//! HTML report (scaling-efficiency tables, time-evolution plots, SVG
-//! badges) that in-repository pages hosting serves.
+//! TALP-Pages data layer: the folder scanner (paper Fig. 2), the
+//! content-hash metrics cache, change detection, time series and the
+//! HTML/SVG rendering primitives.
+//!
+//! The staged pipeline that ties these together — scan, analyze, emit —
+//! lives in [`crate::session`]; this module provides the pieces it
+//! composes (and the lower-level `scan`/`scan_metrics` entry points for
+//! tools that want raw histories).
 
 pub mod badge;
 pub mod cache;
 pub mod detect;
 pub mod html;
-pub mod report;
 pub mod scanner;
 pub mod svgplot;
 pub mod table_html;
 pub mod timeseries;
 
 pub use cache::MetricsCache;
-pub use report::{generate, ReportOptions, ReportSummary};
 pub use scanner::{
     scan, scan_metrics, Experiment, MetricExperiment, MetricScan, ScanResult,
 };

@@ -11,7 +11,9 @@
 //!   table, the full history feeds the time-evolution plots.
 //!
 //! Unparsable files produce warnings, not failures — a CI report must
-//! survive one corrupt artifact.
+//! survive one corrupt artifact.  Hidden files and directories (name
+//! starting with `.`) are never artifacts, so a metrics cache stored
+//! inside the scan root is ignored rather than warned about.
 //!
 //! Two scan paths share the [`discover`] pass:
 //! * [`scan`] parses every artifact to full [`RunData`] (CLI `detect`,
@@ -157,22 +159,32 @@ impl MetricExperiment {
             .collect()
     }
 
-    /// Oldest first; equal timestamps tie-break on source file name.
-    pub fn history_for_config(&self, label: &str) -> Vec<&RunMetrics> {
-        let mut runs: Vec<&RunMetrics> = self
-            .runs
-            .iter()
-            .filter(|r| r.resources().label() == label)
+    /// Indices into `runs` of one configuration's history, oldest
+    /// first; equal timestamps tie-break on source file name.  The
+    /// distinct configurations partition the runs, so every index
+    /// appears under exactly one label — callers may move runs out by
+    /// index without collisions.
+    pub fn history_indices_for_config(&self, label: &str) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..self.runs.len())
+            .filter(|&i| self.runs[i].resources().label() == label)
             .collect();
-        runs.sort_by(|a, b| {
+        idx.sort_by(|&a, &b| {
             history_order(
-                a.effective_timestamp(),
-                &a.source,
-                b.effective_timestamp(),
-                &b.source,
+                self.runs[a].effective_timestamp(),
+                &self.runs[a].source,
+                self.runs[b].effective_timestamp(),
+                &self.runs[b].source,
             )
         });
-        runs
+        idx
+    }
+
+    /// Oldest first; equal timestamps tie-break on source file name.
+    pub fn history_for_config(&self, label: &str) -> Vec<&RunMetrics> {
+        self.history_indices_for_config(label)
+            .into_iter()
+            .map(|i| &self.runs[i])
+            .collect()
     }
 
     pub fn regions(&self) -> Vec<String> {
@@ -346,6 +358,16 @@ fn walk(root: &Path, dir: &Path, out: &mut Vec<(String, Vec<PathBuf>)>) {
     };
     for entry in rd.flatten() {
         let p = entry.path();
+        // Hidden files are never artifacts — this keeps a metrics
+        // cache stored inside the scan root (e.g. `.talp-cache.json`)
+        // from being picked up as a corrupt TALP JSON.
+        let hidden = p
+            .file_name()
+            .and_then(|n| n.to_str())
+            .map_or(false, |n| n.starts_with('.'));
+        if hidden {
+            continue;
+        }
         if p.is_dir() {
             subdirs.push(p);
         } else if p.extension().and_then(|e| e.to_str()) == Some("json") {
@@ -611,5 +633,27 @@ mod tests {
         run(1, 1, 1).write_file(&td.path().join("x.json")).unwrap();
         let res = scan(td.path()).unwrap();
         assert_eq!(res.experiments[0].id, ".");
+    }
+
+    #[test]
+    fn hidden_files_and_dirs_are_not_artifacts() {
+        // A metrics cache stored inside the scan root (the Session
+        // default when callers point it there) must not be scanned as
+        // a corrupt TALP JSON — same for any other dotfile.
+        let td = TempDir::new("scan-hidden").unwrap();
+        run(2, 2, 1).write_file(&td.path().join("exp/a.json")).unwrap();
+        std::fs::write(td.path().join(".talp-cache.json"), "{}").unwrap();
+        std::fs::write(td.path().join("exp/.hidden.json"), "][").unwrap();
+        run(2, 2, 1)
+            .write_file(&td.path().join(".git/blob.json"))
+            .unwrap();
+        let res = scan(td.path()).unwrap();
+        assert!(res.warnings.is_empty(), "{:?}", res.warnings);
+        assert_eq!(res.experiments.len(), 1);
+        assert_eq!(res.experiments[0].runs.len(), 1);
+        let mut cache = MetricsCache::new();
+        let ms = scan_metrics(td.path(), &mut cache, 0).unwrap();
+        assert!(ms.warnings.is_empty(), "{:?}", ms.warnings);
+        assert_eq!(ms.cache_misses, 1);
     }
 }

@@ -1,0 +1,393 @@
+//! Stage 2: fold a [`Scan`] into render-ready data — POP
+//! scaling-efficiency tables, Extra-P-style models, per-configuration
+//! time series, regression/improvement findings, badge values and the
+//! optional gate verdict.  Pure compute, no I/O: every emitter renders
+//! from the same [`Analysis`], so output formats can never disagree
+//! about the numbers.
+//!
+//! The per-experiment fan-out runs on the session's worker pool
+//! (`util::par::parallel_map`) and merges in deterministic scan order,
+//! which is what keeps `jobs = 1` and `jobs = N` byte-identical
+//! downstream.
+
+use crate::gate::{GatePolicy, GateVerdict};
+use crate::pages::detect::{self, DetectOptions, Finding};
+use crate::pages::scanner::MetricExperiment;
+use crate::pages::timeseries::{self, TimeSeries};
+use crate::pop::{self, RunMetrics};
+use crate::util::par::parallel_map;
+
+use super::Scan;
+
+/// Analyze-stage options (one of the per-stage types that replaced the
+/// old `ReportOptions` god-struct; the scan stage's knobs live on
+/// [`super::Session`]).
+#[derive(Debug, Clone, Default)]
+pub struct AnalyzeOptions {
+    /// Regions to build tables/plots for (empty = every region found).
+    pub regions: Vec<String>,
+    /// Region whose parallel efficiency feeds the badges (default the
+    /// implicit whole-execution `Global` region).
+    pub region_for_badge: Option<String>,
+    /// Change-detection thresholds.
+    pub detect: DetectOptions,
+    /// Regression-gate policy: when set, the scanned histories also
+    /// fold into a [`GateVerdict`] carried on [`Analysis::gate`] — as
+    /// data; writing `gate.*` files is the [`super::GateFiles`]
+    /// emitter's job.
+    pub gate: Option<GatePolicy>,
+}
+
+/// One badge's worth of data.  Both the badge-file emitter and the
+/// HTML page render the SVG from these values, so the inline and
+/// standalone copies are always byte-identical.
+#[derive(Debug, Clone)]
+pub struct BadgeDatum {
+    /// Badge region (the label).
+    pub region: String,
+    /// Resource-configuration label, e.g. `2x8`.
+    pub config: String,
+    /// Parallel efficiency of the latest run.
+    pub value: f64,
+    /// Output-root-relative SVG path, e.g. `badges/exp__2x8.svg`.
+    pub file: String,
+}
+
+/// One configuration's plotted series (only configurations with at
+/// least two runs — a single point has no evolution).
+#[derive(Debug, Clone)]
+pub struct ConfigSeries {
+    pub config: String,
+    /// Full history length (the plot caption's "(N runs)").
+    pub runs: usize,
+    /// The plotted series — region-filtered when a selection was given.
+    pub series: TimeSeries,
+}
+
+/// Everything the emitters need about one experiment.
+#[derive(Debug)]
+pub struct ExperimentAnalysis {
+    /// Scan-root-relative experiment id, e.g. `mesh_1/strong_scaling`.
+    pub id: String,
+    /// Filesystem-safe form of the id (page and badge file names).
+    pub slug: String,
+    /// Distinct resource configurations, ordered by resources.
+    pub configs: Vec<String>,
+    /// Total runs across all configurations.
+    pub total_runs: usize,
+    pub badges: Vec<BadgeDatum>,
+    /// (region, scaling-efficiency table) in display order.
+    pub tables: Vec<(String, pop::ScalingTable)>,
+    /// Detected changes, in configuration order then history order.
+    pub findings: Vec<Finding>,
+    /// Extra-P-style models per region (>= 3 configurations).
+    pub models: Vec<(String, pop::extrap::Model)>,
+    /// Per-configuration plotted series.
+    pub series: Vec<ConfigSeries>,
+    /// Full per-run histories per configuration, oldest first — the
+    /// machine-readable report's payload.
+    pub histories: Vec<(String, Vec<RunMetrics>)>,
+}
+
+/// Stage-2 output: the complete analyzed dataset, plus the scan-stage
+/// counters carried through so any emitter subset reports them
+/// correctly.
+#[derive(Debug)]
+pub struct Analysis {
+    /// Display form of the scanned input root (index header line).
+    pub input: String,
+    pub experiments: Vec<ExperimentAnalysis>,
+    /// Non-fatal scan warnings.
+    pub warnings: Vec<String>,
+    /// Artifacts served from the metrics cache (not re-parsed).  These
+    /// describe the *scan*, not any emitter, so a JSON-only emit on a
+    /// warm cache still reports zero misses.
+    pub cache_hits: usize,
+    /// Artifacts parsed + reduced by the scan.
+    pub cache_misses: usize,
+    /// Regression-gate verdict (when [`AnalyzeOptions::gate`] was set).
+    pub gate: Option<GateVerdict>,
+}
+
+/// Filesystem-safe experiment id (shared by page and badge names).
+pub(crate) fn slug(id: &str) -> String {
+    id.chars()
+        .map(|c| {
+            if c.is_ascii_alphanumeric() || c == '-' || c == '_' {
+                c
+            } else {
+                '_'
+            }
+        })
+        .collect()
+}
+
+impl Scan {
+    /// Stage 2: compute tables, models, series, findings, badges and
+    /// the optional gate verdict — as data, no I/O.
+    pub fn analyze(self, opts: &AnalyzeOptions) -> Analysis {
+        let gate = opts
+            .gate
+            .as_ref()
+            .map(|policy| crate::gate::evaluate(&self.scan, policy));
+        let partials = parallel_map(
+            &self.scan.experiments,
+            self.jobs,
+            |exp| analyze_experiment(exp, opts),
+        );
+        // Materialize the per-config histories by *moving* the runs out
+        // of the scan (the configurations partition them), so the
+        // potentially large reduced metrics are never cloned.
+        let experiments = self
+            .scan
+            .experiments
+            .into_iter()
+            .zip(partials)
+            .map(|(exp, (mut analysis, history_idx))| {
+                let mut slots: Vec<Option<RunMetrics>> =
+                    exp.runs.into_iter().map(Some).collect();
+                analysis.histories = history_idx
+                    .into_iter()
+                    .map(|(cfg, idx)| {
+                        let runs = idx
+                            .into_iter()
+                            .map(|i| {
+                                slots[i]
+                                    .take()
+                                    .expect("configs partition the runs")
+                            })
+                            .collect();
+                        (cfg, runs)
+                    })
+                    .collect();
+                analysis
+            })
+            .collect();
+        Analysis {
+            input: self.root.display().to_string(),
+            experiments,
+            warnings: self.scan.warnings,
+            cache_hits: self.scan.cache_hits,
+            cache_misses: self.scan.cache_misses,
+            gate,
+        }
+    }
+}
+
+/// Analyze one experiment from borrowed scan data.  Returns the
+/// analysis with `histories` left empty plus the per-config run
+/// indices; [`Scan::analyze`] fills the histories by moving the runs
+/// out of the scan afterwards.
+fn analyze_experiment(
+    exp: &MetricExperiment,
+    opts: &AnalyzeOptions,
+) -> (ExperimentAnalysis, Vec<(String, Vec<usize>)>) {
+    let exp_slug = slug(&exp.id);
+    let latest = exp.latest_per_config();
+    let badge_region = opts
+        .region_for_badge
+        .clone()
+        .unwrap_or_else(|| "Global".to_string());
+
+    // ---- badges: latest run per configuration ----
+    let badges: Vec<BadgeDatum> = latest
+        .iter()
+        .filter_map(|run| {
+            let reg = run.region(&badge_region)?;
+            let cfg = run.resources().label();
+            Some(BadgeDatum {
+                region: badge_region.clone(),
+                config: cfg.clone(),
+                value: reg.metrics.parallel_efficiency,
+                file: format!("badges/{exp_slug}__{cfg}.svg"),
+            })
+        })
+        .collect();
+
+    // ---- scaling-efficiency tables ----
+    let all_regions = exp.regions();
+    let table_regions: Vec<String> = if opts.regions.is_empty() {
+        all_regions.clone()
+    } else {
+        all_regions
+            .iter()
+            .filter(|r| *r == "Global" || opts.regions.contains(r))
+            .cloned()
+            .collect()
+    };
+    let tables: Vec<(String, pop::ScalingTable)> = table_regions
+        .iter()
+        .filter_map(|region| {
+            let items: Vec<(crate::sim::ResourceConfig, pop::RegionMetrics)> =
+                latest
+                    .iter()
+                    .filter_map(|run| {
+                        run.region(region)
+                            .map(|r| (run.resources(), r.metrics))
+                    })
+                    .collect();
+            pop::build_from_metrics(region, &items)
+                .map(|t| (region.clone(), t))
+        })
+        .collect();
+
+    // ---- per-config series: findings + plot data in one pass ----
+    // Each configuration's history is filtered/sorted and its full
+    // TimeSeries built exactly once; the detector and the plots share
+    // it (a filtered copy is only built when regions were selected).
+    let plot_regions: Vec<String> = if opts.regions.is_empty() {
+        all_regions
+    } else {
+        // Selected regions are highlighted; Global is always kept so
+        // the whole-program trend stays visible (paper: "The selected
+        // regions are also highlighted in the time-series plots").
+        let mut v = vec!["Global".to_string()];
+        v.extend(opts.regions.iter().cloned());
+        v.dedup();
+        v
+    };
+    let mut findings = Vec::new();
+    let mut series = Vec::new();
+    let mut history_idx = Vec::new();
+    let mut total_runs = 0usize;
+    let configs = exp.configs();
+    for cfg in &configs {
+        let idx = exp.history_indices_for_config(cfg);
+        let history: Vec<&RunMetrics> =
+            idx.iter().map(|&i| &exp.runs[i]).collect();
+        total_runs += history.len();
+        if history.len() >= 2 {
+            let full_ts = timeseries::build_from_metrics(cfg, &history, &[]);
+            findings.extend(detect::detect_series(&full_ts, cfg, &opts.detect));
+            // Plot series: with no region selection the full series IS
+            // the plotted one; otherwise build the filtered subset.
+            let ts = if opts.regions.is_empty() {
+                full_ts
+            } else {
+                timeseries::build_from_metrics(cfg, &history, &plot_regions)
+            };
+            series.push(ConfigSeries {
+                config: cfg.clone(),
+                runs: history.len(),
+                series: ts,
+            });
+        }
+        history_idx.push((cfg.clone(), idx));
+    }
+
+    // ---- Extra-P-style scaling models (>= 3 configurations) ----
+    let models = if latest.len() >= 3 {
+        pop::extrap::fit_experiment_metrics(&latest, &table_regions)
+    } else {
+        Vec::new()
+    };
+
+    (
+        ExperimentAnalysis {
+            id: exp.id.clone(),
+            slug: exp_slug,
+            configs,
+            total_runs,
+            badges,
+            tables,
+            findings,
+            models,
+            series,
+            // Filled by Scan::analyze, which moves the runs out of the
+            // scan instead of cloning them here.
+            histories: Vec::new(),
+        },
+        history_idx,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::build_input;
+    use super::*;
+    use crate::session::Session;
+    use crate::util::fs::TempDir;
+
+    fn analyzed(opts: &AnalyzeOptions) -> Analysis {
+        let td = TempDir::new("analysis").unwrap();
+        build_input(&td);
+        Session::new(td.path()).scan().unwrap().analyze(opts)
+    }
+
+    #[test]
+    fn analysis_carries_tables_series_findings_and_badges() {
+        let a = analyzed(&AnalyzeOptions {
+            regions: vec!["initialize".into(), "timestep".into()],
+            region_for_badge: Some("timestep".into()),
+            ..Default::default()
+        });
+        assert_eq!(a.experiments.len(), 1);
+        let e = &a.experiments[0];
+        assert_eq!(e.id, "salpha/resolution_1");
+        assert_eq!(e.slug, "salpha_resolution_1");
+        assert_eq!(e.configs, ["2x8"]);
+        assert_eq!(e.total_runs, 4);
+        // Badge carries the selected region and the latest PE.
+        assert_eq!(e.badges.len(), 1);
+        assert_eq!(e.badges[0].region, "timestep");
+        assert_eq!(e.badges[0].file, "badges/salpha_resolution_1__2x8.svg");
+        // Tables keep Global plus the selected regions only.
+        let table_regions: Vec<&str> =
+            e.tables.iter().map(|(r, _)| r.as_str()).collect();
+        assert!(table_regions.contains(&"Global"));
+        assert!(table_regions.contains(&"initialize"));
+        // The bug -> fix history surfaces as an improvement finding.
+        assert!(e
+            .findings
+            .iter()
+            .any(|f| f.kind == detect::ChangeKind::Improvement));
+        // One plotted series (one config, 4 runs), region-filtered.
+        assert_eq!(e.series.len(), 1);
+        assert_eq!(e.series[0].runs, 4);
+        assert!(e.series[0].series.regions().contains(&"Global".into()));
+        // Histories carry all runs for the machine report.
+        assert_eq!(e.histories.len(), 1);
+        assert_eq!(e.histories[0].1.len(), 4);
+        assert!(a.gate.is_none());
+    }
+
+    #[test]
+    fn gate_policy_produces_a_verdict_as_data() {
+        let a = analyzed(&AnalyzeOptions {
+            gate: Some(GatePolicy::default()),
+            ..Default::default()
+        });
+        let v = a.gate.as_ref().expect("verdict");
+        // The fixture history is a bug -> fix (an improvement), so the
+        // gate passes.
+        assert_eq!(v.status, crate::gate::GateStatus::Pass);
+    }
+
+    #[test]
+    fn jobs_values_produce_identical_analyses() {
+        let td = TempDir::new("analysis-jobs").unwrap();
+        build_input(&td);
+        let run = |jobs: usize| {
+            Session::new(td.path())
+                .jobs(jobs)
+                .scan()
+                .unwrap()
+                .analyze(&AnalyzeOptions::default())
+        };
+        let (a, b) = (run(1), run(4));
+        assert_eq!(a.experiments.len(), b.experiments.len());
+        let (ea, eb) = (&a.experiments[0], &b.experiments[0]);
+        assert_eq!(ea.configs, eb.configs);
+        assert_eq!(ea.findings.len(), eb.findings.len());
+        assert_eq!(
+            ea.series[0].series.metric("Global", "elapsed"),
+            eb.series[0].series.metric("Global", "elapsed")
+        );
+    }
+
+    #[test]
+    fn slug_sanitizes() {
+        assert_eq!(slug("mesh_1/strong scaling"), "mesh_1_strong_scaling");
+        assert_eq!(slug("a-b_c9"), "a-b_c9");
+    }
+}

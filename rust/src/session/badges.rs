@@ -1,0 +1,93 @@
+//! The badge emitter: one parallel-efficiency SVG per (experiment,
+//! configuration) under `badges/`, plus the `badges/gate.svg` verdict
+//! badge when the analysis carried a gate policy.  Renders from the
+//! same [`super::BadgeDatum`] values the HTML pages inline, so the
+//! standalone files are byte-identical to the embedded copies.
+
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use crate::pages::badge;
+
+use super::analysis::Analysis;
+use super::emit::{Emitter, EmitterReport};
+
+/// Writes `badges/*.svg` under its output root.
+pub struct Badges {
+    out_dir: PathBuf,
+}
+
+impl Badges {
+    pub fn new(out_dir: impl Into<PathBuf>) -> Badges {
+        Badges { out_dir: out_dir.into() }
+    }
+}
+
+impl Emitter for Badges {
+    fn name(&self) -> &'static str {
+        "badges"
+    }
+
+    fn emit(&mut self, analysis: &Analysis) -> Result<EmitterReport> {
+        let dir = self.out_dir.join("badges");
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+        let mut report = EmitterReport { name: self.name(), ..Default::default() };
+        for exp in &analysis.experiments {
+            for b in &exp.badges {
+                std::fs::write(
+                    self.out_dir.join(&b.file),
+                    badge::parallel_efficiency_badge(
+                        &b.region, &b.config, b.value,
+                    ),
+                )?;
+                report.badges_written += 1;
+            }
+        }
+        if let Some(v) = &analysis.gate {
+            std::fs::write(
+                dir.join("gate.svg"),
+                badge::gate_badge(v.status),
+            )?;
+            report.badges_written += 1;
+        }
+        report.files_written = report.badges_written;
+        Ok(report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::build_input;
+    use super::*;
+    use crate::session::{AnalyzeOptions, Session};
+    use crate::util::fs::TempDir;
+
+    #[test]
+    fn writes_pe_and_gate_badges() {
+        let td = TempDir::new("badges-in").unwrap();
+        let out = TempDir::new("badges-out").unwrap();
+        build_input(&td);
+        let analysis = Session::new(td.path()).scan().unwrap().analyze(
+            &AnalyzeOptions {
+                region_for_badge: Some("timestep".into()),
+                gate: Some(crate::gate::GatePolicy::default()),
+                ..Default::default()
+            },
+        );
+        let r = Badges::new(out.path()).emit(&analysis).unwrap();
+        assert_eq!(r.badges_written, 2, "one PE badge + the gate badge");
+        let pe = std::fs::read_to_string(
+            out.path().join("badges/salpha_resolution_1__2x8.svg"),
+        )
+        .unwrap();
+        assert!(pe.contains("timestep"));
+        let gate = std::fs::read_to_string(
+            out.path().join("badges/gate.svg"),
+        )
+        .unwrap();
+        assert!(gate.contains("perf gate"));
+        assert!(gate.contains("passing"));
+    }
+}

@@ -1,0 +1,151 @@
+//! Stage 3: the pluggable output layer.  An [`Emitter`] turns the
+//! analyzed data into files (or any other side effect); the built-in
+//! set is [`super::HtmlSite`], [`super::Badges`], [`super::GateFiles`]
+//! and [`super::JsonReport`], and embedders add their own by
+//! implementing the one-method trait.
+//!
+//! Emitters run sequentially in slice order on the calling thread —
+//! all parallelism lives in the scan/analyze stages, which is what
+//! makes every emitter's output deterministic for free.
+
+use anyhow::Result;
+
+use super::analysis::Analysis;
+
+/// What one emitter wrote.
+#[derive(Debug, Clone, Default)]
+pub struct EmitterReport {
+    /// The emitter's [`Emitter::name`].
+    pub name: &'static str,
+    /// HTML pages written (index + per-experiment pages).
+    pub pages_written: usize,
+    /// SVG badges written.
+    pub badges_written: usize,
+    /// Total files written, badges and pages included.
+    pub files_written: usize,
+}
+
+/// One output backend.  Emitters own their destination (constructor
+/// argument), so one analysis can fan out to several directories or
+/// formats in a single pass.
+pub trait Emitter {
+    /// Stable identifier for logs and [`EmitSummary::emitters`].
+    fn name(&self) -> &'static str;
+
+    /// Render `analysis` to this emitter's destination.
+    fn emit(&mut self, analysis: &Analysis) -> Result<EmitterReport>;
+}
+
+/// Aggregate result of one [`Analysis::emit`] pass.
+///
+/// The cache counters are copied from the analysis (i.e. from the
+/// *scan*), so they are identical no matter which emitters ran — a
+/// JSON-only emit on a warm cache reports the same zero-miss scan a
+/// full site emit would.
+#[derive(Debug)]
+pub struct EmitSummary {
+    pub experiments: usize,
+    pub pages_written: usize,
+    pub badges_written: usize,
+    /// Total files across all emitters (pages and badges included).
+    pub files_written: usize,
+    pub warnings: Vec<String>,
+    /// Artifacts served from the metrics cache (not re-parsed).
+    pub cache_hits: usize,
+    /// Artifacts parsed + reduced by the scan.
+    pub cache_misses: usize,
+    /// Regression-gate verdict (when the analysis carried a policy).
+    pub gate: Option<crate::gate::GateVerdict>,
+    /// Per-emitter breakdown, in run order.
+    pub emitters: Vec<EmitterReport>,
+}
+
+impl Analysis {
+    /// Stage 3: run every emitter over this analysis and aggregate
+    /// their reports.  Emitters run in slice order; the first error
+    /// aborts the pass.
+    pub fn emit(
+        &self,
+        emitters: &mut [Box<dyn Emitter>],
+    ) -> Result<EmitSummary> {
+        let mut summary = EmitSummary {
+            experiments: self.experiments.len(),
+            pages_written: 0,
+            badges_written: 0,
+            files_written: 0,
+            warnings: self.warnings.clone(),
+            cache_hits: self.cache_hits,
+            cache_misses: self.cache_misses,
+            gate: self.gate.clone(),
+            emitters: Vec::with_capacity(emitters.len()),
+        };
+        for emitter in emitters {
+            let report = emitter.emit(self)?;
+            summary.pages_written += report.pages_written;
+            summary.badges_written += report.badges_written;
+            summary.files_written += report.files_written;
+            summary.emitters.push(report);
+        }
+        Ok(summary)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::build_input;
+    use super::*;
+    use crate::session::{AnalyzeOptions, Session};
+    use crate::util::fs::TempDir;
+
+    struct Counting(&'static str, usize);
+
+    impl Emitter for Counting {
+        fn name(&self) -> &'static str {
+            self.0
+        }
+
+        fn emit(&mut self, a: &Analysis) -> Result<EmitterReport> {
+            self.1 += 1;
+            Ok(EmitterReport {
+                name: self.0,
+                files_written: a.experiments.len(),
+                ..Default::default()
+            })
+        }
+    }
+
+    struct Failing;
+
+    impl Emitter for Failing {
+        fn name(&self) -> &'static str {
+            "failing"
+        }
+
+        fn emit(&mut self, _a: &Analysis) -> Result<EmitterReport> {
+            anyhow::bail!("boom")
+        }
+    }
+
+    #[test]
+    fn emit_aggregates_reports_and_carries_scan_counters() {
+        let td = TempDir::new("emit").unwrap();
+        build_input(&td);
+        let analysis = Session::new(td.path())
+            .scan()
+            .unwrap()
+            .analyze(&AnalyzeOptions::default());
+        let mut emitters: Vec<Box<dyn Emitter>> =
+            vec![Box::new(Counting("a", 0)), Box::new(Counting("b", 0))];
+        let s = analysis.emit(&mut emitters).unwrap();
+        assert_eq!(s.experiments, 1);
+        assert_eq!(s.files_written, 2, "one per emitter per experiment");
+        assert_eq!(s.emitters.len(), 2);
+        assert_eq!(s.emitters[0].name, "a");
+        // Counters come from the scan, not from any emitter.
+        assert_eq!(s.cache_misses, 4);
+        assert_eq!(s.cache_hits, 0);
+        // A failing emitter aborts the pass with its error.
+        let mut bad: Vec<Box<dyn Emitter>> = vec![Box::new(Failing)];
+        assert!(analysis.emit(&mut bad).is_err());
+    }
+}

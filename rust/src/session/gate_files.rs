@@ -1,0 +1,74 @@
+//! The gate-file emitter: writes the verdict triple — `gate.json`
+//! (machines), `gate.md` (PR comments), `gate.xml` (JUnit) — when the
+//! analysis carried a gate policy, and is a clean no-op otherwise, so
+//! it can sit unconditionally in an emitter set.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use super::analysis::Analysis;
+use super::emit::{Emitter, EmitterReport};
+
+/// Writes `gate.json` / `gate.md` / `gate.xml` into its output
+/// directory iff the analysis holds a [`crate::gate::GateVerdict`].
+pub struct GateFiles {
+    out_dir: PathBuf,
+}
+
+impl GateFiles {
+    pub fn new(out_dir: impl Into<PathBuf>) -> GateFiles {
+        GateFiles { out_dir: out_dir.into() }
+    }
+}
+
+impl Emitter for GateFiles {
+    fn name(&self) -> &'static str {
+        "gate-files"
+    }
+
+    fn emit(&mut self, analysis: &Analysis) -> Result<EmitterReport> {
+        let mut report = EmitterReport { name: self.name(), ..Default::default() };
+        if let Some(v) = &analysis.gate {
+            crate::gate::write_outputs(v, &self.out_dir)?;
+            report.files_written = 3;
+        }
+        Ok(report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::build_input;
+    use super::*;
+    use crate::session::{AnalyzeOptions, Session};
+    use crate::util::fs::TempDir;
+
+    #[test]
+    fn writes_triple_with_verdict_and_nothing_without() {
+        let td = TempDir::new("gatefiles-in").unwrap();
+        build_input(&td);
+
+        let out = TempDir::new("gatefiles-out").unwrap();
+        let gated = Session::new(td.path()).scan().unwrap().analyze(
+            &AnalyzeOptions {
+                gate: Some(crate::gate::GatePolicy::default()),
+                ..Default::default()
+            },
+        );
+        let r = GateFiles::new(out.path()).emit(&gated).unwrap();
+        assert_eq!(r.files_written, 3);
+        for f in ["gate.json", "gate.md", "gate.xml"] {
+            assert!(out.path().join(f).exists(), "{f} missing");
+        }
+
+        let out2 = TempDir::new("gatefiles-out2").unwrap();
+        let plain = Session::new(td.path())
+            .scan()
+            .unwrap()
+            .analyze(&AnalyzeOptions::default());
+        let r = GateFiles::new(out2.path()).emit(&plain).unwrap();
+        assert_eq!(r.files_written, 0);
+        assert!(!out2.path().join("gate.json").exists());
+    }
+}

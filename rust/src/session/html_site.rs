@@ -1,0 +1,339 @@
+//! The HTML-site emitter: index page, one page per experiment
+//! (scaling-efficiency tables + time-evolution plots + findings +
+//! models), all rendered from the shared [`Analysis`] — this emitter
+//! does string assembly and file writes only; every number was
+//! computed in the analyze stage.
+
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use crate::pages::svgplot::{self, esc, Series};
+use crate::pages::timeseries::PLOT_METRICS;
+use crate::pages::{badge, html, table_html};
+use crate::util::timefmt;
+
+use super::analysis::{Analysis, ExperimentAnalysis};
+use super::emit::{Emitter, EmitterReport};
+
+/// Writes `index.html` plus `<slug>.html` per experiment into its
+/// output directory.
+pub struct HtmlSite {
+    out_dir: PathBuf,
+}
+
+impl HtmlSite {
+    pub fn new(out_dir: impl Into<PathBuf>) -> HtmlSite {
+        HtmlSite { out_dir: out_dir.into() }
+    }
+}
+
+impl Emitter for HtmlSite {
+    fn name(&self) -> &'static str {
+        "html-site"
+    }
+
+    fn emit(&mut self, analysis: &Analysis) -> Result<EmitterReport> {
+        std::fs::create_dir_all(&self.out_dir)
+            .with_context(|| format!("creating {}", self.out_dir.display()))?;
+        let mut report = EmitterReport { name: self.name(), ..Default::default() };
+        let mut index_items = String::new();
+        for exp in &analysis.experiments {
+            let file = format!("{}.html", exp.slug);
+            std::fs::write(
+                self.out_dir.join(&file),
+                html::page(
+                    &format!("TALP report — {}", exp.id),
+                    &experiment_body(exp),
+                ),
+            )?;
+            report.pages_written += 1;
+            index_items.push_str(&format!(
+                "<li><a href=\"{}\">{}</a> — {} configs, {} runs</li>\n",
+                file,
+                esc(&exp.id),
+                exp.configs.len(),
+                exp.total_runs
+            ));
+        }
+        std::fs::write(
+            self.out_dir.join("index.html"),
+            html::page("TALP-Pages report", &index_body(analysis, &index_items)),
+        )?;
+        report.pages_written += 1;
+        report.files_written = report.pages_written;
+        Ok(report)
+    }
+}
+
+fn index_body(analysis: &Analysis, index_items: &str) -> String {
+    let mut body = String::from("<h1>TALP-Pages performance report</h1>\n");
+    if let Some(v) = &analysis.gate {
+        let cls = match v.status {
+            crate::gate::GateStatus::Pass => "gate-pass",
+            crate::gate::GateStatus::Warn => "gate-warn",
+            crate::gate::GateStatus::Fail => "gate-fail",
+        };
+        body.push_str(&format!(
+            "<div class=\"gate {cls}\"><b>Performance gate: {}</b> — {}\n",
+            v.status.label(),
+            esc(&v.summary_line())
+        ));
+        let notable: Vec<_> = v.notable().collect();
+        if !notable.is_empty() {
+            body.push_str("<ul>\n");
+            for c in notable {
+                body.push_str(&format!(
+                    "<li class=\"{}\">[{}] {} / {} / {} — {}</li>\n",
+                    c.outcome.id(),
+                    c.outcome.id().to_uppercase(),
+                    esc(&c.experiment),
+                    esc(&c.config),
+                    esc(&c.region),
+                    esc(&c.detail)
+                ));
+            }
+            body.push_str("</ul>\n");
+        }
+        body.push_str(
+            "<p><a href=\"gate.md\">gate.md</a> · \
+             <a href=\"gate.json\">gate.json</a> · \
+             <a href=\"gate.xml\">gate.xml</a></p></div>\n",
+        );
+    }
+    if !analysis.warnings.is_empty() {
+        body.push_str("<div class=\"warn\"><b>Warnings:</b><ul>");
+        for w in &analysis.warnings {
+            body.push_str(&format!("<li>{}</li>", esc(w)));
+        }
+        body.push_str("</ul></div>\n");
+    }
+    body.push_str(&format!(
+        "<p>{} experiment(s) found under <code>{}</code>.</p>\n<ul class=\"exp-list\">\n{index_items}</ul>\n",
+        analysis.experiments.len(),
+        esc(&analysis.input),
+    ));
+    body
+}
+
+/// Render one experiment's page body (pure string assembly).
+fn experiment_body(exp: &ExperimentAnalysis) -> String {
+    let mut body = format!("<h1>{}</h1>\n", esc(&exp.id));
+
+    // ---- badges (inline copies of the badge files) ----
+    body.push_str("<div class=\"badges\">\n");
+    for b in &exp.badges {
+        body.push_str(&badge::parallel_efficiency_badge(
+            &b.region, &b.config, b.value,
+        ));
+    }
+    body.push_str("</div>\n");
+
+    // ---- scaling-efficiency tables ----
+    for (region, table) in &exp.tables {
+        body.push_str(&format!(
+            "<h2>Scaling efficiency — region <code>{}</code></h2>\n",
+            esc(region)
+        ));
+        body.push_str(&table_html::render(table));
+    }
+
+    // ---- detected changes ----
+    if !exp.findings.is_empty() {
+        body.push_str("<h2>Detected changes</h2>\n<ul class=\"findings\">\n");
+        for f in &exp.findings {
+            body.push_str(&format!(
+                "<li class=\"{}\">{}</li>\n",
+                match f.kind {
+                    crate::pages::detect::ChangeKind::Regression => {
+                        "regression"
+                    }
+                    crate::pages::detect::ChangeKind::Improvement => {
+                        "improvement"
+                    }
+                },
+                esc(&f.describe())
+            ));
+        }
+        body.push_str("</ul>\n");
+    }
+
+    // ---- Extra-P-style scaling models ----
+    if !exp.models.is_empty() {
+        body.push_str("<h2>Scaling models (Extra-P-style)</h2>\n<ul>\n");
+        for (region, m) in &exp.models {
+            body.push_str(&format!(
+                "<li><code>{}</code>: elapsed(p) ≈ {} (SMAPE {:.1}%){}</li>\n",
+                esc(region),
+                esc(&m.formula()),
+                m.smape * 100.0,
+                if m.grows() {
+                    " <b>⚠ grows with resources</b>"
+                } else {
+                    ""
+                }
+            ));
+        }
+        body.push_str("</ul>\n");
+    }
+
+    // ---- time-evolution plots per configuration ----
+    for cs in &exp.series {
+        let ts = &cs.series;
+        let regions = ts.regions();
+        body.push_str(&format!(
+            "<h2>Time evolution — {} ({} runs)</h2>\n",
+            esc(&cs.config),
+            cs.runs
+        ));
+        let toggle_info: Vec<(String, String, String)> = regions
+            .iter()
+            .enumerate()
+            .map(|(i, r)| (r.clone(), svgplot::css_class(r), svgplot::color(i)))
+            .collect();
+        body.push_str(&html::toggles(&toggle_info));
+        for (metric, label) in PLOT_METRICS {
+            let series: Vec<Series> = regions
+                .iter()
+                .enumerate()
+                .map(|(i, r)| Series {
+                    label: r.clone(),
+                    points: ts.metric(r, metric),
+                    color: svgplot::color(i),
+                })
+                .filter(|s| !s.points.is_empty())
+                .collect();
+            if series.is_empty() {
+                continue;
+            }
+            body.push_str(&svgplot::line_chart(label, &series, ""));
+        }
+        // Commit annotations under the plots.  Commit strings are
+        // arbitrary parsed input, so take a char prefix (a byte slice
+        // could split a UTF-8 sequence and panic).
+        let commits: Vec<String> = ts
+            .points
+            .iter()
+            .filter_map(|p| {
+                p.commit.as_ref().map(|c| {
+                    let short: String = c.chars().take(8).collect();
+                    format!(
+                        "<code>{}</code> ({})",
+                        esc(&short),
+                        timefmt::to_iso8601(p.timestamp)
+                    )
+                })
+            })
+            .collect();
+        if !commits.is_empty() {
+            body.push_str(&format!(
+                "<p>Commits: {}</p>\n",
+                commits.join(" · ")
+            ));
+        }
+    }
+    body
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::build_input;
+    use super::*;
+    use crate::session::{AnalyzeOptions, Session};
+    use crate::util::fs::TempDir;
+
+    fn analyze(td: &TempDir, opts: &AnalyzeOptions) -> Analysis {
+        Session::new(td.path()).scan().unwrap().analyze(opts)
+    }
+
+    fn write_site(
+        analysis: &Analysis,
+        out_dir: &std::path::Path,
+    ) -> Result<EmitterReport> {
+        HtmlSite::new(out_dir).emit(analysis)
+    }
+
+    #[test]
+    fn site_renders_tables_plots_findings_and_index() {
+        let td = TempDir::new("html-in").unwrap();
+        let out = TempDir::new("html-out").unwrap();
+        build_input(&td);
+        let analysis = analyze(
+            &td,
+            &AnalyzeOptions {
+                regions: vec!["initialize".into(), "timestep".into()],
+                region_for_badge: Some("timestep".into()),
+                ..Default::default()
+            },
+        );
+        let r = write_site(&analysis, out.path()).unwrap();
+        assert_eq!(r.pages_written, 2); // index + 1 experiment
+        let page = std::fs::read_to_string(
+            out.path().join("salpha_resolution_1.html"),
+        )
+        .unwrap();
+        assert!(page.contains("Scaling efficiency"));
+        assert!(page.contains("Time evolution"));
+        assert!(page.contains("initialize"));
+        assert!(page.contains("polyline"));
+        assert!(page.contains("Commits:"));
+        // The bug->fix history must surface as an automated finding.
+        assert!(page.contains("Detected changes"), "no findings section");
+        assert!(page.contains("sped up"));
+        assert!(page.contains("OpenMP Serialization efficiency"));
+        // The inline badge mentions the badge region.
+        assert!(page.contains("timestep"));
+        let index =
+            std::fs::read_to_string(out.path().join("index.html")).unwrap();
+        assert!(index.contains("salpha_resolution_1.html"));
+        assert!(index.contains("1 experiment(s) found under"));
+    }
+
+    #[test]
+    fn single_run_config_has_table_but_no_plot() {
+        use crate::apps::{run_with_talp, CodeVersion, Genex};
+        use crate::sim::{MachineSpec, ResourceConfig};
+        let td = TempDir::new("html-in2").unwrap();
+        let out = TempDir::new("html-out2").unwrap();
+        let machine = MachineSpec::marenostrum5();
+        let mut app = Genex::salpha(1, CodeVersion::fixed());
+        app.timesteps = 2;
+        let (d, _) = run_with_talp(
+            &app,
+            &machine,
+            &ResourceConfig::new(2, 8),
+            1,
+            1_700_000_000,
+        );
+        d.write_file(&td.path().join("exp/one.json")).unwrap();
+        let analysis = analyze(&td, &AnalyzeOptions::default());
+        write_site(&analysis, out.path()).unwrap();
+        let page =
+            std::fs::read_to_string(out.path().join("exp.html")).unwrap();
+        assert!(page.contains("Scaling efficiency"));
+        assert!(!page.contains("Time evolution"));
+    }
+
+    #[test]
+    fn warnings_and_gate_surface_in_index() {
+        let td = TempDir::new("html-in3").unwrap();
+        let out = TempDir::new("html-out3").unwrap();
+        build_input(&td);
+        std::fs::write(td.path().join("salpha/resolution_1/bad.json"), "][")
+            .unwrap();
+        let analysis = analyze(
+            &td,
+            &AnalyzeOptions {
+                gate: Some(crate::gate::GatePolicy::default()),
+                ..Default::default()
+            },
+        );
+        assert_eq!(analysis.warnings.len(), 1);
+        write_site(&analysis, out.path()).unwrap();
+        let index =
+            std::fs::read_to_string(out.path().join("index.html")).unwrap();
+        assert!(index.contains("Warnings"));
+        assert!(index.contains("Performance gate: PASS"));
+        assert!(index.contains("gate.json"));
+    }
+}

@@ -1,0 +1,403 @@
+//! The machine-readable report: a versioned, schema-stable
+//! `report.json` so dashboards, multi-repo aggregators and predictors
+//! can consume TALP-Pages data without scraping HTML.
+//!
+//! # The contract
+//!
+//! ```json
+//! {
+//!   "schema_version": 1,
+//!   "experiments": [
+//!     {
+//!       "id": "<scan-root-relative experiment id>",
+//!       "configs": [
+//!         {
+//!           "config": "<RxT label>",
+//!           "history": [ { ...one run's reduced POP metrics... } ]
+//!         }
+//!       ],
+//!       "detections": [
+//!         { "region", "config", "commit", "kind", "factor",
+//!           "at_index", "explanation": {"metric","before","after"}|null }
+//!       ],
+//!       "models": [
+//!         { "region", "a", "b", "c", "smape", "formula", "grows" }
+//!       ]
+//!     }
+//!   ],
+//!   "warnings": ["..."],
+//!   "gate": { ...gate.json document... } | null
+//! }
+//! ```
+//!
+//! * Run-history entries are exactly the [`RunMetrics`] cache JSON
+//!   (source, app, machine, timestamps, resources, git, per-region POP
+//!   factors) — one serializer, one schema, already covered by the
+//!   cache's fixpoint tests.
+//! * Everything is deterministic and relocatable: no absolute paths,
+//!   no wall clock, shortest-roundtrip f64 formatting — the same scan
+//!   produces byte-identical documents for every `jobs` value and
+//!   cache temperature (the golden-file test pins this).
+//! * **Versioning rule:** consumers MUST reject a `schema_version`
+//!   they do not know ([`ReportDocument::parse`] enforces this);
+//!   producers bump [`SCHEMA_VERSION`] on any breaking shape change.
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use crate::pages::detect::{ChangeKind, Finding};
+use crate::pop::RunMetrics;
+use crate::util::json::Json;
+
+use super::analysis::{Analysis, ExperimentAnalysis};
+use super::emit::{Emitter, EmitterReport};
+
+/// Version stamp of the `report.json` shape.  Bump on breaking
+/// changes; consumers reject unknown versions instead of guessing.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Default file name inside the emitter's output directory.
+pub const REPORT_FILE_NAME: &str = "report.json";
+
+/// Writes `report.json` into its output directory.
+pub struct JsonReport {
+    out_dir: PathBuf,
+}
+
+impl JsonReport {
+    pub fn new(out_dir: impl Into<PathBuf>) -> JsonReport {
+        JsonReport { out_dir: out_dir.into() }
+    }
+
+    /// Build the document (pure; the emitter writes it verbatim).
+    pub fn document(analysis: &Analysis) -> Json {
+        let experiments: Vec<Json> = analysis
+            .experiments
+            .iter()
+            .map(experiment_json)
+            .collect();
+        Json::from_pairs(vec![
+            ("schema_version", Json::Num(SCHEMA_VERSION as f64)),
+            ("experiments", Json::Arr(experiments)),
+            (
+                "warnings",
+                Json::Arr(
+                    analysis
+                        .warnings
+                        .iter()
+                        .map(|w| Json::Str(w.clone()))
+                        .collect(),
+                ),
+            ),
+            (
+                "gate",
+                analysis
+                    .gate
+                    .as_ref()
+                    .map(|v| v.to_json())
+                    .unwrap_or(Json::Null),
+            ),
+        ])
+    }
+}
+
+impl Emitter for JsonReport {
+    fn name(&self) -> &'static str {
+        "json-report"
+    }
+
+    fn emit(&mut self, analysis: &Analysis) -> Result<EmitterReport> {
+        std::fs::create_dir_all(&self.out_dir)
+            .with_context(|| format!("creating {}", self.out_dir.display()))?;
+        std::fs::write(
+            self.out_dir.join(REPORT_FILE_NAME),
+            JsonReport::document(analysis).to_string_pretty(),
+        )?;
+        Ok(EmitterReport {
+            name: self.name(),
+            files_written: 1,
+            ..Default::default()
+        })
+    }
+}
+
+fn experiment_json(exp: &ExperimentAnalysis) -> Json {
+    let configs: Vec<Json> = exp
+        .histories
+        .iter()
+        .map(|(cfg, runs)| {
+            Json::from_pairs(vec![
+                ("config", Json::Str(cfg.clone())),
+                (
+                    "history",
+                    Json::Arr(runs.iter().map(RunMetrics::to_json).collect()),
+                ),
+            ])
+        })
+        .collect();
+    let detections: Vec<Json> =
+        exp.findings.iter().map(finding_json).collect();
+    let models: Vec<Json> = exp
+        .models
+        .iter()
+        .map(|(region, m)| {
+            Json::from_pairs(vec![
+                ("region", Json::Str(region.clone())),
+                ("a", Json::Num(m.a)),
+                ("b", Json::Num(m.b)),
+                ("c", Json::Num(m.c)),
+                ("smape", Json::Num(m.smape)),
+                ("formula", Json::Str(m.formula())),
+                ("grows", Json::Bool(m.grows())),
+            ])
+        })
+        .collect();
+    Json::from_pairs(vec![
+        ("id", Json::Str(exp.id.clone())),
+        ("configs", Json::Arr(configs)),
+        ("detections", Json::Arr(detections)),
+        ("models", Json::Arr(models)),
+    ])
+}
+
+fn finding_json(f: &Finding) -> Json {
+    Json::from_pairs(vec![
+        ("region", Json::Str(f.region.clone())),
+        ("config", Json::Str(f.config.clone())),
+        ("at_index", Json::Num(f.at_index as f64)),
+        (
+            "commit",
+            f.commit.clone().map(Json::Str).unwrap_or(Json::Null),
+        ),
+        (
+            "kind",
+            Json::Str(
+                match f.kind {
+                    ChangeKind::Regression => "regression",
+                    ChangeKind::Improvement => "improvement",
+                }
+                .to_string(),
+            ),
+        ),
+        ("factor", Json::Num(f.factor)),
+        (
+            "explanation",
+            match &f.explanation {
+                Some((metric, before, after)) => Json::from_pairs(vec![
+                    ("metric", Json::Str(metric.clone())),
+                    ("before", Json::Num(*before)),
+                    ("after", Json::Num(*after)),
+                ]),
+                None => Json::Null,
+            },
+        ),
+    ])
+}
+
+/// One experiment as read back from a `report.json`.
+#[derive(Debug)]
+pub struct ReportExperiment {
+    pub id: String,
+    /// (config label, run history oldest-first), reconstructed to full
+    /// [`RunMetrics`].
+    pub configs: Vec<(String, Vec<RunMetrics>)>,
+    /// Raw detection records (region/config/kind/factor/...).
+    pub detections: Vec<Json>,
+    /// Raw model records (region/a/b/c/smape/formula/grows).
+    pub models: Vec<Json>,
+}
+
+/// A parsed-and-validated `report.json` — the consumer half of the
+/// contract.  [`ReportDocument::parse`] is strict about
+/// `schema_version`: missing or unknown versions are errors, never
+/// guesses.
+#[derive(Debug)]
+pub struct ReportDocument {
+    pub schema_version: u64,
+    pub experiments: Vec<ReportExperiment>,
+    pub warnings: Vec<String>,
+    /// The embedded gate verdict document, when the report was gated.
+    pub gate: Option<Json>,
+}
+
+impl ReportDocument {
+    /// Parse and validate a `report.json` document.
+    pub fn parse(text: &str) -> Result<ReportDocument> {
+        let j = Json::parse(text).context("report.json: invalid JSON")?;
+        let version = j
+            .get("schema_version")
+            .and_then(Json::as_u64)
+            .context("report.json: missing schema_version")?;
+        if version != SCHEMA_VERSION {
+            bail!(
+                "report.json: unsupported schema_version {version} \
+                 (this reader understands {SCHEMA_VERSION})"
+            );
+        }
+        let mut experiments = Vec::new();
+        for ej in j
+            .get("experiments")
+            .and_then(Json::as_arr)
+            .context("report.json: missing experiments")?
+        {
+            let id = ej
+                .get("id")
+                .and_then(Json::as_str)
+                .context("report.json: experiment without id")?
+                .to_string();
+            let mut configs = Vec::new();
+            for cj in ej
+                .get("configs")
+                .and_then(Json::as_arr)
+                .context("report.json: experiment without configs")?
+            {
+                let label = cj
+                    .get("config")
+                    .and_then(Json::as_str)
+                    .context("report.json: config without label")?
+                    .to_string();
+                let mut history = Vec::new();
+                for rj in cj
+                    .get("history")
+                    .and_then(Json::as_arr)
+                    .context("report.json: config without history")?
+                {
+                    history.push(
+                        RunMetrics::from_json(rj)
+                            .context("report.json: bad history entry")?,
+                    );
+                }
+                configs.push((label, history));
+            }
+            let raw_list = |key: &str| -> Vec<Json> {
+                ej.get(key)
+                    .and_then(Json::as_arr)
+                    .map(|a| a.to_vec())
+                    .unwrap_or_default()
+            };
+            experiments.push(ReportExperiment {
+                id,
+                configs,
+                detections: raw_list("detections"),
+                models: raw_list("models"),
+            });
+        }
+        let warnings = j
+            .get("warnings")
+            .and_then(Json::as_arr)
+            .map(|a| {
+                a.iter()
+                    .filter_map(|w| w.as_str().map(str::to_string))
+                    .collect()
+            })
+            .unwrap_or_default();
+        let gate = match j.get("gate") {
+            None | Some(Json::Null) => None,
+            Some(g) => Some(g.clone()),
+        };
+        Ok(ReportDocument { schema_version: version, experiments, warnings, gate })
+    }
+
+    /// Overall gate status id (`pass`/`warn`/`fail`), when gated.
+    pub fn gate_status(&self) -> Option<&str> {
+        self.gate.as_ref().and_then(|g| {
+            g.get("status").and_then(Json::as_str)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::build_input;
+    use super::*;
+    use crate::session::{AnalyzeOptions, Session};
+    use crate::util::fs::TempDir;
+
+    fn emit_report(gate: bool) -> (TempDir, Analysis) {
+        let td = TempDir::new("json-in").unwrap();
+        let out = TempDir::new("json-out").unwrap();
+        build_input(&td);
+        let analysis = Session::new(td.path()).scan().unwrap().analyze(
+            &AnalyzeOptions {
+                gate: gate.then(crate::gate::GatePolicy::default),
+                ..Default::default()
+            },
+        );
+        JsonReport::new(out.path()).emit(&analysis).unwrap();
+        (out, analysis)
+    }
+
+    #[test]
+    fn document_round_trips_through_the_parser() {
+        let (out, analysis) = emit_report(true);
+        let text = std::fs::read_to_string(
+            out.path().join(REPORT_FILE_NAME),
+        )
+        .unwrap();
+        let doc = ReportDocument::parse(&text).unwrap();
+        assert_eq!(doc.schema_version, SCHEMA_VERSION);
+        assert_eq!(doc.experiments.len(), 1);
+        let exp = &doc.experiments[0];
+        assert_eq!(exp.id, "salpha/resolution_1");
+        assert_eq!(exp.configs.len(), 1);
+        let (cfg, history) = &exp.configs[0];
+        assert_eq!(cfg, "2x8");
+        assert_eq!(history.len(), 4);
+        // Reconstructed metrics are bit-exact vs the analysis.
+        let orig = &analysis.experiments[0].histories[0].1;
+        for (a, b) in history.iter().zip(orig) {
+            assert_eq!(a.source, b.source);
+            assert_eq!(a.effective_timestamp(), b.effective_timestamp());
+            assert_eq!(
+                a.region("Global").unwrap().metrics,
+                b.region("Global").unwrap().metrics
+            );
+        }
+        // The fixture's bug -> fix history shows up as a detection.
+        assert!(!exp.detections.is_empty());
+        assert!(exp
+            .detections
+            .iter()
+            .any(|d| d.str_or("kind", "") == "improvement"));
+        assert_eq!(doc.gate_status(), Some("pass"));
+    }
+
+    #[test]
+    fn ungated_report_has_null_gate() {
+        let (out, _) = emit_report(false);
+        let text = std::fs::read_to_string(
+            out.path().join(REPORT_FILE_NAME),
+        )
+        .unwrap();
+        assert!(text.contains("\"gate\": null"));
+        let doc = ReportDocument::parse(&text).unwrap();
+        assert!(doc.gate.is_none());
+        assert!(doc.gate_status().is_none());
+    }
+
+    #[test]
+    fn unknown_or_missing_schema_version_is_rejected() {
+        let (out, _) = emit_report(false);
+        let text = std::fs::read_to_string(
+            out.path().join(REPORT_FILE_NAME),
+        )
+        .unwrap();
+        // A future version must be rejected, not half-parsed.
+        let bumped = text.replace(
+            "\"schema_version\": 1",
+            "\"schema_version\": 999",
+        );
+        assert_ne!(text, bumped, "version stamp must be present");
+        let err = ReportDocument::parse(&bumped).unwrap_err().to_string();
+        assert!(err.contains("999"), "{err}");
+        // Missing version is just as fatal.
+        let stripped = text.replace(
+            "\"schema_version\": 1,",
+            "",
+        );
+        assert!(ReportDocument::parse(&stripped).is_err());
+        // Garbage is a parse error with context.
+        assert!(ReportDocument::parse("{nope").is_err());
+    }
+}

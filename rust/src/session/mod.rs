@@ -1,0 +1,245 @@
+//! The staged report pipeline — the crate's library-first core.
+//!
+//! Every consumer of TALP-Pages data (the `talp-pages report` CLI, the
+//! regression gate, the in-process CI engine, `ci-sim`, and any
+//! embedder) routes through the same three typed stages:
+//!
+//! ```text
+//! Session::new(root)      Scan::analyze(opts)       Analysis::emit(&mut emitters)
+//!   .jobs(n)                 POP reduction              ┌ HtmlSite   (index + pages)
+//!   .cache(path)             Extra-P fits               ├ Badges     (SVG badges)
+//!   .scan()?   ──Scan──▶     time series     ──Analysis─┼ GateFiles  (gate.json/md/xml)
+//!                            detection                  └ JsonReport (report.json)
+//!   (folder walk +           gate verdict
+//!    metrics cache +         (pure data, no I/O)        ──▶ EmitSummary
+//!    worker pool)
+//! ```
+//!
+//! * [`Session`] owns the *scan-stage* options: the input root, the
+//!   worker-pool size (`jobs`, 0 = auto) and the metrics-cache
+//!   location.  [`Session::scan`] walks the paper's Fig. 2 folder
+//!   layout through the content-hash cache (`pages::cache`), so on a
+//!   warm run unchanged artifacts skip JSON parse *and* POP reduction
+//!   entirely, and persists the refreshed cache before returning.
+//! * [`Scan`] is the reduced history: per-experiment
+//!   [`crate::pages::MetricExperiment`] runs plus the cache hit/miss
+//!   counters.  Counting happens *here* — the counters describe the
+//!   scan, not any output format, so they stay correct no matter which
+//!   emitters run later.
+//! * [`Scan::analyze`] computes everything downstream consumers render
+//!   — scaling-efficiency tables, Extra-P-style models, time series,
+//!   regression/improvement findings, badge values and the optional
+//!   gate verdict — as pure data ([`Analysis`]), no I/O.  The
+//!   per-experiment fan-out reuses the session's worker pool and merges
+//!   in deterministic scan order, so `jobs = 1` and `jobs = N` produce
+//!   identical analyses (and therefore byte-identical outputs).
+//! * [`Analysis::emit`] runs any set of [`Emitter`]s over the data and
+//!   aggregates their file counts into an [`EmitSummary`].
+//!
+//! Determinism contract: same input folder + same options produce
+//! byte-identical emitter outputs for every `jobs` value and cache
+//! temperature.  The machine-readable [`JsonReport`] output additionally
+//! carries a `schema_version` so downstream consumers can reject
+//! documents they do not understand
+//! ([`json_report::SCHEMA_VERSION`]).
+
+pub mod analysis;
+pub mod badges;
+pub mod emit;
+pub mod gate_files;
+pub mod html_site;
+pub mod json_report;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::pages::scanner::{self, MetricExperiment, MetricScan};
+use crate::pages::MetricsCache;
+
+pub use analysis::{
+    Analysis, AnalyzeOptions, BadgeDatum, ConfigSeries, ExperimentAnalysis,
+};
+pub use badges::Badges;
+pub use emit::{EmitSummary, Emitter, EmitterReport};
+pub use gate_files::GateFiles;
+pub use html_site::HtmlSite;
+pub use json_report::{
+    JsonReport, ReportDocument, ReportExperiment, REPORT_FILE_NAME,
+    SCHEMA_VERSION,
+};
+
+/// Scan-stage options: where to read, how many workers, where the
+/// metrics cache lives.  Build one per input folder, then call
+/// [`Session::scan`].
+#[derive(Debug, Clone)]
+pub struct Session {
+    root: PathBuf,
+    jobs: usize,
+    cache_path: Option<PathBuf>,
+}
+
+impl Session {
+    /// A session over one Fig. 2 input folder.
+    pub fn new(root: impl Into<PathBuf>) -> Session {
+        Session { root: root.into(), jobs: 0, cache_path: None }
+    }
+
+    /// Worker threads for artifact parsing and per-experiment analysis
+    /// (0 = auto: available parallelism capped at 16).  Outputs are
+    /// byte-identical for every value.
+    pub fn jobs(mut self, jobs: usize) -> Session {
+        self.jobs = jobs;
+        self
+    }
+
+    /// Persist the metrics cache at `path` (loaded before the scan,
+    /// saved after).  Without a cache path every scan is a cold start.
+    pub fn cache(mut self, path: impl Into<PathBuf>) -> Session {
+        self.cache_path = Some(path.into());
+        self
+    }
+
+    /// Like [`Session::cache`], but taking an optional path (handy for
+    /// threading a CLI `--cache` flag through unchanged).
+    pub fn cache_opt(mut self, path: Option<PathBuf>) -> Session {
+        self.cache_path = path;
+        self
+    }
+
+    /// Stage 1: walk the folder, reduce every artifact to
+    /// [`crate::pop::RunMetrics`] through the content-hash cache, and
+    /// persist the refreshed cache.  Unparsable artifacts become
+    /// warnings, not errors — a CI report must survive one corrupt
+    /// file.
+    pub fn scan(self) -> Result<Scan> {
+        let mut cache = match &self.cache_path {
+            Some(p) => MetricsCache::load(p),
+            None => MetricsCache::new(),
+        };
+        let scan =
+            scanner::scan_metrics(&self.root, &mut cache, self.jobs)?;
+        if let Some(p) = &self.cache_path {
+            cache.save(p)?;
+        }
+        Ok(Scan { root: self.root, jobs: self.jobs, scan })
+    }
+}
+
+/// Stage-1 output: the reduced metrics histories plus the cache
+/// counters.  Feed it to [`Scan::analyze`] (implemented in
+/// [`analysis`]) to compute the render-ready [`Analysis`].
+#[derive(Debug)]
+pub struct Scan {
+    pub(crate) root: PathBuf,
+    pub(crate) jobs: usize,
+    pub(crate) scan: MetricScan,
+}
+
+impl Scan {
+    /// The scanned input root.
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Non-fatal scan warnings (corrupt/unreadable artifacts).
+    pub fn warnings(&self) -> &[String] {
+        &self.scan.warnings
+    }
+
+    /// Artifacts served from the metrics cache (not re-parsed).
+    pub fn cache_hits(&self) -> usize {
+        self.scan.cache_hits
+    }
+
+    /// Artifacts parsed + reduced by this scan.
+    pub fn cache_misses(&self) -> usize {
+        self.scan.cache_misses
+    }
+
+    /// The per-experiment reduced histories.
+    pub fn experiments(&self) -> &[MetricExperiment] {
+        &self.scan.experiments
+    }
+}
+
+/// The emitter set behind `talp-pages report --format all`: HTML site,
+/// SVG badges, gate verdict files and the machine-readable
+/// `report.json`, all rooted at `out_dir`.
+pub fn default_emitters(out_dir: &Path) -> Vec<Box<dyn Emitter>> {
+    vec![
+        Box::new(HtmlSite::new(out_dir)),
+        Box::new(Badges::new(out_dir)),
+        Box::new(GateFiles::new(out_dir)),
+        Box::new(JsonReport::new(out_dir)),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::{run_with_talp, CodeVersion, Genex};
+    use crate::sim::{MachineSpec, ResourceConfig};
+    use crate::talp::GitMeta;
+    use crate::util::fs::TempDir;
+
+    /// Build a realistic input folder: one experiment, one config,
+    /// 4-commit history with the Fig. 7 bug fix in the middle.
+    pub(crate) fn build_input(td: &TempDir) {
+        let machine = MachineSpec::marenostrum5();
+        let res = ResourceConfig::new(2, 8);
+        for i in 0..4 {
+            let version = if i < 2 {
+                CodeVersion::buggy()
+            } else {
+                CodeVersion::fixed()
+            };
+            let mut app = Genex::salpha(1, version);
+            app.timesteps = 2;
+            let (mut d, _) = run_with_talp(&app, &machine, &res, 100 + i, 0);
+            d.git = Some(GitMeta {
+                commit: format!("{i:07x}a"),
+                branch: "main".into(),
+                commit_timestamp: 1_700_000_000 + i as i64 * 86400,
+                message: format!("commit {i}"),
+            });
+            d.write_file(
+                &td.path().join(format!("salpha/resolution_1/run_{i}.json")),
+            )
+            .unwrap();
+        }
+    }
+
+    #[test]
+    fn scan_counts_and_warnings() {
+        let td = TempDir::new("session-scan").unwrap();
+        build_input(&td);
+        std::fs::write(td.path().join("salpha/resolution_1/bad.json"), "][")
+            .unwrap();
+        let scan = Session::new(td.path()).scan().unwrap();
+        assert_eq!(scan.experiments().len(), 1);
+        assert_eq!(scan.cache_hits(), 0);
+        assert_eq!(scan.cache_misses(), 4);
+        assert_eq!(scan.warnings().len(), 1);
+        assert_eq!(scan.root(), td.path());
+    }
+
+    #[test]
+    fn cached_session_rescan_parses_nothing() {
+        let td = TempDir::new("session-cache").unwrap();
+        build_input(&td);
+        let cache = td.path().join("cache/.talp-cache.json");
+        let cold = Session::new(td.path()).cache(&cache).scan().unwrap();
+        assert_eq!(cold.cache_misses(), 4);
+        assert!(cache.exists(), "scan must persist the cache");
+        let warm = Session::new(td.path()).cache(&cache).scan().unwrap();
+        assert_eq!(warm.cache_hits(), 4);
+        assert_eq!(warm.cache_misses(), 0);
+    }
+
+    #[test]
+    fn missing_root_is_an_error() {
+        let td = TempDir::new("session-missing").unwrap();
+        assert!(Session::new(td.path().join("nope")).scan().is_err());
+    }
+}

@@ -3,10 +3,11 @@
 //! the AOT runtime path (gated on `make artifacts`).
 
 use talp_pages::apps::{run_with_talp, CodeVersion, Genex, TeaLeaf};
-use talp_pages::ci::{CiEngine, MatrixSpec, Repo};
+use talp_pages::ci::{CiEngine, MatrixSpec, PipelineOptions, Repo};
 use talp_pages::cli;
-use talp_pages::pages::{self, scan, timeseries, ReportOptions};
+use talp_pages::pages::{scan, timeseries};
 use talp_pages::pop;
+use talp_pages::session::{self, AnalyzeOptions, Session};
 use talp_pages::sim::{MachineSpec, ResourceConfig};
 use talp_pages::tools::{self, ToolKind};
 use talp_pages::util::fs::TempDir;
@@ -36,8 +37,12 @@ fn full_standalone_workflow() {
         .unwrap();
     }
     let out = td.path().join("report");
-    let summary =
-        pages::generate(&folder, &out, &ReportOptions::default()).unwrap();
+    let summary = Session::new(&folder)
+        .scan()
+        .unwrap()
+        .analyze(&AnalyzeOptions::default())
+        .emit(&mut session::default_emitters(&out))
+        .unwrap();
     assert_eq!(summary.experiments, 1);
     assert_eq!(summary.badges_written, 3);
     let html =
@@ -65,9 +70,12 @@ fn ci_cycle_detects_fig7_fix() {
         machine_tags: vec!["mn5".into()],
     }
     .expand();
-    let opts = ReportOptions {
-        regions: vec!["initialize".into(), "timestep".into()],
-        region_for_badge: Some("timestep".into()),
+    let opts = PipelineOptions {
+        analyze: AnalyzeOptions {
+            regions: vec!["initialize".into(), "timestep".into()],
+            region_for_badge: Some("timestep".into()),
+            ..Default::default()
+        },
         ..Default::default()
     };
     let mut engine = CiEngine::new(td.path()).unwrap();
@@ -218,16 +226,16 @@ fn buggy_vs_fixed_report_difference_survives_html() {
         d.write_file(&folder.join(format!("exp/run_{i}.json"))).unwrap();
     }
     let out = td.path().join("public");
-    pages::generate(
-        &folder,
-        &out,
-        &ReportOptions {
+    Session::new(&folder)
+        .scan()
+        .unwrap()
+        .analyze(&AnalyzeOptions {
             regions: vec!["initialize".into()],
             region_for_badge: Some("initialize".into()),
             ..Default::default()
-        },
-    )
-    .unwrap();
+        })
+        .emit(&mut session::default_emitters(&out))
+        .unwrap();
     let html = std::fs::read_to_string(out.join("exp.html")).unwrap();
     assert!(html.contains("OpenMP Serialization efficiency"));
     assert!(html.contains("Time evolution"));

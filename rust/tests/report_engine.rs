@@ -1,12 +1,16 @@
-//! Report-engine integration tests: golden-file determinism of the
-//! parallel path (`--jobs 1` vs `--jobs 4` byte-for-byte), exact badge
-//! bytes, and the incremental-cache contract (a warm rerun over a
-//! fixture with >= 8 experiments parses zero unchanged artifacts).
+//! Report-engine integration tests over the staged Session pipeline:
+//! golden-file determinism of the parallel path (`jobs = 1` vs
+//! `jobs = 4` byte-for-byte across the whole output tree, `report.json`
+//! included), exact badge bytes, and the incremental-cache contract (a
+//! warm rerun over a fixture with >= 8 experiments parses zero
+//! unchanged artifacts).
 
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use talp_pages::pages::{self, badge, ReportOptions};
+use talp_pages::pages::badge;
+use talp_pages::pages::cache::CACHE_FILE_NAME;
+use talp_pages::session::{self, AnalyzeOptions, EmitSummary, Session};
 use talp_pages::talp::{GitMeta, ProcStats, RegionData, RunData};
 use talp_pages::util::fs::TempDir;
 
@@ -79,6 +83,19 @@ fn build_fixture(root: &Path) {
     }
 }
 
+/// Scan + analyze + emit the full site into `out` (cache lives next to
+/// the pages, like the CLI default).
+fn generate(input: &Path, out: &Path, jobs: usize) -> EmitSummary {
+    Session::new(input)
+        .jobs(jobs)
+        .cache(out.join(CACHE_FILE_NAME))
+        .scan()
+        .unwrap()
+        .analyze(&AnalyzeOptions::default())
+        .emit(&mut session::default_emitters(out))
+        .unwrap()
+}
+
 /// All files under `dir` as (relative path -> bytes).
 fn snapshot(dir: &Path) -> BTreeMap<String, Vec<u8>> {
     fn collect(
@@ -112,9 +129,8 @@ fn jobs_1_and_jobs_4_outputs_are_byte_identical() {
     let out1 = TempDir::new("golden-out1").unwrap();
     let out4 = TempDir::new("golden-out4").unwrap();
 
-    let opts = |jobs: usize| ReportOptions { jobs, ..Default::default() };
-    let s1 = pages::generate(input.path(), out1.path(), &opts(1)).unwrap();
-    let s4 = pages::generate(input.path(), out4.path(), &opts(4)).unwrap();
+    let s1 = generate(input.path(), out1.path(), 1);
+    let s4 = generate(input.path(), out4.path(), 4);
     assert_eq!(s1.experiments, 2);
     assert_eq!(s1.cache_misses, 12);
     assert_eq!(s4.cache_misses, 12);
@@ -124,16 +140,17 @@ fn jobs_1_and_jobs_4_outputs_are_byte_identical() {
     assert_eq!(
         a.keys().collect::<Vec<_>>(),
         b.keys().collect::<Vec<_>>(),
-        "file sets differ between --jobs 1 and --jobs 4"
+        "file sets differ between jobs 1 and jobs 4"
     );
     for (path, bytes) in &a {
         assert_eq!(
             Some(bytes),
             b.get(path),
-            "{path} differs between --jobs 1 and --jobs 4"
+            "{path} differs between jobs 1 and jobs 4"
         );
     }
-    // The golden file set: index + 2 experiment pages + 6 badges + cache.
+    // The golden file set: index + 2 experiment pages + 6 badges +
+    // cache + machine-readable report.
     let expected: Vec<&str> = vec![
         ".talp-cache.json",
         "alpha_strong.html",
@@ -145,6 +162,7 @@ fn jobs_1_and_jobs_4_outputs_are_byte_identical() {
         "badges/beta_weak__8x2.svg",
         "beta_weak.html",
         "index.html",
+        "report.json",
     ];
     assert_eq!(a.keys().map(String::as_str).collect::<Vec<_>>(), expected);
 }
@@ -154,8 +172,7 @@ fn index_page_and_badge_golden_bytes() {
     let input = TempDir::new("golden-in2").unwrap();
     build_fixture(input.path());
     let out = TempDir::new("golden-out2").unwrap();
-    pages::generate(input.path(), out.path(), &ReportOptions::default())
-        .unwrap();
+    generate(input.path(), out.path(), 0);
 
     // Index golden line: the experiment entry with its counts.
     let index =
@@ -189,7 +206,7 @@ fn index_page_and_badge_golden_bytes() {
 #[test]
 fn warm_rerun_on_eight_experiments_parses_nothing() {
     // Acceptance criterion: >= 8 experiments, warm rerun parses zero
-    // unchanged artifacts, verified by the ReportSummary counters.
+    // unchanged artifacts, verified by the EmitSummary counters.
     let input = TempDir::new("warm8-in").unwrap();
     let mut total_files = 0usize;
     for e in 0..8 {
@@ -203,15 +220,14 @@ fn warm_rerun_on_eight_experiments_parses_nothing() {
         }
     }
     let out = TempDir::new("warm8-out").unwrap();
-    let opts = ReportOptions { jobs: 4, ..Default::default() };
 
-    let cold = pages::generate(input.path(), out.path(), &opts).unwrap();
+    let cold = generate(input.path(), out.path(), 4);
     assert_eq!(cold.experiments, 8);
     assert_eq!(cold.cache_hits, 0);
     assert_eq!(cold.cache_misses, total_files);
     let before = snapshot(out.path());
 
-    let warm = pages::generate(input.path(), out.path(), &opts).unwrap();
+    let warm = generate(input.path(), out.path(), 4);
     assert_eq!(warm.cache_hits, total_files, "warm run must hit for all");
     assert_eq!(warm.cache_misses, 0, "warm run must parse nothing");
     let after = snapshot(out.path());
@@ -221,7 +237,7 @@ fn warm_rerun_on_eight_experiments_parses_nothing() {
     run(2, 15.0, 10.0, 3000, "fresh")
         .write_file(&input.path().join("exp_0/talp_2x2_new.json"))
         .unwrap();
-    let mixed = pages::generate(input.path(), out.path(), &opts).unwrap();
+    let mixed = generate(input.path(), out.path(), 4);
     assert_eq!(mixed.cache_hits, total_files);
     assert_eq!(mixed.cache_misses, 1);
 }

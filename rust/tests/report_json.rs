@@ -1,0 +1,223 @@
+//! Acceptance tests for the machine-readable `report.json` contract
+//! (ISSUE 3):
+//!
+//! * golden file: the emitted document matches
+//!   `tests/golden/report.json` byte-for-byte (regenerate with
+//!   `UPDATE_GOLDEN=1 cargo test --test report_json`; a missing golden
+//!   bootstraps itself on first run so fresh checkouts can seed it);
+//! * byte-identical across `jobs = 1` / `jobs = 4` and cold/warm
+//!   metrics cache;
+//! * a warm-cache JsonReport-only emit parses zero artifacts and still
+//!   reports the scan's cache counters correctly (counting lives in
+//!   the scan/analyze stages, not in any emitter);
+//! * schema_version round-trip and rejection.
+
+use std::path::{Path, PathBuf};
+
+use talp_pages::session::{
+    AnalyzeOptions, EmitSummary, Emitter, JsonReport, ReportDocument,
+    Session, SCHEMA_VERSION,
+};
+use talp_pages::talp::{GitMeta, ProcStats, RegionData, RunData};
+use talp_pages::util::fs::TempDir;
+
+/// Hand-built run with exact decimal inputs — no simulator, so the
+/// document is reproducible across machines and runs.
+fn run(
+    ranks: u32,
+    useful_per_proc: f64,
+    elapsed: f64,
+    ts: i64,
+    commit: &str,
+) -> RunData {
+    let region = |name: &str, e: f64, scale: f64| RegionData {
+        name: name.into(),
+        elapsed_s: e,
+        visits: 1,
+        procs: (0..ranks)
+            .map(|r| ProcStats {
+                rank: r,
+                node: 0,
+                elapsed_s: e,
+                useful_s: useful_per_proc * scale,
+                mpi_s: 0.05 * e,
+                mpi_worker_idle_s: 0.05 * e,
+                omp_serialization_s: 0.01 * e,
+                omp_scheduling_s: 0.01 * e,
+                omp_barrier_s: 0.02 * e,
+                useful_instructions: 1_000_000 / ranks as u64,
+                useful_cycles: 500_000 / ranks as u64,
+            })
+            .collect(),
+    };
+    RunData {
+        dlb_version: "test".into(),
+        app: "golden".into(),
+        machine: "mn5".into(),
+        timestamp: ts,
+        ranks,
+        threads: 2,
+        nodes: 1,
+        regions: vec![
+            region("Global", elapsed, 1.0),
+            region("solve", elapsed * 0.6, 0.55),
+        ],
+        git: Some(GitMeta {
+            commit: commit.into(),
+            branch: "main".into(),
+            commit_timestamp: ts,
+            message: String::new(),
+        }),
+    }
+}
+
+/// Fixture: one experiment, two configs; the 2x2 history carries a
+/// 16 -> 10 elapsed drop so a detection appears in the document.
+fn build_fixture(root: &Path) {
+    run(2, 24.0, 16.0, 1000, "slowslow1")
+        .write_file(&root.join("exp/talp_2x2_run0.json"))
+        .unwrap();
+    run(2, 15.0, 10.0, 2000, "fastfast2")
+        .write_file(&root.join("exp/talp_2x2_run1.json"))
+        .unwrap();
+    run(4, 15.0, 10.0, 1000, "slowslow1")
+        .write_file(&root.join("exp/talp_4x2_run0.json"))
+        .unwrap();
+    run(4, 15.0, 10.0, 2000, "fastfast2")
+        .write_file(&root.join("exp/talp_4x2_run1.json"))
+        .unwrap();
+}
+
+/// Emit only `report.json` and return (document text, summary).
+fn emit_json(
+    input: &Path,
+    out: &Path,
+    jobs: usize,
+    cache: Option<PathBuf>,
+) -> (String, EmitSummary) {
+    let mut emitters: Vec<Box<dyn Emitter>> =
+        vec![Box::new(JsonReport::new(out))];
+    let summary = Session::new(input)
+        .jobs(jobs)
+        .cache_opt(cache)
+        .scan()
+        .unwrap()
+        .analyze(&AnalyzeOptions::default())
+        .emit(&mut emitters)
+        .unwrap();
+    let text =
+        std::fs::read_to_string(out.join("report.json")).unwrap();
+    (text, summary)
+}
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/golden/report.json")
+}
+
+#[test]
+fn report_json_matches_golden_and_is_deterministic() {
+    let input = TempDir::new("rj-in").unwrap();
+    build_fixture(input.path());
+
+    // ---- byte-identical across jobs values (cold cache) ----
+    let out1 = TempDir::new("rj-out1").unwrap();
+    let out4 = TempDir::new("rj-out4").unwrap();
+    let (t1, s1) = emit_json(input.path(), out1.path(), 1, None);
+    let (t4, s4) = emit_json(input.path(), out4.path(), 4, None);
+    assert_eq!(s1.cache_misses, 4);
+    assert_eq!(s4.cache_misses, 4);
+    assert_eq!(t1, t4, "report.json differs between jobs 1 and jobs 4");
+
+    // ---- byte-identical across cache temperature ----
+    // (cache outside the scanned root, like the CLI's out-dir default)
+    let cache_dir = TempDir::new("rj-cache").unwrap();
+    let cache = cache_dir.path().join(".talp-cache.json");
+    let outc = TempDir::new("rj-outc").unwrap();
+    let (t_cold, s_cold) =
+        emit_json(input.path(), outc.path(), 2, Some(cache.clone()));
+    assert_eq!(s_cold.cache_misses, 4, "first cached run is cold");
+    let (t_warm, s_warm) =
+        emit_json(input.path(), outc.path(), 2, Some(cache));
+    assert_eq!(s_warm.cache_hits, 4, "second run must be fully warm");
+    assert_eq!(s_warm.cache_misses, 0);
+    assert_eq!(t_cold, t_warm, "report.json differs cold vs warm");
+    assert_eq!(t1, t_cold, "cached and uncached documents differ");
+
+    // ---- the golden file ----
+    let golden = golden_path();
+    if std::env::var_os("UPDATE_GOLDEN").is_some() || !golden.exists() {
+        // Bootstrap/regenerate: commit the result so drift in the
+        // schema shows up as a reviewable diff.
+        std::fs::write(&golden, &t1).unwrap();
+        return;
+    }
+    let want = std::fs::read_to_string(&golden).unwrap();
+    assert_eq!(
+        t1, want,
+        "report.json drift vs tests/golden/report.json; if intentional, \
+         regenerate with UPDATE_GOLDEN=1 cargo test --test report_json"
+    );
+}
+
+#[test]
+fn json_only_emit_keeps_scan_counters_correct() {
+    // Satellite fix: cache hit/miss counters belong to the scan, so
+    // they must stay correct when the HTML emitter is disabled.
+    let input = TempDir::new("rj-counters-in").unwrap();
+    build_fixture(input.path());
+    let out = TempDir::new("rj-counters-out").unwrap();
+    let cache = out.path().join("cache.json");
+
+    let (_, cold) =
+        emit_json(input.path(), out.path(), 0, Some(cache.clone()));
+    assert_eq!(cold.cache_hits, 0);
+    assert_eq!(cold.cache_misses, 4);
+    assert_eq!(cold.pages_written, 0, "no HTML emitter ran");
+    assert_eq!(cold.badges_written, 0, "no badge emitter ran");
+    assert_eq!(cold.files_written, 1, "just report.json");
+
+    let (_, warm) = emit_json(input.path(), out.path(), 0, Some(cache));
+    assert_eq!(warm.cache_hits, 4, "warm JSON-only emit must hit");
+    assert_eq!(warm.cache_misses, 0, "warm JSON-only emit parses nothing");
+    assert_eq!(warm.experiments, 1);
+    assert_eq!(warm.emitters.len(), 1);
+    assert_eq!(warm.emitters[0].name, "json-report");
+}
+
+#[test]
+fn schema_version_round_trips_and_rejects_unknown() {
+    let input = TempDir::new("rj-schema-in").unwrap();
+    build_fixture(input.path());
+    let out = TempDir::new("rj-schema-out").unwrap();
+    let (text, _) = emit_json(input.path(), out.path(), 0, None);
+
+    // Round trip: parse validates the version and reconstructs the
+    // histories with full POP factors.
+    let doc = ReportDocument::parse(&text).unwrap();
+    assert_eq!(doc.schema_version, SCHEMA_VERSION);
+    assert_eq!(doc.experiments.len(), 1);
+    let exp = &doc.experiments[0];
+    assert_eq!(exp.id, "exp");
+    assert_eq!(exp.configs.len(), 2);
+    let (cfg, history) = &exp.configs[0];
+    assert_eq!(cfg, "2x2");
+    assert_eq!(history.len(), 2);
+    assert_eq!(history[0].source, "exp/talp_2x2_run0.json");
+    assert!(history[0].region("Global").unwrap().metrics.elapsed_s > 0.0);
+    // The injected 16 -> 10 improvement is in the detections.
+    assert!(exp
+        .detections
+        .iter()
+        .any(|d| d.str_or("kind", "") == "improvement"
+            && d.str_or("config", "") == "2x2"));
+
+    // Rejection: a bumped version must refuse to parse.
+    let bumped = text.replace(
+        "\"schema_version\": 1",
+        "\"schema_version\": 2",
+    );
+    assert_ne!(text, bumped);
+    let err = ReportDocument::parse(&bumped).unwrap_err().to_string();
+    assert!(err.contains("unsupported schema_version"), "{err}");
+}

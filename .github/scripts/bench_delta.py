@@ -1,0 +1,98 @@
+#!/usr/bin/env python3
+"""Compare two BENCH_JSON records and warn on elapsed regressions.
+
+Usage: bench_delta.py <previous/bench.json> <current/bench.json>
+
+Each file holds one JSON object per line as extracted from the bench
+log (`BENCH_JSON {...}`).  Records pair up by their "bench" name; every
+numeric key ending in `_s` is treated as an elapsed time and compared.
+A regression greater than REGRESSION_THRESHOLD emits a GitHub Actions
+`::warning::` annotation — this step dogfoods the talp-pages gate idea
+on our own bench, but stays advisory: hosted-runner noise must not turn
+the pipeline red, so the exit code is always 0.
+"""
+
+import json
+import sys
+
+REGRESSION_THRESHOLD = 0.20  # warn when elapsed grows by more than 20%
+
+
+def load(path):
+    """Parse a bench.json file into {bench_name: record}.
+
+    One corrupt line (truncated artifact) must not discard the rest.
+    """
+    records = {}
+    try:
+        with open(path, encoding="utf-8") as f:
+            for lineno, line in enumerate(f, 1):
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    rec = json.loads(line)
+                except json.JSONDecodeError as e:
+                    print(f"note: {path}:{lineno} is not valid "
+                          f"BENCH_JSON ({e}) — line skipped")
+                    continue
+                records[rec.get("bench", "?")] = rec
+    except OSError as e:
+        print(f"note: cannot read {path}: {e}")
+    return records
+
+
+def main(argv):
+    if len(argv) != 3:
+        print(__doc__)
+        return 2
+    prev, curr = load(argv[1]), load(argv[2])
+    if not curr:
+        print("note: no current bench record — nothing to compare")
+        return 0
+    if not prev:
+        print(
+            "note: no previous bench-json artifact (first run on this "
+            "branch?) — skipping delta"
+        )
+        return 0
+
+    warned = 0
+    for name, cur_rec in sorted(curr.items()):
+        prev_rec = prev.get(name)
+        if prev_rec is None:
+            print(f"{name}: new bench, no baseline")
+            continue
+        print(f"{name}:")
+        for key, cur_val in cur_rec.items():
+            if not key.endswith("_s"):
+                continue
+            if not isinstance(cur_val, (int, float)):
+                continue
+            prev_val = prev_rec.get(key)
+            if not isinstance(prev_val, (int, float)) or prev_val <= 0:
+                continue
+            ratio = cur_val / prev_val
+            marker = ""
+            if ratio > 1.0 + REGRESSION_THRESHOLD:
+                marker = "  <-- regression"
+                warned += 1
+                print(
+                    f"::warning title=bench regression::{name}.{key} "
+                    f"elapsed grew {prev_val:.4f}s -> {cur_val:.4f}s "
+                    f"({(ratio - 1.0) * 100.0:+.1f}%)"
+                )
+            print(
+                f"  {key:<16} {prev_val:>10.4f}s -> {cur_val:>10.4f}s "
+                f"({(ratio - 1.0) * 100.0:+6.1f}%){marker}"
+            )
+    if warned:
+        print(f"{warned} elapsed metric(s) regressed > "
+              f"{REGRESSION_THRESHOLD:.0%} (advisory only)")
+    else:
+        print("no elapsed regression above threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

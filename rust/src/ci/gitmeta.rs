@@ -11,6 +11,18 @@ use crate::util::fs;
 
 use super::repo::Commit;
 
+/// The [`GitMeta`] a commit stamps into artifacts — shared by
+/// [`stamp_tree`] and the run-store ingest path so files and stored
+/// records can never disagree about a commit's metadata.
+pub fn to_git_meta(commit: &Commit) -> GitMeta {
+    GitMeta {
+        commit: commit.sha.clone(),
+        branch: commit.branch.clone(),
+        commit_timestamp: commit.timestamp,
+        message: commit.message.clone(),
+    }
+}
+
 /// Stamp every `.json` under `dir` that parses as a TALP file and does
 /// not yet carry git metadata.  Returns the number of files stamped.
 pub fn stamp_tree(dir: &Path, commit: &Commit) -> Result<u64> {
@@ -22,12 +34,7 @@ pub fn stamp_tree(dir: &Path, commit: &Commit) -> Result<u64> {
         if run.git.is_some() {
             continue; // history entries already stamped by their pipeline
         }
-        run.git = Some(GitMeta {
-            commit: commit.sha.clone(),
-            branch: commit.branch.clone(),
-            commit_timestamp: commit.timestamp,
-            message: commit.message.clone(),
-        });
+        run.git = Some(to_git_meta(commit));
         run.write_file(&path)?;
         stamped += 1;
     }

@@ -7,14 +7,25 @@
 //! 2. `talp metadata` stamps git info into the fresh JSONs;
 //! 3. the accumulating job downloads the previous pipeline's `talp`
 //!    artifact, unzips it and copies it over (history merge);
-//! 4. the report stage routes through the staged [`crate::session`]
+//! 4. the stamped tree is ingested into the engine-root
+//!    [`crate::store::RunStore`] — the durable cross-commit record.
+//!    Ingest is content-addressed, so only the fresh matrix-job files
+//!    parse; every carried-over history artifact is recognized by hash
+//!    and skipped ([`PipelineResult::store_ingested`] /
+//!    [`PipelineResult::store_deduped`]);
+//! 5. the report stage routes through the staged [`crate::session`]
 //!    pipeline — scan (through the engine-root metrics cache), analyze,
 //!    and emit the full site plus `report.json` into `public/talp`;
 //!    when the pipeline options carry a gate policy, the verdict lands
 //!    in [`PipelineResult::gate`] (the pipeline fails by verdict, not
 //!    by abort — later commits keep running, like CI);
-//! 5. both `talp/` (for the next pipeline) and `public/` (for pages
+//! 6. both `talp/` (for the next pipeline) and `public/` (for pages
 //!    hosting) are uploaded as artifacts, and `public/` is published.
+//!
+//! Because step 4 persists every run, the store outlives the
+//! artifact-merge chain: a gate or report can later run over the full
+//! history (`talp-pages gate --store <engine root>/store`) without any
+//! pipeline work directory surviving.
 //!
 //! Jobs run on OS threads (one per matrix cell), mirroring concurrent
 //! CI runners.
@@ -26,6 +37,7 @@ use anyhow::{Context, Result};
 use crate::apps::{run_with_talp, Genex};
 use crate::session::{AnalyzeOptions, EmitSummary, Session};
 use crate::sim::MachineSpec;
+use crate::store::{self, RunStore};
 use crate::talp::RunData;
 use crate::util::timefmt;
 
@@ -37,6 +49,9 @@ use super::repo::Commit;
 pub struct CiEngine {
     root: PathBuf,
     store: ArtifactStore,
+    /// The persistent cross-commit run store (engine root, outlives
+    /// every pipeline work dir).
+    run_store: RunStore,
     /// Pages hosting directory (the GitLab-Pages stand-in).
     pages_dir: PathBuf,
     next_pipeline: u64,
@@ -58,6 +73,11 @@ pub struct PipelineResult {
     pub commit_short: String,
     pub jobs_run: usize,
     pub history_files: u64,
+    /// Runs this pipeline appended to the persistent store (the fresh
+    /// matrix jobs — O(changed)).
+    pub store_ingested: usize,
+    /// Artifacts the store already held (hashed, never parsed).
+    pub store_deduped: usize,
     pub report: EmitSummary,
     pub talp_artifact_bytes: u64,
     pub wall_time_s: f64,
@@ -83,11 +103,13 @@ impl PipelineResult {
 impl CiEngine {
     pub fn new(root: &Path) -> Result<CiEngine> {
         let store = ArtifactStore::new(&root.join("artifacts"))?;
+        let run_store = RunStore::create_or_open(&root.join("store"))?;
         let pages_dir = root.join("pages");
         std::fs::create_dir_all(&pages_dir)?;
         Ok(CiEngine {
             root: root.to_path_buf(),
             store,
+            run_store,
             pages_dir,
             next_pipeline: 0,
         })
@@ -99,6 +121,12 @@ impl CiEngine {
 
     pub fn artifact_bytes(&self) -> u64 {
         self.store.total_bytes()
+    }
+
+    /// The persistent cross-commit run store every pipeline ingests
+    /// into (rooted at `<engine root>/store`).
+    pub fn run_store(&self) -> &RunStore {
+        &self.run_store
     }
 
     /// Execute one full pipeline for `commit`.
@@ -159,6 +187,18 @@ impl CiEngine {
             copy_missing(&scratch, &talp_dir)?;
         }
 
+        // ---- store ingest: the durable cross-commit record ----
+        // Stamped fresh runs + merged history go through the
+        // content-addressed ingest; only the fresh files parse (the
+        // history is recognized by hash), so the store accumulates
+        // unbounded history at O(changed) cost per pipeline.
+        let ingest = store::ingest_dir(
+            &mut self.run_store,
+            &talp_dir,
+            opts.jobs,
+            Some(&gitmeta::to_git_meta(commit)),
+        )?;
+
         // ---- report stage (scan -> analyze -> emit) ----
         // The metrics cache lives at the engine root (not in the
         // per-pipeline work dir), so pipeline N's scan serves every
@@ -185,6 +225,8 @@ impl CiEngine {
             commit_short: commit.short().to_string(),
             jobs_run,
             history_files,
+            store_ingested: ingest.stored,
+            store_deduped: ingest.already_stored,
             report,
             talp_artifact_bytes,
             wall_time_s: t0.elapsed().as_secs_f64(),
@@ -285,6 +327,9 @@ mod tests {
         assert_eq!(r0.report.experiments, 1); // salpha/resolution_1/mn5
         assert_eq!(r0.report.cache_hits, 0);
         assert_eq!(r0.report.cache_misses, 2);
+        // Both fresh jobs landed in the persistent store.
+        assert_eq!(r0.store_ingested, 2);
+        assert_eq!(r0.store_deduped, 0);
 
         let r1 = engine
             .run_pipeline(&repo.commits[1], &jobs, &opts)
@@ -294,6 +339,10 @@ mod tests {
         // the engine-root metrics cache; only the fresh jobs parse.
         assert_eq!(r1.report.cache_hits, 2);
         assert_eq!(r1.report.cache_misses, 2);
+        // Same O(changed) story for the store: the carried-over history
+        // is recognized by content hash, only the fresh jobs ingest.
+        assert_eq!(r1.store_ingested, 2);
+        assert_eq!(r1.store_deduped, 2);
 
         let r2 = engine
             .run_pipeline(&repo.commits[2], &jobs, &opts)
@@ -302,6 +351,11 @@ mod tests {
         assert!(r2.history_files >= 4, "{}", r2.history_files);
         assert_eq!(r2.report.cache_hits, 4);
         assert_eq!(r2.report.cache_misses, 2);
+        assert_eq!(r2.store_ingested, 2);
+        assert_eq!(r2.store_deduped, 4);
+        // The store now holds the full cross-commit history.
+        assert_eq!(engine.run_store().len(), 6);
+        assert_eq!(engine.run_store().experiment_count(), 1);
 
         // Pages were published with plots (>= 2 history points).
         let page_files: Vec<_> =
@@ -365,6 +419,39 @@ mod tests {
         let badge =
             std::fs::read_to_string(pages.join("badges/gate.svg")).unwrap();
         assert!(badge.contains("failing"));
+    }
+
+    #[test]
+    fn store_backed_report_matches_published_report_json() {
+        // The store is a faithful record: a report generated from it
+        // is byte-identical to the one the last pipeline published
+        // from its merged artifact folder.
+        let td = TempDir::new("ci-store").unwrap();
+        let mut engine = CiEngine::new(td.path()).unwrap();
+        let repo = Repo::genex_history(3, 1, 5, 1_700_000_000);
+        let jobs = small_jobs();
+        let opts = PipelineOptions {
+            analyze: AnalyzeOptions {
+                regions: vec!["initialize".into(), "timestep".into()],
+                region_for_badge: Some("timestep".into()),
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        for commit in &repo.commits {
+            engine.run_pipeline(commit, &jobs, &opts).unwrap();
+        }
+        let published = std::fs::read_to_string(
+            engine.pages_dir().join("talp/report.json"),
+        )
+        .unwrap();
+        let analysis = Session::from_store(td.path().join("store"))
+            .scan()
+            .unwrap()
+            .analyze(&opts.analyze);
+        let from_store = crate::session::JsonReport::document(&analysis)
+            .to_string_pretty();
+        assert_eq!(published, from_store);
     }
 
     #[test]

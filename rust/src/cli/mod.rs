@@ -3,7 +3,10 @@
 //!
 //! Subcommands mirror the paper's tooling:
 //! * `report` (alias `ci-report`) — Fig. 2 folder -> report site;
-//!   `--format json|html|all` picks the emitter set.
+//!   `--format json|html|all` picks the emitter set; `--store` reads
+//!   a persistent run store instead of an artifact folder.
+//! * `ingest`     — append a Fig. 2 folder's artifacts into a
+//!   persistent run store (only new content hashes are parsed).
 //! * `metadata`   — stamp git metadata into fresh TALP JSONs (Fig. 6).
 //! * `run`        — run a workload under TALP on the simulator, emitting
 //!   a TALP JSON (the "performance job" of Fig. 5).
@@ -30,6 +33,7 @@ use crate::session::{
     Session,
 };
 use crate::sim::{MachineSpec, ResourceConfig};
+use crate::store;
 use crate::tools;
 use crate::util::timefmt;
 
@@ -39,13 +43,16 @@ pub const USAGE: &str = "\
 talp-pages — continuous performance monitoring (TALP-Pages reproduction)
 
 USAGE:
-  talp-pages report --input <dir> --output <dir>
+  talp-pages report (--input <dir> | --store <dir>) --output <dir>
              [--format json|html|all] [--regions <r>...]
              [--region-for-badge <r>] [--jobs <n>] [--cache <file>]
              [--gate <policy.json>]      (alias: ci-report)
-  talp-pages gate --input <dir> [--policy <policy.json>]
-             [--output <dir>] [--jobs <n>] [--cache <file>]
-             (exit 0 = pass/warn, 1 = fail)
+  talp-pages ingest --input <dir> --store <dir> [--jobs <n>]
+             [--commit <sha>] [--branch <name>] [--timestamp <iso8601>]
+             [--message <m>] [--compact]
+  talp-pages gate (--input <dir> | --store <dir>)
+             [--policy <policy.json>] [--output <dir>] [--jobs <n>]
+             [--cache <file>]  (exit 0 = pass/warn, 1 = fail)
   talp-pages gate-init --output <policy.json>
   talp-pages metadata --input <dir> --commit <sha> --branch <name>
              --timestamp <iso8601> [--message <m>]
@@ -72,6 +79,7 @@ pub fn main_with_args(argv: &[String]) -> Result<i32> {
     };
     match cmd {
         "report" | "ci-report" => ci_report(&args),
+        "ingest" => ingest_cmd(&args),
         "gate" => gate_cmd(&args),
         "gate-init" => gate_init(&args),
         "metadata" => metadata(&args),
@@ -108,15 +116,44 @@ fn emitters_for(format: &str, out: &Path) -> Result<Vec<Box<dyn Emitter>>> {
     })
 }
 
+/// Build the scan-stage session from the shared source flags: exactly
+/// one of `--input <dir>` (artifact folder) or `--store <dir>` (run
+/// store).  The `default_cache` (used by `report`) only applies to the
+/// folder source — a store-backed scan parses nothing to cache.
+fn source_session(
+    args: &Args,
+    default_cache: Option<PathBuf>,
+) -> Result<Session> {
+    let session = match (args.get("input"), args.get("store")) {
+        (Some(_), Some(_)) => {
+            bail!("--input and --store are mutually exclusive")
+        }
+        (None, None) => {
+            bail!("one of --input <dir> or --store <dir> is required")
+        }
+        (Some(input), None) => Session::new(PathBuf::from(input))
+            .cache_opt(args.get("cache").map(PathBuf::from).or(default_cache)),
+        (None, Some(store)) => {
+            // Same strictness as the exclusivity check above: a store
+            // scan parses nothing, so a user-given cache location is a
+            // misunderstanding, not something to drop silently.
+            if args.has("cache") {
+                bail!("--cache only applies to --input folder scans");
+            }
+            Session::from_store(PathBuf::from(store))
+        }
+    };
+    Ok(session.jobs(args.get_jobs()?))
+}
+
 fn ci_report(args: &Args) -> Result<i32> {
-    let input = PathBuf::from(args.require("input")?);
     let output = PathBuf::from(args.require("output")?);
     let format = args.get("format").unwrap_or("all");
     let mut emitters = emitters_for(format, &output)?;
-    let cache = args
-        .get("cache")
-        .map(PathBuf::from)
-        .unwrap_or_else(|| output.join(pages::cache::CACHE_FILE_NAME));
+    let session = source_session(
+        args,
+        Some(output.join(pages::cache::CACHE_FILE_NAME)),
+    )?;
     let opts = AnalyzeOptions {
         regions: args
             .get_all("regions")
@@ -130,12 +167,7 @@ fn ci_report(args: &Args) -> Result<i32> {
             .transpose()?,
         ..Default::default()
     };
-    let summary = Session::new(&input)
-        .jobs(args.get_jobs()?)
-        .cache(cache)
-        .scan()?
-        .analyze(&opts)
-        .emit(&mut emitters)?;
+    let summary = session.scan()?.analyze(&opts).emit(&mut emitters)?;
     for w in &summary.warnings {
         eprintln!("warning: {w}");
     }
@@ -159,17 +191,83 @@ fn ci_report(args: &Args) -> Result<i32> {
     Ok(0)
 }
 
+/// `talp-pages ingest`: append a Fig. 2 folder's artifacts into the
+/// persistent run store.  Content-addressed and incremental — only
+/// artifacts whose hash is not yet stored are parsed, so CI can ingest
+/// the full accumulated history folder every pipeline for O(changed)
+/// cost.
+fn ingest_cmd(args: &Args) -> Result<i32> {
+    let input = PathBuf::from(args.require("input")?);
+    let store_root = PathBuf::from(args.require("store")?);
+    let mut run_store = store::RunStore::create_or_open(&store_root)?;
+    // Optional ingest-time commit stamp for artifacts that skipped the
+    // `metadata` step (already-stamped runs keep their own metadata).
+    // The companion flags only mean something with --commit — silently
+    // storing unstamped runs would scramble cross-commit ordering.
+    if args.get("commit").is_none() {
+        for flag in ["branch", "timestamp", "message"] {
+            if args.has(flag) {
+                bail!("--{flag} requires --commit");
+            }
+        }
+    }
+    // Strict timestamp parsing: silently stamping ingest wall-clock
+    // time would scramble the cross-commit ordering this metadata
+    // exists to protect.
+    let commit_timestamp = match args.get("timestamp") {
+        Some(t) => timefmt::from_iso8601(t).with_context(|| {
+            format!(
+                "--timestamp '{t}' is not ISO-8601 (want e.g. \
+                 2026-01-01T00:00:00Z or ...+01:00)"
+            )
+        })?,
+        None => timefmt::now_unix(),
+    };
+    let commit_meta = args.get("commit").map(|sha| crate::talp::GitMeta {
+        commit: sha.to_string(),
+        branch: args.get("branch").unwrap_or("main").to_string(),
+        commit_timestamp,
+        message: args.get("message").unwrap_or("").to_string(),
+    });
+    let report = store::ingest_dir(
+        &mut run_store,
+        &input,
+        args.get_jobs()?,
+        commit_meta.as_ref(),
+    )?;
+    for w in &report.warnings {
+        eprintln!("warning: {w}");
+    }
+    println!(
+        "ingest: {} artifact(s) scanned, {} parsed, {} stored, {} already \
+         stored -> {} ({} run(s), {} experiment(s) total)",
+        report.scanned,
+        report.parsed,
+        report.stored,
+        report.already_stored,
+        store_root.display(),
+        run_store.len(),
+        run_store.experiment_count()
+    );
+    if args.has("compact") {
+        let stats = run_store.compact()?;
+        println!(
+            "compacted: {} record(s) across {} shard(s), {} stale file(s) \
+             removed",
+            stats.records, stats.shards, stats.removed_files
+        );
+    }
+    Ok(0)
+}
+
 /// `talp-pages gate`: evaluate a regression-gate policy over a Fig. 2
 /// folder and exit non-zero on failure — the CI enforcement point.
 fn gate_cmd(args: &Args) -> Result<i32> {
-    let input = PathBuf::from(args.require("input")?);
     let policy = match args.get("policy") {
         Some(p) => GatePolicy::from_file(Path::new(p))?,
         None => GatePolicy::default(),
     };
-    let analysis = Session::new(&input)
-        .jobs(args.get_jobs()?)
-        .cache_opt(args.get("cache").map(PathBuf::from))
+    let analysis = source_session(args, None)?
         .scan()?
         .analyze(&AnalyzeOptions { gate: Some(policy), ..Default::default() });
     for w in &analysis.warnings {
@@ -416,9 +514,12 @@ fn ci_sim(args: &Args) -> Result<i32> {
         );
     }
     println!(
-        "pages: {} | artifacts: {} | gate: {}/{} pipeline(s) failed",
+        "pages: {} | artifacts: {} | store: {} run(s) across {} \
+         experiment(s) | gate: {}/{} pipeline(s) failed",
         engine.pages_dir().display(),
         crate::util::stats::fmt_bytes(engine.artifact_bytes()),
+        engine.run_store().len(),
+        engine.run_store().experiment_count(),
         failed_pipelines,
         repo.commits.len()
     );
@@ -736,6 +837,95 @@ mod tests {
         .unwrap_err()
         .to_string();
         assert!(err.contains("json|html|all"), "{err}");
+    }
+
+    #[test]
+    fn ingest_then_store_backed_report_and_gate() {
+        let td = TempDir::new("cli-store").unwrap();
+        let input = td.path().join("talp");
+        for i in 0..2 {
+            assert_eq!(
+                run_cli(&format!(
+                    "run --app genex --machine mn5 --config 2x4 \
+                     --timesteps 2 --seed {} --output {}",
+                    90 + i,
+                    input.join(format!("exp/run_{i}.json")).display()
+                ))
+                .unwrap(),
+                0
+            );
+        }
+        let store = td.path().join("store");
+        assert_eq!(
+            run_cli(&format!(
+                "ingest --input {} --store {} --commit abc123 \
+                 --branch main --timestamp 2024-07-15T12:00:00Z --compact",
+                input.display(),
+                store.display()
+            ))
+            .unwrap(),
+            0
+        );
+        // Store-backed report: no --input anywhere near it.
+        let out = td.path().join("site");
+        assert_eq!(
+            run_cli(&format!(
+                "report --store {} --output {} --format json",
+                store.display(),
+                out.display()
+            ))
+            .unwrap(),
+            0
+        );
+        assert!(out.join("report.json").exists());
+        // Store-backed gating works too (floor-free policy: this tests
+        // the plumbing, not the simulator's absolute efficiencies).
+        let pol = td.path().join("quiet.json");
+        std::fs::write(
+            &pol,
+            r#"{"version":1,"defaults":{"max_elapsed_increase":0.9}}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            run_cli(&format!(
+                "gate --store {} --policy {}",
+                store.display(),
+                pol.display()
+            ))
+            .unwrap(),
+            0
+        );
+        // Source flags are strictly exclusive and required.
+        let err = run_cli(&format!(
+            "report --input {} --store {} --output {}",
+            input.display(),
+            store.display(),
+            out.display()
+        ))
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("mutually exclusive"), "{err}");
+        let err = run_cli(&format!("gate --policy {}", pol.display()))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("--input"), "{err}");
+        // --cache is a folder-scan knob; with --store it is an error,
+        // not silently dropped.
+        let err = run_cli(&format!(
+            "gate --store {} --cache {}",
+            store.display(),
+            td.path().join("c.json").display()
+        ))
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("--cache"), "{err}");
+        // A store path that is not a store errors clearly.
+        assert!(run_cli(&format!(
+            "report --store {} --output {}",
+            input.display(),
+            out.display()
+        ))
+        .is_err());
     }
 
     #[test]

@@ -19,7 +19,14 @@
 //!   cache, time series, change detection, HTML/SVG primitives.
 //! * [`session`] — the staged pipeline every consumer routes through:
 //!   `Session::scan` → `Scan::analyze` → `Analysis::emit` with
-//!   pluggable emitters (HTML site, badges, gate files, `report.json`).
+//!   pluggable sources ([`session::ScanSource`]: artifact folder or
+//!   run store) and pluggable emitters (HTML site, badges, gate files,
+//!   `report.json`).
+//! * [`store`] — the persistent cross-commit history store: a
+//!   content-addressed, sharded JSONL record of every reduced run,
+//!   with incremental ingest (`talp-pages ingest` parses only
+//!   artifacts whose content hash is new), corruption-tolerant
+//!   loading and compaction.
 //! * [`ci`] — an in-process GitLab-like CI engine (pipelines, artifact
 //!   zips, pages hosting) used to reproduce the paper's CI workflow.
 //! * [`gate`] — the regression gate: a declarative policy over the
@@ -82,6 +89,37 @@
 //! its root (outliving per-pipeline work dirs), so pipeline N's report
 //! re-parses only the matrix jobs that just ran — the history it merged
 //! from pipeline N-1's artifact is served from cache.
+//!
+//! # The run store (cross-commit history)
+//!
+//! The cache accelerates one output directory; the [`store`] is the
+//! durable record.  Its on-disk layout (version 1):
+//!
+//! ```text
+//! <store root>/
+//!   .talp-store.json                 # manifest: {"version": 1} — strict:
+//!                                    #   unknown versions are rejected
+//!   shards/
+//!     <experiment-slug>__<RxT>.jsonl # one shard per (experiment, config);
+//!                                    #   each line is one record:
+//!                                    #   {"hash", "experiment", "run"}
+//! ```
+//!
+//! A record's identity is its (source path, content hash) pair —
+//! FNV-1a-64 over the raw bytes, the metrics cache's exact
+//! invalidation rule — so `talp-pages ingest` is O(changed):
+//! already-stored artifacts are hashed but never parsed, while
+//! byte-identical files at different paths stay distinct history
+//! points just as a direct scan keeps them.  Changed content at the
+//! same path supersedes (latest per path wins, matching the current
+//! folder); vanished files stay stored.  Shard loading
+//! is corruption-tolerant (a truncated append becomes a warning, not a
+//! lost store) and [`store::RunStore::compact`] rewrites the shards to
+//! drop corrupt lines and duplicates.  A store-backed session
+//! ([`session::Session::from_store`], CLI `report --store` /
+//! `gate --store`) runs analyze + emit over thousands of stored runs
+//! without opening a single artifact, and its `report.json` is
+//! byte-identical to a direct scan over the same runs.
 
 pub mod apps;
 pub mod cli;
@@ -92,6 +130,7 @@ pub mod pop;
 pub mod runtime;
 pub mod session;
 pub mod sim;
+pub mod store;
 pub mod talp;
 pub mod tools;
 pub mod util;

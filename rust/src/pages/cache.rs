@@ -36,7 +36,17 @@ use std::path::Path;
 use anyhow::{Context, Result};
 
 use crate::pop::RunMetrics;
+use crate::util::hash;
 use crate::util::json::Json;
+
+/// The content-hash key shared by this cache and the persistent run
+/// store (`crate::store`): FNV-1a 64 over the raw artifact bytes,
+/// fixed-width hex.  One key function means an artifact ingested into
+/// the store and one served from the cache can never disagree about
+/// identity.
+pub fn content_hash(bytes: &[u8]) -> String {
+    hash::to_hex(hash::fnv1a_64(bytes))
+}
 
 /// Cache schema version; bump when `RunMetrics`' JSON shape changes
 /// (old caches are discarded wholesale, never migrated — `load`

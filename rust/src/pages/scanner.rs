@@ -34,10 +34,9 @@ use anyhow::{ensure, Result};
 
 use crate::pop::RunMetrics;
 use crate::talp::RunData;
-use crate::util::hash;
 use crate::util::par::parallel_map;
 
-use super::cache::MetricsCache;
+use super::cache::{content_hash, MetricsCache};
 
 /// One experiment folder's parsed content.
 ///
@@ -221,7 +220,9 @@ pub fn discover(root: &Path) -> Result<Vec<(String, Vec<PathBuf>)>> {
     Ok(found)
 }
 
-fn rel_str(root: &Path, path: &Path) -> String {
+/// Scan-root-relative display path (also the store's ingest source
+/// key, so stored runs keep the exact `source` a direct scan yields).
+pub(crate) fn rel_str(root: &Path, path: &Path) -> String {
     path.strip_prefix(root)
         .map(|r| r.to_string_lossy().replace('\\', "/"))
         .unwrap_or_else(|_| path.to_string_lossy().into_owned())
@@ -300,7 +301,7 @@ pub fn scan_metrics(
                 ))
             }
         };
-        let content_hash = hash::to_hex(hash::fnv1a_64(&bytes));
+        let content_hash = content_hash(&bytes);
         if let Some(hit) = cache_ref.lookup(rel, &content_hash) {
             return Outcome::Hit(hit.clone());
         }

@@ -16,6 +16,9 @@ use crate::pages::scanner::MetricExperiment;
 use crate::pages::timeseries::{self, TimeSeries};
 use crate::pop::{self, RunMetrics};
 use crate::util::par::parallel_map;
+// Filesystem-safe experiment ids (page and badge names) use the same
+// sanitizer as the run store's shard names.
+use crate::util::text::slug;
 
 use super::Scan;
 
@@ -107,19 +110,6 @@ pub struct Analysis {
     pub cache_misses: usize,
     /// Regression-gate verdict (when [`AnalyzeOptions::gate`] was set).
     pub gate: Option<GateVerdict>,
-}
-
-/// Filesystem-safe experiment id (shared by page and badge names).
-pub(crate) fn slug(id: &str) -> String {
-    id.chars()
-        .map(|c| {
-            if c.is_ascii_alphanumeric() || c == '-' || c == '_' {
-                c
-            } else {
-                '_'
-            }
-        })
-        .collect()
 }
 
 impl Scan {
@@ -383,11 +373,5 @@ mod tests {
             ea.series[0].series.metric("Global", "elapsed"),
             eb.series[0].series.metric("Global", "elapsed")
         );
-    }
-
-    #[test]
-    fn slug_sanitizes() {
-        assert_eq!(slug("mesh_1/strong scaling"), "mesh_1_strong_scaling");
-        assert_eq!(slug("a-b_c9"), "a-b_c9");
     }
 }

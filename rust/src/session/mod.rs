@@ -15,12 +15,15 @@
 //!    worker pool)
 //! ```
 //!
-//! * [`Session`] owns the *scan-stage* options: the input root, the
+//! * [`Session`] owns the *scan-stage* options: the input source, the
 //!   worker-pool size (`jobs`, 0 = auto) and the metrics-cache
-//!   location.  [`Session::scan`] walks the paper's Fig. 2 folder
-//!   layout through the content-hash cache (`pages::cache`), so on a
-//!   warm run unchanged artifacts skip JSON parse *and* POP reduction
-//!   entirely, and persists the refreshed cache before returning.
+//!   location.  The source is pluggable ([`ScanSource`]):
+//!   [`Session::new`] walks the paper's Fig. 2 folder layout through
+//!   the content-hash cache (`pages::cache`), so on a warm run
+//!   unchanged artifacts skip JSON parse *and* POP reduction entirely;
+//!   [`Session::from_store`] loads the reduced histories straight out
+//!   of a persistent [`crate::store::RunStore`] — zero parsing, no
+//!   matter how many commits of history it holds.
 //! * [`Scan`] is the reduced history: per-experiment
 //!   [`crate::pages::MetricExperiment`] runs plus the cache hit/miss
 //!   counters.  Counting happens *here* — the counters describe the
@@ -56,6 +59,7 @@ use anyhow::Result;
 
 use crate::pages::scanner::{self, MetricExperiment, MetricScan};
 use crate::pages::MetricsCache;
+use crate::store::RunStore;
 
 pub use analysis::{
     Analysis, AnalyzeOptions, BadgeDatum, ConfigSeries, ExperimentAnalysis,
@@ -69,12 +73,32 @@ pub use json_report::{
     SCHEMA_VERSION,
 };
 
+/// Where a session reads its runs from.
+#[derive(Debug, Clone)]
+pub enum ScanSource {
+    /// Walk a Fig. 2 artifact folder, parsing through the metrics
+    /// cache (the classic path).
+    Dir(PathBuf),
+    /// Load reduced runs from a persistent [`crate::store::RunStore`]
+    /// — no artifact is read or parsed at all.
+    Store(PathBuf),
+}
+
+impl ScanSource {
+    /// The path this source reads (scan root or store root).
+    pub fn path(&self) -> &Path {
+        match self {
+            ScanSource::Dir(p) | ScanSource::Store(p) => p,
+        }
+    }
+}
+
 /// Scan-stage options: where to read, how many workers, where the
-/// metrics cache lives.  Build one per input folder, then call
+/// metrics cache lives.  Build one per input source, then call
 /// [`Session::scan`].
 #[derive(Debug, Clone)]
 pub struct Session {
-    root: PathBuf,
+    source: ScanSource,
     jobs: usize,
     cache_path: Option<PathBuf>,
 }
@@ -82,7 +106,19 @@ pub struct Session {
 impl Session {
     /// A session over one Fig. 2 input folder.
     pub fn new(root: impl Into<PathBuf>) -> Session {
-        Session { root: root.into(), jobs: 0, cache_path: None }
+        Session::from_source(ScanSource::Dir(root.into()))
+    }
+
+    /// A session over a persistent run store — `analyze`/`emit` run
+    /// unchanged, but the scan stage parses nothing (the metrics cache
+    /// is irrelevant and ignored for this source).
+    pub fn from_store(root: impl Into<PathBuf>) -> Session {
+        Session::from_source(ScanSource::Store(root.into()))
+    }
+
+    /// A session over any [`ScanSource`].
+    pub fn from_source(source: ScanSource) -> Session {
+        Session { source, jobs: 0, cache_path: None }
     }
 
     /// Worker threads for artifact parsing and per-experiment analysis
@@ -107,22 +143,36 @@ impl Session {
         self
     }
 
-    /// Stage 1: walk the folder, reduce every artifact to
-    /// [`crate::pop::RunMetrics`] through the content-hash cache, and
-    /// persist the refreshed cache.  Unparsable artifacts become
-    /// warnings, not errors — a CI report must survive one corrupt
-    /// file.
+    /// Stage 1: materialize the reduced histories from the source.
+    ///
+    /// * [`ScanSource::Dir`]: walk the folder, reduce every artifact
+    ///   to [`crate::pop::RunMetrics`] through the content-hash cache,
+    ///   and persist the refreshed cache.  Unparsable artifacts become
+    ///   warnings, not errors — a CI report must survive one corrupt
+    ///   file.
+    /// * [`ScanSource::Store`]: load the records of a persistent
+    ///   [`crate::store::RunStore`]; every run counts as a cache hit
+    ///   (nothing parses), corrupt store records become warnings, and
+    ///   an unknown store version is a hard error.
     pub fn scan(self) -> Result<Scan> {
-        let mut cache = match &self.cache_path {
-            Some(p) => MetricsCache::load(p),
-            None => MetricsCache::new(),
+        let (root, scan) = match &self.source {
+            ScanSource::Dir(root) => {
+                let mut cache = match &self.cache_path {
+                    Some(p) => MetricsCache::load(p),
+                    None => MetricsCache::new(),
+                };
+                let scan =
+                    scanner::scan_metrics(root, &mut cache, self.jobs)?;
+                if let Some(p) = &self.cache_path {
+                    cache.save(p)?;
+                }
+                (root.clone(), scan)
+            }
+            ScanSource::Store(root) => {
+                (root.clone(), RunStore::open(root)?.into_scan())
+            }
         };
-        let scan =
-            scanner::scan_metrics(&self.root, &mut cache, self.jobs)?;
-        if let Some(p) = &self.cache_path {
-            cache.save(p)?;
-        }
-        Ok(Scan { root: self.root, jobs: self.jobs, scan })
+        Ok(Scan { root, jobs: self.jobs, scan })
     }
 }
 
@@ -241,5 +291,42 @@ mod tests {
     fn missing_root_is_an_error() {
         let td = TempDir::new("session-missing").unwrap();
         assert!(Session::new(td.path().join("nope")).scan().is_err());
+        // A store source needs an existing store, not just a directory.
+        assert!(Session::from_store(td.path()).scan().is_err());
+    }
+
+    #[test]
+    fn store_backed_scan_parses_nothing_and_matches_dir_scan() {
+        let td = TempDir::new("session-store-in").unwrap();
+        build_input(&td);
+        let sd = TempDir::new("session-store-db").unwrap();
+        let store_root = sd.path().join("store");
+        let mut store =
+            crate::store::RunStore::create_or_open(&store_root).unwrap();
+        crate::store::ingest_dir(&mut store, td.path(), 0, None).unwrap();
+        drop(store);
+
+        let from_dir = Session::new(td.path()).scan().unwrap();
+        let from_store = Session::from_store(&store_root).scan().unwrap();
+        assert_eq!(from_store.cache_hits(), 4, "all runs served stored");
+        assert_eq!(from_store.cache_misses(), 0);
+        assert_eq!(
+            from_dir.experiments().len(),
+            from_store.experiments().len()
+        );
+        let (a, b) = (&from_dir.experiments()[0], &from_store.experiments()[0]);
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.configs(), b.configs());
+        assert_eq!(a.regions(), b.regions());
+        let (ha, hb) =
+            (a.history_for_config("2x8"), b.history_for_config("2x8"));
+        assert_eq!(ha.len(), hb.len());
+        for (ra, rb) in ha.iter().zip(&hb) {
+            assert_eq!(ra.source, rb.source);
+            assert_eq!(
+                ra.region("Global").unwrap().metrics,
+                rb.region("Global").unwrap().metrics
+            );
+        }
     }
 }

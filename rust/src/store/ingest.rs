@@ -1,0 +1,256 @@
+//! Incremental ingest: Fig. 2 artifact folder → [`RunStore`].
+//!
+//! The store is content-addressed, so ingest is O(changed): every
+//! artifact file is read and hashed (cheap), but only files whose
+//! `(path, content hash)` identity is not already stored go through
+//! the JSON parser and the POP reduction.  A warm re-ingest of an
+//! unchanged folder parses zero artifacts — the property `talp-pages
+//! ingest` prints and the store tests assert.
+//!
+//! Commit metadata: runs that already carry [`GitMeta`] (stamped by
+//! `talp-pages metadata` / `ci::gitmeta` in their pipeline) keep it;
+//! runs without it can be stamped at ingest time via the optional
+//! `commit` argument, so history ordering stays commit-based even for
+//! artifacts that skipped the stamping step.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::pages::cache::content_hash;
+use crate::pages::scanner;
+use crate::pop::RunMetrics;
+use crate::talp::{GitMeta, RunData};
+use crate::util::par::parallel_map;
+
+use super::RunStore;
+
+/// What one [`ingest_dir`] pass did.
+#[derive(Debug, Default)]
+pub struct IngestReport {
+    /// Artifact files discovered under the input root.
+    pub scanned: usize,
+    /// Files whose content went through parse + reduce (not stored yet).
+    pub parsed: usize,
+    /// Records appended to the store.
+    pub stored: usize,
+    /// Files skipped because their (path, content hash) identity was
+    /// already stored.
+    pub already_stored: usize,
+    /// Unparsable files (skipped, like the scanner does).
+    pub warnings: Vec<String>,
+}
+
+/// Ingest every artifact under `root` into `store` on up to `jobs`
+/// workers (0 = auto).  Files whose (path, content hash) identity is
+/// already stored are skipped without parsing; fresh files parse +
+/// reduce in parallel and append in deterministic discover order.
+/// `commit`, when given, is stamped into ingested runs that carry no
+/// git metadata.
+pub fn ingest_dir(
+    store: &mut RunStore,
+    root: &Path,
+    jobs: usize,
+    commit: Option<&GitMeta>,
+) -> Result<IngestReport> {
+    enum Outcome {
+        AlreadyStored,
+        Fresh(String, RunMetrics),
+        Bad(String),
+    }
+
+    let found = scanner::discover(root)?;
+    let all: Vec<(String, std::path::PathBuf)> = found
+        .iter()
+        .flat_map(|(_, fs)| {
+            fs.iter().map(|p| (scanner::rel_str(root, p), p.clone()))
+        })
+        .collect();
+
+    let snapshot: &RunStore = store;
+    let outcomes: Vec<Outcome> = parallel_map(&all, jobs, |(rel, path)| {
+        let bytes = match std::fs::read(path) {
+            Ok(b) => b,
+            Err(e) => {
+                return Outcome::Bad(format!(
+                    "skipping {}: {e}",
+                    path.display()
+                ))
+            }
+        };
+        let hash = content_hash(&bytes);
+        if snapshot.contains(rel, &hash) {
+            return Outcome::AlreadyStored;
+        }
+        let parsed = String::from_utf8(bytes)
+            .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))
+            .and_then(|text| RunData::parse_str(&text, path));
+        match parsed {
+            Ok(data) => Outcome::Fresh(hash, RunMetrics::from_run(&data, rel)),
+            Err(e) => {
+                Outcome::Bad(format!("skipping {}: {e:#}", path.display()))
+            }
+        }
+    });
+
+    let mut report = IngestReport { scanned: all.len(), ..Default::default() };
+    let mut fresh: Vec<(String, String, RunMetrics)> = Vec::new();
+    let mut next = outcomes.into_iter();
+    for (id, files) in &found {
+        for _ in files {
+            match next.next().expect("ingest worker skipped a file") {
+                Outcome::AlreadyStored => report.already_stored += 1,
+                Outcome::Fresh(hash, mut run) => {
+                    report.parsed += 1;
+                    if run.git.is_none() {
+                        run.git = commit.cloned();
+                    }
+                    fresh.push((id.clone(), hash, run));
+                }
+                Outcome::Bad(w) => report.warnings.push(w),
+            }
+        }
+    }
+    // One batched append: each touched shard opens once, and a
+    // duplicate identity within the batch (possible only if the same
+    // path was discovered twice) dedups here.
+    report.stored = store.append_all(fresh)?;
+    report.already_stored += report.parsed - report.stored;
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::run_metrics;
+    use super::*;
+    use crate::apps::{run_with_talp, CodeVersion, Genex};
+    use crate::sim::{MachineSpec, ResourceConfig};
+    use crate::util::fs::TempDir;
+
+    fn build_tree(td: &TempDir, runs: usize) {
+        let machine = MachineSpec::marenostrum5();
+        let res = ResourceConfig::new(2, 8);
+        for i in 0..runs {
+            let mut app = Genex::salpha(1, CodeVersion::fixed());
+            app.timesteps = 2;
+            let (d, _) = run_with_talp(&app, &machine, &res, 10 + i as u64, 0);
+            d.write_file(
+                &td.path().join(format!("salpha/res_1/run_{i}.json")),
+            )
+            .unwrap();
+        }
+    }
+
+    #[test]
+    fn cold_then_warm_ingest() {
+        let td = TempDir::new("ingest").unwrap();
+        build_tree(&td, 3);
+        let root = td.path().join("store");
+        let mut store = RunStore::create_or_open(&root).unwrap();
+
+        let cold = ingest_dir(&mut store, td.path(), 0, None).unwrap();
+        assert_eq!(cold.scanned, 3);
+        assert_eq!(cold.parsed, 3);
+        assert_eq!(cold.stored, 3);
+        assert_eq!(cold.already_stored, 0);
+        assert!(cold.warnings.is_empty());
+
+        // Warm re-ingest: everything hashes, nothing parses.
+        let warm = ingest_dir(&mut store, td.path(), 0, None).unwrap();
+        assert_eq!(warm.scanned, 3);
+        assert_eq!(warm.parsed, 0, "warm ingest must parse zero artifacts");
+        assert_eq!(warm.stored, 0);
+        assert_eq!(warm.already_stored, 3);
+
+        // One new file: exactly one parse.
+        build_tree(&td, 4);
+        let incr = ingest_dir(&mut store, td.path(), 0, None).unwrap();
+        assert_eq!(incr.parsed, 1);
+        assert_eq!(incr.stored, 1);
+        assert_eq!(incr.already_stored, 3);
+        assert_eq!(store.len(), 4);
+    }
+
+    #[test]
+    fn restamped_files_supersede_not_duplicate() {
+        // The shipped `metadata` command rewrites artifacts in place;
+        // ingest-after-stamp must replace the unstamped versions, not
+        // double every history point.
+        let td = TempDir::new("ingest-restamp").unwrap();
+        build_tree(&td, 2);
+        let mut store =
+            RunStore::create_or_open(&td.path().join("store")).unwrap();
+        ingest_dir(&mut store, td.path(), 0, None).unwrap();
+        assert_eq!(store.len(), 2);
+
+        let repo = crate::ci::Repo::genex_history(1, 0, 3, 9_000);
+        crate::ci::gitmeta::stamp_tree(td.path(), &repo.commits[0])
+            .unwrap();
+        let re = ingest_dir(&mut store, td.path(), 0, None).unwrap();
+        assert_eq!(re.parsed, 2, "stamped bytes are new content");
+        assert_eq!(re.stored, 2);
+        assert_eq!(store.len(), 2, "superseded, not duplicated");
+        let scan = RunStore::open(store.root()).unwrap().into_scan();
+        assert_eq!(scan.experiments[0].runs.len(), 2);
+        assert!(scan.experiments[0].runs.iter().all(|r| r.git.is_some()));
+    }
+
+    #[test]
+    fn corrupt_artifact_warns_and_survives() {
+        let td = TempDir::new("ingest-bad").unwrap();
+        build_tree(&td, 2);
+        std::fs::write(td.path().join("salpha/res_1/bad.json"), "][")
+            .unwrap();
+        let mut store =
+            RunStore::create_or_open(&td.path().join("store")).unwrap();
+        let rep = ingest_dir(&mut store, td.path(), 0, None).unwrap();
+        assert_eq!(rep.stored, 2);
+        assert_eq!(rep.warnings.len(), 1);
+        assert!(rep.warnings[0].contains("bad.json"));
+        // The corrupt file is not stored: re-ingest warns again but
+        // still parses nothing valid.
+        let rep2 = ingest_dir(&mut store, td.path(), 0, None).unwrap();
+        assert_eq!(rep2.parsed, 0);
+        assert_eq!(rep2.warnings.len(), 1);
+    }
+
+    #[test]
+    fn commit_metadata_stamped_only_when_absent() {
+        let td = TempDir::new("ingest-meta").unwrap();
+        build_tree(&td, 1); // simulator runs carry no git meta
+        let mut store =
+            RunStore::create_or_open(&td.path().join("store")).unwrap();
+        let meta = GitMeta {
+            commit: "feedc0de".into(),
+            branch: "main".into(),
+            commit_timestamp: 4_242,
+            message: "ingest-time stamp".into(),
+        };
+        ingest_dir(&mut store, td.path(), 0, Some(&meta)).unwrap();
+        let scan = RunStore::open(store.root()).unwrap().into_scan();
+        let run = &scan.experiments[0].runs[0];
+        assert_eq!(run.git.as_ref().unwrap().commit, "feedc0de");
+        assert_eq!(run.effective_timestamp(), 4_242);
+
+        // A run that is already stamped keeps its own metadata.
+        let pre = run_metrics("pre.json", 2, 77);
+        let mut store2 =
+            RunStore::create_or_open(&td.path().join("store2")).unwrap();
+        store2.append("exp", "hh", pre).unwrap();
+        let scan2 = RunStore::open(store2.root()).unwrap().into_scan();
+        assert_eq!(
+            scan2.experiments[0].runs[0].git.as_ref().unwrap().commit,
+            "c000004d"
+        );
+    }
+
+    #[test]
+    fn missing_root_is_an_error() {
+        let td = TempDir::new("ingest-missing").unwrap();
+        let mut store =
+            RunStore::create_or_open(&td.path().join("store")).unwrap();
+        assert!(
+            ingest_dir(&mut store, &td.path().join("nope"), 0, None).is_err()
+        );
+    }
+}

@@ -11,4 +11,5 @@ pub mod par;
 pub mod propcheck;
 pub mod rng;
 pub mod stats;
+pub mod text;
 pub mod timefmt;

@@ -1,0 +1,31 @@
+//! Small string helpers shared across layers.
+
+/// Filesystem-safe form of an identifier: every char that is not
+/// ASCII-alphanumeric, `-` or `_` becomes `_`.  Used for experiment
+/// page/badge file names (`session`) and run-store shard names
+/// (`store`) — one function, so the two layers can never disagree
+/// about what an id looks like on disk.
+pub fn slug(id: &str) -> String {
+    id.chars()
+        .map(|c| {
+            if c.is_ascii_alphanumeric() || c == '-' || c == '_' {
+                c
+            } else {
+                '_'
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slug_sanitizes() {
+        assert_eq!(slug("mesh_1/strong scaling"), "mesh_1_strong_scaling");
+        assert_eq!(slug("a-b_c9"), "a-b_c9");
+        assert_eq!(slug(""), "");
+        assert_eq!(slug("."), "_");
+    }
+}

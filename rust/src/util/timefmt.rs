@@ -56,8 +56,10 @@ fn days_from_civil(y: i64, m: u32, d: u32) -> i64 {
     era * 146_097 + doe - 719_468
 }
 
-/// Parse "YYYY-MM-DDTHH:MM:SSZ" (and the fractional-seconds variant) back
-/// to unix seconds.  Returns None on malformed input.
+/// Parse "YYYY-MM-DDTHH:MM:SS" plus optional fractional seconds and an
+/// optional zone (`Z`, `±HH:MM`, `±HHMM`, `±HH` — honored, not ignored)
+/// back to unix seconds.  Returns None on malformed input, including
+/// trailing junk after the seconds field.
 pub fn from_iso8601(s: &str) -> Option<i64> {
     let b = s.as_bytes();
     if b.len() < 19 {
@@ -78,7 +80,49 @@ pub fn from_iso8601(s: &str) -> Option<i64> {
     if !(1..=12).contains(&m) || !(1..=31).contains(&d) || hh > 23 || mm > 59 || ss > 60 {
         return None;
     }
-    Some(days_from_civil(y, m, d) * 86_400 + hh * 3600 + mm * 60 + ss)
+    let base = days_from_civil(y, m, d) * 86_400 + hh * 3600 + mm * 60 + ss;
+
+    // Optional fractional seconds, then an optional zone: `Z`,
+    // `±HH:MM`, `±HHMM` or `±HH`.  CI variables routinely carry a
+    // numeric offset (GitLab's CI_COMMIT_TIMESTAMP is the commit's
+    // local time) — ignoring it would shift history points by hours,
+    // so offsets are honored and any other trailing junk is an error
+    // rather than a silent misread.
+    let mut i = 19;
+    if i < b.len() && b[i] == b'.' {
+        let frac_start = i + 1;
+        i = frac_start;
+        while i < b.len() && b[i].is_ascii_digit() {
+            i += 1;
+        }
+        if i == frac_start {
+            return None;
+        }
+    }
+    let two = |a: u8, c: u8| -> Option<i64> {
+        if a.is_ascii_digit() && c.is_ascii_digit() {
+            Some(((a - b'0') as i64) * 10 + (c - b'0') as i64)
+        } else {
+            None
+        }
+    };
+    match &b[i..] {
+        [] | [b'Z'] | [b'z'] => Some(base),
+        [sign @ (b'+' | b'-'), rest @ ..] => {
+            let (oh, om) = match rest {
+                [h1, h2, b':', m1, m2] => (two(*h1, *h2)?, two(*m1, *m2)?),
+                [h1, h2, m1, m2] => (two(*h1, *h2)?, two(*m1, *m2)?),
+                [h1, h2] => (two(*h1, *h2)?, 0),
+                _ => return None,
+            };
+            if oh > 23 || om > 59 {
+                return None;
+            }
+            let off = oh * 3600 + om * 60;
+            Some(if *sign == b'+' { base - off } else { base + off })
+        }
+        _ => None,
+    }
 }
 
 /// Current wall-clock unix seconds (only used for stamping real runs;
@@ -126,8 +170,23 @@ mod tests {
     #[test]
     fn parse_rejects_malformed() {
         for s in ["", "2024", "2024-13-01T00:00:00Z", "2024-01-01 00:00:00",
-                  "2024-01-01T25:00:00Z", "garbage-junk-data!"] {
+                  "2024-01-01T25:00:00Z", "garbage-junk-data!",
+                  "2024-01-01T00:00:00junk", "2024-01-01T00:00:00+1:00",
+                  "2024-01-01T00:00:00.Z", "2024-01-01T00:00:00+99:00"] {
             assert_eq!(from_iso8601(s), None, "{s}");
+        }
+    }
+
+    #[test]
+    fn parse_honors_utc_offsets() {
+        // GitLab's CI_COMMIT_TIMESTAMP carries the commit's local
+        // offset; all of these name the same instant.
+        let base = from_iso8601("2024-07-15T12:00:00Z").unwrap();
+        for s in ["2024-07-15T12:00:00", "2024-07-15T13:00:00+01:00",
+                  "2024-07-15T11:30:00-00:30", "2024-07-15T13:00:00+0100",
+                  "2024-07-15T13:00:00+01", "2024-07-15T12:00:00.123Z",
+                  "2024-07-15T05:00:00-07:00"] {
+            assert_eq!(from_iso8601(s), Some(base), "{s}");
         }
     }
 

@@ -1,0 +1,261 @@
+//! Acceptance tests for the persistent cross-commit run store
+//! (ISSUE 4):
+//!
+//! * `talp-pages ingest` + `report --store` produces a `report.json`
+//!   byte-identical to a direct `report --input` scan over the same
+//!   runs (and the same holds for the gate verdict files);
+//! * a warm second ingest parses zero artifacts;
+//! * a truncated/corrupt shard record is skipped with a warning that
+//!   surfaces in the report, not a failed report;
+//! * an unknown store version is rejected outright.
+
+use std::path::{Path, PathBuf};
+
+use talp_pages::cli;
+use talp_pages::store::{ingest_dir, RunStore, MANIFEST_FILE_NAME};
+use talp_pages::talp::{GitMeta, ProcStats, RegionData, RunData};
+use talp_pages::util::fs::TempDir;
+
+fn run_cli(line: &str) -> anyhow::Result<i32> {
+    cli::main_with_args(
+        &line.split_whitespace().map(String::from).collect::<Vec<_>>(),
+    )
+}
+
+/// Hand-built run with exact decimal inputs — no simulator, so both
+/// scan paths reduce the very same artifacts.
+fn run(ranks: u32, useful: f64, elapsed: f64, ts: i64, sha: &str) -> RunData {
+    RunData {
+        dlb_version: "test".into(),
+        app: "store-rt".into(),
+        machine: "mn5".into(),
+        timestamp: ts,
+        ranks,
+        threads: 2,
+        nodes: 1,
+        regions: vec![RegionData {
+            name: "Global".into(),
+            elapsed_s: elapsed,
+            visits: 1,
+            procs: (0..ranks)
+                .map(|r| ProcStats {
+                    rank: r,
+                    elapsed_s: elapsed,
+                    useful_s: useful,
+                    mpi_s: 0.05 * elapsed,
+                    ..Default::default()
+                })
+                .collect(),
+        }],
+        git: Some(GitMeta {
+            commit: sha.into(),
+            branch: "main".into(),
+            commit_timestamp: ts,
+            message: String::new(),
+        }),
+    }
+}
+
+/// Two configs; the 2x2 history carries a 16 -> 10 elapsed drop so the
+/// documents contain detections (identity is meaningful, not vacuous).
+fn build_fixture(root: &Path) {
+    run(2, 24.0, 16.0, 1000, "slowslow1")
+        .write_file(&root.join("exp/talp_2x2_run0.json"))
+        .unwrap();
+    run(2, 15.0, 10.0, 2000, "fastfast2")
+        .write_file(&root.join("exp/talp_2x2_run1.json"))
+        .unwrap();
+    run(4, 15.0, 10.0, 1000, "slowslow1")
+        .write_file(&root.join("exp/talp_4x2_run0.json"))
+        .unwrap();
+    run(4, 15.0, 10.0, 2000, "fastfast2")
+        .write_file(&root.join("exp/talp_4x2_run1.json"))
+        .unwrap();
+}
+
+fn read(p: PathBuf) -> String {
+    std::fs::read_to_string(&p)
+        .unwrap_or_else(|e| panic!("{}: {e}", p.display()))
+}
+
+#[test]
+fn store_report_is_byte_identical_to_direct_scan() {
+    let td = TempDir::new("store-rt").unwrap();
+    let input = td.path().join("talp");
+    build_fixture(&input);
+    // A byte-identical copy at another path: a direct scan keeps it as
+    // its own history point, so the store must too.
+    std::fs::copy(
+        input.join("exp/talp_2x2_run0.json"),
+        input.join("exp/talp_2x2_run0_copy.json"),
+    )
+    .unwrap();
+    let store = td.path().join("store");
+
+    assert_eq!(
+        run_cli(&format!(
+            "ingest --input {} --store {}",
+            input.display(),
+            store.display()
+        ))
+        .unwrap(),
+        0
+    );
+
+    // Gate inline too, so the verdict triple is part of the identity
+    // check (quiet policy: the fixture's histories improve, so the
+    // verdict is a pass and the report exits 0).
+    let policy = td.path().join("policy.json");
+    std::fs::write(
+        &policy,
+        r#"{"version":1,"defaults":{"max_elapsed_increase":0.9}}"#,
+    )
+    .unwrap();
+    let direct = td.path().join("site-direct");
+    let stored = td.path().join("site-store");
+    for (flag, src, out) in
+        [("--input", &input, &direct), ("--store", &store, &stored)]
+    {
+        assert_eq!(
+            run_cli(&format!(
+                "report {flag} {} --output {} --format all --gate {}",
+                src.display(),
+                out.display(),
+                policy.display()
+            ))
+            .unwrap(),
+            0
+        );
+    }
+
+    let d = read(direct.join("report.json"));
+    let s = read(stored.join("report.json"));
+    assert!(
+        d.contains("\"kind\": \"improvement\""),
+        "fixture must produce a detection, or identity is vacuous"
+    );
+    assert_eq!(d, s, "store-backed report.json differs from direct scan");
+    // The gate triple is byte-identical too (path-free outputs).
+    for f in ["gate.json", "gate.md", "gate.xml"] {
+        assert_eq!(read(direct.join(f)), read(stored.join(f)), "{f}");
+    }
+    // And the HTML index renders the same experiment set.
+    assert!(stored.join("index.html").exists());
+}
+
+#[test]
+fn warm_reingest_parses_zero_artifacts() {
+    let td = TempDir::new("store-warm").unwrap();
+    let input = td.path().join("talp");
+    build_fixture(&input);
+    let mut store =
+        RunStore::create_or_open(&td.path().join("store")).unwrap();
+
+    let cold = ingest_dir(&mut store, &input, 0, None).unwrap();
+    assert_eq!(cold.scanned, 4);
+    assert_eq!(cold.parsed, 4);
+    assert_eq!(cold.stored, 4);
+
+    let warm = ingest_dir(&mut store, &input, 0, None).unwrap();
+    assert_eq!(warm.scanned, 4);
+    assert_eq!(warm.parsed, 0, "warm ingest must parse zero artifacts");
+    assert_eq!(warm.stored, 0);
+    assert_eq!(warm.already_stored, 4);
+
+    // Adding one run re-parses exactly the new file.
+    run(2, 14.0, 9.5, 3000, "third0003")
+        .write_file(&input.join("exp/talp_2x2_run2.json"))
+        .unwrap();
+    let incr = ingest_dir(&mut store, &input, 0, None).unwrap();
+    assert_eq!(incr.parsed, 1);
+    assert_eq!(incr.stored, 1);
+    assert_eq!(store.len(), 5);
+}
+
+#[test]
+fn corrupt_shard_record_warns_but_report_survives() {
+    let td = TempDir::new("store-corrupt").unwrap();
+    let input = td.path().join("talp");
+    build_fixture(&input);
+    let store = td.path().join("store");
+    assert_eq!(
+        run_cli(&format!(
+            "ingest --input {} --store {}",
+            input.display(),
+            store.display()
+        ))
+        .unwrap(),
+        0
+    );
+
+    // Simulate a CI job killed mid-append: truncated trailing record.
+    let shard = store.join("shards/exp__2x2.jsonl");
+    assert!(shard.exists(), "expected shard layout shards/<exp>__<cfg>");
+    let mut text = read(shard.clone());
+    text.push_str("{\"hash\":\"zzz\",\"experiment\":\"exp\",\"run\":{");
+    std::fs::write(&shard, text).unwrap();
+
+    let reloaded = RunStore::open(&store).unwrap();
+    assert_eq!(reloaded.len(), 4, "intact records must survive");
+    assert_eq!(reloaded.warnings().len(), 1);
+    assert!(reloaded.warnings()[0].contains("exp__2x2.jsonl"));
+
+    // The report still emits, carrying the warning in its document.
+    let out = td.path().join("site");
+    assert_eq!(
+        run_cli(&format!(
+            "report --store {} --output {} --format json",
+            store.display(),
+            out.display()
+        ))
+        .unwrap(),
+        0
+    );
+    let doc = read(out.join("report.json"));
+    assert!(doc.contains("skipping corrupt record"), "{doc}");
+
+    // Compaction heals the shard: clean reload, report drops the
+    // warning.
+    let mut healing = RunStore::open(&store).unwrap();
+    healing.compact().unwrap();
+    let healed = RunStore::open(&store).unwrap();
+    assert!(healed.warnings().is_empty());
+    assert_eq!(healed.len(), 4);
+}
+
+#[test]
+fn unknown_store_version_is_rejected() {
+    let td = TempDir::new("store-ver").unwrap();
+    let input = td.path().join("talp");
+    build_fixture(&input);
+    let store = td.path().join("store");
+    assert_eq!(
+        run_cli(&format!(
+            "ingest --input {} --store {}",
+            input.display(),
+            store.display()
+        ))
+        .unwrap(),
+        0
+    );
+    std::fs::write(store.join(MANIFEST_FILE_NAME), "{\"version\": 7}")
+        .unwrap();
+
+    // Reading rejects...
+    let err = RunStore::open(&store).unwrap_err().to_string();
+    assert!(err.contains('7'), "{err}");
+    // ...report --store rejects...
+    assert!(run_cli(&format!(
+        "report --store {} --output {} --format json",
+        store.display(),
+        td.path().join("x").display()
+    ))
+    .is_err());
+    // ...and a fresh ingest refuses to clobber the unknown store.
+    assert!(run_cli(&format!(
+        "ingest --input {} --store {}",
+        input.display(),
+        store.display()
+    ))
+    .is_err());
+}

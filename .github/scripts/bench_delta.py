@@ -1,15 +1,27 @@
 #!/usr/bin/env python3
-"""Compare two BENCH_JSON records and warn on elapsed regressions.
+"""Compare BENCH_JSON records and warn on elapsed regressions.
 
-Usage: bench_delta.py <previous/bench.json> <current/bench.json>
+Usage:
+    bench_delta.py [--baseline FILE] [--write-merged FILE] \\
+                   <previous/bench.json> <current/bench.json>
 
 Each file holds one JSON object per line as extracted from the bench
-log (`BENCH_JSON {...}`).  Records pair up by their "bench" name; every
-numeric key ending in `_s` is treated as an elapsed time and compared.
-A regression greater than REGRESSION_THRESHOLD emits a GitHub Actions
-`::warning::` annotation — this step dogfoods the talp-pages gate idea
-on our own bench, but stays advisory: hosted-runner noise must not turn
-the pipeline red, so the exit code is always 0.
+log (`BENCH_JSON {...}`).  Records pair up by their "bench" name —
+every named record is compared, not just the first — and every numeric
+key ending in `_s` is treated as an elapsed time.  A regression greater
+than REGRESSION_THRESHOLD emits a GitHub Actions `::warning::`
+annotation per bench/metric — this step dogfoods the talp-pages gate
+idea on our own bench, but stays advisory: hosted-runner noise must not
+turn the pipeline red, so the exit code is always 0.
+
+`--baseline` names the committed seed file (benches/BENCH_hotpaths.json)
+used when no previous-run artifact exists — the first run on a branch
+still gets a comparison.  Zero/non-positive baseline values mean "no
+measurement yet" and are skipped.
+
+`--write-merged` writes baseline ∪ previous ∪ current (later wins) so
+the uploaded artifact always carries every known bench record, even if
+one bench was skipped or crashed in this particular run.
 """
 
 import json
@@ -36,27 +48,18 @@ def load(path):
                     print(f"note: {path}:{lineno} is not valid "
                           f"BENCH_JSON ({e}) — line skipped")
                     continue
-                records[rec.get("bench", "?")] = rec
+                name = rec.get("bench", "?")
+                if name in records:
+                    print(f"note: {path}:{lineno} repeats bench "
+                          f"'{name}' — later record wins")
+                records[name] = rec
     except OSError as e:
         print(f"note: cannot read {path}: {e}")
     return records
 
 
-def main(argv):
-    if len(argv) != 3:
-        print(__doc__)
-        return 2
-    prev, curr = load(argv[1]), load(argv[2])
-    if not curr:
-        print("note: no current bench record — nothing to compare")
-        return 0
-    if not prev:
-        print(
-            "note: no previous bench-json artifact (first run on this "
-            "branch?) — skipping delta"
-        )
-        return 0
-
+def compare(prev, curr):
+    """Print the per-bench delta table; return the warning count."""
     warned = 0
     for name, cur_rec in sorted(curr.items()):
         prev_rec = prev.get(name)
@@ -64,6 +67,7 @@ def main(argv):
             print(f"{name}: new bench, no baseline")
             continue
         print(f"{name}:")
+        compared = 0
         for key, cur_val in cur_rec.items():
             if not key.endswith("_s"):
                 continue
@@ -71,7 +75,10 @@ def main(argv):
                 continue
             prev_val = prev_rec.get(key)
             if not isinstance(prev_val, (int, float)) or prev_val <= 0:
+                # 0 = "no measurement yet" (the committed seed
+                # baseline) — nothing to compare against.
                 continue
+            compared += 1
             ratio = cur_val / prev_val
             marker = ""
             if ratio > 1.0 + REGRESSION_THRESHOLD:
@@ -86,11 +93,70 @@ def main(argv):
                 f"  {key:<16} {prev_val:>10.4f}s -> {cur_val:>10.4f}s "
                 f"({(ratio - 1.0) * 100.0:+6.1f}%){marker}"
             )
-    if warned:
-        print(f"{warned} elapsed metric(s) regressed > "
-              f"{REGRESSION_THRESHOLD:.0%} (advisory only)")
+        if compared == 0:
+            print("  (no comparable elapsed metrics yet)")
+    for name in sorted(set(prev) - set(curr)):
+        print(f"{name}: present in baseline but not in this run")
+    return warned
+
+
+def main(argv):
+    args = list(argv[1:])
+    baseline_path = None
+    merged_path = None
+    while args and args[0].startswith("--"):
+        flag = args.pop(0)
+        if flag == "--baseline" and args:
+            baseline_path = args.pop(0)
+        elif flag == "--write-merged" and args:
+            merged_path = args.pop(0)
+        else:
+            print(__doc__)
+            return 2
+    if len(args) != 2:
+        print(__doc__)
+        return 2
+
+    baseline = load(baseline_path) if baseline_path else {}
+    prev, curr = load(args[0]), load(args[1])
+
+    # The reference is the previous run when one exists, else the
+    # committed seed baseline.
+    reference = prev if prev else baseline
+    if prev:
+        print(f"comparing against previous run ({args[0]})")
+    elif baseline:
+        print(
+            "note: no previous bench-json artifact (first run on this "
+            f"branch?) — comparing against committed baseline "
+            f"({baseline_path})"
+        )
+
+    warned = 0
+    if not curr:
+        print("note: no current bench record — nothing to compare")
+    elif not reference:
+        print("note: no baseline at all — skipping delta")
     else:
-        print("no elapsed regression above threshold")
+        warned = compare(reference, curr)
+        if warned:
+            print(f"{warned} elapsed metric(s) regressed > "
+                  f"{REGRESSION_THRESHOLD:.0%} (advisory only)")
+        else:
+            print("no elapsed regression above threshold")
+
+    if merged_path:
+        merged = {}
+        for source in (baseline, prev, curr):
+            merged.update(source)
+        # Drop the baseline's self-description record once real
+        # records exist.
+        if len(merged) > 1:
+            merged.pop("_meta", None)
+        with open(merged_path, "w", encoding="utf-8") as f:
+            for name in sorted(merged):
+                f.write(json.dumps(merged[name]) + "\n")
+        print(f"merged {len(merged)} record(s) -> {merged_path}")
     return 0
 
 

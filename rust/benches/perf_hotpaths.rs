@@ -1,15 +1,22 @@
 //! §Perf — micro-benchmarks of the hot paths (DESIGN.md §9):
 //!   1. simulator event throughput (engine),
-//!   2. TALP JSON parse throughput (report ingest),
+//!   2. TALP JSON parse throughput (report ingest): tree vs streaming,
 //!   3. full report generation over a large history corpus,
-//!   4. trace post-processing throughput (merge + dimemas replay).
+//!   4. the store hot paths: cold 5k-run shard load and a warm
+//!      `report --store` over the 500-run corpus,
+//!   5. trace post-processing throughput (merge + dimemas replay).
 //!
-//! Targets: report of a 1k-run corpus < 1 s; simulator >= 1M events/s.
-//! Before/after numbers live in EXPERIMENTS.md §Perf.
+//! Targets: report of a 1k-run corpus < 1 s; simulator >= 1M events/s;
+//! `RunData::from_slice` >= 2x the tree parse.  Every section emits a
+//! machine-readable `BENCH_JSON {...}` line; CI compares each named
+//! record against the previous run (`.github/scripts/bench_delta.py`)
+//! with `benches/BENCH_hotpaths.json` as the committed seed baseline.
 
 use talp_pages::apps::{self, run_with_talp, CodeVersion, Genex, TeaLeaf};
+use talp_pages::pop::RunMetrics;
 use talp_pages::session::{self, AnalyzeOptions, Session};
 use talp_pages::sim::{MachineSpec, ResourceConfig};
+use talp_pages::store::{ingest_dir, RunStore};
 use talp_pages::talp::{GitMeta, RunData};
 use talp_pages::tools::postprocess::{dimemas, merge};
 use talp_pages::tools::resources::ResourceMeter;
@@ -43,21 +50,40 @@ fn main() {
     );
     assert!(eps > 1e6, "simulator below target: {eps}");
 
-    // 2. TALP JSON parse throughput.
+    // 2. TALP JSON parse throughput: the tree path vs the streaming
+    //    `from_slice` path over the identical document.
     let (data, _) = run_with_talp(&app, &machine, &cfg, 2, 0);
     let text = data.to_json().to_string_pretty();
     let bytes = text.len() as f64;
-    let m = bench("talp json: parse+validate", 3, 200, || {
+    let m_tree = bench("talp json: parse+validate", 3, 200, || {
         let j = Json::parse(&text).unwrap();
         let r = RunData::from_json(&j).unwrap();
         std::hint::black_box(r.ranks);
     });
-    println!("{}", m.report());
+    println!("{}", m_tree.report());
     println!(
         "  -> {:.1} MB/s over {:.1} KB docs",
-        bytes / m.mean_s / 1e6,
+        bytes / m_tree.mean_s / 1e6,
         bytes / 1e3
     );
+    let bench_path = std::path::Path::new("bench.json");
+    let m_slice = bench("talp json: from_slice vs tree", 3, 200, || {
+        let r = RunData::from_slice(text.as_bytes(), bench_path).unwrap();
+        std::hint::black_box(r.ranks);
+    });
+    println!("{}", m_slice.report());
+    println!(
+        "  -> {:.1} MB/s, {:.2}x over the tree parse (target >= 2x)",
+        bytes / m_slice.mean_s / 1e6,
+        m_tree.min_s / m_slice.min_s.max(1e-12)
+    );
+    let record = Json::from_pairs(vec![
+        ("bench", Json::Str("talp_json_parse".into())),
+        ("doc_kb", Json::Num(bytes / 1e3)),
+        ("tree_s", Json::Num(m_tree.min_s)),
+        ("from_slice_s", Json::Num(m_slice.min_s)),
+    ]);
+    println!("BENCH_JSON {}", record.to_string_compact());
 
     // 3. Report generation over a large corpus: 2 experiments x 2
     //    configs x 125 commits = 500 runs.
@@ -157,7 +183,85 @@ fn main() {
         m_jobs1.min_s
     );
 
-    // 4. Trace post-processing throughput.
+    // 4a. Warm `report --store`: ingest the 500-run corpus once, then
+    //     measure analyze+emit straight from the store (zero parsing —
+    //     the path a dashboard pipeline hits on every commit).
+    let sd = TempDir::new("perf-store").unwrap();
+    let store_root = sd.path().join("store");
+    {
+        let mut store = RunStore::create_or_open(&store_root).unwrap();
+        let rep = ingest_dir(&mut store, td.path(), 0, None).unwrap();
+        assert_eq!(rep.stored, 500, "corpus must fully ingest");
+    }
+    let store_out = TempDir::new("perf-store-out").unwrap();
+    let m_store = bench("store: warm report --store (500)", 1, 5, || {
+        let s = Session::from_store(&store_root)
+            .scan()
+            .unwrap()
+            .analyze(&AnalyzeOptions::default())
+            .emit(&mut session::default_emitters(store_out.path()))
+            .unwrap();
+        assert_eq!(s.cache_misses, 0, "store scans parse nothing");
+        std::hint::black_box(s.pages_written);
+    });
+    println!("{}", m_store.report());
+    let record = Json::from_pairs(vec![
+        ("bench", Json::Str("report_store_500".into())),
+        ("corpus_runs", Json::Num(500.0)),
+        ("warm_s", Json::Num(m_store.min_s)),
+    ]);
+    println!("BENCH_JSON {}", record.to_string_compact());
+
+    // 4b. Cold shard load at "thousands of stored runs" scale: 5k
+    //     records across 10 experiments x 2 configs, timed through
+    //     RunStore::open (parallel shard decode).
+    let bd = TempDir::new("perf-store5k").unwrap();
+    let big_root = bd.path().join("store");
+    {
+        let mut store = RunStore::create_or_open(&big_root).unwrap();
+        let (base_run, _) =
+            run_with_talp(&g, &machine, &configs[0], 7, 0);
+        let mut batch = Vec::with_capacity(5000);
+        for exp in 0..10u32 {
+            for i in 0..500u32 {
+                let mut d = base_run.clone();
+                d.timestamp = 1_700_000_000 + i as i64 * 60;
+                d.git = Some(GitMeta {
+                    commit: format!("{exp:02x}{i:06x}bbbbbbbb"),
+                    branch: "main".into(),
+                    commit_timestamp: d.timestamp,
+                    message: String::new(),
+                });
+                let source = format!("exp{exp}/runs/run_{i}.json");
+                let rm = RunMetrics::from_run(&d, &source);
+                batch.push((
+                    format!("exp{exp}/runs"),
+                    format!("{exp:04x}{i:08x}"),
+                    rm,
+                ));
+            }
+        }
+        let appended = store.append_all(batch).unwrap();
+        assert_eq!(appended, 5000, "5k distinct records must append");
+    }
+    let m_load = bench("store: cold load 5k-run shards", 0, 3, || {
+        let s = RunStore::open(&big_root).unwrap();
+        assert_eq!(s.len(), 5000);
+        std::hint::black_box(s.len());
+    });
+    println!("{}", m_load.report());
+    println!(
+        "  -> {:.0} records/s",
+        5000.0 / m_load.min_s.max(1e-12)
+    );
+    let record = Json::from_pairs(vec![
+        ("bench", Json::Str("store_load_5k".into())),
+        ("stored_runs", Json::Num(5000.0)),
+        ("cold_load_s", Json::Num(m_load.min_s)),
+    ]);
+    println!("BENCH_JSON {}", record.to_string_compact());
+
+    // 5. Trace post-processing throughput.
     let ttd = TempDir::new("perf-trace").unwrap();
     let small = {
         let mut t = TeaLeaf::with_grid(2000, 2000);

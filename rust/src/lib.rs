@@ -120,6 +120,29 @@
 //! `gate --store`) runs analyze + emit over thousands of stored runs
 //! without opening a single artifact, and its `report.json` is
 //! byte-identical to a direct scan over the same runs.
+//!
+//! # Streaming vs tree JSON
+//!
+//! The crate has two JSON APIs over one grammar and one formatter
+//! (module docs: [`util::json`]):
+//!
+//! * **Streaming** — [`util::json::JsonReader`] (pull/event parser
+//!   over `&[u8]`, zero-copy `Cow<str>` strings, byte-offset errors)
+//!   and [`util::json::JsonWriter`] (direct-to-buffer serializer).
+//!   This is the hot artifact → store → report path:
+//!   [`talp::RunData::from_slice`] / [`talp::RunData::write_to`],
+//!   [`pop::RunMetrics::from_events`] / [`pop::RunMetrics::write_to`],
+//!   store shard lines, the metrics cache and `report.json` emission
+//!   all stream — a warm `report --store` never materializes a
+//!   [`util::json::Json`] tree.  Use it when decoding or encoding many
+//!   documents of a known schema, where allocation is the cost that
+//!   matters.
+//! * **Tree** — [`util::json::Json`], the order-preserving value
+//!   model.  Use it for configuration files, tests, one-off documents
+//!   and anywhere ergonomics beat throughput.  `Json::parse` and
+//!   `to_string_compact`/`to_string_pretty` are built *on* the
+//!   streaming layer, so the two APIs accept the same documents and
+//!   emit identical bytes by construction.
 
 pub mod apps;
 pub mod cli;

@@ -37,7 +37,7 @@ use anyhow::{Context, Result};
 
 use crate::pop::RunMetrics;
 use crate::util::hash;
-use crate::util::json::Json;
+use crate::util::json::{Event, Json, JsonReader, JsonWriter};
 
 /// The content-hash key shared by this cache and the persistent run
 /// store (`crate::store`): FNV-1a 64 over the raw artifact bytes,
@@ -79,36 +79,16 @@ impl MetricsCache {
 
     /// Load from disk; a missing, unreadable, corrupt or
     /// version-mismatched file yields an empty cache (a cold start is
-    /// always safe — the cache is a pure accelerator).
+    /// always safe — the cache is a pure accelerator).  The decode is
+    /// a single streaming pass over the raw bytes — no `Json` tree —
+    /// and is all-or-nothing: any malformed entry discards the whole
+    /// file (we wrote it; a bad entry means the file is not ours or is
+    /// damaged, and a cold start costs only one re-parse).
     pub fn load(path: &Path) -> MetricsCache {
-        let Ok(text) = std::fs::read_to_string(path) else {
+        let Ok(bytes) = std::fs::read(path) else {
             return MetricsCache::new();
         };
-        let Ok(j) = Json::parse(&text) else {
-            return MetricsCache::new();
-        };
-        if j.num_or("version", 0.0) as u64 != CACHE_VERSION {
-            return MetricsCache::new();
-        }
-        let mut cache = MetricsCache::new();
-        let Some(entries) = j.get("entries").and_then(Json::as_obj) else {
-            return cache;
-        };
-        for (path_key, ej) in entries {
-            let Some(hash) = ej.get("hash").and_then(Json::as_str) else {
-                continue;
-            };
-            let Some(run) =
-                ej.get("run").and_then(|r| RunMetrics::from_json(r).ok())
-            else {
-                continue;
-            };
-            cache.entries.insert(
-                path_key.clone(),
-                Entry { hash: hash.to_string(), run },
-            );
-        }
-        cache
+        decode_cache(&bytes).unwrap_or_default()
     }
 
     /// Look up `rel_path`; hits only when the stored content hash
@@ -146,7 +126,7 @@ impl MetricsCache {
     pub fn to_json(&self) -> Json {
         let mut entries = Json::obj();
         for (path, e) in &self.entries {
-            entries.set(
+            entries.push_field(
                 path,
                 Json::from_pairs(vec![
                     ("hash", Json::Str(e.hash.clone())),
@@ -155,19 +135,104 @@ impl MetricsCache {
             );
         }
         let mut root = Json::obj();
-        root.set("version", Json::Num(CACHE_VERSION as f64));
-        root.set("entries", entries);
+        root.push_field("version", Json::Num(CACHE_VERSION as f64));
+        root.push_field("entries", entries);
         root
     }
 
-    /// Persist to `path`, creating parent directories.
+    /// Persist to `path`, creating parent directories.  Streams
+    /// straight into one pre-sized buffer (byte-identical to the
+    /// `to_json().to_string_pretty()` tree path — pinned by a test).
     pub fn save(&self, path: &Path) -> Result<()> {
         if let Some(parent) = path.parent() {
             std::fs::create_dir_all(parent)?;
         }
-        std::fs::write(path, self.to_json().to_string_pretty())
+        // ~1.6 KB per pretty-printed single-region entry.
+        let mut w =
+            JsonWriter::with_capacity(256 + self.entries.len() * 1600, true);
+        w.begin_obj();
+        w.key("version");
+        w.num(CACHE_VERSION as f64);
+        w.key("entries");
+        w.begin_obj();
+        for (path_key, e) in &self.entries {
+            w.key(path_key);
+            w.begin_obj();
+            w.key("hash");
+            w.str_val(&e.hash);
+            w.key("run");
+            e.run.write_to(&mut w);
+            w.end_obj();
+        }
+        w.end_obj();
+        w.end_obj();
+        w.newline();
+        std::fs::write(path, w.into_string())
             .with_context(|| format!("writing cache {}", path.display()))
     }
+}
+
+/// Streaming decode of a cache file; `None` means cold start.
+fn decode_cache(bytes: &[u8]) -> Option<MetricsCache> {
+    let mut r = JsonReader::new(bytes);
+    match r.next().ok()? {
+        Event::ObjStart => {}
+        _ => return None,
+    }
+    let mut version: Option<u64> = None;
+    let mut entries: BTreeMap<String, Entry> = BTreeMap::new();
+    loop {
+        match r.next().ok()? {
+            Event::ObjEnd => break,
+            Event::Key(k) => match k.as_ref() {
+                "version" => version = r.u64_opt().ok()?,
+                "entries" => match r.next().ok()? {
+                    Event::ObjStart => loop {
+                        match r.next().ok()? {
+                            Event::ObjEnd => break,
+                            Event::Key(path_key) => {
+                                let path_key = path_key.into_owned();
+                                entries
+                                    .insert(path_key, decode_entry(&mut r)?);
+                            }
+                            _ => unreachable!("object events"),
+                        }
+                    },
+                    _ => return None,
+                },
+                _ => r.skip_value().ok()?,
+            },
+            _ => unreachable!("object events"),
+        }
+    }
+    r.finish().ok()?;
+    // The version key may appear anywhere in the file; validate after
+    // the full pass, like the order-insensitive tree decoder did.
+    (version == Some(CACHE_VERSION)).then_some(MetricsCache { entries })
+}
+
+/// Decode one `{"hash": .., "run": ..}` entry; `None` → cold start.
+fn decode_entry(r: &mut JsonReader<'_>) -> Option<Entry> {
+    match r.next().ok()? {
+        Event::ObjStart => {}
+        _ => return None,
+    }
+    let mut hash: Option<String> = None;
+    let mut run: Option<RunMetrics> = None;
+    loop {
+        match r.next().ok()? {
+            Event::ObjEnd => break,
+            Event::Key(k) => match k.as_ref() {
+                "hash" => {
+                    hash = Some(r.str_opt().ok()??.into_owned());
+                }
+                "run" => run = Some(RunMetrics::from_events(r).ok()?),
+                _ => r.skip_value().ok()?,
+            },
+            _ => unreachable!("object events"),
+        }
+    }
+    Some(Entry { hash: hash?, run: run? })
 }
 
 #[cfg(test)]
@@ -264,6 +329,56 @@ mod tests {
         assert_ne!(text, downgraded, "version field must be present");
         std::fs::write(&path, downgraded).unwrap();
         assert!(MetricsCache::load(&path).is_empty());
+    }
+
+    #[test]
+    fn streamed_save_matches_tree_serialization() {
+        // The pre-sized streaming writer must emit the exact bytes the
+        // old tree path did — cache files stay byte-reproducible
+        // across builds.
+        let td = TempDir::new("cache-stream").unwrap();
+        let path = td.path().join(".talp-cache.json");
+        let mut c = MetricsCache::new();
+        c.insert("exp/a.json", "0123abcd", run_metrics("exp/a.json", 1.5));
+        c.insert("exp/β.json", "ffff0000", run_metrics("exp/β.json", 0.7));
+        c.save(&path).unwrap();
+        assert_eq!(
+            std::fs::read_to_string(&path).unwrap(),
+            c.to_json().to_string_pretty()
+        );
+    }
+
+    #[test]
+    fn byte_level_corruption_is_cold_start() {
+        let td = TempDir::new("cache-bytes").unwrap();
+        let path = td.path().join(".talp-cache.json");
+        let mut c = MetricsCache::new();
+        c.insert("a.json", "aa", run_metrics("a.json", 1.0));
+        c.save(&path).unwrap();
+        let good = std::fs::read(&path).unwrap();
+
+        // Truncated mid-file (killed writer): cold start.
+        std::fs::write(&path, &good[..good.len() / 2]).unwrap();
+        assert!(MetricsCache::load(&path).is_empty());
+
+        // Invalid UTF-8 spliced into a string: cold start, no panic.
+        let mut bad = good.clone();
+        let pos = bad.windows(2).position(|w| w == b"aa").unwrap();
+        bad[pos] = 0xff;
+        std::fs::write(&path, &bad).unwrap();
+        assert!(MetricsCache::load(&path).is_empty());
+
+        // A single malformed entry discards the file wholesale (the
+        // cache is all-or-nothing; cold starts are always safe).
+        let text = String::from_utf8(good.clone()).unwrap();
+        let broken = text.replace("\"hash\"", "\"not_hash\"");
+        assert_ne!(text, broken);
+        std::fs::write(&path, broken).unwrap();
+        assert!(MetricsCache::load(&path).is_empty());
+
+        // And the untouched bytes still load.
+        std::fs::write(&path, &good).unwrap();
+        assert_eq!(MetricsCache::load(&path).len(), 1);
     }
 
     #[test]

@@ -305,10 +305,9 @@ pub fn scan_metrics(
         if let Some(hit) = cache_ref.lookup(rel, &content_hash) {
             return Outcome::Hit(hit.clone());
         }
-        let parsed = String::from_utf8(bytes)
-            .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))
-            .and_then(|text| RunData::parse_str(&text, path));
-        match parsed {
+        // Streaming decode straight from the bytes just hashed — no
+        // UTF-8 revalidation pass, no Json tree.
+        match RunData::from_slice(&bytes, path) {
             Ok(data) => Outcome::Miss(
                 content_hash,
                 RunMetrics::from_run(&data, rel),

@@ -21,7 +21,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::sim::ResourceConfig;
 use crate::talp::{GitMeta, RunData};
-use crate::util::json::Json;
+use crate::util::json::{Event, FieldCursor, Json, JsonReader, JsonWriter};
 
 use super::metrics::{self, RegionMetrics};
 
@@ -92,18 +92,189 @@ impl RunMetrics {
     }
 
     // ---------- cache JSON ----------
+    //
+    // Two symmetric codecs, one schema: the tree pair
+    // (`to_json`/`from_json`) and the streaming pair
+    // (`write_to`/`from_events`) used by the store shards, the metrics
+    // cache and `report.json` emission, where per-run tree building
+    // would dominate the warm path.  The byte-identity tests below pin
+    // them together.
+
+    /// Serialize into `w` (the exact document `to_json` builds).
+    pub fn write_to(&self, w: &mut JsonWriter) {
+        w.begin_obj();
+        w.key("source");
+        w.str_val(&self.source);
+        w.key("app");
+        w.str_val(&self.app);
+        w.key("machine");
+        w.str_val(&self.machine);
+        w.key("timestamp");
+        w.num(self.timestamp as f64);
+        w.key("ranks");
+        w.num(self.ranks as f64);
+        w.key("threads");
+        w.num(self.threads as f64);
+        w.key("nodes");
+        w.num(self.nodes as f64);
+        if let Some(g) = &self.git {
+            w.key("git");
+            w.begin_obj();
+            w.key("commit");
+            w.str_val(&g.commit);
+            w.key("branch");
+            w.str_val(&g.branch);
+            w.key("commit_timestamp");
+            w.num(g.commit_timestamp as f64);
+            w.key("message");
+            w.str_val(&g.message);
+            w.end_obj();
+        }
+        w.key("regions");
+        w.begin_arr();
+        for r in &self.regions {
+            let m = &r.metrics;
+            w.begin_obj();
+            w.key("name");
+            w.str_val(&r.name);
+            w.key("visits");
+            w.num(r.visits as f64);
+            w.key("ncpus");
+            w.num(m.ncpus as f64);
+            w.key("nranks");
+            w.num(m.nranks as f64);
+            w.key("nthreads");
+            w.num(m.nthreads as f64);
+            w.key("elapsed_s");
+            w.num(m.elapsed_s);
+            w.key("total_useful_s");
+            w.num(m.total_useful_s);
+            w.key("total_useful_instructions");
+            w.num(m.total_useful_instructions as f64);
+            w.key("total_useful_cycles");
+            w.num(m.total_useful_cycles as f64);
+            w.key("pe");
+            w.num(m.parallel_efficiency);
+            w.key("mpi_pe");
+            w.num(m.mpi_parallel_efficiency);
+            w.key("mpi_comm_eff");
+            w.num(m.mpi_communication_efficiency);
+            w.key("mpi_lb");
+            w.num(m.mpi_load_balance);
+            w.key("mpi_lb_in");
+            w.num(m.mpi_load_balance_in);
+            w.key("mpi_lb_inter");
+            w.num(m.mpi_load_balance_inter);
+            w.key("omp_pe");
+            w.num(m.omp_parallel_efficiency);
+            w.key("omp_lb");
+            w.num(m.omp_load_balance);
+            w.key("omp_sched_eff");
+            w.num(m.omp_scheduling_efficiency);
+            w.key("omp_serial_eff");
+            w.num(m.omp_serialization_efficiency);
+            w.key("useful_ipc");
+            w.num(m.useful_ipc);
+            w.key("frequency_ghz");
+            w.num(m.frequency_ghz);
+            w.key("insn_per_cpu");
+            w.num(m.insn_per_cpu);
+            w.end_obj();
+        }
+        w.end_arr();
+        w.end_obj();
+    }
+
+    /// Decode one `RunMetrics` object from the event stream (the
+    /// reader sits in value position, e.g. right after a `"run"` key).
+    /// Exactly one value is consumed on success; schema strictness
+    /// mirrors [`RunMetrics::from_json`] — a missing or mistyped
+    /// required field is an error, so a corrupt store/cache entry is
+    /// dropped rather than silently defaulted.
+    pub fn from_events(r: &mut JsonReader<'_>) -> Result<RunMetrics> {
+        match r.next()? {
+            Event::ObjStart => {}
+            _ => bail!("cache entry: not an object"),
+        }
+        let mut source: Option<String> = None;
+        let mut app: Option<String> = None;
+        let mut machine: Option<String> = None;
+        let mut timestamp: Option<f64> = None;
+        let mut ranks: Option<f64> = None;
+        let mut threads: Option<f64> = None;
+        let mut nodes: Option<f64> = None;
+        let mut git: Option<GitMeta> = None;
+        let mut saw_regions = false;
+        let mut regions: Vec<RegionSummary> = Vec::new();
+        loop {
+            match r.next()? {
+                Event::ObjEnd => break,
+                Event::Key(k) => match k.as_ref() {
+                    "source" => source = r.str_opt()?.map(|s| s.into_owned()),
+                    "app" => app = r.str_opt()?.map(|s| s.into_owned()),
+                    "machine" => {
+                        machine = r.str_opt()?.map(|s| s.into_owned())
+                    }
+                    "timestamp" => timestamp = r.f64_opt()?,
+                    "ranks" => ranks = r.f64_opt()?,
+                    "threads" => threads = r.f64_opt()?,
+                    "nodes" => nodes = r.f64_opt()?,
+                    "git" => git = Some(decode_git(r)?),
+                    "regions" => {
+                        saw_regions = true;
+                        match r.next()? {
+                            Event::ArrStart => loop {
+                                match r.next()? {
+                                    Event::ArrEnd => break,
+                                    Event::ObjStart => {
+                                        regions.push(decode_region(r)?)
+                                    }
+                                    _ => bail!(
+                                        "cache region: not an object"
+                                    ),
+                                }
+                            },
+                            _ => bail!("cache entry: regions is not a list"),
+                        }
+                    }
+                    _ => r.skip_value()?,
+                },
+                _ => unreachable!("object events"),
+            }
+        }
+        if !saw_regions {
+            bail!("cache entry: missing regions");
+        }
+        if regions.is_empty() {
+            bail!("cache entry: no regions");
+        }
+        let num = |v: Option<f64>, key: &str| -> Result<f64> {
+            v.with_context(|| format!("cache entry: missing {key}"))
+        };
+        Ok(RunMetrics {
+            source: source.context("cache entry: missing source")?,
+            app: app.unwrap_or_else(|| "unknown".to_string()),
+            machine: machine.unwrap_or_else(|| "unknown".to_string()),
+            timestamp: num(timestamp, "timestamp")? as i64,
+            ranks: num(ranks, "ranks")? as u32,
+            threads: num(threads, "threads")? as u32,
+            nodes: num(nodes, "nodes")? as u32,
+            git,
+            regions,
+        })
+    }
 
     pub fn to_json(&self) -> Json {
         let mut root = Json::obj();
-        root.set("source", Json::Str(self.source.clone()));
-        root.set("app", Json::Str(self.app.clone()));
-        root.set("machine", Json::Str(self.machine.clone()));
-        root.set("timestamp", Json::Num(self.timestamp as f64));
-        root.set("ranks", Json::Num(self.ranks as f64));
-        root.set("threads", Json::Num(self.threads as f64));
-        root.set("nodes", Json::Num(self.nodes as f64));
+        root.push_field("source", Json::Str(self.source.clone()));
+        root.push_field("app", Json::Str(self.app.clone()));
+        root.push_field("machine", Json::Str(self.machine.clone()));
+        root.push_field("timestamp", Json::Num(self.timestamp as f64));
+        root.push_field("ranks", Json::Num(self.ranks as f64));
+        root.push_field("threads", Json::Num(self.threads as f64));
+        root.push_field("nodes", Json::Num(self.nodes as f64));
         if let Some(g) = &self.git {
-            root.set(
+            root.push_field(
                 "git",
                 Json::from_pairs(vec![
                     ("commit", Json::Str(g.commit.clone())),
@@ -162,7 +333,7 @@ impl RunMetrics {
                 ])
             })
             .collect();
-        root.set("regions", Json::Arr(regions));
+        root.push_field("regions", Json::Arr(regions));
         root
     }
 
@@ -194,17 +365,22 @@ impl RunMetrics {
             .and_then(Json::as_arr)
             .context("cache entry: missing regions")?
         {
-            let rnum = |key: &str| -> Result<f64> {
-                rj.get(key)
+            // Fields are read in serialization order, so the cursor
+            // memo makes each of the ~22 lookups one comparison
+            // instead of an O(fields) scan per field.
+            let mut rc = FieldCursor::new(rj);
+            let name = rc
+                .get("name")
+                .and_then(Json::as_str)
+                .context("cache region: missing name")?
+                .to_string();
+            let mut rnum = |key: &str| -> Result<f64> {
+                rc.get(key)
                     .and_then(Json::as_f64)
                     .with_context(|| format!("cache region: missing {key}"))
             };
             regions.push(RegionSummary {
-                name: rj
-                    .get("name")
-                    .and_then(Json::as_str)
-                    .context("cache region: missing name")?
-                    .to_string(),
+                name,
                 visits: rnum("visits")? as u64,
                 metrics: RegionMetrics {
                     ncpus: rnum("ncpus")? as u32,
@@ -251,6 +427,146 @@ impl RunMetrics {
             regions,
         })
     }
+}
+
+/// Region field names in serialization order — the streaming decoder
+/// guesses the next index first, so an in-order document never scans.
+const REGION_NUM_KEYS: [&str; 21] = [
+    "visits",
+    "ncpus",
+    "nranks",
+    "nthreads",
+    "elapsed_s",
+    "total_useful_s",
+    "total_useful_instructions",
+    "total_useful_cycles",
+    "pe",
+    "mpi_pe",
+    "mpi_comm_eff",
+    "mpi_lb",
+    "mpi_lb_in",
+    "mpi_lb_inter",
+    "omp_pe",
+    "omp_lb",
+    "omp_sched_eff",
+    "omp_serial_eff",
+    "useful_ipc",
+    "frequency_ghz",
+    "insn_per_cpu",
+];
+
+/// Decode the strict `git` block (the reader sits in value position).
+/// A malformed block is an error, never a defaulted timestamp — it
+/// would silently reorder histories (same rule as the tree decoder).
+fn decode_git(r: &mut JsonReader<'_>) -> Result<GitMeta> {
+    match r.next()? {
+        Event::ObjStart => {}
+        Event::ArrStart => {
+            r.skip_value_rest()?;
+            bail!("cache entry: git without commit_timestamp");
+        }
+        _ => bail!("cache entry: git without commit_timestamp"),
+    }
+    let mut commit = String::new();
+    let mut branch = String::new();
+    let mut ts: Option<f64> = None;
+    let mut message = String::new();
+    loop {
+        match r.next()? {
+            Event::ObjEnd => break,
+            Event::Key(k) => match k.as_ref() {
+                "commit" => {
+                    commit =
+                        r.str_opt()?.map(|s| s.into_owned()).unwrap_or_default()
+                }
+                "branch" => {
+                    branch =
+                        r.str_opt()?.map(|s| s.into_owned()).unwrap_or_default()
+                }
+                "commit_timestamp" => ts = r.f64_opt()?,
+                "message" => {
+                    message =
+                        r.str_opt()?.map(|s| s.into_owned()).unwrap_or_default()
+                }
+                _ => r.skip_value()?,
+            },
+            _ => unreachable!("object events"),
+        }
+    }
+    Ok(GitMeta {
+        commit,
+        branch,
+        commit_timestamp: ts
+            .context("cache entry: git without commit_timestamp")?
+            as i64,
+        message,
+    })
+}
+
+/// Decode one region summary (the reader sits just past its `{`).
+fn decode_region(r: &mut JsonReader<'_>) -> Result<RegionSummary> {
+    let mut name: Option<String> = None;
+    let mut vals: [Option<f64>; REGION_NUM_KEYS.len()] =
+        [None; REGION_NUM_KEYS.len()];
+    let mut next_idx = 0usize;
+    loop {
+        match r.next()? {
+            Event::ObjEnd => break,
+            Event::Key(k) => {
+                let k = k.as_ref();
+                if k == "name" {
+                    name = r.str_opt()?.map(|s| s.into_owned());
+                    continue;
+                }
+                // In-order documents hit the `next_idx` guess; a
+                // reordered document falls back to a position scan.
+                let idx = if REGION_NUM_KEYS.get(next_idx) == Some(&k) {
+                    Some(next_idx)
+                } else {
+                    REGION_NUM_KEYS.iter().position(|kk| *kk == k)
+                };
+                match idx {
+                    Some(i) => {
+                        vals[i] = r.f64_opt()?;
+                        next_idx = i + 1;
+                    }
+                    None => r.skip_value()?,
+                }
+            }
+            _ => unreachable!("object events"),
+        }
+    }
+    let get = |i: usize| -> Result<f64> {
+        vals[i].with_context(|| {
+            format!("cache region: missing {}", REGION_NUM_KEYS[i])
+        })
+    };
+    Ok(RegionSummary {
+        name: name.context("cache region: missing name")?,
+        visits: get(0)? as u64,
+        metrics: RegionMetrics {
+            ncpus: get(1)? as u32,
+            nranks: get(2)? as u32,
+            nthreads: get(3)? as u32,
+            elapsed_s: get(4)?,
+            total_useful_s: get(5)?,
+            total_useful_instructions: get(6)? as u64,
+            total_useful_cycles: get(7)? as u64,
+            parallel_efficiency: get(8)?,
+            mpi_parallel_efficiency: get(9)?,
+            mpi_communication_efficiency: get(10)?,
+            mpi_load_balance: get(11)?,
+            mpi_load_balance_in: get(12)?,
+            mpi_load_balance_inter: get(13)?,
+            omp_parallel_efficiency: get(14)?,
+            omp_load_balance: get(15)?,
+            omp_scheduling_efficiency: get(16)?,
+            omp_serialization_efficiency: get(17)?,
+            useful_ipc: get(18)?,
+            frequency_ghz: get(19)?,
+            insn_per_cpu: get(20)?,
+        },
+    })
 }
 
 #[cfg(test)]
@@ -353,5 +669,100 @@ mod tests {
         run.git = None;
         let rm = RunMetrics::from_run(&run, "s");
         assert_eq!(rm.effective_timestamp(), 1_700_000_123);
+    }
+
+    // ---------- streaming codec vs tree codec ----------
+
+    #[test]
+    fn streaming_encoder_matches_tree() {
+        for git in [true, false] {
+            let mut run = sample_run();
+            if !git {
+                run.git = None;
+            }
+            let rm = RunMetrics::from_run(&run, "exp/a.json");
+            let mut w = JsonWriter::compact();
+            rm.write_to(&mut w);
+            assert_eq!(w.into_string(), rm.to_json().to_string_compact());
+            let mut w = JsonWriter::pretty();
+            rm.write_to(&mut w);
+            assert_eq!(
+                w.into_string() + "\n",
+                rm.to_json().to_string_pretty()
+            );
+        }
+    }
+
+    #[test]
+    fn from_events_matches_from_json() {
+        let rm = RunMetrics::from_run(&sample_run(), "exp/a.json");
+        let text = rm.to_json().to_string_compact();
+        let mut r = JsonReader::new(text.as_bytes());
+        let back = RunMetrics::from_events(&mut r).unwrap();
+        r.finish().unwrap();
+        let tree = RunMetrics::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(
+            back.to_json().to_string_compact(),
+            tree.to_json().to_string_compact()
+        );
+        assert_eq!(back.git, tree.git);
+    }
+
+    #[test]
+    fn from_events_rejects_what_from_json_rejects() {
+        for text in [
+            "{}",
+            "[]",
+            "7",
+            r#"{"source":"x","timestamp":1,"ranks":2,"threads":1,
+                "nodes":1,"regions":[]}"#,
+            r#"{"source":"x","timestamp":1,"ranks":2,"threads":1,
+                "nodes":1,"regions":[{"name":"g"}]}"#,
+            r#"{"source":"x","app":"a","machine":"m","timestamp":1,
+                "ranks":1,"threads":1,"nodes":1,
+                "git":{"commit":"abc","branch":"main"},
+                "regions":[{"name":"g","visits":1,"ncpus":1,"nranks":1,
+                "nthreads":1,"elapsed_s":1,"total_useful_s":1,
+                "total_useful_instructions":1,"total_useful_cycles":1,
+                "pe":1,"mpi_pe":1,"mpi_comm_eff":1,"mpi_lb":1,
+                "mpi_lb_in":1,"mpi_lb_inter":1,"omp_pe":1,"omp_lb":1,
+                "omp_sched_eff":1,"omp_serial_eff":1,"useful_ipc":1,
+                "frequency_ghz":1,"insn_per_cpu":1}]}"#,
+        ] {
+            let mut r = JsonReader::new(text.as_bytes());
+            assert!(RunMetrics::from_events(&mut r).is_err(), "{text}");
+            let j = Json::parse(text).unwrap();
+            assert!(RunMetrics::from_json(&j).is_err(), "{text}");
+        }
+    }
+
+    #[test]
+    fn from_events_accepts_reordered_and_unknown_fields() {
+        // The index-guess fast path must not make the decoder order-
+        // sensitive: shuffle region fields, add unknown ones.
+        let rm = RunMetrics::from_run(&sample_run(), "exp/a.json");
+        let text = rm.to_json().to_string_compact();
+        let j = Json::parse(&text).unwrap();
+        // Reverse every region object's fields and bolt on an extra.
+        let mut shuffled = j.clone();
+        if let Some(Json::Arr(regions)) = shuffled.get_mut("regions") {
+            for r in regions {
+                if let Json::Obj(pairs) = r {
+                    pairs.reverse();
+                    pairs.push((
+                        "future_field".to_string(),
+                        Json::Arr(vec![Json::Num(1.0)]),
+                    ));
+                }
+            }
+        }
+        let text = shuffled.to_string_compact();
+        let mut r = JsonReader::new(text.as_bytes());
+        let back = RunMetrics::from_events(&mut r).unwrap();
+        r.finish().unwrap();
+        assert_eq!(
+            back.region("Global").unwrap().metrics,
+            rm.region("Global").unwrap().metrics
+        );
     }
 }

@@ -48,7 +48,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::pages::detect::{ChangeKind, Finding};
 use crate::pop::RunMetrics;
-use crate::util::json::Json;
+use crate::util::json::{Json, JsonWriter};
 
 use super::analysis::{Analysis, ExperimentAnalysis};
 use super::emit::{Emitter, EmitterReport};
@@ -70,7 +70,10 @@ impl JsonReport {
         JsonReport { out_dir: out_dir.into() }
     }
 
-    /// Build the document (pure; the emitter writes it verbatim).
+    /// Build the document as a `Json` tree (pure).  Kept for consumers
+    /// that want the tree (tests, the CI runner's store-equivalence
+    /// check); the emitter itself streams through
+    /// [`JsonReport::write_document`] instead.
     pub fn document(analysis: &Analysis) -> Json {
         let experiments: Vec<Json> = analysis
             .experiments
@@ -100,6 +103,36 @@ impl JsonReport {
             ),
         ])
     }
+
+    /// Stream the document into `w` — byte-identical to
+    /// `document(analysis).to_string_pretty()` (pinned by a test and
+    /// the report goldens) without materializing the run histories as
+    /// a tree.  The histories dominate the document (one `RunMetrics`
+    /// object per stored run); detections, models and the gate verdict
+    /// are small and go through the tree bridge.
+    pub fn write_document(analysis: &Analysis, w: &mut JsonWriter) {
+        w.begin_obj();
+        w.key("schema_version");
+        w.num(SCHEMA_VERSION as f64);
+        w.key("experiments");
+        w.begin_arr();
+        for exp in &analysis.experiments {
+            write_experiment(exp, w);
+        }
+        w.end_arr();
+        w.key("warnings");
+        w.begin_arr();
+        for warning in &analysis.warnings {
+            w.str_val(warning);
+        }
+        w.end_arr();
+        w.key("gate");
+        match &analysis.gate {
+            Some(v) => w.value(&v.to_json()),
+            None => w.null(),
+        }
+        w.end_obj();
+    }
 }
 
 impl Emitter for JsonReport {
@@ -110,16 +143,73 @@ impl Emitter for JsonReport {
     fn emit(&mut self, analysis: &Analysis) -> Result<EmitterReport> {
         std::fs::create_dir_all(&self.out_dir)
             .with_context(|| format!("creating {}", self.out_dir.display()))?;
-        std::fs::write(
-            self.out_dir.join(REPORT_FILE_NAME),
-            JsonReport::document(analysis).to_string_pretty(),
-        )?;
+        // Pre-size on the dominant term: ~1.6 KB of pretty-printed
+        // JSON per run-history entry.
+        let runs: usize = analysis
+            .experiments
+            .iter()
+            .map(|e| e.histories.iter().map(|(_, h)| h.len()).sum::<usize>())
+            .sum();
+        let mut w = JsonWriter::with_capacity(4096 + runs * 1600, true);
+        JsonReport::write_document(analysis, &mut w);
+        w.newline();
+        std::fs::write(self.out_dir.join(REPORT_FILE_NAME), w.into_string())?;
         Ok(EmitterReport {
             name: self.name(),
             files_written: 1,
             ..Default::default()
         })
     }
+}
+
+/// Stream one experiment (history entries via `RunMetrics::write_to`).
+fn write_experiment(exp: &ExperimentAnalysis, w: &mut JsonWriter) {
+    w.begin_obj();
+    w.key("id");
+    w.str_val(&exp.id);
+    w.key("configs");
+    w.begin_arr();
+    for (cfg, runs) in &exp.histories {
+        w.begin_obj();
+        w.key("config");
+        w.str_val(cfg);
+        w.key("history");
+        w.begin_arr();
+        for run in runs {
+            run.write_to(w);
+        }
+        w.end_arr();
+        w.end_obj();
+    }
+    w.end_arr();
+    w.key("detections");
+    w.begin_arr();
+    for f in &exp.findings {
+        w.value(&finding_json(f));
+    }
+    w.end_arr();
+    w.key("models");
+    w.begin_arr();
+    for (region, m) in &exp.models {
+        w.begin_obj();
+        w.key("region");
+        w.str_val(region);
+        w.key("a");
+        w.num(m.a);
+        w.key("b");
+        w.num(m.b);
+        w.key("c");
+        w.num(m.c);
+        w.key("smape");
+        w.num(m.smape);
+        w.key("formula");
+        w.str_val(&m.formula());
+        w.key("grows");
+        w.boolean(m.grows());
+        w.end_obj();
+    }
+    w.end_arr();
+    w.end_obj();
 }
 
 fn experiment_json(exp: &ExperimentAnalysis) -> Json {
@@ -361,6 +451,24 @@ mod tests {
             .iter()
             .any(|d| d.str_or("kind", "") == "improvement"));
         assert_eq!(doc.gate_status(), Some("pass"));
+    }
+
+    #[test]
+    fn streamed_document_matches_tree_document() {
+        // The emitter streams; `document()` builds the tree — the two
+        // must stay byte-identical (gated and ungated).
+        for gate in [true, false] {
+            let (out, analysis) = emit_report(gate);
+            let written = std::fs::read_to_string(
+                out.path().join(REPORT_FILE_NAME),
+            )
+            .unwrap();
+            assert_eq!(
+                written,
+                JsonReport::document(&analysis).to_string_pretty(),
+                "gate={gate}"
+            );
+        }
     }
 
     #[test]

@@ -168,9 +168,10 @@ impl Session {
                 }
                 (root.clone(), scan)
             }
-            ScanSource::Store(root) => {
-                (root.clone(), RunStore::open(root)?.into_scan())
-            }
+            ScanSource::Store(root) => (
+                root.clone(),
+                RunStore::open_with_jobs(root, self.jobs)?.into_scan(),
+            ),
         };
         Ok(Scan { root, jobs: self.jobs, scan })
     }

@@ -82,10 +82,9 @@ pub fn ingest_dir(
         if snapshot.contains(rel, &hash) {
             return Outcome::AlreadyStored;
         }
-        let parsed = String::from_utf8(bytes)
-            .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))
-            .and_then(|text| RunData::parse_str(&text, path));
-        match parsed {
+        // Streaming decode straight from the bytes just hashed — no
+        // UTF-8 revalidation pass, no Json tree.
+        match RunData::from_slice(&bytes, path) {
             Ok(data) => Outcome::Fresh(hash, RunMetrics::from_run(&data, rel)),
             Err(e) => {
                 Outcome::Bad(format!("skipping {}: {e:#}", path.display()))

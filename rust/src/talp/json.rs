@@ -11,7 +11,7 @@
 use anyhow::{bail, Context, Result};
 
 use crate::sim::{MachineSpec, ResourceConfig};
-use crate::util::json::Json;
+use crate::util::json::{Event, FieldCursor, Json, JsonReader, JsonWriter};
 use crate::util::timefmt;
 
 use super::monitor::TalpReport;
@@ -143,17 +143,106 @@ impl RunData {
     }
 
     // ---------- JSON ----------
+    //
+    // Two symmetric codecs share the schema:
+    // * the tree pair `to_json`/`from_json` (tests, tools, callers
+    //   that already hold a `Json`);
+    // * the streaming pair `write_to`/`from_slice` — the hot path for
+    //   the scanner and store ingest, which decode straight from the
+    //   artifact bytes and encode straight into the output buffer
+    //   without materializing a tree.
+    // `streaming_encoder_matches_tree` / `from_slice_matches_from_json`
+    // below pin the two pairs byte/semantics-identical.
+
+    /// Serialize into `w` (the exact document `to_json` builds).
+    pub fn write_to(&self, w: &mut JsonWriter) {
+        w.begin_obj();
+        w.key("dlb_version");
+        w.str_val(&self.dlb_version);
+        w.key("app");
+        w.str_val(&self.app);
+        w.key("machine");
+        w.str_val(&self.machine);
+        w.key("timestamp");
+        w.str_val(&timefmt::to_iso8601(self.timestamp));
+        w.key("resources");
+        w.begin_obj();
+        w.key("num_mpi_ranks");
+        w.num(self.ranks as f64);
+        w.key("num_omp_threads");
+        w.num(self.threads as f64);
+        w.key("num_cpus");
+        w.num((self.ranks * self.threads) as f64);
+        w.key("num_nodes");
+        w.num(self.nodes as f64);
+        w.end_obj();
+        w.key("regions");
+        w.begin_obj();
+        for reg in &self.regions {
+            w.key(&reg.name);
+            w.begin_obj();
+            w.key("elapsed_time_ns");
+            w.num(ns_f(reg.elapsed_s));
+            w.key("visits");
+            w.num(reg.visits as f64);
+            w.key("processes");
+            w.begin_arr();
+            for p in &reg.procs {
+                w.begin_obj();
+                w.key("rank");
+                w.num(p.rank as f64);
+                w.key("node");
+                w.num(p.node as f64);
+                w.key("elapsed_time_ns");
+                w.num(ns_f(p.elapsed_s));
+                w.key("useful_time_ns");
+                w.num(ns_f(p.useful_s));
+                w.key("mpi_time_ns");
+                w.num(ns_f(p.mpi_s));
+                w.key("mpi_worker_idle_time_ns");
+                w.num(ns_f(p.mpi_worker_idle_s));
+                w.key("omp_serialization_time_ns");
+                w.num(ns_f(p.omp_serialization_s));
+                w.key("omp_scheduling_time_ns");
+                w.num(ns_f(p.omp_scheduling_s));
+                w.key("omp_load_balance_time_ns");
+                w.num(ns_f(p.omp_barrier_s));
+                w.key("useful_instructions");
+                w.num(p.useful_instructions as f64);
+                w.key("useful_cycles");
+                w.num(p.useful_cycles as f64);
+                w.end_obj();
+            }
+            w.end_arr();
+            w.end_obj();
+        }
+        w.end_obj();
+        if let Some(g) = &self.git {
+            w.key("git");
+            w.begin_obj();
+            w.key("commit");
+            w.str_val(&g.commit);
+            w.key("branch");
+            w.str_val(&g.branch);
+            w.key("commit_timestamp");
+            w.str_val(&timefmt::to_iso8601(g.commit_timestamp));
+            w.key("message");
+            w.str_val(&g.message);
+            w.end_obj();
+        }
+        w.end_obj();
+    }
 
     pub fn to_json(&self) -> Json {
         let mut root = Json::obj();
-        root.set("dlb_version", Json::Str(self.dlb_version.clone()));
-        root.set("app", Json::Str(self.app.clone()));
-        root.set("machine", Json::Str(self.machine.clone()));
-        root.set(
+        root.push_field("dlb_version", Json::Str(self.dlb_version.clone()));
+        root.push_field("app", Json::Str(self.app.clone()));
+        root.push_field("machine", Json::Str(self.machine.clone()));
+        root.push_field(
             "timestamp",
             Json::Str(timefmt::to_iso8601(self.timestamp)),
         );
-        root.set(
+        root.push_field(
             "resources",
             Json::from_pairs(vec![
                 ("num_mpi_ranks", Json::Num(self.ranks as f64)),
@@ -201,9 +290,9 @@ impl RunData {
                 ]),
             );
         }
-        root.set("regions", regions);
+        root.push_field("regions", regions);
         if let Some(g) = &self.git {
-            root.set(
+            root.push_field(
                 "git",
                 Json::from_pairs(vec![
                     ("commit", Json::Str(g.commit.clone())),
@@ -251,31 +340,29 @@ impl RunData {
                 .and_then(Json::as_arr)
                 .context("missing processes")?
             {
+                // Fields arrive in serialization order, so the cursor
+                // memo turns eleven O(n) scans per process into one
+                // comparison each.
+                let mut pc = FieldCursor::new(pj);
                 procs.push(ProcStats {
-                    rank: pj.num_or("rank", 0.0) as u32,
-                    node: pj.num_or("node", 0.0) as u32,
-                    elapsed_s: pj.num_or("elapsed_time_ns", 0.0) / NS,
-                    useful_s: pj.num_or("useful_time_ns", 0.0) / NS,
-                    mpi_s: pj.num_or("mpi_time_ns", 0.0) / NS,
-                    mpi_worker_idle_s: pj
+                    rank: pc.num_or("rank", 0.0) as u32,
+                    node: pc.num_or("node", 0.0) as u32,
+                    elapsed_s: pc.num_or("elapsed_time_ns", 0.0) / NS,
+                    useful_s: pc.num_or("useful_time_ns", 0.0) / NS,
+                    mpi_s: pc.num_or("mpi_time_ns", 0.0) / NS,
+                    mpi_worker_idle_s: pc
                         .num_or("mpi_worker_idle_time_ns", 0.0)
                         / NS,
-                    omp_serialization_s: pj
+                    omp_serialization_s: pc
                         .num_or("omp_serialization_time_ns", 0.0)
                         / NS,
-                    omp_scheduling_s: pj
+                    omp_scheduling_s: pc
                         .num_or("omp_scheduling_time_ns", 0.0)
                         / NS,
-                    omp_barrier_s: pj.num_or("omp_load_balance_time_ns", 0.0)
+                    omp_barrier_s: pc.num_or("omp_load_balance_time_ns", 0.0)
                         / NS,
-                    useful_instructions: pj
-                        .get("useful_instructions")
-                        .and_then(Json::as_u64)
-                        .unwrap_or(0),
-                    useful_cycles: pj
-                        .get("useful_cycles")
-                        .and_then(Json::as_u64)
-                        .unwrap_or(0),
+                    useful_instructions: pc.u64_or("useful_instructions", 0),
+                    useful_cycles: pc.u64_or("useful_cycles", 0),
                 });
             }
             if procs.len() != ranks as usize {
@@ -321,29 +408,353 @@ impl RunData {
         if let Some(parent) = path.parent() {
             std::fs::create_dir_all(parent)?;
         }
-        std::fs::write(path, self.to_json().to_string_pretty())
+        // Pre-size roughly: ~470 pretty-printed bytes per process plus
+        // headroom for metadata — avoids re-allocation churn while the
+        // document streams into the buffer.
+        let procs: usize = self.regions.iter().map(|r| r.procs.len()).sum();
+        let mut w = JsonWriter::with_capacity(1024 + procs * 470, true);
+        self.write_to(&mut w);
+        w.newline();
+        std::fs::write(path, w.into_string())
             .with_context(|| format!("writing {}", path.display()))
     }
 
-    /// Parse artifact text, attributing errors to `path`.  The single
-    /// parse pipeline shared by [`RunData::read_file`] and the report
-    /// engine's cached scan (which reads raw bytes itself to hash them).
+    /// Parse artifact text, attributing errors to `path` (kept for
+    /// callers that already hold a `&str`; byte-level callers use the
+    /// faster [`RunData::from_slice`]).
     pub fn parse_str(text: &str, path: &std::path::Path) -> Result<RunData> {
-        let j = Json::parse(text)
-            .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
-        RunData::from_json(&j)
+        RunData::from_slice(text.as_bytes(), path)
+    }
+
+    /// Decode a TALP artifact straight from its raw bytes through the
+    /// streaming event reader: no `Json` tree is built, strings with
+    /// no escapes are borrowed rather than copied, and UTF-8 is
+    /// validated only inside string literals — so the scanner and
+    /// store ingest skip the whole-buffer `String::from_utf8` pass.
+    /// Accepts and rejects the same documents as `Json::parse` +
+    /// [`RunData::from_json`], including first-occurrence-wins for
+    /// duplicated top-level keys (the one duplicate-key case where the
+    /// outcome could differ structurally; no TALP producer emits
+    /// duplicate keys at all).
+    pub fn from_slice(bytes: &[u8], path: &std::path::Path) -> Result<RunData> {
+        decode_run(bytes)
             .with_context(|| format!("parsing {}", path.display()))
     }
 
     pub fn read_file(path: &std::path::Path) -> Result<RunData> {
-        let text = std::fs::read_to_string(path)
+        let bytes = std::fs::read(path)
             .with_context(|| format!("reading {}", path.display()))?;
-        RunData::parse_str(&text, path)
+        RunData::from_slice(&bytes, path)
     }
 }
 
+/// One region mid-decode: `procs` stays `None` until a `processes`
+/// array is seen, so the "missing processes" check can run after the
+/// whole document is read (field order is arbitrary).
+struct PendingRegion {
+    name: String,
+    elapsed_s: f64,
+    visits: u64,
+    procs: Option<Vec<ProcStats>>,
+}
+
+/// Single-pass event decode of a TALP artifact.  Validation that
+/// spans fields (process count vs ranks, git timestamp fallback) is
+/// deferred to the end so key order never matters — the tree decoder
+/// is order-insensitive and this one must match it.
+fn decode_run(bytes: &[u8]) -> Result<RunData> {
+    let mut r = JsonReader::new(bytes);
+    match r.next()? {
+        Event::ObjStart => {}
+        _ => bail!("TALP json root is not an object"),
+    }
+    let mut dlb_version: Option<String> = None;
+    let mut app: Option<String> = None;
+    let mut machine: Option<String> = None;
+    let mut saw_timestamp = false;
+    let mut timestamp: Option<i64> = None;
+    let mut saw_resources = false;
+    let mut ranks: Option<u64> = None;
+    let mut threads: Option<u64> = None;
+    let mut nodes: u64 = 1;
+    let mut saw_regions = false;
+    let mut pending: Vec<PendingRegion> = Vec::new();
+    // (commit, branch, commit_timestamp, message): present iff a `git`
+    // key was seen, timestamp resolved after the full pass.
+    let mut saw_git = false;
+    let mut git: Option<(String, String, Option<i64>, String)> = None;
+    loop {
+        match r.next()? {
+            Event::ObjEnd => break,
+            Event::Key(k) => match k.as_ref() {
+                // Duplicate top-level keys: `Json::get` takes the
+                // first occurrence, so the single-pass decoder must
+                // too — a failed guard falls through to the final
+                // `skip_value` arm.  The structural fields use `saw_*`
+                // flags so even a mistyped first occurrence claims the
+                // key; the three metadata strings settle for
+                // `is_none`, whose only divergence (mistyped first +
+                // valid second) still decodes a valid run.
+                "dlb_version" if dlb_version.is_none() => {
+                    dlb_version = r.str_opt()?.map(|s| s.into_owned())
+                }
+                "app" if app.is_none() => {
+                    app = r.str_opt()?.map(|s| s.into_owned())
+                }
+                "machine" if machine.is_none() => {
+                    machine = r.str_opt()?.map(|s| s.into_owned())
+                }
+                "timestamp" if !saw_timestamp => {
+                    saw_timestamp = true;
+                    timestamp = r
+                        .str_opt()?
+                        .as_deref()
+                        .and_then(timefmt::from_iso8601);
+                }
+                "resources" if !saw_resources => {
+                    saw_resources = true;
+                    match r.next()? {
+                        Event::ObjStart => loop {
+                            match r.next()? {
+                                Event::ObjEnd => break,
+                                Event::Key(rk) => match rk.as_ref() {
+                                    "num_mpi_ranks" => ranks = r.u64_opt()?,
+                                    "num_omp_threads" => {
+                                        threads = r.u64_opt()?
+                                    }
+                                    "num_nodes" => {
+                                        nodes = r.u64_opt()?.unwrap_or(1)
+                                    }
+                                    _ => r.skip_value()?,
+                                },
+                                _ => unreachable!("object events"),
+                            }
+                        },
+                        Event::ArrStart => r.skip_value_rest()?,
+                        _ => {}
+                    }
+                }
+                "regions" if !saw_regions => {
+                    saw_regions = true;
+                    match r.next()? {
+                        Event::ObjStart => loop {
+                            match r.next()? {
+                                Event::ObjEnd => break,
+                                Event::Key(name) => {
+                                    let name = name.into_owned();
+                                    pending
+                                        .push(decode_region(&mut r, name)?);
+                                }
+                                _ => unreachable!("object events"),
+                            }
+                        },
+                        Event::ArrStart => r.skip_value_rest()?,
+                        _ => {}
+                    }
+                }
+                "git" if !saw_git => {
+                    saw_git = true;
+                    match r.next()? {
+                        Event::ObjStart => {
+                            let mut commit = String::new();
+                            let mut branch = String::new();
+                            let mut ts: Option<i64> = None;
+                            let mut message = String::new();
+                            loop {
+                                match r.next()? {
+                                    Event::ObjEnd => break,
+                                    Event::Key(gk) => match gk.as_ref() {
+                                        "commit" => {
+                                            commit = r
+                                                .str_opt()?
+                                                .map(|s| s.into_owned())
+                                                .unwrap_or_default()
+                                        }
+                                        "branch" => {
+                                            branch = r
+                                                .str_opt()?
+                                                .map(|s| s.into_owned())
+                                                .unwrap_or_default()
+                                        }
+                                        "commit_timestamp" => {
+                                            ts = r
+                                                .str_opt()?
+                                                .as_deref()
+                                                .and_then(timefmt::from_iso8601);
+                                        }
+                                        "message" => {
+                                            message = r
+                                                .str_opt()?
+                                                .map(|s| s.into_owned())
+                                                .unwrap_or_default()
+                                        }
+                                        _ => r.skip_value()?,
+                                    },
+                                    _ => unreachable!("object events"),
+                                }
+                            }
+                            git = Some((commit, branch, ts, message));
+                        }
+                        // Any non-object `git` value mirrors the tree
+                        // decoder: a defaulted GitMeta, never an error.
+                        Event::ArrStart => {
+                            r.skip_value_rest()?;
+                            git = Some(Default::default());
+                        }
+                        _ => git = Some(Default::default()),
+                    }
+                }
+                _ => r.skip_value()?,
+            },
+            _ => unreachable!("object events"),
+        }
+    }
+    r.finish()?;
+
+    // Cross-field validation, in the tree decoder's order.
+    if !saw_resources {
+        bail!("missing resources");
+    }
+    let ranks = ranks.context("missing num_mpi_ranks")? as u32;
+    let threads = threads.context("missing num_omp_threads")? as u32;
+    if ranks == 0 || threads == 0 {
+        bail!("resources must be positive ({ranks}x{threads})");
+    }
+    let timestamp = timestamp.context("missing/bad timestamp")?;
+    let mut regions = Vec::with_capacity(pending.len());
+    for reg in pending {
+        let PendingRegion { name, elapsed_s, visits, procs } = reg;
+        let procs = procs
+            .with_context(|| format!("region '{name}': missing processes"))?;
+        if procs.len() != ranks as usize {
+            bail!(
+                "region '{name}': {} processes for {ranks} ranks",
+                procs.len()
+            );
+        }
+        regions.push(RegionData { name, elapsed_s, visits, procs });
+    }
+    if regions.is_empty() {
+        bail!("no regions in TALP json");
+    }
+    let git = git.map(|(commit, branch, ts, message)| GitMeta {
+        commit,
+        branch,
+        commit_timestamp: ts.unwrap_or(timestamp),
+        message,
+    });
+    Ok(RunData {
+        dlb_version: dlb_version.unwrap_or_else(|| "unknown".to_string()),
+        app: app.unwrap_or_else(|| "unknown".to_string()),
+        machine: machine.unwrap_or_else(|| "unknown".to_string()),
+        timestamp,
+        ranks,
+        threads,
+        nodes: nodes as u32,
+        regions,
+        git,
+    })
+}
+
+/// Decode one region's value (the reader sits right after its key).
+fn decode_region(r: &mut JsonReader<'_>, name: String) -> Result<PendingRegion> {
+    let mut reg = PendingRegion { name, elapsed_s: 0.0, visits: 1, procs: None };
+    match r.next()? {
+        Event::ObjStart => {}
+        Event::ArrStart => {
+            r.skip_value_rest()?;
+            return Ok(reg);
+        }
+        // A scalar region value has no processes — caught at the end.
+        _ => return Ok(reg),
+    }
+    loop {
+        match r.next()? {
+            Event::ObjEnd => break,
+            Event::Key(k) => match k.as_ref() {
+                "elapsed_time_ns" => {
+                    reg.elapsed_s = r.f64_opt()?.unwrap_or(0.0) / NS
+                }
+                "visits" => reg.visits = r.u64_opt()?.unwrap_or(1),
+                "processes" => match r.next()? {
+                    Event::ArrStart => {
+                        let mut procs = Vec::new();
+                        loop {
+                            match r.next()? {
+                                Event::ArrEnd => break,
+                                Event::ObjStart => {
+                                    procs.push(decode_proc(r)?)
+                                }
+                                Event::ArrStart => {
+                                    // Mirror the tree decoder: a non-
+                                    // object entry is a defaulted
+                                    // process record.
+                                    r.skip_value_rest()?;
+                                    procs.push(ProcStats::default());
+                                }
+                                _ => procs.push(ProcStats::default()),
+                            }
+                        }
+                        reg.procs = Some(procs);
+                    }
+                    Event::ObjStart => r.skip_value_rest()?,
+                    _ => {}
+                },
+                _ => r.skip_value()?,
+            },
+            _ => unreachable!("object events"),
+        }
+    }
+    Ok(reg)
+}
+
+/// Decode one process record (the reader sits just past its `{`).
+fn decode_proc(r: &mut JsonReader<'_>) -> Result<ProcStats> {
+    let mut p = ProcStats::default();
+    loop {
+        match r.next()? {
+            Event::ObjEnd => return Ok(p),
+            Event::Key(k) => match k.as_ref() {
+                "rank" => p.rank = r.f64_opt()?.unwrap_or(0.0) as u32,
+                "node" => p.node = r.f64_opt()?.unwrap_or(0.0) as u32,
+                "elapsed_time_ns" => {
+                    p.elapsed_s = r.f64_opt()?.unwrap_or(0.0) / NS
+                }
+                "useful_time_ns" => {
+                    p.useful_s = r.f64_opt()?.unwrap_or(0.0) / NS
+                }
+                "mpi_time_ns" => p.mpi_s = r.f64_opt()?.unwrap_or(0.0) / NS,
+                "mpi_worker_idle_time_ns" => {
+                    p.mpi_worker_idle_s = r.f64_opt()?.unwrap_or(0.0) / NS
+                }
+                "omp_serialization_time_ns" => {
+                    p.omp_serialization_s = r.f64_opt()?.unwrap_or(0.0) / NS
+                }
+                "omp_scheduling_time_ns" => {
+                    p.omp_scheduling_s = r.f64_opt()?.unwrap_or(0.0) / NS
+                }
+                "omp_load_balance_time_ns" => {
+                    p.omp_barrier_s = r.f64_opt()?.unwrap_or(0.0) / NS
+                }
+                "useful_instructions" => {
+                    p.useful_instructions = r.u64_opt()?.unwrap_or(0)
+                }
+                "useful_cycles" => {
+                    p.useful_cycles = r.u64_opt()?.unwrap_or(0)
+                }
+                _ => r.skip_value()?,
+            },
+            _ => unreachable!("object events"),
+        }
+    }
+}
+
+fn ns_f(secs: f64) -> f64 {
+    (secs * NS).round()
+}
+
 fn ns(secs: f64) -> Json {
-    Json::Num((secs * NS).round())
+    Json::Num(ns_f(secs))
 }
 
 #[cfg(test)]
@@ -456,5 +867,128 @@ mod tests {
         r.regions[0].procs.pop();
         let j = r.to_json();
         assert!(RunData::from_json(&j).is_err());
+    }
+
+    // ---------- streaming codec vs tree codec ----------
+
+    #[test]
+    fn streaming_encoder_matches_tree() {
+        let r = sample();
+        let tree = r.to_json().to_string_pretty();
+        let mut w = JsonWriter::pretty();
+        r.write_to(&mut w);
+        w.newline();
+        assert_eq!(w.into_string(), tree, "pretty output must be identical");
+
+        let tree = r.to_json().to_string_compact();
+        let mut w = JsonWriter::compact();
+        r.write_to(&mut w);
+        assert_eq!(w.into_string(), tree, "compact output must be identical");
+    }
+
+    #[test]
+    fn from_slice_matches_from_json() {
+        let path = std::path::Path::new("x.json");
+        let text = sample().to_json().to_string_pretty();
+        let a = RunData::from_slice(text.as_bytes(), path).unwrap();
+        let b = RunData::from_json(&Json::parse(&text).unwrap()).unwrap();
+        // Same decode — compare via the canonical serialization.
+        assert_eq!(
+            a.to_json().to_string_compact(),
+            b.to_json().to_string_compact()
+        );
+        assert_eq!(a.git, b.git);
+    }
+
+    #[test]
+    fn from_slice_handles_reordered_and_unknown_keys() {
+        // The streaming decoder is single-pass but must stay key-order
+        // independent like the tree decoder: resources *after* regions,
+        // unknown keys everywhere.
+        let text = r#"{
+            "unknown_top": {"deep": [1, 2, {"x": "y"}]},
+            "regions": {
+                "Global": {
+                    "processes": [
+                        {"rank": 0, "useful_time_ns": 1e9, "mystery": [1]},
+                        {"rank": 1, "useful_time_ns": 2e9}
+                    ],
+                    "elapsed_time_ns": 3e9,
+                    "visits": 2
+                }
+            },
+            "timestamp": "2024-07-15T12:34:56Z",
+            "resources": {"num_omp_threads": 1, "num_mpi_ranks": 2}
+        }"#;
+        let path = std::path::Path::new("reordered.json");
+        let a = RunData::from_slice(text.as_bytes(), path).unwrap();
+        let b = RunData::parse_str(text, path).unwrap();
+        assert_eq!(a.ranks, 2);
+        assert_eq!(a.threads, 1);
+        assert_eq!(a.regions[0].visits, 2);
+        assert!((a.regions[0].elapsed_s - 3.0).abs() < 1e-9);
+        assert!((a.regions[0].procs[1].useful_s - 2.0).abs() < 1e-9);
+        assert_eq!(
+            a.to_json().to_string_compact(),
+            b.to_json().to_string_compact()
+        );
+    }
+
+    #[test]
+    fn from_slice_duplicate_top_level_keys_first_wins_like_tree() {
+        // `Json::get` returns the first occurrence of a duplicated
+        // key; the single-pass streaming decoder must agree — the
+        // second `regions` block below must not add regions, and the
+        // second (invalid) `resources` block must not shadow the
+        // first valid one.
+        let text = r#"{
+            "resources": {"num_mpi_ranks": 1, "num_omp_threads": 1},
+            "timestamp": "2024-01-01T00:00:00Z",
+            "regions": {
+                "Global": {"processes": [{"rank": 0}]}
+            },
+            "resources": {"num_mpi_ranks": 0, "num_omp_threads": 1},
+            "regions": {
+                "Global": {"processes": [{"rank": 0}]},
+                "Extra": {"processes": [{"rank": 0}]}
+            },
+            "timestamp": "not a timestamp"
+        }"#;
+        let path = std::path::Path::new("dup.json");
+        let a = RunData::from_slice(text.as_bytes(), path).unwrap();
+        let b = RunData::from_json(&Json::parse(text).unwrap()).unwrap();
+        assert_eq!(a.ranks, 1);
+        assert_eq!(a.regions.len(), 1, "second regions block ignored");
+        assert_eq!(a.timestamp, b.timestamp);
+        assert_eq!(
+            a.to_json().to_string_compact(),
+            b.to_json().to_string_compact()
+        );
+    }
+
+    #[test]
+    fn from_slice_rejects_what_from_json_rejects() {
+        let path = std::path::Path::new("bad.json");
+        for text in [
+            "{}",
+            "[1,2]",
+            "not json at all",
+            r#"{"resources":{"num_mpi_ranks":0,"num_omp_threads":1}}"#,
+            r#"{"resources":{"num_mpi_ranks":1,"num_omp_threads":1},
+                "timestamp":"2024-01-01T00:00:00Z","regions":{}}"#,
+            // Region without processes.
+            r#"{"resources":{"num_mpi_ranks":1,"num_omp_threads":1},
+                "timestamp":"2024-01-01T00:00:00Z",
+                "regions":{"g":{"elapsed_time_ns":1}}}"#,
+            // Truncated mid-document.
+            r#"{"resources": {"num_mpi_ranks": 2,"#,
+        ] {
+            assert!(RunData::from_slice(text.as_bytes(), path).is_err(), "{text}");
+        }
+        // Invalid UTF-8 is an error, not a panic.
+        let mut bad = br#"{"app":""#.to_vec();
+        bad.push(0xff);
+        bad.extend_from_slice(br#""}"#);
+        assert!(RunData::from_slice(&bad, path).is_err());
     }
 }

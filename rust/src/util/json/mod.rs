@@ -1,0 +1,469 @@
+//! JSON for TALP-Pages: one streaming core, two APIs.
+//!
+//! serde_json is unavailable in this offline image (see Cargo.toml
+//! note), so the TALP JSON schema, the run store shards, the metrics
+//! cache and the CI metadata all go through this module.  It implements
+//! RFC 8259 minus some laxities: no `\u` surrogate-pair validation
+//! beyond replacement, numbers are f64 (TALP times are ns-as-integers
+//! < 2^53, safe in f64), object key order is preserved (Vec-backed) so
+//! reports render deterministically.
+//!
+//! Two layers share one grammar and one formatter:
+//!
+//! * **Streaming** ([`JsonReader`] in [`reader`], [`JsonWriter`] in
+//!   [`writer`]): a pull/event parser over `&[u8]` with zero-copy
+//!   `Cow<str>` strings, and a direct-to-buffer serializer.  The hot
+//!   artifact → store → report path decodes and encodes through these
+//!   without materializing a tree.
+//! * **Tree** ([`Json`]): the Vec-backed value model for tests,
+//!   configuration files and low-frequency callers.  `Json::parse` is
+//!   built on the reader and `to_string_*` on the writer, so the two
+//!   layers are byte-identical by construction.
+
+pub mod reader;
+pub mod writer;
+
+pub use reader::{Event, JsonReader};
+pub use writer::JsonWriter;
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A JSON value. Objects preserve insertion order.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+/// Parse error with byte offset and human context.
+#[derive(Debug, Clone)]
+pub struct JsonError {
+    pub offset: usize,
+    pub message: String,
+}
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json error at byte {}: {}", self.offset, self.message)
+    }
+}
+
+impl std::error::Error for JsonError {}
+
+impl Json {
+    // ---------- constructors ----------
+    pub fn obj() -> Json {
+        Json::Obj(Vec::new())
+    }
+
+    pub fn from_pairs(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    // ---------- accessors ----------
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(pairs) => pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn get_mut(&mut self, key: &str) -> Option<&mut Json> {
+        match self {
+            Json::Obj(pairs) => pairs.iter_mut().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// Insert or replace a key in an object; panics on non-objects
+    /// (programming error, not data error).
+    pub fn set(&mut self, key: &str, value: Json) {
+        match self {
+            Json::Obj(pairs) => {
+                if let Some(slot) = pairs.iter_mut().find(|(k, _)| k == key) {
+                    slot.1 = value;
+                } else {
+                    pairs.push((key.to_string(), value));
+                }
+            }
+            _ => panic!("Json::set on non-object"),
+        }
+    }
+
+    /// Append a field whose key is known not to be present — the
+    /// builder fast path that skips [`Json::set`]'s replace scan.
+    /// Debug builds assert uniqueness; release builds trust the caller
+    /// (the crate's serializers only pass literal or pre-deduplicated
+    /// keys).  Panics on non-objects, like `set`.
+    pub fn push_field(&mut self, key: &str, value: Json) {
+        match self {
+            Json::Obj(pairs) => {
+                debug_assert!(
+                    pairs.iter().all(|(k, _)| k != key),
+                    "push_field: duplicate key {key}"
+                );
+                pairs.push((key.to_string(), value));
+            }
+            _ => panic!("Json::push_field on non-object"),
+        }
+    }
+
+    /// Path lookup: `j.at(&["region", "useful_time"])`.
+    pub fn at(&self, path: &[&str]) -> Option<&Json> {
+        let mut cur = self;
+        for p in path {
+            cur = cur.get(p)?;
+        }
+        Some(cur)
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 => Some(*n as u64),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    pub fn as_obj(&self) -> Option<&[(String, Json)]> {
+        match self {
+            Json::Obj(o) => Some(o),
+            _ => None,
+        }
+    }
+
+    /// Convenience: f64 field lookup with default.
+    pub fn num_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(Json::as_f64).unwrap_or(default)
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).and_then(Json::as_str).unwrap_or(default)
+    }
+
+    // ---------- serialization (via the streaming writer) ----------
+    pub fn to_string_pretty(&self) -> String {
+        let mut w = JsonWriter::with_capacity(1024, true);
+        w.value(self);
+        w.newline();
+        w.into_string()
+    }
+
+    pub fn to_string_compact(&self) -> String {
+        let mut w = JsonWriter::with_capacity(256, false);
+        w.value(self);
+        w.into_string()
+    }
+
+    // ---------- parsing (via the streaming reader) ----------
+    pub fn parse(text: &str) -> Result<Json, JsonError> {
+        Json::from_slice(text.as_bytes())
+    }
+
+    /// Parse raw bytes.  UTF-8 is validated only inside string
+    /// literals (everything else in JSON is ASCII), so callers with a
+    /// fresh `Vec<u8>` skip the whole-buffer validation copy.
+    pub fn from_slice(bytes: &[u8]) -> Result<Json, JsonError> {
+        let mut r = JsonReader::new(bytes);
+        let first = r.next()?;
+        let v = tree_from_event(&mut r, first)?;
+        r.finish()?;
+        Ok(v)
+    }
+}
+
+/// Build a tree value from `ev` (just pulled from `r`), consuming the
+/// rest of the value's events.
+fn tree_from_event(
+    r: &mut JsonReader<'_>,
+    ev: Event<'_>,
+) -> Result<Json, JsonError> {
+    Ok(match ev {
+        Event::Null => Json::Null,
+        Event::Bool(b) => Json::Bool(b),
+        Event::Num(n) => Json::Num(n),
+        Event::Str(s) => Json::Str(s.into_owned()),
+        Event::ArrStart => {
+            let mut items = Vec::new();
+            loop {
+                match r.next()? {
+                    Event::ArrEnd => break,
+                    ev => items.push(tree_from_event(r, ev)?),
+                }
+            }
+            Json::Arr(items)
+        }
+        Event::ObjStart => {
+            let mut pairs: Vec<(String, Json)> = Vec::new();
+            loop {
+                match r.next()? {
+                    Event::ObjEnd => break,
+                    Event::Key(k) => {
+                        let key = k.into_owned();
+                        let ev = r.next()?;
+                        pairs.push((key, tree_from_event(r, ev)?));
+                    }
+                    _ => unreachable!("objects yield Key/ObjEnd events"),
+                }
+            }
+            Json::Obj(pairs)
+        }
+        Event::ArrEnd | Event::ObjEnd | Event::Key(_) => {
+            unreachable!("container end/key in value position")
+        }
+    })
+}
+
+/// Amortized-O(1) repeated field lookup over one object's pairs.
+///
+/// [`Json::get`] is a linear scan — fine for one lookup, quadratic for
+/// schema decoders that read every field of wide objects (the profile
+/// hotspot in `RunData::from_json`'s per-process reads and
+/// `RunMetrics::from_json`'s per-region reads).  The cursor remembers
+/// where the last hit was and scans onward from there first, so fields
+/// read in serialization order cost one comparison each; out-of-order
+/// reads fall back to a full wrap-around scan.  Key order in the
+/// underlying object is never changed.
+pub struct FieldCursor<'a> {
+    pairs: &'a [(String, Json)],
+    next: usize,
+}
+
+impl<'a> FieldCursor<'a> {
+    /// Cursor over `j`'s fields (empty for non-objects, so lookups
+    /// simply miss — the same shape `Json::get` gives on non-objects).
+    pub fn new(j: &'a Json) -> FieldCursor<'a> {
+        FieldCursor { pairs: j.as_obj().unwrap_or(&[]), next: 0 }
+    }
+
+    /// Find `key`, scanning from just past the previous hit.
+    pub fn get(&mut self, key: &str) -> Option<&'a Json> {
+        let n = self.pairs.len();
+        for off in 0..n {
+            let mut i = self.next + off;
+            if i >= n {
+                i -= n;
+            }
+            if self.pairs[i].0 == key {
+                self.next = i + 1;
+                if self.next == n {
+                    self.next = 0;
+                }
+                return Some(&self.pairs[i].1);
+            }
+        }
+        None
+    }
+
+    pub fn num_or(&mut self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(Json::as_f64).unwrap_or(default)
+    }
+
+    pub fn u64_or(&mut self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(Json::as_u64).unwrap_or(default)
+    }
+
+    pub fn str_or(&mut self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).and_then(Json::as_str).unwrap_or(default)
+    }
+}
+
+/// Sort an object's keys recursively (for canonical comparisons in tests).
+pub fn canonicalize(j: &Json) -> Json {
+    match j {
+        Json::Obj(pairs) => {
+            let map: BTreeMap<String, Json> = pairs
+                .iter()
+                .map(|(k, v)| (k.clone(), canonicalize(v)))
+                .collect();
+            Json::Obj(map.into_iter().collect())
+        }
+        Json::Arr(items) => Json::Arr(items.iter().map(canonicalize).collect()),
+        other => other.clone(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_basic_types() {
+        for text in [
+            "null",
+            "true",
+            "false",
+            "0",
+            "-12",
+            "3.5",
+            "1e3",
+            "\"hi\"",
+            "[]",
+            "{}",
+            "[1,2,3]",
+            "{\"a\":1,\"b\":[true,null]}",
+        ] {
+            let v = Json::parse(text).unwrap();
+            let re = Json::parse(&v.to_string_compact()).unwrap();
+            assert_eq!(v, re, "{text}");
+        }
+    }
+
+    #[test]
+    fn parses_nested_and_preserves_order() {
+        let v = Json::parse(r#"{"z":1,"a":{"k":[1,2,{"x":"y"}]}}"#).unwrap();
+        let keys: Vec<&str> =
+            v.as_obj().unwrap().iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(keys, ["z", "a"]);
+        assert_eq!(
+            v.at(&["a", "k"]).unwrap().as_arr().unwrap().len(),
+            3
+        );
+    }
+
+    #[test]
+    fn escapes_roundtrip() {
+        let s = "line\n\ttab \"quote\" back\\slash \u{263a}";
+        let j = Json::Str(s.to_string());
+        let parsed = Json::parse(&j.to_string_compact()).unwrap();
+        assert_eq!(parsed.as_str().unwrap(), s);
+    }
+
+    #[test]
+    fn unicode_escapes() {
+        assert_eq!(
+            Json::parse(r#""A☺""#).unwrap().as_str().unwrap(),
+            "A\u{263a}"
+        );
+        assert_eq!(
+            Json::parse(r#""😀""#).unwrap().as_str().unwrap(),
+            "\u{1f600}"
+        );
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        for text in ["", "{", "[1,", "{\"a\"}", "nul", "01x", "\"abc", "[1] junk"] {
+            assert!(Json::parse(text).is_err(), "{text}");
+        }
+    }
+
+    #[test]
+    fn integers_render_without_fraction() {
+        let j = Json::Num(1234567890.0);
+        assert_eq!(j.to_string_compact(), "1234567890");
+        let j = Json::Num(0.25);
+        assert_eq!(j.to_string_compact(), "0.25");
+    }
+
+    #[test]
+    fn set_and_get() {
+        let mut o = Json::obj();
+        o.set("x", Json::Num(1.0));
+        o.set("x", Json::Num(2.0));
+        o.set("y", Json::Str("v".into()));
+        assert_eq!(o.num_or("x", 0.0), 2.0);
+        assert_eq!(o.str_or("y", ""), "v");
+        assert_eq!(o.as_obj().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn push_field_appends_without_scanning() {
+        let mut o = Json::obj();
+        o.push_field("a", Json::Num(1.0));
+        o.push_field("b", Json::Num(2.0));
+        let keys: Vec<&str> =
+            o.as_obj().unwrap().iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(keys, ["a", "b"]);
+        assert_eq!(o.num_or("b", 0.0), 2.0);
+    }
+
+    #[test]
+    fn pretty_output_parses_back() {
+        let v = Json::parse(r#"{"a":[1,2],"b":{"c":null}}"#).unwrap();
+        let pretty = v.to_string_pretty();
+        assert!(pretty.contains("\n"));
+        assert_eq!(Json::parse(&pretty).unwrap(), v);
+    }
+
+    #[test]
+    fn canonicalize_sorts_keys() {
+        let a = Json::parse(r#"{"b":1,"a":2}"#).unwrap();
+        let b = Json::parse(r#"{"a":2,"b":1}"#).unwrap();
+        assert_ne!(a, b);
+        assert_eq!(canonicalize(&a), canonicalize(&b));
+    }
+
+    #[test]
+    fn large_integer_precision_preserved() {
+        // ns timestamps fit in f64's 2^53 integer range.
+        let t = 1_720_000_000_000_000_000u64 / 1000; // us precision
+        let j = Json::Num(t as f64);
+        assert_eq!(Json::parse(&j.to_string_compact()).unwrap().as_u64(), Some(t));
+    }
+
+    #[test]
+    fn from_slice_matches_parse() {
+        let text = r#"{"a":[1,2.5],"s":"x\ny","n":null}"#;
+        assert_eq!(
+            Json::from_slice(text.as_bytes()).unwrap(),
+            Json::parse(text).unwrap()
+        );
+        // Invalid UTF-8 inside a string is a JsonError, not a panic.
+        let mut bad = b"{\"k\":\"a".to_vec();
+        bad.push(0xfe);
+        bad.extend_from_slice(b"\"}");
+        assert!(Json::from_slice(&bad).is_err());
+    }
+
+    #[test]
+    fn field_cursor_in_order_and_wraparound() {
+        let j = Json::parse(r#"{"a":1,"b":"two","c":3,"d":4}"#).unwrap();
+        let mut cur = FieldCursor::new(&j);
+        // In serialization order: each hit is one comparison.
+        assert_eq!(cur.num_or("a", 0.0), 1.0);
+        assert_eq!(cur.str_or("b", ""), "two");
+        assert_eq!(cur.num_or("c", 0.0), 3.0);
+        // Out of order: wrap-around scan still finds earlier keys.
+        assert_eq!(cur.num_or("a", 0.0), 1.0);
+        assert_eq!(cur.num_or("d", 0.0), 4.0);
+        assert_eq!(cur.get("nope"), None);
+        assert_eq!(cur.num_or("missing", 9.5), 9.5);
+        // Non-objects miss everything instead of panicking.
+        let mut none = FieldCursor::new(&Json::Null);
+        assert_eq!(none.get("a"), None);
+        assert_eq!(none.u64_or("a", 7), 7);
+    }
+}

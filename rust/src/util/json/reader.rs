@@ -1,0 +1,610 @@
+//! Pull-based JSON event reader — the read half of the streaming core.
+//!
+//! [`JsonReader`] walks a raw `&[u8]` buffer and yields a flat stream
+//! of [`Event`]s (`ObjStart`, `Key`, `Num`, ..., `ObjEnd`) without
+//! allocating a tree.  Strings are [`Cow`]s: the common case (no escape
+//! sequences) borrows straight from the input buffer; escapes decode
+//! into an owned `String` only when present.  Because the input is
+//! bytes rather than `&str`, the reader validates UTF-8 itself — but
+//! only inside string literals, where non-ASCII bytes can legally
+//! appear — so hot callers skip the whole-buffer `String::from_utf8`
+//! copy/validate pass entirely.
+//!
+//! Grammar and laxities are exactly those of the historical tree
+//! parser (the tree API's `Json::parse` is now built on this reader):
+//! numbers parse as `f64`, `\u` escapes handle surrogate pairs with
+//! U+FFFD replacement for lone high surrogates, object key order is
+//! the event order.  Errors are [`JsonError`]s carrying the byte
+//! offset where parsing stopped.
+
+use std::borrow::Cow;
+
+use super::JsonError;
+
+/// One parse event.  `Str` covers string values; object keys arrive as
+/// `Key` (always followed by the field's value events).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event<'a> {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(Cow<'a, str>),
+    ArrStart,
+    ArrEnd,
+    ObjStart,
+    Key(Cow<'a, str>),
+    ObjEnd,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Frame {
+    Arr,
+    Obj,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Expect {
+    /// A value: document start, after a key's `:`, after `,` in an array.
+    Value,
+    /// Right after `[`: first element or an immediate `]`.
+    ValueOrArrEnd,
+    /// Right after `{`: first key or an immediate `}`.
+    KeyOrObjEnd,
+    /// After a completed value inside a container.  (A `,` here leads
+    /// straight to the next value/key; trailing commas are invalid,
+    /// matching the tree parser.)
+    CommaOrEnd,
+    /// The document value is complete; only [`JsonReader::finish`] is
+    /// meaningful now.
+    Done,
+}
+
+/// Streaming pull parser over a byte slice.
+#[derive(Debug)]
+pub struct JsonReader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+    stack: Vec<Frame>,
+    expect: Expect,
+}
+
+impl<'a> JsonReader<'a> {
+    pub fn new(bytes: &'a [u8]) -> JsonReader<'a> {
+        JsonReader { bytes, pos: 0, stack: Vec::new(), expect: Expect::Value }
+    }
+
+    /// Byte offset of the next unread input (for error attribution by
+    /// callers layering schema errors on top of parse position).
+    pub fn offset(&self) -> usize {
+        self.pos
+    }
+
+    /// Nesting depth of open containers.
+    pub fn depth(&self) -> usize {
+        self.stack.len()
+    }
+
+    fn err(&self, msg: &str) -> JsonError {
+        JsonError { offset: self.pos, message: msg.to_string() }
+    }
+
+    fn err_at(&self, offset: usize, msg: &str) -> JsonError {
+        JsonError { offset, message: msg.to_string() }
+    }
+
+    fn utf8_err(&self, start: usize, e: std::str::Utf8Error) -> JsonError {
+        self.err_at(start + e.valid_up_to(), "invalid utf-8 in string")
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn expect_byte(&mut self, b: u8) -> Result<(), JsonError> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected '{}'", b as char)))
+        }
+    }
+
+    /// Pull the next event.  Calling past the end of the document (or
+    /// after an error) is itself an error, never a panic.
+    ///
+    /// Not an `Iterator`: the `Result` is load-bearing (errors carry
+    /// byte offsets and poison the stream) and callers drive the
+    /// reader from schema decoders, not `for` loops.
+    #[allow(clippy::should_implement_trait)]
+    pub fn next(&mut self) -> Result<Event<'a>, JsonError> {
+        self.skip_ws();
+        match self.expect {
+            Expect::Done => Err(self.err("no value expected here")),
+            Expect::Value => self.value_event(),
+            Expect::ValueOrArrEnd => {
+                if self.peek() == Some(b']') {
+                    self.pos += 1;
+                    Ok(self.pop(Frame::Arr))
+                } else {
+                    self.value_event()
+                }
+            }
+            Expect::KeyOrObjEnd => {
+                if self.peek() == Some(b'}') {
+                    self.pos += 1;
+                    Ok(self.pop(Frame::Obj))
+                } else {
+                    self.key_event()
+                }
+            }
+            Expect::CommaOrEnd => match (self.stack.last(), self.peek()) {
+                (Some(Frame::Arr), Some(b',')) => {
+                    self.pos += 1;
+                    self.skip_ws();
+                    self.value_event()
+                }
+                (Some(Frame::Arr), Some(b']')) => {
+                    self.pos += 1;
+                    Ok(self.pop(Frame::Arr))
+                }
+                (Some(Frame::Arr), _) => Err(self.err("expected ',' or ']'")),
+                (Some(Frame::Obj), Some(b',')) => {
+                    self.pos += 1;
+                    self.skip_ws();
+                    self.key_event()
+                }
+                (Some(Frame::Obj), Some(b'}')) => {
+                    self.pos += 1;
+                    Ok(self.pop(Frame::Obj))
+                }
+                (Some(Frame::Obj), _) => Err(self.err("expected ',' or '}'")),
+                (None, _) => unreachable!(
+                    "CommaOrEnd only occurs inside a container"
+                ),
+            },
+        }
+    }
+
+    /// Verify the document is complete with no trailing data (the
+    /// tree parser's exact end-of-input rule).
+    pub fn finish(&mut self) -> Result<(), JsonError> {
+        if self.expect != Expect::Done {
+            return Err(self.err("document incomplete"));
+        }
+        self.skip_ws();
+        if self.pos != self.bytes.len() {
+            return Err(self.err("trailing data after document"));
+        }
+        Ok(())
+    }
+
+    /// Consume one complete value (scalar or whole container) from
+    /// value position and discard it — how schema decoders skip
+    /// unknown fields without building a tree.
+    pub fn skip_value(&mut self) -> Result<(), JsonError> {
+        match self.next()? {
+            Event::ArrStart | Event::ObjStart => self.skip_rest(1),
+            Event::Key(_) => unreachable!("skip_value in key position"),
+            _scalar => Ok(()),
+        }
+    }
+
+    /// Consume the remainder of a container whose start event the
+    /// caller already pulled — the "wrong container type, treat the
+    /// field as absent" path in schema decoders.
+    pub fn skip_value_rest(&mut self) -> Result<(), JsonError> {
+        self.skip_rest(1)
+    }
+
+    /// Consume events until `depth` open containers have closed.
+    fn skip_rest(&mut self, mut depth: usize) -> Result<(), JsonError> {
+        while depth > 0 {
+            match self.next()? {
+                Event::ArrStart | Event::ObjStart => depth += 1,
+                Event::ArrEnd | Event::ObjEnd => depth -= 1,
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+
+    // ---------- value-position coercion helpers ----------
+    //
+    // Schema decoders sit right after a `Key` event and want "the
+    // field as an f64/u64/str, or nothing".  These mirror the tree
+    // accessors (`Json::as_f64`/`as_u64`/`as_str`): a present but
+    // wrong-typed value is consumed whole and coerces to `None`, never
+    // an error — so streaming decoders accept and reject exactly the
+    // same documents as their tree counterparts.
+
+    /// Pull one value; `Some(n)` for a number, `None` otherwise.
+    pub fn f64_opt(&mut self) -> Result<Option<f64>, JsonError> {
+        match self.next()? {
+            Event::Num(n) => Ok(Some(n)),
+            Event::ArrStart | Event::ObjStart => {
+                self.skip_rest(1)?;
+                Ok(None)
+            }
+            _ => Ok(None),
+        }
+    }
+
+    /// Pull one value; `Some(n)` for a non-negative integral number
+    /// (the tree `as_u64` rule), `None` otherwise.
+    pub fn u64_opt(&mut self) -> Result<Option<u64>, JsonError> {
+        Ok(self
+            .f64_opt()?
+            .filter(|n| *n >= 0.0 && n.fract() == 0.0)
+            .map(|n| n as u64))
+    }
+
+    /// Pull one value; `Some(s)` for a string, `None` otherwise.
+    pub fn str_opt(&mut self) -> Result<Option<Cow<'a, str>>, JsonError> {
+        match self.next()? {
+            Event::Str(s) => Ok(Some(s)),
+            Event::ArrStart | Event::ObjStart => {
+                self.skip_rest(1)?;
+                Ok(None)
+            }
+            _ => Ok(None),
+        }
+    }
+
+    /// Close `frame` and emit its end event.
+    fn pop(&mut self, frame: Frame) -> Event<'a> {
+        let popped = self.stack.pop();
+        debug_assert_eq!(popped, Some(frame));
+        self.expect = if self.stack.is_empty() {
+            Expect::Done
+        } else {
+            Expect::CommaOrEnd
+        };
+        match frame {
+            Frame::Arr => Event::ArrEnd,
+            Frame::Obj => Event::ObjEnd,
+        }
+    }
+
+    fn value_event(&mut self) -> Result<Event<'a>, JsonError> {
+        let ev = match self.peek() {
+            Some(b'n') => {
+                self.literal(b"null")?;
+                Event::Null
+            }
+            Some(b't') => {
+                self.literal(b"true")?;
+                Event::Bool(true)
+            }
+            Some(b'f') => {
+                self.literal(b"false")?;
+                Event::Bool(false)
+            }
+            Some(b'"') => Event::Str(self.string()?),
+            Some(b'[') => {
+                self.pos += 1;
+                self.stack.push(Frame::Arr);
+                self.expect = Expect::ValueOrArrEnd;
+                return Ok(Event::ArrStart);
+            }
+            Some(b'{') => {
+                self.pos += 1;
+                self.stack.push(Frame::Obj);
+                self.expect = Expect::KeyOrObjEnd;
+                return Ok(Event::ObjStart);
+            }
+            Some(c) if c == b'-' || c.is_ascii_digit() => {
+                Event::Num(self.number()?)
+            }
+            Some(_) => return Err(self.err("unexpected character")),
+            None => return Err(self.err("unexpected end of input")),
+        };
+        self.expect = if self.stack.is_empty() {
+            Expect::Done
+        } else {
+            Expect::CommaOrEnd
+        };
+        Ok(ev)
+    }
+
+    fn key_event(&mut self) -> Result<Event<'a>, JsonError> {
+        let key = self.string()?;
+        self.skip_ws();
+        self.expect_byte(b':')?;
+        self.expect = Expect::Value;
+        Ok(Event::Key(key))
+    }
+
+    fn literal(&mut self, lit: &[u8]) -> Result<(), JsonError> {
+        if self.bytes[self.pos..].starts_with(lit) {
+            self.pos += lit.len();
+            Ok(())
+        } else {
+            Err(self.err(&format!(
+                "expected '{}'",
+                std::str::from_utf8(lit).unwrap_or("literal")
+            )))
+        }
+    }
+
+    /// Parse a string literal.  Fast path: no escapes — the result
+    /// borrows the input bytes after one UTF-8 validation pass.
+    fn string(&mut self) -> Result<Cow<'a, str>, JsonError> {
+        self.expect_byte(b'"')?;
+        let start = self.pos;
+        loop {
+            match self.peek() {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => {
+                    let s =
+                        std::str::from_utf8(&self.bytes[start..self.pos])
+                            .map_err(|e| self.utf8_err(start, e))?;
+                    self.pos += 1;
+                    return Ok(Cow::Borrowed(s));
+                }
+                Some(b'\\') => break,
+                Some(_) => self.pos += 1,
+            }
+        }
+        self.string_owned(start)
+    }
+
+    /// Slow path: at least one escape — decode into an owned buffer,
+    /// starting from the clean prefix scanned so far.
+    fn string_owned(&mut self, start: usize) -> Result<Cow<'a, str>, JsonError> {
+        let prefix = std::str::from_utf8(&self.bytes[start..self.pos])
+            .map_err(|e| self.utf8_err(start, e))?;
+        let mut s = String::with_capacity(prefix.len() + 16);
+        s.push_str(prefix);
+        loop {
+            match self.peek() {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(Cow::Owned(s));
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    match self.peek() {
+                        Some(b'"') => s.push('"'),
+                        Some(b'\\') => s.push('\\'),
+                        Some(b'/') => s.push('/'),
+                        Some(b'n') => s.push('\n'),
+                        Some(b't') => s.push('\t'),
+                        Some(b'r') => s.push('\r'),
+                        Some(b'b') => s.push('\u{8}'),
+                        Some(b'f') => s.push('\u{c}'),
+                        Some(b'u') => {
+                            let cp = self.unicode_escape()?;
+                            s.push(cp);
+                            continue; // unicode_escape advanced pos itself
+                        }
+                        _ => return Err(self.err("bad escape")),
+                    }
+                    self.pos += 1;
+                }
+                Some(_) => {
+                    // Consume the run of plain bytes up to the next
+                    // quote or escape, validating UTF-8 once per run.
+                    let run = self.pos;
+                    while let Some(b) = self.peek() {
+                        if b == b'"' || b == b'\\' {
+                            break;
+                        }
+                        self.pos += 1;
+                    }
+                    let chunk =
+                        std::str::from_utf8(&self.bytes[run..self.pos])
+                            .map_err(|e| self.utf8_err(run, e))?;
+                    s.push_str(chunk);
+                }
+            }
+        }
+    }
+
+    fn unicode_escape(&mut self) -> Result<char, JsonError> {
+        // at '\\u'; pos points at 'u'
+        self.pos += 1;
+        let hex = self
+            .bytes
+            .get(self.pos..self.pos + 4)
+            .ok_or_else(|| self.err("truncated \\u escape"))?;
+        let hex_str =
+            std::str::from_utf8(hex).map_err(|_| self.err("bad \\u escape"))?;
+        let cp = u32::from_str_radix(hex_str, 16)
+            .map_err(|_| self.err("bad \\u escape"))?;
+        self.pos += 4;
+        // Surrogate pair handling.
+        if (0xd800..0xdc00).contains(&cp) {
+            if self.bytes.get(self.pos) == Some(&b'\\')
+                && self.bytes.get(self.pos + 1) == Some(&b'u')
+            {
+                self.pos += 2;
+                let hex2 = self
+                    .bytes
+                    .get(self.pos..self.pos + 4)
+                    .ok_or_else(|| self.err("truncated low surrogate"))?;
+                let lo = u32::from_str_radix(
+                    std::str::from_utf8(hex2).map_err(|_| self.err("bad"))?,
+                    16,
+                )
+                .map_err(|_| self.err("bad low surrogate"))?;
+                self.pos += 4;
+                let c = 0x10000 + ((cp - 0xd800) << 10) + (lo - 0xdc00);
+                return char::from_u32(c).ok_or_else(|| self.err("bad pair"));
+            }
+            return Ok('\u{fffd}');
+        }
+        Ok(char::from_u32(cp).unwrap_or('\u{fffd}'))
+    }
+
+    fn number(&mut self) -> Result<f64, JsonError> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+            self.pos += 1;
+        }
+        if self.peek() == Some(b'.') {
+            self.pos += 1;
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            self.pos += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.pos += 1;
+            }
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+        }
+        // The scanned range is ASCII by construction.
+        let text = std::str::from_utf8(&self.bytes[start..self.pos])
+            .map_err(|_| self.err("bad number"))?;
+        text.parse::<f64>().map_err(|_| self.err("bad number"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn events(text: &str) -> Vec<Event<'_>> {
+        let mut r = JsonReader::new(text.as_bytes());
+        let mut out = Vec::new();
+        loop {
+            match r.next() {
+                Ok(ev) => out.push(ev),
+                Err(_) => break,
+            }
+            if r.depth() == 0 {
+                break;
+            }
+        }
+        r.finish().unwrap();
+        out
+    }
+
+    #[test]
+    fn scalar_events() {
+        assert_eq!(events("null"), [Event::Null]);
+        assert_eq!(events("true"), [Event::Bool(true)]);
+        assert_eq!(events(" -2.5 "), [Event::Num(-2.5)]);
+        assert_eq!(
+            events("\"hi\""),
+            [Event::Str(Cow::Borrowed("hi"))]
+        );
+    }
+
+    #[test]
+    fn container_event_stream() {
+        let evs = events(r#"{"a":[1,{}],"b":null}"#);
+        assert_eq!(
+            evs,
+            [
+                Event::ObjStart,
+                Event::Key(Cow::Borrowed("a")),
+                Event::ArrStart,
+                Event::Num(1.0),
+                Event::ObjStart,
+                Event::ObjEnd,
+                Event::ArrEnd,
+                Event::Key(Cow::Borrowed("b")),
+                Event::Null,
+                Event::ObjEnd,
+            ]
+        );
+    }
+
+    #[test]
+    fn plain_strings_borrow_escaped_strings_own() {
+        let text = r#"["plain","esc\n"]"#;
+        let mut r = JsonReader::new(text.as_bytes());
+        assert_eq!(r.next().unwrap(), Event::ArrStart);
+        match r.next().unwrap() {
+            Event::Str(Cow::Borrowed(s)) => assert_eq!(s, "plain"),
+            other => panic!("expected borrowed str, got {other:?}"),
+        }
+        match r.next().unwrap() {
+            Event::Str(Cow::Owned(s)) => assert_eq!(s, "esc\n"),
+            other => panic!("expected owned str, got {other:?}"),
+        }
+        assert_eq!(r.next().unwrap(), Event::ArrEnd);
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn skip_value_skips_whole_containers() {
+        let text = r#"{"skip":{"deep":[1,[2,{"x":3}]]},"keep":7}"#;
+        let mut r = JsonReader::new(text.as_bytes());
+        assert_eq!(r.next().unwrap(), Event::ObjStart);
+        assert_eq!(r.next().unwrap(), Event::Key(Cow::Borrowed("skip")));
+        r.skip_value().unwrap();
+        assert_eq!(r.next().unwrap(), Event::Key(Cow::Borrowed("keep")));
+        assert_eq!(r.next().unwrap(), Event::Num(7.0));
+        assert_eq!(r.next().unwrap(), Event::ObjEnd);
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn errors_carry_byte_offsets() {
+        let mut r = JsonReader::new(b"[1, oops]");
+        assert_eq!(r.next().unwrap(), Event::ArrStart);
+        assert_eq!(r.next().unwrap(), Event::Num(1.0));
+        let err = r.next().unwrap_err();
+        assert_eq!(err.offset, 4);
+    }
+
+    #[test]
+    fn invalid_utf8_in_string_is_an_error_not_a_panic() {
+        let mut bytes = b"\"ab".to_vec();
+        bytes.push(0xff);
+        bytes.extend_from_slice(b"cd\"");
+        let mut r = JsonReader::new(&bytes);
+        let err = r.next().unwrap_err();
+        assert!(err.message.contains("utf-8"), "{err}");
+        assert_eq!(err.offset, 3, "offset points at the bad byte");
+    }
+
+    #[test]
+    fn truncated_mid_escape_is_an_error() {
+        for text in [r#""abc\"#, r#""abc\u00"#, r#"{"k":"v\"#] {
+            let mut r = JsonReader::new(text.as_bytes());
+            let mut last = Ok(());
+            for _ in 0..8 {
+                match r.next() {
+                    Ok(_) => continue,
+                    Err(e) => {
+                        last = Err(e);
+                        break;
+                    }
+                }
+            }
+            assert!(last.is_err(), "{text} must fail");
+        }
+    }
+
+    #[test]
+    fn trailing_data_rejected_by_finish() {
+        let mut r = JsonReader::new(b"[1] junk");
+        while r.depth() > 0 || r.offset() == 0 {
+            r.next().unwrap();
+        }
+        assert!(r.finish().is_err());
+    }
+
+    #[test]
+    fn next_after_done_is_an_error() {
+        let mut r = JsonReader::new(b"7");
+        assert_eq!(r.next().unwrap(), Event::Num(7.0));
+        assert!(r.next().is_err());
+    }
+}

@@ -1,0 +1,343 @@
+//! Direct-to-buffer JSON serialization — the write half of the
+//! streaming core.
+//!
+//! [`JsonWriter`] serializes straight into one growable `String`
+//! without ever materializing a [`Json`] tree: callers stream
+//! `begin_obj`/`key`/`num`/... calls and the writer handles commas,
+//! pretty-printing indentation and string escaping.  The tree API's
+//! `Json::to_string_compact`/`to_string_pretty` are implemented on top
+//! of [`JsonWriter::value`], so the streaming and tree paths share one
+//! formatter and can never drift apart byte-wise — the invariant the
+//! report/store/cache goldens depend on.
+//!
+//! Formatting rules (identical to the historical tree writer):
+//! * compact mode has no whitespace at all;
+//! * pretty mode indents two spaces per depth, puts every container
+//!   item on its own line, renders empty containers as `[]`/`{}`, and
+//!   writes `"key": value` with a single space after the colon;
+//! * numbers with no fractional part and magnitude `< 9.0e15` render
+//!   as integers, everything else through the shortest-roundtrip f64
+//!   `Display`; non-finite values degrade to `null`;
+//! * strings escape `"` `\` and control characters only — multi-byte
+//!   UTF-8 passes through verbatim.
+
+use super::Json;
+
+/// Append `n` in the crate's canonical JSON number format.
+pub fn write_num(out: &mut String, n: f64) {
+    if !n.is_finite() {
+        // JSON has no NaN/Inf; TALP metrics never produce them, but be
+        // defensive rather than emit invalid documents.
+        out.push_str("null");
+    } else if n.fract() == 0.0 && n.abs() < 9.0e15 {
+        out.push_str(&format!("{}", n as i64));
+    } else {
+        let s = format!("{n}");
+        out.push_str(&s);
+    }
+}
+
+/// Append `s` as a quoted, escaped JSON string.
+pub fn write_escaped(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Frame {
+    Arr,
+    Obj,
+}
+
+/// Streaming JSON serializer over one owned output buffer.
+///
+/// Misuse (a `key` outside an object, unbalanced `end_*`, two keys in
+/// a row) is a programming error: debug builds assert, release builds
+/// emit whatever was asked for — exactly like writing to a raw buffer.
+#[derive(Debug)]
+pub struct JsonWriter {
+    out: String,
+    pretty: bool,
+    /// One entry per open container: (kind, has_items).
+    stack: Vec<(Frame, bool)>,
+    /// A key was just written; the next value belongs to it.
+    after_key: bool,
+}
+
+impl JsonWriter {
+    pub fn compact() -> JsonWriter {
+        JsonWriter::with_capacity(256, false)
+    }
+
+    pub fn pretty() -> JsonWriter {
+        JsonWriter::with_capacity(1024, true)
+    }
+
+    /// Pre-sized writer: hot paths (shard appends, cache saves, the
+    /// report document) know their approximate output size and avoid
+    /// re-allocation churn by reserving it up front.
+    pub fn with_capacity(capacity: usize, pretty: bool) -> JsonWriter {
+        JsonWriter {
+            out: String::with_capacity(capacity),
+            pretty,
+            stack: Vec::new(),
+            after_key: false,
+        }
+    }
+
+    fn newline_indent(&mut self, depth: usize) {
+        if self.pretty {
+            self.out.push('\n');
+            for _ in 0..depth * 2 {
+                self.out.push(' ');
+            }
+        }
+    }
+
+    /// Comma + newline/indent bookkeeping before a key, or before a
+    /// value in array/top-level position.  A value right after a key
+    /// follows the `": "` separator instead.
+    fn before_item(&mut self) {
+        if self.after_key {
+            self.after_key = false;
+            return;
+        }
+        if let Some((_, has_items)) = self.stack.last_mut() {
+            let first = !*has_items;
+            *has_items = true;
+            if !first {
+                self.out.push(',');
+            }
+            let depth = self.stack.len();
+            self.newline_indent(depth);
+        }
+    }
+
+    pub fn begin_obj(&mut self) {
+        self.before_item();
+        self.out.push('{');
+        self.stack.push((Frame::Obj, false));
+    }
+
+    pub fn end_obj(&mut self) {
+        debug_assert!(!self.after_key, "end_obj right after a key");
+        let (frame, has_items) =
+            self.stack.pop().expect("end_obj with no open container");
+        debug_assert_eq!(frame, Frame::Obj, "end_obj closing an array");
+        if has_items {
+            let depth = self.stack.len();
+            self.newline_indent(depth);
+        }
+        self.out.push('}');
+    }
+
+    pub fn begin_arr(&mut self) {
+        self.before_item();
+        self.out.push('[');
+        self.stack.push((Frame::Arr, false));
+    }
+
+    pub fn end_arr(&mut self) {
+        debug_assert!(!self.after_key, "end_arr right after a key");
+        let (frame, has_items) =
+            self.stack.pop().expect("end_arr with no open container");
+        debug_assert_eq!(frame, Frame::Arr, "end_arr closing an object");
+        if has_items {
+            let depth = self.stack.len();
+            self.newline_indent(depth);
+        }
+        self.out.push(']');
+    }
+
+    /// Write an object key; the next value call supplies its value.
+    pub fn key(&mut self, key: &str) {
+        debug_assert!(
+            matches!(self.stack.last(), Some((Frame::Obj, _))),
+            "key outside an object"
+        );
+        debug_assert!(!self.after_key, "two keys in a row");
+        self.before_item();
+        write_escaped(&mut self.out, key);
+        self.out.push(':');
+        if self.pretty {
+            self.out.push(' ');
+        }
+        self.after_key = true;
+    }
+
+    pub fn null(&mut self) {
+        self.before_item();
+        self.out.push_str("null");
+    }
+
+    pub fn boolean(&mut self, b: bool) {
+        self.before_item();
+        self.out.push_str(if b { "true" } else { "false" });
+    }
+
+    pub fn num(&mut self, n: f64) {
+        self.before_item();
+        write_num(&mut self.out, n);
+    }
+
+    pub fn str_val(&mut self, s: &str) {
+        self.before_item();
+        write_escaped(&mut self.out, s);
+    }
+
+    /// Serialize a whole [`Json`] tree at the current position — how
+    /// the tree API renders itself, and the escape hatch for small
+    /// subdocuments (e.g. an embedded gate verdict) inside an otherwise
+    /// streamed document.
+    pub fn value(&mut self, v: &Json) {
+        match v {
+            Json::Null => self.null(),
+            Json::Bool(b) => self.boolean(*b),
+            Json::Num(n) => self.num(*n),
+            Json::Str(s) => self.str_val(s),
+            Json::Arr(items) => {
+                self.begin_arr();
+                for item in items {
+                    self.value(item);
+                }
+                self.end_arr();
+            }
+            Json::Obj(pairs) => {
+                self.begin_obj();
+                for (k, v) in pairs {
+                    self.key(k);
+                    self.value(v);
+                }
+                self.end_obj();
+            }
+        }
+    }
+
+    /// Replay one reader [`Event`](super::Event) — the reader→writer
+    /// pipe used by the round-trip property tests.
+    pub fn event(&mut self, ev: &super::Event<'_>) {
+        use super::Event;
+        match ev {
+            Event::Null => self.null(),
+            Event::Bool(b) => self.boolean(*b),
+            Event::Num(n) => self.num(*n),
+            Event::Str(s) => self.str_val(s),
+            Event::ArrStart => self.begin_arr(),
+            Event::ArrEnd => self.end_arr(),
+            Event::ObjStart => self.begin_obj(),
+            Event::ObjEnd => self.end_obj(),
+            Event::Key(k) => self.key(k),
+        }
+    }
+
+    /// Bytes written so far.
+    pub fn len(&self) -> usize {
+        self.out.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.out.is_empty()
+    }
+
+    /// Append a raw newline (JSONL record separators, trailing file
+    /// newlines).
+    pub fn newline(&mut self) {
+        self.out.push('\n');
+    }
+
+    /// Finish and take the buffer.
+    pub fn into_string(self) -> String {
+        debug_assert!(
+            self.stack.is_empty(),
+            "into_string with {} unclosed container(s)",
+            self.stack.len()
+        );
+        self.out
+    }
+
+    /// The output written so far (for incremental consumers).
+    pub fn as_str(&self) -> &str {
+        &self.out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compact_matches_tree_writer() {
+        let j = Json::parse(r#"{"a":1,"b":[true,null,"x"],"c":{},"d":[]}"#)
+            .unwrap();
+        let mut w = JsonWriter::compact();
+        w.value(&j);
+        assert_eq!(w.into_string(), j.to_string_compact());
+    }
+
+    #[test]
+    fn pretty_matches_tree_writer() {
+        let j = Json::parse(
+            r#"{"a":[1,2],"b":{"c":null,"d":{"e":[[],{}]}},"s":"q\"q"}"#,
+        )
+        .unwrap();
+        let mut w = JsonWriter::pretty();
+        w.value(&j);
+        let mut out = w.into_string();
+        out.push('\n');
+        assert_eq!(out, j.to_string_pretty());
+    }
+
+    #[test]
+    fn streamed_object_shape() {
+        let mut w = JsonWriter::compact();
+        w.begin_obj();
+        w.key("n");
+        w.num(2.0);
+        w.key("arr");
+        w.begin_arr();
+        w.str_val("a");
+        w.boolean(false);
+        w.end_arr();
+        w.key("empty");
+        w.begin_obj();
+        w.end_obj();
+        w.end_obj();
+        assert_eq!(w.into_string(), r#"{"n":2,"arr":["a",false],"empty":{}}"#);
+    }
+
+    #[test]
+    fn pretty_empty_containers_stay_inline() {
+        let mut w = JsonWriter::pretty();
+        w.begin_obj();
+        w.key("a");
+        w.begin_arr();
+        w.end_arr();
+        w.end_obj();
+        assert_eq!(w.into_string(), "{\n  \"a\": []\n}");
+    }
+
+    #[test]
+    fn top_level_scalars() {
+        for (v, want) in [
+            (Json::Null, "null"),
+            (Json::Bool(true), "true"),
+            (Json::Num(0.25), "0.25"),
+            (Json::Str("hi".into()), "\"hi\""),
+        ] {
+            let mut w = JsonWriter::compact();
+            w.value(&v);
+            assert_eq!(w.into_string(), want);
+        }
+    }
+}

@@ -1,0 +1,294 @@
+//! Property + corruption tests for the streaming JSON core.
+//!
+//! The tentpole invariant: the event pipe (`JsonReader` → `JsonWriter`)
+//! reproduces the tree serializer (`Json::parse` + `to_string_*`)
+//! byte-for-byte over arbitrary generated documents — so every hot
+//! path that moved from the tree to the stream (store shards, metrics
+//! cache, `report.json`) keeps emitting identical files.  Plus the
+//! corruption ladder: truncation mid-escape and invalid UTF-8 degrade
+//! to per-line warnings (shards) or a cold start (cache), never errors
+//! or panics.
+
+use talp_pages::pages::MetricsCache;
+use talp_pages::pop::RunMetrics;
+use talp_pages::store::RunStore;
+use talp_pages::talp::{GitMeta, ProcStats, RegionData, RunData};
+use talp_pages::util::fs::TempDir;
+use talp_pages::util::json::{Json, JsonReader, JsonWriter};
+use talp_pages::util::propcheck::check;
+use talp_pages::util::rng::Rng;
+
+// ---------- generator ----------
+
+fn gen_string(rng: &mut Rng) -> String {
+    let len = rng.below(12);
+    (0..len)
+        .map(|_| match rng.below(12) {
+            0 => '"',
+            1 => '\\',
+            2 => '\n',
+            3 => '\t',
+            4 => '\u{1}', // forces a \u escape
+            5 => '\u{263a}',
+            6 => '\u{1f600}', // astral plane (4-byte UTF-8)
+            7 => '/',
+            _ => (b'a' + rng.below(26) as u8) as char,
+        })
+        .collect()
+}
+
+fn gen_num(rng: &mut Rng) -> Json {
+    match rng.below(4) {
+        0 => Json::Num(rng.below(1 << 50) as f64),
+        1 => Json::Num(-(rng.below(100_000) as f64)),
+        2 => Json::Num(rng.range_f64(-1e6, 1e6)),
+        _ => Json::Num(rng.f64()),
+    }
+}
+
+fn gen_json(rng: &mut Rng, depth: u32) -> Json {
+    let pick = if depth == 0 { rng.below(4) } else { rng.below(6) };
+    match pick {
+        0 => Json::Null,
+        1 => Json::Bool(rng.below(2) == 0),
+        2 => gen_num(rng),
+        3 => Json::Str(gen_string(rng)),
+        4 => Json::Arr(
+            (0..rng.below(5)).map(|_| gen_json(rng, depth - 1)).collect(),
+        ),
+        _ => Json::Obj(
+            (0..rng.below(5))
+                .map(|i| {
+                    // Index suffix keeps keys unique within an object.
+                    (format!("{}k{i}", gen_string(rng)), gen_json(rng, depth - 1))
+                })
+                .collect(),
+        ),
+    }
+}
+
+/// Replay `bytes` through the reader→writer event pipe.
+fn pipe(bytes: &[u8], pretty: bool) -> Result<String, String> {
+    let mut r = JsonReader::new(bytes);
+    let mut w = JsonWriter::with_capacity(bytes.len(), pretty);
+    loop {
+        let ev = r.next().map_err(|e| e.to_string())?;
+        w.event(&ev);
+        if r.depth() == 0 {
+            break;
+        }
+    }
+    r.finish().map_err(|e| e.to_string())?;
+    Ok(w.into_string())
+}
+
+// ---------- properties ----------
+
+#[test]
+fn event_pipe_reproduces_tree_serialization_byte_identically() {
+    check("json stream roundtrip", 256, |rng| {
+        let v = gen_json(rng, 4);
+
+        let compact = v.to_string_compact();
+        let piped = pipe(compact.as_bytes(), false)?;
+        if piped != compact {
+            return Err(format!(
+                "compact pipe diverged:\n  in:  {compact}\n  out: {piped}"
+            ));
+        }
+
+        // Pretty in, pretty out (modulo the trailing newline the tree
+        // helper appends).
+        let pretty = v.to_string_pretty();
+        let piped = pipe(pretty.as_bytes(), true)? + "\n";
+        if piped != pretty {
+            return Err(format!(
+                "pretty pipe diverged:\n  in:  {pretty}\n  out: {piped}"
+            ));
+        }
+
+        // And the tree built from bytes equals the original value.
+        let reparsed = Json::from_slice(compact.as_bytes())
+            .map_err(|e| e.to_string())?;
+        if reparsed != v {
+            return Err(format!("from_slice diverged for {compact}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn truncation_never_panics_and_never_parses() {
+    // Chopping a valid document at any byte must yield a clean error
+    // (or, for whitespace-only tails, possibly a valid prefix — JSON
+    // scalars like numbers can be self-delimiting, so only check the
+    // no-panic + deterministic behavior here).
+    check("json stream truncation", 64, |rng| {
+        let v = Json::Obj(vec![
+            ("s".into(), Json::Str(gen_string(rng))),
+            ("n".into(), gen_num(rng)),
+            ("a".into(), gen_json(rng, 2)),
+        ]);
+        let text = v.to_string_compact();
+        let cut = 1 + rng.below(text.len() as u64 - 1) as usize;
+        let mut bytes = text.as_bytes()[..cut].to_vec();
+        // Half the time, also flip the last byte to something invalid.
+        if rng.below(2) == 0 {
+            *bytes.last_mut().unwrap() = 0xff;
+        }
+        // Must not panic; an Err is expected (an object document cut
+        // short can never be complete).
+        if Json::from_slice(&bytes).is_ok() {
+            return Err(format!(
+                "truncated object parsed?! cut={cut} of {}",
+                text.len()
+            ));
+        }
+        Ok(())
+    });
+}
+
+// ---------- RunData / RunMetrics codec equivalence ----------
+
+fn sample_run(ranks: u32) -> RunData {
+    RunData {
+        dlb_version: "t".into(),
+        app: "app \"quoted\" α".into(),
+        machine: "mn5\n".into(),
+        timestamp: 1_721_046_896,
+        ranks,
+        threads: 2,
+        nodes: 1,
+        regions: vec![RegionData {
+            name: "Glob\tal".into(),
+            elapsed_s: 1.25,
+            visits: 3,
+            procs: (0..ranks)
+                .map(|r| ProcStats {
+                    rank: r,
+                    elapsed_s: 1.25,
+                    useful_s: 1.0 / 3.0 + r as f64,
+                    mpi_s: 0.125,
+                    useful_instructions: 123_456_789,
+                    useful_cycles: 987_654_321,
+                    ..Default::default()
+                })
+                .collect(),
+        }],
+        git: Some(GitMeta {
+            commit: "9dc04ca0".into(),
+            branch: "main".into(),
+            commit_timestamp: 1_721_000_000,
+            message: "fix \\ escape".into(),
+        }),
+    }
+}
+
+#[test]
+fn artifact_files_round_trip_byte_identically_through_both_codecs() {
+    let td = TempDir::new("json-stream-artifact").unwrap();
+    let path = td.path().join("exp/talp_2x2.json");
+    let run = sample_run(2);
+    run.write_file(&path).unwrap();
+    // The streamed file is exactly the tree serialization.
+    let written = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(written, run.to_json().to_string_pretty());
+    // And both decoders agree on it.
+    let a = RunData::read_file(&path).unwrap(); // from_slice inside
+    let b = RunData::from_json(&Json::parse(&written).unwrap()).unwrap();
+    assert_eq!(
+        a.to_json().to_string_compact(),
+        b.to_json().to_string_compact()
+    );
+}
+
+// ---------- corruption: store shards ----------
+
+#[test]
+fn shard_corruption_degrades_to_warnings() {
+    let td = TempDir::new("json-stream-store").unwrap();
+    // Build a store of three runs (distinct content each) through the
+    // public ingest path.
+    let input = td.path().join("talp");
+    for i in 0..3u8 {
+        let mut run = sample_run(2);
+        run.timestamp += i as i64;
+        run.write_file(&input.join(format!("exp/run_{i}.json"))).unwrap();
+    }
+    let store_root = td.path().join("store");
+    let mut store = RunStore::create_or_open(&store_root).unwrap();
+    talp_pages::store::ingest_dir(&mut store, &input, 0, None).unwrap();
+    assert_eq!(store.len(), 3);
+    drop(store);
+
+    // Corrupt the shard: a line truncated mid-escape and a line with
+    // invalid UTF-8, between intact records.
+    let shards_dir = store_root.join("shards");
+    let shard = std::fs::read_dir(&shards_dir)
+        .unwrap()
+        .flatten()
+        .map(|e| e.path())
+        .find(|p| p.extension().is_some())
+        .unwrap();
+    let good = std::fs::read(&shard).unwrap();
+    let lines: Vec<&[u8]> =
+        good.split(|&b| b == b'\n').filter(|l| !l.is_empty()).collect();
+    assert_eq!(lines.len(), 3);
+    let mut rebuilt: Vec<u8> = Vec::new();
+    rebuilt.extend_from_slice(lines[0]);
+    rebuilt.push(b'\n');
+    // Truncated mid-escape (a killed writer inside a string escape).
+    rebuilt.extend_from_slice(br#"{"hash":"h","experiment":"e\"#);
+    rebuilt.push(b'\n');
+    rebuilt.extend_from_slice(lines[1]);
+    rebuilt.push(b'\n');
+    // Invalid UTF-8 inside a string.
+    rebuilt.extend_from_slice(b"{\"hash\":\"\xc3\x28\",\"experiment\":\"e\"}\n");
+    rebuilt.extend_from_slice(lines[2]);
+    rebuilt.push(b'\n');
+    std::fs::write(&shard, rebuilt).unwrap();
+
+    let back = RunStore::open(&store_root).unwrap();
+    assert_eq!(back.len(), 3, "all intact records survive");
+    assert_eq!(back.warnings().len(), 2, "{:?}", back.warnings());
+    assert!(back.warnings()[0].contains("line 2"));
+    assert!(back.warnings()[1].contains("line 4"));
+}
+
+// ---------- corruption: metrics cache ----------
+
+#[test]
+fn cache_corruption_degrades_to_cold_start() {
+    let td = TempDir::new("json-stream-cache").unwrap();
+    let path = td.path().join(".talp-cache.json");
+    let mut cache = MetricsCache::new();
+    cache.insert(
+        "exp/a.json",
+        "deadbeef",
+        RunMetrics::from_run(&sample_run(2), "exp/a.json"),
+    );
+    cache.save(&path).unwrap();
+    let good = std::fs::read(&path).unwrap();
+    assert_eq!(MetricsCache::load(&path).len(), 1, "sanity: loads warm");
+
+    // Truncate at every-ish offset: always a cold start, never a panic
+    // or partial load of a half-written entry.
+    for cut in [1, good.len() / 4, good.len() / 2, good.len() - 2] {
+        std::fs::write(&path, &good[..cut]).unwrap();
+        assert!(
+            MetricsCache::load(&path).is_empty(),
+            "cut at {cut} must cold-start"
+        );
+    }
+
+    // Invalid UTF-8 inside the document: cold start.
+    let mut bad = good.clone();
+    let pos = bad.windows(8).position(|w| w == b"deadbeef").unwrap();
+    bad[pos + 2] = 0xff;
+    std::fs::write(&path, &bad).unwrap();
+    assert!(MetricsCache::load(&path).is_empty());
+
+    // Untouched bytes still load.
+    std::fs::write(&path, &good).unwrap();
+    assert_eq!(MetricsCache::load(&path).len(), 1);
+}

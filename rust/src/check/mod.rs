@@ -1,0 +1,522 @@
+//! Static analysis of every input surface — `talp-pages check`.
+//!
+//! The report/gate/ingest pipeline is deliberately tolerant: a corrupt
+//! artifact or shard line degrades to a skip-warning so one bad file
+//! never sinks a CI report.  That tolerance is the wrong default when a
+//! human asks "is my setup correct?" — a typo'd gate policy or a
+//! drifted store should surface *before* a run, as a precise finding,
+//! not mid-pipeline as free text.  This module is that pre-flight
+//! analyzer: it validates, without executing a report run, everything
+//! the tool consumes —
+//!
+//! * TALP artifact trees (`--input`),
+//! * the persistent run store: manifest + JSONL shards (`--store`),
+//! * gate policies (`--policy`),
+//! * the metrics cache (`--cache`),
+//! * emitted `report.json` documents (`--report`),
+//! * the committed bench baseline (`--bench`),
+//!
+//! and emits structured [`Diagnostic`]s: a stable `TP0xx` code (see
+//! [`describe`] for the full table), a severity, the file path, an
+//! optional byte-offset [`Span`] (recovered from the streaming JSON
+//! reader's offset errors), and a fix-it hint.  Output is deterministic
+//! text ([`CheckReport::render_text`]) or SARIF 2.1.0 ([`sarif`]), with
+//! gate-style exit codes: 0 clean, 1 warnings, 2 errors.
+//!
+//! Beyond per-file validation, [`run_check`] performs the cross-file
+//! referential analysis nothing else does: policy rules or allow
+//! entries whose `(experiment, config, region)` patterns match nothing
+//! in the scanned corpus (TP040/TP041), manifest↔shard drift and
+//! duplicate records (TP014/TP015/TP016), equal effective timestamps
+//! inside one history (TP050), and NaN/negative metric values
+//! (TP051/TP052).
+//!
+//! The scanner and store loaders share this module's [`Diagnostic`]
+//! type for their skip-warnings, so `report.json` warnings carry codes
+//! and paths too; severity is per *instance* — the same corrupt
+//! artifact is a warning to the tolerant report engine and an error to
+//! `check`.
+
+use std::fmt;
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use crate::pages::cache::MetricsCache;
+use crate::pages::scanner::{scan_metrics, MetricScan};
+use crate::store::RunStore;
+
+pub mod sarif;
+pub mod surfaces;
+
+/// How bad a finding is.  `Info` never affects the exit code.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Error,
+    Warning,
+    Info,
+}
+
+impl Severity {
+    pub fn id(self) -> &'static str {
+        match self {
+            Severity::Error => "error",
+            Severity::Warning => "warning",
+            Severity::Info => "info",
+        }
+    }
+
+    /// SARIF 2.1.0 result `level`.
+    pub fn sarif_level(self) -> &'static str {
+        match self {
+            Severity::Error => "error",
+            Severity::Warning => "warning",
+            Severity::Info => "note",
+        }
+    }
+}
+
+/// Byte-offset region inside the diagnosed file (what the streaming
+/// JSON reader's offset errors recover).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Span {
+    pub start: usize,
+    pub len: usize,
+}
+
+/// One structured finding.
+///
+/// `Display` renders the canonical one-liner — `path: message [code]`,
+/// or `path:offset: message [code]` when a span is known — which is
+/// also the string form `report.json` consumers reconstruct.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Diagnostic {
+    /// Stable `TP0xx` code (see [`describe`]).
+    pub code: &'static str,
+    pub severity: Severity,
+    /// File the finding is about (display form).
+    pub path: String,
+    pub span: Option<Span>,
+    pub message: String,
+    /// Optional fix-it suggestion.
+    pub hint: Option<String>,
+}
+
+impl Diagnostic {
+    pub fn new(
+        code: &'static str,
+        severity: Severity,
+        path: impl Into<String>,
+        message: impl Into<String>,
+    ) -> Diagnostic {
+        Diagnostic {
+            code,
+            severity,
+            path: path.into(),
+            span: None,
+            message: message.into(),
+            hint: None,
+        }
+    }
+
+    pub fn error(
+        code: &'static str,
+        path: impl Into<String>,
+        message: impl Into<String>,
+    ) -> Diagnostic {
+        Diagnostic::new(code, Severity::Error, path, message)
+    }
+
+    pub fn warning(
+        code: &'static str,
+        path: impl Into<String>,
+        message: impl Into<String>,
+    ) -> Diagnostic {
+        Diagnostic::new(code, Severity::Warning, path, message)
+    }
+
+    pub fn info(
+        code: &'static str,
+        path: impl Into<String>,
+        message: impl Into<String>,
+    ) -> Diagnostic {
+        Diagnostic::new(code, Severity::Info, path, message)
+    }
+
+    pub fn with_span(mut self, span: Span) -> Diagnostic {
+        self.span = Some(span);
+        self
+    }
+
+    pub fn with_hint(mut self, hint: impl Into<String>) -> Diagnostic {
+        self.hint = Some(hint.into());
+        self
+    }
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.span {
+            Some(s) => write!(
+                f,
+                "{}:{}: {} [{}]",
+                self.path, s.start, self.message, self.code
+            ),
+            None => {
+                write!(f, "{}: {} [{}]", self.path, self.message, self.code)
+            }
+        }
+    }
+}
+
+/// Overall outcome, gate-style: the worst severity present wins.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CheckStatus {
+    Clean,
+    Warnings,
+    Errors,
+}
+
+impl CheckStatus {
+    pub fn id(self) -> &'static str {
+        match self {
+            CheckStatus::Clean => "clean",
+            CheckStatus::Warnings => "warnings",
+            CheckStatus::Errors => "errors",
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            CheckStatus::Clean => "CLEAN",
+            CheckStatus::Warnings => "WARN",
+            CheckStatus::Errors => "ERROR",
+        }
+    }
+
+    /// 0 clean, 1 warnings, 2 errors — mirrors the gate's exit codes.
+    pub fn exit_code(self) -> i32 {
+        match self {
+            CheckStatus::Clean => 0,
+            CheckStatus::Warnings => 1,
+            CheckStatus::Errors => 2,
+        }
+    }
+}
+
+/// The collected findings of one check run.
+#[derive(Debug, Default)]
+pub struct CheckReport {
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+impl CheckReport {
+    pub fn new() -> CheckReport {
+        CheckReport::default()
+    }
+
+    pub fn push(&mut self, d: Diagnostic) {
+        self.diagnostics.push(d);
+    }
+
+    /// Deterministic order: path, then span start (span-less first),
+    /// then code, then message — so output never depends on scan
+    /// parallelism or directory-iteration order.
+    pub fn sort(&mut self) {
+        self.diagnostics.sort_by(|a, b| {
+            a.path
+                .cmp(&b.path)
+                .then_with(|| {
+                    a.span
+                        .map(|s| s.start)
+                        .cmp(&b.span.map(|s| s.start))
+                })
+                .then_with(|| a.code.cmp(b.code))
+                .then_with(|| a.message.cmp(&b.message))
+        });
+    }
+
+    pub fn count(&self, severity: Severity) -> usize {
+        self.diagnostics
+            .iter()
+            .filter(|d| d.severity == severity)
+            .count()
+    }
+
+    pub fn status(&self) -> CheckStatus {
+        if self.count(Severity::Error) > 0 {
+            CheckStatus::Errors
+        } else if self.count(Severity::Warning) > 0 {
+            CheckStatus::Warnings
+        } else {
+            CheckStatus::Clean
+        }
+    }
+
+    pub fn exit_code(&self) -> i32 {
+        self.status().exit_code()
+    }
+
+    pub fn summary_line(&self) -> String {
+        format!(
+            "check: {} — {} diagnostic(s): {} error(s), {} warning(s), \
+             {} info",
+            self.status().label(),
+            self.diagnostics.len(),
+            self.count(Severity::Error),
+            self.count(Severity::Warning),
+            self.count(Severity::Info),
+        )
+    }
+
+    /// One line per diagnostic (`severity: path: message [code]`), hint
+    /// lines indented beneath, then the summary line.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        for d in &self.diagnostics {
+            out.push_str(&format!("{}: {d}\n", d.severity.id()));
+            if let Some(h) = &d.hint {
+                out.push_str(&format!("  hint: {h}\n"));
+            }
+        }
+        out.push_str(&self.summary_line());
+        out.push('\n');
+        out
+    }
+}
+
+/// Short description of a diagnostic code — the SARIF rule text and
+/// the README table, from one source.
+pub fn describe(code: &str) -> &'static str {
+    match code {
+        "TP001" => "invalid JSON syntax",
+        "TP002" => "not a valid TALP artifact",
+        "TP003" => "invalid gate policy",
+        "TP010" => "store manifest missing or invalid",
+        "TP011" => "store version not understood by this build",
+        "TP012" => "corrupt store shard record",
+        "TP013" => "unreadable input file",
+        "TP014" => "unexpected or misnamed file in store shards",
+        "TP015" => "duplicate store record for one (source, hash)",
+        "TP016" => "identical content stored under several source paths",
+        "TP020" => "metrics cache version skew (will cold-start)",
+        "TP021" => "metrics cache invalid (will cold-start)",
+        "TP030" => "report schema_version not understood by this build",
+        "TP031" => "report document invalid",
+        "TP040" => "policy rule matches nothing in the corpus",
+        "TP041" => "policy allow entry matches nothing in the corpus",
+        "TP050" => "equal effective timestamps within one history",
+        "TP051" => "metric value is NaN",
+        "TP052" => "metric value is negative",
+        "TP060" => "bench baseline is unmeasured",
+        _ => "unknown diagnostic code",
+    }
+}
+
+/// What [`run_check`] should look at.  At least one target is
+/// required; `input` and `store` are mutually exclusive (same rule as
+/// `report`).
+#[derive(Debug, Default)]
+pub struct CheckOptions {
+    pub input: Option<PathBuf>,
+    pub store: Option<PathBuf>,
+    pub policy: Option<PathBuf>,
+    pub cache: Option<PathBuf>,
+    pub report: Option<PathBuf>,
+    pub bench: Option<PathBuf>,
+    /// Worker threads for the artifact/store scan (0 = auto).  Output
+    /// is byte-identical for every value (pinned by tests).
+    pub jobs: usize,
+}
+
+/// Run every requested check and return the sorted report.  `Err` is
+/// reserved for unusable invocations (no targets, conflicting flags,
+/// missing scan root); everything found *in* the inputs is a
+/// [`Diagnostic`], not an error.
+pub fn run_check(opts: &CheckOptions) -> Result<CheckReport> {
+    if opts.input.is_some() && opts.store.is_some() {
+        bail!("--input and --store are mutually exclusive");
+    }
+    if opts.input.is_none()
+        && opts.store.is_none()
+        && opts.policy.is_none()
+        && opts.cache.is_none()
+        && opts.report.is_none()
+        && opts.bench.is_none()
+    {
+        bail!(
+            "nothing to check: pass --input <dir>, --store <dir>, \
+             --policy, --cache, --report or --bench"
+        );
+    }
+
+    let mut rep = CheckReport::new();
+
+    // The corpus the referential checks run against: a throwaway scan
+    // of the artifact tree (never persisted into any cache), or the
+    // store's records.
+    let mut corpus: Option<MetricScan> = None;
+    if let Some(input) = &opts.input {
+        let scan =
+            scan_metrics(input, &mut MetricsCache::new(), opts.jobs)?;
+        for d in &scan.warnings {
+            // The report engine tolerates a corrupt artifact; check
+            // mode exists to catch it, so escalate to an error.
+            let mut d = d.clone();
+            if d.code == "TP001" || d.code == "TP002" {
+                d.severity = Severity::Error;
+            }
+            rep.push(d);
+        }
+        corpus = Some(scan);
+    }
+    if let Some(store) = &opts.store {
+        surfaces::check_store(store, &mut rep);
+        // For the referential corpus, reuse the loader; its own
+        // warnings are discarded — the shard pass above already
+        // reported them (with spans).
+        if let Ok(s) = RunStore::open_with_jobs(store, opts.jobs) {
+            corpus = Some(s.into_scan());
+        }
+    }
+
+    if let Some(scan) = &corpus {
+        surfaces::check_corpus(scan, &mut rep);
+    }
+
+    if let Some(policy_path) = &opts.policy {
+        let policy = surfaces::check_policy(policy_path, &mut rep);
+        if let (Some(policy), Some(scan)) = (policy, &corpus) {
+            surfaces::check_policy_refs(
+                &policy,
+                policy_path,
+                scan,
+                &mut rep,
+            );
+        }
+    }
+
+    if let Some(cache) = &opts.cache {
+        // A missing cache file is an ordinary cold start, not a
+        // finding.
+        if cache.exists() {
+            for d in MetricsCache::check_file(cache) {
+                rep.push(d);
+            }
+        }
+    }
+
+    if let Some(report) = &opts.report {
+        surfaces::check_report(report, &mut rep);
+    }
+
+    if let Some(bench) = &opts.bench {
+        surfaces::check_bench(bench, &mut rep);
+    }
+
+    rep.sort();
+    Ok(rep)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diag(
+        code: &'static str,
+        sev: Severity,
+        path: &str,
+        span: Option<usize>,
+    ) -> Diagnostic {
+        let d = Diagnostic::new(code, sev, path, "m");
+        match span {
+            Some(start) => d.with_span(Span { start, len: 1 }),
+            None => d,
+        }
+    }
+
+    #[test]
+    fn display_with_and_without_span() {
+        let d = Diagnostic::warning("TP001", "a.json", "invalid JSON");
+        assert_eq!(d.to_string(), "a.json: invalid JSON [TP001]");
+        let d = d.with_span(Span { start: 42, len: 1 });
+        assert_eq!(d.to_string(), "a.json:42: invalid JSON [TP001]");
+    }
+
+    #[test]
+    fn status_is_worst_severity_and_info_never_counts() {
+        let mut rep = CheckReport::new();
+        assert_eq!(rep.status(), CheckStatus::Clean);
+        assert_eq!(rep.exit_code(), 0);
+        rep.push(diag("TP016", Severity::Info, "x", None));
+        assert_eq!(rep.status(), CheckStatus::Clean, "info stays clean");
+        rep.push(diag("TP050", Severity::Warning, "x", None));
+        assert_eq!(rep.exit_code(), 1);
+        rep.push(diag("TP001", Severity::Error, "x", None));
+        assert_eq!(rep.exit_code(), 2);
+    }
+
+    #[test]
+    fn sort_orders_by_path_span_code_message() {
+        let mut rep = CheckReport::new();
+        rep.push(diag("TP012", Severity::Warning, "b", Some(9)));
+        rep.push(diag("TP001", Severity::Error, "b", Some(3)));
+        rep.push(diag("TP013", Severity::Warning, "b", None));
+        rep.push(diag("TP060", Severity::Warning, "a", None));
+        rep.sort();
+        let order: Vec<(&str, &str, Option<usize>)> = rep
+            .diagnostics
+            .iter()
+            .map(|d| (d.path.as_str(), d.code, d.span.map(|s| s.start)))
+            .collect();
+        assert_eq!(
+            order,
+            [
+                ("a", "TP060", None),
+                ("b", "TP013", None), // span-less first within a path
+                ("b", "TP001", Some(3)),
+                ("b", "TP012", Some(9)),
+            ]
+        );
+    }
+
+    #[test]
+    fn render_text_includes_hints_and_summary() {
+        let mut rep = CheckReport::new();
+        rep.push(
+            Diagnostic::warning("TP060", "bench.json", "unmeasured")
+                .with_hint("run cargo bench"),
+        );
+        let text = rep.render_text();
+        assert!(text.contains("warning: bench.json: unmeasured [TP060]"));
+        assert!(text.contains("  hint: run cargo bench"));
+        assert!(text.ends_with(
+            "check: WARN — 1 diagnostic(s): 0 error(s), 1 warning(s), \
+             0 info\n"
+        ));
+    }
+
+    #[test]
+    fn every_emitted_code_is_described() {
+        for code in [
+            "TP001", "TP002", "TP003", "TP010", "TP011", "TP012",
+            "TP013", "TP014", "TP015", "TP016", "TP020", "TP021",
+            "TP030", "TP031", "TP040", "TP041", "TP050", "TP051",
+            "TP052", "TP060",
+        ] {
+            assert_ne!(describe(code), "unknown diagnostic code", "{code}");
+        }
+        assert_eq!(describe("TP999"), "unknown diagnostic code");
+    }
+
+    #[test]
+    fn run_check_rejects_unusable_invocations() {
+        assert!(run_check(&CheckOptions::default()).is_err(), "no target");
+        let both = CheckOptions {
+            input: Some("a".into()),
+            store: Some("b".into()),
+            ..Default::default()
+        };
+        assert!(run_check(&both).is_err(), "input+store conflict");
+    }
+}

@@ -1,0 +1,212 @@
+//! SARIF 2.1.0 output for [`CheckReport`] — the interchange format
+//! GitHub code scanning, GitLab SAST and most editors ingest, so
+//! `talp-pages check --format sarif` findings annotate the offending
+//! files directly in a merge request.
+//!
+//! One run, one tool (`talp-pages check`), one rule per distinct
+//! `TP0xx` code present in the report (described via
+//! [`super::describe`]), one result per diagnostic.  Spans map to
+//! `region.byteOffset`/`byteLength` (SARIF's binary-region form —
+//! checked files are byte streams to the JSON reader, not line-based
+//! text).  Output is deterministic: diagnostics keep the report's
+//! sorted order and rules are sorted by code.
+
+use crate::util::json::Json;
+
+use super::{describe, CheckReport, Diagnostic};
+
+/// The SARIF 2.1.0 schema URI (also what consumers key the version
+/// check on).
+pub const SARIF_SCHEMA: &str = "https://raw.githubusercontent.com/oasis-tcs/sarif-spec/master/Schemata/sarif-schema-2.1.0.json";
+
+/// Tool homepage advertised in the SARIF driver block.
+const INFORMATION_URI: &str = "https://arxiv.org/abs/2510.12436";
+
+fn rule_json(code: &str) -> Json {
+    Json::from_pairs(vec![
+        ("id", Json::Str(code.to_string())),
+        (
+            "shortDescription",
+            Json::from_pairs(vec![(
+                "text",
+                Json::Str(describe(code).to_string()),
+            )]),
+        ),
+    ])
+}
+
+fn result_json(d: &Diagnostic) -> Json {
+    let text = match &d.hint {
+        Some(h) => format!("{} (hint: {h})", d.message),
+        None => d.message.clone(),
+    };
+    let mut physical = vec![(
+        "artifactLocation",
+        Json::from_pairs(vec![("uri", Json::Str(d.path.clone()))]),
+    )];
+    if let Some(span) = d.span {
+        physical.push((
+            "region",
+            Json::from_pairs(vec![
+                ("byteOffset", Json::Num(span.start as f64)),
+                ("byteLength", Json::Num(span.len as f64)),
+            ]),
+        ));
+    }
+    Json::from_pairs(vec![
+        ("ruleId", Json::Str(d.code.to_string())),
+        ("level", Json::Str(d.severity.sarif_level().to_string())),
+        (
+            "message",
+            Json::from_pairs(vec![("text", Json::Str(text))]),
+        ),
+        (
+            "locations",
+            Json::Arr(vec![Json::from_pairs(vec![(
+                "physicalLocation",
+                Json::from_pairs(physical),
+            )])]),
+        ),
+    ])
+}
+
+/// Build the SARIF document tree for a (sorted) report.
+pub fn to_sarif(rep: &CheckReport) -> Json {
+    let mut codes: Vec<&str> =
+        rep.diagnostics.iter().map(|d| d.code).collect();
+    codes.sort_unstable();
+    codes.dedup();
+    let driver = Json::from_pairs(vec![
+        ("name", Json::Str("talp-pages check".to_string())),
+        ("informationUri", Json::Str(INFORMATION_URI.to_string())),
+        ("rules", Json::Arr(codes.into_iter().map(rule_json).collect())),
+    ]);
+    let run = Json::from_pairs(vec![
+        ("tool", Json::from_pairs(vec![("driver", driver)])),
+        (
+            "results",
+            Json::Arr(rep.diagnostics.iter().map(result_json).collect()),
+        ),
+    ]);
+    Json::from_pairs(vec![
+        ("$schema", Json::Str(SARIF_SCHEMA.to_string())),
+        ("version", Json::Str("2.1.0".to_string())),
+        ("runs", Json::Arr(vec![run])),
+    ])
+}
+
+/// Render the report as pretty-printed SARIF (trailing newline
+/// included, ready for `--sarif <file>`).
+pub fn render(rep: &CheckReport) -> String {
+    to_sarif(rep).to_string_pretty()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{CheckReport, Severity, Span};
+    use super::*;
+
+    fn sample() -> CheckReport {
+        let mut rep = CheckReport::new();
+        rep.push(
+            Diagnostic::error("TP001", "exp/bad.json", "invalid JSON")
+                .with_span(Span { start: 17, len: 1 }),
+        );
+        rep.push(
+            Diagnostic::warning("TP060", "BENCH.json", "unmeasured")
+                .with_hint("run cargo bench"),
+        );
+        rep.push(Diagnostic::info("TP016", "store", "dup content"));
+        rep.push(Diagnostic::error("TP001", "exp/bad2.json", "invalid"));
+        rep.sort();
+        rep
+    }
+
+    #[test]
+    fn document_shape_levels_rules_and_regions() {
+        let doc = to_sarif(&sample());
+        assert_eq!(
+            doc.get("$schema").and_then(Json::as_str),
+            Some(SARIF_SCHEMA)
+        );
+        assert_eq!(
+            doc.get("version").and_then(Json::as_str),
+            Some("2.1.0")
+        );
+        let runs = doc.get("runs").and_then(Json::as_arr).unwrap();
+        assert_eq!(runs.len(), 1);
+        // Rules: distinct codes, sorted, each described.
+        let rules = runs[0]
+            .at(&["tool", "driver", "rules"])
+            .and_then(Json::as_arr)
+            .unwrap();
+        let ids: Vec<&str> = rules
+            .iter()
+            .filter_map(|r| r.get("id").and_then(Json::as_str))
+            .collect();
+        assert_eq!(ids, ["TP001", "TP016", "TP060"], "deduped + sorted");
+        assert_eq!(
+            rules[0]
+                .at(&["shortDescription", "text"])
+                .and_then(Json::as_str),
+            Some("invalid JSON syntax")
+        );
+        // Results mirror the report order with mapped levels.
+        let results =
+            runs[0].get("results").and_then(Json::as_arr).unwrap();
+        assert_eq!(results.len(), 4);
+        let levels: Vec<&str> = results
+            .iter()
+            .filter_map(|r| r.get("level").and_then(Json::as_str))
+            .collect();
+        assert_eq!(levels, ["warning", "error", "error", "note"]);
+        // Span -> byte region; span-less results omit the region.
+        let with_span = results
+            .iter()
+            .find(|r| {
+                r.at(&[
+                    "locations",
+                ])
+                .and_then(Json::as_arr)
+                .and_then(|l| {
+                    l[0].at(&["physicalLocation", "artifactLocation", "uri"])
+                        .and_then(Json::as_str)
+                })
+                    == Some("exp/bad.json")
+            })
+            .unwrap();
+        let region = with_span
+            .at(&["locations"])
+            .and_then(Json::as_arr)
+            .and_then(|l| {
+                l[0].at(&["physicalLocation", "region"]).cloned()
+            })
+            .unwrap();
+        assert_eq!(region.get("byteOffset").and_then(Json::as_u64), Some(17));
+        assert_eq!(region.get("byteLength").and_then(Json::as_u64), Some(1));
+        let spanless = &results[3];
+        assert!(results[3]
+            .at(&["locations"])
+            .and_then(Json::as_arr)
+            .map(|l| l[0]
+                .at(&["physicalLocation", "region"])
+                .is_none())
+            .unwrap_or(false),
+            "{spanless:?}");
+        // Hints ride in the message text.
+        assert!(results
+            .iter()
+            .any(|r| r.at(&["message", "text"]).and_then(Json::as_str)
+                == Some("unmeasured (hint: run cargo bench)")));
+    }
+
+    #[test]
+    fn render_parses_back_and_is_deterministic() {
+        let rep = sample();
+        let a = render(&rep);
+        let b = render(&rep);
+        assert_eq!(a, b);
+        assert!(a.ends_with('\n'));
+        Json::parse(&a).expect("rendered SARIF is valid JSON");
+    }
+}

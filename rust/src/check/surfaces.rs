@@ -1,0 +1,851 @@
+//! Per-surface checkers behind [`super::run_check`]: each function
+//! inspects one input kind (store, corpus, policy, report, bench
+//! baseline) and appends [`Diagnostic`]s to the shared report.
+//!
+//! Severity policy: anything the pipeline would *refuse to run on*
+//! (bad manifest, unparsable policy or report) is an error; anything it
+//! would silently tolerate or skip (corrupt shard lines, drifted shard
+//! names, duplicate records, suspicious metric values) is a warning —
+//! `check` exists precisely to make that tolerated damage visible.
+//! Benign-but-notable facts (identical content stored twice) are info.
+
+use std::collections::{BTreeMap, BTreeSet, HashSet};
+use std::path::Path;
+
+use crate::gate::policy::{pat_match, GatePolicy};
+use crate::pages::scanner::MetricScan;
+use crate::pop::RegionMetrics;
+use crate::session::ReportDocument;
+use crate::store::{
+    trim_line, StoredRun, MANIFEST_FILE_NAME, SHARDS_DIR, STORE_VERSION,
+};
+use crate::util::json::{error_offset, Json};
+use crate::util::text::slug;
+
+use super::{CheckReport, Diagnostic, Span};
+
+/// Validate a run store's manifest and every shard file: manifest
+/// presence/shape/version (TP010/TP011, errors — the loader refuses
+/// these too), corrupt records (TP012, *errors* here even though the
+/// loader merely skips them), stray or drifted files in `shards/`
+/// (TP014), duplicate `(source, hash)` records (TP015) and identical
+/// content stored under several paths (TP016, info).
+pub fn check_store(root: &Path, rep: &mut CheckReport) {
+    let manifest = root.join(MANIFEST_FILE_NAME);
+    let manifest_disp = manifest.display().to_string();
+    let text = match std::fs::read_to_string(&manifest) {
+        Ok(t) => t,
+        Err(_) => {
+            rep.push(
+                Diagnostic::error(
+                    "TP010",
+                    root.display().to_string(),
+                    format!("not a run store (no {MANIFEST_FILE_NAME})"),
+                )
+                .with_hint("run `talp-pages ingest` to create a store here"),
+            );
+            return;
+        }
+    };
+    let doc = match Json::parse(&text) {
+        Ok(d) => d,
+        Err(e) => {
+            rep.push(
+                Diagnostic::error(
+                    "TP010",
+                    manifest_disp,
+                    format!("corrupt manifest: {}", e.message),
+                )
+                .with_span(Span { start: e.offset, len: 1 }),
+            );
+            return;
+        }
+    };
+    match doc.get("version").and_then(Json::as_u64) {
+        None => {
+            rep.push(Diagnostic::error(
+                "TP010",
+                manifest_disp,
+                "manifest has no version",
+            ));
+            return;
+        }
+        Some(v) if v != STORE_VERSION => {
+            rep.push(Diagnostic::error(
+                "TP011",
+                manifest_disp,
+                format!(
+                    "store version {v}; this build understands only \
+                     version {STORE_VERSION}"
+                ),
+            ));
+            return;
+        }
+        Some(_) => {}
+    }
+
+    // Shard pass: deterministic (sorted) file order, line order within
+    // each file — the exact order the loader admits records in.
+    let shards_dir = root.join(SHARDS_DIR);
+    let mut entries: Vec<std::path::PathBuf> = std::fs::read_dir(&shards_dir)
+        .map(|rd| rd.flatten().map(|e| e.path()).collect())
+        .unwrap_or_default();
+    entries.sort();
+    let mut seen: HashSet<(String, String)> = HashSet::new();
+    let mut by_hash: BTreeMap<String, BTreeSet<String>> = BTreeMap::new();
+    for path in entries {
+        let disp = path.display().to_string();
+        if path.extension().and_then(|e| e.to_str()) != Some("jsonl") {
+            if path.is_dir() {
+                continue;
+            }
+            rep.push(
+                Diagnostic::warning(
+                    "TP014",
+                    disp,
+                    format!("unexpected file in {SHARDS_DIR}/ (not .jsonl) \
+                             — the loader ignores it"),
+                )
+                .with_hint(
+                    "a `.jsonl.tmp` file is a leftover from an interrupted \
+                     compaction and is safe to delete",
+                ),
+            );
+            continue;
+        }
+        let fname = path
+            .file_name()
+            .and_then(|n| n.to_str())
+            .unwrap_or_default()
+            .to_string();
+        let bytes = match std::fs::read(&path) {
+            Ok(b) => b,
+            Err(e) => {
+                rep.push(Diagnostic::warning(
+                    "TP013",
+                    disp,
+                    format!("unreadable ({e}) — skipped"),
+                ));
+                continue;
+            }
+        };
+        let mut misnamed_reported = false;
+        let mut lineno = 0usize;
+        let mut offset = 0usize;
+        for line in bytes.split(|&b| b == b'\n') {
+            lineno += 1;
+            let line_start = offset;
+            offset += line.len() + 1;
+            let lead =
+                line.iter().take_while(|b| b.is_ascii_whitespace()).count();
+            let line = trim_line(line);
+            if line.is_empty() {
+                continue;
+            }
+            let rec = match StoredRun::from_line(line) {
+                Ok(rec) => rec,
+                Err(e) => {
+                    let mut d = Diagnostic::error(
+                        "TP012",
+                        disp.clone(),
+                        format!("corrupt record at line {lineno} ({e:#})"),
+                    )
+                    .with_hint(
+                        "`talp-pages ingest --compact` rewrites shards \
+                         without corrupt lines",
+                    );
+                    if let Some(off) = error_offset(&e) {
+                        d = d.with_span(Span {
+                            start: line_start + lead + off,
+                            len: 1,
+                        });
+                    }
+                    rep.push(d);
+                    continue;
+                }
+            };
+            let expected = format!(
+                "{}__{}.jsonl",
+                slug(&rec.experiment),
+                rec.run.resources().label()
+            );
+            if expected != fname && !misnamed_reported {
+                misnamed_reported = true;
+                rep.push(
+                    Diagnostic::warning(
+                        "TP014",
+                        disp.clone(),
+                        format!(
+                            "record at line {lineno} belongs in {expected} \
+                             (experiment '{}', config {})",
+                            rec.experiment,
+                            rec.run.resources().label()
+                        ),
+                    )
+                    .with_hint(
+                        "`talp-pages ingest --compact` re-buckets drifted \
+                         records",
+                    ),
+                );
+            }
+            let key = (rec.run.source.clone(), rec.hash.clone());
+            if !seen.insert(key) {
+                rep.push(
+                    Diagnostic::warning(
+                        "TP015",
+                        disp.clone(),
+                        format!(
+                            "duplicate record at line {lineno} for {} \
+                             (hash {})",
+                            rec.run.source, rec.hash
+                        ),
+                    )
+                    .with_hint(
+                        "`talp-pages ingest --compact` drops duplicates",
+                    ),
+                );
+            }
+            by_hash
+                .entry(rec.hash.clone())
+                .or_default()
+                .insert(rec.run.source.clone());
+        }
+    }
+    for (hash, sources) in &by_hash {
+        if sources.len() >= 2 {
+            let list: Vec<&str> =
+                sources.iter().map(String::as_str).collect();
+            rep.push(Diagnostic::info(
+                "TP016",
+                root.display().to_string(),
+                format!(
+                    "content hash {hash} is stored under {} source paths \
+                     ({}) — each counts as its own history point",
+                    sources.len(),
+                    list.join(", ")
+                ),
+            ));
+        }
+    }
+}
+
+/// The nine per-region metric values a stored/scanned run carries,
+/// labeled for diagnostics.
+fn metric_values(m: &RegionMetrics) -> [(&'static str, f64); 9] {
+    [
+        ("elapsed_s", m.elapsed_s),
+        ("total_useful_s", m.total_useful_s),
+        ("parallel_efficiency", m.parallel_efficiency),
+        ("mpi_parallel_efficiency", m.mpi_parallel_efficiency),
+        ("mpi_communication_efficiency", m.mpi_communication_efficiency),
+        ("mpi_load_balance", m.mpi_load_balance),
+        ("omp_parallel_efficiency", m.omp_parallel_efficiency),
+        ("useful_ipc", m.useful_ipc),
+        ("frequency_ghz", m.frequency_ghz),
+    ]
+}
+
+/// Cross-run analysis over a scanned or store-loaded corpus: equal
+/// effective timestamps within one configuration's history (TP050 —
+/// ordering then silently falls back to file names) and NaN/negative
+/// metric values (TP051/TP052 — the factor math clamps its own
+/// output, so these only arise from damaged or hand-edited data).
+pub fn check_corpus(scan: &MetricScan, rep: &mut CheckReport) {
+    for exp in &scan.experiments {
+        for cfg in exp.configs() {
+            let hist = exp.history_for_config(&cfg);
+            for w in hist.windows(2) {
+                if w[0].effective_timestamp() == w[1].effective_timestamp()
+                {
+                    rep.push(
+                        Diagnostic::warning(
+                            "TP050",
+                            w[1].source.clone(),
+                            format!(
+                                "effective timestamp {} equals {}'s in \
+                                 {}/{cfg} — history order falls back to \
+                                 file names",
+                                w[1].effective_timestamp(),
+                                w[0].source,
+                                exp.id
+                            ),
+                        )
+                        .with_hint(
+                            "stamp distinct commit timestamps with \
+                             `talp-pages metadata`",
+                        ),
+                    );
+                }
+            }
+        }
+        for run in &exp.runs {
+            for reg in &run.regions {
+                for (name, v) in metric_values(&reg.metrics) {
+                    if v.is_nan() {
+                        rep.push(Diagnostic::warning(
+                            "TP051",
+                            run.source.clone(),
+                            format!("region '{}': {name} is NaN", reg.name),
+                        ));
+                    } else if v < 0.0 {
+                        rep.push(Diagnostic::warning(
+                            "TP052",
+                            run.source.clone(),
+                            format!(
+                                "region '{}': {name} is negative ({v})",
+                                reg.name
+                            ),
+                        ));
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Parse-validate a gate policy (TP003, error — a policy the gate
+/// would refuse).  Returns the parsed policy so [`check_policy_refs`]
+/// can cross-check it against a corpus.
+pub fn check_policy(
+    path: &Path,
+    rep: &mut CheckReport,
+) -> Option<GatePolicy> {
+    let disp = path.display().to_string();
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            rep.push(Diagnostic::error(
+                "TP013",
+                disp,
+                format!("unreadable ({e})"),
+            ));
+            return None;
+        }
+    };
+    match GatePolicy::parse(&text, &disp) {
+        Ok(p) => Some(p),
+        Err(e) => {
+            let root = e.root_cause().to_string();
+            // The parser prefixes its own messages with the policy
+            // source; the diagnostic already carries the path.
+            let msg = root
+                .strip_prefix(&format!("policy {disp}: "))
+                .or_else(|| root.strip_prefix("policy: "))
+                .unwrap_or(&root);
+            let mut d = Diagnostic::error(
+                "TP003",
+                disp.clone(),
+                format!("invalid gate policy: {msg}"),
+            );
+            if let Some(off) = error_offset(&e) {
+                d = d.with_span(Span { start: off, len: 1 });
+            }
+            rep.push(d.with_hint(
+                "`talp-pages gate-init` writes a known-good starting \
+                 policy",
+            ));
+            None
+        }
+    }
+}
+
+/// Referential check of a parsed policy against a corpus: every
+/// `rules[]` (TP040) and `allow[]` (TP041) entry must match at least
+/// one `(experiment, config, region)` the corpus actually contains —
+/// a matcher that matches nothing usually means a typo'd pattern
+/// silently gating (or allowing) nothing.  Skipped when the corpus has
+/// no experiments at all.
+pub fn check_policy_refs(
+    policy: &GatePolicy,
+    policy_path: &Path,
+    scan: &MetricScan,
+    rep: &mut CheckReport,
+) {
+    if scan.experiments.is_empty() {
+        return;
+    }
+    let matches_any = |exp_pat: &str, cfg_pat: &str, region_pat: &str| {
+        scan.experiments.iter().any(|exp| {
+            pat_match(exp_pat, &exp.id)
+                && exp.configs().iter().any(|c| pat_match(cfg_pat, c))
+                && exp.regions().iter().any(|r| pat_match(region_pat, r))
+        })
+    };
+    let disp = policy_path.display().to_string();
+    for (i, rule) in policy.rules.iter().enumerate() {
+        if !matches_any(&rule.experiment, &rule.config, &rule.region) {
+            rep.push(
+                Diagnostic::warning(
+                    "TP040",
+                    disp.clone(),
+                    format!(
+                        "rules[{i}] (experiment '{}', config '{}', region \
+                         '{}') matches nothing in the corpus",
+                        rule.experiment, rule.config, rule.region
+                    ),
+                )
+                .with_hint(
+                    "compare the patterns against the experiment ids, \
+                     configs and regions in the report",
+                ),
+            );
+        }
+    }
+    for (i, a) in policy.allow.iter().enumerate() {
+        // The commit pattern is deliberately ignored: it matches the
+        // *future* run that triggers the allowance, not stored history.
+        if !matches_any(&a.experiment, &a.config, &a.region) {
+            rep.push(
+                Diagnostic::warning(
+                    "TP041",
+                    disp.clone(),
+                    format!(
+                        "allow[{i}] (experiment '{}', config '{}', region \
+                         '{}') matches nothing in the corpus",
+                        a.experiment, a.config, a.region
+                    ),
+                )
+                .with_hint(
+                    "stale allow entries can be deleted once the \
+                     accepted regression left the history window",
+                ),
+            );
+        }
+    }
+}
+
+/// Validate an emitted `report.json` against the consumer contract:
+/// unknown/missing `schema_version` (TP030) vs any other shape or
+/// syntax problem (TP031, with a byte span when the JSON reader has
+/// one).
+pub fn check_report(path: &Path, rep: &mut CheckReport) {
+    let disp = path.display().to_string();
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            rep.push(Diagnostic::error(
+                "TP013",
+                disp,
+                format!("unreadable ({e})"),
+            ));
+            return;
+        }
+    };
+    if let Err(e) = ReportDocument::parse(&text) {
+        let full = format!("{e:#}");
+        if full.contains("schema_version") {
+            rep.push(Diagnostic::error("TP030", disp, full).with_hint(
+                "regenerate the report with this build of talp-pages",
+            ));
+        } else {
+            let mut d = Diagnostic::error("TP031", disp, full);
+            if let Some(off) = error_offset(&e) {
+                d = d.with_span(Span { start: off, len: 1 });
+            }
+            rep.push(d);
+        }
+    }
+}
+
+/// Validate a committed bench baseline (JSONL of `BENCH_JSON` records):
+/// unparsable lines are TP001 errors; a baseline whose every `*_s`
+/// timing is zero has never been measured (TP060) — deltas computed
+/// against it are meaningless, which is easy to miss because the
+/// comparison scripts just skip non-positive baselines.
+pub fn check_bench(path: &Path, rep: &mut CheckReport) {
+    let disp = path.display().to_string();
+    let bytes = match std::fs::read(path) {
+        Ok(b) => b,
+        Err(e) => {
+            rep.push(Diagnostic::error(
+                "TP013",
+                disp,
+                format!("unreadable ({e})"),
+            ));
+            return;
+        }
+    };
+    let mut lineno = 0usize;
+    let mut offset = 0usize;
+    let mut timed_records = 0usize;
+    let mut measured = 0usize;
+    for line in bytes.split(|&b| b == b'\n') {
+        lineno += 1;
+        let line_start = offset;
+        offset += line.len() + 1;
+        let lead =
+            line.iter().take_while(|b| b.is_ascii_whitespace()).count();
+        let line = trim_line(line);
+        if line.is_empty() {
+            continue;
+        }
+        let doc = match Json::from_slice(line) {
+            Ok(d) => d,
+            Err(e) => {
+                rep.push(
+                    Diagnostic::error(
+                        "TP001",
+                        disp.clone(),
+                        format!(
+                            "invalid JSON at line {lineno}: {}",
+                            e.message
+                        ),
+                    )
+                    .with_span(Span {
+                        start: line_start + lead + e.offset,
+                        len: 1,
+                    }),
+                );
+                continue;
+            }
+        };
+        if doc.get("bench").and_then(Json::as_str) == Some("_meta") {
+            continue;
+        }
+        let mut timed = false;
+        if let Some(pairs) = doc.as_obj() {
+            for (key, val) in pairs {
+                if !key.ends_with("_s") {
+                    continue;
+                }
+                if let Some(v) = val.as_f64() {
+                    timed = true;
+                    if v > 0.0 {
+                        measured += 1;
+                    }
+                }
+            }
+        }
+        if timed {
+            timed_records += 1;
+        }
+    }
+    if timed_records > 0 && measured == 0 {
+        rep.push(
+            Diagnostic::warning(
+                "TP060",
+                disp,
+                format!(
+                    "all timings across {timed_records} bench record(s) \
+                     are zero — the baseline is unmeasured"
+                ),
+            )
+            .with_hint(
+                "run `cargo bench --bench perf_hotpaths` and commit the \
+                 refreshed BENCH_JSON lines",
+            ),
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pages::scanner::MetricExperiment;
+    use crate::pop::RunMetrics;
+    use crate::store::RunStore;
+    use crate::talp::{GitMeta, ProcStats, RegionData, RunData};
+    use crate::util::fs::TempDir;
+
+    fn run_metrics(source: &str, ranks: u32, ts: i64) -> RunMetrics {
+        let data = RunData {
+            dlb_version: "t".into(),
+            app: "app".into(),
+            machine: "mn5".into(),
+            timestamp: ts,
+            ranks,
+            threads: 2,
+            nodes: 1,
+            regions: vec![RegionData {
+                name: "Global".into(),
+                elapsed_s: 1.0,
+                visits: 1,
+                procs: (0..ranks)
+                    .map(|r| ProcStats {
+                        rank: r,
+                        elapsed_s: 1.0,
+                        useful_s: 1.5,
+                        ..Default::default()
+                    })
+                    .collect(),
+            }],
+            git: Some(GitMeta {
+                commit: format!("c{ts:07x}"),
+                branch: "main".into(),
+                commit_timestamp: ts,
+                message: String::new(),
+            }),
+        };
+        RunMetrics::from_run(&data, source)
+    }
+
+    fn codes(rep: &CheckReport) -> Vec<&'static str> {
+        rep.diagnostics.iter().map(|d| d.code).collect()
+    }
+
+    #[test]
+    fn store_checks_manifest_shards_duplicates_and_content() {
+        let td = TempDir::new("check-store").unwrap();
+        let root = td.path().join("store");
+        let mut s = RunStore::create_or_open(&root).unwrap();
+        s.append("exp", "h1", run_metrics("a.json", 2, 1)).unwrap();
+        s.append("exp", "same", run_metrics("b.json", 2, 2)).unwrap();
+        // Identical content at a second path: TP016 (info).
+        s.append("exp", "same", run_metrics("c.json", 2, 3)).unwrap();
+        let shard = root.join(SHARDS_DIR).join("exp__2x2.jsonl");
+        let mut text = std::fs::read_to_string(&shard).unwrap();
+        // Exact duplicate line: TP015.
+        let first = text.lines().next().unwrap().to_string();
+        text.push_str(&first);
+        text.push('\n');
+        // Truncated record: TP012 with a span.
+        text.push_str("{\"hash\":\"h9\",\"experiment\":\"exp\",\"run\":{");
+        text.push('\n');
+        std::fs::write(&shard, text).unwrap();
+        // Stray non-.jsonl file: TP014.
+        std::fs::write(
+            root.join(SHARDS_DIR).join("exp__2x2.jsonl.tmp"),
+            "junk",
+        )
+        .unwrap();
+
+        let mut rep = CheckReport::new();
+        check_store(&root, &mut rep);
+        rep.sort();
+        let mut found = codes(&rep);
+        found.sort();
+        assert_eq!(found, ["TP012", "TP014", "TP015", "TP016"], "{rep:?}");
+        let tp012 = rep
+            .diagnostics
+            .iter()
+            .find(|d| d.code == "TP012")
+            .unwrap();
+        assert_eq!(tp012.severity, crate::check::Severity::Error);
+        let span = tp012.span.expect("truncation has an offset");
+        let shard_len = std::fs::read(&shard).unwrap().len();
+        assert!(span.start <= shard_len);
+        let tp016 = rep
+            .diagnostics
+            .iter()
+            .find(|d| d.code == "TP016")
+            .unwrap();
+        assert!(tp016.message.contains("b.json"), "{}", tp016.message);
+        assert!(tp016.message.contains("c.json"), "{}", tp016.message);
+
+        // A record whose shard assignment drifted: TP014 on the shard.
+        let stray = root.join(SHARDS_DIR).join("other__9x9.jsonl");
+        std::fs::copy(&shard, &stray).unwrap();
+        let mut rep = CheckReport::new();
+        check_store(&root, &mut rep);
+        assert!(
+            rep.diagnostics.iter().any(|d| d.code == "TP014"
+                && d.path.ends_with("other__9x9.jsonl")
+                && d.message.contains("belongs in exp__2x2.jsonl")),
+            "{rep:?}"
+        );
+    }
+
+    #[test]
+    fn store_manifest_problems_are_errors() {
+        let td = TempDir::new("check-manifest").unwrap();
+        let root = td.path().join("plain");
+        std::fs::create_dir_all(&root).unwrap();
+        let mut rep = CheckReport::new();
+        check_store(&root, &mut rep);
+        assert_eq!(codes(&rep), ["TP010"], "no manifest");
+
+        let manifest = root.join(MANIFEST_FILE_NAME);
+        std::fs::write(&manifest, "{\"version\": ").unwrap();
+        let mut rep = CheckReport::new();
+        check_store(&root, &mut rep);
+        assert_eq!(codes(&rep), ["TP010"], "corrupt manifest");
+        assert!(rep.diagnostics[0].span.is_some(), "syntax error spans");
+
+        std::fs::write(&manifest, "{}").unwrap();
+        let mut rep = CheckReport::new();
+        check_store(&root, &mut rep);
+        assert_eq!(codes(&rep), ["TP010"], "version-less manifest");
+
+        std::fs::write(&manifest, "{\"version\": 999}").unwrap();
+        let mut rep = CheckReport::new();
+        check_store(&root, &mut rep);
+        assert_eq!(codes(&rep), ["TP011"]);
+        assert!(rep.diagnostics[0].message.contains("999"));
+    }
+
+    #[test]
+    fn corpus_flags_equal_timestamps_nan_and_negative() {
+        let mut r1 = run_metrics("exp/a.json", 2, 100);
+        let r2 = run_metrics("exp/b.json", 2, 100); // same effective ts
+        let mut r3 = run_metrics("exp/c.json", 2, 200);
+        r1.regions[0].metrics.parallel_efficiency = f64::NAN;
+        r3.regions[0].metrics.useful_ipc = -0.5;
+        let scan = MetricScan {
+            experiments: vec![MetricExperiment {
+                id: "exp".into(),
+                runs: vec![r1, r2, r3],
+            }],
+            ..Default::default()
+        };
+        let mut rep = CheckReport::new();
+        check_corpus(&scan, &mut rep);
+        let mut found = codes(&rep);
+        found.sort();
+        assert_eq!(found, ["TP050", "TP051", "TP052"], "{rep:?}");
+        let tp050 = rep
+            .diagnostics
+            .iter()
+            .find(|d| d.code == "TP050")
+            .unwrap();
+        // The later history entry (file-name order) carries the flag.
+        assert_eq!(tp050.path, "exp/b.json");
+        assert!(tp050.message.contains("exp/a.json"));
+        let tp051 = rep
+            .diagnostics
+            .iter()
+            .find(|d| d.code == "TP051")
+            .unwrap();
+        assert!(
+            tp051.message.contains("parallel_efficiency is NaN"),
+            "{}",
+            tp051.message
+        );
+        // Clean corpus stays clean.
+        let clean = MetricScan {
+            experiments: vec![MetricExperiment {
+                id: "exp".into(),
+                runs: vec![
+                    run_metrics("exp/a.json", 2, 1),
+                    run_metrics("exp/b.json", 2, 2),
+                ],
+            }],
+            ..Default::default()
+        };
+        let mut rep = CheckReport::new();
+        check_corpus(&clean, &mut rep);
+        assert!(rep.diagnostics.is_empty(), "{rep:?}");
+    }
+
+    #[test]
+    fn policy_parse_and_reference_checks() {
+        let td = TempDir::new("check-policy").unwrap();
+        let good = td.path().join("gate.json");
+        std::fs::write(
+            &good,
+            r#"{"version":1,
+                "rules":[{"region":"Global","max_elapsed_increase":0.1},
+                         {"region":"nonexistent"}],
+                "allow":[{"experiment":"gone*","reason":"r"}]}"#,
+        )
+        .unwrap();
+        let mut rep = CheckReport::new();
+        let policy =
+            check_policy(&good, &mut rep).expect("valid policy parses");
+        assert!(rep.diagnostics.is_empty());
+
+        let scan = MetricScan {
+            experiments: vec![MetricExperiment {
+                id: "exp".into(),
+                runs: vec![run_metrics("exp/a.json", 2, 1)],
+            }],
+            ..Default::default()
+        };
+        check_policy_refs(&policy, &good, &scan, &mut rep);
+        let mut found = codes(&rep);
+        found.sort();
+        assert_eq!(found, ["TP040", "TP041"], "{rep:?}");
+        assert!(rep.diagnostics.iter().any(|d| d
+            .message
+            .contains("rules[1]")));
+
+        // Empty corpus: referential checks are skipped entirely.
+        let mut rep = CheckReport::new();
+        check_policy_refs(
+            &policy,
+            &good,
+            &MetricScan::default(),
+            &mut rep,
+        );
+        assert!(rep.diagnostics.is_empty());
+
+        // A syntactically broken policy: TP003 with a byte span.
+        let bad = td.path().join("bad.json");
+        std::fs::write(&bad, "{\"version\": 1, ").unwrap();
+        let mut rep = CheckReport::new();
+        assert!(check_policy(&bad, &mut rep).is_none());
+        assert_eq!(codes(&rep), ["TP003"]);
+        assert!(rep.diagnostics[0].span.is_some(), "{rep:?}");
+
+        // A semantically broken policy: TP003, no span, parser prefix
+        // stripped.
+        let typo = td.path().join("typo.json");
+        std::fs::write(&typo, r#"{"version":1,"defaults":{"windw":3}}"#)
+            .unwrap();
+        let mut rep = CheckReport::new();
+        assert!(check_policy(&typo, &mut rep).is_none());
+        assert_eq!(codes(&rep), ["TP003"]);
+        let msg = &rep.diagnostics[0].message;
+        assert!(msg.contains("unknown key 'windw'"), "{msg}");
+        assert!(
+            !msg.contains("policy:"),
+            "parser prefix must be stripped: {msg}"
+        );
+    }
+
+    #[test]
+    fn report_schema_skew_vs_shape_errors() {
+        let td = TempDir::new("check-report").unwrap();
+        let p = td.path().join("report.json");
+        std::fs::write(&p, "{\"schema_version\": 999}").unwrap();
+        let mut rep = CheckReport::new();
+        check_report(&p, &mut rep);
+        assert_eq!(codes(&rep), ["TP030"]);
+        assert!(rep.diagnostics[0].message.contains("999"));
+
+        std::fs::write(&p, "[1, 2").unwrap();
+        let mut rep = CheckReport::new();
+        check_report(&p, &mut rep);
+        assert_eq!(codes(&rep), ["TP031"]);
+        assert!(rep.diagnostics[0].span.is_some(), "{rep:?}");
+
+        let mut rep = CheckReport::new();
+        check_report(&td.path().join("gone.json"), &mut rep);
+        assert_eq!(codes(&rep), ["TP013"]);
+    }
+
+    #[test]
+    fn bench_baseline_zero_timings_flagged_unmeasured() {
+        let td = TempDir::new("check-bench").unwrap();
+        let p = td.path().join("BENCH_hotpaths.json");
+        std::fs::write(
+            &p,
+            "{\"bench\": \"_meta\", \"note\": \"n\"}\n\
+             {\"bench\": \"a\", \"cold_s\": 0, \"warm_s\": 0}\n\
+             {\"bench\": \"b\", \"load_s\": 0}\n",
+        )
+        .unwrap();
+        let mut rep = CheckReport::new();
+        check_bench(&p, &mut rep);
+        assert_eq!(codes(&rep), ["TP060"]);
+        assert!(rep.diagnostics[0].message.contains("2 bench record(s)"));
+
+        // One real measurement anywhere clears the finding.
+        std::fs::write(
+            &p,
+            "{\"bench\": \"a\", \"cold_s\": 0}\n\
+             {\"bench\": \"b\", \"load_s\": 0.25}\n",
+        )
+        .unwrap();
+        let mut rep = CheckReport::new();
+        check_bench(&p, &mut rep);
+        assert!(rep.diagnostics.is_empty(), "{rep:?}");
+
+        // A corrupt line is a TP001 error with a file-absolute span.
+        std::fs::write(&p, "{\"bench\": \"a\"}\n{\"bench\": ][\n").unwrap();
+        let mut rep = CheckReport::new();
+        check_bench(&p, &mut rep);
+        assert_eq!(codes(&rep), ["TP001"]);
+        let span = rep.diagnostics[0].span.expect("span");
+        assert!(span.start > "{\"bench\": \"a\"}".len(), "{span:?}");
+    }
+}

@@ -7,6 +7,10 @@
 //!   a persistent run store instead of an artifact folder.
 //! * `ingest`     — append a Fig. 2 folder's artifacts into a
 //!   persistent run store (only new content hashes are parsed).
+//! * `check`      — static analysis of every input surface (artifact
+//!   trees, stores, policies, caches, reports, bench baselines) with
+//!   stable `TP0xx` diagnostics and SARIF output; `report`/`gate`/
+//!   `ingest` accept `--check` to run it as a pre-flight.
 //! * `metadata`   — stamp git metadata into fresh TALP JSONs (Fig. 6).
 //! * `run`        — run a workload under TALP on the simulator, emitting
 //!   a TALP JSON (the "performance job" of Fig. 5).
@@ -24,6 +28,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{bail, Context, Result};
 
 use crate::apps::{self, Workload};
+use crate::check;
 use crate::ci;
 use crate::gate::GatePolicy;
 use crate::pages;
@@ -46,14 +51,18 @@ USAGE:
   talp-pages report (--input <dir> | --store <dir>) --output <dir>
              [--format json|html|all] [--regions <r>...]
              [--region-for-badge <r>] [--jobs <n>] [--cache <file>]
-             [--gate <policy.json>]      (alias: ci-report)
+             [--gate <policy.json>] [--check]      (alias: ci-report)
   talp-pages ingest --input <dir> --store <dir> [--jobs <n>]
              [--commit <sha>] [--branch <name>] [--timestamp <iso8601>]
-             [--message <m>] [--compact]
+             [--message <m>] [--compact] [--check]
   talp-pages gate (--input <dir> | --store <dir>)
              [--policy <policy.json>] [--output <dir>] [--jobs <n>]
-             [--cache <file>]  (exit 0 = pass/warn, 1 = fail)
+             [--cache <file>] [--check]  (exit 0 = pass/warn, 1 = fail)
   talp-pages gate-init --output <policy.json>
+  talp-pages check [--input <dir> | --store <dir>] [--policy <p.json>]
+             [--cache <file>] [--report <file>] [--bench <file>]
+             [--format text|sarif] [--sarif <file>] [--jobs <n>]
+             (exit 0 = clean, 1 = warnings, 2 = errors)
   talp-pages metadata --input <dir> --commit <sha> --branch <name>
              --timestamp <iso8601> [--message <m>]
   talp-pages run --app <tealeaf|genex|mpi-stencil> --machine <mn5|raven>
@@ -82,6 +91,7 @@ pub fn main_with_args(argv: &[String]) -> Result<i32> {
         "ingest" => ingest_cmd(&args),
         "gate" => gate_cmd(&args),
         "gate-init" => gate_init(&args),
+        "check" => check_cmd(&args),
         "metadata" => metadata(&args),
         "run" => run_app(&args),
         "compare" => compare(&args),
@@ -146,6 +156,54 @@ fn source_session(
     Ok(session.jobs(args.get_jobs()?))
 }
 
+/// `talp-pages check`: static analysis of every input surface (see
+/// [`crate::check`]) without executing a report run.  `--format sarif`
+/// streams SARIF 2.1.0 to stdout (nothing else is printed there);
+/// `--sarif <file>` additionally writes it next to the text output.
+fn check_cmd(args: &Args) -> Result<i32> {
+    let opts = check::CheckOptions {
+        input: args.get("input").map(PathBuf::from),
+        store: args.get("store").map(PathBuf::from),
+        policy: args.get("policy").map(PathBuf::from),
+        cache: args.get("cache").map(PathBuf::from),
+        report: args.get("report").map(PathBuf::from),
+        bench: args.get("bench").map(PathBuf::from),
+        jobs: args.get_jobs()?,
+    };
+    let rep = check::run_check(&opts)?;
+    match args.get("format").unwrap_or("text") {
+        "text" => print!("{}", rep.render_text()),
+        "sarif" => print!("{}", check::sarif::render(&rep)),
+        other => bail!("unknown --format '{other}' (text|sarif)"),
+    }
+    if let Some(f) = args.get("sarif") {
+        let p = PathBuf::from(f);
+        if let Some(parent) = p.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(&p, check::sarif::render(&rep))?;
+        eprintln!("wrote {}", p.display());
+    }
+    Ok(rep.exit_code())
+}
+
+/// Shared `--check` pre-flight for `report`/`gate`/`ingest`: run the
+/// static analyzer over the surfaces the command is about to consume,
+/// print findings to stderr, and abort with the check's exit code on
+/// *errors* — warnings are shown but the run proceeds (they are the
+/// same conditions the pipeline tolerates anyway).
+fn preflight(opts: &check::CheckOptions) -> Result<Option<i32>> {
+    let rep = check::run_check(opts)?;
+    if !rep.diagnostics.is_empty() {
+        eprint!("{}", rep.render_text());
+    }
+    if rep.status() == check::CheckStatus::Errors {
+        eprintln!("check: aborting before the run (drop --check to force)");
+        return Ok(Some(rep.exit_code()));
+    }
+    Ok(None)
+}
+
 fn ci_report(args: &Args) -> Result<i32> {
     let output = PathBuf::from(args.require("output")?);
     let format = args.get("format").unwrap_or("all");
@@ -154,6 +212,27 @@ fn ci_report(args: &Args) -> Result<i32> {
         args,
         Some(output.join(pages::cache::CACHE_FILE_NAME)),
     )?;
+    if args.has("check") {
+        let copts = check::CheckOptions {
+            input: args.get("input").map(PathBuf::from),
+            store: args.get("store").map(PathBuf::from),
+            policy: args.get("gate").map(PathBuf::from),
+            // The cache the report will actually use (folder scans
+            // only; a missing file is an ordinary cold start).
+            cache: if args.has("store") {
+                None
+            } else {
+                args.get("cache")
+                    .map(PathBuf::from)
+                    .or_else(|| Some(output.join(pages::cache::CACHE_FILE_NAME)))
+            },
+            jobs: args.get_jobs()?,
+            ..Default::default()
+        };
+        if let Some(code) = preflight(&copts)? {
+            return Ok(code);
+        }
+    }
     let opts = AnalyzeOptions {
         regions: args
             .get_all("regions")
@@ -199,6 +278,29 @@ fn ci_report(args: &Args) -> Result<i32> {
 fn ingest_cmd(args: &Args) -> Result<i32> {
     let input = PathBuf::from(args.require("input")?);
     let store_root = PathBuf::from(args.require("store")?);
+    if args.has("check") {
+        // Two passes (the analyzer treats --input/--store as exclusive
+        // sources): the artifact folder about to be ingested, then the
+        // existing store — but only if one is already there, since
+        // create_or_open would legitimately create it below.
+        let jobs = args.get_jobs()?;
+        if let Some(code) = preflight(&check::CheckOptions {
+            input: Some(input.clone()),
+            jobs,
+            ..Default::default()
+        })? {
+            return Ok(code);
+        }
+        if store_root.join(store::MANIFEST_FILE_NAME).exists() {
+            if let Some(code) = preflight(&check::CheckOptions {
+                store: Some(store_root.clone()),
+                jobs,
+                ..Default::default()
+            })? {
+                return Ok(code);
+            }
+        }
+    }
     let mut run_store = store::RunStore::create_or_open(&store_root)?;
     // Optional ingest-time commit stamp for artifacts that skipped the
     // `metadata` step (already-stamped runs keep their own metadata).
@@ -263,6 +365,19 @@ fn ingest_cmd(args: &Args) -> Result<i32> {
 /// `talp-pages gate`: evaluate a regression-gate policy over a Fig. 2
 /// folder and exit non-zero on failure — the CI enforcement point.
 fn gate_cmd(args: &Args) -> Result<i32> {
+    if args.has("check") {
+        let copts = check::CheckOptions {
+            input: args.get("input").map(PathBuf::from),
+            store: args.get("store").map(PathBuf::from),
+            policy: args.get("policy").map(PathBuf::from),
+            cache: args.get("cache").map(PathBuf::from),
+            jobs: args.get_jobs()?,
+            ..Default::default()
+        };
+        if let Some(code) = preflight(&copts)? {
+            return Ok(code);
+        }
+    }
     let policy = match args.get("policy") {
         Some(p) => GatePolicy::from_file(Path::new(p))?,
         None => GatePolicy::default(),
@@ -1022,5 +1137,167 @@ mod tests {
             input.display()
         ))
         .is_err());
+    }
+
+    #[test]
+    fn gate_init_policy_is_self_check_clean() {
+        // The starter policy the tool hands out must pass its own
+        // static analyzer (a policy-only check has no corpus, so no
+        // referential findings apply — exit 0, not 1).
+        let td = TempDir::new("cli-selfcheck").unwrap();
+        let pol = td.path().join(".talp-gate.json");
+        assert_eq!(
+            run_cli(&format!("gate-init --output {}", pol.display()))
+                .unwrap(),
+            0
+        );
+        assert_eq!(
+            run_cli(&format!("check --policy {}", pol.display())).unwrap(),
+            0
+        );
+    }
+
+    #[test]
+    fn check_subcommand_exit_codes() {
+        let td = TempDir::new("cli-check").unwrap();
+        // No targets at all is a usage error, not a finding.
+        assert!(run_cli("check").is_err());
+        assert!(run_cli("check --input a --store b").is_err());
+
+        // One valid artifact: clean (0).
+        let input = td.path().join("talp");
+        assert_eq!(
+            run_cli(&format!(
+                "run --app genex --machine mn5 --config 2x4 --timesteps 2 \
+                 --output {}",
+                input.join("exp/run_0.json").display()
+            ))
+            .unwrap(),
+            0
+        );
+        assert_eq!(
+            run_cli(&format!("check --input {}", input.display())).unwrap(),
+            0
+        );
+
+        // An unmeasured bench baseline: warnings (1).
+        let bench = td.path().join("BENCH.json");
+        std::fs::write(&bench, "{\"bench\": \"a\", \"warm_s\": 0}\n")
+            .unwrap();
+        assert_eq!(
+            run_cli(&format!("check --bench {}", bench.display())).unwrap(),
+            1
+        );
+
+        // A corrupt artifact: errors (2) — check escalates what the
+        // report engine would merely skip.
+        std::fs::write(input.join("exp/bad.json"), "{\"oops").unwrap();
+        assert_eq!(
+            run_cli(&format!("check --input {}", input.display())).unwrap(),
+            2
+        );
+
+        // --sarif writes a parseable SARIF file alongside.
+        let sarif = td.path().join("out/check.sarif");
+        assert_eq!(
+            run_cli(&format!(
+                "check --input {} --sarif {}",
+                input.display(),
+                sarif.display()
+            ))
+            .unwrap(),
+            2
+        );
+        let text = std::fs::read_to_string(&sarif).unwrap();
+        let doc = crate::util::json::Json::parse(&text).unwrap();
+        assert_eq!(
+            doc.get("version").and_then(crate::util::json::Json::as_str),
+            Some("2.1.0")
+        );
+        assert!(run_cli(&format!(
+            "check --input {} --format yaml",
+            input.display()
+        ))
+        .is_err());
+    }
+
+    #[test]
+    fn preflight_check_aborts_on_errors_and_passes_clean() {
+        let td = TempDir::new("cli-preflight").unwrap();
+        let input = td.path().join("talp");
+        assert_eq!(
+            run_cli(&format!(
+                "run --app genex --machine mn5 --config 2x4 --timesteps 2 \
+                 --output {}",
+                input.join("exp/run_0.json").display()
+            ))
+            .unwrap(),
+            0
+        );
+        let out = td.path().join("site");
+        assert_eq!(
+            run_cli(&format!(
+                "report --input {} --output {} --format json --check",
+                input.display(),
+                out.display()
+            ))
+            .unwrap(),
+            0
+        );
+        assert!(out.join("report.json").exists());
+
+        // A corrupt artifact aborts the gated run before any emit.
+        std::fs::write(input.join("exp/bad.json"), "][").unwrap();
+        let out2 = td.path().join("site2");
+        assert_eq!(
+            run_cli(&format!(
+                "report --input {} --output {} --format json --check",
+                input.display(),
+                out2.display()
+            ))
+            .unwrap(),
+            2
+        );
+        assert!(
+            !out2.join("report.json").exists(),
+            "pre-flight must abort before emitting"
+        );
+        // Without --check the same run proceeds (tolerant pipeline).
+        assert_eq!(
+            run_cli(&format!(
+                "report --input {} --output {} --format json",
+                input.display(),
+                out2.display()
+            ))
+            .unwrap(),
+            0
+        );
+        assert!(out2.join("report.json").exists());
+
+        // gate --check: a broken policy aborts with the check code.
+        let pol = td.path().join("broken.json");
+        std::fs::write(&pol, "{\"version\": ").unwrap();
+        assert_eq!(
+            run_cli(&format!(
+                "gate --input {} --policy {} --check",
+                input.display(),
+                pol.display()
+            ))
+            .unwrap(),
+            2
+        );
+        // ingest --check: the corrupt artifact aborts before the store
+        // is even created.
+        let store = td.path().join("store");
+        assert_eq!(
+            run_cli(&format!(
+                "ingest --input {} --store {} --check",
+                input.display(),
+                store.display()
+            ))
+            .unwrap(),
+            2
+        );
+        assert!(!store.exists(), "aborted ingest must not create a store");
     }
 }

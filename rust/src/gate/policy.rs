@@ -209,8 +209,9 @@ impl Default for GatePolicy {
     }
 }
 
-/// Exact match, `"*"`, or trailing-`*` prefix.
-fn pat_match(pat: &str, s: &str) -> bool {
+/// Exact match, `"*"`, or trailing-`*` prefix.  Shared with the
+/// `check` analyzer so "rule matches nothing" uses gate semantics.
+pub(crate) fn pat_match(pat: &str, s: &str) -> bool {
     if pat == "*" || pat == s {
         return true;
     }

@@ -32,6 +32,13 @@
 //! * [`gate`] — the regression gate: a declarative policy over the
 //!   metrics histories that turns detection into a CI pass/fail
 //!   verdict (`gate.json` + markdown + JUnit XML + exit code).
+//! * [`check`] — the static analyzer (`talp-pages check`): validates
+//!   every input surface — artifact trees, run stores, gate policies,
+//!   metrics caches, `report.json`, bench baselines — without running
+//!   a report, emitting stable `TP0xx` diagnostics with byte-offset
+//!   spans as deterministic text or SARIF 2.1.0
+//!   ([`check::sarif`]), with gate-style exit codes (0 clean /
+//!   1 warnings / 2 errors).
 //! * [`apps`] — workloads: the TeaLeaf CG mini-app (backed by the real
 //!   AOT-compiled Pallas kernel through [`runtime`]) and a GENE-X-like
 //!   app with the injectable scaling bug of Fig. 7.
@@ -145,6 +152,7 @@
 //!   emit identical bytes by construction.
 
 pub mod apps;
+pub mod check;
 pub mod cli;
 pub mod ci;
 pub mod gate;

@@ -140,6 +140,70 @@ impl MetricsCache {
         root
     }
 
+    /// Statically diagnose a cache file without loading it into a
+    /// session — the `talp-pages check` surface.  Everything here is a
+    /// *warning*: a bad cache only costs a cold start, never
+    /// correctness.  (A missing file is not diagnosed at all; callers
+    /// skip nonexistent paths.)
+    pub fn check_file(path: &Path) -> Vec<crate::check::Diagnostic> {
+        use crate::check::{Diagnostic, Span};
+        let disp = path.display().to_string();
+        let hint = "delete the cache file; the next report cold-starts \
+                    safely";
+        let bytes = match std::fs::read(path) {
+            Ok(b) => b,
+            Err(e) => {
+                return vec![Diagnostic::warning(
+                    "TP013",
+                    disp,
+                    format!("unreadable ({e}) — skipped"),
+                )]
+            }
+        };
+        let doc = match Json::from_slice(&bytes) {
+            Ok(doc) => doc,
+            Err(e) => {
+                return vec![Diagnostic::warning(
+                    "TP021",
+                    disp,
+                    format!("invalid JSON: {}", e.message),
+                )
+                .with_span(Span { start: e.offset, len: 1 })
+                .with_hint(hint)]
+            }
+        };
+        match doc.get("version").and_then(Json::as_u64) {
+            None => {
+                return vec![Diagnostic::warning(
+                    "TP021",
+                    disp,
+                    "cache document has no version — it will cold-start",
+                )
+                .with_hint(hint)]
+            }
+            Some(v) if v != CACHE_VERSION => {
+                return vec![Diagnostic::warning(
+                    "TP020",
+                    disp,
+                    format!(
+                        "cache version {v} does not match this build's \
+                         version {CACHE_VERSION} — it will cold-start"
+                    ),
+                )]
+            }
+            Some(_) => {}
+        }
+        if decode_cache(&bytes).is_none() {
+            return vec![Diagnostic::warning(
+                "TP021",
+                disp,
+                "malformed cache entry — the whole file will cold-start",
+            )
+            .with_hint(hint)];
+        }
+        Vec::new()
+    }
+
     /// Persist to `path`, creating parent directories.  Streams
     /// straight into one pre-sized buffer (byte-identical to the
     /// `to_json().to_string_pretty()` tree path — pinned by a test).

@@ -32,7 +32,9 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{ensure, Result};
 
+use crate::check::{Diagnostic, Span};
 use crate::pop::RunMetrics;
+use crate::util::json::error_offset;
 use crate::talp::RunData;
 use crate::util::par::parallel_map;
 
@@ -200,10 +202,14 @@ impl MetricExperiment {
 }
 
 /// Outcome of the cached scan.
+///
+/// Warnings are structured [`Diagnostic`]s (TP013 unreadable, TP001
+/// invalid JSON with a byte-offset span, TP002 schema rejection), so
+/// report documents and `talp-pages check` share one vocabulary.
 #[derive(Debug, Default)]
 pub struct MetricScan {
     pub experiments: Vec<MetricExperiment>,
-    pub warnings: Vec<String>,
+    pub warnings: Vec<Diagnostic>,
     /// Artifacts served from the content-hash cache (not re-parsed).
     pub cache_hits: usize,
     /// Artifacts parsed + reduced this run.
@@ -279,7 +285,7 @@ pub fn scan_metrics(
     enum Outcome {
         Hit(RunMetrics),
         Miss(String, RunMetrics),
-        Bad(String),
+        Bad(Diagnostic),
     }
 
     let found = discover(root)?;
@@ -295,9 +301,10 @@ pub fn scan_metrics(
         let bytes = match std::fs::read(path) {
             Ok(b) => b,
             Err(e) => {
-                return Outcome::Bad(format!(
-                    "skipping {}: {e}",
-                    path.display()
+                return Outcome::Bad(Diagnostic::warning(
+                    "TP013",
+                    path.display().to_string(),
+                    format!("unreadable ({e}) — skipped"),
                 ))
             }
         };
@@ -312,9 +319,26 @@ pub fn scan_metrics(
                 content_hash,
                 RunMetrics::from_run(&data, rel),
             ),
-            Err(e) => {
-                Outcome::Bad(format!("skipping {}: {e:#}", path.display()))
-            }
+            Err(e) => Outcome::Bad(match error_offset(&e) {
+                // A JSON syntax error carries a byte offset: TP001
+                // with a span.  Anything else failed the TALP schema:
+                // TP002.  Both are skip-warnings here; `check`
+                // escalates them to errors.
+                Some(off) => Diagnostic::warning(
+                    "TP001",
+                    path.display().to_string(),
+                    format!("invalid JSON: {} — skipped", e.root_cause()),
+                )
+                .with_span(Span { start: off, len: 1 }),
+                None => Diagnostic::warning(
+                    "TP002",
+                    path.display().to_string(),
+                    format!(
+                        "not a valid TALP artifact: {} — skipped",
+                        e.root_cause()
+                    ),
+                ),
+            }),
         }
     });
 
@@ -559,7 +583,12 @@ mod tests {
         let mut cache = MetricsCache::new();
         let ms = scan_metrics(td.path(), &mut cache, 0).unwrap();
         assert_eq!(ms.warnings.len(), 1);
-        assert!(ms.warnings[0].contains("trunc.json"));
+        assert!(ms.warnings[0].to_string().contains("trunc.json"));
+        // The truncated artifact is a JSON syntax error with a span
+        // inside the file (not past its end).
+        assert_eq!(ms.warnings[0].code, "TP001");
+        let span = ms.warnings[0].span.expect("syntax error carries span");
+        assert!(span.start <= "{\"resources\": {\"num_mpi_ranks\": 2,".len());
         assert_eq!(ms.experiments.len(), 3);
         assert_eq!(ms.experiments[0].runs.len(), 3, "valid runs kept");
         // The corrupt file must not be cached; a rescan warns again.

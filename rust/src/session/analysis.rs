@@ -100,8 +100,8 @@ pub struct Analysis {
     /// Display form of the scanned input root (index header line).
     pub input: String,
     pub experiments: Vec<ExperimentAnalysis>,
-    /// Non-fatal scan warnings.
-    pub warnings: Vec<String>,
+    /// Non-fatal scan warnings, as structured diagnostics.
+    pub warnings: Vec<crate::check::Diagnostic>,
     /// Artifacts served from the metrics cache (not re-parsed).  These
     /// describe the *scan*, not any emitter, so a JSON-only emit on a
     /// warm cache still reports zero misses.

@@ -49,6 +49,7 @@ pub struct EmitSummary {
     pub badges_written: usize,
     /// Total files across all emitters (pages and badges included).
     pub files_written: usize,
+    /// Scan warnings in display form (`path: message [code]`).
     pub warnings: Vec<String>,
     /// Artifacts served from the metrics cache (not re-parsed).
     pub cache_hits: usize,
@@ -73,7 +74,7 @@ impl Analysis {
             pages_written: 0,
             badges_written: 0,
             files_written: 0,
-            warnings: self.warnings.clone(),
+            warnings: self.warnings.iter().map(|w| w.to_string()).collect(),
             cache_hits: self.cache_hits,
             cache_misses: self.cache_misses,
             gate: self.gate.clone(),

@@ -104,7 +104,7 @@ fn index_body(analysis: &Analysis, index_items: &str) -> String {
     if !analysis.warnings.is_empty() {
         body.push_str("<div class=\"warn\"><b>Warnings:</b><ul>");
         for w in &analysis.warnings {
-            body.push_str(&format!("<li>{}</li>", esc(w)));
+            body.push_str(&format!("<li>{}</li>", esc(&w.to_string())));
         }
         body.push_str("</ul></div>\n");
     }

@@ -6,7 +6,7 @@
 //!
 //! ```json
 //! {
-//!   "schema_version": 1,
+//!   "schema_version": 2,
 //!   "experiments": [
 //!     {
 //!       "id": "<scan-root-relative experiment id>",
@@ -25,7 +25,10 @@
 //!       ]
 //!     }
 //!   ],
-//!   "warnings": ["..."],
+//!   "warnings": [
+//!     { "code": "TP0xx", "severity": "warning", "path": "...",
+//!       "message": "...", "span": {"start", "len"}|null }
+//!   ],
 //!   "gate": { ...gate.json document... } | null
 //! }
 //! ```
@@ -41,6 +44,9 @@
 //! * **Versioning rule:** consumers MUST reject a `schema_version`
 //!   they do not know ([`ReportDocument::parse`] enforces this);
 //!   producers bump [`SCHEMA_VERSION`] on any breaking shape change.
+//!   Version 2 turned `warnings` from plain strings into structured
+//!   diagnostic objects (stable `TP0xx` code, severity, file path,
+//!   optional byte-offset span) shared with `talp-pages check`.
 
 use std::path::PathBuf;
 
@@ -55,7 +61,8 @@ use super::emit::{Emitter, EmitterReport};
 
 /// Version stamp of the `report.json` shape.  Bump on breaking
 /// changes; consumers reject unknown versions instead of guessing.
-pub const SCHEMA_VERSION: u64 = 1;
+/// (2: `warnings` became structured diagnostic objects.)
+pub const SCHEMA_VERSION: u64 = 2;
 
 /// Default file name inside the emitter's output directory.
 pub const REPORT_FILE_NAME: &str = "report.json";
@@ -86,11 +93,7 @@ impl JsonReport {
             (
                 "warnings",
                 Json::Arr(
-                    analysis
-                        .warnings
-                        .iter()
-                        .map(|w| Json::Str(w.clone()))
-                        .collect(),
+                    analysis.warnings.iter().map(warning_json).collect(),
                 ),
             ),
             (
@@ -123,7 +126,30 @@ impl JsonReport {
         w.key("warnings");
         w.begin_arr();
         for warning in &analysis.warnings {
-            w.str_val(warning);
+            // Streamed in lockstep with `warning_json` — the two paths
+            // must stay byte-identical (pinned by a test).
+            w.begin_obj();
+            w.key("code");
+            w.str_val(warning.code);
+            w.key("severity");
+            w.str_val(warning.severity.id());
+            w.key("path");
+            w.str_val(&warning.path);
+            w.key("message");
+            w.str_val(&warning.message);
+            w.key("span");
+            match warning.span {
+                Some(s) => {
+                    w.begin_obj();
+                    w.key("start");
+                    w.num(s.start as f64);
+                    w.key("len");
+                    w.num(s.len as f64);
+                    w.end_obj();
+                }
+                None => w.null(),
+            }
+            w.end_obj();
         }
         w.end_arr();
         w.key("gate");
@@ -251,6 +277,26 @@ fn experiment_json(exp: &ExperimentAnalysis) -> Json {
     ])
 }
 
+/// One scan warning as its structured document object (schema v2).
+fn warning_json(w: &crate::check::Diagnostic) -> Json {
+    Json::from_pairs(vec![
+        ("code", Json::Str(w.code.to_string())),
+        ("severity", Json::Str(w.severity.id().to_string())),
+        ("path", Json::Str(w.path.clone())),
+        ("message", Json::Str(w.message.clone())),
+        (
+            "span",
+            match w.span {
+                Some(s) => Json::from_pairs(vec![
+                    ("start", Json::Num(s.start as f64)),
+                    ("len", Json::Num(s.len as f64)),
+                ]),
+                None => Json::Null,
+            },
+        ),
+    ])
+}
+
 fn finding_json(f: &Finding) -> Json {
     Json::from_pairs(vec![
         ("region", Json::Str(f.region.clone())),
@@ -373,12 +419,27 @@ impl ReportDocument {
                 models: raw_list("models"),
             });
         }
+        // Warning objects flatten back to their canonical display
+        // strings (`path: message [code]` / `path:offset: ...`).
         let warnings = j
             .get("warnings")
             .and_then(Json::as_arr)
             .map(|a| {
                 a.iter()
-                    .filter_map(|w| w.as_str().map(str::to_string))
+                    .map(|w| {
+                        let code = w.str_or("code", "?");
+                        let path = w.str_or("path", "?");
+                        let message = w.str_or("message", "");
+                        match w
+                            .at(&["span", "start"])
+                            .and_then(Json::as_u64)
+                        {
+                            Some(start) => format!(
+                                "{path}:{start}: {message} [{code}]"
+                            ),
+                            None => format!("{path}: {message} [{code}]"),
+                        }
+                    })
                     .collect()
             })
             .unwrap_or_default();
@@ -472,6 +533,45 @@ mod tests {
     }
 
     #[test]
+    fn warning_objects_stream_and_parse_back_as_display_strings() {
+        use crate::check::{Diagnostic, Span};
+        let analysis = Analysis {
+            input: "in".into(),
+            experiments: Vec::new(),
+            warnings: vec![
+                Diagnostic::warning("TP001", "exp/bad.json", "invalid JSON")
+                    .with_span(Span { start: 17, len: 1 }),
+                Diagnostic::warning("TP013", "exp/gone.json", "unreadable"),
+            ],
+            cache_hits: 0,
+            cache_misses: 0,
+            gate: None,
+        };
+        // Streamed output matches the tree builder byte-for-byte.
+        let mut w = JsonWriter::with_capacity(512, true);
+        JsonReport::write_document(&analysis, &mut w);
+        let streamed = w.into_string();
+        assert_eq!(
+            streamed,
+            JsonReport::document(&analysis)
+                .to_string_pretty()
+                .trim_end(),
+        );
+        // Objects carry the code/span...
+        assert!(streamed.contains("\"code\": \"TP001\""));
+        assert!(streamed.contains("\"start\": 17"));
+        // ...and parse back into the canonical display strings.
+        let doc = ReportDocument::parse(&streamed).unwrap();
+        assert_eq!(
+            doc.warnings,
+            [
+                "exp/bad.json:17: invalid JSON [TP001]",
+                "exp/gone.json: unreadable [TP013]",
+            ]
+        );
+    }
+
+    #[test]
     fn ungated_report_has_null_gate() {
         let (out, _) = emit_report(false);
         let text = std::fs::read_to_string(
@@ -493,7 +593,7 @@ mod tests {
         .unwrap();
         // A future version must be rejected, not half-parsed.
         let bumped = text.replace(
-            "\"schema_version\": 1",
+            "\"schema_version\": 2",
             "\"schema_version\": 999",
         );
         assert_ne!(text, bumped, "version stamp must be present");
@@ -501,7 +601,7 @@ mod tests {
         assert!(err.contains("999"), "{err}");
         // Missing version is just as fatal.
         let stripped = text.replace(
-            "\"schema_version\": 1,",
+            "\"schema_version\": 2,",
             "",
         );
         assert!(ReportDocument::parse(&stripped).is_err());

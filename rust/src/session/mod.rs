@@ -193,8 +193,9 @@ impl Scan {
         &self.root
     }
 
-    /// Non-fatal scan warnings (corrupt/unreadable artifacts).
-    pub fn warnings(&self) -> &[String] {
+    /// Non-fatal scan warnings (corrupt/unreadable artifacts), as
+    /// structured [`crate::check::Diagnostic`]s with stable codes.
+    pub fn warnings(&self) -> &[crate::check::Diagnostic] {
         &self.scan.warnings
     }
 

@@ -300,6 +300,25 @@ impl<'a> FieldCursor<'a> {
     }
 }
 
+/// Recover a [`JsonError`] byte offset from an `anyhow` chain.
+///
+/// The vendored `anyhow` flattens causes into strings (no downcast),
+/// so this searches each chain message for the stable Display prefix
+/// `"json error at byte N"` — including messages that *embedded* a
+/// stringified `JsonError` (e.g. `policy x: json error at byte 7: ..`).
+/// Used by the `check` subsystem to attach spans to diagnostics.
+pub fn error_offset(err: &anyhow::Error) -> Option<usize> {
+    const TAG: &str = "json error at byte ";
+    err.chain().find_map(|msg| {
+        let pos = msg.find(TAG)?;
+        let rest = &msg[pos + TAG.len()..];
+        let end = rest
+            .find(|c: char| !c.is_ascii_digit())
+            .unwrap_or(rest.len());
+        rest[..end].parse().ok()
+    })
+}
+
 /// Sort an object's keys recursively (for canonical comparisons in tests).
 pub fn canonicalize(j: &Json) -> Json {
     match j {
@@ -446,6 +465,26 @@ mod tests {
         bad.push(0xfe);
         bad.extend_from_slice(b"\"}");
         assert!(Json::from_slice(&bad).is_err());
+    }
+
+    #[test]
+    fn error_offset_recovers_from_chain_and_embedded_text() {
+        let e = Json::parse("{\"a\": nope}").unwrap_err();
+        let off = e.offset;
+        // Direct conversion keeps the offset.
+        let any = anyhow::Error::from(e.clone());
+        assert_eq!(error_offset(&any), Some(off));
+        // Context layers on top do not hide it.
+        use anyhow::Context;
+        let wrapped = Err::<(), _>(any)
+            .context("parsing fixture x")
+            .unwrap_err();
+        assert_eq!(error_offset(&wrapped), Some(off));
+        // A stringified JsonError inside a message still yields it.
+        let embedded = anyhow::anyhow!("policy p.json: {e}");
+        assert_eq!(error_offset(&embedded), Some(off));
+        // No tag anywhere -> None.
+        assert_eq!(error_offset(&anyhow::anyhow!("plain failure")), None);
     }
 
     #[test]

@@ -126,7 +126,10 @@ pub fn from_iso8601(s: &str) -> Option<i64> {
 }
 
 /// Current wall-clock unix seconds (only used for stamping real runs;
-/// simulations carry their own synthetic clocks).
+/// simulations carry their own synthetic clocks).  This is the one
+/// sanctioned wall-clock read — `clippy.toml` disallows
+/// `SystemTime::now` everywhere else.
+#[allow(clippy::disallowed_methods)]
 pub fn now_unix() -> i64 {
     std::time::SystemTime::now()
         .duration_since(std::time::UNIX_EPOCH)

@@ -1,0 +1,478 @@
+//! Acceptance tests for `talp-pages check` (ISSUE 6):
+//!
+//! * the corruption ladder: one seeded mutation per diagnostic code,
+//!   each asserting its documented `TP0xx` code in *both* the text and
+//!   the SARIF rendering;
+//! * byte-determinism across `--jobs` values;
+//! * a SARIF golden (fixed synthetic paths, `UPDATE_GOLDEN=1` to
+//!   regenerate);
+//! * properties: the analyzer never panics on corrupted bytes and
+//!   every reported span stays within its file.
+
+use std::path::{Path, PathBuf};
+
+use talp_pages::check::{
+    run_check, sarif, CheckOptions, CheckReport, Diagnostic, Severity,
+    Span,
+};
+use talp_pages::cli;
+use talp_pages::talp::{GitMeta, ProcStats, RegionData, RunData};
+use talp_pages::util::fs::TempDir;
+use talp_pages::util::propcheck;
+
+/// Hand-built run with exact numbers (no simulator noise).
+fn run(elapsed: f64, ts: i64, commit: &str) -> RunData {
+    let region = |name: &str, e: f64| RegionData {
+        name: name.into(),
+        elapsed_s: e,
+        visits: 1,
+        procs: (0..2)
+            .map(|r| ProcStats {
+                rank: r,
+                node: 0,
+                elapsed_s: e,
+                useful_s: e * 1.5,
+                mpi_s: 0.05 * e,
+                useful_instructions: 1_000_000,
+                useful_cycles: 500_000,
+                ..Default::default()
+            })
+            .collect(),
+    };
+    RunData {
+        dlb_version: "test".into(),
+        app: "check-fixture".into(),
+        machine: "mn5".into(),
+        timestamp: ts,
+        ranks: 2,
+        threads: 2,
+        nodes: 1,
+        regions: vec![
+            region("Global", elapsed),
+            region("solve", elapsed * 0.6),
+        ],
+        git: Some(GitMeta {
+            commit: commit.into(),
+            branch: "main".into(),
+            commit_timestamp: ts,
+            message: String::new(),
+        }),
+    }
+}
+
+/// One experiment `exp`, one config `2x2`, distinct timestamps.
+fn build_tree(root: &Path) {
+    for i in 0..3 {
+        run(10.0 + i as f64, 1000 + i as i64 * 100, &format!("c{i:03}"))
+            .write_file(&root.join(format!("exp/talp_2x2_run{i}.json")))
+            .unwrap();
+    }
+}
+
+fn run_cli(line: &str) -> anyhow::Result<i32> {
+    cli::main_with_args(
+        &line.split_whitespace().map(String::from).collect::<Vec<_>>(),
+    )
+}
+
+fn codes(rep: &CheckReport) -> Vec<&'static str> {
+    rep.diagnostics.iter().map(|d| d.code).collect()
+}
+
+/// Run the check and assert `code` shows up in the structured report,
+/// the text rendering and the SARIF rendering alike.
+fn assert_code(opts: &CheckOptions, code: &str, what: &str) {
+    let rep = run_check(opts).unwrap_or_else(|e| panic!("{what}: {e}"));
+    assert!(
+        rep.diagnostics.iter().any(|d| d.code == code),
+        "{what}: expected {code}, got {:?}",
+        rep.diagnostics
+    );
+    let text = rep.render_text();
+    assert!(text.contains(&format!("[{code}]")), "{what} text:\n{text}");
+    let sarif = sarif::render(&rep);
+    assert!(
+        sarif.contains(&format!("\"ruleId\": \"{code}\"")),
+        "{what} sarif:\n{sarif}"
+    );
+}
+
+fn input_opts(root: &Path) -> CheckOptions {
+    CheckOptions { input: Some(root.to_path_buf()), ..Default::default() }
+}
+
+fn store_opts(store: &Path) -> CheckOptions {
+    CheckOptions { store: Some(store.to_path_buf()), ..Default::default() }
+}
+
+#[test]
+fn clean_fixture_is_clean_in_every_surface() {
+    let td = TempDir::new("check-clean").unwrap();
+    let talp = td.path().join("talp");
+    build_tree(&talp);
+    let store = td.path().join("store");
+    assert_eq!(
+        run_cli(&format!(
+            "ingest --input {} --store {}",
+            talp.display(),
+            store.display()
+        ))
+        .unwrap(),
+        0
+    );
+    let policy = td.path().join("policy.json");
+    std::fs::write(
+        &policy,
+        r#"{"version":1,"rules":[{"region":"solve","max_elapsed_increase":0.5}]}"#,
+    )
+    .unwrap();
+    let rep = run_check(&CheckOptions {
+        store: Some(store),
+        policy: Some(policy),
+        ..Default::default()
+    })
+    .unwrap();
+    assert_eq!(codes(&rep), Vec::<&str>::new(), "{:?}", rep.diagnostics);
+    assert_eq!(rep.exit_code(), 0);
+}
+
+#[test]
+fn corruption_ladder_input_surface() {
+    // TP001: truncated JSON artifact (syntax error, escalated to error
+    // in check mode, span inside the file).
+    let td = TempDir::new("ladder-tp001").unwrap();
+    let talp = td.path().join("talp");
+    build_tree(&talp);
+    std::fs::write(talp.join("exp/talp_2x2_bad.json"), "{\"resources\": ")
+        .unwrap();
+    let rep = run_check(&input_opts(&talp)).unwrap();
+    assert_eq!(codes(&rep), ["TP001"], "{:?}", rep.diagnostics);
+    let d = &rep.diagnostics[0];
+    assert_eq!(d.severity, Severity::Error, "check escalates TP001");
+    assert!(d.span.expect("syntax errors carry spans").start <= 14);
+    assert_eq!(rep.exit_code(), 2);
+    assert_code(&input_opts(&talp), "TP001", "truncated artifact");
+
+    // TP002: parses as JSON, rejected by the TALP schema.
+    let td = TempDir::new("ladder-tp002").unwrap();
+    let talp = td.path().join("talp");
+    build_tree(&talp);
+    std::fs::write(talp.join("exp/talp_2x2_odd.json"), "{\"app\": \"x\"}")
+        .unwrap();
+    assert_code(&input_opts(&talp), "TP002", "non-TALP json");
+
+    // TP050: two runs sharing one effective timestamp.
+    let td = TempDir::new("ladder-tp050").unwrap();
+    let talp = td.path().join("talp");
+    build_tree(&talp);
+    run(9.0, 1000, "c000") // same commit_timestamp as run0
+        .write_file(&talp.join("exp/talp_2x2_twin.json"))
+        .unwrap();
+    assert_code(&input_opts(&talp), "TP050", "equal timestamps");
+}
+
+#[test]
+fn corruption_ladder_store_surface() {
+    let base = |name: &str| -> (TempDir, PathBuf) {
+        let td = TempDir::new(name).unwrap();
+        let talp = td.path().join("talp");
+        build_tree(&talp);
+        let store = td.path().join("store");
+        run_cli(&format!(
+            "ingest --input {} --store {}",
+            talp.display(),
+            store.display()
+        ))
+        .unwrap();
+        (td, store)
+    };
+    let shard = |store: &Path| store.join("shards/exp__2x2.jsonl");
+
+    // TP010: manifest gone.
+    let (_td, store) = base("ladder-tp010");
+    std::fs::remove_file(store.join(".talp-store.json")).unwrap();
+    assert_code(&store_opts(&store), "TP010", "missing manifest");
+
+    // TP011: manifest from the future.
+    let (_td, store) = base("ladder-tp011");
+    std::fs::write(store.join(".talp-store.json"), "{\"version\": 999}\n")
+        .unwrap();
+    assert_code(&store_opts(&store), "TP011", "version skew");
+
+    // TP012: a torn append at the end of a shard.
+    let (_td, store) = base("ladder-tp012");
+    let mut bytes = std::fs::read(shard(&store)).unwrap();
+    bytes.extend_from_slice(b"{\"hash\": \"tr");
+    std::fs::write(shard(&store), &bytes).unwrap();
+    assert_code(&store_opts(&store), "TP012", "torn shard record");
+
+    // TP014: a leftover temp file among the shards.
+    let (_td, store) = base("ladder-tp014");
+    std::fs::write(store.join("shards/exp__2x2.jsonl.tmp"), "x").unwrap();
+    assert_code(&store_opts(&store), "TP014", "stray shard file");
+
+    // TP015: one record stored twice.
+    let (_td, store) = base("ladder-tp015");
+    let text = std::fs::read_to_string(shard(&store)).unwrap();
+    let first = text.lines().next().unwrap().to_string();
+    std::fs::write(shard(&store), format!("{text}{first}\n")).unwrap();
+    assert_code(&store_opts(&store), "TP015", "duplicate record");
+
+    // TP016: identical bytes ingested from two source paths (info —
+    // exit stays 0).  The copy lives under another *experiment* so the
+    // two runs land in separate histories — same-experiment copies
+    // would also trip TP050 (identical content means identical
+    // timestamps) and muddy the exit-code assert.
+    let td = TempDir::new("ladder-tp016").unwrap();
+    let talp = td.path().join("talp");
+    build_tree(&talp);
+    std::fs::create_dir_all(talp.join("exp2")).unwrap();
+    std::fs::copy(
+        talp.join("exp/talp_2x2_run0.json"),
+        talp.join("exp2/talp_2x2_copy.json"),
+    )
+    .unwrap();
+    let store = td.path().join("store");
+    run_cli(&format!(
+        "ingest --input {} --store {}",
+        talp.display(),
+        store.display()
+    ))
+    .unwrap();
+    let rep = run_check(&store_opts(&store)).unwrap();
+    assert!(codes(&rep).contains(&"TP016"), "{:?}", rep.diagnostics);
+    assert_eq!(rep.exit_code(), 0, "info never changes the exit code");
+}
+
+#[test]
+fn corruption_ladder_policy_cache_report_bench() {
+    let td = TempDir::new("ladder-files").unwrap();
+    let file = |name: &str, content: &str| -> PathBuf {
+        let p = td.path().join(name);
+        std::fs::write(&p, content).unwrap();
+        p
+    };
+    let policy_of = |p: PathBuf| CheckOptions {
+        policy: Some(p),
+        ..Default::default()
+    };
+
+    // TP003: syntactically broken policy (span) and semantic typo.
+    let bad = file("p-syntax.json", "{\"version\": 1, ");
+    assert_code(&policy_of(bad), "TP003", "truncated policy");
+    let typo =
+        file("p-typo.json", r#"{"version":1,"defaults":{"windw":3}}"#);
+    assert_code(&policy_of(typo), "TP003", "typo policy");
+
+    // TP040/TP041: referentially dead rules against a real corpus.
+    let talp = td.path().join("talp");
+    build_tree(&talp);
+    let dead = file(
+        "p-dead.json",
+        r#"{"version":1,
+            "rules":[{"region":"nonexistent"}],
+            "allow":[{"experiment":"gone*","reason":"r"}]}"#,
+    );
+    let opts = CheckOptions {
+        input: Some(talp),
+        policy: Some(dead),
+        ..Default::default()
+    };
+    assert_code(&opts, "TP040", "dead rule");
+    assert_code(&opts, "TP041", "dead allow entry");
+
+    // TP020/TP021: cache version skew vs invalid cache.
+    let skew = file("cache-skew.json", "{\"version\": 999}\n");
+    let cache_of = |p: PathBuf| CheckOptions {
+        cache: Some(p),
+        ..Default::default()
+    };
+    assert_code(&cache_of(skew), "TP020", "cache version skew");
+    let junk = file("cache-junk.json", "not json at all");
+    assert_code(&cache_of(junk), "TP021", "invalid cache");
+
+    // TP030/TP031/TP013: report schema skew, shape error, missing file.
+    let report_of = |p: PathBuf| CheckOptions {
+        report: Some(p),
+        ..Default::default()
+    };
+    let skew = file("report-skew.json", "{\"schema_version\": 999}");
+    assert_code(&report_of(skew), "TP030", "report schema skew");
+    let shape = file("report-shape.json", "[1, 2");
+    assert_code(&report_of(shape), "TP031", "report shape error");
+    assert_code(
+        &report_of(td.path().join("no-such-report.json")),
+        "TP013",
+        "missing report",
+    );
+
+    // TP060: an all-zero bench baseline, plus TP001 for a torn line.
+    let bench_of = |p: PathBuf| CheckOptions {
+        bench: Some(p),
+        ..Default::default()
+    };
+    let zeros = file(
+        "bench-zero.json",
+        "{\"bench\": \"_meta\", \"note\": \"n\"}\n\
+         {\"bench\": \"scan\", \"elapsed_s\": 0}\n",
+    );
+    assert_code(&bench_of(zeros), "TP060", "unmeasured baseline");
+    let torn = file(
+        "bench-torn.json",
+        "{\"bench\": \"scan\", \"elapsed_s\": 0.5}\n{\"bench\": ",
+    );
+    assert_code(&bench_of(torn), "TP001", "torn bench line");
+}
+
+#[test]
+fn output_is_byte_identical_across_jobs() {
+    let td = TempDir::new("check-jobs").unwrap();
+    let talp = td.path().join("talp");
+    // Several experiments so the parallel scan actually fans out.
+    for exp in ["alpha", "beta", "gamma"] {
+        for i in 0..3 {
+            run(10.0 + i as f64, 1000 + i as i64 * 100, &format!("c{i:03}"))
+                .write_file(
+                    &talp.join(format!("{exp}/talp_2x2_run{i}.json")),
+                )
+                .unwrap();
+        }
+    }
+    // Seed findings of every severity: a torn artifact, a dead rule,
+    // a zero bench baseline.
+    std::fs::write(talp.join("beta/talp_2x2_bad.json"), "{\"resources")
+        .unwrap();
+    let policy = td.path().join("policy.json");
+    std::fs::write(
+        &policy,
+        r#"{"version":1,"rules":[{"region":"nonexistent"}]}"#,
+    )
+    .unwrap();
+    let bench = td.path().join("bench.json");
+    std::fs::write(&bench, "{\"bench\": \"scan\", \"elapsed_s\": 0}\n")
+        .unwrap();
+
+    let opts = |jobs: usize| CheckOptions {
+        input: Some(talp.clone()),
+        policy: Some(policy.clone()),
+        bench: Some(bench.clone()),
+        jobs,
+        ..Default::default()
+    };
+    let rep1 = run_check(&opts(1)).unwrap();
+    let rep4 = run_check(&opts(4)).unwrap();
+    assert_eq!(rep1.render_text(), rep4.render_text());
+    assert_eq!(sarif::render(&rep1), sarif::render(&rep4));
+    assert_eq!(rep1.exit_code(), 2, "the torn artifact is an error");
+}
+
+// ---------------------------------------------------------------- golden
+
+fn golden_path(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/golden")
+        .join(name)
+}
+
+/// Fixed synthetic report — real runs embed temp paths, so the golden
+/// pins the *rendering*, not a particular filesystem.
+fn golden_report() -> CheckReport {
+    let mut rep = CheckReport::new();
+    rep.push(
+        Diagnostic::error(
+            "TP001",
+            "talp/exp/bad.json",
+            "invalid JSON: json error at byte 12: expected value — \
+             skipped",
+        )
+        .with_span(Span { start: 12, len: 1 }),
+    );
+    rep.push(
+        Diagnostic::warning(
+            "TP040",
+            "policy.json",
+            "rules[0] (experiment 'salpha', config '*', region 'solve') \
+             matches nothing in the corpus",
+        )
+        .with_hint("fix the pattern or delete the dead rule"),
+    );
+    rep.push(Diagnostic::info(
+        "TP016",
+        "store",
+        "content hash 00000000deadbeef is stored under 2 source paths \
+         (exp/a.json, exp/b.json) — each counts as its own history point",
+    ));
+    rep.sort();
+    rep
+}
+
+#[test]
+fn sarif_output_matches_golden() {
+    let got = sarif::render(&golden_report());
+    let path = golden_path("check.sarif");
+    if std::env::var_os("UPDATE_GOLDEN").is_some() {
+        std::fs::write(&path, &got).unwrap();
+        return;
+    }
+    let want = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("missing golden check.sarif: {e}"));
+    assert_eq!(
+        got, want,
+        "SARIF drift; if intentional, regenerate with \
+         UPDATE_GOLDEN=1 cargo test --test check_cli"
+    );
+}
+
+// ------------------------------------------------------------ properties
+
+/// The analyzer never panics on corrupted bytes, reports spans that
+/// stay inside the damaged file, and renders deterministically.
+#[test]
+fn check_never_panics_and_spans_stay_in_bounds() {
+    let base = {
+        let td = TempDir::new("check-prop-base").unwrap();
+        let p = td.path().join("base.json");
+        run(10.0, 1000, "c000").write_file(&p).unwrap();
+        std::fs::read(&p).unwrap()
+    };
+    propcheck::check("check survives corrupted artifacts", 48, |rng| {
+        let mut bytes = base.clone();
+        match rng.below(3) {
+            0 => bytes.truncate(rng.below(bytes.len() as u64) as usize),
+            1 => {
+                let i = rng.below(bytes.len() as u64) as usize;
+                bytes[i] = rng.below(256) as u8;
+            }
+            _ => {
+                let i = rng.below(bytes.len() as u64) as usize;
+                bytes.splice(i..i, *b"{]\"\x00");
+            }
+        }
+        let td = TempDir::new("check-prop").map_err(|e| e.to_string())?;
+        let talp = td.path().join("talp");
+        let file = talp.join("exp/talp_2x2_run0.json");
+        std::fs::create_dir_all(file.parent().unwrap())
+            .map_err(|e| e.to_string())?;
+        std::fs::write(&file, &bytes).map_err(|e| e.to_string())?;
+
+        let rep =
+            run_check(&input_opts(&talp)).map_err(|e| e.to_string())?;
+        for d in &rep.diagnostics {
+            if let Some(span) = d.span {
+                if span.start > bytes.len() {
+                    return Err(format!(
+                        "span {} beyond file of {} bytes: {d}",
+                        span.start,
+                        bytes.len()
+                    ));
+                }
+            }
+        }
+        let again =
+            run_check(&input_opts(&talp)).map_err(|e| e.to_string())?;
+        if rep.render_text() != again.render_text() {
+            return Err("nondeterministic text output".into());
+        }
+        Ok(())
+    });
+}

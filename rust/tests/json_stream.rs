@@ -251,8 +251,8 @@ fn shard_corruption_degrades_to_warnings() {
     let back = RunStore::open(&store_root).unwrap();
     assert_eq!(back.len(), 3, "all intact records survive");
     assert_eq!(back.warnings().len(), 2, "{:?}", back.warnings());
-    assert!(back.warnings()[0].contains("line 2"));
-    assert!(back.warnings()[1].contains("line 4"));
+    assert!(back.warnings()[0].to_string().contains("line 2"));
+    assert!(back.warnings()[1].to_string().contains("line 4"));
 }
 
 // ---------- corruption: metrics cache ----------

@@ -214,8 +214,8 @@ fn schema_version_round_trips_and_rejects_unknown() {
 
     // Rejection: a bumped version must refuse to parse.
     let bumped = text.replace(
-        "\"schema_version\": 1",
         "\"schema_version\": 2",
+        "\"schema_version\": 3",
     );
     assert_ne!(text, bumped);
     let err = ReportDocument::parse(&bumped).unwrap_err().to_string();

@@ -198,7 +198,8 @@ fn corrupt_shard_record_warns_but_report_survives() {
     let reloaded = RunStore::open(&store).unwrap();
     assert_eq!(reloaded.len(), 4, "intact records must survive");
     assert_eq!(reloaded.warnings().len(), 1);
-    assert!(reloaded.warnings()[0].contains("exp__2x2.jsonl"));
+    assert!(reloaded.warnings()[0].to_string().contains("exp__2x2.jsonl"));
+    assert_eq!(reloaded.warnings()[0].code, "TP012");
 
     // The report still emits, carrying the warning in its document.
     let out = td.path().join("site");

@@ -53,7 +53,8 @@ fn render_github() -> String {
 fn gitlab_template_matches_golden() {
     let y = render_gitlab();
     // Structural anchors first (clearer failures than a full diff).
-    assert!(y.contains("stages: [performance, deploy, gate]"));
+    assert!(y.contains("stages: [check, performance, deploy, gate]"));
+    assert!(y.contains("talp-check:"));
     assert!(y.contains("talp-gate:"));
     assert!(y.contains("junit: gate/gate.xml"));
     check("gitlab-ci.yml", &y);

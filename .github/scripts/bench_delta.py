@@ -1,33 +1,55 @@
 #!/usr/bin/env python3
-"""Compare BENCH_JSON records and warn on elapsed regressions.
+"""Compare BENCH_JSON records; warn or fail on elapsed regressions.
 
 Usage:
-    bench_delta.py [--baseline FILE] [--write-merged FILE] \\
+    bench_delta.py [--baseline FILE] [--write-merged FILE]
+                   [--mode advisory|gate] [--fail-threshold RATIO]
+                   [--allowlist FILE]
                    <previous/bench.json> <current/bench.json>
+    bench_delta.py --assert-measured FILE
 
 Each file holds one JSON object per line as extracted from the bench
 log (`BENCH_JSON {...}`).  Records pair up by their "bench" name —
 every named record is compared, not just the first — and every numeric
-key ending in `_s` is treated as an elapsed time.  A regression greater
-than REGRESSION_THRESHOLD emits a GitHub Actions `::warning::`
-annotation per bench/metric — this step dogfoods the talp-pages gate
-idea on our own bench, but stays advisory: hosted-runner noise must not
-turn the pipeline red, so the exit code is always 0.
+key ending in `_s` is treated as an elapsed time.
+
+Two thresholds, two behaviours:
+
+* growth beyond WARN_THRESHOLD (20%) always emits a GitHub Actions
+  `::warning::` annotation — advisory, hosted-runner noise never turns
+  the pipeline red by itself;
+* in `--mode gate` (pull requests), growth beyond `--fail-threshold`
+  (default 35%) emits `::error::` and the script exits 1 — a genuine
+  perf regression blocks the merge.  `--mode advisory` (schedules,
+  pushes) keeps the old always-exit-0 behaviour.
+
+`--allowlist` names a file of bench names or `bench.metric_s` entries
+(one per line, `#` comments) exempt from gating — the escape hatch for
+a reviewed, intentional regression.
 
 `--baseline` names the committed seed file (benches/BENCH_hotpaths.json)
-used when no previous-run artifact exists — the first run on a branch
-still gets a comparison.  Zero/non-positive baseline values mean "no
-measurement yet" and are skipped.
+used when no previous-run artifact exists.  That fallback is now loud:
+a `::notice::` says which reference is in use, and gating against *no*
+reference at all is a `::warning::`, never a silent skip (forked PRs
+cannot download artifacts — they still gate against the committed
+baseline).  Zero/non-positive reference values mean "no measurement
+yet" and are skipped.
 
 `--write-merged` writes baseline ∪ previous ∪ current (later wins) so
 the uploaded artifact always carries every known bench record, even if
 one bench was skipped or crashed in this particular run.
+
+`--assert-measured FILE` is a standalone mode: exit 1 unless every
+record in FILE (the committed baseline) carries at least one positive
+`_s` metric and no zero ones — the guard that keeps an all-zero
+placeholder baseline from ever landing again.
 """
 
 import json
 import sys
 
-REGRESSION_THRESHOLD = 0.20  # warn when elapsed grows by more than 20%
+WARN_THRESHOLD = 0.20  # annotate when elapsed grows by more than 20%
+DEFAULT_FAIL_THRESHOLD = 0.35  # gate mode fails beyond this growth
 
 
 def load(path):
@@ -58,9 +80,60 @@ def load(path):
     return records
 
 
-def compare(prev, curr):
-    """Print the per-bench delta table; return the warning count."""
+def load_allowlist(path):
+    """Bench names / bench.metric entries exempt from gating."""
+    entries = set()
+    if not path:
+        return entries
+    try:
+        with open(path, encoding="utf-8") as f:
+            for line in f:
+                line = line.split("#", 1)[0].strip()
+                if line:
+                    entries.add(line)
+    except OSError as e:
+        print(f"note: cannot read allowlist {path}: {e}")
+    return entries
+
+
+def assert_measured(path):
+    """Exit code for --assert-measured: every record needs real numbers."""
+    records = load(path)
+    records.pop("_meta", None)
+    if not records:
+        print(f"::error title=bench baseline::{path} holds no bench "
+              f"records")
+        return 1
+    bad = []
+    for name, rec in sorted(records.items()):
+        metrics = [
+            (k, v)
+            for k, v in rec.items()
+            if k.endswith("_s") and isinstance(v, (int, float))
+        ]
+        if not metrics:
+            bad.append(f"{name}: no *_s elapsed metric")
+        bad.extend(
+            f"{name}.{k} = {v} (unmeasured)"
+            for k, v in metrics
+            if v <= 0
+        )
+    if bad:
+        for b in bad:
+            print(f"::error title=bench baseline unmeasured::{b}")
+        print(f"{len(bad)} unmeasured metric(s) in {path} — record real "
+              f"timings (cargo bench --bench perf_hotpaths) and commit "
+              f"them")
+        return 1
+    print(f"{path}: all {len(records)} record(s) carry measured "
+          f"elapsed metrics")
+    return 0
+
+
+def compare(prev, curr, mode, fail_threshold, allow):
+    """Print the per-bench delta table; return (warned, failed) counts."""
     warned = 0
+    failed = 0
     for name, cur_rec in sorted(curr.items()):
         prev_rec = prev.get(name)
         if prev_rec is None:
@@ -75,13 +148,30 @@ def compare(prev, curr):
                 continue
             prev_val = prev_rec.get(key)
             if not isinstance(prev_val, (int, float)) or prev_val <= 0:
-                # 0 = "no measurement yet" (the committed seed
-                # baseline) — nothing to compare against.
+                # 0 = "no measurement yet" — nothing to compare against.
                 continue
             compared += 1
             ratio = cur_val / prev_val
             marker = ""
-            if ratio > 1.0 + REGRESSION_THRESHOLD:
+            allowed = name in allow or f"{name}.{key}" in allow
+            if mode == "gate" and ratio > 1.0 + fail_threshold:
+                if allowed:
+                    marker = "  <-- regression (allowlisted)"
+                    print(
+                        f"::notice title=bench allowlisted::{name}.{key} "
+                        f"grew {(ratio - 1.0) * 100.0:+.1f}% but is "
+                        f"allowlisted"
+                    )
+                else:
+                    marker = "  <-- regression (gate)"
+                    failed += 1
+                    print(
+                        f"::error title=bench regression::{name}.{key} "
+                        f"elapsed grew {prev_val:.4f}s -> {cur_val:.4f}s "
+                        f"({(ratio - 1.0) * 100.0:+.1f}%), past the "
+                        f"{fail_threshold:.0%} gate"
+                    )
+            elif ratio > 1.0 + WARN_THRESHOLD:
                 marker = "  <-- regression"
                 warned += 1
                 print(
@@ -97,19 +187,37 @@ def compare(prev, curr):
             print("  (no comparable elapsed metrics yet)")
     for name in sorted(set(prev) - set(curr)):
         print(f"{name}: present in baseline but not in this run")
-    return warned
+    return warned, failed
 
 
 def main(argv):
     args = list(argv[1:])
     baseline_path = None
     merged_path = None
+    allowlist_path = None
+    mode = "advisory"
+    fail_threshold = DEFAULT_FAIL_THRESHOLD
     while args and args[0].startswith("--"):
         flag = args.pop(0)
         if flag == "--baseline" and args:
             baseline_path = args.pop(0)
         elif flag == "--write-merged" and args:
             merged_path = args.pop(0)
+        elif flag == "--allowlist" and args:
+            allowlist_path = args.pop(0)
+        elif flag == "--mode" and args:
+            mode = args.pop(0)
+            if mode not in ("advisory", "gate"):
+                print(f"unknown --mode '{mode}' (advisory|gate)")
+                return 2
+        elif flag == "--fail-threshold" and args:
+            try:
+                fail_threshold = float(args.pop(0))
+            except ValueError:
+                print("--fail-threshold must be a ratio like 0.35")
+                return 2
+        elif flag == "--assert-measured" and args:
+            return assert_measured(args.pop(0))
         else:
             print(__doc__)
             return 2
@@ -119,29 +227,42 @@ def main(argv):
 
     baseline = load(baseline_path) if baseline_path else {}
     prev, curr = load(args[0]), load(args[1])
+    allow = load_allowlist(allowlist_path)
 
     # The reference is the previous run when one exists, else the
-    # committed seed baseline.
+    # committed seed baseline — and the fallback is loud, because a
+    # silently skipped comparison looks exactly like a pass.
     reference = prev if prev else baseline
     if prev:
         print(f"comparing against previous run ({args[0]})")
     elif baseline:
         print(
-            "note: no previous bench-json artifact (first run on this "
-            f"branch?) — comparing against committed baseline "
-            f"({baseline_path})"
+            f"::notice title=bench baseline::no previous-run bench-json "
+            f"artifact (first run on this branch, or a forked PR "
+            f"without artifact access) — comparing against the "
+            f"committed baseline ({baseline_path})"
+        )
+    elif mode == "gate":
+        print(
+            "::warning title=bench gate skipped::no previous-run "
+            "artifact and no committed baseline — nothing to gate "
+            "against"
         )
 
-    warned = 0
+    warned = failed = 0
     if not curr:
         print("note: no current bench record — nothing to compare")
     elif not reference:
         print("note: no baseline at all — skipping delta")
     else:
-        warned = compare(reference, curr)
-        if warned:
+        warned, failed = compare(reference, curr, mode, fail_threshold,
+                                 allow)
+        if failed:
+            print(f"{failed} elapsed metric(s) regressed > "
+                  f"{fail_threshold:.0%} — failing the gate")
+        elif warned:
             print(f"{warned} elapsed metric(s) regressed > "
-                  f"{REGRESSION_THRESHOLD:.0%} (advisory only)")
+                  f"{WARN_THRESHOLD:.0%} (advisory)")
         else:
             print("no elapsed regression above threshold")
 
@@ -157,7 +278,7 @@ def main(argv):
             for name in sorted(merged):
                 f.write(json.dumps(merged[name]) + "\n")
         print(f"merged {len(merged)} record(s) -> {merged_path}")
-    return 0
+    return 1 if (mode == "gate" and failed) else 0
 
 
 if __name__ == "__main__":

@@ -2,8 +2,9 @@
 //!   1. simulator event throughput (engine),
 //!   2. TALP JSON parse throughput (report ingest): tree vs streaming,
 //!   3. full report generation over a large history corpus,
-//!   4. the store hot paths: cold 5k-run shard load and a warm
-//!      `report --store` over the 500-run corpus,
+//!   4. the store hot paths: a warm `report --store` over the 500-run
+//!      corpus, the cold 5k-run shard load, and the indexed last-200
+//!      query against its full-scan control,
 //!   5. trace post-processing throughput (merge + dimemas replay).
 //!
 //! Targets: report of a 1k-run corpus < 1 s; simulator >= 1M events/s;
@@ -260,6 +261,49 @@ fn main() {
         ("cold_load_s", Json::Num(m_load.min_s)),
     ]);
     println!("BENCH_JSON {}", record.to_string_compact());
+
+    // 4c. Indexed query vs the full-scan control at the same scale —
+    //     the index contract: decode only the selected tail, return
+    //     byte-identical records.  (The CI store-scale job times the
+    //     same pair through the CLI at 50k runs; this pins the
+    //     correctness half at test scale.)
+    {
+        let s = RunStore::open(&big_root).unwrap();
+        assert!(s.refresh_indexes().unwrap() > 0, "sidecars must write");
+    }
+    let spec = talp_pages::store::QuerySpec {
+        experiment: Some("exp3/runs".into()),
+        last: Some(200),
+        ..Default::default()
+    };
+    let m_query = bench("store: indexed last-200 query (5k)", 1, 5, || {
+        let out = RunStore::query(&big_root, 0, &spec).unwrap();
+        assert_eq!(out.records.len(), 200);
+        assert_eq!(
+            out.stats.decoded_lines, 200,
+            "an indexed query decodes only what it returns"
+        );
+        std::hint::black_box(out.records.len());
+    });
+    println!("{}", m_query.report());
+    let indexed = RunStore::query(&big_root, 0, &spec).unwrap();
+    let control = RunStore::query_full_scan(&big_root, 0, &spec).unwrap();
+    assert_eq!(control.stats.decoded_lines, 5000, "the control is linear");
+    let indexed_text: String =
+        indexed.records.iter().map(|r| r.to_line() + "\n").collect();
+    let control_text: String =
+        control.records.iter().map(|r| r.to_line() + "\n").collect();
+    assert_eq!(
+        indexed_text, control_text,
+        "indexed and full-scan results must be byte-identical"
+    );
+    println!(
+        "  -> indexed {:.1}x the full scan ({} vs {} lines decoded)",
+        control.stats.decoded_lines as f64
+            / indexed.stats.decoded_lines.max(1) as f64,
+        indexed.stats.decoded_lines,
+        control.stats.decoded_lines
+    );
 
     // 5. Trace post-processing throughput.
     let ttd = TempDir::new("perf-trace").unwrap();

@@ -27,9 +27,10 @@
 //! referential analysis nothing else does: policy rules or allow
 //! entries whose `(experiment, config, region)` patterns match nothing
 //! in the scanned corpus (TP040/TP041), manifest↔shard drift and
-//! duplicate records (TP014/TP015/TP016), equal effective timestamps
-//! inside one history (TP050), and NaN/negative metric values
-//! (TP051/TP052).
+//! duplicate records (TP014/TP015/TP016), index sidecars out of sync
+//! with their shard and shards past the compaction threshold
+//! (TP017/TP018), equal effective timestamps inside one history
+//! (TP050), and NaN/negative metric values (TP051/TP052).
 //!
 //! The scanner and store loaders share this module's [`Diagnostic`]
 //! type for their skip-warnings, so `report.json` warnings carry codes
@@ -299,6 +300,8 @@ pub fn describe(code: &str) -> &'static str {
         "TP014" => "unexpected or misnamed file in store shards",
         "TP015" => "duplicate store record for one (source, hash)",
         "TP016" => "identical content stored under several source paths",
+        "TP017" => "store index sidecar out of sync with its shard",
+        "TP018" => "shard dead-byte ratio above the compaction threshold",
         "TP020" => "metrics cache version skew (will cold-start)",
         "TP021" => "metrics cache invalid (will cold-start)",
         "TP030" => "report schema_version not understood by this build",
@@ -500,9 +503,9 @@ mod tests {
     fn every_emitted_code_is_described() {
         for code in [
             "TP001", "TP002", "TP003", "TP010", "TP011", "TP012",
-            "TP013", "TP014", "TP015", "TP016", "TP020", "TP021",
-            "TP030", "TP031", "TP040", "TP041", "TP050", "TP051",
-            "TP052", "TP060",
+            "TP013", "TP014", "TP015", "TP016", "TP017", "TP018",
+            "TP020", "TP021", "TP030", "TP031", "TP040", "TP041",
+            "TP050", "TP051", "TP052", "TP060",
         ] {
             assert_ne!(describe(code), "unknown diagnostic code", "{code}");
         }

@@ -9,27 +9,40 @@
 //! `check` exists precisely to make that tolerated damage visible.
 //! Benign-but-notable facts (identical content stored twice) are info.
 
-use std::collections::{BTreeMap, BTreeSet, HashSet};
-use std::path::Path;
+use std::collections::{BTreeMap, BTreeSet, HashMap, HashSet};
+use std::path::{Path, PathBuf};
 
 use crate::gate::policy::{pat_match, GatePolicy};
 use crate::pages::scanner::MetricScan;
 use crate::pop::RegionMetrics;
 use crate::session::ReportDocument;
 use crate::store::{
-    trim_line, StoredRun, MANIFEST_FILE_NAME, SHARDS_DIR, STORE_VERSION,
+    trim_line, ShardIndex, StoredRun, COMPACT_DEAD_RATIO,
+    MANIFEST_FILE_NAME, SHARDS_DIR, STORE_VERSION,
 };
 use crate::util::json::{error_offset, Json};
 use crate::util::text::slug;
 
 use super::{CheckReport, Diagnostic, Span};
 
+/// One decoded shard line's location and identity — what the sidecar
+/// validation (TP017) and dead-ratio accounting (TP018) run on.
+struct LineInfo {
+    offset: usize,
+    len: usize,
+    hash: String,
+    source: String,
+}
+
 /// Validate a run store's manifest and every shard file: manifest
 /// presence/shape/version (TP010/TP011, errors — the loader refuses
 /// these too), corrupt records (TP012, *errors* here even though the
 /// loader merely skips them), stray or drifted files in `shards/`
-/// (TP014), duplicate `(source, hash)` records (TP015) and identical
-/// content stored under several paths (TP016, info).
+/// (TP014), duplicate `(source, hash)` records (TP015), identical
+/// content stored under several paths (TP016, info), index sidecars
+/// out of sync with their shard (TP017 — queries degrade to the
+/// sequential scan) and shards past the compaction threshold (TP018,
+/// info with a fix-it).
 pub fn check_store(root: &Path, rep: &mut CheckReport) {
     let manifest = root.join(MANIFEST_FILE_NAME);
     let manifest_disp = manifest.display().to_string();
@@ -93,10 +106,19 @@ pub fn check_store(root: &Path, rep: &mut CheckReport) {
     entries.sort();
     let mut seen: HashSet<(String, String)> = HashSet::new();
     let mut by_hash: BTreeMap<String, BTreeSet<String>> = BTreeMap::new();
+    let mut sidecars: Vec<PathBuf> = Vec::new();
+    let mut shard_lines: BTreeMap<PathBuf, Vec<LineInfo>> = BTreeMap::new();
+    let mut shard_sizes: BTreeMap<PathBuf, u64> = BTreeMap::new();
     for path in entries {
         let disp = path.display().to_string();
         if path.extension().and_then(|e| e.to_str()) != Some("jsonl") {
             if path.is_dir() {
+                continue;
+            }
+            // Index sidecars are expected residents; they get their
+            // own validation pass (TP017) below.
+            if path.extension().and_then(|e| e.to_str()) == Some("idx") {
+                sidecars.push(path);
                 continue;
             }
             rep.push(
@@ -129,6 +151,8 @@ pub fn check_store(root: &Path, rep: &mut CheckReport) {
                 continue;
             }
         };
+        shard_sizes.insert(path.clone(), bytes.len() as u64);
+        let lines = shard_lines.entry(path.clone()).or_default();
         let mut misnamed_reported = false;
         let mut lineno = 0usize;
         let mut offset = 0usize;
@@ -209,6 +233,12 @@ pub fn check_store(root: &Path, rep: &mut CheckReport) {
                 .entry(rec.hash.clone())
                 .or_default()
                 .insert(rec.run.source.clone());
+            lines.push(LineInfo {
+                offset: line_start + lead,
+                len: line.len(),
+                hash: rec.hash.clone(),
+                source: rec.run.source.clone(),
+            });
         }
     }
     for (hash, sources) in &by_hash {
@@ -227,6 +257,175 @@ pub fn check_store(root: &Path, rep: &mut CheckReport) {
             ));
         }
     }
+
+    // Liveness replay (the loader's admit rules: duplicates drop,
+    // same-source-new-hash supersedes) so the index and dead-byte
+    // passes below know which lines a query would actually serve.
+    let mut live: BTreeMap<PathBuf, BTreeSet<usize>> = BTreeMap::new();
+    {
+        let mut keys: HashSet<(String, String)> = HashSet::new();
+        let mut owner: HashMap<String, (PathBuf, usize, String)> =
+            HashMap::new();
+        for (path, lines) in &shard_lines {
+            for l in lines {
+                if !keys.insert((l.source.clone(), l.hash.clone())) {
+                    continue;
+                }
+                if let Some((old_path, old_off, old_hash)) = owner.insert(
+                    l.source.clone(),
+                    (path.clone(), l.offset, l.hash.clone()),
+                ) {
+                    keys.remove(&(l.source.clone(), old_hash));
+                    if let Some(offs) = live.get_mut(&old_path) {
+                        offs.remove(&old_off);
+                    }
+                }
+                live.entry(path.clone()).or_default().insert(l.offset);
+            }
+        }
+    }
+
+    // TP017: existing sidecars that disagree with their shard.  A
+    // missing sidecar is not a finding (the loader rebuilds on
+    // demand); a wrong one degrades every query of that shard to the
+    // sequential scan, which is exactly the slow path the index
+    // exists to avoid.  First problem per sidecar.
+    for sc in &sidecars {
+        let shard = sc.with_extension("");
+        let problem: Option<String> = if !shard.exists() {
+            Some(
+                "orphan sidecar — its companion shard does not exist"
+                    .to_string(),
+            )
+        } else if let Some(lines) = shard_lines.get(&shard) {
+            match ShardIndex::load(&shard) {
+                Err(e) => Some(format!(
+                    "unparsable ({e:#}) — queries fall back to the \
+                     sequential scan"
+                )),
+                Ok(None) => None,
+                Ok(Some(idx)) => {
+                    let actual =
+                        shard_sizes.get(&shard).copied().unwrap_or(0);
+                    if idx.shard_bytes != actual {
+                        Some(format!(
+                            "stale: shard is {actual} bytes but the index \
+                             was built from {} — queries fall back to the \
+                             sequential scan",
+                            idx.shard_bytes
+                        ))
+                    } else {
+                        index_skew(&idx, lines, live.get(&shard))
+                    }
+                }
+            }
+        } else {
+            // Unreadable shard: TP013 already reported it; nothing to
+            // validate the sidecar against.
+            None
+        };
+        if let Some(msg) = problem {
+            rep.push(
+                Diagnostic::warning(
+                    "TP017",
+                    sc.display().to_string(),
+                    msg,
+                )
+                .with_hint(
+                    "indexes rebuild on demand — the next `talp-pages \
+                     store query` heals this sidecar",
+                ),
+            );
+        }
+    }
+
+    // TP018: shards past the tiered-compaction threshold.  Info, not
+    // a warning — results stay correct, the store just burns bytes
+    // and decode time on lines nothing can ever serve again.
+    for (path, lines) in &shard_lines {
+        let total = shard_sizes.get(path).copied().unwrap_or(0);
+        if total == 0 {
+            continue;
+        }
+        let live_bytes: u64 = match live.get(path) {
+            Some(offs) => lines
+                .iter()
+                .filter(|l| offs.contains(&l.offset))
+                .map(|l| l.len as u64 + 1)
+                .sum(),
+            None => 0,
+        };
+        let dead = total.saturating_sub(live_bytes);
+        let ratio = dead as f64 / total as f64;
+        if ratio > COMPACT_DEAD_RATIO {
+            rep.push(
+                Diagnostic::info(
+                    "TP018",
+                    path.display().to_string(),
+                    format!(
+                        "dead-byte ratio {ratio:.2} exceeds the compaction \
+                         threshold {COMPACT_DEAD_RATIO} ({dead} of {total} \
+                         bytes are superseded, duplicate or corrupt)"
+                    ),
+                )
+                .with_hint(
+                    "`talp-pages store compact` rewrites shards past the \
+                     threshold",
+                ),
+            );
+        }
+    }
+}
+
+/// First disagreement between a fresh-looking sidecar and its shard's
+/// decoded lines: an entry pointing nowhere, a length or content-hash
+/// mismatch, or a live record the index does not cover (a query
+/// replaying these entries would silently miss it — the one skew the
+/// size-based freshness check cannot catch).
+fn index_skew(
+    idx: &ShardIndex,
+    lines: &[LineInfo],
+    live: Option<&BTreeSet<usize>>,
+) -> Option<String> {
+    let by_offset: HashMap<usize, &LineInfo> =
+        lines.iter().map(|l| (l.offset, l)).collect();
+    for (i, e) in idx.entries.iter().enumerate() {
+        let Some(l) = by_offset.get(&e.offset) else {
+            return Some(format!(
+                "entry {i} points at offset {}, which is not the start of \
+                 a record line",
+                e.offset
+            ));
+        };
+        if l.len != e.len {
+            return Some(format!(
+                "entry {i} says {} byte(s) but the line at offset {} has \
+                 {}",
+                e.len, e.offset, l.len
+            ));
+        }
+        if l.hash != e.hash {
+            return Some(format!(
+                "entry {i} carries a stale content hash ({} indexed, {} \
+                 on disk)",
+                e.hash, l.hash
+            ));
+        }
+    }
+    if let Some(live) = live {
+        let covered: HashSet<usize> =
+            idx.entries.iter().map(|e| e.offset).collect();
+        let missing =
+            live.iter().filter(|o| !covered.contains(o)).count();
+        if missing > 0 {
+            return Some(format!(
+                "count mismatch: {missing} live record(s) missing from \
+                 the {} indexed entries",
+                idx.entries.len()
+            ));
+        }
+    }
+    None
 }
 
 /// The nine per-region metric values a stored/scanned run carries,
@@ -614,7 +813,13 @@ mod tests {
         rep.sort();
         let mut found = codes(&rep);
         found.sort();
-        assert_eq!(found, ["TP012", "TP014", "TP015", "TP016"], "{rep:?}");
+        // TP018 rides along: the duplicate and the corrupt line are
+        // dead bytes, and together they always cross the threshold.
+        assert_eq!(
+            found,
+            ["TP012", "TP014", "TP015", "TP016", "TP018"],
+            "{rep:?}"
+        );
         let tp012 = rep
             .diagnostics
             .iter()
@@ -643,6 +848,100 @@ mod tests {
                 && d.message.contains("belongs in exp__2x2.jsonl")),
             "{rep:?}"
         );
+    }
+
+    #[test]
+    fn store_index_skew_and_dead_ratio_ladder() {
+        let td = TempDir::new("check-idx").unwrap();
+        let root = td.path().join("store");
+        let mut s = RunStore::create_or_open(&root).unwrap();
+        s.append("exp", "h1", run_metrics("a.json", 2, 1)).unwrap();
+        s.append("exp", "h2", run_metrics("b.json", 2, 2)).unwrap();
+        s.refresh_indexes().unwrap();
+        // Fresh, valid sidecars: perfectly clean.
+        let mut rep = CheckReport::new();
+        check_store(&root, &mut rep);
+        assert!(rep.diagnostics.is_empty(), "{rep:?}");
+
+        let shard = root.join(SHARDS_DIR).join("exp__2x2.jsonl");
+        let sidecar = crate::store::sidecar_path(&shard);
+
+        // Rung 1 — stale: the shard grew after the index was built.
+        s.append("exp", "h3", run_metrics("c.json", 2, 3)).unwrap();
+        let mut rep = CheckReport::new();
+        check_store(&root, &mut rep);
+        assert_eq!(codes(&rep), ["TP017"], "{rep:?}");
+        let d = &rep.diagnostics[0];
+        assert_eq!(d.severity, crate::check::Severity::Warning);
+        assert_eq!(d.path, sidecar.display().to_string());
+        assert!(d.message.contains("stale"), "{}", d.message);
+        s.refresh_indexes().unwrap();
+
+        // Rung 2 — same-size content skew: a hash the freshness check
+        // cannot catch, only entry validation can.
+        let text = std::fs::read_to_string(&sidecar).unwrap();
+        let swapped = text.replacen("h1", "hX", 1);
+        assert_ne!(text, swapped, "fixture must actually change");
+        std::fs::write(&sidecar, &swapped).unwrap();
+        let mut rep = CheckReport::new();
+        check_store(&root, &mut rep);
+        assert_eq!(codes(&rep), ["TP017"], "{rep:?}");
+        assert!(
+            rep.diagnostics[0].message.contains("stale content hash"),
+            "{}",
+            rep.diagnostics[0].message
+        );
+
+        // Rung 3 — mangled sidecar: structurally unparsable.
+        std::fs::write(&sidecar, "{\"index_version\": ").unwrap();
+        let mut rep = CheckReport::new();
+        check_store(&root, &mut rep);
+        assert_eq!(codes(&rep), ["TP017"], "{rep:?}");
+        assert!(
+            rep.diagnostics[0].message.contains("unparsable"),
+            "{}",
+            rep.diagnostics[0].message
+        );
+        std::fs::write(&sidecar, &text).unwrap();
+
+        // Rung 4 — orphan sidecar without a companion shard.
+        let ghost =
+            root.join(SHARDS_DIR).join("ghost__1x1.jsonl.idx");
+        std::fs::write(&ghost, "junk").unwrap();
+        let mut rep = CheckReport::new();
+        check_store(&root, &mut rep);
+        assert_eq!(codes(&rep), ["TP017"], "{rep:?}");
+        assert!(
+            rep.diagnostics[0].message.contains("orphan"),
+            "{}",
+            rep.diagnostics[0].message
+        );
+        std::fs::remove_file(&ghost).unwrap();
+
+        // Rung 5 — supersede two of five records: 0.40 dead, past the
+        // 0.25 threshold (TP018, info, with the compact fix-it).
+        s.append("exp", "h4", run_metrics("a.json", 2, 4)).unwrap();
+        s.append("exp", "h5", run_metrics("b.json", 2, 5)).unwrap();
+        s.refresh_indexes().unwrap();
+        let mut rep = CheckReport::new();
+        check_store(&root, &mut rep);
+        assert_eq!(codes(&rep), ["TP018"], "{rep:?}");
+        let d = &rep.diagnostics[0];
+        assert_eq!(d.severity, crate::check::Severity::Info);
+        assert_eq!(d.path, shard.display().to_string());
+        assert!(d.message.contains("0.40"), "{}", d.message);
+        assert!(d.message.contains("0.25"), "{}", d.message);
+        assert!(
+            d.hint.as_deref().unwrap_or_default().contains("compact"),
+            "{d:?}"
+        );
+
+        // ... and compaction clears it.
+        s.compact().unwrap();
+        s.refresh_indexes().unwrap();
+        let mut rep = CheckReport::new();
+        check_store(&root, &mut rep);
+        assert!(rep.diagnostics.is_empty(), "{rep:?}");
     }
 
     #[test]

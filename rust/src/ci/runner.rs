@@ -198,6 +198,10 @@ impl CiEngine {
             opts.jobs,
             Some(&gitmeta::to_git_meta(commit)),
         )?;
+        // Keep the sidecar indexes warm: each pipeline appends to a
+        // handful of shards, so refreshing here is O(appended) and
+        // every store query between pipelines starts indexed.
+        self.run_store.refresh_indexes()?;
 
         // ---- report stage (scan -> analyze -> emit) ----
         // The metrics cache lives at the engine root (not in the

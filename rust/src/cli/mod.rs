@@ -52,6 +52,7 @@ USAGE:
              [--format json|html|all] [--regions <r>...]
              [--region-for-badge <r>] [--jobs <n>] [--cache <file>]
              [--gate <policy.json>] [--check]      (alias: ci-report)
+             (store sources also take the `store query` filters)
   talp-pages ingest --input <dir> --store <dir> [--jobs <n>]
              [--commit <sha>] [--branch <name>] [--timestamp <iso8601>]
              [--message <m>] [--compact] [--check]
@@ -59,6 +60,17 @@ USAGE:
              [--policy <policy.json>] [--output <dir>] [--jobs <n>]
              [--cache <file>] [--check]  (exit 0 = pass/warn, 1 = fail)
   talp-pages gate-init --output <policy.json>
+  talp-pages store stats --store <dir> [--jobs <n>]
+  talp-pages store query --store <dir> [--experiment <pat>]
+             [--config <pat>] [--since-commit <sha>]
+             [--since <iso8601|unix>] [--until <iso8601|unix>]
+             [--last <n>] [--output <file.jsonl>] [--no-index]
+             [--bench-json] [--jobs <n>]
+  talp-pages store compact --store <dir> [--threshold <0..1>]
+             [--jobs <n>]
+  talp-pages store synth --store <dir> [--experiments <n>]
+             [--configs <RxT>...] [--runs-per-shard <n>] [--seed <n>]
+             [--machine <mn5|raven>]
   talp-pages check [--input <dir> | --store <dir>] [--policy <p.json>]
              [--cache <file>] [--report <file>] [--bench <file>]
              [--format text|sarif] [--sarif <file>] [--jobs <n>]
@@ -91,6 +103,7 @@ pub fn main_with_args(argv: &[String]) -> Result<i32> {
         "ingest" => ingest_cmd(&args),
         "gate" => gate_cmd(&args),
         "gate-init" => gate_init(&args),
+        "store" => store_cmd(&args),
         "check" => check_cmd(&args),
         "metadata" => metadata(&args),
         "run" => run_app(&args),
@@ -126,10 +139,41 @@ fn emitters_for(format: &str, out: &Path) -> Result<Vec<Box<dyn Emitter>>> {
     })
 }
 
+/// The query-narrowing flags shared by `store query` and the `--store`
+/// source of `report`/`gate`, parsed into a [`store::QuerySpec`].
+/// `--since`/`--until` accept ISO-8601 or a raw unix-seconds integer.
+fn query_spec_from(args: &Args) -> Result<store::QuerySpec> {
+    let parse_ts = |flag: &str| -> Result<Option<i64>> {
+        let Some(v) = args.get(flag) else { return Ok(None) };
+        timefmt::from_iso8601(v)
+            .or_else(|| v.parse::<i64>().ok())
+            .map(Some)
+            .with_context(|| {
+                format!(
+                    "--{flag} '{v}' is neither ISO-8601 (e.g. \
+                     2026-01-01T00:00:00Z) nor a unix timestamp"
+                )
+            })
+    };
+    Ok(store::QuerySpec {
+        experiment: args.get("experiment").map(str::to_string),
+        config: args.get("config").map(str::to_string),
+        since_commit: args.get("since-commit").map(str::to_string),
+        since: parse_ts("since")?,
+        until: parse_ts("until")?,
+        last: args
+            .get("last")
+            .map(|v| v.parse::<usize>())
+            .transpose()
+            .context("--last must be a run count")?,
+    })
+}
+
 /// Build the scan-stage session from the shared source flags: exactly
 /// one of `--input <dir>` (artifact folder) or `--store <dir>` (run
 /// store).  The `default_cache` (used by `report`) only applies to the
-/// folder source — a store-backed scan parses nothing to cache.
+/// folder source — a store-backed scan parses nothing to cache.  A
+/// store source additionally takes the [`query_spec_from`] filters.
 fn source_session(
     args: &Args,
     default_cache: Option<PathBuf>,
@@ -141,16 +185,32 @@ fn source_session(
         (None, None) => {
             bail!("one of --input <dir> or --store <dir> is required")
         }
-        (Some(input), None) => Session::new(PathBuf::from(input))
-            .cache_opt(args.get("cache").map(PathBuf::from).or(default_cache)),
-        (None, Some(store)) => {
+        (Some(input), None) => {
+            // The narrowing flags are store-query filters; on a folder
+            // scan they would be silently ignored, which reads exactly
+            // like a filter that matched nothing.  Refuse instead.
+            for flag in
+                ["experiment", "config", "since-commit", "since", "until", "last"]
+            {
+                if args.has(flag) {
+                    bail!("--{flag} only applies to --store sources");
+                }
+            }
+            Session::new(PathBuf::from(input)).cache_opt(
+                args.get("cache").map(PathBuf::from).or(default_cache),
+            )
+        }
+        (None, Some(store_root)) => {
             // Same strictness as the exclusivity check above: a store
             // scan parses nothing, so a user-given cache location is a
             // misunderstanding, not something to drop silently.
             if args.has("cache") {
                 bail!("--cache only applies to --input folder scans");
             }
-            Session::from_store(PathBuf::from(store))
+            Session::from_store_query(
+                PathBuf::from(store_root),
+                query_spec_from(args)?,
+            )
         }
     };
     Ok(session.jobs(args.get_jobs()?))
@@ -359,7 +419,261 @@ fn ingest_cmd(args: &Args) -> Result<i32> {
             stats.records, stats.shards, stats.removed_files
         );
     }
+    // Indexes ride along with every ingest: refresh missing/stale
+    // sidecars so the first query after an ingest is already warm.
+    // (After --compact this only touches shards compaction skipped —
+    // rewritten ones got fresh sidecars atomically.)
+    run_store.refresh_indexes()?;
     Ok(0)
+}
+
+/// `talp-pages store <stats|query|compact|synth>`: direct operations
+/// on a persistent run store — corpus shape, indexed selection,
+/// tiered compaction, and a synthetic-corpus generator for scale
+/// testing.
+fn store_cmd(args: &Args) -> Result<i32> {
+    let Some(sub) = args.positional.get(1).map(String::as_str) else {
+        bail!("store needs a subcommand (stats|query|compact|synth)\n{USAGE}");
+    };
+    match sub {
+        "stats" => store_stats_cmd(args),
+        "query" => store_query_cmd(args),
+        "compact" => store_compact_cmd(args),
+        "synth" => store_synth_cmd(args),
+        other => {
+            bail!("unknown store subcommand '{other}' (stats|query|compact|synth)")
+        }
+    }
+}
+
+/// `store stats`: corpus shape, per-shard health and index freshness.
+/// The `decoded ... line(s)` counter is the sub-linearity witness the
+/// CI `store-scale` job greps: 0 on a fully indexed store.
+fn store_stats_cmd(args: &Args) -> Result<i32> {
+    let root = PathBuf::from(args.require("store")?);
+    let st = store::RunStore::stats(&root, args.get_jobs()?)?;
+    for w in &st.warnings {
+        eprintln!("warning: {w}");
+    }
+    let s = &st.stats;
+    println!(
+        "store: {} — {} run(s) live of {} indexed line(s) across {} \
+         shard(s)",
+        root.display(),
+        s.live_runs,
+        s.indexed_lines,
+        s.shards
+    );
+    println!(
+        "decoded {} of {} indexed line(s); indexes: {} fresh, {} rebuilt",
+        s.decoded_lines, s.indexed_lines, s.indexes_fresh, s.indexes_rebuilt
+    );
+    for row in &st.shards {
+        println!(
+            "  {}: {} run(s) in {} line(s), {} B ({:.0}% dead), {} \
+             corrupt, ts {}..{}, commits {}..{}, index {}",
+            row.file,
+            row.runs,
+            row.lines,
+            row.bytes,
+            row.dead_ratio() * 100.0,
+            row.corrupt_lines,
+            row.ts_min,
+            row.ts_max,
+            short_sha(&row.commit_first),
+            short_sha(&row.commit_last),
+            row.index
+        );
+    }
+    Ok(0)
+}
+
+/// `store query`: matching runs as JSON lines (stdout or `--output`),
+/// selection summary on stderr.  `--no-index` runs the sequential
+/// full-scan control instead — same results, linear cost.
+fn store_query_cmd(args: &Args) -> Result<i32> {
+    let root = PathBuf::from(args.require("store")?);
+    let spec = query_spec_from(args)?;
+    let jobs = args.get_jobs()?;
+    let t0 = std::time::Instant::now();
+    let outcome = if args.has("no-index") {
+        store::RunStore::query_full_scan(&root, jobs, &spec)?
+    } else {
+        store::RunStore::query(&root, jobs, &spec)?
+    };
+    let elapsed_s = t0.elapsed().as_secs_f64();
+    for w in &outcome.warnings {
+        eprintln!("warning: {w}");
+    }
+    let mut text = String::new();
+    for rec in &outcome.records {
+        text.push_str(&rec.to_line());
+        text.push('\n');
+    }
+    match args.get("output") {
+        Some(f) => {
+            let p = PathBuf::from(f);
+            if let Some(parent) = p.parent() {
+                std::fs::create_dir_all(parent)?;
+            }
+            std::fs::write(&p, &text)?;
+            eprintln!("wrote {}", p.display());
+        }
+        None => print!("{text}"),
+    }
+    let s = &outcome.stats;
+    eprintln!(
+        "query: {} run(s) matched of {} live from {} shard(s); decoded \
+         {} of {} indexed line(s); indexes: {} fresh, {} rebuilt",
+        s.matched_runs,
+        s.live_runs,
+        s.shards,
+        s.decoded_lines,
+        s.indexed_lines,
+        s.indexes_fresh,
+        s.indexes_rebuilt
+    );
+    if args.has("bench-json") {
+        // Machine-readable record for the CI store-scale job — the
+        // same shape `benches/perf_hotpaths.rs` emits.
+        let name = if args.has("no-index") {
+            "store_query_full_scan"
+        } else {
+            "store_query_indexed"
+        };
+        let record = crate::util::json::Json::from_pairs(vec![
+            ("bench", crate::util::json::Json::Str(name.into())),
+            (
+                "live_runs",
+                crate::util::json::Json::Num(s.live_runs as f64),
+            ),
+            (
+                "matched_runs",
+                crate::util::json::Json::Num(s.matched_runs as f64),
+            ),
+            (
+                "decoded_lines",
+                crate::util::json::Json::Num(s.decoded_lines as f64),
+            ),
+            ("elapsed_s", crate::util::json::Json::Num(elapsed_s)),
+        ]);
+        println!("BENCH_JSON {}", record.to_string_compact());
+    }
+    Ok(0)
+}
+
+/// `store compact`: tiered compaction — rewrite only shards whose
+/// dead-byte ratio crosses `--threshold` (default
+/// [`store::COMPACT_DEAD_RATIO`]); `--threshold 0` rewrites every
+/// shard with any dead byte.
+fn store_compact_cmd(args: &Args) -> Result<i32> {
+    let root = PathBuf::from(args.require("store")?);
+    let threshold: f64 = args
+        .get("threshold")
+        .map(|v| v.parse())
+        .transpose()
+        .context("--threshold must be a number (dead-byte ratio, 0..1)")?
+        .unwrap_or(store::COMPACT_DEAD_RATIO);
+    if !(0.0..=1.0).contains(&threshold) {
+        bail!("--threshold must be within 0..1 (got {threshold})");
+    }
+    let mut run_store =
+        store::RunStore::open_with_jobs(&root, args.get_jobs()?)?;
+    for w in run_store.warnings() {
+        eprintln!("warning: {w}");
+    }
+    let stats = run_store.compact_with(threshold)?;
+    run_store.refresh_indexes()?;
+    println!(
+        "compacted: {} record(s) across {} shard(s), {} stale file(s) \
+         removed (threshold {:.0}% dead)",
+        stats.records,
+        stats.shards,
+        stats.removed_files,
+        threshold * 100.0
+    );
+    Ok(0)
+}
+
+/// `store synth`: append a synthetic history corpus — one simulated
+/// run per config, fanned out across experiments, commits and
+/// timestamps.  Real `RunMetrics` payloads at an arbitrary scale,
+/// which is what the CI `store-scale` job uses to prove queries stay
+/// sub-linear at >= 50k stored runs.
+fn store_synth_cmd(args: &Args) -> Result<i32> {
+    let root = PathBuf::from(args.require("store")?);
+    let experiments = args.get_u64("experiments", 4)? as usize;
+    let runs_per_shard = args.get_u64("runs-per-shard", 100)? as usize;
+    let seed = args.get_u64("seed", 7)?;
+    let machine = parse_machine(args)?;
+    let configs: Vec<ResourceConfig> = {
+        let labels = args.get_all("configs");
+        if labels.is_empty() {
+            vec![ResourceConfig::new(2, 8)]
+        } else {
+            labels
+                .iter()
+                .map(|l| {
+                    ResourceConfig::parse_label(l)
+                        .with_context(|| format!("bad config '{l}'"))
+                })
+                .collect::<Result<Vec<_>>>()?
+        }
+    };
+    let mut run_store = store::RunStore::create_or_open(&root)?;
+    let mut batch =
+        Vec::with_capacity(experiments * configs.len() * runs_per_shard);
+    for (cfg_i, cfg) in configs.iter().enumerate() {
+        // One real simulated run per config; the fan-out only varies
+        // the metadata (timestamp, commit, source), which is all a
+        // store-scale test observes.
+        let mut app = apps::Genex::salpha(1, apps::CodeVersion::fixed());
+        app.timesteps = 2;
+        let (base, _) =
+            apps::run_with_talp(&app, &machine, cfg, seed + cfg_i as u64, 0);
+        for exp in 0..experiments {
+            for i in 0..runs_per_shard {
+                let mut d = base.clone();
+                d.timestamp = 1_700_000_000 + i as i64 * 60;
+                d.git = Some(crate::talp::GitMeta {
+                    commit: format!("{exp:02x}{i:06x}{cfg_i:02x}cccccc"),
+                    branch: "main".into(),
+                    commit_timestamp: d.timestamp,
+                    message: String::new(),
+                });
+                let source =
+                    format!("exp{exp:02}/{}/run_{i}.json", cfg.label());
+                let run = pop::RunMetrics::from_run(&d, &source);
+                batch.push((
+                    format!("exp{exp:02}"),
+                    format!("{exp:04x}{cfg_i:02x}{i:08x}"),
+                    run,
+                ));
+            }
+        }
+    }
+    let appended = run_store.append_all(batch)?;
+    let indexed = run_store.refresh_indexes()?;
+    println!(
+        "synth: {} run(s) appended ({} experiment(s) x {} config(s) x \
+         {} run(s)), {} sidecar(s) written -> {}",
+        appended,
+        experiments,
+        configs.len(),
+        runs_per_shard,
+        indexed,
+        root.display()
+    );
+    Ok(0)
+}
+
+/// First 8 chars of a sha for table rows ("-" when absent).
+fn short_sha(sha: &str) -> &str {
+    if sha.is_empty() {
+        "-"
+    } else {
+        &sha[..sha.len().min(8)]
+    }
 }
 
 /// `talp-pages gate`: evaluate a regression-gate policy over a Fig. 2
@@ -1041,6 +1355,167 @@ mod tests {
             out.display()
         ))
         .is_err());
+    }
+
+    #[test]
+    fn store_subcommands_cycle() {
+        let td = TempDir::new("cli-store-sub").unwrap();
+        let input = td.path().join("talp");
+        for i in 0..3 {
+            assert_eq!(
+                run_cli(&format!(
+                    "run --app genex --machine mn5 --config 2x4 \
+                     --timesteps 2 --seed {} --output {}",
+                    50 + i,
+                    input.join(format!("exp/run_{i}.json")).display()
+                ))
+                .unwrap(),
+                0
+            );
+        }
+        let store = td.path().join("store");
+        assert_eq!(
+            run_cli(&format!(
+                "ingest --input {} --store {}",
+                input.display(),
+                store.display()
+            ))
+            .unwrap(),
+            0
+        );
+        // ingest refreshed the sidecars, so stats decodes nothing and
+        // both query paths are available.
+        assert_eq!(
+            run_cli(&format!("store stats --store {}", store.display()))
+                .unwrap(),
+            0
+        );
+        // Indexed query vs the full-scan control: byte-identical.
+        let qi = td.path().join("indexed.jsonl");
+        let qf = td.path().join("full.jsonl");
+        assert_eq!(
+            run_cli(&format!(
+                "store query --store {} --last 2 --output {}",
+                store.display(),
+                qi.display()
+            ))
+            .unwrap(),
+            0
+        );
+        assert_eq!(
+            run_cli(&format!(
+                "store query --store {} --last 2 --no-index --output {}",
+                store.display(),
+                qf.display()
+            ))
+            .unwrap(),
+            0
+        );
+        let indexed = std::fs::read_to_string(&qi).unwrap();
+        let full = std::fs::read_to_string(&qf).unwrap();
+        assert_eq!(indexed, full, "indexed and full-scan must agree");
+        assert_eq!(indexed.lines().count(), 2);
+        // ... and across worker counts.
+        let q1 = td.path().join("jobs1.jsonl");
+        assert_eq!(
+            run_cli(&format!(
+                "store query --store {} --last 2 --jobs 1 --output {}",
+                store.display(),
+                q1.display()
+            ))
+            .unwrap(),
+            0
+        );
+        assert_eq!(std::fs::read_to_string(&q1).unwrap(), indexed);
+        // The same filters narrow a store-backed report.
+        let site = td.path().join("site");
+        assert_eq!(
+            run_cli(&format!(
+                "report --store {} --output {} --format json --last 1",
+                store.display(),
+                site.display()
+            ))
+            .unwrap(),
+            0
+        );
+        let doc = crate::session::ReportDocument::parse(
+            &std::fs::read_to_string(site.join("report.json")).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(doc.experiments.len(), 1);
+        // On a folder scan the filters are refused, not ignored.
+        let err = run_cli(&format!(
+            "report --input {} --output {} --last 1",
+            input.display(),
+            td.path().join("x").display()
+        ))
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("--store"), "{err}");
+        // Tiered compaction runs (nothing above threshold here).
+        assert_eq!(
+            run_cli(&format!(
+                "store compact --store {}",
+                store.display()
+            ))
+            .unwrap(),
+            0
+        );
+        // Synthetic corpus: 2 experiments x 2 configs x 3 runs.
+        let s2 = td.path().join("s2");
+        assert_eq!(
+            run_cli(&format!(
+                "store synth --store {} --experiments 2 --configs 2x4 \
+                 4x4 --runs-per-shard 3",
+                s2.display()
+            ))
+            .unwrap(),
+            0
+        );
+        let qs = td.path().join("synth.jsonl");
+        assert_eq!(
+            run_cli(&format!(
+                "store query --store {} --experiment exp01 --last 1 \
+                 --output {}",
+                s2.display(),
+                qs.display()
+            ))
+            .unwrap(),
+            0
+        );
+        assert_eq!(
+            std::fs::read_to_string(&qs).unwrap().lines().count(),
+            2,
+            "one newest run per config of exp01"
+        );
+        // Bad inputs stay clear errors.
+        assert!(run_cli("store").is_err());
+        assert!(run_cli(&format!(
+            "store frobnicate --store {}",
+            s2.display()
+        ))
+        .is_err());
+        let err = run_cli(&format!(
+            "store query --store {} --last nope",
+            s2.display()
+        ))
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("--last"), "{err}");
+        let err = run_cli(&format!(
+            "store query --store {} --since not-a-time",
+            s2.display()
+        ))
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("--since"), "{err}");
+        let err = run_cli(&format!(
+            "store compact --store {} --threshold 7",
+            s2.display()
+        ))
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("0..1"), "{err}");
     }
 
     #[test]

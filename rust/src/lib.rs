@@ -100,16 +100,25 @@
 //! # The run store (cross-commit history)
 //!
 //! The cache accelerates one output directory; the [`store`] is the
-//! durable record.  Its on-disk layout (version 1):
+//! durable record.  Its on-disk layout (version 2):
 //!
 //! ```text
 //! <store root>/
-//!   .talp-store.json                 # manifest: {"version": 1} — strict:
-//!                                    #   unknown versions are rejected
+//!   .talp-store.json                 # manifest: {"version": 2, "shards": […]}
+//!                                    #   version is strict: unknown or
+//!                                    #   older versions are rejected with
+//!                                    #   a clear re-ingest message; the
+//!                                    #   per-shard summary array is
+//!                                    #   advisory (damage tolerated)
 //!   shards/
 //!     <experiment-slug>__<RxT>.jsonl # one shard per (experiment, config);
 //!                                    #   each line is one record:
 //!                                    #   {"hash", "experiment", "run"}
+//!     <…>.jsonl.idx                  # byte-offset index sidecar: header
+//!                                    #   {"index_version", "shard_bytes",
+//!                                    #   "corrupt_lines"} + one selection-
+//!                                    #   metadata line per record; rebuilt
+//!                                    #   on demand when missing or stale
 //! ```
 //!
 //! A record's identity is its (source path, content hash) pair —
@@ -121,12 +130,19 @@
 //! same path supersedes (latest per path wins, matching the current
 //! folder); vanished files stay stored.  Shard loading
 //! is corruption-tolerant (a truncated append becomes a warning, not a
-//! lost store) and [`store::RunStore::compact`] rewrites the shards to
-//! drop corrupt lines and duplicates.  A store-backed session
+//! lost store) and [`store::RunStore::compact`] rewrites shards past
+//! the dead-byte threshold ([`store::COMPACT_DEAD_RATIO`]), dropping
+//! corrupt, duplicate and superseded lines.  A store-backed session
 //! ([`session::Session::from_store`], CLI `report --store` /
 //! `gate --store`) runs analyze + emit over thousands of stored runs
 //! without opening a single artifact, and its `report.json` is
 //! byte-identical to a direct scan over the same runs.
+//! [`store::RunStore::query`] (CLI `store query`, and the same filter
+//! flags on `report --store`/`gate --store`) uses the sidecars to
+//! seek-decode only matching lines — sub-linear in store size, with
+//! the sequential scan as the validated fallback so a bad index can
+//! cost time, never correctness; `store stats` reports corpus shape,
+//! per-shard health and index freshness.
 //!
 //! # Streaming vs tree JSON
 //!

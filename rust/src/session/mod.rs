@@ -59,7 +59,7 @@ use anyhow::Result;
 
 use crate::pages::scanner::{self, MetricExperiment, MetricScan};
 use crate::pages::MetricsCache;
-use crate::store::RunStore;
+use crate::store::{QuerySpec, RunStore};
 
 pub use analysis::{
     Analysis, AnalyzeOptions, BadgeDatum, ConfigSeries, ExperimentAnalysis,
@@ -80,15 +80,20 @@ pub enum ScanSource {
     /// cache (the classic path).
     Dir(PathBuf),
     /// Load reduced runs from a persistent [`crate::store::RunStore`]
-    /// — no artifact is read or parsed at all.
-    Store(PathBuf),
+    /// — no artifact is read or parsed at all.  The [`QuerySpec`]
+    /// narrows which runs load: the default (match-all) spec reads the
+    /// whole store through the classic loader, anything narrower goes
+    /// through [`RunStore::query`] and its index sidecars, decoding
+    /// only the matching lines.
+    Store(PathBuf, QuerySpec),
 }
 
 impl ScanSource {
     /// The path this source reads (scan root or store root).
     pub fn path(&self) -> &Path {
         match self {
-            ScanSource::Dir(p) | ScanSource::Store(p) => p,
+            ScanSource::Dir(p) => p,
+            ScanSource::Store(p, _) => p,
         }
     }
 }
@@ -113,7 +118,21 @@ impl Session {
     /// unchanged, but the scan stage parses nothing (the metrics cache
     /// is irrelevant and ignored for this source).
     pub fn from_store(root: impl Into<PathBuf>) -> Session {
-        Session::from_source(ScanSource::Store(root.into()))
+        Session::from_source(ScanSource::Store(
+            root.into(),
+            QuerySpec::default(),
+        ))
+    }
+
+    /// A session over a *subset* of a persistent run store: only the
+    /// runs matching `spec` are loaded (through the store's index
+    /// sidecars when they are usable) — `report --store --last 200`
+    /// stays O(answer), not O(history).
+    pub fn from_store_query(
+        root: impl Into<PathBuf>,
+        spec: QuerySpec,
+    ) -> Session {
+        Session::from_source(ScanSource::Store(root.into(), spec))
     }
 
     /// A session over any [`ScanSource`].
@@ -168,10 +187,22 @@ impl Session {
                 }
                 (root.clone(), scan)
             }
-            ScanSource::Store(root) => (
-                root.clone(),
-                RunStore::open_with_jobs(root, self.jobs)?.into_scan(),
-            ),
+            ScanSource::Store(root, spec) => {
+                let scan = if spec.is_match_all() {
+                    // Whole-store reads keep the classic loader (and
+                    // its per-line corruption warnings with spans).
+                    RunStore::open_with_jobs(root, self.jobs)?
+                        .into_scan()
+                } else {
+                    let outcome =
+                        RunStore::query(root, self.jobs, spec)?;
+                    crate::store::records_into_scan(
+                        outcome.records,
+                        outcome.warnings,
+                    )
+                };
+                (root.clone(), scan)
+            }
         };
         Ok(Scan { root, jobs: self.jobs, scan })
     }
@@ -330,5 +361,49 @@ mod tests {
                 rb.region("Global").unwrap().metrics
             );
         }
+    }
+
+    #[test]
+    fn store_query_scan_narrows_to_matching_runs() {
+        let td = TempDir::new("session-query-in").unwrap();
+        build_input(&td);
+        let sd = TempDir::new("session-query-db").unwrap();
+        let store_root = sd.path().join("store");
+        let mut store =
+            crate::store::RunStore::create_or_open(&store_root).unwrap();
+        crate::store::ingest_dir(&mut store, td.path(), 0, None).unwrap();
+        drop(store);
+
+        let spec = QuerySpec { last: Some(2), ..Default::default() };
+        let narrowed = Session::from_store_query(&store_root, spec)
+            .scan()
+            .unwrap();
+        assert_eq!(narrowed.experiments().len(), 1);
+        let hist = narrowed.experiments()[0].history_for_config("2x8");
+        assert_eq!(hist.len(), 2, "only the last 2 runs load");
+        // The narrowed runs are the tail of the full history, same
+        // bytes.
+        let full = Session::from_store(&store_root).scan().unwrap();
+        let tail = full.experiments()[0].history_for_config("2x8");
+        assert_eq!(hist[0].source, tail[tail.len() - 2].source);
+        assert_eq!(hist[1].source, tail[tail.len() - 1].source);
+
+        // A spec no stored run satisfies is an error only when it is
+        // unanswerable (unknown commit), empty results otherwise.
+        let spec = QuerySpec {
+            experiment: Some("no-such-experiment".into()),
+            ..Default::default()
+        };
+        let empty = Session::from_store_query(&store_root, spec)
+            .scan()
+            .unwrap();
+        assert!(empty.experiments().is_empty());
+        let spec = QuerySpec {
+            since_commit: Some("ffffffff".into()),
+            ..Default::default()
+        };
+        assert!(Session::from_store_query(&store_root, spec)
+            .scan()
+            .is_err());
     }
 }

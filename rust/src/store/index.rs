@@ -1,0 +1,421 @@
+//! Per-shard byte-offset index sidecars — the accelerator that makes
+//! [`super::RunStore::query`] sub-linear in store size.
+//!
+//! Every shard `<name>.jsonl` may carry a sidecar `<name>.jsonl.idx`
+//! describing where each record line starts, how long it is, and the
+//! selection metadata a query filters on (hash, experiment, config,
+//! source, effective timestamp, commit) — everything needed to decide
+//! *which* lines to decode without decoding any of them.  The sidecar
+//! is JSONL like the shard itself: a header line
+//!
+//! ```json
+//! {"index_version":1,"shard_bytes":12345,"corrupt_lines":0}
+//! ```
+//!
+//! followed by one line per indexed record:
+//!
+//! ```json
+//! {"off":0,"len":931,"hash":"…","experiment":"…","config":"2x2",
+//!  "source":"exp/run_0.json","ts":1700000000,"commit":"…"}
+//! ```
+//!
+//! Contract (the tentpole rule): the index is an accelerator, **never
+//! a second source of truth**.  `shard_bytes` pins the exact shard
+//! size the index was built from — any append invalidates it wholesale
+//! ([`ShardIndex::is_fresh_for`]) — and every decoded record is
+//! re-validated against its entry (hash/source/experiment) by the
+//! query engine, which degrades to the sequential
+//! [`super::StoredRun::from_line`] scan of the whole shard on any
+//! mismatch.  A corrupt or stale sidecar therefore costs a warning and
+//! a rebuild, never a wrong result.  Writes are atomic
+//! (temp-file + rename), same as shard compaction.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{Event, JsonReader, JsonWriter};
+
+use super::trim_line;
+
+/// Sidecar format version; bump on any shape change.  Unlike the store
+/// manifest this is *not* strict: an unknown index version is treated
+/// as a stale index (rebuild), because the shard itself is the truth.
+pub const INDEX_VERSION: u64 = 1;
+
+/// Sidecar file for a shard: the shard path with a literal `.idx`
+/// appended (`exp__2x2.jsonl` → `exp__2x2.jsonl.idx`).  The extra
+/// extension keeps sidecars out of [`super::RunStore`]'s `.jsonl`
+/// shard enumeration.
+pub fn sidecar_path(shard: &Path) -> PathBuf {
+    let mut os = shard.as_os_str().to_os_string();
+    os.push(".idx");
+    PathBuf::from(os)
+}
+
+/// One indexed record line: where it lives in the shard plus the
+/// metadata a [`super::QuerySpec`] selects on.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IndexEntry {
+    /// Byte offset of the trimmed record line inside the shard.
+    pub offset: usize,
+    /// Trimmed line length in bytes (what `from_line` decodes).
+    pub len: usize,
+    pub hash: String,
+    pub experiment: String,
+    /// Resource-configuration label (`<ranks>x<threads>`).
+    pub config: String,
+    pub source: String,
+    /// Effective timestamp (commit timestamp when stamped, run
+    /// timestamp otherwise) — what history ordering uses.
+    pub ts: i64,
+    /// Commit sha, empty when the run carries no git metadata.
+    pub commit: String,
+}
+
+/// A whole sidecar: the shard size it was built from, how many lines
+/// the builder could not decode, and one entry per decoded record.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ShardIndex {
+    /// Exact shard file size the index describes; any other size means
+    /// the index is stale.
+    pub shard_bytes: u64,
+    /// Undecodable lines the builder skipped (mirrors the loader's
+    /// TP012 tolerance, so a healed-by-rebuild index is honest about
+    /// damage).
+    pub corrupt_lines: u64,
+    pub entries: Vec<IndexEntry>,
+}
+
+impl ShardIndex {
+    /// Is this index fresh for the shard on disk right now?  Freshness
+    /// is exact-size equality: appends grow the shard, compaction
+    /// rewrites it, and both invalidate every recorded offset.
+    pub fn is_fresh_for(&self, shard: &Path) -> bool {
+        std::fs::metadata(shard)
+            .map(|m| m.len() == self.shard_bytes)
+            .unwrap_or(false)
+    }
+
+    /// Render the sidecar as JSONL (header line + one line per entry).
+    pub fn render(&self) -> String {
+        let mut w = JsonWriter::with_capacity(
+            64 + self.entries.len() * 192,
+            false,
+        );
+        w.begin_obj();
+        w.key("index_version");
+        w.num(INDEX_VERSION as f64);
+        w.key("shard_bytes");
+        w.num(self.shard_bytes as f64);
+        w.key("corrupt_lines");
+        w.num(self.corrupt_lines as f64);
+        w.end_obj();
+        w.newline();
+        for e in &self.entries {
+            w.begin_obj();
+            w.key("off");
+            w.num(e.offset as f64);
+            w.key("len");
+            w.num(e.len as f64);
+            w.key("hash");
+            w.str_val(&e.hash);
+            w.key("experiment");
+            w.str_val(&e.experiment);
+            w.key("config");
+            w.str_val(&e.config);
+            w.key("source");
+            w.str_val(&e.source);
+            w.key("ts");
+            w.num(e.ts as f64);
+            w.key("commit");
+            w.str_val(&e.commit);
+            w.end_obj();
+            w.newline();
+        }
+        w.into_string()
+    }
+
+    /// Parse a sidecar.  Every structural problem is a hard `Err` —
+    /// the caller treats a broken sidecar as "no usable index" and
+    /// rebuilds; tolerating damage here would defeat the validation.
+    pub fn parse(bytes: &[u8]) -> Result<ShardIndex> {
+        let mut lines =
+            bytes.split(|&b| b == b'\n').map(trim_line).filter(|l| {
+                !l.is_empty()
+            });
+        let header =
+            lines.next().context("index sidecar is empty")?;
+        let (version, shard_bytes, corrupt_lines) = parse_header(header)
+            .context("corrupt index header")?;
+        if version != INDEX_VERSION {
+            bail!(
+                "index version {version}; this build understands only \
+                 version {INDEX_VERSION}"
+            );
+        }
+        let mut idx = ShardIndex {
+            shard_bytes,
+            corrupt_lines,
+            entries: Vec::new(),
+        };
+        let mut lineno = 1usize;
+        for line in lines {
+            lineno += 1;
+            let e = parse_entry(line).with_context(|| {
+                format!("corrupt index entry at line {lineno}")
+            })?;
+            if let Some(prev) = idx.entries.last() {
+                if e.offset <= prev.offset {
+                    bail!(
+                        "index entry at line {lineno} is out of order \
+                         (offset {} after {})",
+                        e.offset,
+                        prev.offset
+                    );
+                }
+            }
+            if (e.offset + e.len) as u64 > shard_bytes {
+                bail!(
+                    "index entry at line {lineno} points past the end \
+                     of the shard ({}+{} > {shard_bytes})",
+                    e.offset,
+                    e.len
+                );
+            }
+            idx.entries.push(e);
+        }
+        Ok(idx)
+    }
+
+    /// Load the sidecar for `shard`.  `Ok(None)` means "no sidecar"
+    /// (an ordinary un-indexed shard); `Err` means the sidecar exists
+    /// but is unusable (the caller warns and rebuilds).
+    pub fn load(shard: &Path) -> Result<Option<ShardIndex>> {
+        let path = sidecar_path(shard);
+        let bytes = match std::fs::read(&path) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return Ok(None)
+            }
+            Err(e) => {
+                bail!("unreadable index {}: {e}", path.display())
+            }
+        };
+        ShardIndex::parse(&bytes)
+            .map(Some)
+            .with_context(|| format!("index {}", path.display()))
+    }
+
+    /// Write the sidecar atomically (temp-file + rename), so a killed
+    /// writer can never leave a truncated index that would *parse* but
+    /// lie about the shard.
+    pub fn write_atomic(&self, shard: &Path) -> Result<()> {
+        let path = sidecar_path(shard);
+        let mut tmp = path.as_os_str().to_os_string();
+        tmp.push(".tmp");
+        let tmp = PathBuf::from(tmp);
+        std::fs::write(&tmp, self.render())
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, &path).with_context(|| {
+            format!("replacing index {}", path.display())
+        })
+    }
+}
+
+/// Decode the header line: `(index_version, shard_bytes,
+/// corrupt_lines)`.
+fn parse_header(line: &[u8]) -> Result<(u64, u64, u64)> {
+    let mut r = JsonReader::new(line);
+    match r.next()? {
+        Event::ObjStart => {}
+        _ => bail!("header is not an object"),
+    }
+    let mut version: Option<u64> = None;
+    let mut shard_bytes: Option<u64> = None;
+    let mut corrupt_lines: Option<u64> = None;
+    loop {
+        match r.next()? {
+            Event::ObjEnd => break,
+            Event::Key(k) => match k.as_ref() {
+                "index_version" => version = r.u64_opt()?,
+                "shard_bytes" => shard_bytes = r.u64_opt()?,
+                "corrupt_lines" => corrupt_lines = r.u64_opt()?,
+                _ => r.skip_value()?,
+            },
+            _ => unreachable!("object events"),
+        }
+    }
+    r.finish()?;
+    Ok((
+        version.context("header without index_version")?,
+        shard_bytes.context("header without shard_bytes")?,
+        corrupt_lines.unwrap_or(0),
+    ))
+}
+
+/// Decode one entry line.
+fn parse_entry(line: &[u8]) -> Result<IndexEntry> {
+    let mut r = JsonReader::new(line);
+    match r.next()? {
+        Event::ObjStart => {}
+        _ => bail!("entry is not an object"),
+    }
+    let mut off: Option<u64> = None;
+    let mut len: Option<u64> = None;
+    let mut hash: Option<String> = None;
+    let mut experiment: Option<String> = None;
+    let mut config: Option<String> = None;
+    let mut source: Option<String> = None;
+    let mut ts: Option<i64> = None;
+    let mut commit: Option<String> = None;
+    loop {
+        match r.next()? {
+            Event::ObjEnd => break,
+            Event::Key(k) => match k.as_ref() {
+                "off" => off = r.u64_opt()?,
+                "len" => len = r.u64_opt()?,
+                "hash" => hash = r.str_opt()?.map(|s| s.into_owned()),
+                "experiment" => {
+                    experiment = r.str_opt()?.map(|s| s.into_owned())
+                }
+                "config" => {
+                    config = r.str_opt()?.map(|s| s.into_owned())
+                }
+                "source" => {
+                    source = r.str_opt()?.map(|s| s.into_owned())
+                }
+                "ts" => ts = r.f64_opt()?.map(|n| n as i64),
+                "commit" => {
+                    commit = r.str_opt()?.map(|s| s.into_owned())
+                }
+                _ => r.skip_value()?,
+            },
+            _ => unreachable!("object events"),
+        }
+    }
+    r.finish()?;
+    Ok(IndexEntry {
+        offset: off.context("entry without off")? as usize,
+        len: len.context("entry without len")? as usize,
+        hash: hash.context("entry without hash")?,
+        experiment: experiment.context("entry without experiment")?,
+        config: config.context("entry without config")?,
+        source: source.context("entry without source")?,
+        ts: ts.context("entry without ts")?,
+        commit: commit.unwrap_or_default(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::fs::TempDir;
+
+    fn entry(off: usize, src: &str) -> IndexEntry {
+        IndexEntry {
+            offset: off,
+            len: 10,
+            hash: format!("h{off}"),
+            experiment: "exp/α".into(),
+            config: "2x2".into(),
+            source: src.into(),
+            ts: 1_700_000_000 + off as i64,
+            commit: format!("c{off:07x}"),
+        }
+    }
+
+    #[test]
+    fn render_parse_roundtrip() {
+        let idx = ShardIndex {
+            shard_bytes: 1000,
+            corrupt_lines: 2,
+            entries: vec![entry(0, "a.json"), entry(500, "b.json")],
+        };
+        let back = ShardIndex::parse(idx.render().as_bytes()).unwrap();
+        assert_eq!(back, idx);
+    }
+
+    #[test]
+    fn sidecar_path_keeps_full_shard_name() {
+        assert_eq!(
+            sidecar_path(Path::new("shards/exp__2x2.jsonl")),
+            Path::new("shards/exp__2x2.jsonl.idx")
+        );
+    }
+
+    #[test]
+    fn structural_damage_is_a_hard_error() {
+        // Empty, bad header, future version.
+        assert!(ShardIndex::parse(b"").is_err());
+        assert!(ShardIndex::parse(b"[1,2]\n").is_err());
+        let future = "{\"index_version\":9,\"shard_bytes\":10}\n";
+        let err =
+            ShardIndex::parse(future.as_bytes()).unwrap_err().to_string();
+        assert!(err.contains("index version 9"), "{err}");
+
+        // Out-of-order and out-of-bounds entries.
+        let base = ShardIndex {
+            shard_bytes: 100,
+            corrupt_lines: 0,
+            entries: vec![entry(50, "a.json"), entry(0, "b.json")],
+        };
+        let err =
+            ShardIndex::parse(base.render().as_bytes()).unwrap_err();
+        assert!(format!("{err:#}").contains("out of order"), "{err:#}");
+        let oob = ShardIndex {
+            shard_bytes: 40,
+            corrupt_lines: 0,
+            entries: vec![entry(35, "a.json")],
+        };
+        let err = ShardIndex::parse(oob.render().as_bytes()).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("past the end"),
+            "{err:#}"
+        );
+
+        // A truncated entry line.
+        let mut text = ShardIndex {
+            shard_bytes: 100,
+            corrupt_lines: 0,
+            entries: vec![entry(0, "a.json")],
+        }
+        .render();
+        text.push_str("{\"off\":20,\"len\":");
+        let err = ShardIndex::parse(text.as_bytes()).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("line 3"),
+            "{err:#}"
+        );
+    }
+
+    #[test]
+    fn load_distinguishes_missing_from_corrupt() {
+        let td = TempDir::new("idx-load").unwrap();
+        let shard = td.path().join("exp__2x2.jsonl");
+        std::fs::write(&shard, "x".repeat(30)).unwrap();
+        assert!(ShardIndex::load(&shard).unwrap().is_none(), "no sidecar");
+
+        let idx = ShardIndex {
+            shard_bytes: 30,
+            corrupt_lines: 0,
+            entries: vec![entry(0, "a.json")],
+        };
+        idx.write_atomic(&shard).unwrap();
+        let back = ShardIndex::load(&shard).unwrap().expect("sidecar");
+        assert_eq!(back, idx);
+        assert!(back.is_fresh_for(&shard));
+
+        // Growing the shard makes the index stale, not corrupt.
+        std::fs::write(&shard, "x".repeat(40)).unwrap();
+        assert!(!ShardIndex::load(&shard)
+            .unwrap()
+            .unwrap()
+            .is_fresh_for(&shard));
+
+        // Corrupting the sidecar is an error, not a silent None.
+        std::fs::write(sidecar_path(&shard), "{\"index_version\": ")
+            .unwrap();
+        assert!(ShardIndex::load(&shard).is_err());
+    }
+}

@@ -1,0 +1,789 @@
+//! Indexed queries over a [`super::RunStore`] — select and decode
+//! only the lines a question needs.
+//!
+//! [`super::RunStore::open_with_jobs`] decodes every line of every
+//! shard ever written; for "the last 200 runs of experiment X" on a
+//! 50k-run corpus that is 50k decodes to use 200.  This module answers
+//! the same questions from the per-shard sidecar indexes
+//! ([`super::index`]): it loads the (small) entry tables, replays the
+//! loader's exact supersede/duplicate resolution *over the entries*,
+//! applies the [`QuerySpec`] filters, and seeks-and-decodes only the
+//! selected lines.
+//!
+//! Correctness contract (the tentpole rule): the corruption-tolerant
+//! [`super::StoredRun::from_line`] decoder stays the single read path,
+//! and the index is never trusted blindly —
+//!
+//! * a missing, stale or unparsable sidecar is rebuilt from a full
+//!   sequential decode of its shard (a warning when it was corrupt,
+//!   silently when merely missing/stale);
+//! * every record decoded through an index entry is validated against
+//!   the entry (hash, source, experiment, config, timestamp); any
+//!   mismatch distrusts that shard's index entirely, re-decodes the
+//!   shard sequentially, heals the sidecar and re-runs the selection —
+//!   a bad index entry costs time and a warning, never a wrong result.
+//!
+//! [`query_full_scan`] is the control: the same [`QuerySpec`] applied
+//! in memory to a fully loaded store.  Both paths share one selection
+//! function over one metadata shape, so their results are identical by
+//! construction — the property the `store_query` acceptance tests and
+//! the CI `store-scale` job pin.
+
+use std::collections::{BTreeMap, HashMap, HashSet};
+use std::io::{Read as _, Seek as _, SeekFrom};
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::check::Diagnostic;
+use crate::gate::policy::pat_match;
+use crate::util::par::parallel_map;
+
+use super::index::{IndexEntry, ShardIndex};
+use super::{decode_shard, shard_files_at, RunStore, StoredRun};
+
+/// What to select: every field is optional and they compose with AND.
+/// The default spec matches everything.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct QuerySpec {
+    /// Experiment-id pattern (exact, `*`, or trailing-`*` prefix —
+    /// the gate policy's matcher).
+    pub experiment: Option<String>,
+    /// Resource-configuration pattern (`2x8`, `4x*`, ...).
+    pub config: Option<String>,
+    /// Keep runs at or after the newest stored run whose commit sha
+    /// starts with this prefix (errors when no stored commit matches).
+    pub since_commit: Option<String>,
+    /// Keep runs with effective timestamp >= this (unix seconds).
+    pub since: Option<i64>,
+    /// Keep runs with effective timestamp <= this (unix seconds).
+    pub until: Option<i64>,
+    /// Keep only the last N runs of each matched (experiment, config)
+    /// history, in (timestamp, source) order — "the recent window".
+    pub last: Option<usize>,
+}
+
+impl QuerySpec {
+    /// Does this spec select every stored run?  (The session layer
+    /// routes match-all store scans through the classic full loader,
+    /// preserving its per-line corruption warnings.)
+    pub fn is_match_all(&self) -> bool {
+        *self == QuerySpec::default()
+    }
+}
+
+/// Work and coverage counters for one query — the observability the
+/// `store stats`/`store query` CLI and the CI `store-scale` job print.
+#[derive(Debug, Default, Clone, PartialEq)]
+pub struct QueryStats {
+    /// Shard files considered.
+    pub shards: usize,
+    /// Index entries loaded across all shards.
+    pub indexed_lines: usize,
+    /// Live runs after supersede/duplicate replay.
+    pub live_runs: usize,
+    /// Runs matching the spec.
+    pub matched_runs: usize,
+    /// `from_line` decode attempts — THE sub-linearity witness: with
+    /// fresh indexes this equals `matched_runs`, not the store size.
+    pub decoded_lines: usize,
+    /// Shards whose sidecar was fresh (seek-decode path).
+    pub indexes_fresh: usize,
+    /// Shards decoded sequentially (sidecar missing/stale/corrupt or
+    /// distrusted after a validation failure).
+    pub indexes_rebuilt: usize,
+}
+
+/// A query's result: matching records in deterministic
+/// (experiment, effective timestamp, source) order, plus stats and
+/// structured warnings.
+#[derive(Debug)]
+pub struct QueryOutcome {
+    pub records: Vec<StoredRun>,
+    pub stats: QueryStats,
+    pub warnings: Vec<Diagnostic>,
+}
+
+/// The per-record metadata the selection runs on.  Both the indexed
+/// path (from [`IndexEntry`]) and the full-scan control (from decoded
+/// [`StoredRun`]s) reduce to this shape, so one [`select`] serves
+/// both and they cannot diverge.
+struct RecordMeta {
+    experiment: String,
+    config: String,
+    source: String,
+    commit: String,
+    ts: i64,
+}
+
+impl RecordMeta {
+    fn of_entry(e: &IndexEntry) -> RecordMeta {
+        RecordMeta {
+            experiment: e.experiment.clone(),
+            config: e.config.clone(),
+            source: e.source.clone(),
+            commit: e.commit.clone(),
+            ts: e.ts,
+        }
+    }
+
+    fn of_record(r: &StoredRun) -> RecordMeta {
+        RecordMeta {
+            experiment: r.experiment.clone(),
+            config: r.run.resources().label(),
+            source: r.run.source.clone(),
+            commit: r
+                .run
+                .git
+                .as_ref()
+                .map(|g| g.commit.clone())
+                .unwrap_or_default(),
+            ts: r.run.effective_timestamp(),
+        }
+    }
+}
+
+/// Apply `spec` to `metas`; returns the selected indices (order
+/// preserved).  Errors only for an unanswerable spec (`since_commit`
+/// naming a commit the store has never seen).
+fn select(metas: &[RecordMeta], spec: &QuerySpec) -> Result<Vec<usize>> {
+    let mut idx: Vec<usize> = (0..metas.len()).collect();
+    if let Some(pat) = &spec.experiment {
+        idx.retain(|&i| pat_match(pat, &metas[i].experiment));
+    }
+    if let Some(pat) = &spec.config {
+        idx.retain(|&i| pat_match(pat, &metas[i].config));
+    }
+    if let Some(prefix) = &spec.since_commit {
+        // The anchor is the *newest* stored run of that commit (a
+        // commit can be re-run); searched across the whole live set so
+        // an experiment filter can't silently unanchor it.
+        let anchor = metas
+            .iter()
+            .filter(|m| {
+                !m.commit.is_empty() && m.commit.starts_with(prefix.as_str())
+            })
+            .map(|m| m.ts)
+            .max()
+            .with_context(|| {
+                format!(
+                    "no stored run's commit starts with '{prefix}' — \
+                     cannot anchor --since-commit"
+                )
+            })?;
+        idx.retain(|&i| metas[i].ts >= anchor);
+    }
+    if let Some(s) = spec.since {
+        idx.retain(|&i| metas[i].ts >= s);
+    }
+    if let Some(u) = spec.until {
+        idx.retain(|&i| metas[i].ts <= u);
+    }
+    if let Some(n) = spec.last {
+        // Last N per (experiment, config) history in the exact order
+        // histories are plotted: (timestamp, source).
+        let mut groups: BTreeMap<(&str, &str), Vec<usize>> =
+            BTreeMap::new();
+        for &i in &idx {
+            groups
+                .entry((
+                    metas[i].experiment.as_str(),
+                    metas[i].config.as_str(),
+                ))
+                .or_default()
+                .push(i);
+        }
+        let mut keep: HashSet<usize> = HashSet::new();
+        for (_, mut g) in groups {
+            g.sort_by(|&a, &b| {
+                metas[a]
+                    .ts
+                    .cmp(&metas[b].ts)
+                    .then_with(|| metas[a].source.cmp(&metas[b].source))
+            });
+            keep.extend(g.iter().rev().take(n));
+        }
+        idx.retain(|i| keep.contains(i));
+    }
+    Ok(idx)
+}
+
+/// One shard's entry table for the query replay: either a fresh
+/// sidecar (records decoded lazily, by seek) or a full sequential
+/// decode (records already in memory).
+struct ShardTable {
+    path: PathBuf,
+    entries: Vec<IndexEntry>,
+    /// Parallel to `entries` when the shard was sequentially decoded.
+    records: Option<Vec<StoredRun>>,
+    fresh: bool,
+    /// `from_line` attempts spent building this table (0 when fresh).
+    decoded: usize,
+    /// Shard file size the table describes (from the index header when
+    /// fresh, from the decode pass otherwise).
+    bytes: u64,
+    corrupt_lines: u64,
+    warnings: Vec<Diagnostic>,
+}
+
+/// Sequentially decode `path` and build its table, healing the
+/// sidecar on disk (best-effort — a read-only store must still
+/// query).
+fn rebuild_table(path: &Path, mut warnings: Vec<Diagnostic>) -> ShardTable {
+    let dec = decode_shard(path);
+    let entries: Vec<IndexEntry> = dec
+        .records
+        .iter()
+        .map(|(rec, offset, len)| entry_of(rec, *offset, *len))
+        .collect();
+    let idx = ShardIndex {
+        shard_bytes: dec.bytes,
+        corrupt_lines: dec.corrupt_lines,
+        entries: entries.clone(),
+    };
+    let _ = idx.write_atomic(path);
+    if dec.corrupt_lines > 0 {
+        warnings.push(corrupt_lines_warning(path, dec.corrupt_lines));
+    }
+    warnings.extend(
+        dec.warnings.into_iter().filter(|d| d.code == "TP013"),
+    );
+    ShardTable {
+        path: path.to_path_buf(),
+        entries,
+        decoded: dec.records.len(),
+        records: Some(dec.records.into_iter().map(|(r, _, _)| r).collect()),
+        fresh: false,
+        bytes: dec.bytes,
+        corrupt_lines: dec.corrupt_lines,
+        warnings,
+    }
+}
+
+/// Build one index entry from a decoded record and its line location.
+pub(super) fn entry_of(
+    rec: &StoredRun,
+    offset: usize,
+    len: usize,
+) -> IndexEntry {
+    IndexEntry {
+        offset,
+        len,
+        hash: rec.hash.clone(),
+        experiment: rec.experiment.clone(),
+        config: rec.run.resources().label(),
+        source: rec.run.source.clone(),
+        ts: rec.run.effective_timestamp(),
+        commit: rec
+            .run
+            .git
+            .as_ref()
+            .map(|g| g.commit.clone())
+            .unwrap_or_default(),
+    }
+}
+
+/// The deterministic per-shard corruption summary both the fresh and
+/// the rebuilt path emit (from the index header vs the decode pass),
+/// so query warnings do not depend on index temperature.
+fn corrupt_lines_warning(path: &Path, n: u64) -> Diagnostic {
+    Diagnostic::warning(
+        "TP012",
+        path.display().to_string(),
+        format!("shard has {n} corrupt line(s), skipped"),
+    )
+    .with_hint("`talp-pages ingest --compact` rewrites damaged shards")
+}
+
+/// A sidecar truncated at an entry-line boundary still parses, and its
+/// header still matches the shard size — catch it by coverage: with no
+/// corrupt lines recorded, the last entry must reach the shard's final
+/// newline.  Short coverage demotes the sidecar to stale (silent
+/// rebuild) rather than letting it silently hide tail records.
+fn covers_shard(idx: &ShardIndex) -> bool {
+    if idx.corrupt_lines > 0 {
+        // Corrupt tail lines legitimately shorten coverage; the
+        // per-record validation still guards every decode.
+        return true;
+    }
+    let covered = idx
+        .entries
+        .last()
+        .map(|e| (e.offset + e.len) as u64)
+        .unwrap_or(0);
+    idx.shard_bytes <= covered + 1
+}
+
+fn load_table(path: &Path) -> ShardTable {
+    match ShardIndex::load(path) {
+        Ok(Some(idx))
+            if idx.is_fresh_for(path) && covers_shard(&idx) =>
+        {
+            let mut warnings = Vec::new();
+            if idx.corrupt_lines > 0 {
+                warnings
+                    .push(corrupt_lines_warning(path, idx.corrupt_lines));
+            }
+            ShardTable {
+                path: path.to_path_buf(),
+                bytes: idx.shard_bytes,
+                corrupt_lines: idx.corrupt_lines,
+                entries: idx.entries,
+                records: None,
+                fresh: true,
+                decoded: 0,
+                warnings,
+            }
+        }
+        // Missing or merely stale: the ordinary post-append state —
+        // rebuild silently.
+        Ok(_) => rebuild_table(path, Vec::new()),
+        // Corrupt sidecar: degrade loudly, then rebuild.
+        Err(e) => rebuild_table(
+            path,
+            vec![Diagnostic::warning(
+                "TP017",
+                super::index::sidecar_path(path).display().to_string(),
+                format!("unusable index sidecar ({e:#}) — rebuilt from \
+                         the shard"),
+            )],
+        ),
+    }
+}
+
+/// Where one live run lives: `(table index, entry index)`.
+#[derive(Clone, Copy)]
+struct LiveRef {
+    t: usize,
+    e: usize,
+}
+
+/// Replay the loader's admit rules over the entry tables (sorted shard
+/// order, line order within each shard): duplicate `(source, hash)`
+/// identities drop (first wins), same-source-different-hash supersedes
+/// in place — exactly [`RunStore::open_with_jobs`]'s resolution, so a
+/// query and a full load agree on which runs are live.
+fn replay_live(tables: &[ShardTable]) -> Vec<LiveRef> {
+    let mut keys: HashSet<(String, String)> = HashSet::new();
+    let mut by_source: HashMap<String, usize> = HashMap::new();
+    let mut live: Vec<LiveRef> = Vec::new();
+    for t in 0..tables.len() {
+        for e in 0..tables[t].entries.len() {
+            let entry = &tables[t].entries[e];
+            if !keys
+                .insert((entry.source.clone(), entry.hash.clone()))
+            {
+                continue;
+            }
+            match by_source.entry(entry.source.clone()) {
+                std::collections::hash_map::Entry::Occupied(slot) => {
+                    let i = *slot.get();
+                    let old = &tables[live[i].t].entries[live[i].e];
+                    keys.remove(&(old.source.clone(), old.hash.clone()));
+                    live[i] = LiveRef { t, e };
+                }
+                std::collections::hash_map::Entry::Vacant(slot) => {
+                    slot.insert(live.len());
+                    live.push(LiveRef { t, e });
+                }
+            }
+        }
+    }
+    live
+}
+
+/// Seek to one indexed line and decode it.
+fn decode_at(path: &Path, entry: &IndexEntry) -> Result<StoredRun> {
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("opening shard {}", path.display()))?;
+    f.seek(SeekFrom::Start(entry.offset as u64))?;
+    let mut buf = vec![0u8; entry.len];
+    f.read_exact(&mut buf).with_context(|| {
+        format!(
+            "reading {} byte(s) at offset {} of {}",
+            entry.len,
+            entry.offset,
+            path.display()
+        )
+    })?;
+    StoredRun::from_line(&buf)
+}
+
+/// Does a decoded record agree with the index entry that located it?
+fn matches_entry(rec: &StoredRun, entry: &IndexEntry) -> bool {
+    rec.hash == entry.hash
+        && rec.run.source == entry.source
+        && rec.experiment == entry.experiment
+        && rec.run.resources().label() == entry.config
+        && rec.run.effective_timestamp() == entry.ts
+}
+
+/// Run `spec` against the store at `root` through the sidecar indexes
+/// (see module docs for the degradation contract).
+pub(super) fn query(
+    root: &Path,
+    jobs: usize,
+    spec: &QuerySpec,
+) -> Result<QueryOutcome> {
+    super::validate_manifest(root)?;
+    let shards = shard_files_at(root);
+    let mut tables: Vec<ShardTable> =
+        parallel_map(&shards, jobs, |p| load_table(p));
+
+    let mut stats = QueryStats {
+        shards: tables.len(),
+        ..Default::default()
+    };
+    let mut extra_warnings: Vec<Diagnostic> = Vec::new();
+
+    // Selection loop: a validation failure distrusts one shard's
+    // index, rebuilds its table and restarts — each shard can be
+    // distrusted at most once, so this terminates.
+    let records = loop {
+        let live = replay_live(&tables);
+        let metas: Vec<RecordMeta> = live
+            .iter()
+            .map(|l| RecordMeta::of_entry(&tables[l.t].entries[l.e]))
+            .collect();
+        let selected = select(&metas, spec)?;
+        stats.live_runs = live.len();
+        stats.matched_runs = selected.len();
+
+        let mut out: Vec<StoredRun> = Vec::with_capacity(selected.len());
+        let mut distrust: Option<usize> = None;
+        for &i in &selected {
+            let LiveRef { t, e } = live[i];
+            let entry = &tables[t].entries[e];
+            let rec = match &tables[t].records {
+                Some(records) => records[e].clone(),
+                None => {
+                    stats.decoded_lines += 1;
+                    match decode_at(&tables[t].path, entry) {
+                        Ok(rec) if matches_entry(&rec, entry) => rec,
+                        Ok(_) => {
+                            distrust = Some(t);
+                            break;
+                        }
+                        Err(_) => {
+                            distrust = Some(t);
+                            break;
+                        }
+                    }
+                }
+            };
+            out.push(rec);
+        }
+        let Some(t) = distrust else { break out };
+        extra_warnings.push(Diagnostic::warning(
+            "TP017",
+            super::index::sidecar_path(&tables[t].path)
+                .display()
+                .to_string(),
+            "index entry does not match its shard line — falling back \
+             to the sequential scan of this shard"
+                .to_string(),
+        ));
+        let path = tables[t].path.clone();
+        tables[t] = rebuild_table(&path, Vec::new());
+    };
+
+    for table in &tables {
+        stats.indexed_lines += table.entries.len();
+        stats.decoded_lines += table.decoded;
+        if table.fresh {
+            stats.indexes_fresh += 1;
+        } else {
+            stats.indexes_rebuilt += 1;
+        }
+    }
+    let mut warnings: Vec<Diagnostic> = Vec::new();
+    for table in &mut tables {
+        warnings.append(&mut table.warnings);
+    }
+    warnings.extend(extra_warnings);
+
+    let mut records = records;
+    sort_records(&mut records);
+    Ok(QueryOutcome { records, stats, warnings })
+}
+
+/// The control path: load the whole store and apply the same spec in
+/// memory.  Byte-identical records to [`query`] by construction
+/// (shared [`select`]); linear cost (`decoded_lines` = every line in
+/// the store).
+pub(super) fn query_full_scan(
+    root: &Path,
+    jobs: usize,
+    spec: &QuerySpec,
+) -> Result<QueryOutcome> {
+    let store = RunStore::open_with_jobs(root, jobs)?;
+    let metas: Vec<RecordMeta> =
+        store.records.iter().map(RecordMeta::of_record).collect();
+    let selected = select(&metas, spec)?;
+    let stats = QueryStats {
+        shards: store.shard_meta.len(),
+        indexed_lines: 0,
+        live_runs: store.records.len(),
+        matched_runs: selected.len(),
+        decoded_lines: store.decoded_lines,
+        indexes_fresh: 0,
+        indexes_rebuilt: 0,
+    };
+    let mut records: Vec<StoredRun> = selected
+        .into_iter()
+        .map(|i| store.records[i].clone())
+        .collect();
+    sort_records(&mut records);
+    Ok(QueryOutcome {
+        records,
+        stats,
+        warnings: store.warnings.clone(),
+    })
+}
+
+/// One shard's row in [`RunStore::stats`], aggregated from its entry
+/// table — no record is decoded when the sidecar is fresh, which is
+/// what lets `store stats` report on a 50k-run corpus in index time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardStat {
+    /// Shard file name (`<experiment>__<config>.jsonl`).
+    pub file: String,
+    /// Live runs after supersede/duplicate replay.
+    pub runs: usize,
+    /// Indexed lines, live or not.
+    pub lines: usize,
+    /// Shard file size in bytes.
+    pub bytes: u64,
+    /// Bytes not owned by a live line: superseded, duplicate, corrupt.
+    pub dead_bytes: u64,
+    pub corrupt_lines: u64,
+    /// Live effective-timestamp range and the commits at its ends
+    /// (empty strings when the shard has no live runs).
+    pub ts_min: i64,
+    pub ts_max: i64,
+    pub commit_first: String,
+    pub commit_last: String,
+    /// `"fresh"` when the sidecar answered as-is; `"rebuilt"` when it
+    /// was missing, stale or corrupt (the rebuild also healed it).
+    pub index: &'static str,
+}
+
+impl ShardStat {
+    /// Fraction of the shard the next compaction would drop.
+    pub fn dead_ratio(&self) -> f64 {
+        self.dead_bytes as f64 / self.bytes.max(1) as f64
+    }
+}
+
+/// What [`RunStore::stats`] returns: per-shard rows (sorted shard
+/// order) plus the same work counters a query reports — on a fully
+/// indexed store `stats.decoded_lines` is 0, the number `store stats`
+/// prints as the sub-linearity witness.
+#[derive(Debug)]
+pub struct StoreStats {
+    pub shards: Vec<ShardStat>,
+    pub stats: QueryStats,
+    pub warnings: Vec<Diagnostic>,
+}
+
+/// Corpus-shape report from the entry tables alone (see
+/// [`StoreStats`]); rebuilds (and heals) any missing/stale/corrupt
+/// sidecar it meets along the way.
+pub(super) fn stats(root: &Path, jobs: usize) -> Result<StoreStats> {
+    super::validate_manifest(root)?;
+    let shards = shard_files_at(root);
+    let mut tables: Vec<ShardTable> =
+        parallel_map(&shards, jobs, |p| load_table(p));
+    let live = replay_live(&tables);
+
+    let mut rows: Vec<ShardStat> = tables
+        .iter()
+        .map(|t| ShardStat {
+            file: t
+                .path
+                .file_name()
+                .map(|f| f.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+            runs: 0,
+            lines: t.entries.len(),
+            bytes: t.bytes,
+            // Everything is dead until a live line claims its bytes.
+            dead_bytes: t.bytes,
+            corrupt_lines: t.corrupt_lines,
+            ts_min: 0,
+            ts_max: 0,
+            commit_first: String::new(),
+            commit_last: String::new(),
+            index: if t.fresh { "fresh" } else { "rebuilt" },
+        })
+        .collect();
+    for l in &live {
+        let e = &tables[l.t].entries[l.e];
+        let row = &mut rows[l.t];
+        if row.runs == 0 || e.ts < row.ts_min {
+            row.ts_min = e.ts;
+            row.commit_first = e.commit.clone();
+        }
+        if row.runs == 0 || e.ts >= row.ts_max {
+            row.ts_max = e.ts;
+            row.commit_last = e.commit.clone();
+        }
+        row.runs += 1;
+        // A line owns its bytes plus the newline after it.
+        row.dead_bytes = row.dead_bytes.saturating_sub(e.len as u64 + 1);
+    }
+
+    let mut stats = QueryStats {
+        shards: tables.len(),
+        live_runs: live.len(),
+        ..Default::default()
+    };
+    let mut warnings: Vec<Diagnostic> = Vec::new();
+    for table in &mut tables {
+        stats.indexed_lines += table.entries.len();
+        stats.decoded_lines += table.decoded;
+        if table.fresh {
+            stats.indexes_fresh += 1;
+        } else {
+            stats.indexes_rebuilt += 1;
+        }
+        warnings.append(&mut table.warnings);
+    }
+    Ok(StoreStats { shards: rows, stats, warnings })
+}
+
+/// Deterministic output order: experiment, then effective timestamp,
+/// then source — the exact order [`RunStore::into_scan`] produces, so
+/// query results and store scans agree line for line.
+fn sort_records(records: &mut [StoredRun]) {
+    records.sort_by(|a, b| {
+        a.experiment
+            .cmp(&b.experiment)
+            .then_with(|| {
+                a.run
+                    .effective_timestamp()
+                    .cmp(&b.run.effective_timestamp())
+            })
+            .then_with(|| a.run.source.cmp(&b.run.source))
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta(
+        exp: &str,
+        cfg: &str,
+        src: &str,
+        commit: &str,
+        ts: i64,
+    ) -> RecordMeta {
+        RecordMeta {
+            experiment: exp.into(),
+            config: cfg.into(),
+            source: src.into(),
+            commit: commit.into(),
+            ts,
+        }
+    }
+
+    fn fixture() -> Vec<RecordMeta> {
+        vec![
+            meta("exp/a", "2x2", "a/r0.json", "aaaa0000", 100),
+            meta("exp/a", "2x2", "a/r1.json", "bbbb1111", 200),
+            meta("exp/a", "2x2", "a/r2.json", "cccc2222", 300),
+            meta("exp/a", "4x2", "a/s0.json", "aaaa0000", 100),
+            meta("exp/b", "2x2", "b/r0.json", "bbbb1111", 200),
+            meta("exp/b", "2x2", "b/r1.json", "", 250),
+        ]
+    }
+
+    #[test]
+    fn match_all_is_the_default() {
+        assert!(QuerySpec::default().is_match_all());
+        let spec = QuerySpec { last: Some(5), ..Default::default() };
+        assert!(!spec.is_match_all());
+        assert_eq!(
+            select(&fixture(), &QuerySpec::default()).unwrap().len(),
+            6
+        );
+    }
+
+    #[test]
+    fn experiment_and_config_patterns() {
+        let m = fixture();
+        let spec = QuerySpec {
+            experiment: Some("exp/a".into()),
+            ..Default::default()
+        };
+        assert_eq!(select(&m, &spec).unwrap(), [0, 1, 2, 3]);
+        let spec = QuerySpec {
+            experiment: Some("exp/*".into()),
+            config: Some("4x2".into()),
+            ..Default::default()
+        };
+        assert_eq!(select(&m, &spec).unwrap(), [3]);
+        let spec = QuerySpec {
+            experiment: Some("nope*".into()),
+            ..Default::default()
+        };
+        assert!(select(&m, &spec).unwrap().is_empty());
+    }
+
+    #[test]
+    fn time_range_and_since_commit() {
+        let m = fixture();
+        let spec = QuerySpec {
+            since: Some(200),
+            until: Some(250),
+            ..Default::default()
+        };
+        assert_eq!(select(&m, &spec).unwrap(), [1, 4, 5]);
+
+        // The commit prefix anchors at its newest run's timestamp,
+        // across experiments.
+        let spec = QuerySpec {
+            since_commit: Some("bbbb".into()),
+            ..Default::default()
+        };
+        assert_eq!(select(&m, &spec).unwrap(), [1, 2, 4, 5]);
+
+        // An unknown commit is an error, not an empty result.
+        let spec = QuerySpec {
+            since_commit: Some("f00d".into()),
+            ..Default::default()
+        };
+        let err = select(&m, &spec).unwrap_err().to_string();
+        assert!(err.contains("f00d"), "{err}");
+
+        // Runs without git metadata never anchor a commit.
+        let spec = QuerySpec {
+            since_commit: Some(String::new()),
+            ..Default::default()
+        };
+        assert_eq!(
+            select(&m, &spec).unwrap(),
+            [1, 2, 4, 5],
+            "empty prefix anchors at the newest stamped run"
+        );
+    }
+
+    #[test]
+    fn last_n_is_per_config_history() {
+        let m = fixture();
+        let spec = QuerySpec { last: Some(1), ..Default::default() };
+        // One per (experiment, config): the newest of each history.
+        assert_eq!(select(&m, &spec).unwrap(), [2, 3, 5]);
+        let spec = QuerySpec { last: Some(2), ..Default::default() };
+        assert_eq!(select(&m, &spec).unwrap(), [1, 2, 3, 4, 5]);
+        // Composes with the other filters.
+        let spec = QuerySpec {
+            experiment: Some("exp/a".into()),
+            config: Some("2x2".into()),
+            last: Some(2),
+            ..Default::default()
+        };
+        assert_eq!(select(&m, &spec).unwrap(), [1, 2]);
+    }
+}

@@ -211,12 +211,31 @@ fn corruption_ladder_store_surface() {
     std::fs::write(store.join("shards/exp__2x2.jsonl.tmp"), "x").unwrap();
     assert_code(&store_opts(&store), "TP014", "stray shard file");
 
-    // TP015: one record stored twice.
+    // TP015: one record stored twice.  Growing the shard behind the
+    // store's back also leaves the CLI-written sidecar stale (TP017).
     let (_td, store) = base("ladder-tp015");
     let text = std::fs::read_to_string(shard(&store)).unwrap();
     let first = text.lines().next().unwrap().to_string();
     std::fs::write(shard(&store), format!("{text}{first}\n")).unwrap();
     assert_code(&store_opts(&store), "TP015", "duplicate record");
+    assert_code(&store_opts(&store), "TP017", "sidecar went stale");
+
+    // TP018: superseding two of three artifacts leaves the shard 2/5
+    // dead — past the 0.25 compaction threshold.
+    let (td, store) = base("ladder-tp018");
+    let talp = td.path().join("talp");
+    for i in 1..3 {
+        run(20.0 + i as f64, 5000 + i as i64 * 100, &format!("d{i:03}"))
+            .write_file(&talp.join(format!("exp/talp_2x2_run{i}.json")))
+            .unwrap();
+    }
+    run_cli(&format!(
+        "ingest --input {} --store {}",
+        talp.display(),
+        store.display()
+    ))
+    .unwrap();
+    assert_code(&store_opts(&store), "TP018", "dead bytes past threshold");
 
     // TP016: identical bytes ingested from two source paths (info —
     // exit stays 0).  The copy lives under another *experiment* so the
@@ -402,6 +421,30 @@ fn golden_report() -> CheckReport {
         "content hash 00000000deadbeef is stored under 2 source paths \
          (exp/a.json, exp/b.json) — each counts as its own history point",
     ));
+    rep.push(
+        Diagnostic::warning(
+            "TP017",
+            "store/shards/exp__2x2.jsonl.idx",
+            "stale: shard is 2208 bytes but the index was built from \
+             1296 — queries fall back to the sequential scan",
+        )
+        .with_hint(
+            "indexes rebuild on demand — the next `talp-pages store \
+             query` heals this sidecar",
+        ),
+    );
+    rep.push(
+        Diagnostic::info(
+            "TP018",
+            "store/shards/exp__2x2.jsonl",
+            "dead-byte ratio 0.41 exceeds the compaction threshold 0.25 \
+             (912 of 2208 bytes are superseded, duplicate or corrupt)",
+        )
+        .with_hint(
+            "`talp-pages store compact` rewrites shards past the \
+             threshold",
+        ),
+    );
     rep.sort();
     rep
 }

@@ -343,4 +343,57 @@ fn main() {
         "  -> {records} records = {:.2} M records/s",
         records as f64 / m.min_s / 1e6
     );
+
+    // 6. Resident serve: one-run ingest + incremental re-analysis
+    //    against the warm 5k-run corpus.  The incrementality contract
+    //    (the serve `/statsz` witness): exactly ONE of the 10
+    //    (experiment, config) histories recomputes per ingest; the 9
+    //    untouched experiments ride along by reference.
+    let mut monitor = talp_pages::serve::Monitor::open(
+        &big_root,
+        AnalyzeOptions::default(),
+        0,
+    )
+    .unwrap();
+    assert_eq!(monitor.stats().total_histories, 10);
+    let (fresh_base, _) = run_with_talp(&g, &machine, &configs[0], 7, 0);
+    let mut i = 0u32;
+    let mut last_reanalyzed = 0usize;
+    let m_serve =
+        bench("serve: one-run ingest + reanalyze (5k warm)", 1, 5, || {
+            let mut d = fresh_base.clone();
+            d.timestamp = 1_700_400_000 + i as i64 * 60;
+            d.git = Some(GitMeta {
+                commit: format!("ff{i:06x}dddddddd"),
+                branch: "main".into(),
+                commit_timestamp: d.timestamp,
+                message: String::new(),
+            });
+            let source = format!("exp0/runs/fresh_{i}.json");
+            let rm = RunMetrics::from_run(&d, &source);
+            let stored = monitor
+                .ingest_run("exp0/runs", &format!("ffff{i:08x}"), rm)
+                .unwrap();
+            assert!(stored, "each bench iteration ingests unique content");
+            let pass = monitor.refresh().unwrap().expect("dirty");
+            assert_eq!(
+                pass.reanalyzed_histories, 1,
+                "a one-run ingest must not rescan unaffected histories"
+            );
+            assert_eq!(pass.reused_experiments, 9);
+            last_reanalyzed = pass.reanalyzed_histories;
+            i += 1;
+        });
+    println!("{}", m_serve.report());
+    println!(
+        "  -> reanalyzed {last_reanalyzed} of 10 histories per ingest"
+    );
+    let record = Json::from_pairs(vec![
+        ("bench", Json::Str("serve_warm_reanalyze".into())),
+        ("stored_runs", Json::Num(5000.0)),
+        ("ingest_s", Json::Num(m_serve.min_s)),
+        ("reanalyzed_histories", Json::Num(last_reanalyzed as f64)),
+        ("total_histories", Json::Num(10.0)),
+    ]);
+    println!("BENCH_JSON {}", record.to_string_compact());
 }

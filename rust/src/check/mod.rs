@@ -302,6 +302,7 @@ pub fn describe(code: &str) -> &'static str {
         "TP016" => "identical content stored under several source paths",
         "TP017" => "store index sidecar out of sync with its shard",
         "TP018" => "shard dead-byte ratio above the compaction threshold",
+        "TP019" => "orphaned store writer lock",
         "TP020" => "metrics cache version skew (will cold-start)",
         "TP021" => "metrics cache invalid (will cold-start)",
         "TP030" => "report schema_version not understood by this build",
@@ -504,7 +505,8 @@ mod tests {
         for code in [
             "TP001", "TP002", "TP003", "TP010", "TP011", "TP012",
             "TP013", "TP014", "TP015", "TP016", "TP017", "TP018",
-            "TP020", "TP021", "TP030", "TP031", "TP040", "TP041",
+            "TP019", "TP020", "TP021", "TP030", "TP031", "TP040",
+            "TP041",
             "TP050", "TP051", "TP052", "TP060",
         ] {
             assert_ne!(describe(code), "unknown diagnostic code", "{code}");

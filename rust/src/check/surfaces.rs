@@ -17,8 +17,8 @@ use crate::pages::scanner::MetricScan;
 use crate::pop::RegionMetrics;
 use crate::session::ReportDocument;
 use crate::store::{
-    trim_line, ShardIndex, StoredRun, COMPACT_DEAD_RATIO,
-    MANIFEST_FILE_NAME, SHARDS_DIR, STORE_VERSION,
+    trim_line, LockInfo, ShardIndex, StoredRun, COMPACT_DEAD_RATIO,
+    LOCK_FILE_NAME, MANIFEST_FILE_NAME, SHARDS_DIR, STORE_VERSION,
 };
 use crate::util::json::{error_offset, Json};
 use crate::util::text::slug;
@@ -41,8 +41,9 @@ struct LineInfo {
 /// (TP014), duplicate `(source, hash)` records (TP015), identical
 /// content stored under several paths (TP016, info), index sidecars
 /// out of sync with their shard (TP017 — queries degrade to the
-/// sequential scan) and shards past the compaction threshold (TP018,
-/// info with a fix-it).
+/// sequential scan), shards past the compaction threshold (TP018,
+/// info with a fix-it) and an orphaned writer lockfile (TP019 — a
+/// *live* holder is normal operation and stays silent).
 pub fn check_store(root: &Path, rep: &mut CheckReport) {
     let manifest = root.join(MANIFEST_FILE_NAME);
     let manifest_disp = manifest.display().to_string();
@@ -95,6 +96,38 @@ pub fn check_store(root: &Path, rep: &mut CheckReport) {
             return;
         }
         Some(_) => {}
+    }
+
+    // Writer lock: a live holder (a resident `serve`, an in-flight
+    // `ingest`) is normal; an orphaned one blocks nothing (takeover
+    // handles it) but says a writer died mid-run — worth surfacing.
+    let lock_path = root.join(LOCK_FILE_NAME);
+    if let Ok(text) = std::fs::read_to_string(&lock_path) {
+        let held = LockInfo::parse(&text);
+        let alive = held
+            .map(|i| i.holder_alive(crate::util::timefmt::now_unix()))
+            .unwrap_or(false);
+        if !alive {
+            let what = match held {
+                Some(i) => format!(
+                    "orphaned writer lock (pid {} is not running)",
+                    i.pid
+                ),
+                None => "unreadable writer lock".to_string(),
+            };
+            rep.push(
+                Diagnostic::warning(
+                    "TP019",
+                    lock_path.display().to_string(),
+                    what,
+                )
+                .with_hint(
+                    "a writer crashed without releasing \
+                     `.talp-store.lock`; the next writer takes it over \
+                     automatically, or delete the file",
+                ),
+            );
+        }
     }
 
     // Shard pass: deterministic (sorted) file order, line order within
@@ -848,6 +881,53 @@ mod tests {
                 && d.message.contains("belongs in exp__2x2.jsonl")),
             "{rep:?}"
         );
+    }
+
+    #[test]
+    fn store_lock_orphaned_vs_live() {
+        let td = TempDir::new("check-lock").unwrap();
+        let root = td.path().join("store");
+        let mut s = RunStore::create_or_open(&root).unwrap();
+        s.append("exp", "h1", run_metrics("a.json", 2, 1)).unwrap();
+        s.refresh_indexes().unwrap();
+
+        // No lock: clean store, no diagnostics at all.
+        let mut rep = CheckReport::new();
+        check_store(&root, &mut rep);
+        assert!(rep.diagnostics.is_empty(), "{rep:?}");
+
+        // Dead-pid lock: TP019 (warning) naming the pid.
+        std::fs::write(
+            root.join(LOCK_FILE_NAME),
+            "{\"pid\":4000000000,\"timestamp\":1700000000}",
+        )
+        .unwrap();
+        let mut rep = CheckReport::new();
+        check_store(&root, &mut rep);
+        assert_eq!(codes(&rep), ["TP019"], "{rep:?}");
+        let d = &rep.diagnostics[0];
+        assert_eq!(d.severity, crate::check::Severity::Warning);
+        assert!(d.message.contains("4000000000"), "{}", d.message);
+
+        // Unparsable lock: also TP019 — garbage must still surface.
+        std::fs::write(root.join(LOCK_FILE_NAME), "][ not json").unwrap();
+        let mut rep = CheckReport::new();
+        check_store(&root, &mut rep);
+        assert_eq!(codes(&rep), ["TP019"], "{rep:?}");
+
+        // A live holder (our own pid) is normal operation: silent.
+        std::fs::write(
+            root.join(LOCK_FILE_NAME),
+            format!(
+                "{{\"pid\":{},\"timestamp\":{}}}",
+                std::process::id(),
+                crate::util::timefmt::now_unix()
+            ),
+        )
+        .unwrap();
+        let mut rep = CheckReport::new();
+        check_store(&root, &mut rep);
+        assert!(rep.diagnostics.is_empty(), "{rep:?}");
     }
 
     #[test]

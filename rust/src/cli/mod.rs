@@ -71,6 +71,11 @@ USAGE:
   talp-pages store synth --store <dir> [--experiments <n>]
              [--configs <RxT>...] [--runs-per-shard <n>] [--seed <n>]
              [--machine <mn5|raven>]
+  talp-pages serve --store <dir> [--addr <host:port>] [--watch <dir>]
+             [--gate <policy.json>] [--regions <r>...]
+             [--region-for-badge <r>] [--jobs <n>]
+             [--max-body-bytes <n>] [--poll-ms <n>]
+             (resident monitor; SIGTERM/SIGINT exits cleanly)
   talp-pages check [--input <dir> | --store <dir>] [--policy <p.json>]
              [--cache <file>] [--report <file>] [--bench <file>]
              [--format text|sarif] [--sarif <file>] [--jobs <n>]
@@ -104,6 +109,7 @@ pub fn main_with_args(argv: &[String]) -> Result<i32> {
         "gate" => gate_cmd(&args),
         "gate-init" => gate_init(&args),
         "store" => store_cmd(&args),
+        "serve" => serve_cmd(&args),
         "check" => check_cmd(&args),
         "metadata" => metadata(&args),
         "run" => run_app(&args),
@@ -361,6 +367,10 @@ fn ingest_cmd(args: &Args) -> Result<i32> {
             }
         }
     }
+    // Single-writer discipline: a resident `serve` (or another ingest)
+    // holds `.talp-store.lock` — refuse up front instead of
+    // interleaving shard appends with it.
+    let _lock = store::StoreLock::acquire(&store_root)?;
     let mut run_store = store::RunStore::create_or_open(&store_root)?;
     // Optional ingest-time commit stamp for artifacts that skipped the
     // `metadata` step (already-stamped runs keep their own metadata).
@@ -577,6 +587,8 @@ fn store_compact_cmd(args: &Args) -> Result<i32> {
     if !(0.0..=1.0).contains(&threshold) {
         bail!("--threshold must be within 0..1 (got {threshold})");
     }
+    // Compaction rewrites shards in place: writer lock, same as ingest.
+    let _lock = store::StoreLock::acquire(&root)?;
     let mut run_store =
         store::RunStore::open_with_jobs(&root, args.get_jobs()?)?;
     for w in run_store.warnings() {
@@ -620,6 +632,7 @@ fn store_synth_cmd(args: &Args) -> Result<i32> {
                 .collect::<Result<Vec<_>>>()?
         }
     };
+    let _lock = store::StoreLock::acquire(&root)?;
     let mut run_store = store::RunStore::create_or_open(&root)?;
     let mut batch =
         Vec::with_capacity(experiments * configs.len() * runs_per_shard);
@@ -664,6 +677,41 @@ fn store_synth_cmd(args: &Args) -> Result<i32> {
         indexed,
         root.display()
     );
+    Ok(0)
+}
+
+/// `talp-pages serve`: the resident monitoring service over a run
+/// store (see [`crate::serve`]).  Takes the store writer lock for its
+/// whole lifetime; serves until SIGTERM/SIGINT (or `POST /shutdown`),
+/// then drains, flushes a pending watch ingest and exits 0.
+fn serve_cmd(args: &Args) -> Result<i32> {
+    let mut opts = crate::serve::ServeOptions::new(PathBuf::from(
+        args.require("store")?,
+    ));
+    if let Some(addr) = args.get("addr") {
+        opts.addr = addr.to_string();
+    }
+    opts.watch = args.get("watch").map(PathBuf::from);
+    opts.jobs = args.get_jobs()?;
+    opts.max_body_bytes =
+        args.get_u64("max-body-bytes", opts.max_body_bytes as u64)? as usize;
+    opts.poll_ms = args.get_u64("poll-ms", opts.poll_ms)?;
+    // Same analysis knobs as `report`, so the served payloads are the
+    // batch payloads for the same flags.
+    opts.analyze = AnalyzeOptions {
+        regions: args
+            .get_all("regions")
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
+        region_for_badge: args.get("region-for-badge").map(str::to_string),
+        gate: args
+            .get("gate")
+            .map(|p| GatePolicy::from_file(Path::new(p)))
+            .transpose()?,
+        ..Default::default()
+    };
+    crate::serve::run(opts)?;
     Ok(0)
 }
 

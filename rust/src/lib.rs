@@ -27,6 +27,13 @@
 //!   with incremental ingest (`talp-pages ingest` parses only
 //!   artifacts whose content hash is new), corruption-tolerant
 //!   loading and compaction.
+//! * [`serve`] — the resident monitoring service (`talp-pages serve`):
+//!   a std-only HTTP/1.1 server holding a warm session over the run
+//!   store, ingesting artifacts (`POST /ingest`, `--watch` drop
+//!   directory) and re-analyzing only the affected experiment before
+//!   atomically swapping the served snapshot — whose payloads
+//!   (`/report.json`, `/gate.json`, `/badges/*.svg`, `/index.html`)
+//!   are byte-identical to the batch `report --store` output.
 //! * [`ci`] — an in-process GitLab-like CI engine (pipelines, artifact
 //!   zips, pages hosting) used to reproduce the paper's CI workflow.
 //! * [`gate`] — the regression gate: a declarative policy over the
@@ -175,6 +182,7 @@ pub mod gate;
 pub mod pages;
 pub mod pop;
 pub mod runtime;
+pub mod serve;
 pub mod session;
 pub mod sim;
 pub mod store;

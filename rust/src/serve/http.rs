@@ -1,0 +1,305 @@
+//! Minimal HTTP/1.1 over [`std::net::TcpStream`] — just enough
+//! protocol for the serve endpoints, hand-rolled because the repo's
+//! vendored-offline policy rules out dependency crates.
+//!
+//! Scope (deliberate): one request per connection (`Connection:
+//! close`), `Content-Length` bodies only (no chunked encoding), a
+//! bounded header block and a caller-chosen body cap.  Anything
+//! outside that scope is a structured 4xx [`HttpError`], never a
+//! panic, because a resident monitor's sockets face arbitrary bytes.
+
+use std::io::{Read as _, Write as _};
+use std::net::TcpStream;
+
+/// Parsed request: method, decoded path, decoded query pairs, body.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    /// Request path without the query string (undecoded — served
+    /// snapshot paths are plain ASCII file names).
+    pub path: String,
+    /// Percent-decoded `key=value` query pairs, in request order.
+    pub query: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// First value for a query key.
+    pub fn query_get(&self, key: &str) -> Option<&str> {
+        self.query
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// A request that could not be read: the status to answer with and a
+/// message for the JSON error body.
+#[derive(Debug)]
+pub struct HttpError {
+    pub status: u16,
+    pub message: String,
+}
+
+impl HttpError {
+    pub fn new(status: u16, message: impl Into<String>) -> HttpError {
+        HttpError { status, message: message.into() }
+    }
+}
+
+/// Header block cap: no legitimate client of these endpoints sends
+/// more than a few hundred bytes of headers.
+const MAX_HEADER_BYTES: usize = 16 * 1024;
+
+/// Read one request from `stream`.  `max_body` bounds the declared
+/// `Content-Length` (413 beyond it); a missing length on POST means
+/// an empty body (the server rejects empty ingests at routing level).
+pub fn read_request(
+    stream: &mut TcpStream,
+    max_body: usize,
+) -> Result<Request, HttpError> {
+    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+    let mut chunk = [0u8; 4096];
+    let header_end = loop {
+        if let Some(pos) = find_header_end(&buf) {
+            break pos;
+        }
+        if buf.len() > MAX_HEADER_BYTES {
+            return Err(HttpError::new(400, "header block too large"));
+        }
+        let n = stream
+            .read(&mut chunk)
+            .map_err(|e| HttpError::new(400, format!("read: {e}")))?;
+        if n == 0 {
+            return Err(HttpError::new(
+                400,
+                "connection closed before the header block ended",
+            ));
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    };
+
+    let head = String::from_utf8_lossy(&buf[..header_end]).into_owned();
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or_default();
+    let mut parts = request_line.split(' ');
+    let (method, target, version) = (
+        parts.next().unwrap_or_default(),
+        parts.next().unwrap_or_default(),
+        parts.next().unwrap_or_default(),
+    );
+    if method.is_empty() || target.is_empty() || !version.starts_with("HTTP/")
+    {
+        return Err(HttpError::new(
+            400,
+            format!("malformed request line '{request_line}'"),
+        ));
+    }
+    let mut content_length: usize = 0;
+    for line in lines {
+        if let Some((name, value)) = line.split_once(':') {
+            if name.trim().eq_ignore_ascii_case("content-length") {
+                content_length =
+                    value.trim().parse().map_err(|_| {
+                        HttpError::new(
+                            400,
+                            format!("bad content-length '{}'", value.trim()),
+                        )
+                    })?;
+            }
+        }
+    }
+    if content_length > max_body {
+        // Drain what the client already sent (bounded) before
+        // answering: closing with unread bytes in the socket can turn
+        // into a reset that eats the 413 response.
+        const DRAIN_CAP: usize = 1024 * 1024;
+        let mut remaining = content_length
+            .saturating_sub(buf.len() - (header_end + 4))
+            .min(DRAIN_CAP);
+        while remaining > 0 {
+            match stream.read(&mut chunk) {
+                Ok(0) | Err(_) => break,
+                Ok(n) => remaining = remaining.saturating_sub(n),
+            }
+        }
+        return Err(HttpError::new(
+            413,
+            format!("body of {content_length} B exceeds the {max_body} B cap"),
+        ));
+    }
+
+    let mut body = buf[header_end + 4..].to_vec();
+    if body.len() > content_length {
+        // Trailing bytes beyond the declared length (pipelining is
+        // out of scope) — keep exactly the declared body.
+        body.truncate(content_length);
+    }
+    while body.len() < content_length {
+        let n = stream
+            .read(&mut chunk)
+            .map_err(|e| HttpError::new(400, format!("read body: {e}")))?;
+        if n == 0 {
+            return Err(HttpError::new(
+                400,
+                format!(
+                    "connection closed {} B into a {content_length} B body",
+                    body.len()
+                ),
+            ));
+        }
+        let take = n.min(content_length - body.len());
+        body.extend_from_slice(&chunk[..take]);
+    }
+
+    let (path, query) = parse_target(target);
+    Ok(Request { method: method.to_string(), path, query, body })
+}
+
+/// Write a complete response; the connection closes after it.
+pub fn respond(
+    stream: &mut TcpStream,
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        reason(status),
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body)?;
+    stream.flush()
+}
+
+/// Canonical reason phrases for the statuses this server emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        500 => "Internal Server Error",
+        _ => "Unknown",
+    }
+}
+
+/// Content type for a served snapshot path, by extension.
+pub fn content_type_for(path: &str) -> &'static str {
+    match path.rsplit_once('.').map(|(_, ext)| ext) {
+        Some("json") => "application/json",
+        Some("svg") => "image/svg+xml",
+        Some("html") => "text/html; charset=utf-8",
+        Some("md") => "text/markdown; charset=utf-8",
+        Some("xml") => "application/xml",
+        _ => "application/octet-stream",
+    }
+}
+
+/// Split `/path?k=v&k2=v2` into the path and decoded query pairs.
+pub(crate) fn parse_target(target: &str) -> (String, Vec<(String, String)>) {
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p, q),
+        None => (target, ""),
+    };
+    let pairs = query
+        .split('&')
+        .filter(|kv| !kv.is_empty())
+        .map(|kv| match kv.split_once('=') {
+            Some((k, v)) => (percent_decode(k), percent_decode(v)),
+            None => (percent_decode(kv), String::new()),
+        })
+        .collect();
+    (path.to_string(), pairs)
+}
+
+/// Decode `%XX` escapes and `+`-as-space (query component rules).
+/// Invalid escapes pass through literally — a monitoring endpoint
+/// should answer 4xx at routing level, not lose the raw value here.
+pub(crate) fn percent_decode(s: &str) -> String {
+    let bytes = s.as_bytes();
+    let mut out = Vec::with_capacity(bytes.len());
+    let mut i = 0;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'+' => out.push(b' '),
+            b'%' if i + 2 < bytes.len() => {
+                match u8::from_str_radix(
+                    std::str::from_utf8(&bytes[i + 1..i + 3])
+                        .unwrap_or(""),
+                    16,
+                ) {
+                    Ok(b) => {
+                        out.push(b);
+                        i += 2;
+                    }
+                    Err(_) => out.push(b'%'),
+                }
+            }
+            b => out.push(b),
+        }
+        i += 1;
+    }
+    String::from_utf8_lossy(&out).into_owned()
+}
+
+/// Position of the `\r\n\r\n` header terminator.
+fn find_header_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn target_splits_path_and_decodes_query() {
+        let (path, q) = parse_target(
+            "/ingest?source=exp%2Frun.json&message=fix+the+bug&flag",
+        );
+        assert_eq!(path, "/ingest");
+        assert_eq!(
+            q,
+            [
+                ("source".to_string(), "exp/run.json".to_string()),
+                ("message".to_string(), "fix the bug".to_string()),
+                ("flag".to_string(), String::new()),
+            ]
+        );
+        let (path, q) = parse_target("/report.json");
+        assert_eq!(path, "/report.json");
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn percent_decoding_is_lossless_on_damage() {
+        assert_eq!(percent_decode("a%20b"), "a b");
+        assert_eq!(percent_decode("a+b"), "a b");
+        assert_eq!(percent_decode("100%"), "100%");
+        assert_eq!(percent_decode("%zz"), "%zz");
+    }
+
+    #[test]
+    fn content_types_cover_the_emitted_files() {
+        assert_eq!(content_type_for("report.json"), "application/json");
+        assert_eq!(content_type_for("badges/a__2x8.svg"), "image/svg+xml");
+        assert_eq!(
+            content_type_for("index.html"),
+            "text/html; charset=utf-8"
+        );
+        assert_eq!(content_type_for("gate.xml"), "application/xml");
+        assert_eq!(
+            content_type_for("no-extension"),
+            "application/octet-stream"
+        );
+    }
+
+    #[test]
+    fn header_end_detection() {
+        assert_eq!(find_header_end(b"GET / HTTP/1.1\r\n\r\nbody"), Some(14));
+        assert_eq!(find_header_end(b"GET / HTTP/1.1\r\n"), None);
+    }
+}

@@ -1,0 +1,683 @@
+//! `talp-pages serve` — a resident monitoring service over a run
+//! store, re-analyzing **incrementally** as artifacts arrive.
+//!
+//! The batch pipeline re-reads the whole corpus per CI push.  Serve
+//! mode instead keeps a warm [`Monitor`] (store + scan + previous
+//! analysis) behind a hand-rolled HTTP/1.1 listener ([`http`], std
+//! only — the vendored-offline policy rules out server crates):
+//!
+//! * `POST /ingest` accepts one TALP artifact body (git metadata in
+//!   query params, mirroring `ingest --commit ...`), routes it through
+//!   the store's content-addressed admission, re-analyzes **only the
+//!   affected experiment**, and atomically swaps the served snapshot.
+//! * `--watch <dir>` polls a drop directory through the same
+//!   incremental path (a warm poll over an unchanged folder parses
+//!   nothing).
+//! * `GET /report.json`, `/gate.json`, `/badges/*.svg`, `/index.html`
+//!   serve an immutable [`Snapshot`]: the files the **batch emitter
+//!   set** ([`crate::session::default_emitters`]) produced for the
+//!   current analysis, spooled at swap time.  Payloads are therefore
+//!   byte-identical to `report --store`/`gate --store` over the same
+//!   corpus by construction — there is no second emitter to drift.
+//! * `GET /healthz` and `GET /statsz` expose liveness and the
+//!   incrementality counters (`reanalyzed_histories_last` is the
+//!   witness that a one-run ingest did not rescan unaffected
+//!   histories).
+//!
+//! Concurrency model: readers clone an `Arc<Snapshot>` out of an
+//! [`RwLock`] and serve from it lock-free — they observe the old or
+//! the new snapshot, never a torn mix.  Writers (ingest, watch polls)
+//! serialize on the [`Monitor`] mutex, and the monitor holds the
+//! store's single-writer lockfile for its whole lifetime, so a
+//! concurrent CLI `ingest` is refused instead of interleaving shard
+//! appends.  SIGTERM/SIGINT (or `POST /shutdown`) drains in-flight
+//! requests, flushes a pending watch ingest, releases the lock and
+//! returns cleanly.
+
+pub mod http;
+pub mod monitor;
+
+pub use monitor::{Monitor, MonitorStats, RefreshPass};
+
+use std::collections::BTreeMap;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, RwLock};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::pages::cache::content_hash;
+use crate::pop::RunMetrics;
+use crate::session::{self, Analysis, AnalyzeOptions};
+use crate::talp::{GitMeta, RunData};
+use crate::util::fs::TempDir;
+use crate::util::json::Json;
+use crate::util::timefmt;
+
+use http::Request;
+
+/// Server configuration (the `serve` CLI command maps onto this).
+#[derive(Debug)]
+pub struct ServeOptions {
+    /// Run store root to serve (created if absent).
+    pub store: PathBuf,
+    /// Bind address; port 0 picks a free port (tests).
+    pub addr: String,
+    /// Optional artifact drop directory, polled every `poll_ms`.
+    pub watch: Option<PathBuf>,
+    /// Analysis options — same struct the batch `report` builds.
+    pub analyze: AnalyzeOptions,
+    /// Worker threads for analysis/ingest (0 = auto).
+    pub jobs: usize,
+    /// `POST /ingest` body cap (413 beyond it).
+    pub max_body_bytes: usize,
+    /// Watch-directory poll interval.
+    pub poll_ms: u64,
+}
+
+impl ServeOptions {
+    pub fn new(store: impl Into<PathBuf>) -> ServeOptions {
+        ServeOptions {
+            store: store.into(),
+            addr: "127.0.0.1:8787".to_string(),
+            watch: None,
+            analyze: AnalyzeOptions::default(),
+            jobs: 0,
+            max_body_bytes: 8 * 1024 * 1024,
+            poll_ms: 1000,
+        }
+    }
+}
+
+/// One immutable generation of served payloads: every file the batch
+/// emitter set produced for the analysis this snapshot was built from.
+#[derive(Debug)]
+pub struct Snapshot {
+    /// Monotonic generation counter (1 = the startup analysis).
+    pub seq: u64,
+    /// Root-relative path (`report.json`, `badges/x.svg`, ...) → bytes.
+    pub files: BTreeMap<String, Vec<u8>>,
+}
+
+/// Counters a serve loop hands back on clean shutdown.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeSummary {
+    pub requests: u64,
+    pub ingested: u64,
+    pub rejected: u64,
+    pub snapshot_seq: u64,
+}
+
+/// State shared between the accept loop and connection threads.
+struct Shared {
+    monitor: Mutex<Monitor>,
+    snapshot: RwLock<Arc<Snapshot>>,
+    shutdown: AtomicBool,
+    /// In-flight connection threads (drained on shutdown).
+    active: AtomicUsize,
+    requests: AtomicU64,
+    ingested: AtomicU64,
+    rejected: AtomicU64,
+    max_body_bytes: usize,
+}
+
+/// A running server (in-process API; the CLI wraps [`run`]).
+pub struct ServeHandle {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    thread: std::thread::JoinHandle<Result<ServeSummary>>,
+}
+
+impl ServeHandle {
+    /// The bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Request shutdown and wait for the clean-exit summary.
+    pub fn shutdown(self) -> Result<ServeSummary> {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.wait()
+    }
+
+    /// Wait for the loop to end (signal, `POST /shutdown`, error).
+    pub fn wait(self) -> Result<ServeSummary> {
+        match self.thread.join() {
+            Ok(summary) => summary,
+            Err(_) => anyhow::bail!("serve loop panicked"),
+        }
+    }
+}
+
+/// Build, bind and start a server; returns once it is accepting.
+pub fn spawn(opts: ServeOptions) -> Result<ServeHandle> {
+    let ServeOptions {
+        store,
+        addr,
+        watch,
+        analyze,
+        jobs,
+        max_body_bytes,
+        poll_ms,
+    } = opts;
+    let monitor = Monitor::open(&store, analyze, jobs)?;
+    let snapshot = build_snapshot(monitor.analysis(), 1)?;
+    let listener = TcpListener::bind(&addr)
+        .with_context(|| format!("binding {addr}"))?;
+    listener
+        .set_nonblocking(true)
+        .context("non-blocking accept loop")?;
+    let local = listener.local_addr()?;
+    let shared = Arc::new(Shared {
+        monitor: Mutex::new(monitor),
+        snapshot: RwLock::new(Arc::new(snapshot)),
+        shutdown: AtomicBool::new(false),
+        active: AtomicUsize::new(0),
+        requests: AtomicU64::new(0),
+        ingested: AtomicU64::new(0),
+        rejected: AtomicU64::new(0),
+        max_body_bytes,
+    });
+    let loop_shared = Arc::clone(&shared);
+    let thread = std::thread::spawn(move || {
+        serve_loop(listener, loop_shared, watch, poll_ms)
+    });
+    Ok(ServeHandle { addr: local, shared, thread })
+}
+
+/// CLI entry: install signal handlers, serve until SIGTERM/SIGINT
+/// (or `POST /shutdown`), exit cleanly.
+pub fn run(opts: ServeOptions) -> Result<ServeSummary> {
+    install_signal_handlers();
+    let watch = opts.watch.clone();
+    let handle = spawn(opts)?;
+    println!(
+        "talp-pages serve: http://{} (store locked for writing{})",
+        handle.addr(),
+        match &watch {
+            Some(d) => format!(", watching {}", d.display()),
+            None => String::new(),
+        }
+    );
+    let summary = handle.wait()?;
+    println!(
+        "talp-pages serve: clean shutdown — {} requests, {} ingested, \
+         {} rejected, snapshot #{}",
+        summary.requests,
+        summary.ingested,
+        summary.rejected,
+        summary.snapshot_seq
+    );
+    Ok(summary)
+}
+
+/// SIGTERM/SIGINT latch for the CLI path ([`run`]); in-process
+/// servers use `Shared::shutdown` / `POST /shutdown` instead.
+static SIGNALLED: AtomicBool = AtomicBool::new(false);
+
+extern "C" fn on_signal(_signum: i32) {
+    // Only an atomic store: async-signal-safe.
+    SIGNALLED.store(true, Ordering::SeqCst);
+}
+
+/// Install SIGINT/SIGTERM handlers via raw `signal(2)` — the `libc`
+/// crate is unavailable offline (same pattern as main's SIGPIPE
+/// restore).
+#[cfg(unix)]
+fn install_signal_handlers() {
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    unsafe {
+        signal(SIGINT, on_signal as extern "C" fn(i32) as usize);
+        signal(SIGTERM, on_signal as extern "C" fn(i32) as usize);
+    }
+}
+
+#[cfg(not(unix))]
+fn install_signal_handlers() {}
+
+/// Accept/poll loop; returns the summary on clean shutdown.
+fn serve_loop(
+    listener: TcpListener,
+    shared: Arc<Shared>,
+    watch: Option<PathBuf>,
+    poll_ms: u64,
+) -> Result<ServeSummary> {
+    let poll = Duration::from_millis(poll_ms.max(1));
+    let mut next_poll = Instant::now();
+    while !shutdown_requested(&shared) {
+        if watch.is_some() && Instant::now() >= next_poll {
+            if let Err(e) = poll_watch(&shared, watch.as_deref().unwrap())
+            {
+                eprintln!("talp-pages serve: watch ingest: {e:#}");
+            }
+            next_poll = Instant::now() + poll;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                shared.requests.fetch_add(1, Ordering::Relaxed);
+                shared.active.fetch_add(1, Ordering::SeqCst);
+                let conn = Arc::clone(&shared);
+                std::thread::spawn(move || {
+                    // Guard, not a tail call: a panicking handler must
+                    // still decrement or shutdown would never drain.
+                    struct Active<'a>(&'a AtomicUsize);
+                    impl Drop for Active<'_> {
+                        fn drop(&mut self) {
+                            self.0.fetch_sub(1, Ordering::SeqCst);
+                        }
+                    }
+                    let _guard = Active(&conn.active);
+                    handle_conn(stream, &conn);
+                });
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) => return Err(e).context("accepting a connection"),
+        }
+    }
+    // Drain in-flight requests (bounded — a wedged client socket must
+    // not turn SIGTERM into a hang), then flush any artifacts dropped
+    // into the watch directory since the last poll.
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while shared.active.load(Ordering::SeqCst) > 0
+        && Instant::now() < deadline
+    {
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    if let Some(dir) = &watch {
+        if let Err(e) = poll_watch(&shared, dir) {
+            eprintln!("talp-pages serve: final watch flush: {e:#}");
+        }
+    }
+    let seq = shared.snapshot.read().map(|s| s.seq).unwrap_or(0);
+    Ok(ServeSummary {
+        requests: shared.requests.load(Ordering::Relaxed),
+        ingested: shared.ingested.load(Ordering::Relaxed),
+        rejected: shared.rejected.load(Ordering::Relaxed),
+        snapshot_seq: seq,
+    })
+}
+
+fn shutdown_requested(shared: &Shared) -> bool {
+    shared.shutdown.load(Ordering::SeqCst)
+        || SIGNALLED.load(Ordering::SeqCst)
+}
+
+/// Lock the monitor, recovering from a poisoned mutex — a panicking
+/// connection thread must not wedge every later request.
+fn lock_monitor(shared: &Shared) -> MutexGuard<'_, Monitor> {
+    shared
+        .monitor
+        .lock()
+        .unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// Ingest the watch directory; on fresh records, re-analyze and swap.
+fn poll_watch(shared: &Shared, dir: &Path) -> Result<()> {
+    if !dir.is_dir() {
+        return Ok(()); // not created yet — poll again later
+    }
+    let mut monitor = lock_monitor(shared);
+    let report = monitor.ingest_dir(dir)?;
+    for w in &report.warnings {
+        eprintln!("talp-pages serve: {w}");
+    }
+    if report.stored > 0 {
+        refresh_and_swap(shared, &mut monitor)?;
+        shared
+            .ingested
+            .fetch_add(report.stored as u64, Ordering::Relaxed);
+    }
+    Ok(())
+}
+
+/// Run the incremental refresh and publish a new snapshot if anything
+/// was dirty.  The swap is atomic: readers keep the old `Arc` until
+/// the fully-built replacement lands.
+fn refresh_and_swap(
+    shared: &Shared,
+    monitor: &mut Monitor,
+) -> Result<Option<RefreshPass>> {
+    let pass = monitor.refresh()?;
+    if pass.is_some() {
+        let seq = shared.snapshot.read().map(|s| s.seq).unwrap_or(0) + 1;
+        let next = Arc::new(build_snapshot(monitor.analysis(), seq)?);
+        if let Ok(mut slot) = shared.snapshot.write() {
+            *slot = next;
+        }
+    }
+    Ok(pass)
+}
+
+/// Spool the batch emitter set into a scratch directory and capture
+/// every produced file — served bytes ARE batch bytes.
+fn build_snapshot(analysis: &Analysis, seq: u64) -> Result<Snapshot> {
+    let spool = TempDir::new("serve-snapshot")?;
+    let mut emitters = session::default_emitters(spool.path());
+    analysis.emit(&mut emitters)?;
+    let mut files = BTreeMap::new();
+    read_tree(spool.path(), "", &mut files)?;
+    Ok(Snapshot { seq, files })
+}
+
+fn read_tree(
+    dir: &Path,
+    prefix: &str,
+    files: &mut BTreeMap<String, Vec<u8>>,
+) -> Result<()> {
+    for entry in std::fs::read_dir(dir)
+        .with_context(|| format!("reading {}", dir.display()))?
+    {
+        let entry = entry?;
+        let name = entry.file_name().to_string_lossy().into_owned();
+        let rel = if prefix.is_empty() {
+            name
+        } else {
+            format!("{prefix}/{name}")
+        };
+        let path = entry.path();
+        if path.is_dir() {
+            read_tree(&path, &rel, files)?;
+        } else {
+            files.insert(rel, std::fs::read(&path)?);
+        }
+    }
+    Ok(())
+}
+
+/// Read one request, route it, answer it.  Socket errors on the way
+/// out are ignored (the client hung up; nothing to salvage).
+fn handle_conn(mut stream: TcpStream, shared: &Shared) {
+    let req = match http::read_request(&mut stream, shared.max_body_bytes)
+    {
+        Ok(r) => r,
+        Err(e) => {
+            shared.rejected.fetch_add(1, Ordering::Relaxed);
+            let _ = http::respond(
+                &mut stream,
+                e.status,
+                "application/json",
+                error_body(&e.message).as_bytes(),
+            );
+            return;
+        }
+    };
+    let (status, ctype, body) = route(&req, shared);
+    if status >= 400 {
+        shared.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+    let _ = http::respond(&mut stream, status, ctype, &body);
+}
+
+type Response = (u16, &'static str, Vec<u8>);
+
+fn route(req: &Request, shared: &Shared) -> Response {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => {
+            let seq = shared.snapshot.read().map(|s| s.seq).unwrap_or(0);
+            json_response(Json::from_pairs(vec![
+                ("ok", Json::Bool(true)),
+                ("snapshot_seq", Json::Num(seq as f64)),
+            ]))
+        }
+        ("GET", "/statsz") => statsz(shared),
+        ("GET", _) => snapshot_file(req, shared),
+        ("POST", "/ingest") => handle_ingest(req, shared)
+            .unwrap_or_else(|e| {
+                (
+                    500,
+                    "application/json",
+                    error_body(&format!("{e:#}")).into_bytes(),
+                )
+            }),
+        ("POST", "/shutdown") => {
+            shared.shutdown.store(true, Ordering::SeqCst);
+            json_response(Json::from_pairs(vec![(
+                "ok",
+                Json::Bool(true),
+            )]))
+        }
+        (method, path) => (
+            405,
+            "application/json",
+            error_body(&format!("{method} {path} is not supported"))
+                .into_bytes(),
+        ),
+    }
+}
+
+/// Serve a file out of the current snapshot (`/` → `index.html`).
+fn snapshot_file(req: &Request, shared: &Shared) -> Response {
+    let rel = match req.path.trim_start_matches('/') {
+        "" => "index.html",
+        p => p,
+    };
+    let snap: Arc<Snapshot> = match shared.snapshot.read() {
+        Ok(slot) => Arc::clone(&slot),
+        Err(_) => {
+            return (
+                500,
+                "application/json",
+                error_body("snapshot lock poisoned").into_bytes(),
+            )
+        }
+    };
+    match snap.files.get(rel) {
+        Some(bytes) => (200, http::content_type_for(rel), bytes.clone()),
+        None => (
+            404,
+            "application/json",
+            error_body(&format!("no {rel} in snapshot #{}", snap.seq))
+                .into_bytes(),
+        ),
+    }
+}
+
+/// The incrementality witness: monitor counters + request counters.
+fn statsz(shared: &Shared) -> Response {
+    let stats = lock_monitor(shared).stats();
+    let seq = shared.snapshot.read().map(|s| s.seq).unwrap_or(0);
+    json_response(Json::from_pairs(vec![
+        ("ok", Json::Bool(true)),
+        ("snapshot_seq", Json::Num(seq as f64)),
+        (
+            "requests",
+            Json::Num(shared.requests.load(Ordering::Relaxed) as f64),
+        ),
+        (
+            "ingested",
+            Json::Num(shared.ingested.load(Ordering::Relaxed) as f64),
+        ),
+        (
+            "rejected",
+            Json::Num(shared.rejected.load(Ordering::Relaxed) as f64),
+        ),
+        ("stored_runs", Json::Num(stats.stored_runs as f64)),
+        ("experiments", Json::Num(stats.experiments as f64)),
+        ("total_histories", Json::Num(stats.total_histories as f64)),
+        ("analysis_passes", Json::Num(stats.analysis_passes as f64)),
+        (
+            "reanalyzed_histories_last",
+            Json::Num(stats.reanalyzed_histories_last as f64),
+        ),
+        (
+            "reanalyzed_histories_total",
+            Json::Num(stats.reanalyzed_histories_total as f64),
+        ),
+    ]))
+}
+
+/// `POST /ingest`: one TALP artifact body + query-param metadata,
+/// mirroring the CLI `ingest` flags (`source` is required; `commit`,
+/// `branch`, `timestamp`, `message`, `experiment` optional).  Any
+/// rejection answers 4xx **before** the store or snapshot is touched.
+fn handle_ingest(req: &Request, shared: &Shared) -> Result<Response> {
+    let source = match req.query_get("source") {
+        Some(s) if !s.is_empty() => s,
+        _ => {
+            return Ok(bad(
+                "POST /ingest needs a source=<relative artifact path> \
+                 query parameter",
+            ))
+        }
+    };
+    if source.starts_with('/')
+        || source.contains('\\')
+        || source.split('/').any(|seg| seg == ".." || seg.is_empty())
+    {
+        return Ok(bad(&format!(
+            "source '{source}' must be a clean relative path"
+        )));
+    }
+    if req.body.is_empty() {
+        return Ok(bad("empty request body (expected a TALP artifact)"));
+    }
+    // Same contract as `ingest --commit ...`: companions only mean
+    // something with a commit, and a sloppy timestamp would scramble
+    // the cross-commit ordering this metadata exists to protect.
+    if req.query_get("commit").is_none() {
+        for key in ["branch", "timestamp", "message"] {
+            if req.query_get(key).is_some() {
+                return Ok(bad(&format!("{key} requires commit")));
+            }
+        }
+    }
+    let commit_timestamp = match req.query_get("timestamp") {
+        Some(t) => match timefmt::from_iso8601(t) {
+            Some(ts) => ts,
+            None => {
+                return Ok(bad(&format!(
+                    "timestamp '{t}' is not ISO-8601 (want e.g. \
+                     2026-01-01T00:00:00Z)"
+                )))
+            }
+        },
+        None => timefmt::now_unix(),
+    };
+    let meta = req.query_get("commit").map(|sha| GitMeta {
+        commit: sha.to_string(),
+        branch: req.query_get("branch").unwrap_or("main").to_string(),
+        commit_timestamp,
+        message: req.query_get("message").unwrap_or("").to_string(),
+    });
+    let experiment = match req.query_get("experiment") {
+        Some(e) if !e.is_empty() => e.to_string(),
+        _ => default_experiment(source),
+    };
+
+    let hash = content_hash(&req.body);
+    let mut monitor = lock_monitor(shared);
+    if monitor.store().contains(source, &hash) {
+        let seq = shared.snapshot.read().map(|s| s.seq).unwrap_or(0);
+        return Ok(ingest_response(false, seq, 0));
+    }
+    let data = match RunData::from_slice(&req.body, Path::new(source)) {
+        Ok(d) => d,
+        Err(e) => {
+            return Ok(bad(&format!("unparsable TALP artifact: {e:#}")))
+        }
+    };
+    let mut run = RunMetrics::from_run(&data, source);
+    if run.git.is_none() {
+        run.git = meta;
+    }
+    let stored = monitor.ingest_run(&experiment, &hash, run)?;
+    let mut reanalyzed = 0;
+    if stored {
+        if let Some(pass) = refresh_and_swap(shared, &mut monitor)? {
+            reanalyzed = pass.reanalyzed_histories;
+        }
+        shared.ingested.fetch_add(1, Ordering::Relaxed);
+    }
+    let seq = shared.snapshot.read().map(|s| s.seq).unwrap_or(0);
+    Ok(ingest_response(stored, seq, reanalyzed))
+}
+
+/// Default experiment id for an ingested source path: its parent
+/// directory, matching the directory scanner's grouping rule (`"."`
+/// for a top-level file).
+fn default_experiment(source: &str) -> String {
+    match source.rsplit_once('/') {
+        Some((dir, _file)) => dir.to_string(),
+        None => ".".to_string(),
+    }
+}
+
+fn ingest_response(stored: bool, seq: u64, reanalyzed: usize) -> Response {
+    json_response(Json::from_pairs(vec![
+        ("stored", Json::Bool(stored)),
+        ("snapshot_seq", Json::Num(seq as f64)),
+        ("reanalyzed_histories", Json::Num(reanalyzed as f64)),
+    ]))
+}
+
+fn json_response(doc: Json) -> Response {
+    (200, "application/json", doc.to_string_compact().into_bytes())
+}
+
+fn bad(message: &str) -> Response {
+    (400, "application/json", error_body(message).into_bytes())
+}
+
+fn error_body(message: &str) -> String {
+    Json::from_pairs(vec![("error", Json::Str(message.to_string()))])
+        .to_string_compact()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::session::Session;
+
+    #[test]
+    fn default_experiment_matches_scanner_grouping() {
+        assert_eq!(default_experiment("exp/2x8/run.json"), "exp/2x8");
+        assert_eq!(default_experiment("run.json"), ".");
+    }
+
+    #[test]
+    fn snapshot_is_bytewise_the_batch_emitter_output() {
+        // The invariant everything else rests on: a snapshot holds
+        // exactly the files (names AND bytes) the batch pipeline
+        // writes for the same corpus.
+        let td = TempDir::new("serve-snap").unwrap();
+        let root = crate::serve::monitor::tests::seeded_store(&td, 2);
+        let monitor =
+            Monitor::open(&root, AnalyzeOptions::default(), 0).unwrap();
+        let snap = build_snapshot(monitor.analysis(), 1).unwrap();
+        drop(monitor); // release the writer lock
+
+        let out = td.path().join("batch");
+        let analysis = Session::from_store(&root)
+            .scan()
+            .unwrap()
+            .analyze(&AnalyzeOptions::default());
+        analysis
+            .emit(&mut session::default_emitters(&out))
+            .unwrap();
+        let mut batch = BTreeMap::new();
+        read_tree(&out, "", &mut batch).unwrap();
+
+        assert!(snap.files.contains_key("report.json"));
+        assert!(snap.files.contains_key("index.html"));
+        assert_eq!(
+            snap.files.keys().collect::<Vec<_>>(),
+            batch.keys().collect::<Vec<_>>(),
+            "same file set"
+        );
+        for (name, bytes) in &snap.files {
+            assert_eq!(
+                bytes,
+                &batch[name],
+                "{name} must be byte-identical to the batch emitter"
+            );
+        }
+    }
+}

@@ -1,0 +1,355 @@
+//! The resident analysis core behind `talp-pages serve` (and the
+//! `serve_warm_reanalyze` bench): a warm [`RunStore`] plus a
+//! persistent scan and the previous [`Analysis`], re-analyzing
+//! **incrementally** — an ingested run marks only its experiment
+//! dirty, [`Monitor::refresh`] rebuilds just that experiment's scan
+//! view from the live records and routes it through
+//! [`analyze_incremental`], and every clean experiment's analysis is
+//! carried to the next pass by reference.
+//!
+//! The monitor holds the store's single-writer lock
+//! ([`crate::store::StoreLock`]) for its whole lifetime, so a resident
+//! server and a concurrent CLI `ingest` cannot interleave shard
+//! appends.  Read-only consumers (batch `report --store` beside a
+//! running server) do not take the lock and keep working.
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::pages::scanner::MetricScan;
+use crate::pop::RunMetrics;
+use crate::session::{
+    analyze_incremental, Analysis, AnalyzeOptions,
+};
+use crate::store::{self, IngestReport, RunStore, StoreLock};
+
+/// Counters of one [`Monitor::refresh`] pass — the incrementality
+/// witness `/statsz` exposes and the CI serve-smoke job asserts.
+#[derive(Debug, Clone, Copy)]
+pub struct RefreshPass {
+    /// (experiment, config) histories recomputed this pass.
+    pub reanalyzed_histories: usize,
+    /// Experiments reused from the previous analysis by reference.
+    pub reused_experiments: usize,
+}
+
+/// Point-in-time monitor statistics (for `/statsz`).
+#[derive(Debug, Clone, Copy)]
+pub struct MonitorStats {
+    pub stored_runs: usize,
+    pub experiments: usize,
+    /// (experiment, config) histories in the current analysis.
+    pub total_histories: usize,
+    /// Completed analysis passes (the initial full pass counts).
+    pub analysis_passes: u64,
+    pub reanalyzed_histories_last: usize,
+    pub reanalyzed_histories_total: u64,
+}
+
+/// Warm store + scan + analysis, re-analyzed incrementally.
+pub struct Monitor {
+    root: PathBuf,
+    input: String,
+    store: RunStore,
+    scan: MetricScan,
+    opts: AnalyzeOptions,
+    jobs: usize,
+    analysis: Analysis,
+    dirty: BTreeSet<String>,
+    passes: u64,
+    reanalyzed_last: usize,
+    reanalyzed_total: u64,
+    // Held for the monitor's lifetime; Drop releases it.
+    _lock: StoreLock,
+}
+
+impl Monitor {
+    /// Acquire the writer lock, load (or create) the store at `root`
+    /// and run the initial full analysis.
+    pub fn open(
+        root: &Path,
+        opts: AnalyzeOptions,
+        jobs: usize,
+    ) -> Result<Monitor> {
+        let lock = StoreLock::acquire(root)?;
+        let store = if root.join(store::MANIFEST_FILE_NAME).exists() {
+            RunStore::open_with_jobs(root, jobs)?
+        } else {
+            RunStore::create_or_open(root)?
+        };
+        // Input display string matches Session::from_store so every
+        // byte the emitters produce matches a batch report over the
+        // same store path.
+        let input = root.display().to_string();
+        let scan = store.to_scan();
+        let pass = analyze_incremental(&input, &scan, jobs, &opts, None);
+        Ok(Monitor {
+            root: root.to_path_buf(),
+            input,
+            store,
+            scan,
+            opts,
+            jobs,
+            analysis: pass.analysis,
+            dirty: BTreeSet::new(),
+            passes: 1,
+            reanalyzed_last: pass.reanalyzed_histories,
+            reanalyzed_total: pass.reanalyzed_histories as u64,
+            _lock: lock,
+        })
+    }
+
+    /// The store root this monitor serves.
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// The current analysis (always present; refreshed by
+    /// [`Monitor::refresh`]).
+    pub fn analysis(&self) -> &Analysis {
+        &self.analysis
+    }
+
+    /// Read access to the warm store (identity checks, stats).
+    pub fn store(&self) -> &RunStore {
+        &self.store
+    }
+
+    /// Append one already-reduced run; marks its experiment dirty.
+    /// Returns whether a record was actually appended (a duplicate
+    /// `(source, hash)` identity is dropped, like every store path).
+    pub fn ingest_run(
+        &mut self,
+        experiment: &str,
+        hash: &str,
+        run: RunMetrics,
+    ) -> Result<bool> {
+        let appended = self.store.append(experiment, hash, run)?;
+        if appended {
+            self.dirty.insert(experiment.to_string());
+        }
+        Ok(appended)
+    }
+
+    /// Ingest a drop directory (the `--watch` poll): content-addressed
+    /// through [`store::ingest_dir`], so a warm poll over an unchanged
+    /// folder parses nothing.  Fresh records mark their experiments
+    /// dirty.
+    pub fn ingest_dir(&mut self, dir: &Path) -> Result<IngestReport> {
+        let report =
+            store::ingest_dir(&mut self.store, dir, self.jobs, None)?;
+        self.dirty.extend(report.stored_experiments.iter().cloned());
+        Ok(report)
+    }
+
+    /// Re-analyze if anything is dirty: refresh index sidecars for the
+    /// appended shards, rebuild only the dirty experiments' scan views
+    /// from the live records, and fold them through
+    /// [`analyze_incremental`] (clean experiments ride along by
+    /// reference).  `None` when nothing was dirty — the caller keeps
+    /// its current snapshot.
+    pub fn refresh(&mut self) -> Result<Option<RefreshPass>> {
+        if self.dirty.is_empty() {
+            return Ok(None);
+        }
+        self.store.refresh_indexes()?;
+        let dirty = std::mem::take(&mut self.dirty);
+        for id in &dirty {
+            let exp = self.store.experiment_scan(id);
+            let at = self
+                .scan
+                .experiments
+                .binary_search_by(|e| e.id.as_str().cmp(id));
+            match at {
+                Ok(i) if exp.runs.is_empty() => {
+                    self.scan.experiments.remove(i);
+                }
+                Ok(i) => self.scan.experiments[i] = exp,
+                Err(i) if !exp.runs.is_empty() => {
+                    self.scan.experiments.insert(i, exp);
+                }
+                Err(_) => {}
+            }
+        }
+        // The scan-wide counters describe "everything served stored":
+        // keep them consistent with a cold load of the same records.
+        self.scan.cache_hits =
+            self.scan.experiments.iter().map(|e| e.runs.len()).sum();
+        let pass = analyze_incremental(
+            &self.input,
+            &self.scan,
+            self.jobs,
+            &self.opts,
+            Some((&self.analysis, &dirty)),
+        );
+        self.analysis = pass.analysis;
+        self.passes += 1;
+        self.reanalyzed_last = pass.reanalyzed_histories;
+        self.reanalyzed_total += pass.reanalyzed_histories as u64;
+        Ok(Some(RefreshPass {
+            reanalyzed_histories: pass.reanalyzed_histories,
+            reused_experiments: pass.reused_experiments,
+        }))
+    }
+
+    /// Current counters for `/statsz`.
+    pub fn stats(&self) -> MonitorStats {
+        MonitorStats {
+            stored_runs: self.store.len(),
+            experiments: self.analysis.experiments.len(),
+            total_histories: self
+                .analysis
+                .experiments
+                .iter()
+                .map(|e| e.histories.len())
+                .sum(),
+            analysis_passes: self.passes,
+            reanalyzed_histories_last: self.reanalyzed_last,
+            reanalyzed_histories_total: self.reanalyzed_total,
+        }
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::apps::{run_with_talp, CodeVersion, Genex};
+    use crate::pages::cache::content_hash;
+    use crate::sim::{MachineSpec, ResourceConfig};
+    use crate::store::LOCK_FILE_NAME;
+    use crate::util::fs::TempDir;
+
+    /// Shared fixture (also used by the serve module tests): a store
+    /// with `experiments` experiments of 3 runs each.
+    pub(crate) fn seeded_store(td: &TempDir, experiments: usize) -> PathBuf {
+        let root = td.path().join("store");
+        let mut s = RunStore::create_or_open(&root).unwrap();
+        let machine = MachineSpec::marenostrum5();
+        let res = ResourceConfig::new(2, 8);
+        let mut app = Genex::salpha(1, CodeVersion::fixed());
+        app.timesteps = 2;
+        let (base, _) = run_with_talp(&app, &machine, &res, 3, 0);
+        let mut batch = Vec::new();
+        for e in 0..experiments {
+            for i in 0..3 {
+                let mut d = base.clone();
+                d.timestamp = 1_700_000_000 + i as i64 * 60;
+                let source = format!("exp{e}/2x8/run_{i}.json");
+                batch.push((
+                    format!("exp{e}"),
+                    format!("{e:04x}{i:08x}"),
+                    RunMetrics::from_run(&d, &source),
+                ));
+            }
+        }
+        s.append_all(batch).unwrap();
+        s.refresh_indexes().unwrap();
+        root
+    }
+
+    fn fresh_run(source: &str, ts: i64) -> (String, RunMetrics) {
+        let machine = MachineSpec::marenostrum5();
+        let res = ResourceConfig::new(2, 8);
+        let mut app = Genex::salpha(1, CodeVersion::fixed());
+        app.timesteps = 2;
+        let (mut d, _) = run_with_talp(&app, &machine, &res, 99, 0);
+        d.timestamp = ts;
+        let bytes = d.to_json().to_string_pretty();
+        (
+            content_hash(bytes.as_bytes()),
+            RunMetrics::from_run(&d, source),
+        )
+    }
+
+    #[test]
+    fn one_run_ingest_reanalyzes_one_history() {
+        let td = TempDir::new("monitor-incr").unwrap();
+        let root = seeded_store(&td, 3);
+        let mut m =
+            Monitor::open(&root, AnalyzeOptions::default(), 0).unwrap();
+        let s0 = m.stats();
+        assert_eq!(s0.stored_runs, 9);
+        assert_eq!(s0.experiments, 3);
+        assert_eq!(s0.total_histories, 3);
+        assert_eq!(s0.reanalyzed_histories_last, 3, "cold pass is full");
+
+        // Nothing dirty: refresh is a no-op.
+        assert!(m.refresh().unwrap().is_none());
+
+        let (hash, run) = fresh_run("exp1/2x8/fresh.json", 1_700_500_000);
+        assert!(m.ingest_run("exp1", &hash, run).unwrap());
+        let pass = m.refresh().unwrap().expect("dirty experiment");
+        assert_eq!(pass.reanalyzed_histories, 1, "only exp1 recomputes");
+        assert_eq!(pass.reused_experiments, 2);
+        let s1 = m.stats();
+        assert_eq!(s1.stored_runs, 10);
+        assert_eq!(s1.reanalyzed_histories_last, 1);
+        assert_eq!(s1.analysis_passes, 2);
+        let exp1 = m
+            .analysis()
+            .experiments
+            .iter()
+            .find(|e| e.id == "exp1")
+            .unwrap();
+        assert_eq!(exp1.total_runs, 4);
+
+        // Duplicate identity: dropped, nothing goes dirty.
+        let (hash, run) = fresh_run("exp1/2x8/fresh.json", 1_700_500_000);
+        assert!(!m.ingest_run("exp1", &hash, run).unwrap());
+        assert!(m.refresh().unwrap().is_none());
+    }
+
+    #[test]
+    fn monitor_analysis_matches_batch_session() {
+        let td = TempDir::new("monitor-batch").unwrap();
+        let root = seeded_store(&td, 2);
+        let mut m =
+            Monitor::open(&root, AnalyzeOptions::default(), 0).unwrap();
+        let (hash, run) = fresh_run("exp0/2x8/late.json", 1_700_600_000);
+        m.ingest_run("exp0", &hash, run).unwrap();
+        m.refresh().unwrap();
+
+        // A batch store session over the same (mutated) corpus must
+        // see the same analysis — serve reads and batch reads may not
+        // disagree.  (Byte-level emitter identity is pinned by the
+        // serve_http integration tests.)
+        let batch = crate::session::Session::from_store(&root)
+            .scan()
+            .unwrap()
+            .analyze(&AnalyzeOptions::default());
+        assert_eq!(batch.experiments.len(), m.analysis().experiments.len());
+        for (a, b) in
+            batch.experiments.iter().zip(&m.analysis().experiments)
+        {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.total_runs, b.total_runs);
+            assert_eq!(a.histories.len(), b.histories.len());
+            for ((ca, ra), (cb, rb)) in a.histories.iter().zip(&b.histories)
+            {
+                assert_eq!(ca, cb);
+                let (sa, sb): (Vec<_>, Vec<_>) = (
+                    ra.iter().map(|r| r.source.as_str()).collect(),
+                    rb.iter().map(|r| r.source.as_str()).collect(),
+                );
+                assert_eq!(sa, sb);
+            }
+        }
+    }
+
+    #[test]
+    fn monitor_holds_the_writer_lock() {
+        let td = TempDir::new("monitor-lock").unwrap();
+        let root = seeded_store(&td, 1);
+        let m =
+            Monitor::open(&root, AnalyzeOptions::default(), 0).unwrap();
+        assert!(root.join(LOCK_FILE_NAME).exists());
+        // A second writer is refused while the monitor lives...
+        assert!(StoreLock::acquire(&root).is_err());
+        drop(m);
+        // ...and admitted the moment it is gone.
+        assert!(!root.join(LOCK_FILE_NAME).exists());
+        StoreLock::acquire(&root).unwrap();
+    }
+}

@@ -10,9 +10,12 @@
 //! which is what keeps `jobs = 1` and `jobs = N` byte-identical
 //! downstream.
 
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Arc;
+
 use crate::gate::{GatePolicy, GateVerdict};
 use crate::pages::detect::{self, DetectOptions, Finding};
-use crate::pages::scanner::MetricExperiment;
+use crate::pages::scanner::{MetricExperiment, MetricScan};
 use crate::pages::timeseries::{self, TimeSeries};
 use crate::pop::{self, RunMetrics};
 use crate::util::par::parallel_map;
@@ -99,7 +102,12 @@ pub struct ExperimentAnalysis {
 pub struct Analysis {
     /// Display form of the scanned input root (index header line).
     pub input: String,
-    pub experiments: Vec<ExperimentAnalysis>,
+    /// Per-experiment analyses, in deterministic scan order.  Shared
+    /// (`Arc`) so a resident consumer ([`analyze_incremental`], the
+    /// serve subsystem) can carry clean experiments from one analysis
+    /// to the next by reference instead of recomputing or cloning
+    /// their full run histories.
+    pub experiments: Vec<Arc<ExperimentAnalysis>>,
     /// Non-fatal scan warnings, as structured diagnostics.
     pub warnings: Vec<crate::check::Diagnostic>,
     /// Artifacts served from the metrics cache (not re-parsed).  These
@@ -150,7 +158,7 @@ impl Scan {
                         (cfg, runs)
                     })
                     .collect();
-                analysis
+                Arc::new(analysis)
             })
             .collect();
         Analysis {
@@ -161,6 +169,106 @@ impl Scan {
             cache_misses: self.scan.cache_misses,
             gate,
         }
+    }
+}
+
+/// Outcome of one [`analyze_incremental`] pass: the fresh [`Analysis`]
+/// plus the incrementality counters the serve subsystem's `/statsz`
+/// endpoint and the `serve_warm_reanalyze` bench use as the witness
+/// that a single-run ingest did not rescan unaffected histories.
+#[derive(Debug)]
+pub struct Reanalysis {
+    pub analysis: Analysis,
+    /// (experiment, config) histories recomputed this pass.
+    pub reanalyzed_histories: usize,
+    /// Experiments carried over from the previous analysis by
+    /// reference (`Arc::clone`) without recomputation.
+    pub reused_experiments: usize,
+}
+
+/// Analyze `scan` by *borrowing* it — the resident counterpart of the
+/// consuming [`Scan::analyze`].  When a previous [`Analysis`] and a
+/// dirty-experiment set are given, only experiments that are dirty (or
+/// new since the previous pass) go through [`analyze_experiment`]; the
+/// rest reuse the previous pass's [`ExperimentAnalysis`] by reference.
+/// The gate verdict is always recomputed — it folds cross-experiment
+/// state and evaluation borrows the scan, so it stays cheap.
+///
+/// Determinism: the merged experiment list keeps scan order, and a
+/// recomputed experiment's analysis is value-identical to what a cold
+/// [`Scan::analyze`] over the same scan produces (the recomputed
+/// histories clone the runs instead of moving them — same values, same
+/// bytes downstream).
+pub fn analyze_incremental(
+    input: &str,
+    scan: &MetricScan,
+    jobs: usize,
+    opts: &AnalyzeOptions,
+    prev: Option<(&Analysis, &BTreeSet<String>)>,
+) -> Reanalysis {
+    let gate = opts
+        .gate
+        .as_ref()
+        .map(|policy| crate::gate::evaluate(scan, policy));
+    let previous: BTreeMap<&str, &Arc<ExperimentAnalysis>> = prev
+        .map(|(a, _)| {
+            a.experiments.iter().map(|e| (e.id.as_str(), e)).collect()
+        })
+        .unwrap_or_default();
+    let recompute = |id: &str| match prev {
+        None => true,
+        Some((_, dirty)) => {
+            dirty.contains(id) || !previous.contains_key(id)
+        }
+    };
+    let stale: Vec<&MetricExperiment> = scan
+        .experiments
+        .iter()
+        .filter(|exp| recompute(&exp.id))
+        .collect();
+    let fresh = parallel_map(&stale, jobs, |exp| {
+        let (mut analysis, history_idx) = analyze_experiment(exp, opts);
+        analysis.histories = history_idx
+            .into_iter()
+            .map(|(cfg, idx)| {
+                let runs =
+                    idx.into_iter().map(|i| exp.runs[i].clone()).collect();
+                (cfg, runs)
+            })
+            .collect();
+        Arc::new(analysis)
+    });
+
+    let mut fresh_iter = fresh.into_iter();
+    let mut reanalyzed_histories = 0usize;
+    let mut reused_experiments = 0usize;
+    let experiments: Vec<Arc<ExperimentAnalysis>> = scan
+        .experiments
+        .iter()
+        .map(|exp| {
+            if recompute(&exp.id) {
+                let a = fresh_iter
+                    .next()
+                    .expect("stale set and merge walk the same scan");
+                reanalyzed_histories += a.histories.len();
+                a
+            } else {
+                reused_experiments += 1;
+                Arc::clone(previous[exp.id.as_str()])
+            }
+        })
+        .collect();
+    Reanalysis {
+        analysis: Analysis {
+            input: input.to_string(),
+            experiments,
+            warnings: scan.warnings.clone(),
+            cache_hits: scan.cache_hits,
+            cache_misses: scan.cache_misses,
+            gate,
+        },
+        reanalyzed_histories,
+        reused_experiments,
     }
 }
 
@@ -351,6 +459,73 @@ mod tests {
         // The fixture history is a bug -> fix (an improvement), so the
         // gate passes.
         assert_eq!(v.status, crate::gate::GateStatus::Pass);
+    }
+
+    #[test]
+    fn incremental_reuses_clean_experiments_by_reference() {
+        let td = TempDir::new("analysis-incr").unwrap();
+        build_input(&td);
+        let opts = AnalyzeOptions::default();
+        let scanned = Session::new(td.path()).scan().unwrap();
+        let input = scanned.root().display().to_string();
+
+        // A cold incremental pass (no previous analysis) recomputes
+        // everything and matches the consuming path value-for-value.
+        let cold =
+            analyze_incremental(&input, &scanned.scan, 0, &opts, None);
+        assert_eq!(cold.reanalyzed_histories, 1);
+        assert_eq!(cold.reused_experiments, 0);
+        let batch = Session::new(td.path())
+            .scan()
+            .unwrap()
+            .analyze(&AnalyzeOptions::default());
+        assert_eq!(
+            cold.analysis.experiments[0].histories[0].1.len(),
+            batch.experiments[0].histories[0].1.len()
+        );
+        assert_eq!(
+            cold.analysis.experiments[0].findings.len(),
+            batch.experiments[0].findings.len()
+        );
+
+        // A warm pass with nothing dirty reuses every experiment by
+        // reference — the incrementality the serve mode banks on.
+        let dirty = BTreeSet::new();
+        let warm = analyze_incremental(
+            &input,
+            &scanned.scan,
+            0,
+            &opts,
+            Some((&cold.analysis, &dirty)),
+        );
+        assert_eq!(warm.reanalyzed_histories, 0);
+        assert_eq!(warm.reused_experiments, 1);
+        assert!(Arc::ptr_eq(
+            &warm.analysis.experiments[0],
+            &cold.analysis.experiments[0]
+        ));
+
+        // Marking the experiment dirty recomputes it (fresh Arc, same
+        // values).
+        let dirty: BTreeSet<String> =
+            ["salpha/resolution_1".to_string()].into_iter().collect();
+        let redone = analyze_incremental(
+            &input,
+            &scanned.scan,
+            0,
+            &opts,
+            Some((&cold.analysis, &dirty)),
+        );
+        assert_eq!(redone.reanalyzed_histories, 1);
+        assert_eq!(redone.reused_experiments, 0);
+        assert!(!Arc::ptr_eq(
+            &redone.analysis.experiments[0],
+            &cold.analysis.experiments[0]
+        ));
+        assert_eq!(
+            redone.analysis.experiments[0].total_runs,
+            cold.analysis.experiments[0].total_runs
+        );
     }
 
     #[test]

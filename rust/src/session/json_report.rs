@@ -85,7 +85,7 @@ impl JsonReport {
         let experiments: Vec<Json> = analysis
             .experiments
             .iter()
-            .map(experiment_json)
+            .map(|e| experiment_json(e))
             .collect();
         Json::from_pairs(vec![
             ("schema_version", Json::Num(SCHEMA_VERSION as f64)),

@@ -62,7 +62,8 @@ use crate::pages::MetricsCache;
 use crate::store::{QuerySpec, RunStore};
 
 pub use analysis::{
-    Analysis, AnalyzeOptions, BadgeDatum, ConfigSeries, ExperimentAnalysis,
+    analyze_incremental, Analysis, AnalyzeOptions, BadgeDatum, ConfigSeries,
+    ExperimentAnalysis, Reanalysis,
 };
 pub use badges::Badges;
 pub use emit::{EmitSummary, Emitter, EmitterReport};

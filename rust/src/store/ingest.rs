@@ -13,6 +13,7 @@
 //! `commit` argument, so history ordering stays commit-based even for
 //! artifacts that skipped the stamping step.
 
+use std::collections::BTreeSet;
 use std::path::Path;
 
 use anyhow::Result;
@@ -37,6 +38,12 @@ pub struct IngestReport {
     /// Files skipped because their (path, content hash) identity was
     /// already stored.
     pub already_stored: usize,
+    /// Experiments the freshly parsed records belong to (deduped).
+    /// Resident consumers use this as the dirty set for incremental
+    /// re-analysis; it can over-approximate by an experiment whose
+    /// only fresh record was a within-batch duplicate, which merely
+    /// costs one redundant re-analysis.
+    pub stored_experiments: BTreeSet<String>,
     /// Unparsable files (skipped, like the scanner does).
     pub warnings: Vec<String>,
 }
@@ -110,11 +117,16 @@ pub fn ingest_dir(
             }
         }
     }
+    report.stored_experiments =
+        fresh.iter().map(|(id, _, _)| id.clone()).collect();
     // One batched append: each touched shard opens once, and a
     // duplicate identity within the batch (possible only if the same
     // path was discovered twice) dedups here.
     report.stored = store.append_all(fresh)?;
     report.already_stored += report.parsed - report.stored;
+    if report.stored == 0 {
+        report.stored_experiments.clear();
+    }
     Ok(report)
 }
 
@@ -153,6 +165,10 @@ mod tests {
         assert_eq!(cold.stored, 3);
         assert_eq!(cold.already_stored, 0);
         assert!(cold.warnings.is_empty());
+        assert_eq!(
+            cold.stored_experiments.iter().collect::<Vec<_>>(),
+            ["salpha/res_1"]
+        );
 
         // Warm re-ingest: everything hashes, nothing parses.
         let warm = ingest_dir(&mut store, td.path(), 0, None).unwrap();
@@ -160,6 +176,7 @@ mod tests {
         assert_eq!(warm.parsed, 0, "warm ingest must parse zero artifacts");
         assert_eq!(warm.stored, 0);
         assert_eq!(warm.already_stored, 3);
+        assert!(warm.stored_experiments.is_empty());
 
         // One new file: exactly one parse.
         build_tree(&td, 4);

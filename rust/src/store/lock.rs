@@ -1,0 +1,266 @@
+//! Single-writer store coordination: the `.talp-store.lock` file.
+//!
+//! Shard appends are atomic per write, but two concurrent writers
+//! (say, a CLI `ingest` racing a resident `talp-pages serve`) could
+//! interleave appends to one shard and leave the manifest describing
+//! neither of them.  Every mutating entry point therefore takes this
+//! advisory lock first: a JSON lockfile in the store root created with
+//! `O_EXCL` semantics ([`std::fs::OpenOptions::create_new`]), carrying
+//! the holder's pid and acquisition timestamp.
+//!
+//! Read paths (`report --store`, `gate --store`, `store stats/query`,
+//! `check`) never take the lock — corruption-tolerant loading already
+//! handles reading concurrently with a writer's append, and a resident
+//! server must stay curl-able while batch reports run beside it.
+//!
+//! Stale locks: a crashed writer leaves its lockfile behind.  On
+//! Linux, liveness is checked directly (`/proc/<pid>`); elsewhere a
+//! lock older than [`STALE_LOCK_SECS`] is presumed abandoned.  A stale
+//! lock is taken over (removed, then re-created); a live one is a hard
+//! error naming the holder.  `talp-pages check` surfaces an orphaned
+//! lock as the TP019 diagnostic.
+
+use std::fs::OpenOptions;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+use crate::util::timefmt;
+
+/// Lockfile name, in the store root next to the manifest.
+pub const LOCK_FILE_NAME: &str = ".talp-store.lock";
+
+/// Without `/proc` liveness (non-Linux), a lock this old is presumed
+/// abandoned and taken over.
+pub const STALE_LOCK_SECS: i64 = 24 * 3600;
+
+/// Decoded lockfile contents.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LockInfo {
+    pub pid: u32,
+    /// Acquisition time (unix seconds).
+    pub timestamp: i64,
+}
+
+impl LockInfo {
+    /// Parse a lockfile body; `None` for damaged content (treated as
+    /// stale — garbage must not brick the store).
+    pub fn parse(text: &str) -> Option<LockInfo> {
+        let doc = Json::parse(text).ok()?;
+        Some(LockInfo {
+            pid: doc.get("pid").and_then(Json::as_u64)? as u32,
+            timestamp: doc.get("timestamp").and_then(Json::as_u64)? as i64,
+        })
+    }
+
+    /// Is the holding process still alive?  Linux asks `/proc`
+    /// directly; elsewhere the age fallback applies (a long-lived
+    /// server keeps its lock on Linux, where liveness is exact).
+    pub fn holder_alive(&self, now: i64) -> bool {
+        #[cfg(target_os = "linux")]
+        {
+            let _ = now;
+            Path::new("/proc").join(self.pid.to_string()).exists()
+        }
+        #[cfg(not(target_os = "linux"))]
+        {
+            now - self.timestamp <= STALE_LOCK_SECS
+        }
+    }
+}
+
+/// RAII writer lock on a run store: holds `.talp-store.lock` from
+/// [`StoreLock::acquire`] until drop (or an explicit
+/// [`StoreLock::release`]).
+#[derive(Debug)]
+pub struct StoreLock {
+    path: PathBuf,
+}
+
+impl StoreLock {
+    /// Acquire the writer lock for the store at `root`, creating the
+    /// root directory if needed.  A live holder is an error; a stale
+    /// lock (dead pid, or over-age where liveness is unknowable) is
+    /// taken over.
+    pub fn acquire(root: &Path) -> Result<StoreLock> {
+        std::fs::create_dir_all(root).with_context(|| {
+            format!("creating store root {}", root.display())
+        })?;
+        let path = root.join(LOCK_FILE_NAME);
+        // One takeover round at most: first attempt, stale cleanup,
+        // second attempt.  Losing the re-create race to another writer
+        // is a legitimate contention error, not a retry loop.
+        for takeover in [false, true] {
+            match OpenOptions::new()
+                .write(true)
+                .create_new(true)
+                .open(&path)
+            {
+                Ok(mut f) => {
+                    let body = Json::from_pairs(vec![
+                        (
+                            "pid",
+                            Json::Num(f64::from(std::process::id())),
+                        ),
+                        (
+                            "timestamp",
+                            Json::Num(timefmt::now_unix() as f64),
+                        ),
+                    ])
+                    .to_string_compact();
+                    f.write_all(body.as_bytes()).with_context(|| {
+                        format!("writing lock {}", path.display())
+                    })?;
+                    return Ok(StoreLock { path });
+                }
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::AlreadyExists =>
+                {
+                    let held = std::fs::read_to_string(&path)
+                        .ok()
+                        .and_then(|t| LockInfo::parse(&t));
+                    match held {
+                        Some(info)
+                            if info
+                                .holder_alive(timefmt::now_unix()) =>
+                        {
+                            bail!(
+                                "store {} is locked by a running \
+                                 writer (pid {}, since {}); wait for \
+                                 it or remove {} if it is not a \
+                                 talp-pages process",
+                                root.display(),
+                                info.pid,
+                                timefmt::to_iso8601(info.timestamp),
+                                path.display()
+                            );
+                        }
+                        _ if takeover => bail!(
+                            "store {} lock reappeared during \
+                             stale-lock takeover — another writer won \
+                             the race; retry",
+                            root.display()
+                        ),
+                        _ => {
+                            // Dead holder or unreadable lock: take it
+                            // over and loop into the second attempt.
+                            std::fs::remove_file(&path).with_context(
+                                || {
+                                    format!(
+                                        "removing stale lock {}",
+                                        path.display()
+                                    )
+                                },
+                            )?;
+                        }
+                    }
+                }
+                Err(e) => {
+                    return Err(e).with_context(|| {
+                        format!("creating lock {}", path.display())
+                    })
+                }
+            }
+        }
+        unreachable!("second create_new attempt returns or bails");
+    }
+
+    /// The lockfile path (for messages and tests).
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Release explicitly, surfacing removal errors (drop is
+    /// best-effort and silent).
+    pub fn release(self) -> Result<()> {
+        let path = self.path.clone();
+        std::mem::forget(self);
+        std::fs::remove_file(&path).with_context(|| {
+            format!("releasing lock {}", path.display())
+        })
+    }
+}
+
+impl Drop for StoreLock {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::fs::TempDir;
+
+    /// A pid far above any real `pid_max` — never alive.
+    const DEAD_PID: u32 = 4_000_000_000;
+
+    fn write_lock(root: &Path, pid: u32, timestamp: i64) {
+        std::fs::create_dir_all(root).unwrap();
+        std::fs::write(
+            root.join(LOCK_FILE_NAME),
+            format!("{{\"pid\":{pid},\"timestamp\":{timestamp}}}"),
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn acquire_writes_and_drop_removes() {
+        let td = TempDir::new("lock-cycle").unwrap();
+        let root = td.path().join("store");
+        let lock = StoreLock::acquire(&root).unwrap();
+        let text = std::fs::read_to_string(lock.path()).unwrap();
+        let info = LockInfo::parse(&text).unwrap();
+        assert_eq!(info.pid, std::process::id());
+        assert!(info.timestamp > 0);
+        let path = lock.path().to_path_buf();
+        drop(lock);
+        assert!(!path.exists(), "drop releases the lock");
+        // Explicit release works too.
+        let lock = StoreLock::acquire(&root).unwrap();
+        lock.release().unwrap();
+        assert!(!root.join(LOCK_FILE_NAME).exists());
+    }
+
+    #[test]
+    fn live_holder_blocks_second_writer() {
+        let td = TempDir::new("lock-live").unwrap();
+        let root = td.path().join("store");
+        // Our own pid is definitionally alive.
+        write_lock(&root, std::process::id(), timefmt::now_unix());
+        let err = StoreLock::acquire(&root).unwrap_err();
+        assert!(err.to_string().contains("locked by a running writer"));
+        assert!(root.join(LOCK_FILE_NAME).exists(), "lock untouched");
+    }
+
+    #[test]
+    fn stale_and_corrupt_locks_are_taken_over() {
+        let td = TempDir::new("lock-stale").unwrap();
+        let root = td.path().join("store");
+        write_lock(&root, DEAD_PID, 1_700_000_000);
+        let lock = StoreLock::acquire(&root).unwrap();
+        let info = LockInfo::parse(
+            &std::fs::read_to_string(lock.path()).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(info.pid, std::process::id(), "takeover re-stamps");
+        drop(lock);
+
+        // Unparsable garbage is stale too.
+        std::fs::write(root.join(LOCK_FILE_NAME), "][ not json").unwrap();
+        let lock = StoreLock::acquire(&root).unwrap();
+        drop(lock);
+        assert!(!root.join(LOCK_FILE_NAME).exists());
+    }
+
+    #[test]
+    fn holder_liveness_matches_proc() {
+        let now = timefmt::now_unix();
+        let live = LockInfo { pid: std::process::id(), timestamp: now };
+        assert!(live.holder_alive(now));
+        let dead = LockInfo { pid: DEAD_PID, timestamp: now };
+        assert!(!dead.holder_alive(now));
+    }
+}

@@ -1,0 +1,486 @@
+//! Acceptance tests for `talp-pages serve` (ISSUE 8):
+//!
+//! * every payload the server answers is byte-identical to the batch
+//!   `report --store` output over the same corpus — before AND after
+//!   a `POST /ingest`;
+//! * concurrent readers during an ingest observe the old or the new
+//!   snapshot, never a torn mix;
+//! * malformed / oversize / unroutable POSTs get 4xx without touching
+//!   the store or the snapshot;
+//! * shutdown drains, releases the writer lock and leaves no torn
+//!   shard behind; the watch directory flushes on the way out;
+//! * a torn trailing shard line is tolerated exactly like batch mode.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::{Path, PathBuf};
+
+use talp_pages::cli;
+use talp_pages::gate::GatePolicy;
+use talp_pages::serve::{self, ServeOptions};
+use talp_pages::session::AnalyzeOptions;
+use talp_pages::store::{RunStore, LOCK_FILE_NAME};
+use talp_pages::talp::{GitMeta, ProcStats, RegionData, RunData};
+use talp_pages::util::fs::TempDir;
+
+fn run_cli(line: &str) -> anyhow::Result<i32> {
+    cli::main_with_args(
+        &line.split_whitespace().map(String::from).collect::<Vec<_>>(),
+    )
+}
+
+/// Same hand-built fixture as the store_roundtrip tests: exact decimal
+/// inputs, a 16 -> 10 elapsed drop so the documents carry detections.
+fn run(ranks: u32, useful: f64, elapsed: f64, ts: i64, sha: &str) -> RunData {
+    RunData {
+        dlb_version: "test".into(),
+        app: "store-rt".into(),
+        machine: "mn5".into(),
+        timestamp: ts,
+        ranks,
+        threads: 2,
+        nodes: 1,
+        regions: vec![RegionData {
+            name: "Global".into(),
+            elapsed_s: elapsed,
+            visits: 1,
+            procs: (0..ranks)
+                .map(|r| ProcStats {
+                    rank: r,
+                    elapsed_s: elapsed,
+                    useful_s: useful,
+                    mpi_s: 0.05 * elapsed,
+                    ..Default::default()
+                })
+                .collect(),
+        }],
+        git: Some(GitMeta {
+            commit: sha.into(),
+            branch: "main".into(),
+            commit_timestamp: ts,
+            message: String::new(),
+        }),
+    }
+}
+
+fn build_fixture(root: &Path) {
+    run(2, 24.0, 16.0, 1000, "slowslow1")
+        .write_file(&root.join("exp/talp_2x2_run0.json"))
+        .unwrap();
+    run(2, 15.0, 10.0, 2000, "fastfast2")
+        .write_file(&root.join("exp/talp_2x2_run1.json"))
+        .unwrap();
+    run(4, 15.0, 10.0, 1000, "slowslow1")
+        .write_file(&root.join("exp/talp_4x2_run0.json"))
+        .unwrap();
+    run(4, 15.0, 10.0, 2000, "fastfast2")
+        .write_file(&root.join("exp/talp_4x2_run1.json"))
+        .unwrap();
+}
+
+/// Ingest the fixture into a store and return (store, policy) paths.
+fn seeded_store(td: &TempDir) -> (PathBuf, PathBuf) {
+    let input = td.path().join("talp");
+    build_fixture(&input);
+    let store = td.path().join("store");
+    assert_eq!(
+        run_cli(&format!(
+            "ingest --input {} --store {}",
+            input.display(),
+            store.display()
+        ))
+        .unwrap(),
+        0
+    );
+    let policy = td.path().join("policy.json");
+    std::fs::write(
+        &policy,
+        r#"{"version":1,"defaults":{"max_elapsed_increase":0.9}}"#,
+    )
+    .unwrap();
+    (store, policy)
+}
+
+fn serve_opts(store: &Path, policy: &Path) -> ServeOptions {
+    let mut opts = ServeOptions::new(store);
+    opts.addr = "127.0.0.1:0".to_string();
+    opts.analyze = AnalyzeOptions {
+        gate: Some(GatePolicy::from_file(policy).unwrap()),
+        ..Default::default()
+    };
+    opts
+}
+
+/// One raw HTTP/1.1 exchange (the server closes per request).
+fn request(
+    addr: SocketAddr,
+    method: &str,
+    target: &str,
+    body: &[u8],
+) -> (u16, Vec<u8>) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    let head = format!(
+        "{method} {target} HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n",
+        body.len()
+    );
+    s.write_all(head.as_bytes()).unwrap();
+    s.write_all(body).unwrap();
+    let mut buf = Vec::new();
+    s.read_to_end(&mut buf).unwrap();
+    let pos = buf
+        .windows(4)
+        .position(|w| w == b"\r\n\r\n")
+        .unwrap_or_else(|| panic!("no header end in {buf:?}"));
+    let head = String::from_utf8_lossy(&buf[..pos]).into_owned();
+    let status: u16 = head
+        .split(' ')
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("bad status line: {head}"));
+    (status, buf[pos + 4..].to_vec())
+}
+
+fn get(addr: SocketAddr, target: &str) -> (u16, Vec<u8>) {
+    request(addr, "GET", target, &[])
+}
+
+/// Recursively collect (relative path, bytes) under `dir`.
+fn walk(dir: &Path, prefix: &str, out: &mut Vec<(String, Vec<u8>)>) {
+    for entry in std::fs::read_dir(dir).unwrap() {
+        let entry = entry.unwrap();
+        let name = entry.file_name().to_string_lossy().into_owned();
+        let rel = if prefix.is_empty() {
+            name
+        } else {
+            format!("{prefix}/{name}")
+        };
+        let p = entry.path();
+        if p.is_dir() {
+            walk(&p, &rel, out);
+        } else {
+            out.push((rel, std::fs::read(&p).unwrap()));
+        }
+    }
+}
+
+/// Batch-report the store and assert every produced file is served
+/// byte-identically.  Returns the batch file list.
+fn assert_serves_batch_output(
+    addr: SocketAddr,
+    store: &Path,
+    policy: &Path,
+    out: &Path,
+) -> Vec<(String, Vec<u8>)> {
+    // The gate verdict decides the exit code, not whether files are
+    // written — identity is the assertion here.
+    let code = run_cli(&format!(
+        "report --store {} --output {} --format all --gate {}",
+        store.display(),
+        out.display(),
+        policy.display()
+    ))
+    .unwrap();
+    assert!(code == 0 || code == 1, "unexpected report exit {code}");
+    let mut files = Vec::new();
+    walk(out, "", &mut files);
+    assert!(
+        files.iter().any(|(n, _)| n == "report.json"),
+        "batch produced no report.json"
+    );
+    assert!(files.iter().any(|(n, _)| n == "gate.json"));
+    assert!(files.iter().any(|(n, _)| n.starts_with("badges/")));
+    for (name, bytes) in &files {
+        let (status, body) = get(addr, &format!("/{name}"));
+        assert_eq!(status, 200, "GET /{name}");
+        assert_eq!(
+            &body, bytes,
+            "served /{name} differs from the batch emitter output"
+        );
+    }
+    // `/` is the site index.
+    let (status, body) = get(addr, "/");
+    assert_eq!(status, 200);
+    let index = files.iter().find(|(n, _)| n == "index.html").unwrap();
+    assert_eq!(body, index.1);
+    files
+}
+
+#[test]
+fn served_payloads_match_batch_before_and_after_ingest() {
+    let td = TempDir::new("serve-identity").unwrap();
+    let (store, policy) = seeded_store(&td);
+    let handle = serve::spawn(serve_opts(&store, &policy)).unwrap();
+    let addr = handle.addr();
+
+    let (status, body) = get(addr, "/healthz");
+    assert_eq!(status, 200);
+    let health = String::from_utf8(body).unwrap();
+    assert!(health.contains("\"ok\":true"), "{health}");
+    assert!(health.contains("\"snapshot_seq\":1"), "{health}");
+
+    assert_serves_batch_output(addr, &store, &policy, &td.path().join("b1"));
+
+    // Ingest one run over HTTP; the batch CLI sees the same store
+    // mutation (read paths take no lock) and must still byte-match.
+    let fresh = run(2, 14.0, 9.5, 3000, "third0003")
+        .to_json()
+        .to_string_pretty();
+    let (status, body) = request(
+        addr,
+        "POST",
+        "/ingest?source=exp/talp_2x2_run2.json",
+        fresh.as_bytes(),
+    );
+    assert_eq!(status, 200, "{}", String::from_utf8_lossy(&body));
+    let reply = String::from_utf8(body).unwrap();
+    assert!(reply.contains("\"stored\":true"), "{reply}");
+    assert!(reply.contains("\"snapshot_seq\":2"), "{reply}");
+
+    // Incrementality witness: only the "exp" experiment re-analyzed —
+    // its two (experiment, config) histories, nothing else.
+    let (_, body) = get(addr, "/statsz");
+    let stats = String::from_utf8(body).unwrap();
+    assert!(
+        stats.contains("\"reanalyzed_histories_last\":2"),
+        "{stats}"
+    );
+    assert!(stats.contains("\"stored_runs\":5"), "{stats}");
+
+    assert_serves_batch_output(addr, &store, &policy, &td.path().join("b2"));
+
+    // Re-POSTing identical bytes is a content-addressed no-op.
+    let (status, body) = request(
+        addr,
+        "POST",
+        "/ingest?source=exp/talp_2x2_run2.json",
+        fresh.as_bytes(),
+    );
+    assert_eq!(status, 200);
+    let reply = String::from_utf8(body).unwrap();
+    assert!(reply.contains("\"stored\":false"), "{reply}");
+    assert!(reply.contains("\"snapshot_seq\":2"), "{reply}");
+
+    handle.shutdown().unwrap();
+}
+
+#[test]
+fn rejected_posts_do_not_poison_the_snapshot() {
+    let td = TempDir::new("serve-reject").unwrap();
+    let (store, policy) = seeded_store(&td);
+    let mut opts = serve_opts(&store, &policy);
+    opts.max_body_bytes = 1024;
+    let handle = serve::spawn(opts).unwrap();
+    let addr = handle.addr();
+    let (_, before) = get(addr, "/report.json");
+
+    // No source param.
+    let (status, _) = request(addr, "POST", "/ingest", b"{}");
+    assert_eq!(status, 400);
+    // Path escape attempts.
+    for bad in ["/etc/x.json", "../up.json", "a//b.json", "a/../b.json"] {
+        let (status, _) = request(
+            addr,
+            "POST",
+            &format!("/ingest?source={bad}"),
+            b"{}",
+        );
+        assert_eq!(status, 400, "source={bad}");
+    }
+    // Empty body.
+    let (status, _) =
+        request(addr, "POST", "/ingest?source=exp/a.json", &[]);
+    assert_eq!(status, 400);
+    // Valid JSON that is not a TALP artifact.
+    let (status, body) = request(
+        addr,
+        "POST",
+        "/ingest?source=exp/a.json",
+        b"{\"not\":\"talp\"}",
+    );
+    assert_eq!(status, 400, "{}", String::from_utf8_lossy(&body));
+    // Unparsable bytes.
+    let (status, _) =
+        request(addr, "POST", "/ingest?source=exp/a.json", b"][");
+    assert_eq!(status, 400);
+    // Over the body cap.
+    let (status, _) = request(
+        addr,
+        "POST",
+        "/ingest?source=exp/a.json",
+        &vec![b'x'; 4096],
+    );
+    assert_eq!(status, 413);
+    // Companion metadata without a commit.
+    let (status, _) = request(
+        addr,
+        "POST",
+        "/ingest?source=exp/a.json&branch=main",
+        b"{}",
+    );
+    assert_eq!(status, 400);
+    // Bad timestamp.
+    let (status, _) = request(
+        addr,
+        "POST",
+        "/ingest?source=exp/a.json&commit=abc&timestamp=yesterday",
+        b"{}",
+    );
+    assert_eq!(status, 400);
+    // Unknown path and method.
+    let (status, _) = get(addr, "/nope.json");
+    assert_eq!(status, 404);
+    let (status, _) = request(addr, "POST", "/report.json", b"{}");
+    assert_eq!(status, 405);
+
+    // Through all of that: same snapshot, same bytes, nothing stored.
+    let (_, health) = get(addr, "/healthz");
+    assert!(
+        String::from_utf8(health).unwrap().contains("\"snapshot_seq\":1")
+    );
+    let (_, after) = get(addr, "/report.json");
+    assert_eq!(before, after);
+    let summary = handle.shutdown().unwrap();
+    assert_eq!(summary.ingested, 0);
+    assert!(summary.rejected >= 10, "{summary:?}");
+    assert_eq!(RunStore::open(&store).unwrap().len(), 4);
+}
+
+#[test]
+fn concurrent_readers_see_old_or_new_never_torn() {
+    let td = TempDir::new("serve-race").unwrap();
+    let (store, policy) = seeded_store(&td);
+    let handle = serve::spawn(serve_opts(&store, &policy)).unwrap();
+    let addr = handle.addr();
+
+    let (_, old) = get(addr, "/report.json");
+    let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(
+        false,
+    ));
+    let reader_stop = std::sync::Arc::clone(&stop);
+    let reader = std::thread::spawn(move || {
+        let mut seen = Vec::new();
+        while !reader_stop.load(std::sync::atomic::Ordering::SeqCst) {
+            let (status, body) = get(addr, "/report.json");
+            assert_eq!(status, 200);
+            seen.push(body);
+        }
+        seen
+    });
+
+    for i in 0..3 {
+        let fresh = run(2, 14.0 - i as f64, 9.0, 4000 + i as i64, "racerace")
+            .to_json()
+            .to_string_pretty();
+        let (status, _) = request(
+            addr,
+            "POST",
+            &format!("/ingest?source=exp/race_{i}.json"),
+            fresh.as_bytes(),
+        );
+        assert_eq!(status, 200);
+    }
+    let (_, new) = get(addr, "/report.json");
+    stop.store(true, std::sync::atomic::Ordering::SeqCst);
+    let seen = reader.join().unwrap();
+    assert!(!seen.is_empty());
+
+    // Every observed body must be one of the four complete snapshot
+    // generations — never a mix.  Generations differ only by the three
+    // ingests, so collect the valid set by replaying batch reports is
+    // overkill: old and new bound the set; intermediate generations
+    // are validated structurally (parseable, full document).
+    for body in &seen {
+        if body == &old || body == &new {
+            continue;
+        }
+        let text = String::from_utf8(body.clone())
+            .expect("served report.json is valid UTF-8");
+        assert!(
+            text.ends_with("}\n") || text.ends_with('}'),
+            "torn response tail: ...{:?}",
+            &text[text.len().saturating_sub(40)..]
+        );
+        talp_pages::util::json::Json::parse(&text)
+            .expect("every served generation parses as a full document");
+    }
+    handle.shutdown().unwrap();
+}
+
+#[test]
+fn shutdown_releases_lock_flushes_watch_and_leaves_no_torn_shard() {
+    let td = TempDir::new("serve-shutdown").unwrap();
+    let (store, policy) = seeded_store(&td);
+    let watch = td.path().join("drop");
+    std::fs::create_dir_all(&watch).unwrap();
+
+    let mut opts = serve_opts(&store, &policy);
+    opts.watch = Some(watch.clone());
+    // Poll interval longer than the test: the shutdown flush is the
+    // only way this artifact can make it in — which is the point.
+    opts.poll_ms = 60_000;
+    let handle = serve::spawn(opts).unwrap();
+    let addr = handle.addr();
+
+    // While running, the writer lock blocks a concurrent CLI ingest...
+    assert!(store.join(LOCK_FILE_NAME).exists());
+    let err = run_cli(&format!(
+        "ingest --input {} --store {}",
+        td.path().join("talp").display(),
+        store.display()
+    ))
+    .unwrap_err();
+    assert!(
+        err.to_string().contains("locked by a running writer"),
+        "{err:#}"
+    );
+    // ...but read-only batch reports work beside the server.
+    assert!(run_cli(&format!(
+        "report --store {} --output {} --format json",
+        store.display(),
+        td.path().join("beside").display()
+    ))
+    .is_ok());
+
+    // Drop an artifact for the shutdown flush to pick up.
+    run(2, 13.0, 8.5, 5000, "flushed00")
+        .write_file(&watch.join("exp/talp_2x2_run9.json"))
+        .unwrap();
+
+    // Shutdown over HTTP, then wait for the clean exit.
+    let (status, _) = request(addr, "POST", "/shutdown", &[]);
+    assert_eq!(status, 200);
+    let summary = handle.wait().unwrap();
+    assert!(summary.ingested >= 1, "watch flush ingested: {summary:?}");
+
+    // Lock released; no torn shard: a reload sees every record and no
+    // corruption warnings; a new writer starts immediately.
+    assert!(!store.join(LOCK_FILE_NAME).exists());
+    let reloaded = RunStore::open(&store).unwrap();
+    assert!(reloaded.warnings().is_empty(), "{:?}", reloaded.warnings());
+    assert_eq!(reloaded.len(), 5, "4 seeded + 1 flushed");
+    let second = serve::spawn(serve_opts(&store, &policy)).unwrap();
+    second.shutdown().unwrap();
+}
+
+#[test]
+fn torn_trailing_shard_line_tolerated_like_batch() {
+    let td = TempDir::new("serve-torn").unwrap();
+    let (store, policy) = seeded_store(&td);
+    // Simulate a writer killed mid-append.
+    let shard = store.join("shards/exp__2x2.jsonl");
+    let mut text = std::fs::read_to_string(&shard).unwrap();
+    text.push_str("{\"hash\":\"zzz\",\"experiment\":\"exp\",\"run\":{");
+    std::fs::write(&shard, text).unwrap();
+
+    let handle = serve::spawn(serve_opts(&store, &policy)).unwrap();
+    let files = assert_serves_batch_output(
+        handle.addr(),
+        &store,
+        &policy,
+        &td.path().join("batch"),
+    );
+    let report = files.iter().find(|(n, _)| n == "report.json").unwrap();
+    let doc = String::from_utf8(report.1.clone()).unwrap();
+    assert!(doc.contains("skipping corrupt record"), "{doc}");
+    handle.shutdown().unwrap();
+}

@@ -17,7 +17,7 @@ use talp_pages::apps::{self, run_with_talp, CodeVersion, Genex, TeaLeaf};
 use talp_pages::pop::RunMetrics;
 use talp_pages::session::{self, AnalyzeOptions, Session};
 use talp_pages::sim::{MachineSpec, ResourceConfig};
-use talp_pages::store::{ingest_dir, RunStore};
+use talp_pages::store::{ingest_dir, Admission, RunStore};
 use talp_pages::talp::{GitMeta, RunData};
 use talp_pages::tools::postprocess::{dimemas, merge};
 use talp_pages::tools::resources::ResourceMeter;
@@ -191,7 +191,7 @@ fn main() {
     let store_root = sd.path().join("store");
     {
         let mut store = RunStore::create_or_open(&store_root).unwrap();
-        let rep = ingest_dir(&mut store, td.path(), 0, None).unwrap();
+        let rep = ingest_dir(&mut store, td.path()).unwrap();
         assert_eq!(rep.stored, 500, "corpus must fully ingest");
     }
     let store_out = TempDir::new("perf-store-out").unwrap();
@@ -304,6 +304,54 @@ fn main() {
         indexed.stats.decoded_lines,
         control.stats.decoded_lines
     );
+
+    // 4d. Adapter admission throughput: 1000 BeeSwarm sweep files x 10
+    //     scale points = 10k runs through the auto-detecting
+    //     [`Admission`] path (hash, sniff, parse, normalize, append).
+    let ad = TempDir::new("perf-adapters").unwrap();
+    std::fs::create_dir_all(ad.path().join("bsw")).unwrap();
+    for f in 0..1000u32 {
+        let scales: String = (1..=10u32)
+            .map(|p| {
+                format!(
+                    "{{\"processes\": {p}, \"threads\": 2, \"time_s\": \
+                     {:.1}, \"efficiency\": 0.9}}",
+                    10.0 + f as f64
+                )
+            })
+            .collect::<Vec<_>>()
+            .join(", ");
+        let doc = format!(
+            "{{\"application\": \"bsw\", \"machine\": \"mn5\", \
+             \"timestamp\": \"2026-01-01T00:00:00Z\", \
+             \"scales\": [{scales}]}}\n"
+        );
+        std::fs::write(
+            ad.path().join(format!("bsw/sweep_{f:04}.json")),
+            doc,
+        )
+        .unwrap();
+    }
+    let m_adapt = bench("adapters: auto-detect ingest 10k runs", 0, 3, || {
+        let st = TempDir::new("perf-adapters-store").unwrap();
+        let mut store =
+            RunStore::create_or_open(&st.path().join("store")).unwrap();
+        let rep = Admission::new().ingest_dir(&mut store, ad.path()).unwrap();
+        assert_eq!(rep.stored, 10_000, "every scale point must admit");
+        assert_eq!(rep.formats.get("beeswarm"), Some(&10_000));
+        std::hint::black_box(rep.stored);
+    });
+    println!("{}", m_adapt.report());
+    println!(
+        "  -> {:.0} runs/s through the adapter registry",
+        10_000.0 / m_adapt.min_s.max(1e-12)
+    );
+    let record = Json::from_pairs(vec![
+        ("bench", Json::Str("adapter_ingest_10k".into())),
+        ("corpus_runs", Json::Num(10_000.0)),
+        ("ingest_s", Json::Num(m_adapt.min_s)),
+    ]);
+    println!("BENCH_JSON {}", record.to_string_compact());
 
     // 5. Trace post-processing throughput.
     let ttd = TempDir::new("perf-trace").unwrap();

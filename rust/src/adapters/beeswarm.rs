@@ -1,0 +1,306 @@
+//! BeeSwarm-style CI scalability-test output: one JSON per sweep,
+//! with a `scales` array of `{processes, threads, time_s,
+//! efficiency}` points (PAPERS.md).  This is the multi-run format —
+//! one file expands into one record per scale point, each suffixed
+//! `#<RxT>` so the store keeps every configuration as its own
+//! history.
+//!
+//! Normalization: each scale point becomes a single-`Global`-region
+//! run whose per-rank useful time is `time_s * efficiency * threads`,
+//! so the computed parallel efficiency equals the producer's reported
+//! efficiency exactly (`PE = Σu_p / (ncpu·E)`); the region tree and
+//! MPI/OpenMP split are lost, which is inherent to the producer.
+
+use anyhow::{bail, Context, Result};
+
+use crate::pop::RunMetrics;
+use crate::talp::{GitMeta, ProcStats, RegionData, RunData};
+use crate::util::json::Json;
+use crate::util::timefmt;
+
+use super::{has_token, Adapter, Confidence};
+
+/// BeeSwarm-style scalability sweep JSON (one run per scale point).
+pub struct BeeSwarmAdapter;
+
+impl Adapter for BeeSwarmAdapter {
+    fn name(&self) -> &'static str {
+        "beeswarm"
+    }
+
+    fn description(&self) -> &'static str {
+        "BeeSwarm-style CI scalability sweep (one run per scale point)"
+    }
+
+    fn detect(&self, bytes: &[u8]) -> Confidence {
+        if has_token(bytes, "\"scales\"") {
+            Confidence::Yes
+        } else {
+            Confidence::No
+        }
+    }
+
+    fn parse(&self, bytes: &[u8], source: &str) -> Result<Vec<RunMetrics>> {
+        let text = std::str::from_utf8(bytes)
+            .with_context(|| format!("parsing {source}: not UTF-8"))?;
+        let j = Json::parse(text)
+            .with_context(|| format!("parsing {source}"))?;
+        let timestamp = j
+            .get("timestamp")
+            .and_then(Json::as_str)
+            .and_then(timefmt::from_iso8601)
+            .with_context(|| {
+                format!("parsing {source}: missing/bad timestamp")
+            })?;
+        let app = j.str_or("application", "beeswarm").to_string();
+        let machine = j.str_or("machine", "unknown").to_string();
+        let git = j.get("commit").and_then(Json::as_str).map(|commit| {
+            GitMeta {
+                commit: commit.to_string(),
+                branch: j.str_or("branch", "main").to_string(),
+                commit_timestamp: j
+                    .get("commit_date")
+                    .and_then(Json::as_str)
+                    .and_then(timefmt::from_iso8601)
+                    .unwrap_or(timestamp),
+                message: j.str_or("commit_message", "").to_string(),
+            }
+        });
+        let scales = j
+            .get("scales")
+            .and_then(Json::as_arr)
+            .with_context(|| {
+                format!("parsing {source}: scales is not a list")
+            })?;
+        if scales.is_empty() {
+            bail!("parsing {source}: no scale points");
+        }
+
+        let mut runs = Vec::with_capacity(scales.len());
+        for (i, s) in scales.iter().enumerate() {
+            let ranks = s
+                .get("processes")
+                .and_then(Json::as_u64)
+                .with_context(|| {
+                    format!("parsing {source}: scale #{i} has no processes")
+                })? as u32;
+            let threads =
+                s.get("threads").and_then(Json::as_u64).unwrap_or(1) as u32;
+            if ranks == 0 || threads == 0 {
+                bail!(
+                    "parsing {source}: scale #{i} resources must be \
+                     positive ({ranks}x{threads})"
+                );
+            }
+            let time_s = s.num_or("time_s", f64::NAN);
+            if !time_s.is_finite() || time_s <= 0.0 {
+                bail!("parsing {source}: scale #{i} has no time_s");
+            }
+            let efficiency = s.num_or("efficiency", f64::NAN);
+            if !efficiency.is_finite() {
+                bail!("parsing {source}: scale #{i} has no efficiency");
+            }
+            let efficiency = efficiency.clamp(0.0, 1.0);
+            let nodes =
+                s.get("nodes").and_then(Json::as_u64).unwrap_or(1) as u32;
+            let data = RunData {
+                dlb_version: "beeswarm".to_string(),
+                app: app.clone(),
+                machine: machine.clone(),
+                timestamp,
+                ranks,
+                threads,
+                nodes,
+                regions: vec![RegionData {
+                    name: "Global".to_string(),
+                    elapsed_s: time_s,
+                    visits: 1,
+                    procs: (0..ranks)
+                        .map(|rank| ProcStats {
+                            rank,
+                            elapsed_s: time_s,
+                            // Σ useful = ranks·threads·time·eff, so the
+                            // computed PE is exactly `efficiency`.
+                            useful_s: time_s * efficiency * threads as f64,
+                            ..Default::default()
+                        })
+                        .collect(),
+                }],
+                git: git.clone(),
+            };
+            let run_source = format!("{source}#{ranks}x{threads}");
+            runs.push(RunMetrics::from_run(&data, &run_source));
+        }
+        Ok(runs)
+    }
+
+    fn emit(&self, data: &RunData) -> String {
+        let mut root = Json::obj();
+        root.push_field("application", Json::Str(data.app.clone()));
+        root.push_field("machine", Json::Str(data.machine.clone()));
+        root.push_field(
+            "timestamp",
+            Json::Str(timefmt::to_iso8601(data.timestamp)),
+        );
+        if let Some(g) = &data.git {
+            root.push_field("commit", Json::Str(g.commit.clone()));
+            root.push_field("branch", Json::Str(g.branch.clone()));
+            root.push_field(
+                "commit_date",
+                Json::Str(timefmt::to_iso8601(g.commit_timestamp)),
+            );
+            root.push_field(
+                "commit_message",
+                Json::Str(g.message.clone()),
+            );
+        }
+        // One emitted run is one scale point; the simulator merges
+        // points by concatenating `scales` arrays before writing.
+        let global = data.region("Global").or(data.regions.first());
+        let (time_s, efficiency) = match global {
+            Some(reg) => {
+                let useful: f64 =
+                    reg.procs.iter().map(|p| p.useful_s).sum();
+                let ncpu = (data.ranks * data.threads).max(1) as f64;
+                let pe = if reg.elapsed_s > 0.0 {
+                    (useful / (ncpu * reg.elapsed_s)).clamp(0.0, 1.0)
+                } else {
+                    0.0
+                };
+                (reg.elapsed_s, pe)
+            }
+            None => (0.0, 0.0),
+        };
+        root.push_field(
+            "scales",
+            Json::Arr(vec![Json::from_pairs(vec![
+                ("processes", Json::Num(data.ranks as f64)),
+                ("threads", Json::Num(data.threads as f64)),
+                ("nodes", Json::Num(data.nodes as f64)),
+                ("time_s", Json::Num(time_s)),
+                ("efficiency", Json::Num(efficiency)),
+            ])]),
+        );
+        root.to_string_pretty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc() -> &'static str {
+        r#"{
+  "application": "lulesh",
+  "machine": "cluster-a",
+  "timestamp": "2026-02-01T08:00:00Z",
+  "commit": "0123456789abcdef",
+  "branch": "main",
+  "commit_date": "2026-02-01T07:30:00Z",
+  "commit_message": "tune halo exchange",
+  "scales": [
+    {"processes": 1, "threads": 4, "time_s": 40.0, "efficiency": 1.0},
+    {"processes": 2, "threads": 4, "time_s": 21.0, "efficiency": 0.95},
+    {"processes": 4, "threads": 4, "time_s": 11.5, "efficiency": 0.87}
+  ]
+}"#
+    }
+
+    #[test]
+    fn detects_and_expands_one_run_per_scale() {
+        let bytes = doc().as_bytes();
+        assert_eq!(BeeSwarmAdapter.detect(bytes), Confidence::Yes);
+        let runs =
+            BeeSwarmAdapter.parse(bytes, "exp/sweep.json").unwrap();
+        assert_eq!(runs.len(), 3);
+        let sources: Vec<&str> =
+            runs.iter().map(|r| r.source.as_str()).collect();
+        assert_eq!(
+            sources,
+            [
+                "exp/sweep.json#1x4",
+                "exp/sweep.json#2x4",
+                "exp/sweep.json#4x4"
+            ]
+        );
+        let labels: Vec<String> =
+            runs.iter().map(|r| r.resources().label()).collect();
+        assert_eq!(labels, ["1x4", "2x4", "4x4"]);
+        // Reported efficiency is reproduced exactly as PE.
+        for (run, want) in runs.iter().zip([1.0, 0.95, 0.87]) {
+            let pe = run
+                .region("Global")
+                .unwrap()
+                .metrics
+                .parallel_efficiency;
+            assert!((pe - want).abs() < 1e-9, "{pe} vs {want}");
+            assert_eq!(run.app, "lulesh");
+            assert_eq!(
+                run.git.as_ref().unwrap().commit,
+                "0123456789abcdef"
+            );
+        }
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        for text in [
+            "{}",
+            r#"{"timestamp": "2026-01-01T00:00:00Z", "scales": []}"#,
+            r#"{"timestamp": "2026-01-01T00:00:00Z",
+                "scales": [{"threads": 2, "time_s": 1,
+                            "efficiency": 0.5}]}"#,
+            r#"{"timestamp": "2026-01-01T00:00:00Z",
+                "scales": [{"processes": 0, "time_s": 1,
+                            "efficiency": 0.5}]}"#,
+            r#"{"timestamp": "2026-01-01T00:00:00Z",
+                "scales": [{"processes": 2, "efficiency": 0.5}]}"#,
+            r#"{"timestamp": "2026-01-01T00:00:00Z",
+                "scales": [{"processes": 2, "time_s": 3}]}"#,
+            r#"{"scales": [{"processes": 2, "time_s": 3,
+                            "efficiency": 0.5}]}"#,
+        ] {
+            assert!(
+                BeeSwarmAdapter.parse(text.as_bytes(), "s.json").is_err(),
+                "{text}"
+            );
+        }
+    }
+
+    #[test]
+    fn emit_parse_round_trip_preserves_scale_and_efficiency() {
+        let data = RunData {
+            dlb_version: "x".into(),
+            app: "lulesh".into(),
+            machine: "cluster-a".into(),
+            timestamp: 1_750_000_000,
+            ranks: 4,
+            threads: 2,
+            nodes: 1,
+            regions: vec![RegionData {
+                name: "Global".into(),
+                elapsed_s: 8.0,
+                visits: 1,
+                procs: (0..4)
+                    .map(|rank| ProcStats {
+                        rank,
+                        elapsed_s: 8.0,
+                        useful_s: 8.0 * 0.9 * 2.0,
+                        ..Default::default()
+                    })
+                    .collect(),
+            }],
+            git: None,
+        };
+        let emitted = BeeSwarmAdapter.emit(&data);
+        assert!(emitted.ends_with('\n'));
+        let back = BeeSwarmAdapter
+            .parse(emitted.as_bytes(), "s.json")
+            .unwrap();
+        assert_eq!(back.len(), 1);
+        assert_eq!(back[0].source, "s.json#4x2");
+        let g = back[0].region("Global").unwrap();
+        assert!((g.metrics.elapsed_s - 8.0).abs() < 1e-9);
+        assert!((g.metrics.parallel_efficiency - 0.9).abs() < 1e-9);
+    }
+}

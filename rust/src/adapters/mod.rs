@@ -1,0 +1,262 @@
+//! Multi-format ingestion adapters (ROADMAP open item 3).
+//!
+//! Only TALP artifacts parsed before this layer existed; real projects
+//! run heterogeneous suites, so the store/gate/report stack gains a
+//! pluggable front end.  An [`Adapter`] recognizes a producer's JSON
+//! dialect ([`Adapter::detect`]) and normalizes each document into one
+//! or more [`pop::RunMetrics`](crate::pop::RunMetrics) — the form
+//! every downstream consumer (store, gate, report, serve, check)
+//! already speaks — so nothing after admission changes per format.
+//!
+//! The registry holds three adapters:
+//!
+//! | name         | producer                                   | detection tokens             |
+//! |--------------|--------------------------------------------|------------------------------|
+//! | `talp`       | DLB/TALP artifact (the native format)      | `"resources"` + `"regions"`  |
+//! | `root-bench` | ROOT-style continuous-benchmark JSON       | `"context"` + `"benchmarks"` |
+//! | `beeswarm`   | BeeSwarm-style CI scalability-test output  | `"scales"`                   |
+//!
+//! Detection is intentionally dumb — token presence over the raw
+//! bytes, no parse — so it is O(bytes) and cannot fail; a document
+//! claimed by more than one adapter is [`Detection::Ambiguous`], which
+//! the admission path turns into a hard error rather than guessing.
+//!
+//! Every adapter can also *emit* its format from the canonical
+//! [`RunData`] interchange form ([`Adapter::emit`]), which is how the
+//! deterministic workload simulator (`talp-pages sim`,
+//! [`crate::sim::corpus`]) writes corpora in any registered format.
+//! Lossy formats round-trip lossily by design: `root-bench` flattens
+//! to one 1x1 pseudo-run per file (preserving the efficiency ratio as
+//! cpu_time/real_time), `beeswarm` keeps only per-scale totals.
+//!
+//! Multi-run documents (one BeeSwarm file holds a whole scaling
+//! sweep) expand into one record per entry with the source suffixed
+//! `#<RxT>`, e.g. `exp/sweep.json#4x2`; the store's file-level
+//! identity ([`crate::store::RunStore::contains_file`]) strips the
+//! suffix so warm re-ingest still hashes-and-skips whole files.
+
+use anyhow::Result;
+
+use crate::pop::RunMetrics;
+use crate::talp::RunData;
+
+mod beeswarm;
+mod root_bench;
+mod talp;
+
+pub use beeswarm::BeeSwarmAdapter;
+pub use root_bench::RootBenchAdapter;
+pub use talp::TalpAdapter;
+
+/// How strongly an adapter claims a document.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Confidence {
+    /// The document is definitely not this format.
+    No,
+    /// Weak structural hints (e.g. one of two expected tokens).
+    Maybe,
+    /// The format's distinguishing tokens are all present.
+    Yes,
+}
+
+/// One ingestion format: recognize, normalize, emit.
+///
+/// `Sync` because the registry is a `static` shared across ingest
+/// worker threads.
+pub trait Adapter: Sync {
+    /// Registry name (`--format <name>`, `format=` query param).
+    fn name(&self) -> &'static str;
+
+    /// One-line description for `--help` and the README format table.
+    fn description(&self) -> &'static str;
+
+    /// Cheap, infallible format sniff over the raw bytes.
+    fn detect(&self, bytes: &[u8]) -> Confidence;
+
+    /// Normalize one document into run records.  `source` is the
+    /// scan-root-relative path of the file; single-run formats return
+    /// one record with `run.source == source`, multi-run formats
+    /// suffix each record `#<RxT>`.  Every returned run's `source`
+    /// must start with `source`.
+    fn parse(&self, bytes: &[u8], source: &str) -> Result<Vec<RunMetrics>>;
+
+    /// Render one canonical run in this adapter's on-disk format
+    /// (pretty-printed, trailing newline) — the simulator's writer.
+    fn emit(&self, data: &RunData) -> String;
+}
+
+/// All registered adapters, in detection order (`talp` first — the
+/// native format wins name lookups and docs list it first).
+pub fn registry() -> &'static [&'static dyn Adapter] {
+    static REGISTRY: [&'static dyn Adapter; 3] =
+        [&TalpAdapter, &RootBenchAdapter, &BeeSwarmAdapter];
+    &REGISTRY
+}
+
+/// Look an adapter up by its registry name.
+pub fn by_name(name: &str) -> Option<&'static dyn Adapter> {
+    registry().iter().copied().find(|a| a.name() == name)
+}
+
+/// Comma-separated registry names (error messages, usage text).
+pub fn names() -> String {
+    registry()
+        .iter()
+        .map(|a| a.name())
+        .collect::<Vec<_>>()
+        .join("|")
+}
+
+/// Outcome of registry auto-detection over one document.
+#[derive(Debug, Clone, Copy)]
+pub enum Detection {
+    /// Exactly one adapter claims the document at the highest
+    /// confidence present.
+    Match(&'static dyn Adapter),
+    /// More than one adapter claims it equally — admission refuses to
+    /// guess (hard error).
+    Ambiguous(&'static str, &'static str),
+    /// No adapter recognizes the document.
+    Unknown,
+}
+
+/// Auto-detect the format of `bytes` against the whole registry.
+///
+/// `Yes` claims beat `Maybe` claims; two claims at the same winning
+/// confidence are [`Detection::Ambiguous`].  A document that is not
+/// even a JSON object is [`Detection::Unknown`] without consulting
+/// any adapter.
+pub fn detect(bytes: &[u8]) -> Detection {
+    let starts_like_json = bytes
+        .iter()
+        .find(|b| !b" \t\r\n".contains(b))
+        .map(|&b| b == b'{')
+        .unwrap_or(false);
+    if !starts_like_json {
+        return Detection::Unknown;
+    }
+    for want in [Confidence::Yes, Confidence::Maybe] {
+        let mut claims = registry()
+            .iter()
+            .copied()
+            .filter(|a| a.detect(bytes) == want);
+        if let Some(first) = claims.next() {
+            return match claims.next() {
+                Some(second) => {
+                    Detection::Ambiguous(first.name(), second.name())
+                }
+                None => Detection::Match(first),
+            };
+        }
+    }
+    Detection::Unknown
+}
+
+/// `true` if the quoted JSON key (`"token"`) appears anywhere in the
+/// document bytes — the detection primitive shared by the adapters.
+pub(crate) fn has_token(bytes: &[u8], token: &str) -> bool {
+    debug_assert!(token.starts_with('"') && token.ends_with('"'));
+    let t = token.as_bytes();
+    t.len() <= bytes.len()
+        && bytes.windows(t.len()).any(|w| w == t)
+}
+
+/// Strip a multi-run record's `#<RxT>` suffix back to the file path
+/// the record came from (identity for single-run sources).
+pub fn file_of(source: &str) -> &str {
+    match source.find('#') {
+        Some(i) => &source[..i],
+        None => source,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{MachineSpec, ResourceConfig};
+
+    pub(crate) fn talp_doc() -> Vec<u8> {
+        let machine = MachineSpec::marenostrum5();
+        let res = ResourceConfig::new(2, 4);
+        let mut app =
+            crate::apps::Genex::salpha(1, crate::apps::CodeVersion::fixed());
+        app.timesteps = 2;
+        let (data, _) =
+            crate::apps::run_with_talp(&app, &machine, &res, 11, 1_700_000_000);
+        TalpAdapter.emit(&data).into_bytes()
+    }
+
+    #[test]
+    fn registry_names_are_stable_and_unique() {
+        let names: Vec<&str> =
+            registry().iter().map(|a| a.name()).collect();
+        assert_eq!(names, ["talp", "root-bench", "beeswarm"]);
+        assert!(by_name("talp").is_some());
+        assert!(by_name("root-bench").is_some());
+        assert!(by_name("beeswarm").is_some());
+        assert!(by_name("nope").is_none());
+        assert_eq!(names(), "talp|root-bench|beeswarm");
+    }
+
+    #[test]
+    fn each_emitted_doc_detects_as_exactly_its_own_adapter() {
+        let data = RunData::from_slice(
+            &talp_doc(),
+            std::path::Path::new("t.json"),
+        )
+        .unwrap();
+        for adapter in registry() {
+            let doc = adapter.emit(&data);
+            match detect(doc.as_bytes()) {
+                Detection::Match(a) => assert_eq!(
+                    a.name(),
+                    adapter.name(),
+                    "emitted {} doc must detect as itself",
+                    adapter.name()
+                ),
+                other => panic!(
+                    "{} doc detected as {other:?}",
+                    adapter.name()
+                ),
+            }
+        }
+    }
+
+    #[test]
+    fn ambiguous_and_unknown_detection() {
+        // Tokens of two formats in one document: refuse to guess.
+        let doc = br#"{"scales": [], "context": {}, "benchmarks": []}"#;
+        match detect(doc) {
+            Detection::Ambiguous(a, b) => {
+                assert_ne!(a, b);
+            }
+            other => panic!("expected ambiguous, got {other:?}"),
+        }
+        assert!(matches!(detect(b"{\"app\": 1}"), Detection::Unknown));
+        assert!(matches!(detect(b"]["), Detection::Unknown));
+        assert!(matches!(detect(b""), Detection::Unknown));
+        assert!(matches!(detect(b"[1, 2]"), Detection::Unknown));
+    }
+
+    #[test]
+    fn maybe_claims_resolve_only_without_yes() {
+        // "benchmarks" alone is a Maybe for root-bench; with no Yes
+        // claim anywhere it resolves to root-bench.
+        match detect(br#"{"benchmarks": []}"#) {
+            Detection::Match(a) => assert_eq!(a.name(), "root-bench"),
+            other => panic!("{other:?}"),
+        }
+        // A Yes claim (beeswarm's "scales") outranks the Maybe.
+        match detect(br#"{"benchmarks": 0, "scales": []}"#) {
+            Detection::Match(a) => assert_eq!(a.name(), "beeswarm"),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn file_of_strips_multi_run_suffix() {
+        assert_eq!(file_of("exp/sweep.json#4x2"), "exp/sweep.json");
+        assert_eq!(file_of("exp/run.json"), "exp/run.json");
+        assert_eq!(file_of("a#b#c"), "a");
+    }
+}

@@ -1,0 +1,355 @@
+//! ROOT-style continuous-benchmark JSON (Google-Benchmark dialect):
+//! `{"context": {...}, "benchmarks": [...]}` — the format the ROOT
+//! experiment's nightly performance CI publishes (PAPERS.md).
+//!
+//! Normalization: one file becomes one 1x1 pseudo-run.  Each
+//! benchmark entry maps to a region whose elapsed time is
+//! `real_time` and whose useful time is `cpu_time` (converted via
+//! `time_unit`), so the region's parallel efficiency is exactly the
+//! cpu/real utilization ratio the producer measured.  A synthetic
+//! `Global` region (sums over all entries) is added when the producer
+//! did not emit one, so badges, gates and scaling tables keyed on
+//! `Global` work unchanged.
+//!
+//! The format carries no rank/thread axis — `report --store` shows
+//! such runs as a `1x1` configuration; that loss is inherent to the
+//! producer, not the adapter.
+
+use anyhow::{bail, Context, Result};
+
+use crate::pop::RunMetrics;
+use crate::talp::{GitMeta, ProcStats, RegionData, RunData};
+use crate::util::json::Json;
+use crate::util::timefmt;
+
+use super::{has_token, Adapter, Confidence};
+
+/// ROOT/Google-Benchmark continuous-benchmark JSON (one pseudo-run
+/// per file).
+pub struct RootBenchAdapter;
+
+/// Seconds per `time_unit` (Google Benchmark defaults to ns).
+fn unit_seconds(unit: &str) -> Result<f64> {
+    Ok(match unit {
+        "ns" => 1e-9,
+        "us" => 1e-6,
+        "ms" => 1e-3,
+        "s" => 1.0,
+        other => bail!("unknown time_unit '{other}'"),
+    })
+}
+
+impl Adapter for RootBenchAdapter {
+    fn name(&self) -> &'static str {
+        "root-bench"
+    }
+
+    fn description(&self) -> &'static str {
+        "ROOT-style continuous-benchmark JSON (context + benchmarks)"
+    }
+
+    fn detect(&self, bytes: &[u8]) -> Confidence {
+        if has_token(bytes, "\"benchmarks\"") {
+            if has_token(bytes, "\"context\"") {
+                Confidence::Yes
+            } else {
+                Confidence::Maybe
+            }
+        } else {
+            Confidence::No
+        }
+    }
+
+    fn parse(&self, bytes: &[u8], source: &str) -> Result<Vec<RunMetrics>> {
+        let text = std::str::from_utf8(bytes)
+            .with_context(|| format!("parsing {source}: not UTF-8"))?;
+        let j = Json::parse(text)
+            .with_context(|| format!("parsing {source}"))?;
+        let ctx = j
+            .get("context")
+            .with_context(|| format!("parsing {source}: missing context"))?;
+        let timestamp = ctx
+            .get("date")
+            .and_then(Json::as_str)
+            .and_then(timefmt::from_iso8601)
+            .with_context(|| {
+                format!("parsing {source}: missing/bad context.date")
+            })?;
+        let entries = j
+            .get("benchmarks")
+            .and_then(Json::as_arr)
+            .with_context(|| {
+                format!("parsing {source}: benchmarks is not a list")
+            })?;
+        if entries.is_empty() {
+            bail!("parsing {source}: no benchmarks");
+        }
+
+        let mut regions: Vec<RegionData> = Vec::with_capacity(entries.len());
+        let (mut sum_elapsed, mut sum_useful) = (0.0f64, 0.0f64);
+        let mut saw_global = false;
+        for (i, b) in entries.iter().enumerate() {
+            let name = b
+                .get("name")
+                .and_then(Json::as_str)
+                .with_context(|| {
+                    format!("parsing {source}: benchmark #{i} has no name")
+                })?
+                .to_string();
+            let unit = unit_seconds(b.str_or("time_unit", "ns"))
+                .with_context(|| format!("parsing {source}: '{name}'"))?;
+            let real = b.num_or("real_time", f64::NAN) * unit;
+            if !real.is_finite() || real < 0.0 {
+                bail!("parsing {source}: '{name}' has no real_time");
+            }
+            // Missing cpu_time degrades to full utilization, like a
+            // serial benchmark that never sleeps.
+            let mut cpu = b.num_or("cpu_time", f64::NAN) * unit;
+            if !cpu.is_finite() {
+                cpu = real;
+            }
+            let cpu = cpu.clamp(0.0, real);
+            saw_global |= name == "Global";
+            sum_elapsed += real;
+            sum_useful += cpu;
+            regions.push(RegionData {
+                name,
+                elapsed_s: real,
+                visits: b.get("iterations").and_then(Json::as_u64).unwrap_or(1),
+                procs: vec![ProcStats {
+                    rank: 0,
+                    elapsed_s: real,
+                    useful_s: cpu,
+                    ..Default::default()
+                }],
+            });
+        }
+        if !saw_global {
+            regions.insert(
+                0,
+                RegionData {
+                    name: "Global".to_string(),
+                    elapsed_s: sum_elapsed,
+                    visits: 1,
+                    procs: vec![ProcStats {
+                        rank: 0,
+                        elapsed_s: sum_elapsed,
+                        useful_s: sum_useful,
+                        ..Default::default()
+                    }],
+                },
+            );
+        }
+
+        let git = ctx.get("commit").and_then(Json::as_str).map(|commit| {
+            GitMeta {
+                commit: commit.to_string(),
+                branch: ctx.str_or("branch", "main").to_string(),
+                commit_timestamp: ctx
+                    .get("commit_date")
+                    .and_then(Json::as_str)
+                    .and_then(timefmt::from_iso8601)
+                    .unwrap_or(timestamp),
+                message: ctx.str_or("commit_message", "").to_string(),
+            }
+        });
+        let data = RunData {
+            dlb_version: "root-bench".to_string(),
+            app: ctx.str_or("executable", "root-bench").to_string(),
+            machine: ctx.str_or("host_name", "unknown").to_string(),
+            timestamp,
+            ranks: 1,
+            threads: 1,
+            nodes: 1,
+            regions,
+            git,
+        };
+        Ok(vec![RunMetrics::from_run(&data, source)])
+    }
+
+    fn emit(&self, data: &RunData) -> String {
+        let mut ctx = Json::obj();
+        ctx.push_field(
+            "date",
+            Json::Str(timefmt::to_iso8601(data.timestamp)),
+        );
+        ctx.push_field("executable", Json::Str(data.app.clone()));
+        ctx.push_field("host_name", Json::Str(data.machine.clone()));
+        ctx.push_field(
+            "num_cpus",
+            Json::Num((data.ranks * data.threads) as f64),
+        );
+        if let Some(g) = &data.git {
+            ctx.push_field("commit", Json::Str(g.commit.clone()));
+            ctx.push_field("branch", Json::Str(g.branch.clone()));
+            ctx.push_field(
+                "commit_date",
+                Json::Str(timefmt::to_iso8601(g.commit_timestamp)),
+            );
+            ctx.push_field("commit_message", Json::Str(g.message.clone()));
+        }
+        let ncpus = (data.ranks * data.threads).max(1) as f64;
+        let benchmarks: Vec<Json> = data
+            .regions
+            .iter()
+            .map(|reg| {
+                let useful: f64 =
+                    reg.procs.iter().map(|p| p.useful_s).sum();
+                Json::from_pairs(vec![
+                    ("name", Json::Str(reg.name.clone())),
+                    ("iterations", Json::Num(reg.visits as f64)),
+                    (
+                        "real_time",
+                        Json::Num((reg.elapsed_s * 1e9).round()),
+                    ),
+                    // Mean useful per cpu keeps the parsed 1x1 run's
+                    // parallel efficiency equal to this run's.
+                    (
+                        "cpu_time",
+                        Json::Num((useful / ncpus * 1e9).round()),
+                    ),
+                    ("time_unit", Json::Str("ns".to_string())),
+                ])
+            })
+            .collect();
+        let mut root = Json::obj();
+        root.push_field("context", ctx);
+        root.push_field("benchmarks", Json::Arr(benchmarks));
+        root.to_string_pretty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc() -> &'static str {
+        r#"{
+  "context": {
+    "date": "2026-01-05T12:00:00Z",
+    "executable": "tree-io",
+    "host_name": "runner-7",
+    "num_cpus": 8,
+    "commit": "feedc0defeedc0de",
+    "branch": "main",
+    "commit_date": "2026-01-05T11:00:00Z",
+    "commit_message": "speed up basket reads"
+  },
+  "benchmarks": [
+    {"name": "BM_Read", "iterations": 50, "real_time": 2.0e9,
+     "cpu_time": 1.5e9, "time_unit": "ns"},
+    {"name": "BM_Write", "iterations": 20, "real_time": 1.0e9,
+     "cpu_time": 0.9e9, "time_unit": "ns"}
+  ]
+}"#
+    }
+
+    #[test]
+    fn detects_and_parses_with_synthetic_global() {
+        let bytes = doc().as_bytes();
+        assert_eq!(RootBenchAdapter.detect(bytes), Confidence::Yes);
+        let runs =
+            RootBenchAdapter.parse(bytes, "ci/bench.json").unwrap();
+        assert_eq!(runs.len(), 1);
+        let run = &runs[0];
+        assert_eq!(run.source, "ci/bench.json");
+        assert_eq!((run.ranks, run.threads), (1, 1));
+        assert_eq!(run.app, "tree-io");
+        assert_eq!(run.machine, "runner-7");
+        let names: Vec<&str> =
+            run.regions.iter().map(|r| r.name.as_str()).collect();
+        assert_eq!(names, ["Global", "BM_Read", "BM_Write"]);
+        // Global sums: 3s elapsed, 2.4s useful → PE 0.8.
+        let g = run.region("Global").unwrap();
+        assert!((g.metrics.elapsed_s - 3.0).abs() < 1e-9);
+        assert!((g.metrics.parallel_efficiency - 0.8).abs() < 1e-9);
+        // cpu/real per entry: BM_Read PE = 0.75.
+        let r = run.region("BM_Read").unwrap();
+        assert!((r.metrics.parallel_efficiency - 0.75).abs() < 1e-9);
+        assert_eq!(r.visits, 50);
+        let git = run.git.as_ref().unwrap();
+        assert_eq!(git.commit, "feedc0defeedc0de");
+        assert_eq!(run.effective_timestamp(), git.commit_timestamp);
+    }
+
+    #[test]
+    fn time_units_convert() {
+        let text = r#"{"context": {"date": "2026-01-01T00:00:00Z"},
+            "benchmarks": [
+              {"name": "Global", "real_time": 1500.0,
+               "cpu_time": 750.0, "time_unit": "ms"}]}"#;
+        let runs =
+            RootBenchAdapter.parse(text.as_bytes(), "b.json").unwrap();
+        let g = runs[0].region("Global").unwrap();
+        assert!((g.metrics.elapsed_s - 1.5).abs() < 1e-9);
+        assert!((g.metrics.parallel_efficiency - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        for text in [
+            "{}",
+            r#"{"context": {}, "benchmarks": []}"#,
+            r#"{"context": {"date": "2026-01-01T00:00:00Z"},
+                "benchmarks": [{"iterations": 1}]}"#,
+            r#"{"context": {"date": "2026-01-01T00:00:00Z"},
+                "benchmarks": [{"name": "x", "real_time": 1,
+                                "time_unit": "fortnights"}]}"#,
+            r#"{"context": {"date": "nope"}, "benchmarks": [
+                {"name": "x", "real_time": 1}]}"#,
+        ] {
+            assert!(
+                RootBenchAdapter.parse(text.as_bytes(), "b.json").is_err(),
+                "{text}"
+            );
+        }
+    }
+
+    #[test]
+    fn emit_parse_round_trip_preserves_efficiency() {
+        let runs =
+            RootBenchAdapter.parse(doc().as_bytes(), "a.json").unwrap();
+        // Re-emit from a canonical RunData and parse again: the
+        // Global PE must survive the lossy round trip.
+        let data = RunData {
+            dlb_version: "x".into(),
+            app: "tree-io".into(),
+            machine: "runner-7".into(),
+            timestamp: 1_700_000_000,
+            ranks: 2,
+            threads: 4,
+            nodes: 1,
+            regions: vec![RegionData {
+                name: "Global".into(),
+                elapsed_s: 10.0,
+                visits: 1,
+                procs: (0..2)
+                    .map(|r| ProcStats {
+                        rank: r,
+                        elapsed_s: 10.0,
+                        useful_s: 30.0, // PE = 60 / (8*10) = 0.75
+                        ..Default::default()
+                    })
+                    .collect(),
+            }],
+            git: None,
+        };
+        let emitted = RootBenchAdapter.emit(&data);
+        let back = RootBenchAdapter
+            .parse(emitted.as_bytes(), "b.json")
+            .unwrap();
+        let pe_before = runs[0]
+            .region("Global")
+            .unwrap()
+            .metrics
+            .parallel_efficiency;
+        assert!((pe_before - 0.8).abs() < 1e-9);
+        let pe = back[0]
+            .region("Global")
+            .unwrap()
+            .metrics
+            .parallel_efficiency;
+        assert!((pe - 0.75).abs() < 1e-9, "{pe}");
+        assert!(emitted.ends_with('\n'));
+    }
+}

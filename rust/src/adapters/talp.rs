@@ -1,0 +1,102 @@
+//! The native format as an adapter: a thin wrapper over the existing
+//! streaming [`RunData::from_slice`] decoder and [`RunData::write_to`]
+//! encoder, so the unified admission path has no special case for
+//! TALP and the simulator emits byte-identical artifacts to
+//! [`RunData::write_file`].
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::pop::RunMetrics;
+use crate::talp::RunData;
+use crate::util::json::JsonWriter;
+
+use super::{has_token, Adapter, Confidence};
+
+/// DLB/TALP artifact JSON (one run per file).
+pub struct TalpAdapter;
+
+impl Adapter for TalpAdapter {
+    fn name(&self) -> &'static str {
+        "talp"
+    }
+
+    fn description(&self) -> &'static str {
+        "DLB/TALP artifact JSON (native format, one run per file)"
+    }
+
+    fn detect(&self, bytes: &[u8]) -> Confidence {
+        if has_token(bytes, "\"resources\"") && has_token(bytes, "\"regions\"")
+        {
+            Confidence::Yes
+        } else if has_token(bytes, "\"dlb_version\"") {
+            Confidence::Maybe
+        } else {
+            Confidence::No
+        }
+    }
+
+    fn parse(&self, bytes: &[u8], source: &str) -> Result<Vec<RunMetrics>> {
+        let data = RunData::from_slice(bytes, Path::new(source))?;
+        Ok(vec![RunMetrics::from_run(&data, source)])
+    }
+
+    fn emit(&self, data: &RunData) -> String {
+        // The exact bytes `RunData::write_file` puts on disk.
+        let procs: usize = data.regions.iter().map(|r| r.procs.len()).sum();
+        let mut w = JsonWriter::with_capacity(1024 + procs * 470, true);
+        data.write_to(&mut w);
+        w.newline();
+        w.into_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::talp_doc;
+    use super::*;
+
+    #[test]
+    fn detects_and_parses_native_artifacts() {
+        let doc = talp_doc();
+        assert_eq!(TalpAdapter.detect(&doc), Confidence::Yes);
+        let runs = TalpAdapter.parse(&doc, "exp/a.json").unwrap();
+        assert_eq!(runs.len(), 1);
+        assert_eq!(runs[0].source, "exp/a.json");
+        assert_eq!(runs[0].resources().label(), "2x4");
+    }
+
+    #[test]
+    fn parse_matches_direct_scan_reduction() {
+        // The adapter path must be the identical reduction the folder
+        // scanner performs — same decoder, same `from_run`.
+        let doc = talp_doc();
+        let data =
+            RunData::from_slice(&doc, Path::new("exp/a.json")).unwrap();
+        let direct = RunMetrics::from_run(&data, "exp/a.json");
+        let adapted =
+            TalpAdapter.parse(&doc, "exp/a.json").unwrap().remove(0);
+        assert_eq!(
+            adapted.to_json().to_string_compact(),
+            direct.to_json().to_string_compact()
+        );
+    }
+
+    #[test]
+    fn emit_round_trips_byte_identically() {
+        let doc = talp_doc();
+        let data =
+            RunData::from_slice(&doc, Path::new("x.json")).unwrap();
+        assert_eq!(TalpAdapter.emit(&data).as_bytes(), &doc[..]);
+    }
+
+    #[test]
+    fn rejects_non_talp() {
+        assert_eq!(
+            TalpAdapter.detect(br#"{"benchmarks": []}"#),
+            Confidence::No
+        );
+        assert!(TalpAdapter.parse(b"{}", "x.json").is_err());
+    }
+}

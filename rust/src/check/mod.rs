@@ -305,6 +305,9 @@ pub fn describe(code: &str) -> &'static str {
         "TP019" => "orphaned store writer lock",
         "TP020" => "metrics cache version skew (will cold-start)",
         "TP021" => "metrics cache invalid (will cold-start)",
+        "TP022" => "artifact tree mixes ingestion formats",
+        "TP023" => "ambiguous artifact format (several adapters claim it)",
+        "TP024" => "recognized by an ingestion adapter but fails to parse",
         "TP030" => "report schema_version not understood by this build",
         "TP031" => "report document invalid",
         "TP040" => "policy rule matches nothing in the corpus",
@@ -363,14 +366,57 @@ pub fn run_check(opts: &CheckOptions) -> Result<CheckReport> {
     if let Some(input) = &opts.input {
         let scan =
             scan_metrics(input, &mut MetricsCache::new(), opts.jobs)?;
+        // Files the TALP scanner rejects may be valid artifacts in
+        // another registered ingestion format: re-sniff each TP002
+        // through the adapter registry before judging it.
+        let mut formats: std::collections::BTreeMap<&'static str, usize> =
+            std::collections::BTreeMap::new();
         for d in &scan.warnings {
+            let mut d = d.clone();
+            if d.code == "TP002" {
+                match reclassify_foreign(&d) {
+                    Reclass::Foreign(name) => {
+                        // A valid artifact in another format is not a
+                        // finding — ingest admits it via its adapter.
+                        *formats.entry(name).or_insert(0) += 1;
+                        continue;
+                    }
+                    Reclass::Diag(foreign) => d = foreign,
+                    Reclass::Keep => {}
+                }
+            }
             // The report engine tolerates a corrupt artifact; check
             // mode exists to catch it, so escalate to an error.
-            let mut d = d.clone();
             if d.code == "TP001" || d.code == "TP002" {
                 d.severity = Severity::Error;
             }
             rep.push(d);
+        }
+        let talp_files: usize =
+            scan.experiments.iter().map(|e| e.runs.len()).sum();
+        if talp_files > 0 {
+            formats.insert("talp", talp_files);
+        }
+        if formats.len() >= 2 {
+            let mix = formats
+                .iter()
+                .map(|(name, n)| format!("{name} {n}"))
+                .collect::<Vec<_>>()
+                .join(", ");
+            rep.push(
+                Diagnostic::info(
+                    "TP022",
+                    input.display().to_string(),
+                    format!(
+                        "tree mixes {} ingestion formats ({mix})",
+                        formats.len()
+                    ),
+                )
+                .with_hint(
+                    "intentional mixes are fine; pin one with `ingest \
+                     --format <name>` to reject strays",
+                ),
+            );
         }
         corpus = Some(scan);
     }
@@ -420,6 +466,57 @@ pub fn run_check(opts: &CheckOptions) -> Result<CheckReport> {
 
     rep.sort();
     Ok(rep)
+}
+
+/// What a second look through the adapter registry made of a file the
+/// TALP scanner rejected (TP002).
+enum Reclass {
+    /// A valid artifact in another registered format (adapter name) —
+    /// not a finding at all.
+    Foreign(&'static str),
+    /// Replace the TP002 with this sharper diagnostic (TP023/TP024).
+    Diag(Diagnostic),
+    /// Genuinely not ours; the TP002 stands.
+    Keep,
+}
+
+fn reclassify_foreign(d: &Diagnostic) -> Reclass {
+    let Ok(bytes) = std::fs::read(&d.path) else {
+        return Reclass::Keep;
+    };
+    match crate::adapters::detect(&bytes) {
+        crate::adapters::Detection::Ambiguous(a, b) => Reclass::Diag(
+            Diagnostic::error(
+                "TP023",
+                d.path.as_str(),
+                format!(
+                    "ambiguous format — detected as both '{a}' and '{b}'"
+                ),
+            )
+            .with_hint(
+                "pass an explicit --format to ingest, or remove the \
+                 colliding top-level keys",
+            ),
+        ),
+        crate::adapters::Detection::Match(a) if a.name() != "talp" => {
+            match a.parse(&bytes, &d.path) {
+                Ok(_) => Reclass::Foreign(a.name()),
+                Err(e) => Reclass::Diag(
+                    Diagnostic::error(
+                        "TP024",
+                        d.path.as_str(),
+                        format!(
+                            "recognized as a '{}' artifact but it fails \
+                             to parse: {e:#}",
+                            a.name()
+                        ),
+                    )
+                    .with_hint("fix the file or remove it from the tree"),
+                ),
+            }
+        }
+        _ => Reclass::Keep,
+    }
 }
 
 #[cfg(test)]
@@ -505,8 +602,8 @@ mod tests {
         for code in [
             "TP001", "TP002", "TP003", "TP010", "TP011", "TP012",
             "TP013", "TP014", "TP015", "TP016", "TP017", "TP018",
-            "TP019", "TP020", "TP021", "TP030", "TP031", "TP040",
-            "TP041",
+            "TP019", "TP020", "TP021", "TP022", "TP023", "TP024",
+            "TP030", "TP031", "TP040", "TP041",
             "TP050", "TP051", "TP052", "TP060",
         ] {
             assert_ne!(describe(code), "unknown diagnostic code", "{code}");

@@ -192,12 +192,11 @@ impl CiEngine {
         // content-addressed ingest; only the fresh files parse (the
         // history is recognized by hash), so the store accumulates
         // unbounded history at O(changed) cost per pipeline.
-        let ingest = store::ingest_dir(
-            &mut self.run_store,
-            &talp_dir,
-            opts.jobs,
-            Some(&gitmeta::to_git_meta(commit)),
-        )?;
+        let git = gitmeta::to_git_meta(commit);
+        let ingest = store::Admission::new()
+            .jobs(opts.jobs)
+            .commit(Some(&git))
+            .ingest_dir(&mut self.run_store, &talp_dir)?;
         // Keep the sidecar indexes warm: each pipeline appends to a
         // handful of shards, so refreshing here is O(appended) and
         // every store query between pipelines starts indexed.

@@ -6,7 +6,10 @@
 //!   `--format json|html|all` picks the emitter set; `--store` reads
 //!   a persistent run store instead of an artifact folder.
 //! * `ingest`     — append a Fig. 2 folder's artifacts into a
-//!   persistent run store (only new content hashes are parsed).
+//!   persistent run store (only new content hashes are parsed);
+//!   `--format` pins an ingestion adapter, default auto-detects.
+//! * `sim`        — seeded deterministic workload simulator: emit a
+//!   scenario-axis corpus in any registered adapter's format.
 //! * `check`      — static analysis of every input surface (artifact
 //!   trees, stores, policies, caches, reports, bench baselines) with
 //!   stable `TP0xx` diagnostics and SARIF output; `report`/`gate`/
@@ -54,6 +57,7 @@ USAGE:
              [--gate <policy.json>] [--check]      (alias: ci-report)
              (store sources also take the `store query` filters)
   talp-pages ingest --input <dir> --store <dir> [--jobs <n>]
+             [--format auto|talp|root-bench|beeswarm]
              [--commit <sha>] [--branch <name>] [--timestamp <iso8601>]
              [--message <m>] [--compact] [--check]
   talp-pages gate (--input <dir> | --store <dir>)
@@ -71,6 +75,10 @@ USAGE:
   talp-pages store synth --store <dir> [--experiments <n>]
              [--configs <RxT>...] [--runs-per-shard <n>] [--seed <n>]
              [--machine <mn5|raven>]
+  talp-pages sim --output <dir> [--seed <n>] [--runs <n>]
+             [--axes <axis>...] [--format talp|root-bench|beeswarm]
+             [--machine <mn5|raven>]
+             (axes: weak-scaling|strong-scaling|hybrid|noise|drift|step)
   talp-pages serve --store <dir> [--addr <host:port>] [--watch <dir>]
              [--gate <policy.json>] [--regions <r>...]
              [--region-for-badge <r>] [--jobs <n>]
@@ -109,6 +117,7 @@ pub fn main_with_args(argv: &[String]) -> Result<i32> {
         "gate" => gate_cmd(&args),
         "gate-init" => gate_init(&args),
         "store" => store_cmd(&args),
+        "sim" => sim_cmd(&args),
         "serve" => serve_cmd(&args),
         "check" => check_cmd(&args),
         "metadata" => metadata(&args),
@@ -401,12 +410,26 @@ fn ingest_cmd(args: &Args) -> Result<i32> {
         commit_timestamp,
         message: args.get("message").unwrap_or("").to_string(),
     });
-    let report = store::ingest_dir(
-        &mut run_store,
-        &input,
-        args.get_jobs()?,
-        commit_meta.as_ref(),
-    )?;
+    // One admission path shared with serve and the CI runner; --format
+    // pins an adapter, the default auto-detects per file.
+    let mut admission = store::Admission::new()
+        .jobs(args.get_jobs()?)
+        .commit(commit_meta.as_ref());
+    match args.get("format").unwrap_or("auto") {
+        "auto" => {}
+        name => {
+            admission =
+                admission.format(crate::adapters::by_name(name).with_context(
+                    || {
+                        format!(
+                            "unknown --format '{name}' (auto|{})",
+                            crate::adapters::names()
+                        )
+                    },
+                )?)
+        }
+    }
+    let report = admission.ingest_dir(&mut run_store, &input)?;
     for w in &report.warnings {
         eprintln!("warning: {w}");
     }
@@ -421,6 +444,15 @@ fn ingest_cmd(args: &Args) -> Result<i32> {
         run_store.len(),
         run_store.experiment_count()
     );
+    if !report.formats.is_empty() {
+        let breakdown = report
+            .formats
+            .iter()
+            .map(|(name, runs)| format!("{name} {runs} run(s)"))
+            .collect::<Vec<_>>()
+            .join(", ");
+        println!("formats: {breakdown}");
+    }
     if args.has("compact") {
         let stats = run_store.compact()?;
         println!(
@@ -634,37 +666,15 @@ fn store_synth_cmd(args: &Args) -> Result<i32> {
     };
     let _lock = store::StoreLock::acquire(&root)?;
     let mut run_store = store::RunStore::create_or_open(&root)?;
-    let mut batch =
-        Vec::with_capacity(experiments * configs.len() * runs_per_shard);
-    for (cfg_i, cfg) in configs.iter().enumerate() {
-        // One real simulated run per config; the fan-out only varies
-        // the metadata (timestamp, commit, source), which is all a
-        // store-scale test observes.
-        let mut app = apps::Genex::salpha(1, apps::CodeVersion::fixed());
-        app.timesteps = 2;
-        let (base, _) =
-            apps::run_with_talp(&app, &machine, cfg, seed + cfg_i as u64, 0);
-        for exp in 0..experiments {
-            for i in 0..runs_per_shard {
-                let mut d = base.clone();
-                d.timestamp = 1_700_000_000 + i as i64 * 60;
-                d.git = Some(crate::talp::GitMeta {
-                    commit: format!("{exp:02x}{i:06x}{cfg_i:02x}cccccc"),
-                    branch: "main".into(),
-                    commit_timestamp: d.timestamp,
-                    message: String::new(),
-                });
-                let source =
-                    format!("exp{exp:02}/{}/run_{i}.json", cfg.label());
-                let run = pop::RunMetrics::from_run(&d, &source);
-                batch.push((
-                    format!("exp{exp:02}"),
-                    format!("{exp:04x}{cfg_i:02x}{i:08x}"),
-                    run,
-                ));
-            }
-        }
-    }
+    // The corpus itself comes from the shared simulator module so
+    // `store synth` and `talp-pages sim` stay one generator.
+    let batch = crate::sim::corpus::synth_batch(
+        experiments,
+        &configs,
+        runs_per_shard,
+        seed,
+        &machine,
+    );
     let appended = run_store.append_all(batch)?;
     let indexed = run_store.refresh_indexes()?;
     println!(
@@ -676,6 +686,58 @@ fn store_synth_cmd(args: &Args) -> Result<i32> {
         runs_per_shard,
         indexed,
         root.display()
+    );
+    Ok(0)
+}
+
+/// `talp-pages sim`: the seeded deterministic workload simulator —
+/// emit a corpus of runs across scenario axes (weak/strong scaling,
+/// hybrid MPI+OpenMP, noise regimes, drifting baselines, step
+/// regressions) in any registered adapter's on-disk format.  The same
+/// seed always produces a byte-identical corpus.
+fn sim_cmd(args: &Args) -> Result<i32> {
+    let out = PathBuf::from(args.require("output")?);
+    let seed = args.get_u64("seed", 7)?;
+    let runs = args.get_u64("runs", 6)? as usize;
+    let machine = parse_machine(args)?;
+    let axes = {
+        let labels = args.get_all("axes");
+        if labels.is_empty() {
+            crate::sim::corpus::Axis::all().to_vec()
+        } else {
+            labels
+                .iter()
+                .map(|l| {
+                    crate::sim::corpus::Axis::parse(l).with_context(|| {
+                        format!(
+                            "unknown axis '{l}' ({})",
+                            crate::sim::corpus::Axis::labels()
+                        )
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?
+        }
+    };
+    let fname = args.get("format").unwrap_or("talp");
+    let adapter = crate::adapters::by_name(fname).with_context(|| {
+        format!("unknown --format '{fname}' ({})", crate::adapters::names())
+    })?;
+    let spec = crate::sim::corpus::CorpusSpec {
+        runs,
+        axes,
+        machine,
+        ..crate::sim::corpus::CorpusSpec::new(seed)
+    };
+    let written = crate::sim::corpus::write_corpus(&spec, &out, adapter)?;
+    println!(
+        "sim: {} run(s) across {} axis(es) ({} each) -> {} (seed {}, \
+         format {})",
+        written,
+        spec.axes.len(),
+        spec.runs,
+        out.display(),
+        seed,
+        adapter.name()
     );
     Ok(0)
 }

@@ -7,7 +7,18 @@
 //! The crate contains (DESIGN.md has the full inventory):
 //!
 //! * [`sim`] — the HPC substrate: deterministic phase-level simulator of
-//!   hybrid MPI+OpenMP executions (machines, DVFS, caches, collectives).
+//!   hybrid MPI+OpenMP executions (machines, DVFS, caches, collectives),
+//!   plus the seeded corpus generator behind `talp-pages sim`
+//!   ([`sim::corpus`]): scenario axes — weak/strong scaling, hybrid
+//!   region trees, noise regimes, drifting baselines, step regressions
+//!   — emitted in any registered adapter's format, byte-reproducible
+//!   from a seed.
+//! * [`adapters`] — multi-format ingestion: an [`adapters::Adapter`]
+//!   registry (`talp`, `root-bench`, `beeswarm`) that detects a
+//!   producer's JSON dialect and normalizes it into [`pop::RunMetrics`],
+//!   so one store/gate/report/serve/check stack monitors heterogeneous
+//!   suites; every ingestion entry point routes through
+//!   [`store::Admission`].
 //! * [`talp`] — the TALP monitor: on-the-fly POP-factor accumulation and
 //!   the DLB-style JSON output.
 //! * [`pop`] — fundamental performance factors: the efficiency
@@ -174,6 +185,7 @@
 //!   streaming layer, so the two APIs accept the same documents and
 //!   emit identical bytes by construction.
 
+pub mod adapters;
 pub mod apps;
 pub mod check;
 pub mod cli;

@@ -6,13 +6,16 @@
 //! analysis) behind a hand-rolled HTTP/1.1 listener ([`http`], std
 //! only — the vendored-offline policy rules out server crates):
 //!
-//! * `POST /ingest` accepts one TALP artifact body (git metadata in
-//!   query params, mirroring `ingest --commit ...`), routes it through
-//!   the store's content-addressed admission, re-analyzes **only the
-//!   affected experiment**, and atomically swaps the served snapshot.
+//! * `POST /ingest` accepts one artifact body in any registered
+//!   ingestion-adapter format (TALP, ROOT-bench, BeeSwarm — see
+//!   [`crate::adapters`]; auto-detected, or pinned by a `format` query
+//!   param; git metadata in query params mirrors `ingest --commit ...`),
+//!   routes it through the store's content-addressed admission,
+//!   re-analyzes **only the affected experiment**, and atomically
+//!   swaps the served snapshot.
 //! * `--watch <dir>` polls a drop directory through the same
-//!   incremental path (a warm poll over an unchanged folder parses
-//!   nothing).
+//!   incremental path with per-file adapter auto-detection (a warm
+//!   poll over an unchanged folder parses nothing).
 //! * `GET /report.json`, `/gate.json`, `/badges/*.svg`, `/index.html`
 //!   serve an immutable [`Snapshot`]: the files the **batch emitter
 //!   set** ([`crate::session::default_emitters`]) produced for the
@@ -48,10 +51,10 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use crate::adapters::{self, Detection};
 use crate::pages::cache::content_hash;
-use crate::pop::RunMetrics;
 use crate::session::{self, Analysis, AnalyzeOptions};
-use crate::talp::{GitMeta, RunData};
+use crate::talp::GitMeta;
 use crate::util::fs::TempDir;
 use crate::util::json::Json;
 use crate::util::timefmt;
@@ -482,7 +485,15 @@ fn snapshot_file(req: &Request, shared: &Shared) -> Response {
 
 /// The incrementality witness: monitor counters + request counters.
 fn statsz(shared: &Shared) -> Response {
-    let stats = lock_monitor(shared).stats();
+    let (stats, formats) = {
+        let monitor = lock_monitor(shared);
+        let formats: Vec<(&'static str, Json)> = monitor
+            .formats()
+            .iter()
+            .map(|(name, runs)| (*name, Json::Num(*runs as f64)))
+            .collect();
+        (monitor.stats(), formats)
+    };
     let seq = shared.snapshot.read().map(|s| s.seq).unwrap_or(0);
     json_response(Json::from_pairs(vec![
         ("ok", Json::Bool(true)),
@@ -511,13 +522,19 @@ fn statsz(shared: &Shared) -> Response {
             "reanalyzed_histories_total",
             Json::Num(stats.reanalyzed_histories_total as f64),
         ),
+        // New keys append after the long-standing ones so substring
+        // consumers (the CI serve-smoke greps) keep matching.
+        ("formats", Json::from_pairs(formats)),
     ]))
 }
 
-/// `POST /ingest`: one TALP artifact body + query-param metadata,
+/// `POST /ingest`: one artifact body + query-param metadata,
 /// mirroring the CLI `ingest` flags (`source` is required; `commit`,
-/// `branch`, `timestamp`, `message`, `experiment` optional).  Any
-/// rejection answers 4xx **before** the store or snapshot is touched.
+/// `branch`, `timestamp`, `message`, `experiment`, `format` optional).
+/// The body's ingestion adapter is auto-detected unless `format` pins
+/// one; a multi-run artifact (e.g. a BeeSwarm scaling sweep) admits
+/// every run it carries.  Any rejection answers 4xx **before** the
+/// store or snapshot is touched.
 fn handle_ingest(req: &Request, shared: &Shared) -> Result<Response> {
     let source = match req.query_get("source") {
         Some(s) if !s.is_empty() => s,
@@ -537,7 +554,9 @@ fn handle_ingest(req: &Request, shared: &Shared) -> Result<Response> {
         )));
     }
     if req.body.is_empty() {
-        return Ok(bad("empty request body (expected a TALP artifact)"));
+        return Ok(bad(
+            "empty request body (expected a performance artifact)",
+        ));
     }
     // Same contract as `ingest --commit ...`: companions only mean
     // something with a commit, and a sloppy timestamp would scramble
@@ -571,33 +590,79 @@ fn handle_ingest(req: &Request, shared: &Shared) -> Result<Response> {
         Some(e) if !e.is_empty() => e.to_string(),
         _ => default_experiment(source),
     };
+    // Resolve the ingestion adapter: an explicit `format` query param
+    // pins one, otherwise the body is sniffed — an ambiguous body is
+    // a hard 400 (never a guess), an unrecognized one names the
+    // registry so the client knows what this server speaks.
+    let adapter = match req.query_get("format") {
+        None | Some("auto") => match adapters::detect(&req.body) {
+            Detection::Match(a) => a,
+            Detection::Ambiguous(a, b) => {
+                return Ok(bad(&format!(
+                    "ambiguous artifact format — detected as both '{a}' \
+                     and '{b}'; pass an explicit format= query parameter"
+                )))
+            }
+            Detection::Unknown => {
+                return Ok(bad(&format!(
+                    "no registered adapter ({}) recognizes this body",
+                    adapters::names()
+                )))
+            }
+        },
+        Some(name) => match adapters::by_name(name) {
+            Some(a) => a,
+            None => {
+                return Ok(bad(&format!(
+                    "unknown format '{name}' (auto|{})",
+                    adapters::names()
+                )))
+            }
+        },
+    };
 
     let hash = content_hash(&req.body);
     let mut monitor = lock_monitor(shared);
-    if monitor.store().contains(source, &hash) {
+    if monitor.store().contains_file(source, &hash) {
         let seq = shared.snapshot.read().map(|s| s.seq).unwrap_or(0);
-        return Ok(ingest_response(false, seq, 0));
+        return Ok(ingest_response(false, seq, 0, adapter.name(), 0));
     }
-    let data = match RunData::from_slice(&req.body, Path::new(source)) {
-        Ok(d) => d,
+    let runs = match adapter.parse(&req.body, source) {
+        Ok(runs) => runs,
         Err(e) => {
-            return Ok(bad(&format!("unparsable TALP artifact: {e:#}")))
+            return Ok(bad(&format!(
+                "unparsable {} artifact: {e:#}",
+                adapter.name()
+            )))
         }
     };
-    let mut run = RunMetrics::from_run(&data, source);
-    if run.git.is_none() {
-        run.git = meta;
+    let mut stored_runs = 0usize;
+    for mut run in runs {
+        if run.git.is_none() {
+            run.git = meta.clone();
+        }
+        if monitor.ingest_run(&experiment, &hash, run)? {
+            stored_runs += 1;
+        }
     }
-    let stored = monitor.ingest_run(&experiment, &hash, run)?;
+    monitor.note_format(adapter.name(), stored_runs as u64);
     let mut reanalyzed = 0;
-    if stored {
+    if stored_runs > 0 {
         if let Some(pass) = refresh_and_swap(shared, &mut monitor)? {
             reanalyzed = pass.reanalyzed_histories;
         }
-        shared.ingested.fetch_add(1, Ordering::Relaxed);
+        shared
+            .ingested
+            .fetch_add(stored_runs as u64, Ordering::Relaxed);
     }
     let seq = shared.snapshot.read().map(|s| s.seq).unwrap_or(0);
-    Ok(ingest_response(stored, seq, reanalyzed))
+    Ok(ingest_response(
+        stored_runs > 0,
+        seq,
+        reanalyzed,
+        adapter.name(),
+        stored_runs,
+    ))
 }
 
 /// Default experiment id for an ingested source path: its parent
@@ -610,11 +675,21 @@ fn default_experiment(source: &str) -> String {
     }
 }
 
-fn ingest_response(stored: bool, seq: u64, reanalyzed: usize) -> Response {
+fn ingest_response(
+    stored: bool,
+    seq: u64,
+    reanalyzed: usize,
+    format: &str,
+    runs: usize,
+) -> Response {
+    // `format`/`runs` append after the long-standing keys so substring
+    // consumers (the CI serve-smoke greps) keep matching.
     json_response(Json::from_pairs(vec![
         ("stored", Json::Bool(stored)),
         ("snapshot_seq", Json::Num(seq as f64)),
         ("reanalyzed_histories", Json::Num(reanalyzed as f64)),
+        ("format", Json::Str(format.to_string())),
+        ("runs", Json::Num(runs as f64)),
     ]))
 }
 

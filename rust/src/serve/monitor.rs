@@ -13,7 +13,7 @@
 //! appends.  Read-only consumers (batch `report --store` beside a
 //! running server) do not take the lock and keep working.
 
-use std::collections::BTreeSet;
+use std::collections::{BTreeMap, BTreeSet};
 use std::path::{Path, PathBuf};
 
 use anyhow::Result;
@@ -58,6 +58,9 @@ pub struct Monitor {
     jobs: usize,
     analysis: Analysis,
     dirty: BTreeSet<String>,
+    /// Runs admitted per ingestion-adapter format (POST /ingest and
+    /// the watch poll both feed this; `/statsz` exposes it).
+    formats: BTreeMap<&'static str, u64>,
     passes: u64,
     reanalyzed_last: usize,
     reanalyzed_total: u64,
@@ -94,6 +97,7 @@ impl Monitor {
             jobs,
             analysis: pass.analysis,
             dirty: BTreeSet::new(),
+            formats: BTreeMap::new(),
             passes: 1,
             reanalyzed_last: pass.reanalyzed_histories,
             reanalyzed_total: pass.reanalyzed_histories as u64,
@@ -133,13 +137,32 @@ impl Monitor {
         Ok(appended)
     }
 
+    /// Credit `runs` admitted runs to an ingestion-adapter format
+    /// (the `POST /ingest` handler calls this after [`Monitor::ingest_run`],
+    /// which has no knowledge of the wire format it came from).
+    pub fn note_format(&mut self, name: &'static str, runs: u64) {
+        if runs > 0 {
+            *self.formats.entry(name).or_insert(0) += runs;
+        }
+    }
+
+    /// Runs admitted per adapter format since the monitor opened.
+    pub fn formats(&self) -> &BTreeMap<&'static str, u64> {
+        &self.formats
+    }
+
     /// Ingest a drop directory (the `--watch` poll): content-addressed
-    /// through [`store::ingest_dir`], so a warm poll over an unchanged
-    /// folder parses nothing.  Fresh records mark their experiments
-    /// dirty.
+    /// through [`store::Admission`] with per-file adapter auto-detect,
+    /// so a warm poll over an unchanged folder parses nothing and a
+    /// non-TALP drop (ROOT-bench, BeeSwarm) is admitted instead of
+    /// rejected.  Fresh records mark their experiments dirty.
     pub fn ingest_dir(&mut self, dir: &Path) -> Result<IngestReport> {
-        let report =
-            store::ingest_dir(&mut self.store, dir, self.jobs, None)?;
+        let report = store::Admission::new()
+            .jobs(self.jobs)
+            .ingest_dir(&mut self.store, dir)?;
+        for (name, runs) in &report.formats {
+            self.note_format(name, *runs as u64);
+        }
         self.dirty.extend(report.stored_experiments.iter().cloned());
         Ok(report)
     }

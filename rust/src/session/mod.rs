@@ -337,7 +337,7 @@ mod tests {
         let store_root = sd.path().join("store");
         let mut store =
             crate::store::RunStore::create_or_open(&store_root).unwrap();
-        crate::store::ingest_dir(&mut store, td.path(), 0, None).unwrap();
+        crate::store::ingest_dir(&mut store, td.path()).unwrap();
         drop(store);
 
         let from_dir = Session::new(td.path()).scan().unwrap();
@@ -372,7 +372,7 @@ mod tests {
         let store_root = sd.path().join("store");
         let mut store =
             crate::store::RunStore::create_or_open(&store_root).unwrap();
-        crate::store::ingest_dir(&mut store, td.path(), 0, None).unwrap();
+        crate::store::ingest_dir(&mut store, td.path()).unwrap();
         drop(store);
 
         let spec = QuerySpec { last: Some(2), ..Default::default() };

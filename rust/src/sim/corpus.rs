@@ -1,0 +1,410 @@
+//! Seeded corpus generator behind `talp-pages sim` — the simulator's
+//! batch front end.
+//!
+//! One [`CorpusSpec`] describes a whole artifact tree: which scenario
+//! [`Axis`] directories to emit, how many runs per axis, the machine,
+//! the seed.  Everything downstream of the seed is deterministic —
+//! same spec, byte-identical corpus — so fixtures, CI jobs and bug
+//! reports can name a corpus by `(seed, axes, runs)` instead of
+//! shipping files.  Each axis becomes one experiment directory (the
+//! folder scanner groups by parent dir), and every run is a *real*
+//! simulated execution ([`crate::apps::run_with_talp`]) whose POP
+//! factors respond to the scenario, not hand-written numbers:
+//!
+//! | axis             | what varies run-to-run                          |
+//! |------------------|-------------------------------------------------|
+//! | `weak-scaling`   | resolution grows with the rank count            |
+//! | `strong-scaling` | fixed problem, rank count grows                 |
+//! | `hybrid`         | fixed ranks, OpenMP thread count grows          |
+//! | `noise`          | calm / typical / noisy platform regimes         |
+//! | `drift`          | compute slowdown creeping up 2% per run         |
+//! | `step`           | a 35% slowdown landing at the history midpoint  |
+//!
+//! Corpora can be written in any registered adapter's format
+//! ([`write_corpus`] takes the [`Adapter`]), which is how the CI
+//! store-scale job exercises ROOT-bench and BeeSwarm ingestion
+//! without real producers.  [`synth_batch`] is the store-records
+//! variant behind `store synth`: same simulator, but fanned out into
+//! pre-reduced [`RunMetrics`] records for scale testing.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::adapters::Adapter;
+use crate::apps::{
+    run_with_talp, run_with_talp_noise, CodeVersion, Genex,
+};
+use crate::pop::RunMetrics;
+use crate::talp::{GitMeta, RunData};
+
+use super::{MachineSpec, NoiseModel, ResourceConfig};
+
+/// One scenario dimension a generated corpus can cover.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Axis {
+    /// Problem size grows with the rank count (efficiency should hold).
+    WeakScaling,
+    /// Fixed problem, rank count grows (efficiency decays).
+    StrongScaling,
+    /// Fixed MPI ranks, OpenMP thread count grows — hybrid region
+    /// trees with thread-level factors in play.
+    Hybrid,
+    /// Same configuration under calm / typical / noisy platforms.
+    Noise,
+    /// A baseline drifting slower by 2% compute per run.
+    Drift,
+    /// A clean history with a 35% step regression at the midpoint.
+    Step,
+}
+
+impl Axis {
+    /// Every axis, in the order `sim` emits them.
+    pub fn all() -> [Axis; 6] {
+        [
+            Axis::WeakScaling,
+            Axis::StrongScaling,
+            Axis::Hybrid,
+            Axis::Noise,
+            Axis::Drift,
+            Axis::Step,
+        ]
+    }
+
+    /// Directory / CLI name of the axis.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Axis::WeakScaling => "weak-scaling",
+            Axis::StrongScaling => "strong-scaling",
+            Axis::Hybrid => "hybrid",
+            Axis::Noise => "noise",
+            Axis::Drift => "drift",
+            Axis::Step => "step",
+        }
+    }
+
+    /// Inverse of [`Axis::label`] (CLI `--axes` parsing).
+    pub fn parse(name: &str) -> Option<Axis> {
+        Axis::all().into_iter().find(|a| a.label() == name)
+    }
+
+    /// Comma-free list of every label for usage/error text.
+    pub fn labels() -> String {
+        Axis::all()
+            .iter()
+            .map(|a| a.label())
+            .collect::<Vec<_>>()
+            .join("|")
+    }
+}
+
+/// A whole corpus, named by its parameters.  Two equal specs generate
+/// byte-identical trees.
+pub struct CorpusSpec {
+    /// Master seed; every run's seed derives from it arithmetically.
+    pub seed: u64,
+    /// Runs per axis directory.
+    pub runs: usize,
+    /// Scenario directories to emit (order preserved).
+    pub axes: Vec<Axis>,
+    /// Simulated machine.
+    pub machine: MachineSpec,
+    /// Timestamp of each axis's first run; consecutive runs are one
+    /// hour apart.  Fixed (never wall clock) so corpora reproduce.
+    pub base_timestamp: i64,
+}
+
+impl CorpusSpec {
+    /// All six axes, 6 runs each, MareNostrum 5, a fixed epoch.
+    pub fn new(seed: u64) -> CorpusSpec {
+        CorpusSpec {
+            seed,
+            runs: 6,
+            axes: Axis::all().to_vec(),
+            machine: MachineSpec::marenostrum5(),
+            base_timestamp: 1_700_000_000,
+        }
+    }
+}
+
+/// What one run of an axis should simulate.
+struct RunPlan {
+    resolution: u32,
+    config: ResourceConfig,
+    version: CodeVersion,
+    noise: Option<NoiseModel>,
+}
+
+fn plan(axis: Axis, i: usize, runs: usize) -> RunPlan {
+    let fixed = CodeVersion::fixed();
+    let base = RunPlan {
+        resolution: 1,
+        config: ResourceConfig::new(2, 8),
+        version: fixed,
+        noise: None,
+    };
+    let ranks = [1u32, 2, 4][i % 3];
+    match axis {
+        Axis::WeakScaling => RunPlan {
+            resolution: ranks,
+            config: ResourceConfig::new(ranks, 8),
+            ..base
+        },
+        Axis::StrongScaling => RunPlan {
+            resolution: 2,
+            config: ResourceConfig::new(ranks, 8),
+            ..base
+        },
+        Axis::Hybrid => RunPlan {
+            config: ResourceConfig::new(2, [4u32, 8, 16][i % 3]),
+            ..base
+        },
+        Axis::Noise => RunPlan {
+            noise: Some(match i % 3 {
+                0 => NoiseModel::calm(),
+                1 => NoiseModel::typical(),
+                _ => NoiseModel::noisy(),
+            }),
+            ..base
+        },
+        Axis::Drift => RunPlan {
+            version: CodeVersion {
+                compute_slowdown: 1.0 + 0.02 * i as f64,
+                ..fixed
+            },
+            ..base
+        },
+        Axis::Step => RunPlan {
+            version: CodeVersion {
+                compute_slowdown: if i >= runs / 2 { 1.35 } else { 1.0 },
+                ..fixed
+            },
+            ..base
+        },
+    }
+}
+
+/// Generate the corpus as `(relative path, run)` pairs in
+/// deterministic emit order — one directory per axis, `run_<i>.json`
+/// inside.  Every run carries deterministic git metadata (commit sha
+/// derived from axis and index, timestamps one hour apart) so stored
+/// histories order the same way real stamped CI artifacts do.
+pub fn generate(spec: &CorpusSpec) -> Vec<(String, RunData)> {
+    let mut out = Vec::with_capacity(spec.axes.len() * spec.runs);
+    for (axis_i, axis) in spec.axes.iter().enumerate() {
+        for i in 0..spec.runs {
+            let p = plan(*axis, i, spec.runs);
+            let mut app = Genex::salpha(p.resolution, p.version);
+            app.timesteps = 2;
+            let seed = spec
+                .seed
+                .wrapping_mul(6_364_136_223_846_793_005)
+                .wrapping_add((axis_i * 1_000 + i) as u64);
+            let ts = spec.base_timestamp + i as i64 * 3_600;
+            let (mut data, _) = match p.noise {
+                Some(noise) => run_with_talp_noise(
+                    &app,
+                    &spec.machine,
+                    &p.config,
+                    seed,
+                    ts,
+                    noise,
+                ),
+                None => {
+                    run_with_talp(&app, &spec.machine, &p.config, seed, ts)
+                }
+            };
+            data.git = Some(GitMeta {
+                commit: format!("{axis_i:02x}{i:06x}ab1e5eed"),
+                branch: "main".into(),
+                commit_timestamp: ts,
+                message: format!("{} run {i}", axis.label()),
+            });
+            out.push((format!("{}/run_{i}.json", axis.label()), data));
+        }
+    }
+    out
+}
+
+/// Generate [`generate`]'s corpus under `out_dir`, each run rendered
+/// by `adapter` ([`Adapter::emit`]).  Returns the number of files
+/// written.  Same spec + same adapter ⇒ byte-identical tree.
+pub fn write_corpus(
+    spec: &CorpusSpec,
+    out_dir: &Path,
+    adapter: &dyn Adapter,
+) -> Result<usize> {
+    if spec.runs == 0 || spec.axes.is_empty() {
+        bail!("corpus spec is empty (no runs or no axes)");
+    }
+    let runs = generate(spec);
+    let n = runs.len();
+    for (rel, data) in runs {
+        let path = out_dir.join(rel);
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(&path, adapter.emit(&data))?;
+    }
+    Ok(n)
+}
+
+/// The `store synth` backend: one real simulated run per config, then
+/// a metadata-only fan-out across experiments, commits and timestamps
+/// — real [`RunMetrics`] payloads at arbitrary scale, which is all a
+/// store-scale test observes.  Returns `(experiment, hash, run)`
+/// records ready for `RunStore::append_all`.
+pub fn synth_batch(
+    experiments: usize,
+    configs: &[ResourceConfig],
+    runs_per_shard: usize,
+    seed: u64,
+    machine: &MachineSpec,
+) -> Vec<(String, String, RunMetrics)> {
+    let mut batch =
+        Vec::with_capacity(experiments * configs.len() * runs_per_shard);
+    for (cfg_i, cfg) in configs.iter().enumerate() {
+        let mut app = Genex::salpha(1, CodeVersion::fixed());
+        app.timesteps = 2;
+        let (base, _) =
+            run_with_talp(&app, machine, cfg, seed + cfg_i as u64, 0);
+        for exp in 0..experiments {
+            for i in 0..runs_per_shard {
+                let mut d = base.clone();
+                d.timestamp = 1_700_000_000 + i as i64 * 60;
+                d.git = Some(GitMeta {
+                    commit: format!("{exp:02x}{i:06x}{cfg_i:02x}cccccc"),
+                    branch: "main".into(),
+                    commit_timestamp: d.timestamp,
+                    message: String::new(),
+                });
+                let source =
+                    format!("exp{exp:02}/{}/run_{i}.json", cfg.label());
+                let run = RunMetrics::from_run(&d, &source);
+                batch.push((
+                    format!("exp{exp:02}"),
+                    format!("{exp:04x}{cfg_i:02x}{i:08x}"),
+                    run,
+                ));
+            }
+        }
+    }
+    batch
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adapters;
+
+    #[test]
+    fn axis_labels_round_trip() {
+        for axis in Axis::all() {
+            assert_eq!(Axis::parse(axis.label()), Some(axis));
+        }
+        assert_eq!(Axis::parse("frobnicate"), None);
+        assert!(Axis::labels().contains("weak-scaling"));
+    }
+
+    fn small_spec(seed: u64) -> CorpusSpec {
+        CorpusSpec {
+            runs: 3,
+            axes: vec![Axis::WeakScaling, Axis::Step],
+            ..CorpusSpec::new(seed)
+        }
+    }
+
+    #[test]
+    fn same_seed_is_byte_identical_different_seed_is_not() {
+        let talp = adapters::by_name("talp").unwrap();
+        let a: Vec<String> = generate(&small_spec(9))
+            .iter()
+            .map(|(rel, d)| format!("{rel}\n{}", talp.emit(d)))
+            .collect();
+        let b: Vec<String> = generate(&small_spec(9))
+            .iter()
+            .map(|(rel, d)| format!("{rel}\n{}", talp.emit(d)))
+            .collect();
+        assert_eq!(a, b, "same seed must reproduce byte-for-byte");
+        let c: Vec<String> = generate(&small_spec(10))
+            .iter()
+            .map(|(rel, d)| format!("{rel}\n{}", talp.emit(d)))
+            .collect();
+        assert_ne!(a, c, "a different seed must actually differ");
+    }
+
+    #[test]
+    fn step_axis_regresses_at_the_midpoint() {
+        let spec = CorpusSpec {
+            runs: 4,
+            axes: vec![Axis::Step],
+            ..CorpusSpec::new(3)
+        };
+        let runs = generate(&spec);
+        assert_eq!(runs.len(), 4);
+        let elapsed = |d: &RunData| d.region("Global").unwrap().elapsed_s;
+        let before = elapsed(&runs[0].1);
+        let after = elapsed(&runs[3].1);
+        assert!(
+            after > before * 1.2,
+            "step regression must be visible: {before} -> {after}"
+        );
+    }
+
+    #[test]
+    fn weak_scaling_axis_varies_resources() {
+        let spec = CorpusSpec {
+            runs: 3,
+            axes: vec![Axis::WeakScaling],
+            ..CorpusSpec::new(4)
+        };
+        let labels: Vec<String> = generate(&spec)
+            .iter()
+            .map(|(_, d)| d.resources().label())
+            .collect();
+        assert_eq!(labels, ["1x8", "2x8", "4x8"]);
+    }
+
+    #[test]
+    fn write_corpus_emits_detectable_files_per_adapter() {
+        let td = crate::util::fs::TempDir::new("corpus").unwrap();
+        let spec = small_spec(5);
+        for adapter in adapters::registry() {
+            let dir = td.path().join(adapter.name());
+            let n = write_corpus(&spec, &dir, *adapter).unwrap();
+            assert_eq!(n, 6);
+            let doc = std::fs::read(
+                dir.join("weak-scaling/run_0.json"),
+            )
+            .unwrap();
+            match adapters::detect(&doc) {
+                adapters::Detection::Match(a) => {
+                    assert_eq!(a.name(), adapter.name())
+                }
+                other => panic!("{}: {other:?}", adapter.name()),
+            }
+        }
+        assert!(write_corpus(
+            &CorpusSpec { runs: 0, ..small_spec(5) },
+            td.path(),
+            adapters::by_name("talp").unwrap(),
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn synth_batch_shape_matches_parameters() {
+        let machine = MachineSpec::marenostrum5();
+        let configs =
+            [ResourceConfig::new(2, 4), ResourceConfig::new(4, 4)];
+        let batch = synth_batch(2, &configs, 3, 7, &machine);
+        assert_eq!(batch.len(), 2 * 2 * 3);
+        assert_eq!(batch[0].0, "exp00");
+        assert_eq!(batch[0].1, "00000000000000");
+        assert_eq!(batch[0].2.source, "exp00/2x4/run_0.json");
+        // Hashes are unique across the fan-out.
+        let hashes: std::collections::HashSet<&str> =
+            batch.iter().map(|(_, h, _)| h.as_str()).collect();
+        assert_eq!(hashes.len(), batch.len());
+    }
+}

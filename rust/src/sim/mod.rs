@@ -8,6 +8,7 @@
 //! simulated configurations inside tests and benches.
 
 pub mod cache;
+pub mod corpus;
 pub mod counters;
 pub mod dvfs;
 pub mod engine;

@@ -1,43 +1,60 @@
-//! Incremental ingest: Fig. 2 artifact folder → [`RunStore`].
+//! Unified admission: Fig. 2 artifact folder → [`RunStore`], through
+//! the adapter registry.
+//!
+//! [`Admission`] is the one ingestion path every entry point routes
+//! through — CLI `ingest`, `serve` (`POST /ingest` and `--watch`),
+//! and the in-process CI runner — parameterized by worker count,
+//! commit stamp and format.  The default format is auto-detection
+//! over [`crate::adapters::registry`]; a document claimed by more
+//! than one adapter is a *hard error* (the whole pass fails rather
+//! than guessing), while an unrecognized or unparsable file degrades
+//! to a skip-warning like the tolerant scanner.
 //!
 //! The store is content-addressed, so ingest is O(changed): every
 //! artifact file is read and hashed (cheap), but only files whose
 //! `(path, content hash)` identity is not already stored go through
-//! the JSON parser and the POP reduction.  A warm re-ingest of an
-//! unchanged folder parses zero artifacts — the property `talp-pages
-//! ingest` prints and the store tests assert.
+//! an adapter and the POP reduction.  Multi-run formats (BeeSwarm)
+//! expand one file into several records with `#<RxT>`-suffixed
+//! sources; the file-level check ([`RunStore::contains_file`]) strips
+//! the suffix, so a warm re-ingest of an unchanged folder parses zero
+//! artifacts no matter the format — the property `talp-pages ingest`
+//! prints and the store tests assert.
 //!
 //! Commit metadata: runs that already carry [`GitMeta`] (stamped by
 //! `talp-pages metadata` / `ci::gitmeta` in their pipeline) keep it;
-//! runs without it can be stamped at ingest time via the optional
-//! `commit` argument, so history ordering stays commit-based even for
-//! artifacts that skipped the stamping step.
+//! runs without it can be stamped at admission time via
+//! [`Admission::commit`], so history ordering stays commit-based even
+//! for artifacts that skipped the stamping step.
 
-use std::collections::BTreeSet;
+use std::collections::{BTreeMap, BTreeSet};
 use std::path::Path;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
+use crate::adapters::{self, Adapter, Detection};
 use crate::pages::cache::content_hash;
 use crate::pages::scanner;
 use crate::pop::RunMetrics;
-use crate::talp::{GitMeta, RunData};
+use crate::talp::GitMeta;
 use crate::util::par::parallel_map;
 
 use super::RunStore;
 
-/// What one [`ingest_dir`] pass did.
+/// What one admission pass did.
 #[derive(Debug, Default)]
 pub struct IngestReport {
     /// Artifact files discovered under the input root.
     pub scanned: usize,
-    /// Files whose content went through parse + reduce (not stored yet).
+    /// Files whose content went through an adapter (not stored yet).
     pub parsed: usize,
     /// Records appended to the store.
     pub stored: usize,
     /// Files skipped because their (path, content hash) identity was
     /// already stored.
     pub already_stored: usize,
+    /// Runs parsed per adapter, keyed by registry name — the serve
+    /// `/statsz` per-format counters and the CLI breakdown line.
+    pub formats: BTreeMap<&'static str, usize>,
     /// Experiments the freshly parsed records belong to (deduped).
     /// Resident consumers use this as the dirty set for incremental
     /// re-analysis; it can over-approximate by an experiment whose
@@ -48,86 +65,168 @@ pub struct IngestReport {
     pub warnings: Vec<String>,
 }
 
-/// Ingest every artifact under `root` into `store` on up to `jobs`
-/// workers (0 = auto).  Files whose (path, content hash) identity is
-/// already stored are skipped without parsing; fresh files parse +
-/// reduce in parallel and append in deterministic discover order.
-/// `commit`, when given, is stamped into ingested runs that carry no
-/// git metadata.
-pub fn ingest_dir(
-    store: &mut RunStore,
-    root: &Path,
+/// Builder for one ingestion pass — the entry point the CLI, the
+/// serve loop and the CI runner all share.
+///
+/// ```no_run
+/// use talp_pages::store::{Admission, RunStore};
+///
+/// fn main() -> anyhow::Result<()> {
+///     let mut store = RunStore::create_or_open("store".as_ref())?;
+///     let report = Admission::new()
+///         .jobs(4)
+///         .ingest_dir(&mut store, "artifacts".as_ref())?;
+///     println!("{} stored, formats {:?}", report.stored, report.formats);
+///     Ok(())
+/// }
+/// ```
+#[derive(Clone, Copy, Default)]
+pub struct Admission<'a> {
     jobs: usize,
-    commit: Option<&GitMeta>,
-) -> Result<IngestReport> {
-    enum Outcome {
-        AlreadyStored,
-        Fresh(String, RunMetrics),
-        Bad(String),
+    commit: Option<&'a GitMeta>,
+    format: Option<&'static dyn Adapter>,
+}
+
+impl<'a> Admission<'a> {
+    /// Auto-detected format, auto worker count, no commit stamp.
+    pub fn new() -> Admission<'a> {
+        Admission::default()
     }
 
-    let found = scanner::discover(root)?;
-    let all: Vec<(String, std::path::PathBuf)> = found
-        .iter()
-        .flat_map(|(_, fs)| {
-            fs.iter().map(|p| (scanner::rel_str(root, p), p.clone()))
-        })
-        .collect();
+    /// Worker threads for hash + parse (0 = auto).
+    pub fn jobs(mut self, jobs: usize) -> Admission<'a> {
+        self.jobs = jobs;
+        self
+    }
 
-    let snapshot: &RunStore = store;
-    let outcomes: Vec<Outcome> = parallel_map(&all, jobs, |(rel, path)| {
-        let bytes = match std::fs::read(path) {
-            Ok(b) => b,
-            Err(e) => {
-                return Outcome::Bad(format!(
-                    "skipping {}: {e}",
-                    path.display()
-                ))
-            }
-        };
-        let hash = content_hash(&bytes);
-        if snapshot.contains(rel, &hash) {
-            return Outcome::AlreadyStored;
-        }
-        // Streaming decode straight from the bytes just hashed — no
-        // UTF-8 revalidation pass, no Json tree.
-        match RunData::from_slice(&bytes, path) {
-            Ok(data) => Outcome::Fresh(hash, RunMetrics::from_run(&data, rel)),
-            Err(e) => {
-                Outcome::Bad(format!("skipping {}: {e:#}", path.display()))
-            }
-        }
-    });
+    /// Stamp `commit` into admitted runs that carry no git metadata.
+    pub fn commit(mut self, commit: Option<&'a GitMeta>) -> Admission<'a> {
+        self.commit = commit;
+        self
+    }
 
-    let mut report = IngestReport { scanned: all.len(), ..Default::default() };
-    let mut fresh: Vec<(String, String, RunMetrics)> = Vec::new();
-    let mut next = outcomes.into_iter();
-    for (id, files) in &found {
-        for _ in files {
-            match next.next().expect("ingest worker skipped a file") {
-                Outcome::AlreadyStored => report.already_stored += 1,
-                Outcome::Fresh(hash, mut run) => {
-                    report.parsed += 1;
-                    if run.git.is_none() {
-                        run.git = commit.cloned();
+    /// Pin every file to one adapter instead of auto-detecting.
+    pub fn format(mut self, adapter: &'static dyn Adapter) -> Admission<'a> {
+        self.format = Some(adapter);
+        self
+    }
+
+    /// Ingest every artifact under `root` into `store`.  Files whose
+    /// (path, content hash) identity is already stored are skipped
+    /// without parsing; fresh files go through their adapter in
+    /// parallel and append in deterministic discover order.  An
+    /// ambiguously-detected file fails the whole pass.
+    pub fn ingest_dir(
+        &self,
+        store: &mut RunStore,
+        root: &Path,
+    ) -> Result<IngestReport> {
+        enum Outcome {
+            AlreadyStored,
+            Fresh(&'static str, String, Vec<RunMetrics>),
+            Bad(String),
+            /// Auto-detection matched several adapters: hard error.
+            Refused(String),
+        }
+
+        let found = scanner::discover(root)?;
+        let all: Vec<(String, std::path::PathBuf)> = found
+            .iter()
+            .flat_map(|(_, fs)| {
+                fs.iter().map(|p| (scanner::rel_str(root, p), p.clone()))
+            })
+            .collect();
+
+        let fixed = self.format;
+        let snapshot: &RunStore = store;
+        let outcomes: Vec<Outcome> =
+            parallel_map(&all, self.jobs, |(rel, path)| {
+                let bytes = match std::fs::read(path) {
+                    Ok(b) => b,
+                    Err(e) => {
+                        return Outcome::Bad(format!(
+                            "skipping {}: {e}",
+                            path.display()
+                        ))
                     }
-                    fresh.push((id.clone(), hash, run));
+                };
+                let hash = content_hash(&bytes);
+                if snapshot.contains_file(rel, &hash) {
+                    return Outcome::AlreadyStored;
                 }
-                Outcome::Bad(w) => report.warnings.push(w),
+                let adapter = match fixed {
+                    Some(a) => a,
+                    None => match adapters::detect(&bytes) {
+                        Detection::Match(a) => a,
+                        Detection::Ambiguous(a, b) => {
+                            return Outcome::Refused(format!(
+                                "{}: ambiguous format — detected as both \
+                                 '{a}' and '{b}'; pass an explicit format",
+                                path.display()
+                            ))
+                        }
+                        Detection::Unknown => {
+                            return Outcome::Bad(format!(
+                                "skipping {}: no registered adapter ({}) \
+                                 recognizes this file",
+                                path.display(),
+                                adapters::names()
+                            ))
+                        }
+                    },
+                };
+                match adapter.parse(&bytes, rel) {
+                    Ok(runs) => Outcome::Fresh(adapter.name(), hash, runs),
+                    Err(e) => Outcome::Bad(format!(
+                        "skipping {}: {e:#}",
+                        path.display()
+                    )),
+                }
+            });
+
+        let mut report =
+            IngestReport { scanned: all.len(), ..Default::default() };
+        let mut fresh: Vec<(String, String, RunMetrics)> = Vec::new();
+        let mut next = outcomes.into_iter();
+        for (id, files) in &found {
+            for _ in files {
+                match next.next().expect("ingest worker skipped a file") {
+                    Outcome::AlreadyStored => report.already_stored += 1,
+                    Outcome::Fresh(format, hash, runs) => {
+                        report.parsed += 1;
+                        *report.formats.entry(format).or_default() +=
+                            runs.len();
+                        for mut run in runs {
+                            if run.git.is_none() {
+                                run.git = self.commit.cloned();
+                            }
+                            fresh.push((id.clone(), hash.clone(), run));
+                        }
+                    }
+                    Outcome::Bad(w) => report.warnings.push(w),
+                    Outcome::Refused(e) => bail!(e),
+                }
             }
         }
+        report.stored_experiments =
+            fresh.iter().map(|(id, _, _)| id.clone()).collect();
+        let parsed_runs = fresh.len();
+        // One batched append: each touched shard opens once, and a
+        // duplicate identity within the batch (possible only if the
+        // same path was discovered twice) dedups here.
+        report.stored = store.append_all(fresh)?;
+        report.already_stored += parsed_runs - report.stored;
+        if report.stored == 0 {
+            report.stored_experiments.clear();
+        }
+        Ok(report)
     }
-    report.stored_experiments =
-        fresh.iter().map(|(id, _, _)| id.clone()).collect();
-    // One batched append: each touched shard opens once, and a
-    // duplicate identity within the batch (possible only if the same
-    // path was discovered twice) dedups here.
-    report.stored = store.append_all(fresh)?;
-    report.already_stored += report.parsed - report.stored;
-    if report.stored == 0 {
-        report.stored_experiments.clear();
-    }
-    Ok(report)
+}
+
+/// Thin wrapper: [`Admission`] with every default (auto format, auto
+/// workers, no commit stamp).
+pub fn ingest_dir(store: &mut RunStore, root: &Path) -> Result<IngestReport> {
+    Admission::new().ingest_dir(store, root)
 }
 
 #[cfg(test)]
@@ -152,6 +251,16 @@ mod tests {
         }
     }
 
+    fn beeswarm_doc() -> &'static str {
+        r#"{"application": "lulesh", "machine": "mn5",
+            "timestamp": "2026-02-01T08:00:00Z",
+            "scales": [
+              {"processes": 1, "threads": 2, "time_s": 10.0,
+               "efficiency": 1.0},
+              {"processes": 2, "threads": 2, "time_s": 5.5,
+               "efficiency": 0.91}]}"#
+    }
+
     #[test]
     fn cold_then_warm_ingest() {
         let td = TempDir::new("ingest").unwrap();
@@ -159,32 +268,82 @@ mod tests {
         let root = td.path().join("store");
         let mut store = RunStore::create_or_open(&root).unwrap();
 
-        let cold = ingest_dir(&mut store, td.path(), 0, None).unwrap();
+        let cold = ingest_dir(&mut store, td.path()).unwrap();
         assert_eq!(cold.scanned, 3);
         assert_eq!(cold.parsed, 3);
         assert_eq!(cold.stored, 3);
         assert_eq!(cold.already_stored, 0);
         assert!(cold.warnings.is_empty());
+        assert_eq!(cold.formats.get("talp"), Some(&3));
         assert_eq!(
             cold.stored_experiments.iter().collect::<Vec<_>>(),
             ["salpha/res_1"]
         );
 
         // Warm re-ingest: everything hashes, nothing parses.
-        let warm = ingest_dir(&mut store, td.path(), 0, None).unwrap();
+        let warm = ingest_dir(&mut store, td.path()).unwrap();
         assert_eq!(warm.scanned, 3);
         assert_eq!(warm.parsed, 0, "warm ingest must parse zero artifacts");
         assert_eq!(warm.stored, 0);
         assert_eq!(warm.already_stored, 3);
+        assert!(warm.formats.is_empty());
         assert!(warm.stored_experiments.is_empty());
 
         // One new file: exactly one parse.
         build_tree(&td, 4);
-        let incr = ingest_dir(&mut store, td.path(), 0, None).unwrap();
+        let incr = ingest_dir(&mut store, td.path()).unwrap();
         assert_eq!(incr.parsed, 1);
         assert_eq!(incr.stored, 1);
         assert_eq!(incr.already_stored, 3);
         assert_eq!(store.len(), 4);
+    }
+
+    #[test]
+    fn mixed_formats_admit_into_one_store_and_warm_skip() {
+        let td = TempDir::new("ingest-mixed").unwrap();
+        build_tree(&td, 2);
+        std::fs::write(
+            td.path().join("salpha/res_1/sweep.json"),
+            beeswarm_doc(),
+        )
+        .unwrap();
+        let mut store =
+            RunStore::create_or_open(&td.path().join("store")).unwrap();
+        let cold = ingest_dir(&mut store, td.path()).unwrap();
+        assert_eq!(cold.scanned, 3);
+        assert_eq!(cold.parsed, 3, "all three files parse");
+        assert_eq!(cold.stored, 4, "beeswarm file expands to 2 records");
+        assert_eq!(cold.formats.get("talp"), Some(&2));
+        assert_eq!(cold.formats.get("beeswarm"), Some(&2));
+        assert_eq!(store.len(), 4);
+        // Warm: the multi-run file skips at the hash level too.
+        let warm = ingest_dir(&mut store, td.path()).unwrap();
+        assert_eq!(warm.parsed, 0, "multi-run file must warm-skip");
+        assert_eq!(warm.already_stored, 3);
+    }
+
+    #[test]
+    fn ambiguous_detection_is_a_hard_error() {
+        let td = TempDir::new("ingest-ambig").unwrap();
+        build_tree(&td, 1);
+        std::fs::write(
+            td.path().join("salpha/res_1/both.json"),
+            r#"{"scales": [], "context": {}, "benchmarks": []}"#,
+        )
+        .unwrap();
+        let mut store =
+            RunStore::create_or_open(&td.path().join("store")).unwrap();
+        let err = ingest_dir(&mut store, td.path()).unwrap_err();
+        assert!(err.to_string().contains("ambiguous format"), "{err:#}");
+        assert_eq!(store.len(), 0, "nothing admitted from a refused pass");
+        // Pinning the format turns the refusal into an ordinary
+        // parse-or-skip decision.
+        let rep = Admission::new()
+            .format(crate::adapters::by_name("talp").unwrap())
+            .ingest_dir(&mut store, td.path())
+            .unwrap();
+        assert_eq!(rep.stored, 1, "the talp file");
+        assert_eq!(rep.warnings.len(), 1, "the crafted file skips");
     }
 
     #[test]
@@ -196,13 +355,13 @@ mod tests {
         build_tree(&td, 2);
         let mut store =
             RunStore::create_or_open(&td.path().join("store")).unwrap();
-        ingest_dir(&mut store, td.path(), 0, None).unwrap();
+        ingest_dir(&mut store, td.path()).unwrap();
         assert_eq!(store.len(), 2);
 
         let repo = crate::ci::Repo::genex_history(1, 0, 3, 9_000);
         crate::ci::gitmeta::stamp_tree(td.path(), &repo.commits[0])
             .unwrap();
-        let re = ingest_dir(&mut store, td.path(), 0, None).unwrap();
+        let re = ingest_dir(&mut store, td.path()).unwrap();
         assert_eq!(re.parsed, 2, "stamped bytes are new content");
         assert_eq!(re.stored, 2);
         assert_eq!(store.len(), 2, "superseded, not duplicated");
@@ -219,13 +378,13 @@ mod tests {
             .unwrap();
         let mut store =
             RunStore::create_or_open(&td.path().join("store")).unwrap();
-        let rep = ingest_dir(&mut store, td.path(), 0, None).unwrap();
+        let rep = ingest_dir(&mut store, td.path()).unwrap();
         assert_eq!(rep.stored, 2);
         assert_eq!(rep.warnings.len(), 1);
         assert!(rep.warnings[0].contains("bad.json"));
         // The corrupt file is not stored: re-ingest warns again but
         // still parses nothing valid.
-        let rep2 = ingest_dir(&mut store, td.path(), 0, None).unwrap();
+        let rep2 = ingest_dir(&mut store, td.path()).unwrap();
         assert_eq!(rep2.parsed, 0);
         assert_eq!(rep2.warnings.len(), 1);
     }
@@ -242,7 +401,10 @@ mod tests {
             commit_timestamp: 4_242,
             message: "ingest-time stamp".into(),
         };
-        ingest_dir(&mut store, td.path(), 0, Some(&meta)).unwrap();
+        Admission::new()
+            .commit(Some(&meta))
+            .ingest_dir(&mut store, td.path())
+            .unwrap();
         let scan = RunStore::open(store.root()).unwrap().into_scan();
         let run = &scan.experiments[0].runs[0];
         assert_eq!(run.git.as_ref().unwrap().commit, "feedc0de");
@@ -265,8 +427,6 @@ mod tests {
         let td = TempDir::new("ingest-missing").unwrap();
         let mut store =
             RunStore::create_or_open(&td.path().join("store")).unwrap();
-        assert!(
-            ingest_dir(&mut store, &td.path().join("nope"), 0, None).is_err()
-        );
+        assert!(ingest_dir(&mut store, &td.path().join("nope")).is_err());
     }
 }

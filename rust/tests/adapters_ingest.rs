@@ -1,0 +1,189 @@
+//! Acceptance tests for the multi-format ingestion API (ISSUE 9):
+//!
+//! * the committed per-adapter fixtures admit through the CLI into
+//!   one mixed store, with `--format` pinning and auto-detection
+//!   agreeing on the result;
+//! * `report --store` over a mixed corpus is byte-identical across
+//!   `--jobs 1/4` and across cold/warm cache runs;
+//! * `talp-pages sim` corpora are byte-reproducible from the seed
+//!   (and actually differ under another seed), in foreign formats
+//!   too.
+
+use std::path::{Path, PathBuf};
+
+use talp_pages::cli;
+use talp_pages::store::RunStore;
+use talp_pages::util::fs::TempDir;
+
+fn run_cli(line: &str) -> anyhow::Result<i32> {
+    cli::main_with_args(
+        &line.split_whitespace().map(String::from).collect::<Vec<_>>(),
+    )
+}
+
+fn fixture(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures")
+        .join(name)
+}
+
+/// A mixed artifact tree: three native talp runs from the simulator
+/// plus the committed ROOT-bench and BeeSwarm fixtures under `ci/`.
+fn build_mixed_tree(tree: &Path) {
+    assert_eq!(
+        run_cli(&format!(
+            "sim --output {} --seed 11 --runs 3 --axes weak-scaling",
+            tree.display()
+        ))
+        .unwrap(),
+        0
+    );
+    std::fs::create_dir_all(tree.join("ci")).unwrap();
+    std::fs::copy(fixture("root_bench.json"), tree.join("ci/bench.json"))
+        .unwrap();
+    std::fs::copy(fixture("beeswarm.json"), tree.join("ci/sweep.json"))
+        .unwrap();
+}
+
+#[test]
+fn fixtures_admit_through_cli_into_one_store() {
+    let td = TempDir::new("adapters-cli").unwrap();
+    let tree = td.path().join("artifacts");
+    build_mixed_tree(&tree);
+    let store = td.path().join("store");
+
+    // Auto-detection admits all three formats in one pass: 3 talp
+    // runs, 1 root-bench pseudo-run, 3 beeswarm scale points.
+    assert_eq!(
+        run_cli(&format!(
+            "ingest --input {} --store {}",
+            tree.display(),
+            store.display()
+        ))
+        .unwrap(),
+        0
+    );
+    assert_eq!(RunStore::open(&store).unwrap().len(), 7);
+
+    // A second pass is warm for every format: multi-run files skip at
+    // the file-hash level too.
+    assert_eq!(
+        run_cli(&format!(
+            "ingest --input {} --store {}",
+            tree.display(),
+            store.display()
+        ))
+        .unwrap(),
+        0
+    );
+    assert_eq!(RunStore::open(&store).unwrap().len(), 7);
+
+    // Pinning --format root-bench admits only the root-bench fixture
+    // from the ci/ folder; the beeswarm file degrades to a skip.
+    let pinned = td.path().join("store-pinned");
+    assert_eq!(
+        run_cli(&format!(
+            "ingest --input {} --store {} --format root-bench",
+            tree.join("ci").display(),
+            pinned.display()
+        ))
+        .unwrap(),
+        0
+    );
+    assert_eq!(RunStore::open(&pinned).unwrap().len(), 1);
+
+    // An unknown format name is a hard CLI error.
+    assert!(run_cli(&format!(
+        "ingest --input {} --store {} --format protobuf",
+        tree.display(),
+        td.path().join("store-bad").display()
+    ))
+    .is_err());
+}
+
+#[test]
+fn mixed_store_report_is_byte_identical_across_jobs_and_warmth() {
+    let td = TempDir::new("adapters-report").unwrap();
+    let tree = td.path().join("artifacts");
+    build_mixed_tree(&tree);
+    let store = td.path().join("store");
+    assert_eq!(
+        run_cli(&format!(
+            "ingest --input {} --store {}",
+            tree.display(),
+            store.display()
+        ))
+        .unwrap(),
+        0
+    );
+
+    let report_with = |jobs: usize, out: &Path| -> String {
+        assert_eq!(
+            run_cli(&format!(
+                "report --store {} --output {} --format json --jobs {jobs}",
+                store.display(),
+                out.display()
+            ))
+            .unwrap(),
+            0
+        );
+        std::fs::read_to_string(out.join("report.json")).unwrap()
+    };
+
+    let site1 = td.path().join("site-jobs1");
+    let site4 = td.path().join("site-jobs4");
+    let cold = report_with(1, &site1);
+    assert_eq!(
+        cold,
+        report_with(4, &site4),
+        "mixed-store report must not depend on --jobs"
+    );
+    // Second run over the same output dir hits the metrics cache.
+    let warm = report_with(1, &site1);
+    assert_eq!(cold, warm, "warm report must equal the cold one");
+    // All three formats actually contribute experiments.
+    for exp in ["weak-scaling", "ci"] {
+        assert!(cold.contains(exp), "missing experiment {exp}:\n{cold}");
+    }
+}
+
+#[test]
+fn sim_corpora_are_byte_reproducible_from_the_seed() {
+    let td = TempDir::new("sim-determinism").unwrap();
+    let gen = |dir: &str, seed: u64| -> PathBuf {
+        let out = td.path().join(dir);
+        assert_eq!(
+            run_cli(&format!(
+                "sim --output {} --seed {seed} --runs 2 \
+                 --axes weak-scaling --axes step --format beeswarm",
+                out.display()
+            ))
+            .unwrap(),
+            0
+        );
+        out
+    };
+    let a = gen("a", 42);
+    let b = gen("b", 42);
+    let c = gen("c", 43);
+
+    let snapshot = |root: &Path| -> Vec<(String, Vec<u8>)> {
+        let mut files = Vec::new();
+        for axis in ["weak-scaling", "step"] {
+            for i in 0..2 {
+                let rel = format!("{axis}/run_{i}.json");
+                files.push((
+                    rel.clone(),
+                    std::fs::read(root.join(&rel)).unwrap(),
+                ));
+            }
+        }
+        files
+    };
+    assert_eq!(
+        snapshot(&a),
+        snapshot(&b),
+        "same seed must reproduce byte-for-byte"
+    );
+    assert_ne!(snapshot(&a), snapshot(&c), "another seed must differ");
+}

@@ -172,6 +172,61 @@ fn corruption_ladder_input_surface() {
 }
 
 #[test]
+fn corruption_ladder_adapter_formats() {
+    // A valid artifact in another registered ingestion format is not a
+    // finding: the scanner's TP002 is dropped after the adapter
+    // registry vouches for the file, and the mixed tree surfaces as
+    // TP022 (info — exit stays 0).
+    let td = TempDir::new("ladder-tp022").unwrap();
+    let talp = td.path().join("talp");
+    build_tree(&talp);
+    std::fs::write(
+        talp.join("exp/bsw_sweep.json"),
+        r#"{"application": "bsw", "machine": "mn5",
+            "timestamp": "2026-01-01T00:00:00Z",
+            "scales": [{"processes": 2, "threads": 2,
+                        "time_s": 10.0, "efficiency": 0.9}]}"#,
+    )
+    .unwrap();
+    let rep = run_check(&input_opts(&talp)).unwrap();
+    assert_eq!(codes(&rep), ["TP022"], "{:?}", rep.diagnostics);
+    assert_eq!(rep.exit_code(), 0, "info never changes the exit code");
+    assert_code(&input_opts(&talp), "TP022", "mixed-format tree");
+
+    // TP023: a file two adapters both claim (beeswarm's `scales` next
+    // to root-bench's `benchmarks` + `context`) is an error, not a
+    // silent pick.
+    let td = TempDir::new("ladder-tp023").unwrap();
+    let talp = td.path().join("talp");
+    build_tree(&talp);
+    std::fs::write(
+        talp.join("exp/mystery.json"),
+        r#"{"scales": [], "context": {}, "benchmarks": []}"#,
+    )
+    .unwrap();
+    let rep = run_check(&input_opts(&talp)).unwrap();
+    assert_eq!(codes(&rep), ["TP023"], "{:?}", rep.diagnostics);
+    assert_eq!(rep.exit_code(), 2, "ambiguity is an error");
+    assert_code(&input_opts(&talp), "TP023", "ambiguous format");
+
+    // TP024: recognized by exactly one adapter but broken (beeswarm
+    // without its mandatory timestamp) — sharper than a generic TP002.
+    let td = TempDir::new("ladder-tp024").unwrap();
+    let talp = td.path().join("talp");
+    build_tree(&talp);
+    std::fs::write(
+        talp.join("exp/bsw_broken.json"),
+        r#"{"scales": [{"processes": 2, "time_s": 3.0,
+                        "efficiency": 0.5}]}"#,
+    )
+    .unwrap();
+    let rep = run_check(&input_opts(&talp)).unwrap();
+    assert_eq!(codes(&rep), ["TP024"], "{:?}", rep.diagnostics);
+    assert_eq!(rep.exit_code(), 2, "a broken artifact is an error");
+    assert_code(&input_opts(&talp), "TP024", "recognized but broken");
+}
+
+#[test]
 fn corruption_ladder_store_surface() {
     let base = |name: &str| -> (TempDir, PathBuf) {
         let td = TempDir::new(name).unwrap();
@@ -444,6 +499,38 @@ fn golden_report() -> CheckReport {
             "`talp-pages store compact` rewrites shards past the \
              threshold",
         ),
+    );
+    rep.push(
+        Diagnostic::info(
+            "TP022",
+            "talp",
+            "tree mixes 2 ingestion formats (beeswarm 1, talp 3)",
+        )
+        .with_hint(
+            "intentional mixes are fine; pin one with `ingest --format \
+             <name>` to reject strays",
+        ),
+    );
+    rep.push(
+        Diagnostic::error(
+            "TP023",
+            "talp/exp/mystery.json",
+            "ambiguous format — detected as both 'root-bench' and \
+             'beeswarm'",
+        )
+        .with_hint(
+            "pass an explicit --format to ingest, or remove the \
+             colliding top-level keys",
+        ),
+    );
+    rep.push(
+        Diagnostic::error(
+            "TP024",
+            "talp/exp/bsw_broken.json",
+            "recognized as a 'beeswarm' artifact but it fails to parse: \
+             parsing talp/exp/bsw_broken.json: missing/bad timestamp",
+        )
+        .with_hint("fix the file or remove it from the tree"),
     );
     rep.sort();
     rep

@@ -217,7 +217,7 @@ fn shard_corruption_degrades_to_warnings() {
     }
     let store_root = td.path().join("store");
     let mut store = RunStore::create_or_open(&store_root).unwrap();
-    talp_pages::store::ingest_dir(&mut store, &input, 0, None).unwrap();
+    talp_pages::store::ingest_dir(&mut store, &input).unwrap();
     assert_eq!(store.len(), 3);
     drop(store);
 

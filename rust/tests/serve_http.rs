@@ -144,6 +144,12 @@ fn get(addr: SocketAddr, target: &str) -> (u16, Vec<u8>) {
     request(addr, "GET", target, &[])
 }
 
+fn fixture(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures")
+        .join(name)
+}
+
 /// Recursively collect (relative path, bytes) under `dir`.
 fn walk(dir: &Path, prefix: &str, out: &mut Vec<(String, Vec<u8>)>) {
     for entry in std::fs::read_dir(dir).unwrap() {
@@ -261,6 +267,89 @@ fn served_payloads_match_batch_before_and_after_ingest() {
     assert!(reply.contains("\"snapshot_seq\":2"), "{reply}");
 
     handle.shutdown().unwrap();
+}
+
+#[test]
+fn foreign_format_posts_ingest_into_one_store() {
+    let td = TempDir::new("serve-adapters").unwrap();
+    let (store, policy) = seeded_store(&td);
+    let handle = serve::spawn(serve_opts(&store, &policy)).unwrap();
+    let addr = handle.addr();
+
+    // ROOT-bench body, auto-detected.
+    let bench = std::fs::read(fixture("root_bench.json")).unwrap();
+    let (status, body) =
+        request(addr, "POST", "/ingest?source=ci/bench.json", &bench);
+    assert_eq!(status, 200, "{}", String::from_utf8_lossy(&body));
+    let reply = String::from_utf8(body).unwrap();
+    assert!(reply.contains("\"stored\":true"), "{reply}");
+    assert!(reply.contains("\"format\":\"root-bench\""), "{reply}");
+    assert!(reply.contains("\"runs\":1"), "{reply}");
+
+    // A BeeSwarm scaling sweep, format pinned: one body, three runs.
+    let sweep = std::fs::read(fixture("beeswarm.json")).unwrap();
+    let (status, body) = request(
+        addr,
+        "POST",
+        "/ingest?source=ci/sweep.json&format=beeswarm",
+        &sweep,
+    );
+    assert_eq!(status, 200, "{}", String::from_utf8_lossy(&body));
+    let reply = String::from_utf8(body).unwrap();
+    assert!(reply.contains("\"stored\":true"), "{reply}");
+    assert!(reply.contains("\"format\":\"beeswarm\""), "{reply}");
+    assert!(reply.contains("\"runs\":3"), "{reply}");
+
+    // An ambiguous body is a hard 400, never a guess.
+    let (status, body) = request(
+        addr,
+        "POST",
+        "/ingest?source=ci/both.json",
+        br#"{"scales": [], "context": {}, "benchmarks": []}"#,
+    );
+    assert_eq!(status, 400);
+    assert!(String::from_utf8_lossy(&body).contains("ambiguous"));
+    // Unknown pinned format: 400 naming the registry.
+    let (status, body) = request(
+        addr,
+        "POST",
+        "/ingest?source=ci/x.json&format=protobuf",
+        &bench,
+    );
+    assert_eq!(status, 400);
+    assert!(
+        String::from_utf8_lossy(&body).contains("talp|root-bench|beeswarm")
+    );
+    // Pinned to the wrong format: the parse fails, 400.
+    let (status, _) = request(
+        addr,
+        "POST",
+        "/ingest?source=ci/y.json&format=talp",
+        &sweep,
+    );
+    assert_eq!(status, 400);
+
+    // /statsz carries the per-format admission counters.
+    let (_, body) = get(addr, "/statsz");
+    let stats = String::from_utf8(body).unwrap();
+    assert!(stats.contains("\"formats\":{"), "{stats}");
+    assert!(stats.contains("\"beeswarm\":3"), "{stats}");
+    assert!(stats.contains("\"root-bench\":1"), "{stats}");
+    assert!(stats.contains("\"stored_runs\":8"), "{stats}");
+
+    // Re-POSTing the sweep is warm at the file level: one hash check,
+    // no parse, nothing stored.
+    let (status, body) = request(
+        addr,
+        "POST",
+        "/ingest?source=ci/sweep.json&format=beeswarm",
+        &sweep,
+    );
+    assert_eq!(status, 200);
+    assert!(String::from_utf8(body).unwrap().contains("\"stored\":false"));
+
+    handle.shutdown().unwrap();
+    assert_eq!(RunStore::open(&store).unwrap().len(), 8);
 }
 
 #[test]

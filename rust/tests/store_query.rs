@@ -95,7 +95,7 @@ fn unindexed_store_queries_correctly_and_heals_sidecars() {
         // Library-level ingest writes shards but no sidecars — the
         // backward-compat shape of every pre-index store.
         let mut store = RunStore::create_or_open(&root).unwrap();
-        assert_eq!(ingest_dir(&mut store, &input, 0, None).unwrap().stored, 4);
+        assert_eq!(ingest_dir(&mut store, &input).unwrap().stored, 4);
     }
     let shard = root.join("shards/exp__2x2.jsonl");
     assert!(shard.exists());

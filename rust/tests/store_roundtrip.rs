@@ -151,12 +151,12 @@ fn warm_reingest_parses_zero_artifacts() {
     let mut store =
         RunStore::create_or_open(&td.path().join("store")).unwrap();
 
-    let cold = ingest_dir(&mut store, &input, 0, None).unwrap();
+    let cold = ingest_dir(&mut store, &input).unwrap();
     assert_eq!(cold.scanned, 4);
     assert_eq!(cold.parsed, 4);
     assert_eq!(cold.stored, 4);
 
-    let warm = ingest_dir(&mut store, &input, 0, None).unwrap();
+    let warm = ingest_dir(&mut store, &input).unwrap();
     assert_eq!(warm.scanned, 4);
     assert_eq!(warm.parsed, 0, "warm ingest must parse zero artifacts");
     assert_eq!(warm.stored, 0);
@@ -166,7 +166,7 @@ fn warm_reingest_parses_zero_artifacts() {
     run(2, 14.0, 9.5, 3000, "third0003")
         .write_file(&input.join("exp/talp_2x2_run2.json"))
         .unwrap();
-    let incr = ingest_dir(&mut store, &input, 0, None).unwrap();
+    let incr = ingest_dir(&mut store, &input).unwrap();
     assert_eq!(incr.parsed, 1);
     assert_eq!(incr.stored, 1);
     assert_eq!(store.len(), 5);

@@ -308,6 +308,10 @@ pub fn describe(code: &str) -> &'static str {
         "TP022" => "artifact tree mixes ingestion formats",
         "TP023" => "ambiguous artifact format (several adapters claim it)",
         "TP024" => "recognized by an ingestion adapter but fails to parse",
+        "TP025" => "fsck-detectable store damage (torn shard tail or \
+                    stale manifest)",
+        "TP026" => "interrupted-operation residue (orphan temp or \
+                    sidecar file left by a crash)",
         "TP030" => "report schema_version not understood by this build",
         "TP031" => "report document invalid",
         "TP040" => "policy rule matches nothing in the corpus",
@@ -603,6 +607,7 @@ mod tests {
             "TP001", "TP002", "TP003", "TP010", "TP011", "TP012",
             "TP013", "TP014", "TP015", "TP016", "TP017", "TP018",
             "TP019", "TP020", "TP021", "TP022", "TP023", "TP024",
+            "TP025", "TP026",
             "TP030", "TP031", "TP040", "TP041",
             "TP050", "TP051", "TP052", "TP060",
         ] {

@@ -42,8 +42,13 @@ struct LineInfo {
 /// content stored under several paths (TP016, info), index sidecars
 /// out of sync with their shard (TP017 — queries degrade to the
 /// sequential scan), shards past the compaction threshold (TP018,
-/// info with a fix-it) and an orphaned writer lockfile (TP019 — a
-/// *live* holder is normal operation and stays silent).
+/// info with a fix-it), an orphaned writer lockfile (TP019 — a
+/// *live* holder is normal operation and stays silent),
+/// fsck-detectable crash damage (TP025, error — a torn or
+/// unterminated final record, or a manifest that drifted from the
+/// shards on disk) and interrupted-operation residue (TP026, warning
+/// — `.tmp` staging files, empty shards, orphan sidecars); both
+/// carry the `store fsck --repair` fix-it.
 pub fn check_store(root: &Path, rep: &mut CheckReport) {
     let manifest = root.join(MANIFEST_FILE_NAME);
     let manifest_disp = manifest.display().to_string();
@@ -154,6 +159,27 @@ pub fn check_store(root: &Path, rep: &mut CheckReport) {
                 sidecars.push(path);
                 continue;
             }
+            // `.tmp` staging files are interrupted-operation residue
+            // (TP026): a durable write crashed between staging and
+            // rename.  The loader ignores them either way.
+            if path.extension().and_then(|e| e.to_str()) == Some("tmp") {
+                rep.push(
+                    Diagnostic::warning(
+                        "TP026",
+                        disp,
+                        format!(
+                            "interrupted-operation residue in {SHARDS_DIR}/ \
+                             (a `.tmp` staging file whose rename never \
+                             happened) — the loader ignores it"
+                        ),
+                    )
+                    .with_hint(
+                        "`talp-pages store fsck --repair` removes crash \
+                         residue",
+                    ),
+                );
+                continue;
+            }
             rep.push(
                 Diagnostic::warning(
                     "TP014",
@@ -162,8 +188,8 @@ pub fn check_store(root: &Path, rep: &mut CheckReport) {
                              — the loader ignores it"),
                 )
                 .with_hint(
-                    "a `.jsonl.tmp` file is a leftover from an interrupted \
-                     compaction and is safe to delete",
+                    "files that are not part of the store layout can be \
+                     moved out or deleted",
                 ),
             );
             continue;
@@ -184,8 +210,30 @@ pub fn check_store(root: &Path, rep: &mut CheckReport) {
                 continue;
             }
         };
+        if bytes.is_empty() {
+            // A zero-byte shard is crash residue: an append was
+            // interrupted between creating the file and writing its
+            // first record.  The loader skips it, but the store is in
+            // neither its before- nor after-append state until it
+            // goes (TP026).
+            rep.push(
+                Diagnostic::warning(
+                    "TP026",
+                    disp,
+                    "empty shard file (an append was interrupted between \
+                     creating the file and writing its first record)",
+                )
+                .with_hint(
+                    "`talp-pages store fsck --repair` removes crash \
+                     residue",
+                ),
+            );
+            continue;
+        }
         shard_sizes.insert(path.clone(), bytes.len() as u64);
         let lines = shard_lines.entry(path.clone()).or_default();
+        let ends_nl = bytes.last() == Some(&b'\n');
+        let fragments = bytes.split(|&b| b == b'\n').count();
         let mut misnamed_reported = false;
         let mut lineno = 0usize;
         let mut offset = 0usize;
@@ -195,6 +243,11 @@ pub fn check_store(root: &Path, rep: &mut CheckReport) {
             offset += line.len() + 1;
             let lead =
                 line.iter().take_while(|b| b.is_ascii_whitespace()).count();
+            // An unterminated final line is an interrupted append
+            // (TP025): decodable means the crash fell between payload
+            // and newline, torn means mid-payload.  Either way the
+            // next append would land on the same line and corrupt it.
+            let is_tail = !ends_nl && lineno == fragments;
             let line = trim_line(line);
             if line.is_empty() {
                 continue;
@@ -202,15 +255,33 @@ pub fn check_store(root: &Path, rep: &mut CheckReport) {
             let rec = match StoredRun::from_line(line) {
                 Ok(rec) => rec,
                 Err(e) => {
-                    let mut d = Diagnostic::error(
-                        "TP012",
-                        disp.clone(),
-                        format!("corrupt record at line {lineno} ({e:#})"),
-                    )
-                    .with_hint(
-                        "`talp-pages ingest --compact` rewrites shards \
-                         without corrupt lines",
-                    );
+                    let mut d = if is_tail {
+                        Diagnostic::error(
+                            "TP025",
+                            disp.clone(),
+                            format!(
+                                "torn final record at line {lineno} \
+                                 ({e:#}) — an append was interrupted \
+                                 mid-write"
+                            ),
+                        )
+                        .with_hint(
+                            "`talp-pages store fsck --repair` truncates \
+                             the torn tail back to the last intact record",
+                        )
+                    } else {
+                        Diagnostic::error(
+                            "TP012",
+                            disp.clone(),
+                            format!(
+                                "corrupt record at line {lineno} ({e:#})"
+                            ),
+                        )
+                        .with_hint(
+                            "`talp-pages ingest --compact` rewrites shards \
+                             without corrupt lines",
+                        )
+                    };
                     if let Some(off) = error_offset(&e) {
                         d = d.with_span(Span {
                             start: line_start + lead + off,
@@ -221,6 +292,25 @@ pub fn check_store(root: &Path, rep: &mut CheckReport) {
                     continue;
                 }
             };
+            if is_tail {
+                rep.push(
+                    Diagnostic::error(
+                        "TP025",
+                        disp.clone(),
+                        format!(
+                            "final record at line {lineno} has no \
+                             terminating newline (an append was \
+                             interrupted between its payload and the \
+                             newline) — the next append would merge \
+                             into it"
+                        ),
+                    )
+                    .with_hint(
+                        "`talp-pages store fsck --repair` writes the \
+                         missing newline",
+                    ),
+                );
+            }
             let expected = format!(
                 "{}__{}.jsonl",
                 slug(&rec.experiment),
@@ -291,6 +381,82 @@ pub fn check_store(root: &Path, rep: &mut CheckReport) {
         }
     }
 
+    // TP025: manifest drift.  Every writer rewrites the manifest after
+    // mutating shards, so a `shards` array that disagrees with the
+    // files on disk is the signature of a crash between the shard
+    // mutation and the manifest rewrite that follows it (or of a
+    // hand-edited shard).
+    if let Some(Json::Arr(listed)) = doc.get("shards") {
+        let mut in_manifest: BTreeSet<String> = BTreeSet::new();
+        for entry in listed {
+            let (Some(file), Some(bytes)) = (
+                entry.get("file").and_then(Json::as_str),
+                entry.get("bytes").and_then(Json::as_u64),
+            ) else {
+                continue;
+            };
+            in_manifest.insert(file.to_string());
+            let shard = shards_dir.join(file);
+            match shard_sizes.get(&shard) {
+                Some(&actual) if actual != bytes => {
+                    rep.push(
+                        Diagnostic::error(
+                            "TP025",
+                            shard.display().to_string(),
+                            format!(
+                                "manifest drift: the manifest says this \
+                                 shard is {bytes} bytes but it is {actual} \
+                                 on disk"
+                            ),
+                        )
+                        .with_hint(
+                            "`talp-pages store fsck --repair` rewrites \
+                             the manifest from the shards on disk",
+                        ),
+                    );
+                }
+                Some(_) => {}
+                None if !shard.exists() => {
+                    rep.push(
+                        Diagnostic::error(
+                            "TP025",
+                            shard.display().to_string(),
+                            "manifest drift: the manifest lists this \
+                             shard but it does not exist on disk",
+                        )
+                        .with_hint(
+                            "`talp-pages store fsck --repair` rewrites \
+                             the manifest from the shards on disk",
+                        ),
+                    );
+                }
+                // Present but unreadable or empty: TP013/TP026 already
+                // said what is wrong with the file itself.
+                None => {}
+            }
+        }
+        for shard in shard_sizes.keys() {
+            let name = shard
+                .file_name()
+                .map(|n| n.to_string_lossy().into_owned())
+                .unwrap_or_default();
+            if !in_manifest.contains(&name) {
+                rep.push(
+                    Diagnostic::error(
+                        "TP025",
+                        shard.display().to_string(),
+                        "manifest drift: this shard is not listed in the \
+                         manifest",
+                    )
+                    .with_hint(
+                        "`talp-pages store fsck --repair` rewrites the \
+                         manifest from the shards on disk",
+                    ),
+                );
+            }
+        }
+    }
+
     // Liveness replay (the loader's admit rules: duplicates drop,
     // same-source-new-hash supersedes) so the index and dead-byte
     // passes below know which lines a query would actually serve.
@@ -325,12 +491,27 @@ pub fn check_store(root: &Path, rep: &mut CheckReport) {
     // exists to avoid.  First problem per sidecar.
     for sc in &sidecars {
         let shard = sc.with_extension("");
-        let problem: Option<String> = if !shard.exists() {
-            Some(
-                "orphan sidecar — its companion shard does not exist"
-                    .to_string(),
-            )
-        } else if let Some(lines) = shard_lines.get(&shard) {
+        if !shard.exists() {
+            // Residue, not skew: the companion shard is gone (an
+            // interrupted compaction removed it before the sidecar
+            // cleanup ran), so there is nothing to be out of sync
+            // *with* — TP026, with the fsck fix-it.
+            rep.push(
+                Diagnostic::warning(
+                    "TP026",
+                    sc.display().to_string(),
+                    "orphan sidecar — its companion shard does not exist",
+                )
+                .with_hint(
+                    "`talp-pages store fsck --repair` removes crash \
+                     residue",
+                ),
+            );
+            continue;
+        }
+        let problem: Option<String> = if let Some(lines) =
+            shard_lines.get(&shard)
+        {
             match ShardIndex::load(&shard) {
                 Err(e) => Some(format!(
                     "unparsable ({e:#}) — queries fall back to the \
@@ -834,7 +1015,7 @@ mod tests {
         text.push_str("{\"hash\":\"h9\",\"experiment\":\"exp\",\"run\":{");
         text.push('\n');
         std::fs::write(&shard, text).unwrap();
-        // Stray non-.jsonl file: TP014.
+        // Stray `.tmp` staging file: TP026 (crash residue).
         std::fs::write(
             root.join(SHARDS_DIR).join("exp__2x2.jsonl.tmp"),
             "junk",
@@ -848,9 +1029,11 @@ mod tests {
         found.sort();
         // TP018 rides along: the duplicate and the corrupt line are
         // dead bytes, and together they always cross the threshold.
+        // TP025 rides along too: the hand-edited shard no longer has
+        // the byte count the manifest recorded.
         assert_eq!(
             found,
-            ["TP012", "TP014", "TP015", "TP016", "TP018"],
+            ["TP012", "TP015", "TP016", "TP018", "TP025", "TP026"],
             "{rep:?}"
         );
         let tp012 = rep
@@ -881,6 +1064,87 @@ mod tests {
                 && d.message.contains("belongs in exp__2x2.jsonl")),
             "{rep:?}"
         );
+    }
+
+    #[test]
+    fn store_crash_damage_ladder_tp025_tp026() {
+        let td = TempDir::new("check-crash").unwrap();
+        let root = td.path().join("store");
+        let mut s = RunStore::create_or_open(&root).unwrap();
+        s.append("exp", "h1", run_metrics("a.json", 2, 1)).unwrap();
+        s.append("exp", "h2", run_metrics("b.json", 2, 2)).unwrap();
+        s.refresh_indexes().unwrap();
+        let shard = root.join(SHARDS_DIR).join("exp__2x2.jsonl");
+        let pristine = std::fs::read(&shard).unwrap();
+
+        // Rung 1 — unterminated final record: the crash fell between
+        // the payload and its newline (TP025 error, fsck fix-it).
+        let mut bytes = pristine.clone();
+        assert_eq!(bytes.pop(), Some(b'\n'));
+        std::fs::write(&shard, &bytes).unwrap();
+        let mut rep = CheckReport::new();
+        check_store(&root, &mut rep);
+        let found = codes(&rep);
+        assert!(found.contains(&"TP025"), "{rep:?}");
+        let d = rep
+            .diagnostics
+            .iter()
+            .find(|d| d.code == "TP025")
+            .unwrap();
+        assert_eq!(d.severity, crate::check::Severity::Error);
+        assert!(d.message.contains("no terminating newline"), "{}", d.message);
+        assert!(
+            d.hint.as_deref().unwrap_or_default().contains("fsck"),
+            "{d:?}"
+        );
+
+        // Rung 2 — torn final record: the crash fell mid-payload.
+        let mut bytes = pristine.clone();
+        bytes.truncate(pristine.len() - 10);
+        std::fs::write(&shard, &bytes).unwrap();
+        let mut rep = CheckReport::new();
+        check_store(&root, &mut rep);
+        assert!(
+            rep.diagnostics.iter().any(|d| d.code == "TP025"
+                && d.message.contains("torn final record")),
+            "{rep:?}"
+        );
+        std::fs::write(&shard, &pristine).unwrap();
+
+        // Rung 3 — empty shard file: residue of an append that died
+        // before its first record (TP026 warning).
+        let empty = root.join(SHARDS_DIR).join("late__4x4.jsonl");
+        std::fs::write(&empty, b"").unwrap();
+        let mut rep = CheckReport::new();
+        check_store(&root, &mut rep);
+        assert_eq!(codes(&rep), ["TP026"], "{rep:?}");
+        assert_eq!(
+            rep.diagnostics[0].severity,
+            crate::check::Severity::Warning
+        );
+        assert!(
+            rep.diagnostics[0].message.contains("empty shard"),
+            "{rep:?}"
+        );
+        std::fs::remove_file(&empty).unwrap();
+
+        // Rung 4 — a shard the manifest never heard of (the crash hit
+        // after the shard append but before the manifest rewrite).
+        let extra = root.join(SHARDS_DIR).join("other__2x2.jsonl");
+        std::fs::copy(&shard, &extra).unwrap();
+        let mut rep = CheckReport::new();
+        check_store(&root, &mut rep);
+        assert!(
+            rep.diagnostics.iter().any(|d| d.code == "TP025"
+                && d.message.contains("not listed in the manifest")),
+            "{rep:?}"
+        );
+        std::fs::remove_file(&extra).unwrap();
+
+        // Clean again: every rung healed.
+        let mut rep = CheckReport::new();
+        check_store(&root, &mut rep);
+        assert!(rep.diagnostics.is_empty(), "{rep:?}");
     }
 
     #[test]
@@ -984,13 +1248,14 @@ mod tests {
         );
         std::fs::write(&sidecar, &text).unwrap();
 
-        // Rung 4 — orphan sidecar without a companion shard.
+        // Rung 4 — orphan sidecar without a companion shard: residue
+        // (TP026), not index skew.
         let ghost =
             root.join(SHARDS_DIR).join("ghost__1x1.jsonl.idx");
         std::fs::write(&ghost, "junk").unwrap();
         let mut rep = CheckReport::new();
         check_store(&root, &mut rep);
-        assert_eq!(codes(&rep), ["TP017"], "{rep:?}");
+        assert_eq!(codes(&rep), ["TP026"], "{rep:?}");
         assert!(
             rep.diagnostics[0].message.contains("orphan"),
             "{}",

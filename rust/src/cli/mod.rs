@@ -72,6 +72,9 @@ USAGE:
              [--bench-json] [--jobs <n>]
   talp-pages store compact --store <dir> [--threshold <0..1>]
              [--jobs <n>]
+  talp-pages store fsck --store <dir> [--repair] [--jobs <n>]
+             (crash-recovery scan, dry-run by default; exit 1 while
+              errors remain)
   talp-pages store synth --store <dir> [--experiments <n>]
              [--configs <RxT>...] [--runs-per-shard <n>] [--seed <n>]
              [--machine <mn5|raven>]
@@ -83,6 +86,8 @@ USAGE:
              [--gate <policy.json>] [--regions <r>...]
              [--region-for-badge <r>] [--jobs <n>]
              [--max-body-bytes <n>] [--poll-ms <n>]
+             [--read-timeout-ms <n>] [--write-timeout-ms <n>]
+             [--max-connections <n>]
              (resident monitor; SIGTERM/SIGINT exits cleanly)
   talp-pages check [--input <dir> | --store <dir>] [--policy <p.json>]
              [--cache <file>] [--report <file>] [--bench <file>]
@@ -103,10 +108,23 @@ USAGE:
   talp-pages init-ci --flavor <gitlab|github> --output <file>
              [--regions <r>...] [--region-for-badge <r>]
              [--gate-policy <path>]
+
+Fault injection (builds with `--features failpoints` only): every
+subcommand takes a trailing `--failpoints '<spec>'`, or set the
+TALP_FAILPOINTS env var; see the util::failpoint module docs.
 ";
 
 pub fn main_with_args(argv: &[String]) -> Result<i32> {
     let args = Args::parse(argv);
+    // Fault-injection activation rides on every subcommand as a
+    // trailing flag (flag parsing is global, so position is free, but
+    // it must come *after* the positionals — `--key` greedily consumes
+    // the following non-`--` tokens).  On builds without the
+    // `failpoints` feature this errors loudly instead of silently
+    // running the real syscalls under a chaos spec.
+    if let Some(spec) = args.get("failpoints") {
+        crate::util::failpoint::configure(spec)?;
+    }
     let Some(cmd) = args.positional.first().map(String::as_str) else {
         println!("{USAGE}");
         return Ok(2);
@@ -379,7 +397,7 @@ fn ingest_cmd(args: &Args) -> Result<i32> {
     // Single-writer discipline: a resident `serve` (or another ingest)
     // holds `.talp-store.lock` — refuse up front instead of
     // interleaving shard appends with it.
-    let _lock = store::StoreLock::acquire(&store_root)?;
+    let lock = store::StoreLock::acquire(&store_root)?;
     let mut run_store = store::RunStore::create_or_open(&store_root)?;
     // Optional ingest-time commit stamp for artifacts that skipped the
     // `metadata` step (already-stamped runs keep their own metadata).
@@ -466,24 +484,33 @@ fn ingest_cmd(args: &Args) -> Result<i32> {
     // (After --compact this only touches shards compaction skipped —
     // rewritten ones got fresh sidecars atomically.)
     run_store.refresh_indexes()?;
+    // Explicit release surfaces removal errors (and routes through the
+    // `store::lock::release` failpoint); drop would hide both.
+    lock.release()?;
     Ok(0)
 }
 
-/// `talp-pages store <stats|query|compact|synth>`: direct operations
-/// on a persistent run store — corpus shape, indexed selection,
-/// tiered compaction, and a synthetic-corpus generator for scale
-/// testing.
+/// `talp-pages store <stats|query|compact|fsck|synth>`: direct
+/// operations on a persistent run store — corpus shape, indexed
+/// selection, tiered compaction, crash-recovery fsck, and a
+/// synthetic-corpus generator for scale testing.
 fn store_cmd(args: &Args) -> Result<i32> {
     let Some(sub) = args.positional.get(1).map(String::as_str) else {
-        bail!("store needs a subcommand (stats|query|compact|synth)\n{USAGE}");
+        bail!(
+            "store needs a subcommand (stats|query|compact|fsck|synth)\n{USAGE}"
+        );
     };
     match sub {
         "stats" => store_stats_cmd(args),
         "query" => store_query_cmd(args),
         "compact" => store_compact_cmd(args),
+        "fsck" => store_fsck_cmd(args),
         "synth" => store_synth_cmd(args),
         other => {
-            bail!("unknown store subcommand '{other}' (stats|query|compact|synth)")
+            bail!(
+                "unknown store subcommand '{other}' \
+                 (stats|query|compact|fsck|synth)"
+            )
         }
     }
 }
@@ -620,7 +647,7 @@ fn store_compact_cmd(args: &Args) -> Result<i32> {
         bail!("--threshold must be within 0..1 (got {threshold})");
     }
     // Compaction rewrites shards in place: writer lock, same as ingest.
-    let _lock = store::StoreLock::acquire(&root)?;
+    let lock = store::StoreLock::acquire(&root)?;
     let mut run_store =
         store::RunStore::open_with_jobs(&root, args.get_jobs()?)?;
     for w in run_store.warnings() {
@@ -628,6 +655,7 @@ fn store_compact_cmd(args: &Args) -> Result<i32> {
     }
     let stats = run_store.compact_with(threshold)?;
     run_store.refresh_indexes()?;
+    lock.release()?;
     println!(
         "compacted: {} record(s) across {} shard(s), {} stale file(s) \
          removed (threshold {:.0}% dead)",
@@ -637,6 +665,22 @@ fn store_compact_cmd(args: &Args) -> Result<i32> {
         threshold * 100.0
     );
     Ok(0)
+}
+
+/// `store fsck`: crash-recovery scan over a run store — orphan temp
+/// files, torn shard tails, manifest drift, stale sidecars, orphaned
+/// locks (see [`store::fsck`]).  Dry-run by default; `--repair` heals
+/// under the writer lock.  Exit 0 when no errors remain, 1 otherwise
+/// (so CI can assert a recovered store is actually consistent).
+fn store_fsck_cmd(args: &Args) -> Result<i32> {
+    let root = PathBuf::from(args.require("store")?);
+    let opts = store::FsckOptions {
+        repair: args.has("repair"),
+        jobs: args.get_jobs()?,
+    };
+    let rep = store::fsck(&root, &opts)?;
+    print!("{}", rep.render_text());
+    Ok(if rep.errors_remaining() > 0 { 1 } else { 0 })
 }
 
 /// `store synth`: append a synthetic history corpus — one simulated
@@ -664,7 +708,7 @@ fn store_synth_cmd(args: &Args) -> Result<i32> {
                 .collect::<Result<Vec<_>>>()?
         }
     };
-    let _lock = store::StoreLock::acquire(&root)?;
+    let lock = store::StoreLock::acquire(&root)?;
     let mut run_store = store::RunStore::create_or_open(&root)?;
     // The corpus itself comes from the shared simulator module so
     // `store synth` and `talp-pages sim` stay one generator.
@@ -677,6 +721,7 @@ fn store_synth_cmd(args: &Args) -> Result<i32> {
     );
     let appended = run_store.append_all(batch)?;
     let indexed = run_store.refresh_indexes()?;
+    lock.release()?;
     println!(
         "synth: {} run(s) appended ({} experiment(s) x {} config(s) x \
          {} run(s)), {} sidecar(s) written -> {}",
@@ -758,6 +803,13 @@ fn serve_cmd(args: &Args) -> Result<i32> {
     opts.max_body_bytes =
         args.get_u64("max-body-bytes", opts.max_body_bytes as u64)? as usize;
     opts.poll_ms = args.get_u64("poll-ms", opts.poll_ms)?;
+    opts.read_timeout_ms =
+        args.get_u64("read-timeout-ms", opts.read_timeout_ms)?;
+    opts.write_timeout_ms =
+        args.get_u64("write-timeout-ms", opts.write_timeout_ms)?;
+    opts.max_connections =
+        args.get_u64("max-connections", opts.max_connections as u64)?
+            as usize;
     // Same analysis knobs as `report`, so the served payloads are the
     // batch payloads for the same flags.
     opts.analyze = AnalyzeOptions {

@@ -162,6 +162,30 @@
 //! cost time, never correctness; `store stats` reports corpus shape,
 //! per-shard health and index freshness.
 //!
+//! # Durability & fault model
+//!
+//! The store assumes its writer can die at any instruction and
+//! promises recovery to a state byte-identical to *before or after*
+//! the interrupted operation — never a third state.  Every mutation
+//! routes through two `util::fs` primitives: `durable_append`
+//! (write → fsync → parent-dir fsync on create) for shard appends and
+//! `durable_write_atomic` (temp → write → fsync → rename → parent-dir
+//! fsync) for the manifest, sidecars and compaction rewrites.
+//! [`store::fsck`] (CLI `store fsck`, dry-run by default, `--repair`
+//! to heal) detects and repairs crash residue: orphan temp files,
+//! empty or torn shards, manifest drift, stale sidecars, orphaned
+//! writer locks; `talp-pages check` reports the same damage
+//! statically as `TP025`/`TP026`.  The contract is proved by a
+//! kill-point matrix test driven by `util::failpoint` — a
+//! deterministic fault-injection layer (cargo feature `failpoints`,
+//! activated via `TALP_FAILPOINTS` or the CLI `--failpoints` trailer)
+//! guarding every registered write stage, compiled to an inlined
+//! no-op in default builds.  [`serve`] shares the discipline at the
+//! service level: per-connection timeouts, a bounded connection cap
+//! (`503` + `Retry-After`), and a degraded mode that keeps serving
+//! the last good snapshot when a refresh fails (flagged on
+//! `/healthz`/`/statsz`) instead of dying.
+//!
 //! # Streaming vs tree JSON
 //!
 //! The crate has two JSON APIs over one grammar and one formatter

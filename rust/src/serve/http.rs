@@ -51,6 +51,19 @@ impl HttpError {
 /// more than a few hundred bytes of headers.
 const MAX_HEADER_BYTES: usize = 16 * 1024;
 
+/// Map a socket read failure to its HTTP answer: an expired
+/// `set_read_timeout` deadline (slowloris defence) is a 408, anything
+/// else is the client's malformed traffic (400).
+fn read_error(e: std::io::Error, what: &str) -> HttpError {
+    use std::io::ErrorKind;
+    match e.kind() {
+        ErrorKind::TimedOut | ErrorKind::WouldBlock => {
+            HttpError::new(408, format!("{what} timed out"))
+        }
+        _ => HttpError::new(400, format!("{what}: {e}")),
+    }
+}
+
 /// Read one request from `stream`.  `max_body` bounds the declared
 /// `Content-Length` (413 beyond it); a missing length on POST means
 /// an empty body (the server rejects empty ingests at routing level).
@@ -69,7 +82,7 @@ pub fn read_request(
         }
         let n = stream
             .read(&mut chunk)
-            .map_err(|e| HttpError::new(400, format!("read: {e}")))?;
+            .map_err(|e| read_error(e, "read"))?;
         if n == 0 {
             return Err(HttpError::new(
                 400,
@@ -138,7 +151,7 @@ pub fn read_request(
     while body.len() < content_length {
         let n = stream
             .read(&mut chunk)
-            .map_err(|e| HttpError::new(400, format!("read body: {e}")))?;
+            .map_err(|e| read_error(e, "read body"))?;
         if n == 0 {
             return Err(HttpError::new(
                 400,
@@ -163,12 +176,31 @@ pub fn respond(
     content_type: &str,
     body: &[u8],
 ) -> std::io::Result<()> {
-    let head = format!(
+    respond_with_headers(stream, status, content_type, &[], body)
+}
+
+/// [`respond`] with extra response headers (e.g. `Retry-After` on the
+/// connection-cap 503).
+pub fn respond_with_headers(
+    stream: &mut TcpStream,
+    status: u16,
+    content_type: &str,
+    extra: &[(&str, &str)],
+    body: &[u8],
+) -> std::io::Result<()> {
+    let mut head = format!(
         "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\n\
-         Content-Length: {}\r\nConnection: close\r\n\r\n",
+         Content-Length: {}\r\nConnection: close\r\n",
         reason(status),
         body.len()
     );
+    for (name, value) in extra {
+        head.push_str(name);
+        head.push_str(": ");
+        head.push_str(value);
+        head.push_str("\r\n");
+    }
+    head.push_str("\r\n");
     stream.write_all(head.as_bytes())?;
     stream.write_all(body)?;
     stream.flush()
@@ -181,8 +213,10 @@ pub fn reason(status: u16) -> &'static str {
         400 => "Bad Request",
         404 => "Not Found",
         405 => "Method Not Allowed",
+        408 => "Request Timeout",
         413 => "Payload Too Large",
         500 => "Internal Server Error",
+        503 => "Service Unavailable",
         _ => "Unknown",
     }
 }

@@ -36,6 +36,24 @@
 //! appends.  SIGTERM/SIGINT (or `POST /shutdown`) drains in-flight
 //! requests, flushes a pending watch ingest, releases the lock and
 //! returns cleanly.
+//!
+//! Hardening (the fault model a resident monitor actually faces):
+//!
+//! * Every accepted socket gets read/write timeouts
+//!   ([`ServeOptions::read_timeout_ms`] / `write_timeout_ms`), so a
+//!   slowloris client that trickles header bytes is answered 408 and
+//!   dropped instead of pinning a thread forever.
+//! * Concurrent connections are capped
+//!   ([`ServeOptions::max_connections`]); excess connections are
+//!   answered `503 Service Unavailable` with `Retry-After: 1` off the
+//!   accept loop, which itself never blocks on a peer.
+//! * A failing incremental refresh (I/O error, injected fault) does
+//!   **not** kill the server: the last good snapshot keeps being
+//!   served, `/healthz` and `/statsz` report `degraded: true` with
+//!   the error, the failed experiments stay dirty, and the next
+//!   successful refresh clears the flag.  Watch-poll ingest failures
+//!   retry with exponential backoff (capped at 30 s) instead of
+//!   hot-looping on a broken drop directory.
 
 pub mod http;
 pub mod monitor;
@@ -78,6 +96,15 @@ pub struct ServeOptions {
     pub max_body_bytes: usize,
     /// Watch-directory poll interval.
     pub poll_ms: u64,
+    /// Per-connection socket read timeout (slowloris defence; an
+    /// expired deadline answers 408 and closes).
+    pub read_timeout_ms: u64,
+    /// Per-connection socket write timeout (a peer that stops reading
+    /// its response is dropped, not waited on).
+    pub write_timeout_ms: u64,
+    /// Concurrent-connection cap; excess connections are answered
+    /// `503` + `Retry-After: 1` without entering the handler pool.
+    pub max_connections: usize,
 }
 
 impl ServeOptions {
@@ -90,6 +117,9 @@ impl ServeOptions {
             jobs: 0,
             max_body_bytes: 8 * 1024 * 1024,
             poll_ms: 1000,
+            read_timeout_ms: 10_000,
+            write_timeout_ms: 10_000,
+            max_connections: 64,
         }
     }
 }
@@ -124,6 +154,23 @@ struct Shared {
     ingested: AtomicU64,
     rejected: AtomicU64,
     max_body_bytes: usize,
+    read_timeout_ms: u64,
+    write_timeout_ms: u64,
+    max_connections: usize,
+    /// Why the served snapshot is stale (`None` = healthy): set when a
+    /// refresh fails, cleared by the next successful one.  The last
+    /// good snapshot keeps being served the whole time.
+    degraded: Mutex<Option<String>>,
+    refresh_failures: AtomicU64,
+}
+
+/// Read the degraded reason, surviving a poisoned mutex.
+fn degraded_reason(shared: &Shared) -> Option<String> {
+    shared
+        .degraded
+        .lock()
+        .unwrap_or_else(|poisoned| poisoned.into_inner())
+        .clone()
 }
 
 /// A running server (in-process API; the CLI wraps [`run`]).
@@ -164,6 +211,9 @@ pub fn spawn(opts: ServeOptions) -> Result<ServeHandle> {
         jobs,
         max_body_bytes,
         poll_ms,
+        read_timeout_ms,
+        write_timeout_ms,
+        max_connections,
     } = opts;
     let monitor = Monitor::open(&store, analyze, jobs)?;
     let snapshot = build_snapshot(monitor.analysis(), 1)?;
@@ -182,6 +232,11 @@ pub fn spawn(opts: ServeOptions) -> Result<ServeHandle> {
         ingested: AtomicU64::new(0),
         rejected: AtomicU64::new(0),
         max_body_bytes,
+        read_timeout_ms,
+        write_timeout_ms,
+        max_connections: max_connections.max(1),
+        degraded: Mutex::new(None),
+        refresh_failures: AtomicU64::new(0),
     });
     let loop_shared = Arc::clone(&shared);
     let thread = std::thread::spawn(move || {
@@ -252,18 +307,57 @@ fn serve_loop(
     poll_ms: u64,
 ) -> Result<ServeSummary> {
     let poll = Duration::from_millis(poll_ms.max(1));
+    let backoff_cap = Duration::from_secs(30);
     let mut next_poll = Instant::now();
+    let mut watch_failures: u32 = 0;
     while !shutdown_requested(&shared) {
         if watch.is_some() && Instant::now() >= next_poll {
-            if let Err(e) = poll_watch(&shared, watch.as_deref().unwrap())
-            {
-                eprintln!("talp-pages serve: watch ingest: {e:#}");
+            match poll_watch(&shared, watch.as_deref().unwrap()) {
+                Ok(()) => {
+                    watch_failures = 0;
+                    next_poll = Instant::now() + poll;
+                }
+                Err(e) => {
+                    // Exponential backoff on consecutive failures: a
+                    // broken drop directory (or an injected refresh
+                    // fault) must not hot-loop the same error; the
+                    // first success resets the cadence.
+                    watch_failures = watch_failures.saturating_add(1);
+                    let backoff = poll
+                        .saturating_mul(1u32 << watch_failures.min(5))
+                        .min(backoff_cap);
+                    eprintln!(
+                        "talp-pages serve: watch ingest: {e:#} \
+                         (retry in {} ms)",
+                        backoff.as_millis()
+                    );
+                    next_poll = Instant::now() + backoff;
+                }
             }
-            next_poll = Instant::now() + poll;
         }
         match listener.accept() {
             Ok((stream, _peer)) => {
                 shared.requests.fetch_add(1, Ordering::Relaxed);
+                // The listener is non-blocking; accepted sockets must
+                // be blocking-with-deadlines (inheritance of the
+                // non-blocking flag is platform-dependent).
+                let _ = stream.set_nonblocking(false);
+                let _ = stream.set_read_timeout(Some(
+                    Duration::from_millis(shared.read_timeout_ms.max(1)),
+                ));
+                let _ = stream.set_write_timeout(Some(
+                    Duration::from_millis(shared.write_timeout_ms.max(1)),
+                ));
+                if shared.active.load(Ordering::SeqCst)
+                    >= shared.max_connections
+                {
+                    // Over the cap: answer 503 + Retry-After on a
+                    // throwaway thread — even a short write can stall
+                    // on a hostile peer, and the accept loop may not.
+                    let conn = Arc::clone(&shared);
+                    std::thread::spawn(move || reject_busy(stream, &conn));
+                    continue;
+                }
                 shared.active.fetch_add(1, Ordering::SeqCst);
                 let conn = Arc::clone(&shared);
                 std::thread::spawn(move || {
@@ -308,6 +402,20 @@ fn serve_loop(
     })
 }
 
+/// Answer an over-the-cap connection with `503` + `Retry-After: 1`.
+/// Counted as rejected, never as active — it must not consume a slot
+/// the cap exists to protect.
+fn reject_busy(mut stream: TcpStream, shared: &Shared) {
+    shared.rejected.fetch_add(1, Ordering::Relaxed);
+    let _ = http::respond_with_headers(
+        &mut stream,
+        503,
+        "application/json",
+        &[("Retry-After", "1")],
+        error_body("connection cap reached; retry shortly").as_bytes(),
+    );
+}
+
 fn shutdown_requested(shared: &Shared) -> bool {
     shared.shutdown.load(Ordering::SeqCst)
         || SIGNALLED.load(Ordering::SeqCst)
@@ -344,11 +452,30 @@ fn poll_watch(shared: &Shared, dir: &Path) -> Result<()> {
 /// Run the incremental refresh and publish a new snapshot if anything
 /// was dirty.  The swap is atomic: readers keep the old `Arc` until
 /// the fully-built replacement lands.
+///
+/// A failing refresh puts the server in **degraded mode** instead of
+/// killing it: the error is recorded for `/healthz` + `/statsz`, the
+/// last good snapshot keeps being served, and — because
+/// [`Monitor::refresh`] fails before consuming its dirty set — the
+/// next refresh retries the same experiments and clears the flag on
+/// success.
 fn refresh_and_swap(
     shared: &Shared,
     monitor: &mut Monitor,
 ) -> Result<Option<RefreshPass>> {
-    let pass = monitor.refresh()?;
+    let pass = match monitor.refresh() {
+        Ok(pass) => pass,
+        Err(e) => {
+            shared.refresh_failures.fetch_add(1, Ordering::Relaxed);
+            if let Ok(mut slot) = shared.degraded.lock() {
+                *slot = Some(format!("{e:#}"));
+            }
+            return Err(e);
+        }
+    };
+    if let Ok(mut slot) = shared.degraded.lock() {
+        *slot = None;
+    }
     if pass.is_some() {
         let seq = shared.snapshot.read().map(|s| s.seq).unwrap_or(0) + 1;
         let next = Arc::new(build_snapshot(monitor.analysis(), seq)?);
@@ -425,9 +552,16 @@ fn route(req: &Request, shared: &Shared) -> Response {
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => {
             let seq = shared.snapshot.read().map(|s| s.seq).unwrap_or(0);
+            // `degraded` appends after the long-standing keys so
+            // substring consumers keep matching; `ok` stays true — the
+            // process is alive and serving its last good snapshot.
             json_response(Json::from_pairs(vec![
                 ("ok", Json::Bool(true)),
                 ("snapshot_seq", Json::Num(seq as f64)),
+                (
+                    "degraded",
+                    Json::Bool(degraded_reason(shared).is_some()),
+                ),
             ]))
         }
         ("GET", "/statsz") => statsz(shared),
@@ -495,6 +629,7 @@ fn statsz(shared: &Shared) -> Response {
         (monitor.stats(), formats)
     };
     let seq = shared.snapshot.read().map(|s| s.seq).unwrap_or(0);
+    let reason = degraded_reason(shared);
     json_response(Json::from_pairs(vec![
         ("ok", Json::Bool(true)),
         ("snapshot_seq", Json::Num(seq as f64)),
@@ -525,6 +660,17 @@ fn statsz(shared: &Shared) -> Response {
         // New keys append after the long-standing ones so substring
         // consumers (the CI serve-smoke greps) keep matching.
         ("formats", Json::from_pairs(formats)),
+        ("degraded", Json::Bool(reason.is_some())),
+        (
+            "refresh_failures",
+            Json::Num(
+                shared.refresh_failures.load(Ordering::Relaxed) as f64,
+            ),
+        ),
+        (
+            "last_refresh_error",
+            Json::Str(reason.unwrap_or_default()),
+        ),
     ]))
 }
 

@@ -177,6 +177,10 @@ impl Monitor {
         if self.dirty.is_empty() {
             return Ok(None);
         }
+        // Consulted before the dirty set is taken: a failed refresh
+        // leaves its experiments dirty, so the next pass retries them
+        // (the serve layer keeps the last good snapshot meanwhile).
+        crate::util::failpoint::check("serve", "refresh")?;
         self.store.refresh_indexes()?;
         let dirty = std::mem::take(&mut self.dirty);
         for id in &dirty {

@@ -1,0 +1,755 @@
+//! `store fsck`: crash-recovery scan and repair for a run store.
+//!
+//! The store's writers are crash-consistent (every mutation goes
+//! through [`crate::util::fs::durable_append`] /
+//! [`crate::util::fs::durable_write_atomic`]), so a killed writer can
+//! only ever leave *recognisable* residue behind: an orphan `.tmp`
+//! staging file, an empty just-created shard, a torn final record, a
+//! manifest older than the shard bytes it describes, a stale or orphan
+//! index sidecar, or the dead writer's lockfile.  [`fsck`] replays the
+//! same corruption-tolerant decoder the loader uses and cross-checks
+//! the manifest and every sidecar against the shards, reporting each
+//! finding as a structured [`Diagnostic`]:
+//!
+//! * **TP025** (error) — fsck-detectable store damage: a torn or
+//!   unterminated final record, or a manifest that no longer matches
+//!   the decoded shard contents.
+//! * **TP026** (warning) — interrupted-operation residue: orphan
+//!   `.tmp` files, empty shard files, orphan or stale index sidecars.
+//! * **TP012/TP013/TP019** — reused verbatim from the loader and
+//!   `check`: interior corrupt records, unreadable shards, orphaned
+//!   writer locks.
+//!
+//! Dry-run by default; [`FsckOptions::repair`] heals everything
+//! healable while holding the writer lock: residue is removed, torn
+//! tails are truncated back to the last record boundary (an
+//! unterminated-but-decodable tail gets its newline instead), the
+//! manifest is rewritten from the decoded truth, and sidecars are
+//! refreshed.  Repair is idempotent — it re-derives every fix from the
+//! on-disk state, so running it twice (or on a healthy store) changes
+//! nothing.  Interior corrupt lines are deliberately *not* rewritten:
+//! that is `store compact`'s job, and doing it here would move
+//! surviving records' byte offsets — fsck's contract is that recovery
+//! lands byte-identical to the state just before or just after the
+//! interrupted operation, never a third state.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::check::{CheckReport, Diagnostic, Severity};
+use crate::util::timefmt;
+
+use super::{
+    shard_files_at, trim_line, validate_manifest, LockInfo, RunStore,
+    ShardIndex, StoreLock, StoredRun, LOCK_FILE_NAME, MANIFEST_FILE_NAME,
+    SHARDS_DIR,
+};
+
+/// How [`fsck`] runs.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FsckOptions {
+    /// Heal findings (holding the writer lock) instead of only
+    /// reporting them.
+    pub repair: bool,
+    /// Worker count for the shard decode passes (0 = auto).
+    pub jobs: usize,
+}
+
+/// What [`fsck`] found and (with `--repair`) did.
+#[derive(Debug)]
+pub struct FsckReport {
+    /// Findings from the initial scan, in `check`'s sort order.
+    pub diagnostics: Vec<Diagnostic>,
+    /// Human-readable repair actions performed (empty on a dry run).
+    pub repairs: Vec<String>,
+    /// Findings still present after repair; on a dry run this is the
+    /// initial scan unchanged.
+    pub remaining: Vec<Diagnostic>,
+    /// Whether a repair pass ran.
+    pub repaired: bool,
+}
+
+impl FsckReport {
+    /// Errors still standing — what the CLI exit code keys off.
+    pub fn errors_remaining(&self) -> usize {
+        count(&self.remaining, Severity::Error)
+    }
+
+    /// One line per finding (hint-indented, like `check`), the repair
+    /// log, any findings that survived repair, and a summary line.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        for d in &self.diagnostics {
+            out.push_str(&format!("{}: {d}\n", d.severity.id()));
+            if let Some(h) = &d.hint {
+                out.push_str(&format!("  hint: {h}\n"));
+            }
+        }
+        if !self.repairs.is_empty() {
+            out.push_str("repaired:\n");
+            for r in &self.repairs {
+                out.push_str(&format!("  - {r}\n"));
+            }
+        }
+        if self.repaired && !self.remaining.is_empty() {
+            out.push_str("remaining after repair:\n");
+            for d in &self.remaining {
+                out.push_str(&format!("  {}: {d}\n", d.severity.id()));
+            }
+        }
+        out.push_str(&self.summary_line());
+        out.push('\n');
+        out
+    }
+
+    /// `fsck: N finding(s) (E error(s), W warning(s)) — ...` with the
+    /// dry-run/repair outcome.
+    pub fn summary_line(&self) -> String {
+        let head = format!(
+            "fsck: {} finding(s) ({} error(s), {} warning(s))",
+            self.diagnostics.len(),
+            count(&self.diagnostics, Severity::Error),
+            count(&self.diagnostics, Severity::Warning),
+        );
+        if self.repaired {
+            format!(
+                "{head} — {} repair(s) applied, {} finding(s) remaining \
+                 ({} error(s))",
+                self.repairs.len(),
+                self.remaining.len(),
+                self.errors_remaining(),
+            )
+        } else if self.diagnostics.is_empty() {
+            format!("{head} — store is clean")
+        } else {
+            format!("{head} — dry run; `--repair` heals what it can")
+        }
+    }
+}
+
+fn count(diags: &[Diagnostic], sev: Severity) -> usize {
+    diags.iter().filter(|d| d.severity == sev).count()
+}
+
+/// Scan-then-heal entry point.  A missing, unparsable or
+/// wrong-version manifest is a hard error (the store is the durable
+/// record — fsck will not guess at a format it cannot verify); with
+/// [`FsckOptions::repair`] the repair pass runs unconditionally (it is
+/// a no-op on a healthy store) and the store is re-scanned into
+/// [`FsckReport::remaining`].
+pub fn fsck(root: &Path, opts: &FsckOptions) -> Result<FsckReport> {
+    validate_manifest(root)?;
+    let diagnostics = scan(root, opts.jobs)?;
+    let mut repairs = Vec::new();
+    let remaining = if opts.repair {
+        repair(root, opts.jobs, &mut repairs)?;
+        scan(root, opts.jobs)?
+    } else {
+        diagnostics.clone()
+    };
+    Ok(FsckReport {
+        diagnostics,
+        repairs,
+        remaining,
+        repaired: opts.repair,
+    })
+}
+
+/// All `.tmp` staging files in the store root and `shards/`, sorted.
+fn tmp_files(root: &Path) -> Vec<PathBuf> {
+    let mut out = Vec::new();
+    for dir in [root.to_path_buf(), root.join(SHARDS_DIR)] {
+        let Ok(rd) = std::fs::read_dir(&dir) else { continue };
+        out.extend(rd.flatten().map(|e| e.path()).filter(|p| {
+            p.is_file()
+                && p.extension().and_then(|e| e.to_str()) == Some("tmp")
+        }));
+    }
+    out.sort();
+    out
+}
+
+/// All `.idx` sidecars under `shards/`, sorted.
+fn sidecar_files(root: &Path) -> Vec<PathBuf> {
+    let mut out: Vec<PathBuf> = std::fs::read_dir(root.join(SHARDS_DIR))
+        .map(|rd| {
+            rd.flatten()
+                .map(|e| e.path())
+                .filter(|p| {
+                    p.extension().and_then(|e| e.to_str()) == Some("idx")
+                })
+                .collect()
+        })
+        .unwrap_or_default();
+    out.sort();
+    out
+}
+
+/// Is the lockfile at `root` present but held by a dead (or
+/// unidentifiable) writer?
+fn lock_is_orphaned(root: &Path) -> bool {
+    match std::fs::read_to_string(root.join(LOCK_FILE_NAME)) {
+        Ok(text) => !LockInfo::parse(&text)
+            .map(|i| i.holder_alive(timefmt::now_unix()))
+            .unwrap_or(false),
+        Err(_) => false,
+    }
+}
+
+/// The read-only finding pass: every check is re-derived from the
+/// on-disk bytes so scan → repair → scan converges.
+fn scan(root: &Path, jobs: usize) -> Result<Vec<Diagnostic>> {
+    let mut rep = CheckReport::new();
+
+    for p in tmp_files(root) {
+        rep.push(
+            Diagnostic::warning(
+                "TP026",
+                p.display().to_string(),
+                "orphan temp file left by an interrupted write",
+            )
+            .with_hint("`talp-pages store fsck --repair` removes it"),
+        );
+    }
+
+    for shard in shard_files_at(root) {
+        let disp = shard.display().to_string();
+        let bytes = match std::fs::read(&shard) {
+            Ok(b) => b,
+            Err(e) => {
+                rep.push(Diagnostic::warning(
+                    "TP013",
+                    disp,
+                    format!("unreadable ({e}) — skipped"),
+                ));
+                continue;
+            }
+        };
+        if bytes.is_empty() {
+            rep.push(
+                Diagnostic::warning(
+                    "TP026",
+                    disp,
+                    "empty shard file left by an interrupted append",
+                )
+                .with_hint(
+                    "`talp-pages store fsck --repair` removes it",
+                ),
+            );
+            continue;
+        }
+        let ends_nl = bytes.last() == Some(&b'\n');
+        let fragments = bytes.split(|&b| b == b'\n').count();
+        let mut lineno = 0usize;
+        for (i, line) in bytes.split(|&b| b == b'\n').enumerate() {
+            lineno += 1;
+            let line = trim_line(line);
+            if line.is_empty() {
+                continue;
+            }
+            let is_tail = !ends_nl && i == fragments - 1;
+            match StoredRun::from_line(line) {
+                Ok(_) if is_tail => rep.push(
+                    Diagnostic::error(
+                        "TP025",
+                        disp.clone(),
+                        format!(
+                            "final record at line {lineno} has no \
+                             terminating newline — the next append \
+                             would merge with and corrupt it"
+                        ),
+                    )
+                    .with_hint(
+                        "`talp-pages store fsck --repair` terminates \
+                         the line",
+                    ),
+                ),
+                Ok(_) => {}
+                Err(e) if is_tail => rep.push(
+                    Diagnostic::error(
+                        "TP025",
+                        disp.clone(),
+                        format!(
+                            "torn final record at line {lineno} ({e:#}) \
+                             — an append was interrupted mid-write"
+                        ),
+                    )
+                    .with_hint(
+                        "`talp-pages store fsck --repair` truncates \
+                         the shard back to the last record boundary",
+                    ),
+                ),
+                Err(e) => rep.push(
+                    Diagnostic::warning(
+                        "TP012",
+                        disp.clone(),
+                        format!(
+                            "corrupt record at line {lineno} ({e:#}) — \
+                             the loader skips it"
+                        ),
+                    )
+                    .with_hint(
+                        "`talp-pages store compact` rewrites shards \
+                         without corrupt lines",
+                    ),
+                ),
+            }
+        }
+    }
+
+    for sc in sidecar_files(root) {
+        let shard = sc.with_extension("");
+        let disp = sc.display().to_string();
+        if !shard.exists() {
+            rep.push(
+                Diagnostic::warning(
+                    "TP026",
+                    disp,
+                    "orphan index sidecar — its companion shard does \
+                     not exist",
+                )
+                .with_hint(
+                    "`talp-pages store fsck --repair` removes it",
+                ),
+            );
+            continue;
+        }
+        match ShardIndex::load(&shard) {
+            Err(e) => rep.push(
+                Diagnostic::warning(
+                    "TP026",
+                    disp,
+                    format!("unparsable index sidecar ({e:#})"),
+                )
+                .with_hint(
+                    "`talp-pages store fsck --repair` rebuilds it",
+                ),
+            ),
+            Ok(Some(idx)) if !idx.is_fresh_for(&shard) => rep.push(
+                Diagnostic::warning(
+                    "TP026",
+                    disp,
+                    "stale index sidecar — built from a different \
+                     shard size",
+                )
+                .with_hint(
+                    "`talp-pages store fsck --repair` rebuilds it",
+                ),
+            ),
+            Ok(_) => {}
+        }
+    }
+
+    // Manifest cross-check: the manifest a clean writer leaves behind
+    // is byte-for-byte what `manifest_doc` derives from the decoded
+    // shards; anything else means a crash landed between a shard
+    // mutation and the manifest rewrite.
+    let store = RunStore::open_with_jobs(root, jobs)?;
+    let manifest = root.join(MANIFEST_FILE_NAME);
+    let expected = store.manifest_doc().to_string_pretty();
+    let actual = std::fs::read_to_string(&manifest).unwrap_or_default();
+    if actual != expected {
+        rep.push(
+            Diagnostic::error(
+                "TP025",
+                manifest.display().to_string(),
+                "manifest does not match the decoded shard contents \
+                 (a writer crashed between a shard write and the \
+                 manifest rewrite)",
+            )
+            .with_hint(
+                "`talp-pages store fsck --repair` rewrites it from \
+                 the shards",
+            ),
+        );
+    }
+
+    if lock_is_orphaned(root) {
+        rep.push(
+            Diagnostic::warning(
+                "TP019",
+                root.join(LOCK_FILE_NAME).display().to_string(),
+                "orphaned writer lock (holder is not running)",
+            )
+            .with_hint(
+                "`talp-pages store fsck --repair` takes it over and \
+                 releases it",
+            ),
+        );
+    }
+
+    rep.sort();
+    Ok(rep.diagnostics)
+}
+
+/// The healing pass, under the writer lock (a live writer is a hard
+/// error; a stale lock is taken over, which is itself the heal for
+/// TP019).  Every fix is re-derived from disk, so the pass is
+/// idempotent and safe to run on a healthy store.
+fn repair(
+    root: &Path,
+    jobs: usize,
+    repairs: &mut Vec<String>,
+) -> Result<()> {
+    let had_orphan_lock = lock_is_orphaned(root);
+    let lock = StoreLock::acquire(root)?;
+    if had_orphan_lock {
+        repairs
+            .push("took over and released an orphaned writer lock".into());
+    }
+
+    for p in tmp_files(root) {
+        std::fs::remove_file(&p).with_context(|| {
+            format!("removing orphan temp file {}", p.display())
+        })?;
+        repairs.push(format!(
+            "removed orphan temp file {}",
+            p.display()
+        ));
+    }
+
+    for shard in shard_files_at(root) {
+        let Ok(bytes) = std::fs::read(&shard) else { continue };
+        if bytes.is_empty() {
+            std::fs::remove_file(&shard).with_context(|| {
+                format!("removing empty shard {}", shard.display())
+            })?;
+            repairs.push(format!(
+                "removed empty shard {}",
+                shard.display()
+            ));
+            continue;
+        }
+        if bytes.last() == Some(&b'\n') {
+            continue;
+        }
+        let tail_start = bytes
+            .iter()
+            .rposition(|&b| b == b'\n')
+            .map(|i| i + 1)
+            .unwrap_or(0);
+        let tail = trim_line(&bytes[tail_start..]);
+        if tail.is_empty() {
+            // Whitespace-only tail: harmless (a future appended line
+            // trims its leading whitespace away).
+            continue;
+        }
+        if StoredRun::from_line(tail).is_ok() {
+            // Decodable but unterminated: give it its newline so the
+            // next append cannot merge with it.
+            crate::util::fs::durable_append(
+                &shard,
+                b"\n",
+                "store::fsck",
+            )
+            .with_context(|| {
+                format!(
+                    "terminating final record of {}",
+                    shard.display()
+                )
+            })?;
+            repairs.push(format!(
+                "terminated the final record of {}",
+                shard.display()
+            ));
+        } else {
+            // Torn tail: truncate back to the last record boundary.
+            let f = std::fs::OpenOptions::new()
+                .write(true)
+                .open(&shard)
+                .with_context(|| {
+                    format!("opening {} for repair", shard.display())
+                })?;
+            f.set_len(tail_start as u64).with_context(|| {
+                format!("truncating {}", shard.display())
+            })?;
+            f.sync_data().with_context(|| {
+                format!("flushing {}", shard.display())
+            })?;
+            repairs.push(format!(
+                "truncated the torn tail of {} ({} byte(s))",
+                shard.display(),
+                bytes.len() - tail_start
+            ));
+        }
+    }
+
+    for sc in sidecar_files(root) {
+        if !sc.with_extension("").exists() {
+            std::fs::remove_file(&sc).with_context(|| {
+                format!(
+                    "removing orphan sidecar {}",
+                    sc.display()
+                )
+            })?;
+            repairs.push(format!(
+                "removed orphan index sidecar {}",
+                sc.display()
+            ));
+        }
+    }
+
+    // Shards are clean now: re-derive the manifest and sidecars from
+    // the decoded truth.  Both serializations are deterministic, which
+    // is what lands recovery byte-identical to a clean writer's state.
+    let store = RunStore::open_with_jobs(root, jobs)?;
+    let manifest = root.join(MANIFEST_FILE_NAME);
+    let expected = store.manifest_doc().to_string_pretty();
+    let actual =
+        std::fs::read_to_string(&manifest).unwrap_or_default();
+    if actual != expected {
+        store.save_manifest()?;
+        repairs.push(
+            "rewrote the manifest from the decoded shard contents"
+                .into(),
+        );
+    }
+    let refreshed = store.refresh_indexes()?;
+    if refreshed > 0 {
+        repairs.push(format!(
+            "refreshed {refreshed} index sidecar(s)"
+        ));
+    }
+    lock.release()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::run_metrics;
+    use super::*;
+    use crate::util::fs::TempDir;
+
+    fn seeded(root: &Path) -> RunStore {
+        let mut s = RunStore::create_or_open(root).unwrap();
+        s.append("exp", "h1", run_metrics("a.json", 2, 1)).unwrap();
+        s.append("exp", "h2", run_metrics("b.json", 2, 2)).unwrap();
+        s.refresh_indexes().unwrap();
+        s
+    }
+
+    fn codes(diags: &[Diagnostic]) -> Vec<&'static str> {
+        diags.iter().map(|d| d.code).collect()
+    }
+
+    #[test]
+    fn clean_store_is_clean() {
+        let td = TempDir::new("fsck-clean").unwrap();
+        let root = td.path().join("store");
+        seeded(&root);
+        let rep =
+            fsck(&root, &FsckOptions::default()).unwrap();
+        assert!(rep.diagnostics.is_empty(), "{rep:?}");
+        assert_eq!(rep.errors_remaining(), 0);
+        assert!(rep.summary_line().contains("clean"));
+
+        // Repair on a healthy store is a no-op.
+        let rep = fsck(
+            &root,
+            &FsckOptions { repair: true, jobs: 0 },
+        )
+        .unwrap();
+        assert!(rep.repairs.is_empty(), "{rep:?}");
+        assert!(rep.remaining.is_empty(), "{rep:?}");
+    }
+
+    #[test]
+    fn non_store_is_a_hard_error() {
+        let td = TempDir::new("fsck-nostore").unwrap();
+        let err = fsck(td.path(), &FsckOptions::default())
+            .unwrap_err();
+        assert!(
+            err.to_string().contains("not a run store"),
+            "{err:#}"
+        );
+    }
+
+    #[test]
+    fn torn_tail_is_truncated_back_to_the_last_record() {
+        let td = TempDir::new("fsck-torn").unwrap();
+        let root = td.path().join("store");
+        seeded(&root);
+        let shard =
+            root.join(SHARDS_DIR).join("exp__2x2.jsonl");
+        let before = std::fs::read(&shard).unwrap();
+        // A half-written record with no terminating newline — what a
+        // crash mid-`write` leaves behind.
+        let mut torn = before.clone();
+        torn.extend_from_slice(b"{\"hash\":\"h9\",\"exper");
+        std::fs::write(&shard, &torn).unwrap();
+
+        let rep =
+            fsck(&root, &FsckOptions::default()).unwrap();
+        assert!(
+            codes(&rep.diagnostics).contains(&"TP025"),
+            "{rep:?}"
+        );
+        assert!(rep.errors_remaining() > 0);
+
+        let rep = fsck(
+            &root,
+            &FsckOptions { repair: true, jobs: 0 },
+        )
+        .unwrap();
+        assert!(
+            rep.repairs.iter().any(|r| r.contains("truncated")),
+            "{rep:?}"
+        );
+        assert!(rep.remaining.is_empty(), "{rep:?}");
+        assert_eq!(
+            std::fs::read(&shard).unwrap(),
+            before,
+            "truncation restores the pre-append bytes"
+        );
+    }
+
+    #[test]
+    fn unterminated_final_record_gets_its_newline() {
+        let td = TempDir::new("fsck-unterm").unwrap();
+        let root = td.path().join("store");
+        seeded(&root);
+        let shard =
+            root.join(SHARDS_DIR).join("exp__2x2.jsonl");
+        let mut bytes = std::fs::read(&shard).unwrap();
+        assert_eq!(bytes.pop(), Some(b'\n'));
+        std::fs::write(&shard, &bytes).unwrap();
+
+        let rep = fsck(
+            &root,
+            &FsckOptions { repair: true, jobs: 0 },
+        )
+        .unwrap();
+        assert!(
+            rep.diagnostics
+                .iter()
+                .any(|d| d.code == "TP025"
+                    && d.message.contains("no terminating newline")),
+            "{rep:?}"
+        );
+        assert!(rep.remaining.is_empty(), "{rep:?}");
+        assert_eq!(
+            std::fs::read(&shard).unwrap().last(),
+            Some(&b'\n')
+        );
+    }
+
+    #[test]
+    fn residue_and_drift_are_found_and_healed() {
+        let td = TempDir::new("fsck-residue").unwrap();
+        let root = td.path().join("store");
+        let mut s = seeded(&root);
+        // Orphan temp files in both directories.
+        std::fs::write(
+            root.join(".talp-store.json.tmp"),
+            b"{}",
+        )
+        .unwrap();
+        std::fs::write(
+            root.join(SHARDS_DIR).join("exp__2x2.jsonl.tmp"),
+            b"junk",
+        )
+        .unwrap();
+        // Empty shard (a crash immediately after create).
+        std::fs::write(
+            root.join(SHARDS_DIR).join("late__4x4.jsonl"),
+            b"",
+        )
+        .unwrap();
+        // Orphan sidecar.
+        std::fs::write(
+            root.join(SHARDS_DIR).join("ghost__1x1.jsonl.idx"),
+            b"junk",
+        )
+        .unwrap();
+        // Manifest drift: append bypassing the store API.
+        let shard =
+            root.join(SHARDS_DIR).join("exp__2x2.jsonl");
+        let extra = super::super::StoredRun {
+            experiment: "exp".into(),
+            hash: "h3".into(),
+            run: run_metrics("c.json", 2, 3),
+        };
+        crate::util::fs::durable_append(
+            &shard,
+            format!("{}\n", extra.to_line()).as_bytes(),
+            "store::fsck",
+        )
+        .unwrap();
+        // Dead writer's lockfile.
+        std::fs::write(
+            root.join(LOCK_FILE_NAME),
+            "{\"pid\":4000000000,\"timestamp\":1700000000}",
+        )
+        .unwrap();
+        drop(s.refresh_indexes()); // pre-drift sidecar is now stale
+
+        let rep =
+            fsck(&root, &FsckOptions::default()).unwrap();
+        let found = codes(&rep.diagnostics);
+        for code in ["TP019", "TP025", "TP026"] {
+            assert!(found.contains(&code), "{found:?}");
+        }
+        assert_eq!(
+            rep.remaining.len(),
+            rep.diagnostics.len(),
+            "dry run repairs nothing"
+        );
+
+        let rep = fsck(
+            &root,
+            &FsckOptions { repair: true, jobs: 0 },
+        )
+        .unwrap();
+        assert!(rep.remaining.is_empty(), "{}", rep.render_text());
+        assert!(!root.join(LOCK_FILE_NAME).exists());
+        assert!(
+            !root.join(".talp-store.json.tmp").exists()
+                && !root
+                    .join(SHARDS_DIR)
+                    .join("exp__2x2.jsonl.tmp")
+                    .exists()
+        );
+        // The healed store loads and serves all three records.
+        let healed = RunStore::open(&root).unwrap();
+        assert_eq!(healed.len(), 3);
+        assert!(healed.warnings().is_empty());
+        // ... and a second repair changes nothing.
+        let rep = fsck(
+            &root,
+            &FsckOptions { repair: true, jobs: 0 },
+        )
+        .unwrap();
+        assert!(rep.repairs.is_empty(), "{rep:?}");
+    }
+
+    #[test]
+    fn interior_corruption_is_reported_not_rewritten() {
+        let td = TempDir::new("fsck-interior").unwrap();
+        let root = td.path().join("store");
+        let s = seeded(&root);
+        drop(s);
+        let shard =
+            root.join(SHARDS_DIR).join("exp__2x2.jsonl");
+        let text = std::fs::read_to_string(&shard).unwrap();
+        let mut lines: Vec<&str> = text.lines().collect();
+        lines.insert(1, "][ not a record");
+        let damaged = format!("{}\n", lines.join("\n"));
+        std::fs::write(&shard, &damaged).unwrap();
+
+        let rep = fsck(
+            &root,
+            &FsckOptions { repair: true, jobs: 0 },
+        )
+        .unwrap();
+        // The corrupt line (TP012) and the manifest drift it causes
+        // (TP025) are both found; repair rewrites the manifest but
+        // leaves the shard bytes alone — rewriting is compact's job.
+        assert!(codes(&rep.diagnostics).contains(&"TP012"));
+        assert!(
+            std::fs::read_to_string(&shard).unwrap() == damaged,
+            "fsck must not rewrite interior lines"
+        );
+        assert_eq!(codes(&rep.remaining), ["TP012"], "{rep:?}");
+        assert_eq!(rep.errors_remaining(), 0);
+    }
+}

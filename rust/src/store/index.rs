@@ -207,17 +207,17 @@ impl ShardIndex {
             .with_context(|| format!("index {}", path.display()))
     }
 
-    /// Write the sidecar atomically (temp-file + rename), so a killed
-    /// writer can never leave a truncated index that would *parse* but
-    /// lie about the shard.
+    /// Write the sidecar atomically and durably (temp-file + fsync +
+    /// rename + directory fsync), so a killed writer can never leave
+    /// a truncated index that would *parse* but lie about the shard.
     pub fn write_atomic(&self, shard: &Path) -> Result<()> {
         let path = sidecar_path(shard);
-        let mut tmp = path.as_os_str().to_os_string();
-        tmp.push(".tmp");
-        let tmp = PathBuf::from(tmp);
-        std::fs::write(&tmp, self.render())
-            .with_context(|| format!("writing {}", tmp.display()))?;
-        std::fs::rename(&tmp, &path).with_context(|| {
+        crate::util::fs::durable_write_atomic(
+            &path,
+            self.render().as_bytes(),
+            "store::index",
+        )
+        .with_context(|| {
             format!("replacing index {}", path.display())
         })
     }

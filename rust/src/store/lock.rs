@@ -26,6 +26,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
+use crate::util::failpoint;
 use crate::util::json::Json;
 use crate::util::timefmt;
 
@@ -93,6 +94,9 @@ impl StoreLock {
         // second attempt.  Losing the re-create race to another writer
         // is a legitimate contention error, not a retry loop.
         for takeover in [false, true] {
+            failpoint::check("store::lock", "create").with_context(
+                || format!("creating lock {}", path.display()),
+            )?;
             match OpenOptions::new()
                 .write(true)
                 .create_new(true)
@@ -112,6 +116,13 @@ impl StoreLock {
                     .to_string_compact();
                     f.write_all(body.as_bytes()).with_context(|| {
                         format!("writing lock {}", path.display())
+                    })?;
+                    // A torn lock body parses as damaged and is
+                    // treated as stale, so this fsync is about
+                    // honesty (the pid a crashed writer leaves
+                    // behind), not correctness.
+                    f.sync_data().with_context(|| {
+                        format!("flushing lock {}", path.display())
                     })?;
                     return Ok(StoreLock { path });
                 }
@@ -177,6 +188,9 @@ impl StoreLock {
     pub fn release(self) -> Result<()> {
         let path = self.path.clone();
         std::mem::forget(self);
+        failpoint::check("store::lock", "release").with_context(
+            || format!("releasing lock {}", path.display()),
+        )?;
         std::fs::remove_file(&path).with_context(|| {
             format!("releasing lock {}", path.display())
         })

@@ -1,0 +1,419 @@
+//! Deterministic fault injection for filesystem mutations.
+//!
+//! Every store write path (shard appends, manifest/index temp+rename,
+//! lockfile create/release) and the serve refresh path consult a named
+//! *failpoint* before each stage of the operation.  A failpoint is
+//! identified as `site::stage` — e.g. `store::append::write`,
+//! `store::manifest::rename` — and the full set is enumerated by
+//! [`registered_points`] so the crash-matrix test can abort at every
+//! one of them and prove recovery.
+//!
+//! # Activation
+//!
+//! Failpoints only exist when the crate is built with
+//! `--features failpoints`; without the feature [`hit`] is an
+//! `#[inline(always)]` constant `Action::None` and the consult folds
+//! to nothing (the zero-cost requirement for release builds).  With
+//! the feature, activation is still opt-in at runtime:
+//!
+//! * env: `TALP_FAILPOINTS='<spec>'` (read on first consult), seeded
+//!   by `TALP_FAILPOINT_SEED=<u64>` (default 42) for probabilistic
+//!   rules;
+//! * CLI: `talp-pages --failpoints '<spec>' <command> ...`
+//!   ([`configure`]), which overrides the environment.
+//!
+//! # Spec grammar
+//!
+//! A spec is `;`-separated `pattern=action` rules.  `pattern` is an
+//! exact point name, a `prefix*` glob, or `*`.  `action` is one of
+//!
+//! * `crash` — [`std::process::abort`] at the point (a killed CI job);
+//! * `enospc` — fail the stage with an injected I/O error;
+//! * `short` — write half the payload, then fail (torn write);
+//! * `eintr` — fail transiently; the durable helpers retry;
+//! * `delay:<ms>` — sleep, then proceed (slow fsync).
+//!
+//! Each action takes an optional `@N` (fire only on the N-th consult
+//! of that point; the default) or `:P` (fire with probability `P` on
+//! every consult, drawn from the seeded PRNG).  Without either, a rule
+//! fires on the point's first consult only — so `store::append::write=eintr`
+//! injects exactly one transient failure and the retry succeeds.  The
+//! first rule that *fires* wins; rules that match but do not fire fall
+//! through, so `*=eintr:0.05;*=delay:10:0.02` is a layered chaos spec.
+//!
+//! Examples:
+//!
+//! ```text
+//! TALP_FAILPOINTS='store::manifest::rename=crash'       # abort between write and rename
+//! TALP_FAILPOINTS='store::append::write=short'          # torn shard append
+//! TALP_FAILPOINTS='serve::refresh=enospc@2'             # second refresh fails
+//! TALP_FAILPOINTS='*=eintr:0.05' TALP_FAILPOINT_SEED=7  # seeded background noise
+//! ```
+
+/// What an activated failpoint injects at one control point.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Action {
+    /// Proceed normally.
+    None,
+    /// Abort the process on the spot — simulates a CI job killed at
+    /// this exact point (no destructors, no flushes).
+    Crash,
+    /// Fail the stage with an injected "no space left on device"
+    /// I/O error.
+    Enospc,
+    /// Fail transiently (an interrupted syscall); callers retry.
+    Eintr,
+    /// Write only half the payload, then fail — a torn write.
+    Short,
+    /// Sleep this many milliseconds, then proceed.
+    Delay(u64),
+}
+
+/// Every failpoint the store and serve paths consult, for matrix
+/// enumeration.  `dir_fsync` points fire after rename (or after an
+/// append that created the file); `store::lock::*` bracket lockfile
+/// create/release; `serve::refresh` guards the monitor's snapshot
+/// refresh (exercised by the serve degraded-mode test, not the store
+/// crash matrix).
+pub const REGISTERED_POINTS: &[&str] = &[
+    "store::append::write",
+    "store::append::fsync",
+    "store::append::dir_fsync",
+    "store::manifest::write",
+    "store::manifest::fsync",
+    "store::manifest::rename",
+    "store::manifest::dir_fsync",
+    "store::index::write",
+    "store::index::fsync",
+    "store::index::rename",
+    "store::index::dir_fsync",
+    "store::compact::write",
+    "store::compact::fsync",
+    "store::compact::rename",
+    "store::compact::dir_fsync",
+    "store::lock::create",
+    "store::lock::release",
+    "serve::refresh",
+];
+
+/// All registered failpoint names.
+pub fn registered_points() -> &'static [&'static str] {
+    REGISTERED_POINTS
+}
+
+/// Is fault injection compiled into this build?
+pub fn enabled() -> bool {
+    cfg!(feature = "failpoints")
+}
+
+/// The error an injected `enospc`/`short` stage fails with.  Public so
+/// tests can assert on the marker.
+pub fn injected_error(point: &str, what: &str) -> std::io::Error {
+    std::io::Error::new(
+        std::io::ErrorKind::Other,
+        format!("injected fault at {point}: {what}"),
+    )
+}
+
+#[cfg(not(feature = "failpoints"))]
+mod imp {
+    /// No-op consult: compiles to a constant, so every call site folds
+    /// to the plain syscall path.
+    #[inline(always)]
+    pub fn hit(_site: &str, _stage: &str) -> super::Action {
+        super::Action::None
+    }
+
+    pub fn configure(_spec: &str) -> anyhow::Result<()> {
+        anyhow::bail!(
+            "this build has no fault-injection support; rebuild with \
+             `--features failpoints` to use --failpoints/TALP_FAILPOINTS"
+        )
+    }
+
+    /// Consults so far for one point (always 0 without the feature).
+    pub fn hits(_point: &str) -> u64 {
+        0
+    }
+}
+
+#[cfg(feature = "failpoints")]
+mod imp {
+    use std::collections::HashMap;
+    use std::sync::Mutex;
+
+    use anyhow::{bail, Context, Result};
+
+    use super::Action;
+    use crate::util::rng::Rng;
+
+    /// One `pattern=action` rule.
+    struct Rule {
+        /// Exact point name, or a prefix when `glob` is set (`*` is an
+        /// empty prefix).
+        prefix: String,
+        glob: bool,
+        action: Action,
+        /// Fire only on the N-th consult of the point (1-based).
+        nth: Option<u64>,
+        /// Fire with this probability on every consult.
+        prob: Option<f64>,
+    }
+
+    impl Rule {
+        fn matches(&self, point: &str) -> bool {
+            if self.glob {
+                point.starts_with(self.prefix.as_str())
+            } else {
+                point == self.prefix
+            }
+        }
+    }
+
+    struct State {
+        rules: Vec<Rule>,
+        /// Consults per point name.
+        counters: HashMap<String, u64>,
+        rng: Rng,
+    }
+
+    static STATE: Mutex<Option<State>> = Mutex::new(None);
+
+    fn parse_spec(spec: &str) -> Result<Vec<Rule>> {
+        let mut rules = Vec::new();
+        for part in spec.split(';') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (pattern, action) = part.split_once('=').with_context(
+                || format!("failpoint rule `{part}` has no `=action`"),
+            )?;
+            let (pattern, action) = (pattern.trim(), action.trim());
+            let (prefix, glob) = match pattern.strip_suffix('*') {
+                Some(p) => (p.to_string(), true),
+                None => (pattern.to_string(), false),
+            };
+            let mut fields = action.split(':');
+            let head = fields.next().unwrap_or_default();
+            let (kind, nth) = match head.split_once('@') {
+                Some((k, n)) => (
+                    k,
+                    Some(n.parse::<u64>().with_context(|| {
+                        format!("bad @N in failpoint rule `{part}`")
+                    })?),
+                ),
+                None => (head, None),
+            };
+            let mut numbers: Vec<f64> = Vec::new();
+            for f in fields {
+                numbers.push(f.parse::<f64>().with_context(|| {
+                    format!("bad number `{f}` in failpoint rule `{part}`")
+                })?);
+            }
+            let (action, prob) = match kind {
+                "crash" => (Action::Crash, numbers.first().copied()),
+                "enospc" => (Action::Enospc, numbers.first().copied()),
+                "eintr" => (Action::Eintr, numbers.first().copied()),
+                "short" => (Action::Short, numbers.first().copied()),
+                "delay" => {
+                    let ms = numbers.first().copied().with_context(
+                        || format!("`{part}` needs delay:<ms>"),
+                    )?;
+                    (Action::Delay(ms as u64), numbers.get(1).copied())
+                }
+                other => bail!(
+                    "unknown failpoint action `{other}` in `{part}` \
+                     (crash, enospc, eintr, short, delay:<ms>)"
+                ),
+            };
+            if let Some(p) = prob {
+                if !(0.0..=1.0).contains(&p) {
+                    bail!("probability {p} out of [0,1] in `{part}`");
+                }
+            }
+            rules.push(Rule { prefix, glob, action, nth, prob });
+        }
+        Ok(rules)
+    }
+
+    fn seed_from_env() -> u64 {
+        std::env::var("TALP_FAILPOINT_SEED")
+            .ok()
+            .and_then(|s| s.trim().parse::<u64>().ok())
+            .unwrap_or(42)
+    }
+
+    fn state_from_env() -> State {
+        let rules = match std::env::var("TALP_FAILPOINTS") {
+            Ok(spec) => parse_spec(&spec).unwrap_or_else(|e| {
+                // A test-only feature fed a broken spec must fail the
+                // run loudly, not silently inject nothing.
+                panic!("TALP_FAILPOINTS: {e:#}")
+            }),
+            Err(_) => Vec::new(),
+        };
+        State {
+            rules,
+            counters: HashMap::new(),
+            rng: Rng::new(seed_from_env()),
+        }
+    }
+
+    /// Install `spec`, replacing any env-derived configuration and
+    /// resetting all counters (the CLI `--failpoints` path).
+    pub fn configure(spec: &str) -> Result<()> {
+        let rules = parse_spec(spec)?;
+        let mut g =
+            STATE.lock().unwrap_or_else(|e| e.into_inner());
+        *g = Some(State {
+            rules,
+            counters: HashMap::new(),
+            rng: Rng::new(seed_from_env()),
+        });
+        Ok(())
+    }
+
+    /// Consult the failpoint `site::stage`: counts the consult, then
+    /// returns the action of the first rule that fires.
+    pub fn hit(site: &str, stage: &str) -> Action {
+        let mut g =
+            STATE.lock().unwrap_or_else(|e| e.into_inner());
+        let st = g.get_or_insert_with(state_from_env);
+        if st.rules.is_empty() {
+            return Action::None;
+        }
+        let point = format!("{site}::{stage}");
+        let c = st.counters.entry(point.clone()).or_insert(0);
+        *c += 1;
+        let n = *c;
+        for i in 0..st.rules.len() {
+            if !st.rules[i].matches(&point) {
+                continue;
+            }
+            let fires = match (st.rules[i].nth, st.rules[i].prob) {
+                (Some(k), _) => n == k,
+                (None, Some(p)) => st.rng.f64() < p,
+                (None, None) => n == 1,
+            };
+            if fires {
+                return st.rules[i].action;
+            }
+        }
+        Action::None
+    }
+
+    /// Consults so far for one point (diagnostic/test hook).
+    pub fn hits(point: &str) -> u64 {
+        let g = STATE.lock().unwrap_or_else(|e| e.into_inner());
+        g.as_ref()
+            .and_then(|st| st.counters.get(point).copied())
+            .unwrap_or(0)
+    }
+}
+
+pub use imp::{configure, hit, hits};
+
+/// Consult a non-write control point (lock create/release, serve
+/// refresh): `Crash` aborts, `Enospc`/`Short` return the injected
+/// error, `Eintr`/`Delay` retry the consult.  Without the `failpoints`
+/// feature this inlines to `Ok(())`.
+#[inline]
+pub fn check(site: &str, stage: &str) -> std::io::Result<()> {
+    loop {
+        match hit(site, stage) {
+            Action::None => return Ok(()),
+            Action::Crash => std::process::abort(),
+            Action::Eintr => continue,
+            Action::Delay(ms) => {
+                std::thread::sleep(std::time::Duration::from_millis(ms));
+                continue;
+            }
+            Action::Enospc | Action::Short => {
+                return Err(injected_error(
+                    &format!("{site}::{stage}"),
+                    "injected failure",
+                ))
+            }
+        }
+    }
+}
+
+#[cfg(all(test, feature = "failpoints"))]
+mod tests {
+    use super::*;
+
+    // `configure` replaces global state, so the spec-behavior tests
+    // run under one lock to avoid cross-test interference.
+    static GUARD: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+    #[test]
+    fn every_registered_point_is_well_formed() {
+        for p in registered_points() {
+            let parts: Vec<&str> = p.split("::").collect();
+            assert!(parts.len() >= 2, "{p} needs site::stage");
+            assert!(parts.iter().all(|s| !s.is_empty()), "{p}");
+        }
+        // No duplicates.
+        let set: std::collections::HashSet<_> =
+            registered_points().iter().collect();
+        assert_eq!(set.len(), registered_points().len());
+    }
+
+    #[test]
+    fn default_rule_fires_on_first_consult_only() {
+        let _g = GUARD.lock().unwrap_or_else(|e| e.into_inner());
+        configure("store::append::write=enospc").unwrap();
+        assert_eq!(
+            hit("store::append", "write"),
+            Action::Enospc,
+            "first consult fires"
+        );
+        assert_eq!(hit("store::append", "write"), Action::None);
+        assert_eq!(hit("store::append", "fsync"), Action::None);
+        configure("").unwrap();
+    }
+
+    #[test]
+    fn nth_glob_and_fallthrough() {
+        let _g = GUARD.lock().unwrap_or_else(|e| e.into_inner());
+        configure("store::manifest::*=delay:5@2;*=eintr@3").unwrap();
+        assert_eq!(hit("store::manifest", "rename"), Action::None);
+        assert_eq!(
+            hit("store::manifest", "rename"),
+            Action::Delay(5),
+            "second consult hits the glob rule"
+        );
+        // Third consult: the glob rule matches but no longer fires,
+        // so the catch-all @3 rule gets its turn.
+        assert_eq!(hit("store::manifest", "rename"), Action::Eintr);
+        assert_eq!(hits("store::manifest::rename"), 3);
+        configure("").unwrap();
+    }
+
+    #[test]
+    fn bad_specs_are_rejected() {
+        let _g = GUARD.lock().unwrap_or_else(|e| e.into_inner());
+        for bad in [
+            "store::append::write",          // no action
+            "x=explode",                     // unknown action
+            "x=crash@many",                  // bad @N
+            "x=delay",                       // delay without ms
+            "x=enospc:1.5",                  // probability out of range
+        ] {
+            assert!(configure(bad).is_err(), "{bad} should be rejected");
+        }
+        configure("").unwrap();
+    }
+
+    #[test]
+    fn check_retries_transients_and_surfaces_errors() {
+        let _g = GUARD.lock().unwrap_or_else(|e| e.into_inner());
+        configure("store::lock::create=eintr").unwrap();
+        assert!(check("store::lock", "create").is_ok(), "retried past EINTR");
+        configure("store::lock::release=enospc").unwrap();
+        let err = check("store::lock", "release").unwrap_err();
+        assert!(err.to_string().contains("injected fault"), "{err}");
+        configure("").unwrap();
+    }
+}

@@ -1,11 +1,37 @@
 //! Filesystem helpers: scoped temp dirs (tempfile crate unavailable),
-//! recursive copy, and directory size accounting (Table 2's storage
-//! column measures real bytes on disk).
+//! recursive copy, directory size accounting (Table 2's storage
+//! column measures real bytes on disk), and the durable write
+//! primitives ([`durable_append`], [`durable_write_atomic`]) every
+//! store mutation goes through.
+//!
+//! # Durability discipline
+//!
+//! The run store is the durable record, so its writers must survive a
+//! crash at *any* instruction boundary:
+//!
+//! * [`durable_append`] writes the payload, fsyncs the file
+//!   (`fdatasync`), and — when the append created the file — fsyncs
+//!   the parent directory so the new name itself survives.
+//! * [`durable_write_atomic`] stages into `<path>.tmp` in the same
+//!   directory, fsyncs the temp file *before* the rename (so the
+//!   rename can never install unflushed bytes), renames over the
+//!   destination, then fsyncs the parent directory to persist the
+//!   rename.
+//!
+//! Both consult [`crate::util::failpoint`] before each stage under a
+//! caller-supplied site name (`store::append`, `store::manifest`,
+//! `store::index`, `store::compact`), which is how the crash-matrix
+//! test aborts between any two stages and proves `store fsck` recovers.
+//! Transient injected `EINTR`s are retried in place.  Directory fsync
+//! is a Unix concept; on other platforms that stage is a no-op.
 
+use std::io::Write as _;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::{Context, Result};
+
+use crate::util::failpoint::{self, Action};
 
 static TEMP_COUNTER: AtomicU64 = AtomicU64::new(0);
 
@@ -44,6 +70,150 @@ impl Drop for TempDir {
             let _ = std::fs::remove_dir_all(&self.path);
         }
     }
+}
+
+/// One fault-injectable write stage: consult `site::stage`, then run
+/// the real syscall.  `Eintr` retries the consult (the rule's `@N`
+/// or `:P` bound guarantees progress), `Delay` sleeps and retries,
+/// `Crash` aborts the process, and the error actions fail the stage.
+fn staged<T>(
+    site: &str,
+    stage: &str,
+    mut op: impl FnMut(Action) -> std::io::Result<T>,
+) -> std::io::Result<T> {
+    loop {
+        match failpoint::hit(site, stage) {
+            Action::Crash => std::process::abort(),
+            Action::Eintr => continue,
+            Action::Delay(ms) => {
+                std::thread::sleep(std::time::Duration::from_millis(ms));
+                continue;
+            }
+            act => return op(act),
+        }
+    }
+}
+
+/// Write `bytes` through the `site::write` failpoint: `Short` flushes
+/// a torn half-payload to disk before failing, so recovery from a
+/// partially-landed write is actually exercised.
+fn staged_write(
+    f: &mut std::fs::File,
+    bytes: &[u8],
+    site: &str,
+) -> std::io::Result<()> {
+    staged(site, "write", |act| match act {
+        Action::Enospc => Err(failpoint::injected_error(
+            &format!("{site}::write"),
+            "no space left on device",
+        )),
+        Action::Short => {
+            let _ = f.write_all(&bytes[..bytes.len() / 2]);
+            let _ = f.sync_data();
+            Err(failpoint::injected_error(
+                &format!("{site}::write"),
+                "short write (disk filled mid-write)",
+            ))
+        }
+        _ => f.write_all(bytes),
+    })
+}
+
+/// `fdatasync` through the `site::fsync` failpoint.
+fn staged_fsync(f: &std::fs::File, site: &str) -> std::io::Result<()> {
+    staged(site, "fsync", |act| match act {
+        Action::Enospc | Action::Short => {
+            Err(failpoint::injected_error(
+                &format!("{site}::fsync"),
+                "fsync failed",
+            ))
+        }
+        _ => f.sync_data(),
+    })
+}
+
+/// Fsync the directory containing `path` (through the
+/// `site::dir_fsync` failpoint) so a just-created or just-renamed
+/// name survives a crash.  Directory handles are only fsync-able on
+/// Unix; elsewhere the stage still consults the failpoint but the
+/// sync itself is skipped.
+fn fsync_parent(path: &Path, site: &str) -> std::io::Result<()> {
+    staged(site, "dir_fsync", |act| match act {
+        Action::Enospc | Action::Short => {
+            Err(failpoint::injected_error(
+                &format!("{site}::dir_fsync"),
+                "directory fsync failed",
+            ))
+        }
+        _ => {
+            #[cfg(unix)]
+            {
+                let dir = match path.parent() {
+                    Some(d) if !d.as_os_str().is_empty() => d,
+                    _ => Path::new("."),
+                };
+                std::fs::File::open(dir)?.sync_all()?;
+            }
+            #[cfg(not(unix))]
+            let _ = path;
+            Ok(())
+        }
+    })
+}
+
+/// Append `bytes` to `path` and make them durable before returning:
+/// the file is opened in append mode (created if missing), written in
+/// one `write_all`, fsync'd, and — when this call created the file —
+/// the parent directory is fsync'd too so the new name survives a
+/// crash.  `site` names the failpoints consulted (`<site>::write`,
+/// `<site>::fsync`, `<site>::dir_fsync`).
+pub fn durable_append(
+    path: &Path,
+    bytes: &[u8],
+    site: &str,
+) -> std::io::Result<()> {
+    let created = !path.exists();
+    let mut f = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)?;
+    staged_write(&mut f, bytes, site)?;
+    staged_fsync(&f, site)?;
+    if created {
+        fsync_parent(path, site)?;
+    }
+    Ok(())
+}
+
+/// Replace `path` with `bytes` atomically *and* durably: stage into
+/// `<path>.tmp` (same directory, so the rename never crosses a
+/// filesystem), fsync the temp file, rename it over `path`, fsync the
+/// parent directory.  A crash before the rename leaves the old file
+/// intact plus a `.tmp` orphan (`store fsck` removes it); a crash
+/// after leaves the new file — never a torn destination.  `site`
+/// names the failpoints (`<site>::{write,fsync,rename,dir_fsync}`).
+pub fn durable_write_atomic(
+    path: &Path,
+    bytes: &[u8],
+    site: &str,
+) -> std::io::Result<()> {
+    let mut tmp_name = path.as_os_str().to_os_string();
+    tmp_name.push(".tmp");
+    let tmp = PathBuf::from(tmp_name);
+    let mut f = std::fs::File::create(&tmp)?;
+    staged_write(&mut f, bytes, site)?;
+    staged_fsync(&f, site)?;
+    drop(f);
+    staged(site, "rename", |act| match act {
+        Action::Enospc | Action::Short => {
+            Err(failpoint::injected_error(
+                &format!("{site}::rename"),
+                "rename failed",
+            ))
+        }
+        _ => std::fs::rename(&tmp, path),
+    })?;
+    fsync_parent(path, site)
 }
 
 /// Recursively copy a directory tree.
@@ -148,6 +318,38 @@ mod tests {
         assert_eq!(dir_size(&dst), 7);
         let found = files_with_ext(&dst, "json");
         assert_eq!(found.len(), 2);
+    }
+
+    #[test]
+    fn durable_append_creates_appends_and_leaves_no_residue() {
+        let td = TempDir::new("durable-append").unwrap();
+        let path = td.path().join("deep/dir/shard.jsonl");
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        durable_append(&path, b"one\n", "test::append").unwrap();
+        durable_append(&path, b"two\n", "test::append").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"one\ntwo\n");
+        assert_eq!(
+            std::fs::read_dir(path.parent().unwrap()).unwrap().count(),
+            1,
+            "no temp files"
+        );
+    }
+
+    #[test]
+    fn durable_write_atomic_replaces_and_cleans_temp() {
+        let td = TempDir::new("durable-atomic").unwrap();
+        let path = td.path().join("manifest.json");
+        durable_write_atomic(&path, b"{\"v\":1}", "test::atomic")
+            .unwrap();
+        durable_write_atomic(&path, b"{\"v\":2}", "test::atomic")
+            .unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"{\"v\":2}");
+        let mut tmp = path.as_os_str().to_os_string();
+        tmp.push(".tmp");
+        assert!(
+            !PathBuf::from(tmp).exists(),
+            "temp staged file is renamed away"
+        );
     }
 
     #[test]

@@ -4,6 +4,7 @@
 //! serde/rand/criterion/proptest (see Cargo.toml).
 
 pub mod bench;
+pub mod failpoint;
 pub mod fs;
 pub mod hash;
 pub mod json;

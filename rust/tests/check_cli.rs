@@ -254,17 +254,62 @@ fn corruption_ladder_store_surface() {
         .unwrap();
     assert_code(&store_opts(&store), "TP011", "version skew");
 
-    // TP012: a torn append at the end of a shard.
+    // TP012: a corrupt interior record (newline-terminated, so it is
+    // ordinary damage — an *unterminated* final line is TP025 below).
     let (_td, store) = base("ladder-tp012");
+    let mut bytes = std::fs::read(shard(&store)).unwrap();
+    bytes.extend_from_slice(b"{\"hash\": \"tr\n");
+    std::fs::write(shard(&store), &bytes).unwrap();
+    assert_code(&store_opts(&store), "TP012", "corrupt shard record");
+
+    // TP014: a stray non-store file among the shards.
+    let (_td, store) = base("ladder-tp014");
+    std::fs::write(store.join("shards/notes.txt"), "x").unwrap();
+    assert_code(&store_opts(&store), "TP014", "stray shard file");
+
+    // TP025: a torn final record — the signature of an append that
+    // crashed mid-write — and `store fsck --repair` healing it.
+    let (_td, store) = base("ladder-tp025");
     let mut bytes = std::fs::read(shard(&store)).unwrap();
     bytes.extend_from_slice(b"{\"hash\": \"tr");
     std::fs::write(shard(&store), &bytes).unwrap();
-    assert_code(&store_opts(&store), "TP012", "torn shard record");
+    assert_code(&store_opts(&store), "TP025", "torn final record");
+    assert_eq!(
+        run_cli(&format!("store fsck --store {}", store.display()))
+            .unwrap(),
+        1,
+        "dry-run fsck exits 1 while errors remain"
+    );
+    assert_eq!(
+        run_cli(&format!(
+            "store fsck --store {} --repair",
+            store.display()
+        ))
+        .unwrap(),
+        0,
+        "--repair heals the torn tail"
+    );
+    let rep = run_check(&store_opts(&store)).unwrap();
+    assert_eq!(codes(&rep), Vec::<&str>::new(), "{:?}", rep.diagnostics);
 
-    // TP014: a leftover temp file among the shards.
-    let (_td, store) = base("ladder-tp014");
+    // TP026: interrupted-operation residue (a `.tmp` staging file and
+    // an empty shard), warnings with the fsck fix-it.
+    let (_td, store) = base("ladder-tp026");
     std::fs::write(store.join("shards/exp__2x2.jsonl.tmp"), "x").unwrap();
-    assert_code(&store_opts(&store), "TP014", "stray shard file");
+    std::fs::write(store.join("shards/late__4x4.jsonl"), "").unwrap();
+    assert_code(&store_opts(&store), "TP026", "crash residue");
+    let rep = run_check(&store_opts(&store)).unwrap();
+    assert_eq!(rep.exit_code(), 1, "residue alone is a warning");
+    assert_eq!(
+        run_cli(&format!(
+            "store fsck --store {} --repair",
+            store.display()
+        ))
+        .unwrap(),
+        0
+    );
+    let rep = run_check(&store_opts(&store)).unwrap();
+    assert_eq!(codes(&rep), Vec::<&str>::new(), "{:?}", rep.diagnostics);
 
     // TP015: one record stored twice.  Growing the shard behind the
     // store's back also leaves the CLI-written sidecar stale (TP017).
@@ -498,6 +543,31 @@ fn golden_report() -> CheckReport {
         .with_hint(
             "`talp-pages store compact` rewrites shards past the \
              threshold",
+        ),
+    );
+    rep.push(
+        Diagnostic::error(
+            "TP025",
+            "store/shards/exp__2x2.jsonl",
+            "torn final record at line 4 (json error at byte 2100: \
+             unexpected end of input) — an append was interrupted \
+             mid-write",
+        )
+        .with_span(Span { start: 2100, len: 1 })
+        .with_hint(
+            "`talp-pages store fsck --repair` truncates the torn tail \
+             back to the last intact record",
+        ),
+    );
+    rep.push(
+        Diagnostic::warning(
+            "TP026",
+            "store/shards/exp__2x2.jsonl.tmp",
+            "interrupted-operation residue in shards/ (a `.tmp` staging \
+             file whose rename never happened) — the loader ignores it",
+        )
+        .with_hint(
+            "`talp-pages store fsck --repair` removes crash residue",
         ),
     );
     rep.push(

@@ -1,0 +1,390 @@
+//! Kill-point matrix (ISSUE 10): abort at every registered store
+//! failpoint and prove `store fsck --repair` + reopen always lands on
+//! a state byte-identical to either *before* or *after* the
+//! interrupted operation — never a third state.
+//!
+//! Mechanics: the parent test re-spawns this test binary filtered to
+//! [`kill_point_child`], which drives the real CLI (`ingest` or
+//! `store compact`) with `TALP_FAILPOINTS=<point>=crash` in its
+//! environment.  The child aborts at the failpoint (exit status is the
+//! proof the point fired); the parent then repairs the crashed store
+//! and compares the full on-disk tree against snapshots taken before
+//! the operation and after a clean run of it.
+//!
+//! The 17 store-side points are covered here (`serve::refresh` is
+//! exercised by the degraded-mode serve test, which needs a live
+//! monitor rather than a crash).
+
+#![cfg(feature = "failpoints")]
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+use talp_pages::cli;
+use talp_pages::talp::{GitMeta, ProcStats, RegionData, RunData};
+use talp_pages::util::fs::{copy_tree, TempDir};
+
+/// Points an `ingest --input --store` pass consults, in consult
+/// order: lock, shard append, manifest save, sidecar refresh, unlock.
+const INGEST_POINTS: &[&str] = &[
+    "store::lock::create",
+    "store::append::write",
+    "store::append::fsync",
+    "store::append::dir_fsync",
+    "store::manifest::write",
+    "store::manifest::fsync",
+    "store::manifest::rename",
+    "store::manifest::dir_fsync",
+    "store::index::write",
+    "store::index::fsync",
+    "store::index::rename",
+    "store::index::dir_fsync",
+    "store::lock::release",
+];
+
+/// Points specific to the `store compact` shard rewrite (its lock,
+/// manifest and sidecar stages reuse the sites covered above).
+const COMPACT_POINTS: &[&str] = &[
+    "store::compact::write",
+    "store::compact::fsync",
+    "store::compact::rename",
+    "store::compact::dir_fsync",
+];
+
+/// Hand-built run with exact numbers (no simulator noise), so
+/// re-ingesting the same path with a different `elapsed` supersedes.
+fn run(elapsed: f64, ts: i64, commit: &str, ranks: u32) -> RunData {
+    let region = |name: &str, e: f64| RegionData {
+        name: name.into(),
+        elapsed_s: e,
+        visits: 1,
+        procs: (0..ranks)
+            .map(|r| ProcStats {
+                rank: r,
+                node: 0,
+                elapsed_s: e,
+                useful_s: e * 1.5,
+                mpi_s: 0.05 * e,
+                useful_instructions: 1_000_000,
+                useful_cycles: 500_000,
+                ..Default::default()
+            })
+            .collect(),
+    };
+    RunData {
+        dlb_version: "test".into(),
+        app: "crash-fixture".into(),
+        machine: "mn5".into(),
+        timestamp: ts,
+        ranks,
+        threads: ranks,
+        nodes: 1,
+        regions: vec![
+            region("Global", elapsed),
+            region("solve", elapsed * 0.6),
+        ],
+        git: Some(GitMeta {
+            commit: commit.into(),
+            branch: "main".into(),
+            commit_timestamp: ts,
+            message: String::new(),
+        }),
+    }
+}
+
+/// One experiment `exp`, config `2x2`, three runs.  `elapsed_base`
+/// varies the content so a second pass at the same paths supersedes.
+fn build_tree(root: &Path, elapsed_base: f64) {
+    for i in 0..3 {
+        run(
+            elapsed_base + i as f64,
+            1000 + i as i64 * 100,
+            &format!("c{i:03}"),
+            2,
+        )
+        .write_file(&root.join(format!("exp/talp_2x2_run{i}.json")))
+        .unwrap();
+    }
+}
+
+fn run_cli(line: &str) -> anyhow::Result<i32> {
+    cli::main_with_args(
+        &line.split_whitespace().map(String::from).collect::<Vec<_>>(),
+    )
+}
+
+/// Full byte-level tree snapshot: relative path -> file contents.
+fn snapshot(root: &Path) -> BTreeMap<String, Vec<u8>> {
+    fn walk(
+        root: &Path,
+        dir: &Path,
+        out: &mut BTreeMap<String, Vec<u8>>,
+    ) {
+        for entry in std::fs::read_dir(dir).unwrap() {
+            let path = entry.unwrap().path();
+            if path.is_dir() {
+                walk(root, &path, out);
+            } else {
+                let rel = path
+                    .strip_prefix(root)
+                    .unwrap()
+                    .components()
+                    .map(|c| c.as_os_str().to_string_lossy())
+                    .collect::<Vec<_>>()
+                    .join("/");
+                out.insert(rel, std::fs::read(&path).unwrap());
+            }
+        }
+    }
+    let mut out = BTreeMap::new();
+    walk(root, root, &mut out);
+    out
+}
+
+/// Human-readable difference summary for assertion messages.
+fn describe_diff(
+    got: &BTreeMap<String, Vec<u8>>,
+    want: &BTreeMap<String, Vec<u8>>,
+) -> String {
+    let mut parts = Vec::new();
+    for k in want.keys() {
+        match got.get(k) {
+            None => parts.push(format!("missing {k}")),
+            Some(v) if v != &want[k] => {
+                parts.push(format!(
+                    "differs {k} ({} vs {} bytes)",
+                    v.len(),
+                    want[k].len()
+                ));
+            }
+            Some(_) => {}
+        }
+    }
+    for k in got.keys() {
+        if !want.contains_key(k) {
+            parts.push(format!("extra {k}"));
+        }
+    }
+    if parts.is_empty() { "identical".into() } else { parts.join(", ") }
+}
+
+/// The child half of the matrix: re-run under `--exact` with
+/// `TALP_KILL_OP`/`TALP_KILL_STORE` (and `TALP_KILL_INPUT` for
+/// ingest) plus a `TALP_FAILPOINTS=<point>=crash` spec.  Without the
+/// env vars (a normal `cargo test` pass) it is a no-op.
+#[test]
+fn kill_point_child() {
+    let Ok(op) = std::env::var("TALP_KILL_OP") else {
+        return;
+    };
+    let store = std::env::var("TALP_KILL_STORE").unwrap();
+    match op.as_str() {
+        "ingest" => {
+            let input = std::env::var("TALP_KILL_INPUT").unwrap();
+            run_cli(&format!("ingest --input {input} --store {store}"))
+                .unwrap();
+        }
+        "compact" => {
+            run_cli(&format!(
+                "store compact --store {store} --threshold 0"
+            ))
+            .unwrap();
+        }
+        other => panic!("unknown TALP_KILL_OP '{other}'"),
+    }
+}
+
+/// Run `op` against a fresh copy of `base`, crashing at `point`; then
+/// fsck-repair and assert the recovered tree is byte-identical to
+/// `pre` or `post`, and that indexed and full-scan queries agree on
+/// the recovered store.
+fn kill_and_recover(
+    td: &TempDir,
+    op: &str,
+    point: &str,
+    base: &Path,
+    input: Option<&Path>,
+    pre: &BTreeMap<String, Vec<u8>>,
+    post: &BTreeMap<String, Vec<u8>>,
+) {
+    let tag = point.replace("::", "-");
+    let work = td.path().join(format!("work-{op}-{tag}"));
+    copy_tree(base, &work).unwrap();
+
+    let exe = std::env::current_exe().unwrap();
+    let mut cmd = Command::new(&exe);
+    cmd.args(["kill_point_child", "--exact", "--nocapture"])
+        .env("TALP_KILL_OP", op)
+        .env("TALP_KILL_STORE", &work)
+        .env("TALP_FAILPOINTS", format!("{point}=crash"))
+        .env("TALP_FAILPOINT_SEED", "42");
+    if let Some(input) = input {
+        cmd.env("TALP_KILL_INPUT", input);
+    }
+    let out = cmd.output().unwrap();
+    assert!(
+        !out.status.success(),
+        "{op}/{point}: child exited cleanly — the failpoint never \
+         fired\nstdout: {}\nstderr: {}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+
+    // Dry-run first: fsck must never mutate without --repair.
+    let before_fsck = snapshot(&work);
+    run_cli(&format!("store fsck --store {}", work.display())).unwrap();
+    assert_eq!(
+        snapshot(&work),
+        before_fsck,
+        "{op}/{point}: dry-run fsck mutated the store"
+    );
+
+    let code = run_cli(&format!(
+        "store fsck --store {} --repair",
+        work.display()
+    ))
+    .unwrap();
+    assert_eq!(code, 0, "{op}/{point}: fsck --repair left errors");
+
+    let got = snapshot(&work);
+    assert!(
+        got == *pre || got == *post,
+        "{op}/{point}: recovered store is a third state\n  vs pre:  \
+         {}\n  vs post: {}",
+        describe_diff(&got, pre),
+        describe_diff(&got, post)
+    );
+
+    // Acceptance: indexed selection over the recovered store matches
+    // the sequential full scan byte for byte.
+    let qi = td.path().join(format!("q-{op}-{tag}-indexed.jsonl"));
+    let qs = td.path().join(format!("q-{op}-{tag}-scan.jsonl"));
+    run_cli(&format!(
+        "store query --store {} --output {}",
+        work.display(),
+        qi.display()
+    ))
+    .unwrap();
+    run_cli(&format!(
+        "store query --store {} --no-index --output {}",
+        work.display(),
+        qs.display()
+    ))
+    .unwrap();
+    assert_eq!(
+        std::fs::read(&qi).unwrap(),
+        std::fs::read(&qs).unwrap(),
+        "{op}/{point}: indexed query != full scan on recovered store"
+    );
+}
+
+/// The matrix itself: every store-side registered point, under the
+/// operation that consults it.
+#[test]
+fn kill_point_matrix_recovers_to_pre_or_post() {
+    let td = TempDir::new("crash-matrix").unwrap();
+
+    // Ingest fixture: a healthy store holding experiment `exp`, plus a
+    // drop directory with one run in a NEW experiment/config so the
+    // interrupted ingest creates a fresh shard (this is what makes
+    // `store::append::dir_fsync` — parent fsync after file creation —
+    // reachable).
+    let tree = td.path().join("tree-v1");
+    build_tree(&tree, 10.0);
+    let ingest_base = td.path().join("base-ingest");
+    assert_eq!(
+        run_cli(&format!(
+            "ingest --input {} --store {}",
+            tree.display(),
+            ingest_base.display()
+        ))
+        .unwrap(),
+        0
+    );
+    let drop_dir = td.path().join("drop");
+    run(30.0, 5000, "d000", 4)
+        .write_file(&drop_dir.join("late/talp_4x4_run0.json"))
+        .unwrap();
+
+    let ingest_pre = snapshot(&ingest_base);
+    let ingest_post_dir = td.path().join("post-ingest");
+    copy_tree(&ingest_base, &ingest_post_dir).unwrap();
+    assert_eq!(
+        run_cli(&format!(
+            "ingest --input {} --store {}",
+            drop_dir.display(),
+            ingest_post_dir.display()
+        ))
+        .unwrap(),
+        0
+    );
+    let ingest_post = snapshot(&ingest_post_dir);
+    assert_ne!(ingest_pre, ingest_post, "drop ingest must change state");
+
+    for point in INGEST_POINTS {
+        kill_and_recover(
+            &td,
+            "ingest",
+            point,
+            &ingest_base,
+            Some(&drop_dir),
+            &ingest_pre,
+            &ingest_post,
+        );
+    }
+
+    // Compact fixture: re-ingest the same source paths with changed
+    // content so every shard carries superseded (dead) bytes and
+    // `--threshold 0` rewrites it.
+    let compact_base = td.path().join("base-compact");
+    assert_eq!(
+        run_cli(&format!(
+            "ingest --input {} --store {}",
+            tree.display(),
+            compact_base.display()
+        ))
+        .unwrap(),
+        0
+    );
+    let tree2 = td.path().join("tree-v2");
+    build_tree(&tree2, 20.0);
+    assert_eq!(
+        run_cli(&format!(
+            "ingest --input {} --store {}",
+            tree2.display(),
+            compact_base.display()
+        ))
+        .unwrap(),
+        0
+    );
+
+    let compact_pre = snapshot(&compact_base);
+    let compact_post_dir = td.path().join("post-compact");
+    copy_tree(&compact_base, &compact_post_dir).unwrap();
+    assert_eq!(
+        run_cli(&format!(
+            "store compact --store {} --threshold 0",
+            compact_post_dir.display()
+        ))
+        .unwrap(),
+        0
+    );
+    let compact_post = snapshot(&compact_post_dir);
+    assert_ne!(
+        compact_pre, compact_post,
+        "compact must rewrite the superseded shard"
+    );
+
+    for point in COMPACT_POINTS {
+        kill_and_recover(
+            &td,
+            "compact",
+            point,
+            &compact_base,
+            None,
+            &compact_pre,
+            &compact_post,
+        );
+    }
+}

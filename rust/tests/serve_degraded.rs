@@ -1,0 +1,204 @@
+//! Degraded-mode acceptance (ISSUE 10): a failing snapshot refresh
+//! must not kill the server — it keeps serving the last good snapshot,
+//! flags the condition on `/healthz` + `/statsz`, and recovers on the
+//! next successful refresh because [`Monitor::refresh`] leaves its
+//! dirty set intact on failure.
+//!
+//! Lives in its own test binary: the injected `serve::refresh` fault
+//! is process-global state, and the other serve tests (which also
+//! refresh) must never share a process with it.
+
+#![cfg(feature = "failpoints")]
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::{Path, PathBuf};
+
+use talp_pages::cli;
+use talp_pages::gate::GatePolicy;
+use talp_pages::serve::{self, ServeOptions};
+use talp_pages::session::AnalyzeOptions;
+use talp_pages::store::RunStore;
+use talp_pages::talp::{GitMeta, ProcStats, RegionData, RunData};
+use talp_pages::util::failpoint;
+use talp_pages::util::fs::TempDir;
+
+fn run_cli(line: &str) -> anyhow::Result<i32> {
+    cli::main_with_args(
+        &line.split_whitespace().map(String::from).collect::<Vec<_>>(),
+    )
+}
+
+fn run(ranks: u32, useful: f64, elapsed: f64, ts: i64, sha: &str) -> RunData {
+    RunData {
+        dlb_version: "test".into(),
+        app: "store-rt".into(),
+        machine: "mn5".into(),
+        timestamp: ts,
+        ranks,
+        threads: 2,
+        nodes: 1,
+        regions: vec![RegionData {
+            name: "Global".into(),
+            elapsed_s: elapsed,
+            visits: 1,
+            procs: (0..ranks)
+                .map(|r| ProcStats {
+                    rank: r,
+                    elapsed_s: elapsed,
+                    useful_s: useful,
+                    mpi_s: 0.05 * elapsed,
+                    ..Default::default()
+                })
+                .collect(),
+        }],
+        git: Some(GitMeta {
+            commit: sha.into(),
+            branch: "main".into(),
+            commit_timestamp: ts,
+            message: String::new(),
+        }),
+    }
+}
+
+fn seeded_store(td: &TempDir) -> (PathBuf, PathBuf) {
+    let input = td.path().join("talp");
+    run(2, 24.0, 16.0, 1000, "slowslow1")
+        .write_file(&input.join("exp/talp_2x2_run0.json"))
+        .unwrap();
+    run(2, 15.0, 10.0, 2000, "fastfast2")
+        .write_file(&input.join("exp/talp_2x2_run1.json"))
+        .unwrap();
+    let store = td.path().join("store");
+    assert_eq!(
+        run_cli(&format!(
+            "ingest --input {} --store {}",
+            input.display(),
+            store.display()
+        ))
+        .unwrap(),
+        0
+    );
+    let policy = td.path().join("policy.json");
+    std::fs::write(
+        &policy,
+        r#"{"version":1,"defaults":{"max_elapsed_increase":0.9}}"#,
+    )
+    .unwrap();
+    (store, policy)
+}
+
+fn serve_opts(store: &Path, policy: &Path) -> ServeOptions {
+    let mut opts = ServeOptions::new(store);
+    opts.addr = "127.0.0.1:0".to_string();
+    opts.analyze = AnalyzeOptions {
+        gate: Some(GatePolicy::from_file(policy).unwrap()),
+        ..Default::default()
+    };
+    opts
+}
+
+fn request(
+    addr: SocketAddr,
+    method: &str,
+    target: &str,
+    body: &[u8],
+) -> (u16, Vec<u8>) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    let head = format!(
+        "{method} {target} HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n",
+        body.len()
+    );
+    s.write_all(head.as_bytes()).unwrap();
+    s.write_all(body).unwrap();
+    let mut buf = Vec::new();
+    s.read_to_end(&mut buf).unwrap();
+    let pos = buf
+        .windows(4)
+        .position(|w| w == b"\r\n\r\n")
+        .unwrap_or_else(|| panic!("no header end in {buf:?}"));
+    let head = String::from_utf8_lossy(&buf[..pos]).into_owned();
+    let status: u16 = head
+        .split(' ')
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("bad status line: {head}"));
+    (status, buf[pos + 4..].to_vec())
+}
+
+fn get_text(addr: SocketAddr, target: &str) -> (u16, String) {
+    let (status, body) = request(addr, "GET", target, &[]);
+    (status, String::from_utf8(body).unwrap())
+}
+
+#[test]
+fn failed_refresh_keeps_last_good_snapshot_and_flags_degraded() {
+    let td = TempDir::new("serve-degraded").unwrap();
+    let (store, policy) = seeded_store(&td);
+    let handle = serve::spawn(serve_opts(&store, &policy)).unwrap();
+    let addr = handle.addr();
+
+    let (status, before) = request(addr, "GET", "/report.json", &[]);
+    assert_eq!(status, 200);
+    let (_, health) = get_text(addr, "/healthz");
+    assert!(health.contains("\"degraded\":false"), "{health}");
+
+    // The NEXT refresh fails once (default rule: first consult after
+    // configure), every later one succeeds.
+    failpoint::configure("serve::refresh=enospc").unwrap();
+
+    let fresh = run(2, 14.0, 9.5, 3000, "third0003")
+        .to_json()
+        .to_string_pretty();
+    let (status, body) = request(
+        addr,
+        "POST",
+        "/ingest?source=exp/talp_2x2_run2.json",
+        fresh.as_bytes(),
+    );
+    assert_eq!(status, 500, "{}", String::from_utf8_lossy(&body));
+
+    // The run is stored but the snapshot could not be rebuilt: the old
+    // one keeps being served, and the condition is flagged.
+    let (status, after) = request(addr, "GET", "/report.json", &[]);
+    assert_eq!(status, 200);
+    assert_eq!(before, after, "degraded mode must serve the old bytes");
+    let (_, health) = get_text(addr, "/healthz");
+    assert!(health.contains("\"ok\":true"), "{health}");
+    assert!(health.contains("\"degraded\":true"), "{health}");
+    assert!(health.contains("\"snapshot_seq\":1"), "{health}");
+    let (_, stats) = get_text(addr, "/statsz");
+    assert!(stats.contains("\"degraded\":true"), "{stats}");
+    assert!(stats.contains("\"refresh_failures\":1"), "{stats}");
+    assert!(stats.contains("injected failure"), "{stats}");
+
+    // Recovery: the failed refresh kept its dirty set, so the next
+    // ingest retries the same experiments and clears the flag.
+    let fresh2 = run(2, 13.5, 9.0, 4000, "fourth004")
+        .to_json()
+        .to_string_pretty();
+    let (status, body) = request(
+        addr,
+        "POST",
+        "/ingest?source=exp/talp_2x2_run3.json",
+        fresh2.as_bytes(),
+    );
+    assert_eq!(status, 200, "{}", String::from_utf8_lossy(&body));
+    let reply = String::from_utf8(body).unwrap();
+    assert!(reply.contains("\"snapshot_seq\":2"), "{reply}");
+
+    let (_, health) = get_text(addr, "/healthz");
+    assert!(health.contains("\"degraded\":false"), "{health}");
+    assert!(health.contains("\"snapshot_seq\":2"), "{health}");
+    let (status, recovered) = request(addr, "GET", "/report.json", &[]);
+    assert_eq!(status, 200);
+    assert_ne!(
+        before, recovered,
+        "the recovered snapshot must include the retried experiments"
+    );
+
+    handle.shutdown().unwrap();
+    // Both POSTed runs made it into the store — degraded mode loses
+    // no data, only snapshot freshness.
+    assert_eq!(RunStore::open(&store).unwrap().len(), 4);
+}

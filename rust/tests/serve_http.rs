@@ -144,6 +144,19 @@ fn get(addr: SocketAddr, target: &str) -> (u16, Vec<u8>) {
     request(addr, "GET", target, &[])
 }
 
+/// Like [`get`] but returns the raw response text (headers included),
+/// for asserting on specific header lines.
+fn raw_get(addr: SocketAddr, target: &str) -> String {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(
+        format!("GET {target} HTTP/1.1\r\nHost: t\r\n\r\n").as_bytes(),
+    )
+    .unwrap();
+    let mut buf = Vec::new();
+    s.read_to_end(&mut buf).unwrap();
+    String::from_utf8_lossy(&buf).into_owned()
+}
+
 fn fixture(name: &str) -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR"))
         .join("tests/fixtures")
@@ -549,6 +562,76 @@ fn shutdown_releases_lock_flushes_watch_and_leaves_no_torn_shard() {
     assert_eq!(reloaded.len(), 5, "4 seeded + 1 flushed");
     let second = serve::spawn(serve_opts(&store, &policy)).unwrap();
     second.shutdown().unwrap();
+}
+
+#[test]
+fn slow_header_read_times_out_with_408() {
+    let td = TempDir::new("serve-slowloris").unwrap();
+    let (store, policy) = seeded_store(&td);
+    let mut opts = serve_opts(&store, &policy);
+    opts.read_timeout_ms = 200;
+    let handle = serve::spawn(opts).unwrap();
+    let addr = handle.addr();
+
+    // A slowloris client: open the socket, send a header fragment,
+    // then stall.  The per-connection read timeout must end it with a
+    // 408 instead of pinning a handler thread forever.
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(b"GET /healthz HTTP/1.1\r\n").unwrap();
+    let mut buf = Vec::new();
+    s.read_to_end(&mut buf).unwrap();
+    let head = String::from_utf8_lossy(&buf);
+    assert!(head.starts_with("HTTP/1.1 408"), "{head}");
+
+    // The listener survives the stalled client.
+    let (status, _) = get(addr, "/healthz");
+    assert_eq!(status, 200);
+    handle.shutdown().unwrap();
+}
+
+#[test]
+fn connection_cap_rejects_with_503_and_retry_after() {
+    let td = TempDir::new("serve-cap").unwrap();
+    let (store, policy) = seeded_store(&td);
+    let mut opts = serve_opts(&store, &policy);
+    opts.max_connections = 1;
+    // Long enough that the held slot outlives the probe loop, short
+    // enough that a bug cannot hang the test.
+    opts.read_timeout_ms = 2_000;
+    let handle = serve::spawn(opts).unwrap();
+    let addr = handle.addr();
+
+    // Occupy the only slot with a connection that never sends a byte,
+    // then probe until the accept loop starts shedding load.  (The
+    // first probe usually sees it already — accepts are FIFO — but the
+    // cap is only observable once the held socket is accepted.)
+    let slot = TcpStream::connect(addr).unwrap();
+    let mut rejected = None;
+    for _ in 0..200 {
+        let text = raw_get(addr, "/healthz");
+        if text.starts_with("HTTP/1.1 503") {
+            rejected = Some(text);
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    let text = rejected.expect("cap never produced a 503");
+    assert!(text.contains("Retry-After: 1"), "{text}");
+    assert!(text.contains("connection cap"), "{text}");
+
+    // Releasing the slot restores normal service.
+    drop(slot);
+    let mut recovered = false;
+    for _ in 0..200 {
+        if raw_get(addr, "/healthz").starts_with("HTTP/1.1 200") {
+            recovered = true;
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    assert!(recovered, "cap never released after the client hung up");
+    let summary = handle.shutdown().unwrap();
+    assert!(summary.rejected >= 1, "{summary:?}");
 }
 
 #[test]
